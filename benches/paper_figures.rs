@@ -1,0 +1,49 @@
+//! Paper-figure regeneration harness: runs every table/figure driver in
+//! quick mode and reports wall time per experiment. Use the `vta repro`
+//! CLI (without --quick) for the full-resolution numbers recorded in
+//! EXPERIMENTS.md.
+//!
+//!     cargo bench --bench paper_figures [-- <filter>]
+
+use vta::repro;
+use vta::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::from_env();
+    b.once("repro/pipelining(quick)", || {
+        let r = repro::pipelining(true);
+        assert!(r.speedup > 1.5, "pipelining speedup collapsed: {:.2}", r.speedup);
+    });
+    b.once("repro/ablation(quick)", || {
+        let hw = repro::ablation(true);
+        assert!(hw.last().unwrap().speedup_vs_original > 2.0);
+        let sw = repro::ablation_compiler(true);
+        assert!(sw.last().unwrap().speedup_vs_original > 3.0, "TPS must dominate fallback");
+    });
+    b.once("repro/fig2_roofline(quick)", || {
+        let rows = repro::fig2(true);
+        assert_eq!(rows.len(), 5);
+    });
+    b.once("repro/fig3_utilization(quick)", || {
+        let u = repro::fig3(true, "results");
+        // Quick mode (56x56) is weight-load bound; at 224x224 the full
+        // run is compute-bound as in the paper (see EXPERIMENTS.md).
+        assert!(u.compute > 0.15 && u.load > 0.15, "implausible utilization: {u:?}");
+    });
+    b.once("repro/fig10_tps", || {
+        let rows = repro::fig10();
+        assert!(rows.iter().all(|r| r.ratio > 3.0), "TPS must win everywhere");
+    });
+    b.once("repro/fig11_dbuf_bytes(quick)", || {
+        let rows = repro::fig11(true);
+        assert!(rows.iter().all(|r| r.reduction_pct > 0.0));
+    });
+    b.once("repro/fig12_dbuf_cycles(quick)", || {
+        repro::fig12(true);
+    });
+    b.once("repro/fig13_pareto(quick)", || {
+        let rows = repro::fig13(true);
+        assert!(rows.iter().filter(|r| r.pareto).count() >= 2);
+    });
+    println!("\n{} figure harnesses complete", b.results.len());
+}

@@ -1,0 +1,154 @@
+//! Microbenchmarks of the stack's hot paths (custom criterion-style
+//! harness; see `vta::util::bench`). These are the before/after probes
+//! for the EXPERIMENTS.md §Perf optimization log.
+//!
+//!     cargo bench --bench sim_hotpath [-- <filter>] [--quick]
+
+use vta::compiler::graph::{Graph, Op};
+use vta::compiler::layout::Shape;
+use vta::compiler::tps;
+use vta::config::presets;
+use vta::isa::{DepFlags, Insn};
+use vta::runtime::{Session, SessionOptions, Target};
+use vta::util::bench::{black_box, Bench};
+use vta::util::json::Json;
+use vta::util::rng::Pcg32;
+use vta::workloads;
+
+fn main() {
+    let mut b = Bench::from_env();
+
+    // --- exec core: one large GEMM instruction (the inner loop that
+    // dominates whole-network simulation) ---
+    {
+        use vta::exec::CoreState;
+        use vta::isa::{GemmInsn, Uop};
+        use vta::mem::Dram;
+        let cfg = presets::default_config();
+        let mut st = CoreState::new(&cfg);
+        let mut dram = Dram::new(1 << 20);
+        let mut rng = Pcg32::seeded(1);
+        for v in st.inp.iter_mut() {
+            *v = (rng.next_u32() % 15) as i8 - 7;
+        }
+        for v in st.wgt.iter_mut() {
+            *v = (rng.next_u32() % 15) as i8 - 7;
+        }
+        for i in 0..256usize {
+            st.uop[i] = Uop::gemm(i as u32 % 128, (i * 3) as u32 % 512, (i * 7) as u32 % 256);
+        }
+        let gemm = Insn::Gemm(GemmInsn {
+            deps: DepFlags::NONE,
+            reset: false,
+            uop_bgn: 0,
+            uop_end: 256,
+            lp_out: 4,
+            lp_in: 4,
+            acc_f0: 128,
+            acc_f1: 0,
+            inp_f0: 0,
+            inp_f1: 16,
+            wgt_f0: 0,
+            wgt_f1: 1,
+        });
+        let macs = 256u64 * 16 * cfg.macs_per_gemm_op() as u64;
+        b.bench_throughput("exec/gemm_insn_4096ops", Some((macs as f64, "MACs")), || {
+            st.execute(&gemm, &mut dram);
+            st.acc[0]
+        });
+    }
+
+    // --- tsim end-to-end throughput: simulated cycles per wall second ---
+    {
+        let g = workloads::micro_resnet(16, 3);
+        let cfg = presets::default_config();
+        let mut rng = Pcg32::seeded(4);
+        let input = rng.i8_vec(g.input_shape.elems());
+        // calibrate cycles once
+        let mut s = Session::new(&cfg, SessionOptions::default());
+        s.run_graph(&g, &input);
+        let cycles = s.cycles();
+        b.bench_throughput("tsim/micro_resnet", Some((cycles as f64, "sim-cycles")), || {
+            let mut s = Session::new(&cfg, SessionOptions::default());
+            s.run_graph(&g, black_box(&input));
+            s.cycles()
+        });
+    }
+
+    // --- fsim for comparison ---
+    {
+        let g = workloads::micro_resnet(16, 3);
+        let cfg = presets::default_config();
+        let mut rng = Pcg32::seeded(4);
+        let input = rng.i8_vec(g.input_shape.elems());
+        b.bench("fsim/micro_resnet", || {
+            let mut s = Session::new(
+                &cfg,
+                SessionOptions { target: Target::Fsim, ..Default::default() },
+            );
+            s.run_graph(&g, black_box(&input));
+        });
+    }
+
+    // --- ISA encode/decode round trip ---
+    {
+        let layout = presets::default_config().isa_layout();
+        let insn = Insn::Finish(DepFlags::NONE);
+        let mut g = Graph::new("x", Shape::new(16, 8, 8));
+        let mut rng = Pcg32::seeded(9);
+        g.add(
+            "c",
+            Op::Conv {
+                c_out: 16,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                shift: 4,
+                relu: true,
+                weights: rng.i8_vec(16 * 16 * 9),
+            },
+            vec![0],
+        );
+        let _ = insn;
+        let word = Insn::Finish(DepFlags::NONE).encode(&layout);
+        b.bench("isa/decode", || Insn::decode(black_box(word), &layout).unwrap());
+    }
+
+    // --- TPS exhaustive search (compile-time cost) ---
+    {
+        let cfg = presets::scaled_config(1, 32, 32, 2, 32);
+        let spec = tps::resnet18_convs()[0].1;
+        b.bench("tps/search_c2_block32", || tps::search(black_box(&spec), &cfg, true));
+    }
+
+    // --- compiler: full conv lowering (packets + uops + deps) ---
+    {
+        let cfg = presets::default_config();
+        let spec = tps::resnet18_convs()[0].1;
+        let tiling = tps::search(&spec, &cfg, true);
+        b.bench("compiler/lower_conv_c2", || {
+            use vta::compiler::builder::ProgramBuilder;
+            use vta::compiler::conv::{lower_conv, ConvBases, ConvParams};
+            use vta::mem::Dram;
+            let mut pb = ProgramBuilder::new(&cfg);
+            lower_conv(
+                &mut pb,
+                &ConvParams { spec, shift: 5, relu: true },
+                &tiling,
+                ConvBases { inp: 0, wgt: 4096, out: 65536 },
+            );
+            let mut dram = Dram::new(1 << 22);
+            pb.finish("bench", &mut dram).insns.len()
+        });
+    }
+
+    // --- JSON config parse (the cross-layer interchange) ---
+    {
+        let text = presets::default_config().to_json().to_string_pretty();
+        b.bench("util/json_config_roundtrip", || {
+            Json::parse(black_box(&text)).unwrap()
+        });
+    }
+
+    println!("\n{} benchmarks complete", b.results.len());
+}

@@ -1,0 +1,26 @@
+//! Design-space exploration (Fig 13): sweep MAC shape x memory width x
+//! scratchpad scaling, run ResNet-18 on each point, and print the cycle
+//! count vs scaled-area Pareto frontier.
+//!
+//!     cargo run --release --example pareto_sweep [-- --quick]
+
+use vta::repro;
+use vta::util::cli::Args;
+
+fn main() {
+    let args = Args::parse_from(std::env::args().skip(1));
+    let rows = repro::fig13(args.has_flag("quick"));
+    println!("\n{} design points; pareto frontier:", rows.len());
+    for r in rows.iter().filter(|r| r.pareto) {
+        println!("  {:<22} cycles={:<12} area={:.2}", r.config, r.cycles, r.scaled_area);
+    }
+    let min_c = rows.iter().map(|r| r.cycles).min().unwrap();
+    let max_c = rows.iter().map(|r| r.cycles).max().unwrap();
+    let min_a = rows.iter().map(|r| r.scaled_area).fold(f64::MAX, f64::min);
+    let max_a = rows.iter().map(|r| r.scaled_area).fold(0.0, f64::max);
+    println!(
+        "\ncycle span {:.1}x | area span {:.1}x (paper: ~11.5x cycles at ~12x area)",
+        max_c as f64 / min_c as f64,
+        max_a / min_a
+    );
+}

@@ -1,0 +1,57 @@
+//! Quickstart: compile one quantized conv layer, run it on the
+//! cycle-accurate simulator, and verify it bit-for-bit against the CPU
+//! reference — and, when `make artifacts` has been run, against the
+//! AOT-compiled JAX/Pallas golden model through PJRT.
+//!
+//!     cargo run --release --example quickstart
+
+use vta::compiler::graph::{Graph, Op};
+use vta::compiler::layout::Shape;
+use vta::config::presets;
+use vta::runtime::pjrt::Golden;
+use vta::runtime::{Session, SessionOptions, Target};
+use vta::util::rng::Pcg32;
+
+fn main() {
+    // The default VTA configuration: 1x16x16 MACs, 64-bit AXI, pipelined.
+    let cfg = presets::default_config();
+    println!("config: {} ({} MACs/cycle)", cfg.tag(), cfg.macs_per_gemm_op());
+
+    // One 3x3 conv: 16 -> 16 channels over 14x14, stride 1, pad 1,
+    // requantized with shift 5 + ReLU (the shapes of the AOT artifact).
+    let mut rng = Pcg32::seeded(33);
+    let x = rng.i8_vec(16 * 14 * 14);
+    let w = rng.i8_vec(16 * 16 * 9);
+    let mut g = Graph::new("quickstart", Shape::new(16, 14, 14));
+    g.add(
+        "conv",
+        Op::Conv { c_out: 16, k: 3, stride: 1, pad: 1, shift: 5, relu: true, weights: w.clone() },
+        vec![0],
+    );
+
+    // Run on the cycle-accurate simulator.
+    let mut session = Session::new(&cfg, SessionOptions { target: Target::Tsim, ..Default::default() });
+    let out = session.run_graph(&g, &x);
+    let stat = &session.layer_stats[0];
+    println!(
+        "tsim: {} cycles, {} MACs, {} insns, {} uops",
+        stat.cycles, stat.macs, stat.insns, stat.uops
+    );
+
+    // Check against the bit-exact CPU reference.
+    let expect = g.run_cpu(&x, 1);
+    assert_eq!(out, expect, "simulator disagrees with CPU reference");
+    println!("cpu reference: MATCH ({} int8 values)", out.len());
+
+    // Check against the JAX/Pallas golden model via PJRT (if built).
+    let mut golden = Golden::with_default_dir().expect("PJRT client");
+    if golden.has_artifact("conv_quickstart") {
+        let want = golden
+            .run_i8("conv_quickstart", &x, &[1, 16, 14, 14], &w, &[16, 16, 3, 3])
+            .expect("golden run");
+        assert_eq!(out, want, "simulator disagrees with JAX/Pallas golden");
+        println!("pjrt golden:   MATCH (three-layer stack verified)");
+    } else {
+        println!("pjrt golden:   skipped (run `make artifacts` first)");
+    }
+}

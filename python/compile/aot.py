@@ -1,0 +1,91 @@
+"""AOT compilation: lower the L2/L1 golden computations to HLO *text*
+artifacts the rust runtime loads via PJRT.
+
+HLO text, not serialized protos: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (shapes chosen to match the rust golden tests / quickstart):
+  gemm.hlo.txt          vta_gemm  x:s8[64,64]  w:s8[64,16]  -> s32[64,16]
+  conv_quickstart.hlo.txt  conv2d_vta x:s8[1,16,14,14] w:s8[16,16,3,3]
+                           stride 1 pad 1 shift 5 relu -> s8[1,16,14,14]
+  conv_stride2.hlo.txt  conv2d_vta x:s8[1,32,12,12] w:s8[16,32,3,3]
+                           stride 2 pad 1 shift 6 no-relu -> s8[1,16,6,6]
+  dense.hlo.txt         dense_vta x:s8[4,64] w:s8[32,64] shift 4 -> s8[4,32]
+
+Run via ``make artifacts`` (a no-op when outputs are newer than inputs).
+"""
+
+import argparse
+import functools
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import conv2d_vta, dense_vta
+from .kernels.gemm import vta_gemm
+
+BLOCK = 16  # default VTA configuration: 1x16x16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.int8):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifacts():
+    """name -> (fn, example args). Each fn returns a tuple (1-tuple)."""
+
+    def gemm_fn(x, w):
+        return (vta_gemm(x, w, tile_m=1, tile_k=BLOCK, tile_n=BLOCK),)
+
+    def conv_q(x, w):
+        return (conv2d_vta(x, w, stride=1, pad=1, shift=5, relu=True,
+                           tile_m=1, tile_k=BLOCK, tile_n=BLOCK),)
+
+    def conv_s2(x, w):
+        return (conv2d_vta(x, w, stride=2, pad=1, shift=6, relu=False,
+                           tile_m=1, tile_k=BLOCK, tile_n=BLOCK),)
+
+    def dense_fn(x, w):
+        return (dense_vta(x, w, shift=4, relu=False,
+                          tile_m=1, tile_k=BLOCK, tile_n=BLOCK),)
+
+    return {
+        "gemm": (gemm_fn, (spec((64, 64)), spec((64, BLOCK)))),
+        "conv_quickstart": (conv_q, (spec((1, BLOCK, 14, 14)), spec((BLOCK, BLOCK, 3, 3)))),
+        "conv_stride2": (conv_s2, (spec((1, 32, 12, 12)), spec((BLOCK, 32, 3, 3)))),
+        "dense": (dense_fn, (spec((4, 64)), spec((32, 64)))),
+    }
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--only", default=None, help="emit a single artifact")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, (fn, example_args) in artifacts().items():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,83 @@
+"""Layer 1 — the VTA GEMM intrinsic as a Pallas kernel.
+
+The VTA compute core is a ``BATCH x BLOCK_IN x BLOCK_OUT`` MAC array fed
+from scratchpads; its uop loops walk (accumulator, input, weight) tiles.
+The TPU-idiomatic mapping (DESIGN.md §Hardware-Adaptation) expresses the
+same dataflow as a grid-tiled int8->int32 matmul:
+
+* one grid step performs the tile op ``acc[tm,tn] += x[tm,tk] @ w[tk,tn]``
+  — exactly one VTA GEMM uop execution with ``tm = BATCH``,
+  ``tk = BLOCK_IN``, ``tn = BLOCK_OUT`` (the MXU analog of the MAC array);
+* BlockSpecs express the HBM<->VMEM schedule that VTA's LOAD instructions
+  and scratchpad double buffering implement explicitly;
+* the accumulator is grid-carried (revisited across the ``k`` dimension),
+  mirroring VTA's accumulate-in-place scratchpad.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are validated through the interpret path and the
+pure-jnp oracle in ``ref.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def vta_gemm(x, w, *, tile_m: int = 1, tile_k: int = 16, tile_n: int = 16):
+    """Quantized matmul with the VTA tile dataflow.
+
+    Args:
+      x: ``[M, K]`` int8 (input activations, im2col'd by the caller).
+      w: ``[K, N]`` int8 (weights, K-major like VTA's BLOCK_IN-major
+        weight tiles).
+      tile_m / tile_k / tile_n: the hardware BATCH / BLOCK_IN / BLOCK_OUT.
+
+    Returns:
+      ``[M, N]`` int32 accumulator, bit-exact with int32 reference.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert m % tile_m == 0, f"M={m} not a multiple of BATCH={tile_m}"
+    assert k % tile_k == 0, f"K={k} not a multiple of BLOCK_IN={tile_k}"
+    assert n % tile_n == 0, f"N={n} not a multiple of BLOCK_OUT={tile_n}"
+    grid = (m // tile_m, n // tile_n, k // tile_k)
+
+    def kernel(x_ref, w_ref, o_ref):
+        # First visit of this (m, n) tile: zero the accumulator —
+        # VTA's GEMM reset instruction.
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        # One MAC-array tile op: int8 operands, int32 accumulate.
+        xi = x_ref[...].astype(jnp.int32)
+        wi = w_ref[...].astype(jnp.int32)
+        o_ref[...] += jax.lax.dot_general(
+            xi, wi, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_k, tile_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(x, w)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_k", "tile_n"))
+def vta_gemm_jit(x, w, tile_m=1, tile_k=16, tile_n=16):
+    return vta_gemm(x, w, tile_m=tile_m, tile_k=tile_k, tile_n=tile_n)
+
+
+def vmem_tile_bytes(tile_m: int, tile_k: int, tile_n: int) -> int:
+    """Estimated VMEM working set per grid step (for the §Perf structural
+    analysis): one x tile + one w tile (int8) + one int32 acc tile."""
+    return tile_m * tile_k + tile_k * tile_n + 4 * tile_m * tile_n

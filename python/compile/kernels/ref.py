@@ -1,0 +1,69 @@
+"""Pure-jnp correctness oracles for the Pallas kernel and the quantized
+operators. These are the build-time ground truth: pytest asserts the
+Pallas kernel and the L2 model against them, and the rust stack is
+verified against the AOT-compiled L2 model through PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(x, w):
+    """int8 x int8 -> int32 matmul, the oracle for ``vta_gemm``."""
+    return jax.lax.dot_general(
+        x.astype(jnp.int32),
+        w.astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def requant_ref(acc, shift: int, relu: bool):
+    """Hardware requantization: round-half-up shift, optional ReLU, clip
+    to +-127, narrow to int8 — bit-exact with ``cpu_ref::requant`` and the
+    VTA ALU sequence ADD/SHR/MAX/CLIP."""
+    acc = acc.astype(jnp.int32)
+    if shift > 0:
+        acc = jnp.right_shift(acc + (1 << (shift - 1)), shift)
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    return jnp.clip(acc, -127, 127).astype(jnp.int8)
+
+
+def conv2d_ref(x, w, *, stride: int, pad: int, shift: int, relu: bool):
+    """Quantized NCHW conv oracle via XLA's native convolution."""
+    acc = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32),
+        w.astype(jnp.int32),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        preferred_element_type=jnp.int32,
+    )
+    return requant_ref(acc, shift, relu)
+
+
+def add_ref(a, b, relu: bool):
+    """Residual addition oracle."""
+    return requant_ref(a.astype(jnp.int32) + b.astype(jnp.int32), 0, relu)
+
+
+def maxpool_ref(x, *, k: int, stride: int, pad: int):
+    """Max pooling with -128 border padding (the hardware pad value)."""
+    return jax.lax.reduce_window(
+        x,
+        jnp.int8(-128),
+        jax.lax.max,
+        (1, 1, k, k),
+        (1, 1, stride, stride),
+        [(0, 0), (0, 0), (pad, pad), (pad, pad)],
+    )
+
+
+def global_avgpool_ref(x):
+    """Global average pooling as the hardware computes it: window sum
+    scaled by ``ceil(log2(h*w))`` rounding shift."""
+    n, c, h, w = x.shape
+    shift = max(0, (h * w - 1).bit_length())
+    acc = jnp.sum(x.astype(jnp.int32), axis=(2, 3), keepdims=True)
+    return requant_ref(acc, shift, False)

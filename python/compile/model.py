@@ -1,0 +1,58 @@
+"""Layer 2 — the JAX golden model of VTA's quantized computation.
+
+Builds the accelerator's per-layer arithmetic on top of the L1 Pallas
+GEMM kernel: im2col + ``vta_gemm`` + the exact ALU requantization
+sequence. Lowered once by ``aot.py`` to HLO text; the rust coordinator
+loads the artifacts through PJRT and checks the simulated accelerator
+bit-for-bit against them. Python never runs on the request path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.gemm import vta_gemm
+from .kernels.ref import requant_ref
+
+
+def im2col(x, kh: int, kw: int, stride: int, pad: int):
+    """NCHW -> ``[N*OH*OW, C*KH*KW]`` patches (zero padded borders),
+    ordered (c, ky, kx) along the contraction — matching the VTA weight
+    tile layout OIHWoi."""
+    n, c, h, w = x.shape
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    cols = []
+    for ky in range(kh):
+        for kx in range(kw):
+            patch = xp[:, :, ky : ky + (oh - 1) * stride + 1 : stride,
+                       kx : kx + (ow - 1) * stride + 1 : stride]
+            cols.append(patch)  # [N, C, OH, OW]
+    # Stack taps: [N, C, KH*KW, OH, OW] -> [N, OH, OW, C, KH*KW]
+    patches = jnp.stack(cols, axis=2).reshape(n, c, kh * kw, oh, ow)
+    patches = patches.transpose(0, 3, 4, 1, 2)
+    return patches.reshape(n * oh * ow, c * kh * kw), oh, ow
+
+
+def conv2d_vta(x, w, *, stride: int, pad: int, shift: int, relu: bool,
+               tile_m: int = 1, tile_k: int = 16, tile_n: int = 16):
+    """Quantized NCHW convolution through the VTA GEMM kernel.
+
+    ``x``: [N, C, H, W] int8; ``w``: [O, C, KH, KW] int8. Channel counts
+    must be multiples of the tile sizes (the compiler pads them, like the
+    hardware layouts do).
+    """
+    n, c, h, wdim = x.shape
+    o, c2, kh, kw = w.shape
+    assert c == c2
+    cols, oh, ow = im2col(x, kh, kw, stride, pad)
+    wmat = w.reshape(o, c * kh * kw).T  # [C*KH*KW, O]
+    acc = vta_gemm(cols, wmat, tile_m=tile_m, tile_k=tile_k, tile_n=tile_n)
+    out = requant_ref(acc, shift, relu)  # [N*OH*OW, O]
+    return out.reshape(n, oh, ow, o).transpose(0, 3, 1, 2)
+
+
+def dense_vta(x, w, *, shift: int, relu: bool, tile_m: int = 1,
+              tile_k: int = 16, tile_n: int = 16):
+    """Fully connected layer: ``x`` [N, C] int8, ``w`` [O, C] int8."""
+    acc = vta_gemm(x, w.T, tile_m=tile_m, tile_k=tile_k, tile_n=tile_n)
+    return requant_ref(acc, shift, relu)

@@ -1,0 +1,87 @@
+"""L2 correctness: the conv/dense golden model (Pallas-backed) against
+the pure-XLA reference conv, plus requantization semantics vs the rust
+contract.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.model import conv2d_vta, dense_vta, im2col
+from compile.kernels import ref
+
+
+def rand_i8(rng, shape):
+    return jnp.asarray(rng.integers(-8, 8, size=shape, dtype=np.int64).astype(np.int8))
+
+
+def test_conv_quickstart_shape():
+    rng = np.random.default_rng(0)
+    x = rand_i8(rng, (1, 16, 14, 14))
+    w = rand_i8(rng, (16, 16, 3, 3))
+    out = conv2d_vta(x, w, stride=1, pad=1, shift=5, relu=True)
+    assert out.shape == (1, 16, 14, 14)
+    expect = ref.conv2d_ref(x, w, stride=1, pad=1, shift=5, relu=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    c=st.sampled_from([16, 32]),
+    o=st.sampled_from([16, 32]),
+    hw=st.sampled_from([6, 8, 12]),
+    k=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    relu=st.booleans(),
+    shift=st.integers(0, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_conv_sweep(c, o, hw, k, stride, relu, shift, seed):
+    pad = 1 if k == 3 else 0
+    rng = np.random.default_rng(seed)
+    x = rand_i8(rng, (1, c, hw, hw))
+    w = rand_i8(rng, (o, c, k, k))
+    out = conv2d_vta(x, w, stride=stride, pad=pad, shift=shift, relu=relu)
+    expect = ref.conv2d_ref(x, w, stride=stride, pad=pad, shift=shift, relu=relu)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_im2col_ordering_matches_weight_layout():
+    # im2col contraction order must be (c, ky, kx) to match w.reshape.
+    rng = np.random.default_rng(3)
+    x = rand_i8(rng, (1, 4, 5, 5))
+    cols, oh, ow = im2col(x, 3, 3, 1, 1)
+    assert cols.shape == (25, 36)
+    assert (oh, ow) == (5, 5)
+
+
+def test_requant_matches_rust_contract():
+    # Mirrors rust cpu_ref::requant unit tests bit-for-bit.
+    acc = jnp.asarray([5, 6, -5, 1000, -1000], jnp.int32)
+    out = ref.requant_ref(acc, 2, False)
+    np.testing.assert_array_equal(np.asarray(out), [1, 2, -1, 127, -127])
+    out = ref.requant_ref(jnp.asarray([-5], jnp.int32), 0, True)
+    np.testing.assert_array_equal(np.asarray(out), [0])
+
+
+def test_dense():
+    rng = np.random.default_rng(4)
+    x = rand_i8(rng, (4, 64))
+    w = rand_i8(rng, (32, 64))
+    out = dense_vta(x, w, shift=4, relu=False)
+    acc = ref.gemm_ref(x, w.T)
+    expect = ref.requant_ref(acc, 4, False)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_maxpool_ref_neg128_padding():
+    x = jnp.full((1, 1, 2, 2), -100, jnp.int8)
+    out = ref.maxpool_ref(x, k=3, stride=2, pad=1)
+    assert np.asarray(out).flatten().tolist() == [-100]
+
+
+def test_global_avgpool_ref_shift():
+    x = jnp.full((1, 1, 2, 2), 4, jnp.int8)
+    out = ref.global_avgpool_ref(x)
+    assert int(out[0, 0, 0, 0]) == 4  # (16+2)>>2

@@ -1,0 +1,224 @@
+//! Process-utilization visualization (Figs 3 and 4).
+//!
+//! Renders an [`ActivityTrace`] as the paper's three-bar chart — *load*,
+//! *compute*, *store* — with GEMM vs ALU activity distinguished within
+//! the compute bar ("The red sections of compute correspond to GEMM
+//! activity and the green sections to ALU activity") and layer-boundary
+//! markers (the `vcr_finish` red ticks of Fig 4). ASCII for terminals,
+//! SVG for reports.
+
+use crate::sim::activity::{Activity, ActivityTrace, Interval, Module};
+
+/// Utilization summary per module over a window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Utilization {
+    pub load: f64,
+    pub compute: f64,
+    pub store: f64,
+    pub compute_gemm: f64,
+    pub compute_alu: f64,
+}
+
+pub fn utilization(trace: &ActivityTrace, start: u64, end: u64) -> Utilization {
+    let span = (end - start).max(1) as f64;
+    let busy = |m: Module| {
+        trace
+            .intervals
+            .iter()
+            .filter(|iv| iv.module == m)
+            .map(|iv| overlap(iv, start, end))
+            .sum::<u64>() as f64
+            / span
+    };
+    let kind = |a: Activity| {
+        trace
+            .intervals
+            .iter()
+            .filter(|iv| iv.activity == a)
+            .map(|iv| overlap(iv, start, end))
+            .sum::<u64>() as f64
+            / span
+    };
+    Utilization {
+        load: busy(Module::Load),
+        compute: busy(Module::Compute),
+        store: busy(Module::Store),
+        compute_gemm: kind(Activity::Gemm),
+        compute_alu: kind(Activity::Alu),
+    }
+}
+
+fn overlap(iv: &Interval, start: u64, end: u64) -> u64 {
+    iv.end.min(end).saturating_sub(iv.start.max(start))
+}
+
+/// ASCII gantt: one row per module, `width` character bins.
+/// Compute bins show `G` (GEMM), `A` (ALU), `m` (uop/acc DMA); load and
+/// store show `#`. Layer markers are drawn on a separate rail as `|`.
+pub fn ascii(trace: &ActivityTrace, start: u64, end: u64, width: usize) -> String {
+    let span = (end.saturating_sub(start)).max(1);
+    let bin_of = |cycle: u64| -> usize {
+        (((cycle.saturating_sub(start)) as u128 * width as u128 / span as u128) as usize)
+            .min(width - 1)
+    };
+    let mut rows: Vec<(String, Vec<char>)> = vec![
+        ("load   ".into(), vec![' '; width]),
+        ("compute".into(), vec![' '; width]),
+        ("store  ".into(), vec![' '; width]),
+    ];
+    for iv in &trace.intervals {
+        if iv.end <= start || iv.start >= end {
+            continue;
+        }
+        let row = match iv.module {
+            Module::Load => 0,
+            Module::Compute => 1,
+            Module::Store => 2,
+            Module::Fetch => continue,
+        };
+        let ch = match iv.activity {
+            Activity::Gemm => 'G',
+            Activity::Alu => 'A',
+            Activity::LoadUop | Activity::LoadAcc => 'm',
+            _ => '#',
+        };
+        let b0 = bin_of(iv.start.max(start));
+        let b1 = bin_of((iv.end - 1).min(end - 1));
+        for b in b0..=b1 {
+            // GEMM/ALU coloring wins over generic fill within a bin.
+            let cell = &mut rows[row].1[b];
+            if *cell == ' ' || (*cell == '#' && ch != '#') || (*cell == 'm' && (ch == 'G' || ch == 'A')) {
+                *cell = ch;
+            }
+        }
+    }
+    let mut marker_rail = vec![' '; width];
+    for (cycle, _) in &trace.markers {
+        if *cycle >= start && *cycle < end {
+            marker_rail[bin_of(*cycle)] = '|';
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("cycles [{start}, {end})\n"));
+    out.push_str(&format!("layers  {}\n", marker_rail.iter().collect::<String>()));
+    for (label, cells) in rows {
+        out.push_str(&format!("{label} {}\n", cells.iter().collect::<String>()));
+    }
+    out
+}
+
+/// Minimal SVG rendering of the same chart (self-contained file).
+pub fn svg(trace: &ActivityTrace, start: u64, end: u64, width_px: u32) -> String {
+    let span = (end.saturating_sub(start)).max(1) as f64;
+    let row_h = 28.0;
+    let x_of = |c: u64| (c.saturating_sub(start)) as f64 / span * width_px as f64;
+    let mut body = String::new();
+    for iv in &trace.intervals {
+        if iv.end <= start || iv.start >= end {
+            continue;
+        }
+        let row = match iv.module {
+            Module::Load => 0.0,
+            Module::Compute => 1.0,
+            Module::Store => 2.0,
+            Module::Fetch => continue,
+        };
+        let color = match iv.activity {
+            Activity::Gemm => "#d62728",    // red, as in Fig 3
+            Activity::Alu => "#2ca02c",     // green
+            Activity::LoadUop | Activity::LoadAcc => "#9467bd",
+            Activity::StoreDma => "#1f77b4",
+            _ => "#7f7f7f",
+        };
+        let x = x_of(iv.start.max(start));
+        let w = (x_of(iv.end.min(end)) - x).max(0.5);
+        body.push_str(&format!(
+            r#"<rect x="{x:.1}" y="{:.1}" width="{w:.1}" height="{:.1}" fill="{color}"/>"#,
+            row * row_h + 14.0,
+            row_h - 6.0
+        ));
+        body.push('\n');
+    }
+    for (cycle, label) in &trace.markers {
+        if *cycle >= start && *cycle < end {
+            let x = x_of(*cycle);
+            body.push_str(&format!(
+                r#"<line x1="{x:.1}" y1="8" x2="{x:.1}" y2="{:.1}" stroke="red"/><text x="{x:.1}" y="7" font-size="6">{}</text>"#,
+                3.0 * row_h + 14.0,
+                xml_escape(label)
+            ));
+            body.push('\n');
+        }
+    }
+    let h = 3.0 * row_h + 20.0;
+    format!(
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{width_px}" height="{h:.0}">
+<text x="2" y="{:.0}" font-size="10">load</text>
+<text x="2" y="{:.0}" font-size="10">compute</text>
+<text x="2" y="{:.0}" font-size="10">store</text>
+{body}</svg>
+"#,
+        row_h * 0.5 + 14.0,
+        row_h * 1.5 + 14.0,
+        row_h * 2.5 + 14.0,
+    )
+}
+
+fn xml_escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> ActivityTrace {
+        let mut t = ActivityTrace::new(true);
+        t.record(Module::Load, Activity::LoadDma, 0, 40);
+        t.record(Module::Compute, Activity::Gemm, 30, 90);
+        t.record(Module::Compute, Activity::Alu, 90, 100);
+        t.record(Module::Store, Activity::StoreDma, 95, 110);
+        t.mark(100, "layer0");
+        t
+    }
+
+    #[test]
+    fn utilization_fractions() {
+        let t = sample_trace();
+        let u = utilization(&t, 0, 110);
+        assert!((u.load - 40.0 / 110.0).abs() < 1e-9);
+        assert!((u.compute - 70.0 / 110.0).abs() < 1e-9);
+        assert!((u.compute_gemm - 60.0 / 110.0).abs() < 1e-9);
+        assert!((u.compute_alu - 10.0 / 110.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_window_clips() {
+        let t = sample_trace();
+        let u = utilization(&t, 0, 40);
+        assert!((u.load - 1.0).abs() < 1e-9);
+        assert!((u.compute - 10.0 / 40.0).abs() < 1e-9);
+        assert_eq!(u.store, 0.0);
+    }
+
+    #[test]
+    fn ascii_renders_rows_and_markers() {
+        let t = sample_trace();
+        let s = ascii(&t, 0, 110, 55);
+        assert!(s.contains("load"));
+        assert!(s.contains('G'));
+        assert!(s.contains('A'));
+        assert!(s.contains('|'));
+        assert_eq!(s.lines().count(), 5);
+    }
+
+    #[test]
+    fn svg_well_formed_ish() {
+        let t = sample_trace();
+        let s = svg(&t, 0, 110, 400);
+        assert!(s.starts_with("<svg"));
+        assert!(s.trim_end().ends_with("</svg>"));
+        assert!(s.matches("<rect").count() >= 4);
+        assert!(s.contains("#d62728")); // GEMM red
+    }
+}

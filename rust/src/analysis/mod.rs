@@ -1,0 +1,7 @@
+//! Performance-analysis tooling (§III-A): the roofline model (Fig 2),
+//! process-utilization visualization (Figs 3/4), and the scaled-area
+//! model behind the Fig 13 design-space sweep.
+
+pub mod area;
+pub mod gantt;
+pub mod roofline;

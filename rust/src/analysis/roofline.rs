@@ -1,0 +1,121 @@
+//! Roofline model (Fig 2): a log-log chart of Ops/Cycle vs Ops/Byte.
+//!
+//! "The horizontal dashed lines represent compute bounds based on the
+//! number of simultaneously operable compute units. The diagonal dashed
+//! lines correspond to memory bandwidth limit." Ops are MACs; the
+//! bandwidth diagonal's intercept with Ops/Byte = 8 corresponds to the
+//! interface width in bits/cycle, exactly as the paper annotates.
+
+use crate::config::VtaConfig;
+use crate::sim::PerfReport;
+
+/// One roofline (a config's compute ceiling + bandwidth diagonal).
+#[derive(Debug, Clone, Copy)]
+pub struct Roofline {
+    /// Peak MACs/cycle — the MAC array size (compute bound).
+    pub peak_ops_per_cycle: f64,
+    /// DRAM bytes/cycle — the memory interface width.
+    pub bytes_per_cycle: f64,
+}
+
+impl Roofline {
+    pub fn of(cfg: &VtaConfig) -> Roofline {
+        Roofline {
+            peak_ops_per_cycle: cfg.macs_per_gemm_op() as f64,
+            bytes_per_cycle: cfg.axi_bytes as f64,
+        }
+    }
+
+    /// Attainable Ops/Cycle at a given operational intensity (Ops/Byte).
+    pub fn attainable(&self, ops_per_byte: f64) -> f64 {
+        (self.bytes_per_cycle * ops_per_byte).min(self.peak_ops_per_cycle)
+    }
+
+    /// The ridge point: intensity at which compute becomes the bound.
+    pub fn ridge_ops_per_byte(&self) -> f64 {
+        self.peak_ops_per_cycle / self.bytes_per_cycle
+    }
+
+    /// Whether a measured point is compute-bound under this roofline.
+    pub fn compute_bound(&self, ops_per_byte: f64) -> bool {
+        ops_per_byte >= self.ridge_ops_per_byte()
+    }
+}
+
+/// A measured kernel/workload point on the chart.
+#[derive(Debug, Clone)]
+pub struct MeasuredPoint {
+    pub label: String,
+    pub ops_per_byte: f64,
+    pub ops_per_cycle: f64,
+    /// Fraction of the attainable performance at this intensity.
+    pub efficiency: f64,
+}
+
+pub fn measure(label: &str, cfg: &VtaConfig, report: &PerfReport) -> MeasuredPoint {
+    let roof = Roofline::of(cfg);
+    let x = report.macs_per_byte();
+    let y = report.macs_per_cycle();
+    MeasuredPoint {
+        label: label.to_string(),
+        ops_per_byte: x,
+        ops_per_cycle: y,
+        efficiency: y / roof.attainable(x).max(1e-9),
+    }
+}
+
+/// Render the Fig 2-style table: one row per config with the ceiling,
+/// diagonal, ridge and measured points.
+pub fn render_table(rows: &[(VtaConfig, MeasuredPoint)]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<26} {:>9} {:>10} {:>9} {:>11} {:>12} {:>6}\n",
+        "config", "peak op/c", "bytes/c", "ridge", "ops/byte", "ops/cycle", "eff%"
+    ));
+    for (cfg, p) in rows {
+        let roof = Roofline::of(cfg);
+        out.push_str(&format!(
+            "{:<26} {:>9.0} {:>10.0} {:>9.1} {:>11.2} {:>12.2} {:>6.1}\n",
+            cfg.tag(),
+            roof.peak_ops_per_cycle,
+            roof.bytes_per_cycle,
+            roof.ridge_ops_per_byte(),
+            p.ops_per_byte,
+            p.ops_per_cycle,
+            p.efficiency * 100.0
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn default_roofline_values() {
+        let r = Roofline::of(&presets::default_config());
+        assert_eq!(r.peak_ops_per_cycle, 256.0);
+        assert_eq!(r.bytes_per_cycle, 8.0);
+        assert_eq!(r.ridge_ops_per_byte(), 32.0);
+    }
+
+    #[test]
+    fn attainable_clamps() {
+        let r = Roofline::of(&presets::default_config());
+        assert_eq!(r.attainable(1.0), 8.0); // memory bound
+        assert_eq!(r.attainable(1000.0), 256.0); // compute bound
+        assert!(r.compute_bound(64.0));
+        assert!(!r.compute_bound(4.0));
+    }
+
+    #[test]
+    fn paper_bandwidth_annotation() {
+        // "the intercept with the vertical line Ops/Byte = 8 corresponds
+        // to the bandwidth in Bits/Cycle": at 8 ops/byte the diagonal
+        // reads bytes_per_cycle*8 = bits/cycle.
+        let r = Roofline::of(&presets::default_config());
+        assert_eq!(r.attainable(8.0), 64.0); // 64-bit AXI
+    }
+}

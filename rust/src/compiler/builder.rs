@@ -1,0 +1,170 @@
+//! Layer-program builder — the compiler-facing half of the JIT runtime
+//! (§II-C).
+//!
+//! Mirrors the VTA runtime's API surface: schedules *push* uop sequences
+//! (deduplicated through a cache, one of the paper's "runtime
+//! enhancements to lower uop count") and instruction packets; `finish`
+//! stages the uop stream into DRAM, prepends the uop-load instruction,
+//! runs dependency-token insertion and flattens everything into the final
+//! instruction stream for one accelerator kernel launch.
+
+use super::packet::{flatten, insert_deps, PMod, Packet, Region};
+use crate::config::{IsaLayout, VtaConfig};
+use crate::isa::{BufferId, DepFlags, Insn, MemInsn, Opcode, Uop};
+use crate::mem::Dram;
+use std::collections::HashMap;
+
+/// A fully lowered layer program, ready to run on any target.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub label: String,
+    pub insns: Vec<Insn>,
+    /// Number of uops staged in DRAM for this program.
+    pub uop_count: usize,
+}
+
+pub struct ProgramBuilder {
+    pub cfg: VtaConfig,
+    pub layout: IsaLayout,
+    packets: Vec<Packet>,
+    uops: Vec<Uop>,
+    cache: HashMap<Vec<Uop>, (u32, u32)>,
+    pub cache_hits: u64,
+}
+
+impl ProgramBuilder {
+    pub fn new(cfg: &VtaConfig) -> ProgramBuilder {
+        ProgramBuilder {
+            cfg: cfg.clone(),
+            layout: cfg.isa_layout(),
+            packets: Vec::new(),
+            uops: Vec::new(),
+            cache: HashMap::new(),
+            cache_hits: 0,
+        }
+    }
+
+    /// Register a uop sequence, deduplicating identical sequences, and
+    /// return its `[bgn, end)` range in the uop buffer.
+    pub fn uop_seq(&mut self, seq: Vec<Uop>) -> (u32, u32) {
+        assert!(!seq.is_empty(), "empty uop sequence");
+        if let Some(&range) = self.cache.get(&seq) {
+            self.cache_hits += 1;
+            return range;
+        }
+        let bgn = self.uops.len() as u32;
+        let end = bgn + seq.len() as u32;
+        assert!(
+            (end as usize) <= self.cfg.uop_depth,
+            "uop buffer overflow: {} uops > depth {} (tiling should have \
+             been rejected by TPS feasibility)",
+            end,
+            self.cfg.uop_depth
+        );
+        self.uops.extend_from_slice(&seq);
+        self.cache.insert(seq, (bgn, end));
+        (bgn, end)
+    }
+
+    pub fn push(&mut self, packet: Packet) {
+        debug_assert!(!packet.insns.is_empty());
+        self.packets.push(packet);
+    }
+
+    pub fn uop_len(&self) -> usize {
+        self.uops.len()
+    }
+
+    /// Stage uops to DRAM, prepend the uop load, insert dependency
+    /// tokens, append FINISH, and flatten to the final stream.
+    pub fn finish(mut self, label: &str, dram: &mut Dram) -> Program {
+        let uop_count = self.uops.len();
+        let mut all = Vec::with_capacity(self.packets.len() + 2);
+        if uop_count > 0 {
+            let ub = self.layout.uop_bytes();
+            let bytes = Uop::stream_to_bytes(&self.uops, &self.layout);
+            let region = dram.alloc(bytes.len(), ub);
+            dram.write(region.addr, &bytes);
+            // The uop buffer is loaded by the compute module; chunk the
+            // load if a huge stream exceeds the x_size field.
+            let max_x = (1u32 << self.layout.mem_size_bits) - 1;
+            let mut off = 0u32;
+            let mut insns = Vec::new();
+            while off < uop_count as u32 {
+                let n = (uop_count as u32 - off).min(max_x);
+                insns.push(Insn::Mem(MemInsn {
+                    opcode: Opcode::Load,
+                    deps: DepFlags::NONE,
+                    buffer: BufferId::Uop,
+                    sram_base: off,
+                    dram_base: region.tile_base(ub) + off,
+                    y_size: 1,
+                    x_size: n,
+                    x_stride: n,
+                    y_pad0: 0,
+                    y_pad1: 0,
+                    x_pad0: 0,
+                    x_pad1: 0,
+                    pad_value: 0,
+                }));
+                off += n;
+            }
+            all.push(Packet::new(PMod::Compute, insns).write(Region::new(
+                BufferId::Uop,
+                0,
+                uop_count as u32,
+            )));
+        }
+        all.append(&mut self.packets);
+        insert_deps(&mut all);
+        let mut insns = flatten(all);
+        insns.push(Insn::Finish(DepFlags::NONE));
+        Program { label: label.to_string(), insns, uop_count }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn uop_dedup() {
+        let cfg = presets::tiny_config();
+        let mut b = ProgramBuilder::new(&cfg);
+        let seq = vec![Uop::gemm(0, 0, 0), Uop::gemm(1, 1, 1)];
+        let r1 = b.uop_seq(seq.clone());
+        let r2 = b.uop_seq(seq);
+        assert_eq!(r1, r2);
+        assert_eq!(b.cache_hits, 1);
+        assert_eq!(b.uop_len(), 2);
+        let r3 = b.uop_seq(vec![Uop::gemm(2, 0, 0)]);
+        assert_eq!(r3, (2, 3));
+    }
+
+    #[test]
+    fn finish_prepends_uop_load_and_appends_finish() {
+        let cfg = presets::tiny_config();
+        let mut dram = Dram::new(1 << 16);
+        let mut b = ProgramBuilder::new(&cfg);
+        b.uop_seq(vec![Uop::gemm(0, 0, 0)]);
+        let prog = b.finish("test", &mut dram);
+        match &prog.insns[0] {
+            Insn::Mem(m) => {
+                assert_eq!(m.buffer, BufferId::Uop);
+                assert_eq!(m.x_size, 1);
+            }
+            other => panic!("expected uop load, got {other:?}"),
+        }
+        assert!(matches!(prog.insns.last(), Some(Insn::Finish(_))));
+        assert_eq!(prog.uop_count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "uop buffer overflow")]
+    fn uop_overflow_caught() {
+        let cfg = presets::tiny_config(); // depth 512
+        let mut b = ProgramBuilder::new(&cfg);
+        b.uop_seq((0..600).map(|i| Uop::gemm(i % 256, 0, 0)).collect());
+    }
+}

@@ -1,0 +1,420 @@
+//! Convolution (and dense) lowering to VTA instruction packets.
+//!
+//! Schedule structure (per Appendix A, with the §IV-D2 improved double
+//! buffering): spatial chunks × output-channel chunk *groups* of two
+//! virtual threads × input-channel chunks. Each virtual thread owns a
+//! static half of the accumulator and weight scratchpads (TVM's vthread
+//! model); the input block is either loaded once per ci-chunk and shared
+//! by both threads (`reuse_inp`, the improved behaviour) or redundantly
+//! loaded per thread (the original TVM behaviour Fig 11/12 measure
+//! against).
+//!
+//! Requantization follows the hardware-friendly pattern the paper's new
+//! CLIP instruction accelerates: `ADD (1<<(shift-1))` (round half-up),
+//! `SHR shift`, optional `MAX 0` (ReLU), `CLIP 127`.
+
+use super::builder::ProgramBuilder;
+use super::packet::{PMod, Packet, Region};
+use super::tps::{chunk_bounds, ConvSpec, Tiling};
+use crate::isa::{AluInsn, AluOp, BufferId, DepFlags, GemmInsn, Insn, MemInsn, Opcode, Uop};
+
+#[derive(Debug, Clone, Copy)]
+pub struct ConvParams {
+    pub spec: ConvSpec,
+    /// Requantization shift (result is `(acc + round) >> shift`).
+    pub shift: u32,
+    pub relu: bool,
+}
+
+/// DRAM tile bases for the layer's tensors.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvBases {
+    /// Input activation base (in units of input tiles).
+    pub inp: u32,
+    /// Weight base (in units of weight tiles).
+    pub wgt: u32,
+    /// Output activation base (in units of output tiles).
+    pub out: u32,
+}
+
+/// Emit the full packet stream for one convolution layer.
+pub fn lower_conv(b: &mut ProgramBuilder, p: &ConvParams, t: &Tiling, bases: ConvBases) {
+    let cfg = b.cfg.clone();
+    let spec = p.spec;
+    let g = t.geom(&spec, &cfg);
+    let (oh, ow) = (spec.oh(), spec.ow());
+    let (di, dout) = (spec.di(&cfg), spec.dout(&cfg));
+
+    // Ring-slot counts (2 = double buffered).
+    let inp_slots = (cfg.inp_depth / g.inp_block_tiles).min(2).max(1);
+    let wgt_slots = (cfg.wgt_depth / g.wgt_block_tiles).min(2).max(1);
+    let acc_slots = (cfg.acc_depth / g.acc_block_tiles).min(2).max(1);
+    // Virtual-thread group width: two co-chunks in flight when both the
+    // accumulator and weight scratchpads can hold two blocks.
+    let vthreads = if t.tco_o >= 2 && acc_slots >= 2 && wgt_slots >= 2 { 2 } else { 1 };
+
+    // Resident-block tracking (§IV-D2 improved double buffering): when
+    // `reuse_inp` is set, a load whose target slot already holds exactly
+    // the needed block is elided — the improved thread-injection pass
+    // "automatically identif[ies] the redundant loads in alternative
+    // memory load threads" and reuses the data. The original pass
+    // (reuse_inp = false) reloads per use context, as upstream TVM did.
+    let mut inp_resident: std::collections::HashMap<u32, (usize, usize, usize)> =
+        std::collections::HashMap::new();
+    let mut wgt_resident: std::collections::HashMap<u32, (usize, usize)> =
+        std::collections::HashMap::new();
+
+    for yt in 0..t.th_o {
+        let (oy0, oh_c) = chunk_bounds(oh, t.th_o, yt);
+        if oh_c == 0 {
+            continue;
+        }
+        let ih_c = (oh_c - 1) * spec.sh + spec.kh;
+        for xt in 0..t.tw_o {
+            let (ox0, ow_c) = chunk_bounds(ow, t.tw_o, xt);
+            if ow_c == 0 {
+                continue;
+            }
+            let iw_c = (ow_c - 1) * spec.sw + spec.kw;
+            let mut cot = 0;
+            while cot < t.tco_o {
+                let group: Vec<usize> = (cot..(cot + vthreads).min(t.tco_o)).collect();
+                // Per-thread chunk geometry (uniform for divisor tilings).
+                let chunks: Vec<(usize, usize)> =
+                    group.iter().map(|&c| chunk_bounds(dout, t.tco_o, c)).collect();
+                if chunks.iter().all(|&(_, n)| n == 0) {
+                    break;
+                }
+
+                // ---- reset accumulators ----
+                for (v, &(_, co_c)) in chunks.iter().enumerate() {
+                    if co_c == 0 {
+                        continue;
+                    }
+                    let acc_base = (v % acc_slots) as u32 * g.acc_block_tiles as u32;
+                    emit_reset(b, acc_base, co_c, oh_c, ow_c);
+                }
+
+                // ---- accumulate over input-channel chunks ----
+                for cit in 0..t.tci_o {
+                    let (ci0, ci_c) = chunk_bounds(di, t.tci_o, cit);
+                    if ci_c == 0 {
+                        continue;
+                    }
+                    // Improved double buffering: one shared input load,
+                    // elided entirely when the block is already resident.
+                    let shared_inp = if t.reuse_inp {
+                        let slot = (cit % inp_slots) as u32 * g.inp_block_tiles as u32;
+                        let key = (oy0, ox0, ci0);
+                        if inp_resident.get(&slot) != Some(&key) {
+                            emit_inp_load(
+                                b, &spec, bases.inp, slot, oy0, oh_c, ox0, ow_c, ci0, ci_c,
+                            );
+                            inp_resident.insert(slot, key);
+                        }
+                        Some(slot)
+                    } else {
+                        None
+                    };
+                    for (v, &(co0, co_c)) in chunks.iter().enumerate() {
+                        if co_c == 0 {
+                            continue;
+                        }
+                        let inp_slot = match shared_inp {
+                            Some(s) => s,
+                            None => {
+                                // Original behaviour: redundant per-thread
+                                // load of the same input chunk (§IV-D2).
+                                let slot =
+                                    (v % inp_slots) as u32 * g.inp_block_tiles as u32;
+                                emit_inp_load(
+                                    b, &spec, bases.inp, slot, oy0, oh_c, ox0, ow_c, ci0,
+                                    ci_c,
+                                );
+                                slot
+                            }
+                        };
+                        let wgt_slot = (v % wgt_slots) as u32 * g.wgt_block_tiles as u32;
+                        let wgt_key = (co0, ci0);
+                        if !(t.reuse_inp && wgt_resident.get(&wgt_slot) == Some(&wgt_key)) {
+                            emit_wgt_load(b, &spec, bases.wgt, wgt_slot, di, co0, co_c, ci0, ci_c);
+                            wgt_resident.insert(wgt_slot, wgt_key);
+                        }
+                        let acc_base = (v % acc_slots) as u32 * g.acc_block_tiles as u32;
+                        emit_gemm(
+                            b, &spec, acc_base, inp_slot, wgt_slot, co_c, oh_c, ow_c, ci_c,
+                            ih_c, iw_c,
+                        );
+                    }
+                }
+
+                // ---- requantize + store each thread's output ----
+                for (v, &(co0, co_c)) in chunks.iter().enumerate() {
+                    if co_c == 0 {
+                        continue;
+                    }
+                    let acc_base = (v % acc_slots) as u32 * g.acc_block_tiles as u32;
+                    emit_requant(b, p, acc_base, co_c, oh_c, ow_c);
+                    emit_store(
+                        b, acc_base, bases.out, co0, co_c, oy0, oh_c, ox0, ow_c, oh, ow,
+                    );
+                }
+                cot += vthreads;
+            }
+        }
+    }
+}
+
+fn emit_reset(b: &mut ProgramBuilder, acc_base: u32, co_c: usize, oh_c: usize, ow_c: usize) {
+    let seq: Vec<Uop> = (0..ow_c as u32).map(|x| Uop::alu(acc_base + x, acc_base + x)).collect();
+    let (bgn, end) = b.uop_seq(seq);
+    let tiles = (co_c * oh_c * ow_c) as u32;
+    let insn = Insn::Gemm(GemmInsn {
+        deps: DepFlags::NONE,
+        reset: true,
+        uop_bgn: bgn,
+        uop_end: end,
+        lp_out: co_c as u32,
+        lp_in: oh_c as u32,
+        acc_f0: (oh_c * ow_c) as u32,
+        acc_f1: ow_c as u32,
+        inp_f0: 0,
+        inp_f1: 0,
+        wgt_f0: 0,
+        wgt_f1: 0,
+    });
+    b.push(
+        Packet::new(PMod::Compute, vec![insn])
+            .write(Region::new(BufferId::Acc, acc_base, acc_base + tiles)),
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_inp_load(
+    b: &mut ProgramBuilder,
+    spec: &ConvSpec,
+    inp_base: u32,
+    slot: u32,
+    oy0: usize,
+    oh_c: usize,
+    ox0: usize,
+    ow_c: usize,
+    ci0: usize,
+    ci_c: usize,
+) {
+    let ih_c = (oh_c - 1) * spec.sh + spec.kh;
+    let iw_c = (ow_c - 1) * spec.sw + spec.kw;
+    // Input rows/cols covered by this chunk, in global (padded) coords.
+    let y_start = (oy0 * spec.sh) as i64 - spec.ph as i64;
+    let x_start = (ox0 * spec.sw) as i64 - spec.pw as i64;
+    let y_pad0 = (-y_start).max(0) as u32;
+    let x_pad0 = (-x_start).max(0) as u32;
+    let y_pad1 = ((y_start + ih_c as i64) - spec.h as i64).max(0) as u32;
+    let x_pad1 = ((x_start + iw_c as i64) - spec.w as i64).max(0) as u32;
+    let y_size = ih_c as u32 - y_pad0 - y_pad1;
+    let x_size = iw_c as u32 - x_pad0 - x_pad1;
+    let mut insns = Vec::with_capacity(ci_c);
+    for ci in 0..ci_c {
+        let dram_row = y_start + y_pad0 as i64;
+        let dram_col = x_start + x_pad0 as i64;
+        let dram_base = inp_base as i64
+            + (((ci0 + ci) * spec.h) as i64 + dram_row) * spec.w as i64
+            + dram_col;
+        insns.push(Insn::Mem(MemInsn {
+            opcode: Opcode::Load,
+            deps: DepFlags::NONE,
+            buffer: BufferId::Inp,
+            sram_base: slot + (ci * ih_c * iw_c) as u32,
+            dram_base: dram_base as u32,
+            y_size,
+            x_size,
+            x_stride: spec.w as u32,
+            y_pad0,
+            y_pad1,
+            x_pad0,
+            x_pad1,
+            pad_value: 0,
+        }));
+    }
+    let tiles = (ci_c * ih_c * iw_c) as u32;
+    b.push(
+        Packet::new(PMod::Load, insns)
+            .write(Region::new(BufferId::Inp, slot, slot + tiles)),
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_wgt_load(
+    b: &mut ProgramBuilder,
+    spec: &ConvSpec,
+    wgt_base: u32,
+    slot: u32,
+    di: usize,
+    co0: usize,
+    co_c: usize,
+    ci0: usize,
+    ci_c: usize,
+) {
+    let k = spec.kh * spec.kw;
+    let insn = Insn::Mem(MemInsn {
+        opcode: Opcode::Load,
+        deps: DepFlags::NONE,
+        buffer: BufferId::Wgt,
+        sram_base: slot,
+        dram_base: wgt_base + ((co0 * di + ci0) * k) as u32,
+        y_size: co_c as u32,
+        x_size: (ci_c * k) as u32,
+        x_stride: (di * k) as u32,
+        y_pad0: 0,
+        y_pad1: 0,
+        x_pad0: 0,
+        x_pad1: 0,
+        pad_value: 0,
+    });
+    let tiles = (co_c * ci_c * k) as u32;
+    b.push(
+        Packet::new(PMod::Load, vec![insn])
+            .write(Region::new(BufferId::Wgt, slot, slot + tiles)),
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_gemm(
+    b: &mut ProgramBuilder,
+    spec: &ConvSpec,
+    acc_base: u32,
+    inp_slot: u32,
+    wgt_slot: u32,
+    co_c: usize,
+    oh_c: usize,
+    ow_c: usize,
+    ci_c: usize,
+    ih_c: usize,
+    iw_c: usize,
+) {
+    let _ = ih_c;
+    let mut seq = Vec::with_capacity(oh_c * ow_c * ci_c * spec.kw);
+    for y in 0..oh_c {
+        for x in 0..ow_c {
+            for ci in 0..ci_c {
+                for kx in 0..spec.kw {
+                    seq.push(Uop::gemm(
+                        acc_base + (y * ow_c + x) as u32,
+                        inp_slot
+                            + (ci * ih_c * iw_c + y * spec.sh * iw_c + x * spec.sw + kx) as u32,
+                        wgt_slot + (ci * spec.kh * spec.kw + kx) as u32,
+                    ));
+                }
+            }
+        }
+    }
+    let (bgn, end) = b.uop_seq(seq);
+    let insn = Insn::Gemm(GemmInsn {
+        deps: DepFlags::NONE,
+        reset: false,
+        uop_bgn: bgn,
+        uop_end: end,
+        lp_out: co_c as u32,
+        lp_in: spec.kh as u32,
+        acc_f0: (oh_c * ow_c) as u32,
+        acc_f1: 0,
+        inp_f0: 0,
+        inp_f1: iw_c as u32,
+        wgt_f0: (ci_c * spec.kh * spec.kw) as u32,
+        wgt_f1: spec.kw as u32,
+    });
+    let acc_tiles = (co_c * oh_c * ow_c) as u32;
+    let inp_tiles = (ci_c * ih_c * iw_c) as u32;
+    let wgt_tiles = (co_c * ci_c * spec.kh * spec.kw) as u32;
+    b.push(
+        Packet::new(PMod::Compute, vec![insn])
+            .read(Region::new(BufferId::Inp, inp_slot, inp_slot + inp_tiles))
+            .read(Region::new(BufferId::Wgt, wgt_slot, wgt_slot + wgt_tiles))
+            .write(Region::new(BufferId::Acc, acc_base, acc_base + acc_tiles)),
+    );
+}
+
+/// Requantization ALU sequence over one thread's accumulator block.
+fn emit_requant(
+    b: &mut ProgramBuilder,
+    p: &ConvParams,
+    acc_base: u32,
+    co_c: usize,
+    oh_c: usize,
+    ow_c: usize,
+) {
+    let seq: Vec<Uop> = (0..ow_c as u32).map(|x| Uop::alu(acc_base + x, acc_base + x)).collect();
+    let (bgn, end) = b.uop_seq(seq);
+    let alu = |op: AluOp, imm: i32| {
+        Insn::Alu(AluInsn {
+            deps: DepFlags::NONE,
+            reset: false,
+            op,
+            uop_bgn: bgn,
+            uop_end: end,
+            lp_out: co_c as u32,
+            lp_in: oh_c as u32,
+            dst_f0: (oh_c * ow_c) as u32,
+            dst_f1: ow_c as u32,
+            src_f0: (oh_c * ow_c) as u32,
+            src_f1: ow_c as u32,
+            use_imm: true,
+            imm,
+        })
+    };
+    let mut insns = Vec::new();
+    if p.shift > 0 {
+        insns.push(alu(AluOp::Add, 1 << (p.shift - 1)));
+        insns.push(alu(AluOp::Shr, p.shift as i32));
+    }
+    if p.relu {
+        insns.push(alu(AluOp::Max, 0));
+    }
+    insns.push(alu(AluOp::Clip, 127));
+    let tiles = (co_c * oh_c * ow_c) as u32;
+    b.push(
+        Packet::new(PMod::Compute, insns)
+            .read(Region::new(BufferId::Acc, acc_base, acc_base + tiles))
+            .write(Region::new(BufferId::Acc, acc_base, acc_base + tiles))
+            .write(Region::new(BufferId::Out, acc_base, acc_base + tiles)),
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_store(
+    b: &mut ProgramBuilder,
+    acc_base: u32,
+    out_base: u32,
+    co0: usize,
+    co_c: usize,
+    oy0: usize,
+    oh_c: usize,
+    ox0: usize,
+    ow_c: usize,
+    oh: usize,
+    ow: usize,
+) {
+    let mut insns = Vec::with_capacity(co_c);
+    for co in 0..co_c {
+        insns.push(Insn::Mem(MemInsn {
+            opcode: Opcode::Store,
+            deps: DepFlags::NONE,
+            buffer: BufferId::Out,
+            sram_base: acc_base + (co * oh_c * ow_c) as u32,
+            dram_base: out_base + (((co0 + co) * oh + oy0) * ow + ox0) as u32,
+            y_size: oh_c as u32,
+            x_size: ow_c as u32,
+            x_stride: ow as u32,
+            y_pad0: 0,
+            y_pad1: 0,
+            x_pad0: 0,
+            x_pad1: 0,
+            pad_value: 0,
+        }));
+    }
+    let tiles = (co_c * oh_c * ow_c) as u32;
+    b.push(
+        Packet::new(PMod::Store, insns)
+            .read(Region::new(BufferId::Out, acc_base, acc_base + tiles)),
+    );
+}

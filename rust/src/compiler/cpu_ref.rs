@@ -1,0 +1,313 @@
+//! Bit-exact CPU reference implementations of every quantized operator.
+//!
+//! These mirror the *hardware* semantics precisely (int32 accumulate,
+//! round-half-up via `+ (1 << (shift-1))` then arithmetic shift, clip to
+//! ±127, truncating int8 narrowing) so that fsim, tsim, this reference
+//! and the JAX/Pallas golden model must all agree to the bit. Also used
+//! to execute CPU-fallback layers (the channel-light first convolution
+//! runs on the CPU, §IV-E).
+
+use super::tps::ConvSpec;
+
+/// Requantize an int32 accumulator value: round-half-up shift, optional
+/// ReLU, clip to [-127, 127].
+pub fn requant(acc: i32, shift: u32, relu: bool) -> i8 {
+    let mut v = if shift > 0 { (acc + (1 << (shift - 1))) >> shift } else { acc };
+    if relu {
+        v = v.max(0);
+    }
+    v.clamp(-127, 127) as i8
+}
+
+/// int8 conv2d, NCHW x OIHW -> NCHW. `n` is the batch.
+pub fn conv2d(
+    inp: &[i8],
+    wgt: &[i8],
+    n: usize,
+    spec: &ConvSpec,
+    shift: u32,
+    relu: bool,
+) -> Vec<i8> {
+    let (oh, ow) = (spec.oh(), spec.ow());
+    assert_eq!(inp.len(), n * spec.c_in * spec.h * spec.w);
+    assert_eq!(wgt.len(), spec.c_out * spec.c_in * spec.kh * spec.kw);
+    let mut out = vec![0i8; n * spec.c_out * oh * ow];
+    for b in 0..n {
+        for oc in 0..spec.c_out {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0i32;
+                    for ic in 0..spec.c_in {
+                        for ky in 0..spec.kh {
+                            let iy = (oy * spec.sh + ky) as i64 - spec.ph as i64;
+                            if iy < 0 || iy >= spec.h as i64 {
+                                continue;
+                            }
+                            for kx in 0..spec.kw {
+                                let ix = (ox * spec.sw + kx) as i64 - spec.pw as i64;
+                                if ix < 0 || ix >= spec.w as i64 {
+                                    continue;
+                                }
+                                let iv = inp[((b * spec.c_in + ic) * spec.h + iy as usize)
+                                    * spec.w
+                                    + ix as usize] as i32;
+                                let wv = wgt[((oc * spec.c_in + ic) * spec.kh + ky) * spec.kw
+                                    + kx] as i32;
+                                acc += iv * wv;
+                            }
+                        }
+                    }
+                    out[((b * spec.c_out + oc) * oh + oy) * ow + ox] =
+                        requant(acc, shift, relu);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// int8 depthwise conv, NCHW x CHW(taps) -> NCHW.
+#[allow(clippy::too_many_arguments)]
+pub fn depthwise(
+    inp: &[i8],
+    wgt: &[i8],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    shift: u32,
+    relu: bool,
+) -> Vec<i8> {
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    assert_eq!(inp.len(), n * c * h * w);
+    assert_eq!(wgt.len(), c * kh * kw);
+    let mut out = vec![0i8; n * c * oh * ow];
+    for b in 0..n {
+        for ch in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0i32;
+                    for ky in 0..kh {
+                        let iy = (oy * stride + ky) as i64 - pad as i64;
+                        if iy < 0 || iy >= h as i64 {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix = (ox * stride + kx) as i64 - pad as i64;
+                            if ix < 0 || ix >= w as i64 {
+                                continue;
+                            }
+                            let iv =
+                                inp[((b * c + ch) * h + iy as usize) * w + ix as usize] as i32;
+                            let wv = wgt[(ch * kh + ky) * kw + kx] as i32;
+                            acc += iv * wv;
+                        }
+                    }
+                    out[((b * c + ch) * oh + oy) * ow + ox] = requant(acc, shift, relu);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// int8 max pooling. Padded border contributes -128 (the new LOAD pad
+/// value the hardware uses).
+pub fn maxpool(
+    inp: &[i8],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> Vec<i8> {
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
+    let mut out = vec![0i8; n * c * oh * ow];
+    for b in 0..n {
+        for ch in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut m = i8::MIN;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let iy = (oy * stride + ky) as i64 - pad as i64;
+                            let ix = (ox * stride + kx) as i64 - pad as i64;
+                            let v = if iy < 0 || iy >= h as i64 || ix < 0 || ix >= w as i64 {
+                                -128
+                            } else {
+                                inp[((b * c + ch) * h + iy as usize) * w + ix as usize]
+                            };
+                            m = m.max(v);
+                        }
+                    }
+                    out[((b * c + ch) * oh + oy) * ow + ox] = m;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Global average pooling as the hardware computes it: the window sum is
+/// scaled by a power-of-two shift (`ceil(log2(h*w))`) with round-half-up
+/// — a hardware-friendly approximation of mean (documented in DESIGN.md).
+pub fn global_avgpool(inp: &[i8], n: usize, c: usize, h: usize, w: usize) -> Vec<i8> {
+    let shift = crate::util::bitfield::clog2((h * w) as u64);
+    let mut out = vec![0i8; n * c];
+    for b in 0..n {
+        for ch in 0..c {
+            let mut acc = 0i32;
+            for i in 0..h * w {
+                acc += inp[(b * c + ch) * h * w + i] as i32;
+            }
+            out[b * c + ch] = requant(acc, shift, false);
+        }
+    }
+    out
+}
+
+/// Residual addition: `clip(a + b)` with optional ReLU (no shift).
+pub fn add(a: &[i8], b: &[i8], relu: bool) -> Vec<i8> {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| requant(x as i32 + y as i32, 0, relu))
+        .collect()
+}
+
+/// Dense (fully connected): `[n][c_in]` x `[c_out][c_in]` -> `[n][c_out]`.
+pub fn dense(
+    inp: &[i8],
+    wgt: &[i8],
+    n: usize,
+    c_in: usize,
+    c_out: usize,
+    shift: u32,
+    relu: bool,
+) -> Vec<i8> {
+    let spec = ConvSpec {
+        c_in,
+        c_out,
+        h: 1,
+        w: 1,
+        kh: 1,
+        kw: 1,
+        sh: 1,
+        sw: 1,
+        ph: 0,
+        pw: 0,
+    };
+    conv2d(inp, wgt, n, &spec, shift, relu)
+}
+
+/// Default requantization shift for a layer accumulating `n_accum`
+/// products of our synthetic data (values ~U[-8,8)): targets an output
+/// std around 64 so outputs exercise the full int8 range without
+/// saturating everywhere.
+pub fn default_shift(n_accum: usize) -> u32 {
+    // acc std ≈ (4.6)^2 * sqrt(n) ≈ 21*sqrt(n); shift ≈ log2(std/64).
+    let std = 21.0 * (n_accum as f64).sqrt();
+    (std / 64.0).log2().round().max(0.0) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn requant_rounding_half_up() {
+        assert_eq!(requant(5, 2, false), 1); // (5+2)>>2 = 1
+        assert_eq!(requant(6, 2, false), 2); // (6+2)>>2 = 2
+        assert_eq!(requant(-5, 2, false), -1); // (-5+2)>>2 = -3>>2 = -1
+        assert_eq!(requant(1000, 0, false), 127);
+        assert_eq!(requant(-1000, 0, false), -127);
+        assert_eq!(requant(-5, 0, true), 0);
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 kernel, single channel, weight=1, shift=0: identity.
+        let spec = ConvSpec { c_in: 1, c_out: 1, h: 3, w: 3, kh: 1, kw: 1, sh: 1, sw: 1, ph: 0, pw: 0 };
+        let inp: Vec<i8> = (1..=9).collect();
+        let out = conv2d(&inp, &[1], 1, &spec, 0, false);
+        assert_eq!(out, inp);
+    }
+
+    #[test]
+    fn conv_padding_and_stride() {
+        // 3x3 sum kernel over a 3x3 image of ones with pad 1 stride 2:
+        // corners see 4 ones, so output = [[4,4],[4,4]] at stride 2... the
+        // center-adjacent sums differ; compute one by hand: oy=ox=0 sees
+        // rows/cols -1..1 -> 4 valid ones.
+        let spec = ConvSpec { c_in: 1, c_out: 1, h: 3, w: 3, kh: 3, kw: 3, sh: 2, sw: 2, ph: 1, pw: 1 };
+        let inp = vec![1i8; 9];
+        let out = conv2d(&inp, &[1i8; 9], 1, &spec, 0, false);
+        assert_eq!(spec.oh(), 2);
+        assert_eq!(out, vec![4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn maxpool_uses_neg128_padding() {
+        let inp = vec![-100i8; 4]; // 1x1x2x2
+        let out = maxpool(&inp, 1, 1, 2, 2, 3, 2, 1);
+        // All windows include real -100s which beat the -128 pad.
+        assert!(out.iter().all(|&v| v == -100));
+    }
+
+    #[test]
+    fn global_avgpool_shift() {
+        // 2x2 window, values 4,4,4,4: sum=16, shift=2 -> (16+2)>>2 = 4.
+        let out = global_avgpool(&[4, 4, 4, 4], 1, 1, 2, 2);
+        assert_eq!(out, vec![4]);
+    }
+
+    #[test]
+    fn add_clips() {
+        assert_eq!(add(&[100], &[100], false), vec![127]);
+        assert_eq!(add(&[-100], &[-100], false), vec![-127]);
+        assert_eq!(add(&[-5], &[2], true), vec![0]);
+        assert_eq!(add(&[3], &[4], false), vec![7]);
+    }
+
+    #[test]
+    fn depthwise_per_channel() {
+        // 2 channels, 1x1 taps [2, 3]: channel i scaled by tap i.
+        let inp = vec![1i8, 2, 3, 4]; // c0=[1,2], c1=[3,4] (h=1,w=2)
+        let out = depthwise(&inp, &[2, 3], 1, 2, 1, 2, 1, 1, 1, 0, 0, false);
+        assert_eq!(out, vec![2, 4, 9, 12]);
+    }
+
+    #[test]
+    fn dense_matches_manual() {
+        // inp [1,2], w = [[1,1],[2,-1]] -> [3, 0]
+        let out = dense(&[1, 2], &[1, 1, 2, -1], 1, 2, 2, 0, false);
+        assert_eq!(out, vec![3, 0]);
+    }
+
+    #[test]
+    fn default_shift_reasonable() {
+        assert!(default_shift(64 * 9) >= 3);
+        assert!(default_shift(64 * 9) <= 6);
+        assert_eq!(default_shift(1), 0);
+        let mut rng = Pcg32::seeded(1);
+        // Statistical check: conv output under default shift is neither
+        // all-zero nor all-saturated.
+        let spec = ConvSpec { c_in: 16, c_out: 8, h: 8, w: 8, kh: 3, kw: 3, sh: 1, sw: 1, ph: 1, pw: 1 };
+        let inp = rng.i8_vec(16 * 64);
+        let wgt = rng.i8_vec(8 * 16 * 9);
+        let out = conv2d(&inp, &wgt, 1, &spec, default_shift(16 * 9), true);
+        let sat = out.iter().filter(|&&v| v == 127).count();
+        let zero = out.iter().filter(|&&v| v == 0).count();
+        assert!(sat < out.len() / 2, "too saturated: {sat}/{}", out.len());
+        assert!(zero < out.len(), "all zero");
+    }
+}

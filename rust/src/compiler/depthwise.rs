@@ -1,0 +1,269 @@
+//! Depthwise convolution on the ALU (§IV-D3).
+//!
+//! VTA's GEMM core sums over input channels, which depthwise convolution
+//! must not do — so, as in the paper, the schedule routes through the
+//! ALU using the new element-wise 8-bit MUL opcode: per tap,
+//! `TMP = MOV(input patch)`, `TMP *= MUL(weight tap)`, `OUT += TMP`,
+//! followed by the standard requantization sequence. Each channel tile's
+//! weights occupy one accumulator tile per tap (broadcast rows), loaded
+//! through the Acc8 view.
+
+use super::builder::ProgramBuilder;
+use super::packet::{PMod, Packet, Region};
+use crate::isa::{AluInsn, AluOp, BufferId, DepFlags, GemmInsn, Insn, MemInsn, Opcode, Uop};
+
+#[derive(Debug, Clone, Copy)]
+pub struct DepthwiseParams {
+    /// Channel tiles (channels / BLOCK).
+    pub c_tiles: usize,
+    pub h: usize,
+    pub w: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub shift: u32,
+    pub relu: bool,
+}
+
+impl DepthwiseParams {
+    pub fn oh(&self) -> usize {
+        (self.h + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    pub fn ow(&self) -> usize {
+        (self.w + 2 * self.pad - self.k) / self.stride + 1
+    }
+}
+
+/// Lower a depthwise layer. `wgt_base` points at the packed
+/// `[c_tiles][k][k]` weight tiles (Acc8 layout).
+pub fn lower_depthwise(
+    b: &mut ProgramBuilder,
+    p: &DepthwiseParams,
+    inp_base: u32,
+    wgt_base: u32,
+    out_base: u32,
+) {
+    let cfg = b.cfg.clone();
+    let (oh, ow) = (p.oh(), p.ow());
+    let iw_c = (ow - 1) * p.stride + p.k;
+    let taps = p.k * p.k;
+    // Row chunk: IN + WGT + TMP + OUT must double buffer in acc.
+    let mut oh_c = oh;
+    loop {
+        let ih_c = (oh_c - 1) * p.stride + p.k;
+        let block = ih_c * iw_c + taps + 2 * oh_c * ow;
+        if 2 * block <= cfg.acc_depth || oh_c == 1 {
+            break;
+        }
+        oh_c = oh_c.div_ceil(2);
+    }
+    let ih_c_max = (oh_c - 1) * p.stride + p.k;
+    let slot_tiles = (ih_c_max * iw_c + taps + 2 * oh_c * ow) as u32;
+    let mut iter = 0u32;
+
+    for ct in 0..p.c_tiles {
+        let mut oy0 = 0;
+        while oy0 < oh {
+            let rows = oh_c.min(oh - oy0);
+            let ih_c = (rows - 1) * p.stride + p.k;
+            let slot = (iter % 2) * slot_tiles;
+            iter += 1;
+            let in_b = slot;
+            let wgt_b = slot + (ih_c_max * iw_c) as u32;
+            let tmp_b = wgt_b + taps as u32;
+            let out_b = tmp_b + (oh_c * ow) as u32;
+
+            // ---- loads: input patch rows + this channel tile's taps ----
+            let y_start = (oy0 * p.stride) as i64 - p.pad as i64;
+            let y_pad0 = (-y_start).max(0) as u32;
+            let y_pad1 = ((y_start + ih_c as i64) - p.h as i64).max(0) as u32;
+            let x_start = -(p.pad as i64);
+            let x_pad0 = (-x_start).max(0) as u32;
+            let x_pad1 = ((x_start + iw_c as i64) - p.w as i64).max(0) as u32;
+            let inp_load = Insn::Mem(MemInsn {
+                opcode: Opcode::Load,
+                deps: DepFlags::NONE,
+                buffer: BufferId::Acc8,
+                sram_base: in_b,
+                dram_base: inp_base
+                    + ((ct * p.h) as i64 + y_start + y_pad0 as i64) as u32 * p.w as u32,
+                y_size: ih_c as u32 - y_pad0 - y_pad1,
+                x_size: iw_c as u32 - x_pad0 - x_pad1,
+                x_stride: p.w as u32,
+                y_pad0,
+                y_pad1,
+                x_pad0,
+                x_pad1,
+                pad_value: 0,
+            });
+            let wgt_load = Insn::Mem(MemInsn {
+                opcode: Opcode::Load,
+                deps: DepFlags::NONE,
+                buffer: BufferId::Acc8,
+                sram_base: wgt_b,
+                dram_base: wgt_base + (ct * taps) as u32,
+                y_size: 1,
+                x_size: taps as u32,
+                x_stride: taps as u32,
+                y_pad0: 0,
+                y_pad1: 0,
+                x_pad0: 0,
+                x_pad1: 0,
+                pad_value: 0,
+            });
+            b.push(
+                Packet::new(PMod::Compute, vec![inp_load, wgt_load])
+                    .write(Region::new(BufferId::Acc, in_b, in_b + (ih_c * iw_c) as u32))
+                    .write(Region::new(BufferId::Acc, wgt_b, wgt_b + taps as u32)),
+            );
+
+            // ---- zero OUT, then accumulate MOV/MUL/ADD per tap ----
+            let mut insns = Vec::new();
+            let reset_seq: Vec<Uop> =
+                (0..ow as u32).map(|x| Uop::alu(out_b + x, out_b + x)).collect();
+            let (rb, re) = b.uop_seq(reset_seq);
+            insns.push(Insn::Gemm(GemmInsn {
+                deps: DepFlags::NONE,
+                reset: true,
+                uop_bgn: rb,
+                uop_end: re,
+                lp_out: rows as u32,
+                lp_in: 1,
+                acc_f0: ow as u32,
+                acc_f1: 0,
+                inp_f0: 0,
+                inp_f1: 0,
+                wgt_f0: 0,
+                wgt_f1: 0,
+            }));
+            for ky in 0..p.k {
+                for kx in 0..p.k {
+                    let tap = (ky * p.k + kx) as u32;
+                    // TMP = input patch at this tap
+                    let mov_seq: Vec<Uop> = (0..ow)
+                        .map(|x| {
+                            Uop::alu(
+                                tmp_b + x as u32,
+                                in_b + (ky * iw_c + x * p.stride + kx) as u32,
+                            )
+                        })
+                        .collect();
+                    let (mb, me) = b.uop_seq(mov_seq);
+                    insns.push(Insn::Alu(AluInsn {
+                        deps: DepFlags::NONE,
+                        reset: false,
+                        op: AluOp::Mov,
+                        uop_bgn: mb,
+                        uop_end: me,
+                        lp_out: rows as u32,
+                        lp_in: 1,
+                        dst_f0: ow as u32,
+                        dst_f1: 0,
+                        src_f0: (p.stride * iw_c) as u32,
+                        src_f1: 0,
+                        use_imm: false,
+                        imm: 0,
+                    }));
+                    // TMP *= weight tap (same src tile for every element)
+                    let mul_seq: Vec<Uop> =
+                        (0..ow as u32).map(|x| Uop::alu(tmp_b + x, wgt_b + tap)).collect();
+                    let (ub, ue) = b.uop_seq(mul_seq);
+                    insns.push(Insn::Alu(AluInsn {
+                        deps: DepFlags::NONE,
+                        reset: false,
+                        op: AluOp::Mul,
+                        uop_bgn: ub,
+                        uop_end: ue,
+                        lp_out: rows as u32,
+                        lp_in: 1,
+                        dst_f0: ow as u32,
+                        dst_f1: 0,
+                        src_f0: 0,
+                        src_f1: 0,
+                        use_imm: false,
+                        imm: 0,
+                    }));
+                    // OUT += TMP
+                    let add_seq: Vec<Uop> =
+                        (0..ow as u32).map(|x| Uop::alu(out_b + x, tmp_b + x)).collect();
+                    let (ab, ae) = b.uop_seq(add_seq);
+                    insns.push(Insn::Alu(AluInsn {
+                        deps: DepFlags::NONE,
+                        reset: false,
+                        op: AluOp::Add,
+                        uop_bgn: ab,
+                        uop_end: ae,
+                        lp_out: rows as u32,
+                        lp_in: 1,
+                        dst_f0: ow as u32,
+                        dst_f1: 0,
+                        src_f0: ow as u32,
+                        src_f1: 0,
+                        use_imm: false,
+                        imm: 0,
+                    }));
+                }
+            }
+            // ---- requantize OUT ----
+            let imm_alu = |b: &mut ProgramBuilder, op: AluOp, imm: i32| {
+                let seq: Vec<Uop> =
+                    (0..ow as u32).map(|x| Uop::alu(out_b + x, out_b + x)).collect();
+                let (bgn, end) = b.uop_seq(seq);
+                Insn::Alu(AluInsn {
+                    deps: DepFlags::NONE,
+                    reset: false,
+                    op,
+                    uop_bgn: bgn,
+                    uop_end: end,
+                    lp_out: rows as u32,
+                    lp_in: 1,
+                    dst_f0: ow as u32,
+                    dst_f1: 0,
+                    src_f0: ow as u32,
+                    src_f1: 0,
+                    use_imm: true,
+                    imm,
+                })
+            };
+            if p.shift > 0 {
+                insns.push(imm_alu(b, AluOp::Add, 1 << (p.shift - 1)));
+                insns.push(imm_alu(b, AluOp::Shr, p.shift as i32));
+            }
+            if p.relu {
+                insns.push(imm_alu(b, AluOp::Max, 0));
+            }
+            insns.push(imm_alu(b, AluOp::Clip, 127));
+
+            let out_tiles = (rows * ow) as u32;
+            b.push(
+                Packet::new(PMod::Compute, insns)
+                    .read(Region::new(BufferId::Acc, in_b, wgt_b + taps as u32))
+                    .write(Region::new(BufferId::Acc, tmp_b, out_b + out_tiles))
+                    .write(Region::new(BufferId::Out, out_b, out_b + out_tiles)),
+            );
+
+            // ---- store ----
+            let store = Insn::Mem(MemInsn {
+                opcode: Opcode::Store,
+                deps: DepFlags::NONE,
+                buffer: BufferId::Out,
+                sram_base: out_b,
+                dram_base: out_base + ((ct * oh + oy0) * ow) as u32,
+                y_size: rows as u32,
+                x_size: ow as u32,
+                x_stride: ow as u32,
+                y_pad0: 0,
+                y_pad1: 0,
+                x_pad0: 0,
+                x_pad1: 0,
+                pad_value: 0,
+            });
+            b.push(
+                Packet::new(PMod::Store, vec![store])
+                    .read(Region::new(BufferId::Out, out_b, out_b + out_tiles)),
+            );
+            oy0 += rows;
+        }
+    }
+}

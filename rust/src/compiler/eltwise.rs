@@ -1,0 +1,326 @@
+//! ALU-only layer schedules: max/average pooling, residual addition —
+//! the layers the paper newly enabled on the accelerator (§IV-E: "We
+//! created VTA schedules for average and max pooling layers by utilizing
+//! the ALU unit"), so full ResNets run "from the 2nd convolution layer
+//! ... to the final fully-connected layer".
+//!
+//! All of these flow int8 activations through the 8-bit accumulator view
+//! (`Acc8` loads, executed by the compute module like upstream VTA's ACC
+//! loads), compute on the ALU, and store from the OUT scratchpad. Max
+//! pooling exploits the new pad-value LOAD feature (-128 borders).
+
+use super::builder::ProgramBuilder;
+use super::packet::{PMod, Packet, Region};
+use crate::isa::{AluInsn, AluOp, BufferId, DepFlags, GemmInsn, Insn, MemInsn, Opcode, Uop};
+
+/// 2-D pooling descriptor over a `[c][h][w]`-tiled activation (channel
+/// tiles of the configured BLOCK).
+#[derive(Debug, Clone, Copy)]
+pub struct PoolParams {
+    /// Channel tiles.
+    pub c_tiles: usize,
+    pub h: usize,
+    pub w: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// true = max pooling; false = sum + shift (average).
+    pub is_max: bool,
+    /// Shift applied to the sum for average pooling (0 for max).
+    pub shift: u32,
+}
+
+impl PoolParams {
+    pub fn oh(&self) -> usize {
+        (self.h + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    pub fn ow(&self) -> usize {
+        (self.w + 2 * self.pad - self.k) / self.stride + 1
+    }
+}
+
+/// Lower a pooling layer. Processes one channel tile × a chunk of output
+/// rows per iteration, double buffered across iterations.
+pub fn lower_pool(b: &mut ProgramBuilder, p: &PoolParams, inp_base: u32, out_base: u32) {
+    let cfg = b.cfg.clone();
+    let (oh, ow) = (p.oh(), p.ow());
+    let iw_c = (ow - 1) * p.stride + p.k;
+    // Choose the output-row chunk so in+out blocks double buffer in acc.
+    let mut oh_c = oh;
+    loop {
+        let ih_c = (oh_c - 1) * p.stride + p.k;
+        let block = ih_c * iw_c + oh_c * ow;
+        if 2 * block <= cfg.acc_depth || oh_c == 1 {
+            break;
+        }
+        oh_c = oh_c.div_ceil(2);
+    }
+    let ih_c_max = (oh_c - 1) * p.stride + p.k;
+    let slot_tiles = (ih_c_max * iw_c + oh_c * ow) as u32;
+    let pad_value = if p.is_max { -128 } else { 0 };
+    let mut iter = 0u32;
+
+    for ct in 0..p.c_tiles {
+        let mut oy0 = 0;
+        while oy0 < oh {
+            let rows = oh_c.min(oh - oy0);
+            let ih_c = (rows - 1) * p.stride + p.k;
+            let slot = (iter % 2) * slot_tiles;
+            iter += 1;
+            let in_b = slot;
+            let out_b = slot + (ih_c_max * iw_c) as u32;
+
+            // ---- load the input rows (Acc8, with pad fill) ----
+            // The block covers global rows [y_start, y_start+ih_c) and
+            // cols [-pad, -pad+iw_c); out-of-image tiles become pad fill.
+            let y_start = (oy0 * p.stride) as i64 - p.pad as i64;
+            let y_pad0 = (-y_start).max(0) as u32;
+            let y_pad1 = ((y_start + ih_c as i64) - p.h as i64).max(0) as u32;
+            let x_start = -(p.pad as i64);
+            let x_pad0 = (-x_start).max(0) as u32;
+            let x_pad1 = ((x_start + iw_c as i64) - p.w as i64).max(0) as u32;
+            let load = Insn::Mem(MemInsn {
+                opcode: Opcode::Load,
+                deps: DepFlags::NONE,
+                buffer: BufferId::Acc8,
+                sram_base: in_b,
+                dram_base: inp_base
+                    + ((ct * p.h) as i64 + y_start + y_pad0 as i64) as u32 * p.w as u32,
+                y_size: ih_c as u32 - y_pad0 - y_pad1,
+                x_size: iw_c as u32 - x_pad0 - x_pad1,
+                x_stride: p.w as u32,
+                y_pad0,
+                y_pad1,
+                x_pad0,
+                x_pad1,
+                pad_value,
+            });
+            b.push(
+                Packet::new(PMod::Compute, vec![load]).write(Region::new(
+                    BufferId::Acc,
+                    in_b,
+                    in_b + (ih_c * iw_c) as u32,
+                )),
+            );
+
+            // ---- reduce over the window taps ----
+            let mut insns = Vec::new();
+            if !p.is_max {
+                // Zero the output block, then accumulate all taps.
+                let seq: Vec<Uop> =
+                    (0..ow as u32).map(|x| Uop::alu(out_b + x, out_b + x)).collect();
+                let (bgn, end) = b.uop_seq(seq);
+                insns.push(Insn::Gemm(GemmInsn {
+                    deps: DepFlags::NONE,
+                    reset: true,
+                    uop_bgn: bgn,
+                    uop_end: end,
+                    lp_out: rows as u32,
+                    lp_in: 1,
+                    acc_f0: ow as u32,
+                    acc_f1: 0,
+                    inp_f0: 0,
+                    inp_f1: 0,
+                    wgt_f0: 0,
+                    wgt_f1: 0,
+                }));
+            }
+            for ky in 0..p.k {
+                for kx in 0..p.k {
+                    let op = if p.is_max {
+                        if ky == 0 && kx == 0 {
+                            AluOp::Mov
+                        } else {
+                            AluOp::Max
+                        }
+                    } else {
+                        AluOp::Add
+                    };
+                    let seq: Vec<Uop> = (0..ow)
+                        .map(|x| {
+                            Uop::alu(
+                                out_b + x as u32,
+                                in_b + (ky * iw_c + x * p.stride + kx) as u32,
+                            )
+                        })
+                        .collect();
+                    let (bgn, end) = b.uop_seq(seq);
+                    insns.push(Insn::Alu(AluInsn {
+                        deps: DepFlags::NONE,
+                        reset: false,
+                        op,
+                        uop_bgn: bgn,
+                        uop_end: end,
+                        lp_out: rows as u32,
+                        lp_in: 1,
+                        dst_f0: ow as u32,
+                        dst_f1: 0,
+                        src_f0: (p.stride * iw_c) as u32,
+                        src_f1: 0,
+                        use_imm: false,
+                        imm: 0,
+                    }));
+                }
+            }
+            // Average pooling: rounding shift.
+            if !p.is_max && p.shift > 0 {
+                let seq: Vec<Uop> =
+                    (0..ow as u32).map(|x| Uop::alu(out_b + x, out_b + x)).collect();
+                let (bgn, end) = b.uop_seq(seq);
+                let imm_alu = |op: AluOp, imm: i32| {
+                    Insn::Alu(AluInsn {
+                        deps: DepFlags::NONE,
+                        reset: false,
+                        op,
+                        uop_bgn: bgn,
+                        uop_end: end,
+                        lp_out: rows as u32,
+                        lp_in: 1,
+                        dst_f0: ow as u32,
+                        dst_f1: 0,
+                        src_f0: ow as u32,
+                        src_f1: 0,
+                        use_imm: true,
+                        imm,
+                    })
+                };
+                insns.push(imm_alu(AluOp::Add, 1 << (p.shift - 1)));
+                insns.push(imm_alu(AluOp::Shr, p.shift as i32));
+                insns.push(imm_alu(AluOp::Clip, 127));
+            }
+            let out_tiles = (rows * ow) as u32;
+            b.push(
+                Packet::new(PMod::Compute, insns)
+                    .read(Region::new(BufferId::Acc, in_b, in_b + (ih_c * iw_c) as u32))
+                    .write(Region::new(BufferId::Acc, out_b, out_b + out_tiles))
+                    .write(Region::new(BufferId::Out, out_b, out_b + out_tiles)),
+            );
+
+            // ---- store ----
+            let store = Insn::Mem(MemInsn {
+                opcode: Opcode::Store,
+                deps: DepFlags::NONE,
+                buffer: BufferId::Out,
+                sram_base: out_b,
+                dram_base: out_base + ((ct * oh + oy0) * ow) as u32,
+                y_size: rows as u32,
+                x_size: ow as u32,
+                x_stride: ow as u32,
+                y_pad0: 0,
+                y_pad1: 0,
+                x_pad0: 0,
+                x_pad1: 0,
+                pad_value: 0,
+            });
+            b.push(
+                Packet::new(PMod::Store, vec![store])
+                    .read(Region::new(BufferId::Out, out_b, out_b + out_tiles)),
+            );
+            oy0 += rows;
+        }
+    }
+}
+
+/// Residual addition over two identically-shaped tiled activations:
+/// `out = clip(a + b)` with optional ReLU. Processes `chunk` tiles per
+/// iteration, double buffered.
+pub fn lower_add(
+    b: &mut ProgramBuilder,
+    total_tiles: usize,
+    a_base: u32,
+    b_base: u32,
+    out_base: u32,
+    relu: bool,
+) {
+    let cfg = b.cfg.clone();
+    let max_loop = (1usize << b.layout.loop_bits) - 1;
+    let chunk = (cfg.acc_depth / 4).min(total_tiles).min(max_loop).max(1);
+    let mut off = 0usize;
+    let mut iter = 0u32;
+    while off < total_tiles {
+        let n = chunk.min(total_tiles - off);
+        let slot = (iter % 2) * (2 * chunk) as u32;
+        iter += 1;
+        let a_slot = slot;
+        let b_slot = slot + chunk as u32;
+
+        let load = |sram: u32, dram: u32| {
+            Insn::Mem(MemInsn {
+                opcode: Opcode::Load,
+                deps: DepFlags::NONE,
+                buffer: BufferId::Acc8,
+                sram_base: sram,
+                dram_base: dram,
+                y_size: 1,
+                x_size: n as u32,
+                x_stride: n as u32,
+                y_pad0: 0,
+                y_pad1: 0,
+                x_pad0: 0,
+                x_pad1: 0,
+                pad_value: 0,
+            })
+        };
+        b.push(
+            Packet::new(
+                PMod::Compute,
+                vec![load(a_slot, a_base + off as u32), load(b_slot, b_base + off as u32)],
+            )
+            .write(Region::new(BufferId::Acc, a_slot, a_slot + n as u32))
+            .write(Region::new(BufferId::Acc, b_slot, b_slot + n as u32)),
+        );
+
+        // Single-uop ALU with lp_out walking the tiles: dst += src.
+        let (bgn, end) = b.uop_seq(vec![Uop::alu(a_slot, b_slot)]);
+        let alu = |op: AluOp, use_imm: bool, imm: i32| {
+            Insn::Alu(AluInsn {
+                deps: DepFlags::NONE,
+                reset: false,
+                op,
+                uop_bgn: bgn,
+                uop_end: end,
+                lp_out: n as u32,
+                lp_in: 1,
+                dst_f0: 1,
+                dst_f1: 0,
+                src_f0: 1,
+                src_f1: 0,
+                use_imm,
+                imm,
+            })
+        };
+        let mut insns = vec![alu(AluOp::Add, false, 0)];
+        if relu {
+            insns.push(alu(AluOp::Max, true, 0));
+        }
+        insns.push(alu(AluOp::Clip, true, 127));
+        b.push(
+            Packet::new(PMod::Compute, insns)
+                .read(Region::new(BufferId::Acc, a_slot, b_slot + n as u32))
+                .write(Region::new(BufferId::Acc, a_slot, a_slot + n as u32))
+                .write(Region::new(BufferId::Out, a_slot, a_slot + n as u32)),
+        );
+
+        let store = Insn::Mem(MemInsn {
+            opcode: Opcode::Store,
+            deps: DepFlags::NONE,
+            buffer: BufferId::Out,
+            sram_base: a_slot,
+            dram_base: out_base + off as u32,
+            y_size: 1,
+            x_size: n as u32,
+            x_stride: n as u32,
+            y_pad0: 0,
+            y_pad1: 0,
+            x_pad0: 0,
+            x_pad1: 0,
+            pad_value: 0,
+        });
+        b.push(
+            Packet::new(PMod::Store, vec![store])
+                .read(Region::new(BufferId::Out, a_slot, a_slot + n as u32)),
+        );
+        off += n;
+    }
+}

@@ -1,0 +1,328 @@
+//! Neural-network graph IR.
+//!
+//! The paper's stack ingests Relay graphs; here the equivalent role is a
+//! small DAG IR with the quantized operators the evaluation needs
+//! (convolution, depthwise convolution, dense, pooling, residual add).
+//! Weights are attached to nodes directly (synthetic int8, seeded — see
+//! DESIGN.md §Substitutions). The IR also executes on the CPU reference
+//! ops, which is both the fallback path for channel-light layers and a
+//! whole-network golden model.
+
+use super::cpu_ref;
+use super::layout::Shape;
+use super::tps::ConvSpec;
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// Graph input placeholder.
+    Input,
+    /// Standard convolution, OIHW weights, square kernel/stride/pad.
+    Conv { c_out: usize, k: usize, stride: usize, pad: usize, shift: u32, relu: bool, weights: Vec<i8> },
+    /// Depthwise convolution, CHW (per-channel taps) weights.
+    Depthwise { k: usize, stride: usize, pad: usize, shift: u32, relu: bool, weights: Vec<i8> },
+    /// Fully connected over a (c,1,1) input.
+    Dense { units: usize, shift: u32, relu: bool, weights: Vec<i8> },
+    MaxPool { k: usize, stride: usize, pad: usize },
+    GlobalAvgPool,
+    /// Residual addition of two equal-shape inputs, then optional ReLU.
+    Add { relu: bool },
+}
+
+impl Op {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Input => "input",
+            Op::Conv { .. } => "conv",
+            Op::Depthwise { .. } => "depthwise",
+            Op::Dense { .. } => "dense",
+            Op::MaxPool { .. } => "maxpool",
+            Op::GlobalAvgPool => "avgpool",
+            Op::Add { .. } => "add",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub op: Op,
+    /// Indices of producer nodes (one, except `Add` which takes two).
+    pub inputs: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub input_shape: Shape,
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new(name: &str, input_shape: Shape) -> Graph {
+        Graph {
+            name: name.to_string(),
+            input_shape,
+            nodes: vec![Node { name: "input".into(), op: Op::Input, inputs: vec![] }],
+        }
+    }
+
+    /// Append a node; returns its index.
+    pub fn add(&mut self, name: &str, op: Op, inputs: Vec<usize>) -> usize {
+        for &i in &inputs {
+            assert!(i < self.nodes.len(), "forward reference in graph");
+        }
+        self.nodes.push(Node { name: name.to_string(), op, inputs });
+        self.nodes.len() - 1
+    }
+
+    /// Per-node output shapes.
+    pub fn shapes(&self) -> Vec<Shape> {
+        let mut shapes: Vec<Shape> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let shape = match &node.op {
+                Op::Input => self.input_shape,
+                Op::Conv { c_out, k, stride, pad, .. } => {
+                    let s = shapes[node.inputs[0]];
+                    Shape::new(
+                        *c_out,
+                        (s.h + 2 * pad - k) / stride + 1,
+                        (s.w + 2 * pad - k) / stride + 1,
+                    )
+                }
+                Op::Depthwise { k, stride, pad, .. } => {
+                    let s = shapes[node.inputs[0]];
+                    Shape::new(
+                        s.c,
+                        (s.h + 2 * pad - k) / stride + 1,
+                        (s.w + 2 * pad - k) / stride + 1,
+                    )
+                }
+                Op::Dense { units, .. } => {
+                    let s = shapes[node.inputs[0]];
+                    assert_eq!((s.h, s.w), (1, 1), "dense expects (c,1,1) input");
+                    Shape::new(*units, 1, 1)
+                }
+                Op::MaxPool { k, stride, pad } => {
+                    let s = shapes[node.inputs[0]];
+                    Shape::new(
+                        s.c,
+                        (s.h + 2 * pad - k) / stride + 1,
+                        (s.w + 2 * pad - k) / stride + 1,
+                    )
+                }
+                Op::GlobalAvgPool => {
+                    let s = shapes[node.inputs[0]];
+                    Shape::new(s.c, 1, 1)
+                }
+                Op::Add { .. } => {
+                    let a = shapes[node.inputs[0]];
+                    let b = shapes[node.inputs[1]];
+                    assert_eq!(a, b, "Add requires equal shapes");
+                    a
+                }
+            };
+            shapes.push(shape);
+        }
+        shapes
+    }
+
+    /// The conv spec of a `Conv` node given its input shape.
+    pub fn conv_spec(&self, idx: usize, shapes: &[Shape]) -> ConvSpec {
+        match &self.nodes[idx].op {
+            Op::Conv { c_out, k, stride, pad, .. } => {
+                let s = shapes[self.nodes[idx].inputs[0]];
+                ConvSpec {
+                    c_in: s.c,
+                    c_out: *c_out,
+                    h: s.h,
+                    w: s.w,
+                    kh: *k,
+                    kw: *k,
+                    sh: *stride,
+                    sw: *stride,
+                    ph: *pad,
+                    pw: *pad,
+                }
+            }
+            Op::Dense { units, .. } => {
+                let s = shapes[self.nodes[idx].inputs[0]];
+                ConvSpec {
+                    c_in: s.c,
+                    c_out: *units,
+                    h: 1,
+                    w: 1,
+                    kh: 1,
+                    kw: 1,
+                    sh: 1,
+                    sw: 1,
+                    ph: 0,
+                    pw: 0,
+                }
+            }
+            other => panic!("conv_spec on non-conv node {other:?}"),
+        }
+    }
+
+    /// Execute the whole graph with the CPU reference ops (the rust-side
+    /// golden model). `input` is `[batch][c][h][w]`.
+    pub fn run_cpu(&self, input: &[i8], batch: usize) -> Vec<i8> {
+        let shapes = self.shapes();
+        let mut outputs: Vec<Option<Vec<i8>>> = vec![None; self.nodes.len()];
+        outputs[0] = Some(input.to_vec());
+        for (i, node) in self.nodes.iter().enumerate().skip(1) {
+            let get = |j: usize| outputs[j].as_ref().expect("producer not computed");
+            let out = match &node.op {
+                Op::Input => unreachable!(),
+                Op::Conv { shift, relu, weights, .. } => {
+                    let spec = self.conv_spec(i, &shapes);
+                    cpu_ref::conv2d(get(node.inputs[0]), weights, batch, &spec, *shift, *relu)
+                }
+                Op::Depthwise { k, stride, pad, shift, relu, weights } => {
+                    let s = shapes[node.inputs[0]];
+                    cpu_ref::depthwise(
+                        get(node.inputs[0]),
+                        weights,
+                        batch,
+                        s.c,
+                        s.h,
+                        s.w,
+                        *k,
+                        *k,
+                        *stride,
+                        *pad,
+                        *shift,
+                        *relu,
+                    )
+                }
+                Op::Dense { units, shift, relu, weights } => {
+                    let s = shapes[node.inputs[0]];
+                    cpu_ref::dense(get(node.inputs[0]), weights, batch, s.c, *units, *shift, *relu)
+                }
+                Op::MaxPool { k, stride, pad } => {
+                    let s = shapes[node.inputs[0]];
+                    cpu_ref::maxpool(get(node.inputs[0]), batch, s.c, s.h, s.w, *k, *stride, *pad)
+                }
+                Op::GlobalAvgPool => {
+                    let s = shapes[node.inputs[0]];
+                    cpu_ref::global_avgpool(get(node.inputs[0]), batch, s.c, s.h, s.w)
+                }
+                Op::Add { relu } => {
+                    cpu_ref::add(get(node.inputs[0]), get(node.inputs[1]), *relu)
+                }
+            };
+            outputs[i] = Some(out);
+        }
+        outputs.pop().unwrap().unwrap()
+    }
+
+    /// Total GEMM-unit MACs a hardware config executes for this graph
+    /// (padded channels; CPU-fallback and ALU layers excluded).
+    pub fn vta_macs(&self, cfg: &crate::config::VtaConfig) -> u64 {
+        let shapes = self.shapes();
+        let mut total = 0u64;
+        for (i, node) in self.nodes.iter().enumerate() {
+            match &node.op {
+                Op::Conv { .. } | Op::Dense { .. } => {
+                    let spec = self.conv_spec(i, &shapes);
+                    if spec.c_in >= cfg.block_in {
+                        total += spec.macs(cfg);
+                    }
+                }
+                _ => {}
+            }
+        }
+        total
+    }
+}
+
+/// Random conv weights helper for workload construction.
+pub fn rand_weights(rng: &mut Pcg32, len: usize) -> Vec<i8> {
+    rng.i8_vec(len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> Graph {
+        let mut rng = Pcg32::seeded(1);
+        let mut g = Graph::new("tiny", Shape::new(4, 8, 8));
+        let c1 = g.add(
+            "conv1",
+            Op::Conv {
+                c_out: 8,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                shift: 4,
+                relu: true,
+                weights: rand_weights(&mut rng, 8 * 4 * 9),
+            },
+            vec![0],
+        );
+        let p = g.add("pool", Op::MaxPool { k: 2, stride: 2, pad: 0 }, vec![c1]);
+        let gap = g.add("gap", Op::GlobalAvgPool, vec![p]);
+        g.add(
+            "fc",
+            Op::Dense { units: 10, shift: 3, relu: false, weights: rand_weights(&mut rng, 10 * 8) },
+            vec![gap],
+        );
+        g
+    }
+
+    #[test]
+    fn shapes_inferred() {
+        let g = tiny_graph();
+        let shapes = g.shapes();
+        assert_eq!(shapes[1], Shape::new(8, 8, 8));
+        assert_eq!(shapes[2], Shape::new(8, 4, 4));
+        assert_eq!(shapes[3], Shape::new(8, 1, 1));
+        assert_eq!(shapes[4], Shape::new(10, 1, 1));
+    }
+
+    #[test]
+    fn cpu_execution_produces_output() {
+        let g = tiny_graph();
+        let mut rng = Pcg32::seeded(2);
+        let input = rng.i8_vec(4 * 8 * 8);
+        let out = g.run_cpu(&input, 1);
+        assert_eq!(out.len(), 10);
+        assert!(out.iter().any(|&v| v != 0), "degenerate output");
+    }
+
+    #[test]
+    fn residual_add_shape_check() {
+        let mut g = Graph::new("res", Shape::new(4, 4, 4));
+        let a = g.add(
+            "c1",
+            Op::Conv { c_out: 4, k: 1, stride: 1, pad: 0, shift: 0, relu: false, weights: vec![1; 16] },
+            vec![0],
+        );
+        let add = g.add("add", Op::Add { relu: true }, vec![a, 0]);
+        let shapes = g.shapes();
+        assert_eq!(shapes[add], Shape::new(4, 4, 4));
+    }
+
+    #[test]
+    fn vta_macs_excludes_thin_convs() {
+        let mut rng = Pcg32::seeded(3);
+        let cfg = crate::config::presets::default_config();
+        let mut g = Graph::new("thin", Shape::new(3, 8, 8));
+        g.add(
+            "conv1",
+            Op::Conv {
+                c_out: 16,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                shift: 3,
+                relu: false,
+                weights: rand_weights(&mut rng, 16 * 3 * 9),
+            },
+            vec![0],
+        );
+        // 3-channel conv runs on CPU: no VTA MACs.
+        assert_eq!(g.vta_macs(&cfg), 0);
+    }
+}

@@ -1,0 +1,222 @@
+//! Tensor layouts and packing.
+//!
+//! VTA computes on *tiles*: activations live in DRAM as
+//! `[C/BLOCK][H][W]` tiles of `[BATCH][BLOCK]` int8 (TVM's NCHWnc), conv
+//! weights as `[O/BLOCK][I/BLOCK][KH][KW]` tiles of `[BLOCK][BLOCK]`
+//! (OIHWoi), and depthwise weights as `[C/BLOCK][KH][KW]` tiles of
+//! `[BATCH][BLOCK]` broadcast rows. Channel counts are zero-padded up to
+//! a multiple of BLOCK. This module converts between flat NCHW tensors
+//! and the tiled DRAM images, and provides the shape bookkeeping used by
+//! the schedules.
+
+/// Activation shape (per-device batch is the hardware BATCH parameter).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    /// Channels (logical, pre-padding).
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Shape {
+    pub fn new(c: usize, h: usize, w: usize) -> Shape {
+        Shape { c, h, w }
+    }
+
+    /// Channel tiles after padding to `block`.
+    pub fn c_tiles(&self, block: usize) -> usize {
+        self.c.div_ceil(block)
+    }
+
+    /// Total tiles in the tiled layout.
+    pub fn tiles(&self, block: usize) -> usize {
+        self.c_tiles(block) * self.h * self.w
+    }
+
+    pub fn elems(&self) -> usize {
+        self.c * self.h * self.w
+    }
+}
+
+/// Pack an NCHW activation (n = `batch`) into the tiled VTA image.
+/// Input is `[batch][c][h][w]` row-major; output is
+/// `[c/block][h][w][batch][block]` with zero padding in the channel tail.
+pub fn pack_activation(data: &[i8], batch: usize, shape: Shape, block: usize) -> Vec<i8> {
+    assert_eq!(data.len(), batch * shape.elems(), "activation size mismatch");
+    let cb = shape.c_tiles(block);
+    let mut out = vec![0i8; cb * shape.h * shape.w * batch * block];
+    for n in 0..batch {
+        for c in 0..shape.c {
+            let (ct, ci) = (c / block, c % block);
+            for y in 0..shape.h {
+                for x in 0..shape.w {
+                    let src = ((n * shape.c + c) * shape.h + y) * shape.w + x;
+                    let tile = (ct * shape.h + y) * shape.w + x;
+                    let dst = (tile * batch + n) * block + ci;
+                    out[dst] = data[src];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_activation`].
+pub fn unpack_activation(tiled: &[i8], batch: usize, shape: Shape, block: usize) -> Vec<i8> {
+    let cb = shape.c_tiles(block);
+    assert_eq!(tiled.len(), cb * shape.h * shape.w * batch * block);
+    let mut out = vec![0i8; batch * shape.elems()];
+    for n in 0..batch {
+        for c in 0..shape.c {
+            let (ct, ci) = (c / block, c % block);
+            for y in 0..shape.h {
+                for x in 0..shape.w {
+                    let tile = (ct * shape.h + y) * shape.w + x;
+                    let src = (tile * batch + n) * block + ci;
+                    let dst = ((n * shape.c + c) * shape.h + y) * shape.w + x;
+                    out[dst] = tiled[src];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pack OIHW conv weights into `[O/bo][I/bi][KH][KW]` tiles of
+/// `[bo][bi]`, zero-padded on both channel dimensions.
+pub fn pack_conv_weights(
+    data: &[i8],
+    o: usize,
+    i: usize,
+    kh: usize,
+    kw: usize,
+    bo: usize,
+    bi: usize,
+) -> Vec<i8> {
+    assert_eq!(data.len(), o * i * kh * kw, "weight size mismatch");
+    let ob = o.div_ceil(bo);
+    let ib = i.div_ceil(bi);
+    let mut out = vec![0i8; ob * ib * kh * kw * bo * bi];
+    for oc in 0..o {
+        let (ot, oi) = (oc / bo, oc % bo);
+        for ic in 0..i {
+            let (it, ii) = (ic / bi, ic % bi);
+            for ky in 0..kh {
+                for kx in 0..kw {
+                    let src = ((oc * i + ic) * kh + ky) * kw + kx;
+                    let tile = ((ot * ib + it) * kh + ky) * kw + kx;
+                    let dst = (tile * bo + oi) * bi + ii;
+                    out[dst] = data[src];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pack depthwise weights `[C][KH][KW]` into `[C/block][KH][KW]` tiles of
+/// `[batch][block]` — each tile row repeats the per-channel tap weights
+/// so the ALU's element-wise MUL sees the right operand in every lane.
+pub fn pack_depthwise_weights(
+    data: &[i8],
+    c: usize,
+    kh: usize,
+    kw: usize,
+    batch: usize,
+    block: usize,
+) -> Vec<i8> {
+    assert_eq!(data.len(), c * kh * kw, "depthwise weight size mismatch");
+    let cb = c.div_ceil(block);
+    let mut out = vec![0i8; cb * kh * kw * batch * block];
+    for ch in 0..c {
+        let (ct, ci) = (ch / block, ch % block);
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let src = (ch * kh + ky) * kw + kx;
+                let tile = (ct * kh + ky) * kw + kx;
+                for n in 0..batch {
+                    out[(tile * batch + n) * block + ci] = data[src];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Conv output spatial size (paper Appendix A, eq. 1).
+pub fn conv_out_dim(in_dim: usize, k: usize, pad: usize, stride: usize) -> usize {
+    (in_dim + 2 * pad - k) / stride + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn activation_roundtrip() {
+        let mut rng = Pcg32::seeded(1);
+        let shape = Shape::new(5, 3, 4); // non-multiple channel count
+        let batch = 2;
+        let data = rng.i8_vec(batch * shape.elems());
+        let tiled = pack_activation(&data, batch, shape, 4);
+        assert_eq!(tiled.len(), 2 * 3 * 4 * 2 * 4);
+        let back = unpack_activation(&tiled, batch, shape, 4);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn activation_channel_padding_zeroed() {
+        let shape = Shape::new(3, 1, 1);
+        let data = vec![1i8, 2, 3];
+        let tiled = pack_activation(&data, 1, shape, 4);
+        assert_eq!(tiled, vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn activation_tile_order_matches_schedule_assumption() {
+        // tile index = (ct*H + y)*W + x; tile content [batch][block]
+        let shape = Shape::new(4, 2, 2);
+        let batch = 1;
+        let block = 4;
+        let data: Vec<i8> = (0..16).map(|v| v as i8).collect();
+        let tiled = pack_activation(&data, batch, shape, block);
+        // tile (y=0,x=1) should contain channels 0..4 at spatial (0,1):
+        // NCHW values 1, 5, 9, 13
+        assert_eq!(&tiled[4..8], &[1, 5, 9, 13]);
+    }
+
+    #[test]
+    fn conv_weights_tile_content() {
+        // o=i=2, bo=bi=2, kh=kw=1: single tile [o][i].
+        let data = vec![1i8, 2, 3, 4]; // w[o][i] = [[1,2],[3,4]]
+        let tiled = pack_conv_weights(&data, 2, 2, 1, 1, 2, 2);
+        assert_eq!(tiled, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn conv_weights_padding() {
+        // o=1, i=1 padded into 2x2 tile.
+        let data = vec![7i8];
+        let tiled = pack_conv_weights(&data, 1, 1, 1, 1, 2, 2);
+        assert_eq!(tiled, vec![7, 0, 0, 0]);
+    }
+
+    #[test]
+    fn depthwise_weights_broadcast_rows() {
+        let data = vec![5i8, -3]; // 2 channels, 1x1 tap
+        let tiled = pack_depthwise_weights(&data, 2, 1, 1, 2, 2);
+        // tile [batch=2][block=2]: both batch rows identical
+        assert_eq!(tiled, vec![5, -3, 5, -3]);
+    }
+
+    #[test]
+    fn out_dims() {
+        assert_eq!(conv_out_dim(56, 3, 1, 1), 56);
+        assert_eq!(conv_out_dim(56, 3, 1, 2), 28);
+        assert_eq!(conv_out_dim(56, 1, 0, 1), 56);
+        assert_eq!(conv_out_dim(7, 7, 0, 1), 1);
+        assert_eq!(conv_out_dim(224, 7, 3, 2), 112);
+        assert_eq!(conv_out_dim(112, 3, 1, 2), 56);
+    }
+}

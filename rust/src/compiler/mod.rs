@@ -1,0 +1,14 @@
+//! The compiler stack (§II-C, §IV-D): graph IR, schedules for every layer
+//! kind, Tiling Parameter Search, virtual-thread double buffering with
+//! redundant-load elimination, and the packet/dependency machinery that
+//! realizes TVM's decoupled access-execute lowering on this ISA.
+
+pub mod builder;
+pub mod conv;
+pub mod cpu_ref;
+pub mod depthwise;
+pub mod eltwise;
+pub mod graph;
+pub mod layout;
+pub mod packet;
+pub mod tps;

@@ -1,0 +1,329 @@
+//! Packets and dependency-token insertion (§II-C).
+//!
+//! The compiler lowers each layer to an ordered list of [`Packet`]s — a
+//! group of instructions destined for one hardware module, annotated with
+//! the scratchpad regions it reads and writes. The paper's TVM stack does
+//! the same thing implicitly ("The compiler manages this fine-grained
+//! parallelism by analyzing subsequent load, compute and store nodes in
+//! the IR to determine the local buffer addresses being used"): token
+//! `push`/`pop` bits are inserted *only* where a true region conflict
+//! exists between modules, which is exactly what makes double buffering
+//! effective — a load into the idle half of a scratchpad carries no
+//! dependency on the compute using the other half, so the two overlap.
+
+use crate::isa::{BufferId, Insn};
+
+/// Which execution module consumes a packet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PMod {
+    Load,
+    Compute,
+    Store,
+}
+
+/// A half-open scratchpad tile range `[lo, hi)` in one buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    pub buffer: BufferId,
+    pub lo: u32,
+    pub hi: u32,
+}
+
+impl Region {
+    pub fn new(buffer: BufferId, lo: u32, hi: u32) -> Region {
+        debug_assert!(lo <= hi);
+        // Acc8 is an alias of the accumulator address space.
+        let buffer = if buffer == BufferId::Acc8 { BufferId::Acc } else { buffer };
+        Region { buffer, lo, hi }
+    }
+
+    pub fn overlaps(&self, other: &Region) -> bool {
+        self.buffer == other.buffer && self.lo < other.hi && other.lo < self.hi
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Packet {
+    pub module: PMod,
+    pub insns: Vec<Insn>,
+    pub reads: Vec<Region>,
+    pub writes: Vec<Region>,
+}
+
+impl Packet {
+    pub fn new(module: PMod, insns: Vec<Insn>) -> Packet {
+        Packet { module, insns, reads: Vec::new(), writes: Vec::new() }
+    }
+
+    pub fn read(mut self, r: Region) -> Packet {
+        self.reads.push(r);
+        self
+    }
+
+    pub fn write(mut self, r: Region) -> Packet {
+        self.writes.push(r);
+        self
+    }
+
+    /// RAW / WAR / WAW conflict with an earlier packet `self` -> `later`.
+    pub fn conflicts_with(&self, later: &Packet) -> bool {
+        // self.writes vs later.(reads|writes)
+        for w in &self.writes {
+            if later.reads.iter().chain(later.writes.iter()).any(|r| r.overlaps(w)) {
+                return true;
+            }
+        }
+        // self.reads vs later.writes (WAR)
+        for r in &self.reads {
+            if later.writes.iter().any(|w| w.overlaps(r)) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// Insert dependency-token bits into the packet stream.
+///
+/// Per adjacent module pair we track established synchronization points
+/// `(producer_idx, consumer_idx)`: because each module executes its
+/// packets in order, a token from producer `p` popped by consumer `c`
+/// orders *every* packet `<= p` on the producer module before every
+/// packet `>= c` on the consumer module. New conflicts already implied by
+/// an existing sync are skipped — this is what keeps the instruction
+/// stream free of the extraneous bits the paper warns about ("Setting
+/// extraneous dependency bits can result in longer cycle counts or even
+/// deadlock").
+pub fn insert_deps(packets: &mut [Packet]) {
+    // syncs[(from, to)] = list of (producer_idx, consumer_idx)
+    let mut syncs: Vec<((PMod, PMod), (usize, usize))> = Vec::new();
+    for i in 0..packets.len() {
+        let my_mod = packets[i].module;
+        for other in [PMod::Load, PMod::Compute, PMod::Store] {
+            if other == my_mod || !adjacent(other, my_mod) {
+                continue;
+            }
+            // Packets on `other` at index <= bound are already ordered
+            // before packet i by some existing sync.
+            let bound = syncs
+                .iter()
+                .filter(|((f, t), (_, c))| *f == other && *t == my_mod && *c <= i)
+                .map(|(_, (p, _))| *p as i64)
+                .max()
+                .unwrap_or(-1);
+            // Find the closest earlier conflicting packet on `other`.
+            let mut j = i as i64 - 1;
+            while j > bound {
+                let jj = j as usize;
+                if packets[jj].module == other && packets[jj].conflicts_with(&packets[i]) {
+                    set_push(&mut packets[jj], other, my_mod);
+                    set_pop(&mut packets[i], other, my_mod);
+                    syncs.push(((other, my_mod), (jj, i)));
+                    break;
+                }
+                j -= 1;
+            }
+        }
+    }
+}
+
+/// Modules wired by a dependency queue (load<->compute, compute<->store).
+fn adjacent(a: PMod, b: PMod) -> bool {
+    matches!(
+        (a, b),
+        (PMod::Load, PMod::Compute)
+            | (PMod::Compute, PMod::Load)
+            | (PMod::Compute, PMod::Store)
+            | (PMod::Store, PMod::Compute)
+    )
+}
+
+/// Set the push bit on the *last* instruction of the producer packet for
+/// the queue from `from` to `to`.
+fn set_push(packet: &mut Packet, from: PMod, to: PMod) {
+    let insn = packet.insns.last_mut().expect("empty packet");
+    let deps = insn.deps_mut();
+    match (from, to) {
+        // prev/next are relative to the *executing* (from) module.
+        (PMod::Load, PMod::Compute) => deps.push_next = true,
+        (PMod::Compute, PMod::Load) => deps.push_prev = true,
+        (PMod::Compute, PMod::Store) => deps.push_next = true,
+        (PMod::Store, PMod::Compute) => deps.push_prev = true,
+        _ => unreachable!(),
+    }
+}
+
+/// Set the pop bit on the *first* instruction of the consumer packet.
+fn set_pop(packet: &mut Packet, from: PMod, to: PMod) {
+    let insn = packet.insns.first_mut().expect("empty packet");
+    let deps = insn.deps_mut();
+    match (from, to) {
+        (PMod::Load, PMod::Compute) => deps.pop_prev = true,
+        (PMod::Compute, PMod::Load) => deps.pop_next = true,
+        (PMod::Compute, PMod::Store) => deps.pop_prev = true,
+        (PMod::Store, PMod::Compute) => deps.pop_next = true,
+        _ => unreachable!(),
+    }
+}
+
+/// Flatten packets into the final instruction stream (fetch order =
+/// program order).
+pub fn flatten(packets: Vec<Packet>) -> Vec<Insn> {
+    packets.into_iter().flat_map(|p| p.insns).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{DepFlags, GemmInsn, MemInsn, Opcode};
+
+    fn load_insn(buffer: BufferId) -> Insn {
+        Insn::Mem(MemInsn {
+            opcode: Opcode::Load,
+            deps: DepFlags::NONE,
+            buffer,
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 1,
+            x_size: 1,
+            x_stride: 1,
+            y_pad0: 0,
+            y_pad1: 0,
+            x_pad0: 0,
+            x_pad1: 0,
+            pad_value: 0,
+        })
+    }
+
+    fn gemm_insn() -> Insn {
+        Insn::Gemm(GemmInsn {
+            deps: DepFlags::NONE,
+            reset: false,
+            uop_bgn: 0,
+            uop_end: 1,
+            lp_out: 1,
+            lp_in: 1,
+            acc_f0: 0,
+            acc_f1: 0,
+            inp_f0: 0,
+            inp_f1: 0,
+            wgt_f0: 0,
+            wgt_f1: 0,
+        })
+    }
+
+    fn store_insn() -> Insn {
+        Insn::Mem(MemInsn {
+            opcode: Opcode::Store,
+            deps: DepFlags::NONE,
+            buffer: BufferId::Out,
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 1,
+            x_size: 1,
+            x_stride: 1,
+            y_pad0: 0,
+            y_pad1: 0,
+            x_pad0: 0,
+            x_pad1: 0,
+            pad_value: 0,
+        })
+    }
+
+    #[test]
+    fn raw_dependency_gets_tokens() {
+        let mut packets = vec![
+            Packet::new(PMod::Load, vec![load_insn(BufferId::Inp)])
+                .write(Region::new(BufferId::Inp, 0, 4)),
+            Packet::new(PMod::Compute, vec![gemm_insn()])
+                .read(Region::new(BufferId::Inp, 0, 4))
+                .write(Region::new(BufferId::Acc, 0, 1)),
+        ];
+        insert_deps(&mut packets);
+        assert!(packets[0].insns[0].deps().push_next);
+        assert!(packets[1].insns[0].deps().pop_prev);
+    }
+
+    #[test]
+    fn disjoint_regions_need_no_tokens() {
+        // Double buffering: the load into the other half is independent.
+        let mut packets = vec![
+            Packet::new(PMod::Compute, vec![gemm_insn()])
+                .read(Region::new(BufferId::Inp, 0, 4)),
+            Packet::new(PMod::Load, vec![load_insn(BufferId::Inp)])
+                .write(Region::new(BufferId::Inp, 4, 8)),
+        ];
+        insert_deps(&mut packets);
+        assert_eq!(packets[0].insns[0].deps(), DepFlags::NONE);
+        assert_eq!(packets[1].insns[0].deps(), DepFlags::NONE);
+    }
+
+    #[test]
+    fn war_dependency_blocks_overwrite() {
+        // Compute reads half A; a later load overwrites half A -> WAR.
+        let mut packets = vec![
+            Packet::new(PMod::Compute, vec![gemm_insn()])
+                .read(Region::new(BufferId::Inp, 0, 4)),
+            Packet::new(PMod::Load, vec![load_insn(BufferId::Inp)])
+                .write(Region::new(BufferId::Inp, 0, 4)),
+        ];
+        insert_deps(&mut packets);
+        assert!(packets[0].insns[0].deps().push_prev);
+        assert!(packets[1].insns[0].deps().pop_next);
+    }
+
+    #[test]
+    fn transitive_sync_not_duplicated() {
+        // L0 -> C1 (token). C2 also reads L0's region, but same-module
+        // ordering C1 < C2 already covers it: no second token.
+        let mut packets = vec![
+            Packet::new(PMod::Load, vec![load_insn(BufferId::Inp)])
+                .write(Region::new(BufferId::Inp, 0, 4)),
+            Packet::new(PMod::Compute, vec![gemm_insn()])
+                .read(Region::new(BufferId::Inp, 0, 4)),
+            Packet::new(PMod::Compute, vec![gemm_insn()])
+                .read(Region::new(BufferId::Inp, 0, 4)),
+        ];
+        insert_deps(&mut packets);
+        assert!(packets[0].insns[0].deps().push_next);
+        assert!(packets[1].insns[0].deps().pop_prev);
+        assert!(!packets[2].insns[0].deps().pop_prev, "redundant token");
+    }
+
+    #[test]
+    fn store_chain_tokens() {
+        let mut packets = vec![
+            Packet::new(PMod::Compute, vec![gemm_insn()])
+                .write(Region::new(BufferId::Out, 0, 4)),
+            Packet::new(PMod::Store, vec![store_insn()])
+                .read(Region::new(BufferId::Out, 0, 4)),
+            // Next compute overwrites the same OUT half -> must wait for
+            // the store (WAR through st->cmp queue).
+            Packet::new(PMod::Compute, vec![gemm_insn()])
+                .write(Region::new(BufferId::Out, 0, 4)),
+        ];
+        insert_deps(&mut packets);
+        assert!(packets[0].insns[0].deps().push_next);
+        assert!(packets[1].insns[0].deps().pop_prev);
+        assert!(packets[1].insns[0].deps().push_prev);
+        assert!(packets[2].insns[0].deps().pop_next);
+    }
+
+    #[test]
+    fn acc8_aliases_acc() {
+        let r1 = Region::new(BufferId::Acc8, 0, 4);
+        let r2 = Region::new(BufferId::Acc, 2, 6);
+        assert!(r1.overlaps(&r2));
+    }
+
+    #[test]
+    fn flatten_preserves_order() {
+        let packets = vec![
+            Packet::new(PMod::Load, vec![load_insn(BufferId::Inp), load_insn(BufferId::Wgt)]),
+            Packet::new(PMod::Compute, vec![gemm_insn()]),
+        ];
+        let insns = flatten(packets);
+        assert_eq!(insns.len(), 3);
+        assert_eq!(insns[2].opcode(), crate::isa::Opcode::Gemm);
+    }
+}

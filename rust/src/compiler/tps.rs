@@ -1,0 +1,376 @@
+//! Tiling Parameter Search (TPS) — §IV-D1 and Appendix A.
+//!
+//! For a convolution and a VTA configuration, TPS picks the loop tiling
+//! that minimizes DRAM byte transfer subject to scratchpad-capacity
+//! constraints, replacing AutoTVM/Ansor's measured cost models with a
+//! closed-form analytical one ("we express the bytes transferred from
+//! DRAM to scratchpads as an analytical cost function of the tiling
+//! parameters"). The space is enumerated exhaustively over divisor
+//! tilings, exactly as the paper's "TPS algorithm exhaustively enumerates
+//! all the configurations in the tiling parameter space".
+//!
+//! The *fallback* schedule — TVM-VTA's default, which "guarantees
+//! compilability ... by ensuring minimal use of local scratchpad at the
+//! expense of high DRAM byte transfer" — is the Fig 10 baseline.
+
+use super::layout::conv_out_dim;
+use crate::config::VtaConfig;
+
+/// A convolution workload (NCHW, pre-tiling).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub c_in: usize,
+    pub c_out: usize,
+    pub h: usize,
+    pub w: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub sh: usize,
+    pub sw: usize,
+    pub ph: usize,
+    pub pw: usize,
+}
+
+impl ConvSpec {
+    pub fn oh(&self) -> usize {
+        conv_out_dim(self.h, self.kh, self.ph, self.sh)
+    }
+
+    pub fn ow(&self) -> usize {
+        conv_out_dim(self.w, self.kw, self.pw, self.sw)
+    }
+
+    /// Input-channel tiles under `block_in`.
+    pub fn di(&self, cfg: &VtaConfig) -> usize {
+        self.c_in.div_ceil(cfg.block_in)
+    }
+
+    /// Output-channel tiles under `block_out`.
+    pub fn dout(&self, cfg: &VtaConfig) -> usize {
+        self.c_out.div_ceil(cfg.block_out)
+    }
+
+    /// Total MACs (on padded channel counts, as the hardware executes).
+    pub fn macs(&self, cfg: &VtaConfig) -> u64 {
+        (cfg.batch
+            * self.di(cfg)
+            * cfg.block_in
+            * self.dout(cfg)
+            * cfg.block_out
+            * self.oh()
+            * self.ow()
+            * self.kh
+            * self.kw) as u64
+    }
+}
+
+/// A tiling point: the number of outer chunks along each loop dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tiling {
+    /// Output-height chunks (paper's `th_o`).
+    pub th_o: usize,
+    /// Output-width chunks (`tw_o`).
+    pub tw_o: usize,
+    /// Output-channel-tile chunks (`tco_o`).
+    pub tco_o: usize,
+    /// Input-channel-tile chunks (`tci_o`).
+    pub tci_o: usize,
+    /// Improved double buffering (§IV-D2): reuse the input block across
+    /// output-channel chunks instead of reloading it per chunk.
+    pub reuse_inp: bool,
+}
+
+/// Derived per-chunk geometry (maximum chunk sizes; edge chunks may be
+/// smaller).
+#[derive(Debug, Clone, Copy)]
+pub struct TileGeom {
+    pub oh_i: usize,
+    pub ow_i: usize,
+    pub co_i: usize,
+    pub ci_i: usize,
+    pub ih_i: usize,
+    pub iw_i: usize,
+    pub inp_block_tiles: usize,
+    pub wgt_block_tiles: usize,
+    pub acc_block_tiles: usize,
+    pub gemm_uops: usize,
+}
+
+impl Tiling {
+    pub fn geom(&self, spec: &ConvSpec, cfg: &VtaConfig) -> TileGeom {
+        let oh_i = spec.oh().div_ceil(self.th_o);
+        let ow_i = spec.ow().div_ceil(self.tw_o);
+        let co_i = spec.dout(cfg).div_ceil(self.tco_o);
+        let ci_i = spec.di(cfg).div_ceil(self.tci_o);
+        let ih_i = (oh_i - 1) * spec.sh + spec.kh;
+        let iw_i = (ow_i - 1) * spec.sw + spec.kw;
+        TileGeom {
+            oh_i,
+            ow_i,
+            co_i,
+            ci_i,
+            ih_i,
+            iw_i,
+            inp_block_tiles: ci_i * ih_i * iw_i,
+            wgt_block_tiles: co_i * ci_i * spec.kh * spec.kw,
+            acc_block_tiles: co_i * oh_i * ow_i,
+            gemm_uops: oh_i * ow_i * ci_i * spec.kw,
+        }
+    }
+
+    /// Scratchpad feasibility (Appendix A's `u_* >= 0` constraints), with
+    /// double-buffered (2-slot) blocks whenever more than one block is
+    /// loaded, plus uop-buffer and ISA field-width constraints.
+    pub fn feasible(&self, spec: &ConvSpec, cfg: &VtaConfig) -> bool {
+        let g = self.geom(spec, cfg);
+        let layout = cfg.isa_layout();
+        let n_spatial = self.th_o * self.tw_o;
+        let inp_slots = if n_spatial * self.tci_o * (if self.reuse_inp { 1 } else { self.tco_o }) > 1 { 2 } else { 1 };
+        let wgt_slots = if n_spatial * self.tco_o * self.tci_o > 1 { 2 } else { 1 };
+        let acc_slots = if n_spatial * self.tco_o > 1 { 2 } else { 1 };
+        if inp_slots * g.inp_block_tiles > cfg.inp_depth {
+            return false;
+        }
+        if wgt_slots * g.wgt_block_tiles > cfg.wgt_depth {
+            return false;
+        }
+        if acc_slots * g.acc_block_tiles > cfg.acc_depth {
+            return false;
+        }
+        // Uop stream: up to 2 slot-variants of the GEMM sequence plus the
+        // per-row ALU/reset sequences (2 variants of ow_i each), plus
+        // ragged-edge variants; ×2 safety margin on the dominant term.
+        let uop_budget = 2 * g.gemm_uops + 4 * g.ow_i;
+        if 2 * uop_budget > cfg.uop_depth {
+            return false;
+        }
+        // Loop extents and index factors must fit their ISA fields.
+        let max_loop = (1usize << layout.loop_bits) - 1;
+        if g.co_i > max_loop || spec.kh > max_loop || g.oh_i > max_loop {
+            return false;
+        }
+        let max_acc = 1usize << layout.acc_idx_bits;
+        let max_inp = 1usize << layout.inp_idx_bits;
+        let max_wgt = 1usize << layout.wgt_idx_bits;
+        if g.oh_i * g.ow_i >= max_acc || g.ih_i * g.iw_i >= max_inp {
+            return false;
+        }
+        if g.ci_i * spec.kh * spec.kw >= max_wgt {
+            return false;
+        }
+        true
+    }
+
+    /// Analytical DRAM byte cost (Appendix A eq. 2, specialized to this
+    /// schedule; closed-form over ragged chunks).
+    pub fn dram_bytes(&self, spec: &ConvSpec, cfg: &VtaConfig) -> u64 {
+        let di = spec.di(cfg);
+        let dout = spec.dout(cfg);
+        let (oh, ow) = (spec.oh(), spec.ow());
+        // Σ over y-chunks of input rows loaded (halo overlap included):
+        // Σ ((oh_chunk - 1)*sh + kh) = sh*(OH - th_o) + th_o*kh.
+        let sum_ih = (spec.sh * (oh - self.th_o) + self.th_o * spec.kh) as u64;
+        let sum_iw = (spec.sw * (ow - self.tw_o) + self.tw_o * spec.kw) as u64;
+        let inp_factor = if self.reuse_inp { 1 } else { self.tco_o } as u64;
+        let l_inp = di as u64 * sum_ih * sum_iw * inp_factor * cfg.inp_tile_bytes() as u64;
+        // Full weight set reloaded once per spatial chunk.
+        let l_wgt = (self.th_o * self.tw_o) as u64
+            * (dout * di * spec.kh * spec.kw) as u64
+            * cfg.wgt_tile_bytes() as u64;
+        let l_out = (dout * oh * ow) as u64 * cfg.out_tile_bytes() as u64;
+        // Appendix A's cost counts the data scratchpads only (l_inp,
+        // l_wgt, l_acc); uop traffic is a feasibility concern, not cost.
+        l_inp + l_wgt + l_out
+    }
+}
+
+/// The divisors of `n` (ascending) — the candidate chunk counts.
+pub fn divisors(n: usize) -> Vec<usize> {
+    (1..=n).filter(|d| n % d == 0).collect()
+}
+
+/// The TVM-VTA fallback schedule: minimal scratchpad use (a single
+/// output position and a single channel tile each way per inner block),
+/// maximal DRAM traffic — weights are re-fetched for every output
+/// position and inputs for every output-channel chunk, which is what
+/// produces the orders-of-magnitude gap of Fig 10.
+pub fn fallback(spec: &ConvSpec, cfg: &VtaConfig) -> Tiling {
+    Tiling {
+        th_o: spec.oh(),
+        tw_o: spec.ow(),
+        tco_o: spec.dout(cfg),
+        tci_o: spec.di(cfg),
+        reuse_inp: false,
+    }
+}
+
+/// Exhaustive TPS search: minimize DRAM bytes over divisor tilings.
+/// Cost ties break toward virtual-thread-capable tilings (tco_o >= 2,
+/// which enables the double-buffered co-chunk pairs the paper's schedule
+/// template always uses), then toward fewer chunks.
+pub fn search(spec: &ConvSpec, cfg: &VtaConfig, reuse_inp: bool) -> Tiling {
+    let mut best: Option<((u64, usize, usize), Tiling)> = None;
+    for &th_o in &divisors(spec.oh()) {
+        for &tw_o in &divisors(spec.ow()) {
+            for &tco_o in &divisors(spec.dout(cfg)) {
+                for &tci_o in &divisors(spec.di(cfg)) {
+                    let t = Tiling { th_o, tw_o, tco_o, tci_o, reuse_inp };
+                    if !t.feasible(spec, cfg) {
+                        continue;
+                    }
+                    let cost = t.dram_bytes(spec, cfg);
+                    let no_vthread = usize::from(tco_o < 2);
+                    let chunks = th_o * tw_o * tco_o * tci_o;
+                    let rank = (cost, no_vthread, chunks);
+                    if best.as_ref().map(|(r, _)| rank < *r).unwrap_or(true) {
+                        best = Some((rank, t));
+                    }
+                }
+            }
+        }
+    }
+    match best {
+        Some((_, t)) => t,
+        None => {
+            let fb = fallback(spec, cfg);
+            assert!(
+                fb.feasible(spec, cfg),
+                "no feasible tiling for {spec:?} on {}",
+                cfg.name
+            );
+            fb
+        }
+    }
+}
+
+/// Chunk bounds helper: start offset and size of chunk `idx` when `dim`
+/// is split into `chunks` near-equal parts (ceil-sized leading chunks).
+pub fn chunk_bounds(dim: usize, chunks: usize, idx: usize) -> (usize, usize) {
+    let size = dim.div_ceil(chunks);
+    let start = idx * size;
+    let len = size.min(dim.saturating_sub(start));
+    (start, len)
+}
+
+/// ResNet-18 convolution layers C2–C11 as enumerated in Fig 10 (the
+/// distinct conv shapes from conv2_x through conv5_x plus downsamples).
+pub fn resnet18_convs() -> Vec<(String, ConvSpec)> {
+    let conv = |c_in, c_out, hw, k, s, p| ConvSpec {
+        c_in,
+        c_out,
+        h: hw,
+        w: hw,
+        kh: k,
+        kw: k,
+        sh: s,
+        sw: s,
+        ph: p,
+        pw: p,
+    };
+    vec![
+        ("C2".to_string(), conv(64, 64, 56, 3, 1, 1)),
+        ("C3".to_string(), conv(64, 128, 56, 3, 2, 1)),
+        ("C4".to_string(), conv(64, 128, 56, 1, 2, 0)),
+        ("C5".to_string(), conv(128, 128, 28, 3, 1, 1)),
+        ("C6".to_string(), conv(128, 256, 28, 3, 2, 1)),
+        ("C7".to_string(), conv(128, 256, 28, 1, 2, 0)),
+        ("C8".to_string(), conv(256, 256, 14, 3, 1, 1)),
+        ("C9".to_string(), conv(256, 512, 14, 3, 2, 1)),
+        ("C10".to_string(), conv(256, 512, 14, 1, 2, 0)),
+        ("C11".to_string(), conv(512, 512, 7, 3, 1, 1)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn c2() -> ConvSpec {
+        resnet18_convs()[0].1
+    }
+
+    #[test]
+    fn out_dims_and_tiles() {
+        let cfg = presets::default_config();
+        let spec = c2();
+        assert_eq!(spec.oh(), 56);
+        assert_eq!(spec.di(&cfg), 4);
+        assert_eq!(spec.dout(&cfg), 4);
+        assert_eq!(spec.macs(&cfg), 64 * 64 * 56 * 56 * 9);
+    }
+
+    #[test]
+    fn fallback_always_feasible_on_presets() {
+        for cfg in presets::all() {
+            for (name, spec) in resnet18_convs() {
+                let fb = fallback(&spec, &cfg);
+                assert!(fb.feasible(&spec, &cfg), "{name} infeasible on {}", cfg.name);
+            }
+        }
+    }
+
+    #[test]
+    fn tps_beats_fallback_substantially() {
+        // Fig 10: 20x-400x byte reduction on BLOCK=32.
+        let cfg = presets::scaled_config(1, 32, 32, 2, 32);
+        for (name, spec) in resnet18_convs() {
+            let fb = fallback(&spec, &cfg).dram_bytes(&spec, &cfg);
+            let best = search(&spec, &cfg, true);
+            let opt = best.dram_bytes(&spec, &cfg);
+            let ratio = fb as f64 / opt as f64;
+            assert!(ratio > 5.0, "{name}: ratio only {ratio:.1} (fb={fb} opt={opt})");
+        }
+    }
+
+    #[test]
+    fn search_result_feasible() {
+        let cfg = presets::default_config();
+        let t = search(&c2(), &cfg, true);
+        assert!(t.feasible(&c2(), &cfg));
+    }
+
+    #[test]
+    fn reuse_reduces_input_bytes() {
+        let cfg = presets::default_config();
+        let spec = c2();
+        let t_no = Tiling { th_o: 4, tw_o: 1, tco_o: 4, tci_o: 1, reuse_inp: false };
+        let t_yes = Tiling { reuse_inp: true, ..t_no };
+        assert!(t_yes.dram_bytes(&spec, &cfg) < t_no.dram_bytes(&spec, &cfg));
+    }
+
+    #[test]
+    fn chunk_bounds_cover_dim() {
+        for (dim, chunks) in [(56, 4), (7, 3), (10, 4), (1, 1)] {
+            let mut total = 0;
+            for i in 0..chunks {
+                let (start, len) = chunk_bounds(dim, chunks, i);
+                assert_eq!(start, total);
+                total += len;
+            }
+            assert_eq!(total, dim);
+        }
+    }
+
+    #[test]
+    fn divisors_correct() {
+        assert_eq!(divisors(56), vec![1, 2, 4, 7, 8, 14, 28, 56]);
+        assert_eq!(divisors(1), vec![1]);
+    }
+
+    #[test]
+    fn closed_form_halo_sum_matches_enumeration() {
+        // Verify Σ_chunks ((oh_c-1)*sh + kh) == sh*(OH-th_o) + th_o*kh
+        // for exact-divisor chunkings.
+        let spec = ConvSpec { c_in: 64, c_out: 64, h: 56, w: 56, kh: 3, kw: 3, sh: 2, sw: 2, ph: 1, pw: 1 };
+        let oh = spec.oh();
+        for &th_o in &divisors(oh) {
+            let mut total = 0usize;
+            for i in 0..th_o {
+                let (_, len) = chunk_bounds(oh, th_o, i);
+                total += (len - 1) * spec.sh + spec.kh;
+            }
+            assert_eq!(total, spec.sh * (oh - th_o) + th_o * spec.kh);
+        }
+    }
+}

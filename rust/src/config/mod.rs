@@ -1,0 +1,539 @@
+//! VTA hardware configuration (§II, §IV-F).
+//!
+//! A single JSON file drives the compiler, runtime, and both simulator
+//! targets — exactly the paper's "JSON configuration file is the only
+//! compile-time construct consumed by the compiler, runtime, as well as
+//! all hardware targets". This module owns:
+//!
+//! * the fundamental parameters (BATCH / BLOCK_IN / BLOCK_OUT, scratchpad
+//!   depths, AXI memory-interface width, pipelining flags),
+//! * the *derived* ISA field widths ([`IsaLayout`]), including the paper's
+//!   shrink-to-fit policy for keeping instructions at 128 bits
+//!   ("After exhausting available spare bits, we resorted to shrinking
+//!   other field widths"),
+//! * compile-time-style validation ([`VtaConfig::validate`]).
+
+pub mod presets;
+
+use crate::util::bitfield::addr_bits;
+use crate::util::json::Json;
+use std::fmt;
+
+/// Instruction width is a fixed architectural constant (§II-B: "we
+/// retained the 128-bit width as a constant").
+pub const INSN_BITS: u32 = 128;
+pub const INSN_BYTES: usize = 16;
+
+/// Dependency-flag bit count (pop_prev, pop_next, push_prev, push_next).
+pub const DEP_BITS: u32 = 4;
+pub const OPCODE_BITS: u32 = 3;
+
+/// Data type widths — VTA is an int8 inference machine with int32
+/// accumulation; these are architectural, not configurable.
+pub const INP_DTYPE_BITS: usize = 8;
+pub const WGT_DTYPE_BITS: usize = 8;
+pub const ACC_DTYPE_BITS: usize = 32;
+pub const OUT_DTYPE_BITS: usize = 8;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct VtaConfig {
+    /// Configuration name (used in reports and artifact paths).
+    pub name: String,
+    /// GEMM tile batch dimension (rows of the input tile).
+    pub batch: usize,
+    /// GEMM tile reduction dimension (input channels per tile).
+    pub block_in: usize,
+    /// GEMM tile output dimension (output channels per tile).
+    pub block_out: usize,
+    /// Micro-op buffer depth (number of uops).
+    pub uop_depth: usize,
+    /// Input scratchpad depth in tiles of `batch x block_in` int8.
+    pub inp_depth: usize,
+    /// Weight scratchpad depth in tiles of `block_out x block_in` int8.
+    pub wgt_depth: usize,
+    /// Accumulator scratchpad depth in tiles of `batch x block_out` int32.
+    /// The 8-bit OUT scratchpad mirrors this depth (store path).
+    pub acc_depth: usize,
+    /// AXI memory interface width in bytes/cycle (8..=64 per the paper).
+    pub axi_bytes: usize,
+    /// DRAM request latency in cycles (first data beat after request).
+    pub dram_latency: u64,
+    /// Maximum outstanding VME requests (Fig 6 tag buffer size).
+    pub vme_inflight: usize,
+    /// Fully pipelined GEMM core (II=1) vs original II=4 (§IV-A1).
+    pub gemm_pipelined: bool,
+    /// Fully pipelined ALU (II=1 imm / II=2 two-operand) vs original
+    /// II=4/5 (§IV-A2).
+    pub alu_pipelined: bool,
+    /// Command-queue depth between fetch and the execution modules.
+    pub cmd_queue_depth: usize,
+    /// Dependency-token queue depth.
+    pub dep_queue_depth: usize,
+}
+
+/// Field layout for the three instruction formats plus uops, derived from
+/// the configuration. All widths in bits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IsaLayout {
+    // -- scratchpad index widths --
+    pub uop_idx_bits: u32,
+    pub inp_idx_bits: u32,
+    pub wgt_idx_bits: u32,
+    pub acc_idx_bits: u32,
+    /// sram_base field width in memory instructions (max over buffers).
+    pub sram_bits: u32,
+    /// dram_base field width (tile-granular address).
+    pub dram_bits: u32,
+    /// y_size/x_size/x_stride width in memory instructions.
+    pub mem_size_bits: u32,
+    /// Padding field widths (y_pad0/1, x_pad0/1).
+    pub pad_bits: u32,
+    /// Pad fill value width (new instruction feature: "load with a choice
+    /// of pad values to support max pooling").
+    pub pad_val_bits: u32,
+    /// Loop-extent field width in GEMM/ALU instructions.
+    pub loop_bits: u32,
+    /// ALU immediate width.
+    pub imm_bits: u32,
+    /// ALU opcode field width (extended: MUL/CLIP/MOV are new).
+    pub alu_op_bits: u32,
+    /// Total uop width in bits (multiple of 8; paper: "we also extended
+    /// the size of uops since not enough spare bits were available").
+    pub uop_bits: u32,
+}
+
+impl IsaLayout {
+    pub fn uop_bytes(&self) -> usize {
+        (self.uop_bits / 8) as usize
+    }
+
+    /// Width of the `uop_end` field: one bit wider than `uop_bgn` since
+    /// the exclusive end bound can equal the buffer depth (upstream VTA
+    /// does the same: 13-bit bgn, 14-bit end).
+    pub fn uop_end_bits(&self) -> u32 {
+        self.uop_idx_bits + 1
+    }
+
+    /// Bits used by a GEMM instruction under this layout.
+    pub fn gemm_bits(&self) -> u32 {
+        OPCODE_BITS
+            + DEP_BITS
+            + 1 // reset flag
+            + self.uop_idx_bits
+            + self.uop_end_bits()
+            + 2 * self.loop_bits
+            + 2 * self.acc_idx_bits
+            + 2 * self.inp_idx_bits
+            + 2 * self.wgt_idx_bits
+    }
+
+    /// Bits used by an ALU instruction under this layout.
+    pub fn alu_bits(&self) -> u32 {
+        OPCODE_BITS
+            + DEP_BITS
+            + 1 // reset flag
+            + self.uop_idx_bits
+            + self.uop_end_bits()
+            + 2 * self.loop_bits
+            + 4 * self.acc_idx_bits // dst/src factor out/in
+            + self.alu_op_bits
+            + 1 // use_imm
+            + self.imm_bits
+    }
+
+    /// Bits used by a LOAD/STORE instruction under this layout.
+    pub fn mem_bits(&self) -> u32 {
+        OPCODE_BITS
+            + DEP_BITS
+            + 3 // buffer id
+            + self.sram_bits
+            + self.dram_bits
+            + 3 * self.mem_size_bits // y_size, x_size, x_stride
+            + 4 * self.pad_bits
+            + self.pad_val_bits
+    }
+
+    /// Bits needed by a GEMM uop (acc, inp, wgt indices).
+    pub fn gemm_uop_bits(&self) -> u32 {
+        self.acc_idx_bits + self.inp_idx_bits + self.wgt_idx_bits
+    }
+
+    /// Bits needed by an ALU uop (dst, src indices — both accumulator).
+    pub fn alu_uop_bits(&self) -> u32 {
+        2 * self.acc_idx_bits
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConfigError {
+    NotPow2 { field: &'static str, value: usize },
+    OutOfRange { field: &'static str, value: usize, lo: usize, hi: usize },
+    InsnOverflow { insn: &'static str, bits: u32 },
+    Json(String),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::NotPow2 { field, value } => {
+                write!(f, "config field '{field}' must be a power of two, got {value}")
+            }
+            ConfigError::OutOfRange { field, value, lo, hi } => {
+                write!(f, "config field '{field}' = {value} outside [{lo}, {hi}]")
+            }
+            ConfigError::InsnOverflow { insn, bits } => write!(
+                f,
+                "{insn} instruction needs {bits} bits > {INSN_BITS} even after \
+                 field shrinking — reduce scratchpad depths"
+            ),
+            ConfigError::Json(msg) => write!(f, "config json: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl VtaConfig {
+    // ---- derived tile geometry ----
+
+    /// Bytes per input-scratchpad tile.
+    pub fn inp_tile_bytes(&self) -> usize {
+        self.batch * self.block_in * INP_DTYPE_BITS / 8
+    }
+
+    /// Bytes per weight-scratchpad tile.
+    pub fn wgt_tile_bytes(&self) -> usize {
+        self.block_out * self.block_in * WGT_DTYPE_BITS / 8
+    }
+
+    /// Bytes per accumulator tile (int32).
+    pub fn acc_tile_bytes(&self) -> usize {
+        self.batch * self.block_out * ACC_DTYPE_BITS / 8
+    }
+
+    /// Bytes per output tile (int8).
+    pub fn out_tile_bytes(&self) -> usize {
+        self.batch * self.block_out * OUT_DTYPE_BITS / 8
+    }
+
+    /// Elements in one input tile.
+    pub fn inp_tile_elems(&self) -> usize {
+        self.batch * self.block_in
+    }
+
+    pub fn wgt_tile_elems(&self) -> usize {
+        self.block_out * self.block_in
+    }
+
+    pub fn acc_tile_elems(&self) -> usize {
+        self.batch * self.block_out
+    }
+
+    /// MACs performed by one GEMM uop execution (one tile matmul).
+    pub fn macs_per_gemm_op(&self) -> usize {
+        self.batch * self.block_in * self.block_out
+    }
+
+    /// Total scratchpad capacity in bytes (area-model input).
+    pub fn scratchpad_bytes(&self) -> usize {
+        self.uop_depth * self.isa_layout().uop_bytes()
+            + self.inp_depth * self.inp_tile_bytes()
+            + self.wgt_depth * self.wgt_tile_bytes()
+            + self.acc_depth * self.acc_tile_bytes()
+            + self.acc_depth * self.out_tile_bytes() // OUT mirrors ACC depth
+    }
+
+    // ---- ISA layout derivation ----
+
+    /// Derive field widths from the configuration, applying the paper's
+    /// shrink-to-fit policy to stay within the 128-bit instruction.
+    /// The unshrunk defaults mirror upstream VTA (loop 14, sizes 14/16).
+    pub fn isa_layout(&self) -> IsaLayout {
+        let uop_idx_bits = addr_bits(self.uop_depth as u64);
+        let inp_idx_bits = addr_bits(self.inp_depth as u64);
+        let wgt_idx_bits = addr_bits(self.wgt_depth as u64);
+        let acc_idx_bits = addr_bits(self.acc_depth as u64);
+        let sram_bits = [uop_idx_bits, inp_idx_bits, wgt_idx_bits, acc_idx_bits]
+            .into_iter()
+            .max()
+            .unwrap();
+        let mut layout = IsaLayout {
+            uop_idx_bits,
+            inp_idx_bits,
+            wgt_idx_bits,
+            acc_idx_bits,
+            sram_bits,
+            dram_bits: 32,
+            mem_size_bits: 14,
+            pad_bits: 4,
+            pad_val_bits: 8,
+            loop_bits: 14,
+            imm_bits: 16,
+            alu_op_bits: 4,
+            uop_bits: 0,
+        };
+        // Shrink loop extents first (few schedules need >2^10 iterations
+        // in one instruction), then immediates, to fit compute insns.
+        while layout.gemm_bits() > INSN_BITS || layout.alu_bits() > INSN_BITS {
+            if layout.loop_bits > 10 {
+                layout.loop_bits -= 1;
+            } else if layout.imm_bits > 12 {
+                layout.imm_bits -= 1;
+            } else {
+                break; // validate() will report the overflow
+            }
+        }
+        // Shrink memory-size fields for the (rare) huge-scratchpad case.
+        while layout.mem_bits() > INSN_BITS && layout.mem_size_bits > 10 {
+            layout.mem_size_bits -= 1;
+        }
+        // Uop width: 32 bits as upstream when the indices fit, else the
+        // paper's extended 64-bit uops ("we also extended the size of
+        // uops since not enough spare bits were available"). Power-of-two
+        // widths keep DRAM tile alignment trivial.
+        let needed = layout.gemm_uop_bits().max(layout.alu_uop_bits());
+        layout.uop_bits = if needed <= 32 { 32 } else { 64 };
+        layout
+    }
+
+    /// Validate the full configuration: power-of-two shape/depth fields,
+    /// ranges from the paper (AXI 8..=64 bytes), and instruction-width
+    /// fit. Mirrors the paper's "compile-time checks — such as ensuring
+    /// instruction width constraints are not violated".
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let pow2_fields: [(&'static str, usize); 7] = [
+            ("batch", self.batch),
+            ("block_in", self.block_in),
+            ("block_out", self.block_out),
+            ("uop_depth", self.uop_depth),
+            ("inp_depth", self.inp_depth),
+            ("wgt_depth", self.wgt_depth),
+            ("acc_depth", self.acc_depth),
+        ];
+        for (field, value) in pow2_fields {
+            if !value.is_power_of_two() {
+                return Err(ConfigError::NotPow2 { field, value });
+            }
+        }
+        let ranges: [(&'static str, usize, usize, usize); 8] = [
+            ("batch", self.batch, 1, 16),
+            ("block_in", self.block_in, 4, 128),
+            ("block_out", self.block_out, 4, 128),
+            ("axi_bytes", self.axi_bytes, 8, 64),
+            ("vme_inflight", self.vme_inflight, 1, 64),
+            ("cmd_queue_depth", self.cmd_queue_depth, 2, 4096),
+            ("dep_queue_depth", self.dep_queue_depth, 1, 4096),
+            ("uop_depth", self.uop_depth, 64, 1 << 20),
+        ];
+        for (field, value, lo, hi) in ranges {
+            if value < lo || value > hi {
+                return Err(ConfigError::OutOfRange { field, value, lo, hi });
+            }
+        }
+        if !self.axi_bytes.is_power_of_two() {
+            return Err(ConfigError::NotPow2 { field: "axi_bytes", value: self.axi_bytes });
+        }
+        let layout = self.isa_layout();
+        if layout.gemm_bits() > INSN_BITS {
+            return Err(ConfigError::InsnOverflow { insn: "GEMM", bits: layout.gemm_bits() });
+        }
+        if layout.alu_bits() > INSN_BITS {
+            return Err(ConfigError::InsnOverflow { insn: "ALU", bits: layout.alu_bits() });
+        }
+        if layout.mem_bits() > INSN_BITS {
+            return Err(ConfigError::InsnOverflow { insn: "LOAD/STORE", bits: layout.mem_bits() });
+        }
+        Ok(())
+    }
+
+    // ---- JSON (the cross-layer interchange format, §II-B) ----
+
+    pub fn to_json(&self) -> Json {
+        crate::util::json::obj([
+            ("name", Json::Str(self.name.clone())),
+            ("batch", Json::Int(self.batch as i64)),
+            ("block_in", Json::Int(self.block_in as i64)),
+            ("block_out", Json::Int(self.block_out as i64)),
+            ("uop_depth", Json::Int(self.uop_depth as i64)),
+            ("inp_depth", Json::Int(self.inp_depth as i64)),
+            ("wgt_depth", Json::Int(self.wgt_depth as i64)),
+            ("acc_depth", Json::Int(self.acc_depth as i64)),
+            ("axi_bytes", Json::Int(self.axi_bytes as i64)),
+            ("dram_latency", Json::Int(self.dram_latency as i64)),
+            ("vme_inflight", Json::Int(self.vme_inflight as i64)),
+            ("gemm_pipelined", Json::Bool(self.gemm_pipelined)),
+            ("alu_pipelined", Json::Bool(self.alu_pipelined)),
+            ("cmd_queue_depth", Json::Int(self.cmd_queue_depth as i64)),
+            ("dep_queue_depth", Json::Int(self.dep_queue_depth as i64)),
+        ])
+    }
+
+    pub fn from_json(json: &Json) -> Result<VtaConfig, ConfigError> {
+        let field = |name: &str| -> Result<i64, ConfigError> {
+            json.get(name)
+                .and_then(|v| v.as_i64())
+                .ok_or_else(|| ConfigError::Json(format!("missing integer field '{name}'")))
+        };
+        let flag = |name: &str, default: bool| -> bool {
+            json.get(name).and_then(|v| v.as_bool()).unwrap_or(default)
+        };
+        let cfg = VtaConfig {
+            name: json
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unnamed")
+                .to_string(),
+            batch: field("batch")? as usize,
+            block_in: field("block_in")? as usize,
+            block_out: field("block_out")? as usize,
+            uop_depth: field("uop_depth")? as usize,
+            inp_depth: field("inp_depth")? as usize,
+            wgt_depth: field("wgt_depth")? as usize,
+            acc_depth: field("acc_depth")? as usize,
+            axi_bytes: field("axi_bytes")? as usize,
+            dram_latency: json.get("dram_latency").and_then(|v| v.as_i64()).unwrap_or(32)
+                as u64,
+            vme_inflight: json.get("vme_inflight").and_then(|v| v.as_i64()).unwrap_or(8)
+                as usize,
+            gemm_pipelined: flag("gemm_pipelined", true),
+            alu_pipelined: flag("alu_pipelined", true),
+            cmd_queue_depth: json
+                .get("cmd_queue_depth")
+                .and_then(|v| v.as_i64())
+                .unwrap_or(512) as usize,
+            dep_queue_depth: json
+                .get("dep_queue_depth")
+                .and_then(|v| v.as_i64())
+                .unwrap_or(128) as usize,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<VtaConfig, ConfigError> {
+        let json = Json::parse(text).map_err(|e| ConfigError::Json(e.to_string()))?;
+        Self::from_json(&json)
+    }
+
+    pub fn load(path: &str) -> Result<VtaConfig, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError::Json(format!("read {path}: {e}")))?;
+        Self::from_json_str(&text)
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+
+    /// Short human-readable identifier, e.g. `1x16x16-axi8`.
+    pub fn tag(&self) -> String {
+        format!(
+            "{}x{}x{}-axi{}{}",
+            self.batch,
+            self.block_in,
+            self.block_out,
+            self.axi_bytes,
+            if self.gemm_pipelined { "" } else { "-nopipe" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::presets;
+    use super::*;
+
+    #[test]
+    fn default_config_valid_and_fits() {
+        let cfg = presets::default_config();
+        cfg.validate().unwrap();
+        let l = cfg.isa_layout();
+        assert!(l.gemm_bits() <= INSN_BITS, "gemm {}", l.gemm_bits());
+        assert!(l.alu_bits() <= INSN_BITS, "alu {}", l.alu_bits());
+        assert!(l.mem_bits() <= INSN_BITS, "mem {}", l.mem_bits());
+        assert_eq!(l.uop_bits % 8, 0);
+    }
+
+    #[test]
+    fn default_matches_upstream_vta_geometry() {
+        // Upstream VTA default: 1x16x16, 32KB uop / 32KB inp / 256KB wgt /
+        // 128KB acc scratchpads, 64-bit AXI.
+        let cfg = presets::default_config();
+        assert_eq!(cfg.inp_tile_bytes(), 16);
+        assert_eq!(cfg.wgt_tile_bytes(), 256);
+        assert_eq!(cfg.acc_tile_bytes(), 64);
+        assert_eq!(cfg.macs_per_gemm_op(), 256);
+        let l = cfg.isa_layout();
+        // acc 2048 entries -> 11 bits, inp 2048 -> 11, wgt 1024 -> 10:
+        // identical to upstream VTA's 32-bit uop split.
+        assert_eq!((l.acc_idx_bits, l.inp_idx_bits, l.wgt_idx_bits), (11, 11, 10));
+        assert_eq!(l.uop_bits, 32);
+    }
+
+    #[test]
+    fn big_config_shrinks_loop_bits_to_fit() {
+        let cfg = presets::scaled_config(1, 64, 64, 4, 64);
+        cfg.validate().unwrap();
+        let l = cfg.isa_layout();
+        assert!(l.gemm_bits() <= INSN_BITS);
+        assert!(l.loop_bits < 14, "expected shrink, got {}", l.loop_bits);
+    }
+
+    #[test]
+    fn wider_uops_for_large_scratchpads() {
+        let cfg = presets::scaled_config(1, 64, 64, 8, 64);
+        let l = cfg.isa_layout();
+        assert!(l.uop_bits > 32, "expected extended uop, got {}", l.uop_bits);
+    }
+
+    #[test]
+    fn rejects_non_pow2() {
+        let mut cfg = presets::default_config();
+        cfg.block_in = 24;
+        assert!(matches!(cfg.validate(), Err(ConfigError::NotPow2 { field: "block_in", .. })));
+    }
+
+    #[test]
+    fn rejects_axi_out_of_range() {
+        let mut cfg = presets::default_config();
+        cfg.axi_bytes = 128;
+        assert!(matches!(
+            cfg.validate(),
+            Err(ConfigError::OutOfRange { field: "axi_bytes", .. })
+        ));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = presets::scaled_config(2, 32, 32, 2, 32);
+        let text = cfg.to_json().to_string_pretty();
+        let back = VtaConfig::from_json_str(&text).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn json_missing_field_errors() {
+        let err = VtaConfig::from_json_str(r#"{"batch": 1}"#).unwrap_err();
+        assert!(matches!(err, ConfigError::Json(_)));
+    }
+
+    #[test]
+    fn scratchpad_bytes_counts_all_buffers() {
+        let cfg = presets::default_config();
+        let expected = 8192 * 4 // uop
+            + 2048 * 16 // inp
+            + 1024 * 256 // wgt
+            + 2048 * 64 // acc
+            + 2048 * 16; // out
+        assert_eq!(cfg.scratchpad_bytes(), expected);
+    }
+
+    #[test]
+    fn tag_format() {
+        let cfg = presets::default_config();
+        assert_eq!(cfg.tag(), "1x16x16-axi8");
+        let mut un = cfg;
+        un.gemm_pipelined = false;
+        assert_eq!(un.tag(), "1x16x16-axi8-nopipe");
+    }
+}

@@ -1,0 +1,159 @@
+//! Named hardware configurations used throughout the paper's evaluation.
+//!
+//! * [`default_config`] — upstream VTA default (1×16×16, 64-bit AXI),
+//!   fully pipelined: the baseline for the ~4.9× pipelining comparison.
+//! * [`original_config`] — same geometry with the *unpipelined* GEMM
+//!   (II=4) and ALU (II=4/5) of the published VTA.
+//! * [`scaled_config`] — the Fig 13 design-space generator: MAC shape
+//!   (BLOCK), scratchpad scaling, AXI width.
+//! * [`tiny_config`] — small geometry for fast unit tests.
+
+use super::VtaConfig;
+
+/// Upstream VTA default configuration: BATCH=1, BLOCK_IN=BLOCK_OUT=16,
+/// 32KB uop / 32KB inp / 256KB wgt / 128KB acc buffers, 64-bit (8-byte)
+/// AXI, both execution units fully pipelined (this work's enhancement).
+pub fn default_config() -> VtaConfig {
+    VtaConfig {
+        name: "default".into(),
+        batch: 1,
+        block_in: 16,
+        block_out: 16,
+        uop_depth: 8192,  // 32 KiB / 4 B
+        inp_depth: 2048,  // 32 KiB / 16 B
+        wgt_depth: 1024,  // 256 KiB / 256 B
+        acc_depth: 2048,  // 128 KiB / 64 B
+        axi_bytes: 8,
+        dram_latency: 32,
+        vme_inflight: 8,
+        gemm_pipelined: true,
+        alu_pipelined: true,
+        cmd_queue_depth: 512,
+        dep_queue_depth: 128,
+    }
+}
+
+/// The VTA as published: same geometry as [`default_config`] but with the
+/// original unpipelined execution units (GEMM II=4, ALU II=4/5) and a
+/// single-outstanding-request memory engine.
+pub fn original_config() -> VtaConfig {
+    VtaConfig {
+        name: "original".into(),
+        gemm_pipelined: false,
+        alu_pipelined: false,
+        vme_inflight: 1,
+        ..default_config()
+    }
+}
+
+/// Design-space point for the Fig 13 sweep.
+///
+/// * `batch`, `block` — MAC array shape (`block`×`block`, so the paper's
+///   "4x4 / 5x5 / 6x6 MAC shapes" are `block` = 16 / 32 / 64).
+/// * `spad_scale` — multiplies all scratchpad depths relative to a
+///   geometry-proportional baseline.
+/// * `axi_bytes` — memory interface width (8..=64).
+pub fn scaled_config(
+    batch: usize,
+    block_in: usize,
+    block_out: usize,
+    spad_scale: usize,
+    axi_bytes: usize,
+) -> VtaConfig {
+    // Baseline depths keep tile *counts* constant as BLOCK grows, so
+    // scratchpad bytes grow with the MAC shape (as in the paper, where
+    // scratchpad size dominates scaled area).
+    let base_inp = 1024;
+    let base_wgt = 512;
+    let base_acc = 1024;
+    VtaConfig {
+        name: format!("b{batch}-i{block_in}-o{block_out}-s{spad_scale}-m{axi_bytes}"),
+        batch,
+        block_in,
+        block_out,
+        uop_depth: 8192,
+        inp_depth: base_inp * spad_scale,
+        wgt_depth: base_wgt * spad_scale,
+        acc_depth: base_acc * spad_scale,
+        axi_bytes,
+        dram_latency: 32,
+        vme_inflight: 8,
+        gemm_pipelined: true,
+        alu_pipelined: true,
+        cmd_queue_depth: 512,
+        dep_queue_depth: 128,
+    }
+}
+
+/// Small geometry for fast unit tests: 1×4×4 tiles, shallow buffers.
+pub fn tiny_config() -> VtaConfig {
+    VtaConfig {
+        name: "tiny".into(),
+        batch: 1,
+        block_in: 4,
+        block_out: 4,
+        uop_depth: 512,
+        inp_depth: 256,
+        wgt_depth: 256,
+        acc_depth: 256,
+        axi_bytes: 8,
+        dram_latency: 8,
+        vme_inflight: 4,
+        gemm_pipelined: true,
+        alu_pipelined: true,
+        cmd_queue_depth: 64,
+        dep_queue_depth: 32,
+    }
+}
+
+/// Look a preset up by name (CLI `--config <name>` path).
+pub fn by_name(name: &str) -> Option<VtaConfig> {
+    match name {
+        "default" => Some(default_config()),
+        "original" => Some(original_config()),
+        "tiny" => Some(tiny_config()),
+        "large" => Some(scaled_config(1, 64, 64, 2, 64)),
+        "wide32" => Some(scaled_config(1, 32, 32, 2, 32)),
+        _ => None,
+    }
+}
+
+/// All stable presets (used by config round-trip tests and docs).
+pub fn all() -> Vec<VtaConfig> {
+    vec![
+        default_config(),
+        original_config(),
+        tiny_config(),
+        scaled_config(1, 32, 32, 2, 32),
+        scaled_config(1, 64, 64, 2, 64),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_validate() {
+        for cfg in all() {
+            cfg.validate().unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
+        }
+    }
+
+    #[test]
+    fn original_differs_only_in_pipelining_and_vme() {
+        let d = default_config();
+        let o = original_config();
+        assert!(!o.gemm_pipelined && !o.alu_pipelined);
+        assert_eq!(o.vme_inflight, 1);
+        assert_eq!((o.batch, o.block_in, o.block_out), (d.batch, d.block_in, d.block_out));
+        assert_eq!(o.scratchpad_bytes(), d.scratchpad_bytes());
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("default").is_some());
+        assert!(by_name("original").is_some());
+        assert!(by_name("nonsense").is_none());
+    }
+}

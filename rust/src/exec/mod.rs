@@ -1,0 +1,725 @@
+//! Shared functional execution core: the bit-accurate semantics of every
+//! VTA instruction over the scratchpads and DRAM.
+//!
+//! Both simulator targets consume this module — *fsim* executes
+//! instructions back-to-back, *tsim* schedules the same state transitions
+//! under a cycle-accurate timing model. Sharing the datapath semantics
+//! mirrors the paper's methodology where fsim is the behavioral reference
+//! whose architectural states are compared against tsim traces (§III-C).
+
+use crate::config::VtaConfig;
+use crate::config::IsaLayout;
+use crate::isa::{AluInsn, AluOp, BufferId, GemmInsn, Insn, MemInsn, Opcode, Uop};
+use crate::mem::Dram;
+
+/// Byte/operation counters. LOAD byte counters per buffer feed the
+/// Fig 10/11 DRAM-traffic experiments directly.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecCounters {
+    pub insn_count: u64,
+    pub gemm_ops: u64,
+    pub macs: u64,
+    pub alu_ops: u64,
+    pub alu_elems: u64,
+    pub load_bytes_inp: u64,
+    pub load_bytes_wgt: u64,
+    pub load_bytes_acc: u64,
+    pub load_bytes_uop: u64,
+    pub store_bytes: u64,
+    pub pad_tiles: u64,
+}
+
+impl ExecCounters {
+    pub fn load_bytes_total(&self) -> u64 {
+        self.load_bytes_inp + self.load_bytes_wgt + self.load_bytes_acc + self.load_bytes_uop
+    }
+
+    pub fn dram_bytes_total(&self) -> u64 {
+        self.load_bytes_total() + self.store_bytes
+    }
+}
+
+/// The architectural state of the VTA core: uop buffer and the four data
+/// scratchpads.
+#[derive(Debug, Clone)]
+pub struct CoreState {
+    pub cfg: VtaConfig,
+    pub layout: IsaLayout,
+    pub uop: Vec<Uop>,
+    pub inp: Vec<i8>,
+    pub wgt: Vec<i8>,
+    pub acc: Vec<i32>,
+    pub out: Vec<i8>,
+    pub counters: ExecCounters,
+}
+
+impl CoreState {
+    pub fn new(cfg: &VtaConfig) -> CoreState {
+        let layout = cfg.isa_layout();
+        CoreState {
+            uop: vec![Uop::default(); cfg.uop_depth],
+            inp: vec![0; cfg.inp_depth * cfg.inp_tile_elems()],
+            wgt: vec![0; cfg.wgt_depth * cfg.wgt_tile_elems()],
+            acc: vec![0; cfg.acc_depth * cfg.acc_tile_elems()],
+            out: vec![0; cfg.acc_depth * cfg.acc_tile_elems()],
+            counters: ExecCounters::default(),
+            layout,
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// Execute one instruction's full architectural effect.
+    pub fn execute(&mut self, insn: &Insn, dram: &mut Dram) {
+        self.counters.insn_count += 1;
+        match insn {
+            Insn::Mem(m) if m.opcode == Opcode::Load => self.exec_load(m, dram),
+            Insn::Mem(m) => self.exec_store(m, dram),
+            Insn::Gemm(g) => self.exec_gemm(g),
+            Insn::Alu(a) => self.exec_alu(a),
+            Insn::Finish(_) => {}
+        }
+    }
+
+    /// Tile byte width of a buffer (DRAM transfer granularity).
+    pub fn tile_bytes(&self, buffer: BufferId) -> usize {
+        match buffer {
+            BufferId::Uop => self.layout.uop_bytes(),
+            BufferId::Inp => self.cfg.inp_tile_bytes(),
+            BufferId::Wgt => self.cfg.wgt_tile_bytes(),
+            BufferId::Acc => self.cfg.acc_tile_bytes(),
+            // 8-bit accumulator view: one byte per element in DRAM.
+            BufferId::Acc8 => self.cfg.acc_tile_elems(),
+            BufferId::Out => self.cfg.out_tile_bytes(),
+        }
+    }
+
+    /// Scratchpad depth (tiles) of a buffer.
+    pub fn buffer_depth(&self, buffer: BufferId) -> usize {
+        match buffer {
+            BufferId::Uop => self.cfg.uop_depth,
+            BufferId::Inp => self.cfg.inp_depth,
+            BufferId::Wgt => self.cfg.wgt_depth,
+            BufferId::Acc | BufferId::Acc8 | BufferId::Out => self.cfg.acc_depth,
+        }
+    }
+
+    // ---- LOAD ----
+
+    fn exec_load(&mut self, m: &MemInsn, dram: &Dram) {
+        let tile_bytes = self.tile_bytes(m.buffer);
+        let depth = self.buffer_depth(m.buffer);
+        let rows = (m.y_pad0 + m.y_size + m.y_pad1) as usize;
+        let cols = (m.x_pad0 + m.x_size + m.x_pad1) as usize;
+        assert!(
+            m.sram_base as usize + rows * cols <= depth,
+            "LOAD {:?} overflows scratchpad: base {} + {}x{} tiles > depth {}",
+            m.buffer,
+            m.sram_base,
+            rows,
+            cols,
+            depth
+        );
+        let mut sram = m.sram_base as usize;
+        for y in 0..rows {
+            let interior_row =
+                y >= m.y_pad0 as usize && y < (m.y_pad0 + m.y_size) as usize;
+            for x in 0..cols {
+                let interior =
+                    interior_row && x >= m.x_pad0 as usize && x < (m.x_pad0 + m.x_size) as usize;
+                if interior {
+                    let dy = y - m.y_pad0 as usize;
+                    let dx = x - m.x_pad0 as usize;
+                    let dram_tile =
+                        m.dram_base as usize + dy * m.x_stride as usize + dx;
+                    let bytes = dram.read(dram_tile * tile_bytes, tile_bytes);
+                    self.fill_tile(m.buffer, sram, Some(bytes), 0);
+                } else {
+                    self.fill_tile(m.buffer, sram, None, m.pad_value);
+                    self.counters.pad_tiles += 1;
+                }
+                sram += 1;
+            }
+        }
+        let dram_bytes = m.dram_tiles() * tile_bytes as u64;
+        match m.buffer {
+            BufferId::Inp => self.counters.load_bytes_inp += dram_bytes,
+            BufferId::Wgt => self.counters.load_bytes_wgt += dram_bytes,
+            BufferId::Acc | BufferId::Acc8 => self.counters.load_bytes_acc += dram_bytes,
+            BufferId::Uop => self.counters.load_bytes_uop += dram_bytes,
+            BufferId::Out => {}
+        }
+    }
+
+    /// Write one scratchpad tile from raw DRAM bytes (`Some`) or fill
+    /// with the pad value (`None`).
+    fn fill_tile(&mut self, buffer: BufferId, index: usize, bytes: Option<&[u8]>, pad: i8) {
+        match buffer {
+            BufferId::Uop => {
+                let u = match bytes {
+                    Some(b) => {
+                        let mut raw = [0u8; 8];
+                        raw[..b.len()].copy_from_slice(b);
+                        Uop::decode(u64::from_le_bytes(raw), &self.layout)
+                    }
+                    None => Uop::default(),
+                };
+                self.uop[index] = u;
+            }
+            BufferId::Inp => {
+                let n = self.cfg.inp_tile_elems();
+                let dst = &mut self.inp[index * n..(index + 1) * n];
+                match bytes {
+                    Some(b) => {
+                        for (d, s) in dst.iter_mut().zip(b) {
+                            *d = *s as i8;
+                        }
+                    }
+                    None => dst.fill(pad),
+                }
+            }
+            BufferId::Wgt => {
+                let n = self.cfg.wgt_tile_elems();
+                let dst = &mut self.wgt[index * n..(index + 1) * n];
+                match bytes {
+                    Some(b) => {
+                        for (d, s) in dst.iter_mut().zip(b) {
+                            *d = *s as i8;
+                        }
+                    }
+                    None => dst.fill(pad),
+                }
+            }
+            BufferId::Acc => {
+                let n = self.cfg.acc_tile_elems();
+                let dst = &mut self.acc[index * n..(index + 1) * n];
+                match bytes {
+                    Some(b) => {
+                        for (i, d) in dst.iter_mut().enumerate() {
+                            *d = i32::from_le_bytes(b[i * 4..i * 4 + 4].try_into().unwrap());
+                        }
+                    }
+                    None => dst.fill(pad as i32),
+                }
+            }
+            BufferId::Acc8 => {
+                // Widening load: int8 DRAM bytes -> int32 accumulator.
+                let n = self.cfg.acc_tile_elems();
+                let dst = &mut self.acc[index * n..(index + 1) * n];
+                match bytes {
+                    Some(b) => {
+                        for (d, s) in dst.iter_mut().zip(b) {
+                            *d = *s as i8 as i32;
+                        }
+                    }
+                    None => dst.fill(pad as i32),
+                }
+            }
+            BufferId::Out => {
+                let n = self.cfg.acc_tile_elems();
+                let dst = &mut self.out[index * n..(index + 1) * n];
+                match bytes {
+                    Some(b) => {
+                        for (d, s) in dst.iter_mut().zip(b) {
+                            *d = *s as i8;
+                        }
+                    }
+                    None => dst.fill(pad),
+                }
+            }
+        }
+    }
+
+    // ---- STORE ----
+
+    fn exec_store(&mut self, m: &MemInsn, dram: &mut Dram) {
+        assert_eq!(m.buffer, BufferId::Out, "STORE only reads the OUT scratchpad");
+        let tile_bytes = self.cfg.out_tile_bytes();
+        let n = self.cfg.acc_tile_elems();
+        let depth = self.cfg.acc_depth;
+        assert!(
+            m.sram_base as usize + m.dram_tiles() as usize <= depth,
+            "STORE overflows OUT scratchpad"
+        );
+        let mut sram = m.sram_base as usize;
+        for y in 0..m.y_size as usize {
+            for x in 0..m.x_size as usize {
+                let dram_tile = m.dram_base as usize + y * m.x_stride as usize + x;
+                let src = &self.out[sram * n..(sram + 1) * n];
+                let raw: Vec<u8> = src.iter().map(|&v| v as u8).collect();
+                dram.write(dram_tile * tile_bytes, &raw);
+                sram += 1;
+            }
+        }
+        self.counters.store_bytes += m.dram_tiles() * tile_bytes as u64;
+    }
+
+    // ---- GEMM ----
+
+    fn exec_gemm(&mut self, g: &GemmInsn) {
+        let (batch, bi, bo) = (self.cfg.batch, self.cfg.block_in, self.cfg.block_out);
+        let acc_n = batch * bo;
+        let inp_n = batch * bi;
+        let wgt_n = bo * bi;
+        for i0 in 0..g.lp_out as usize {
+            for i1 in 0..g.lp_in as usize {
+                for uidx in g.uop_bgn as usize..g.uop_end as usize {
+                    let u = self.uop[uidx];
+                    let acc_idx = u.acc as usize
+                        + i0 * g.acc_f0 as usize
+                        + i1 * g.acc_f1 as usize;
+                    if g.reset {
+                        let tile = &mut self.acc[acc_idx * acc_n..(acc_idx + 1) * acc_n];
+                        tile.fill(0);
+                        continue;
+                    }
+                    let inp_idx = u.inp as usize
+                        + i0 * g.inp_f0 as usize
+                        + i1 * g.inp_f1 as usize;
+                    let wgt_idx = u.wgt as usize
+                        + i0 * g.wgt_f0 as usize
+                        + i1 * g.wgt_f1 as usize;
+                    let inp = &self.inp[inp_idx * inp_n..(inp_idx + 1) * inp_n];
+                    let wgt = &self.wgt[wgt_idx * wgt_n..(wgt_idx + 1) * wgt_n];
+                    let acc = &mut self.acc[acc_idx * acc_n..(acc_idx + 1) * acc_n];
+                    // acc[b][o] += Σ_i inp[b][i] * wgt[o][i]
+                    //
+                    // §Perf: iterator zips instead of indexed loops let
+                    // LLVM elide bounds checks and vectorize the int8
+                    // dot product (widening to i16 products, i32 sums) —
+                    // this loop is the whole-simulation hot spot.
+                    for b in 0..batch {
+                        let inp_row = &inp[b * bi..(b + 1) * bi];
+                        let acc_row = &mut acc[b * bo..(b + 1) * bo];
+                        for (a, wgt_row) in acc_row.iter_mut().zip(wgt.chunks_exact(bi)) {
+                            *a = a.wrapping_add(dot_i8(inp_row, wgt_row));
+                        }
+                    }
+                }
+            }
+        }
+        self.counters.gemm_ops += g.total_ops();
+        if !g.reset {
+            self.counters.macs += g.total_ops() * self.cfg.macs_per_gemm_op() as u64;
+        }
+    }
+
+    // ---- ALU ----
+
+    fn exec_alu(&mut self, a: &AluInsn) {
+        let n = self.cfg.acc_tile_elems();
+        for i0 in 0..a.lp_out as usize {
+            for i1 in 0..a.lp_in as usize {
+                for uidx in a.uop_bgn as usize..a.uop_end as usize {
+                    let u = self.uop[uidx];
+                    let dst_idx =
+                        u.dst() as usize + i0 * a.dst_f0 as usize + i1 * a.dst_f1 as usize;
+                    let src_idx =
+                        u.src() as usize + i0 * a.src_f0 as usize + i1 * a.src_f1 as usize;
+                    for e in 0..n {
+                        let lhs = self.acc[dst_idx * n + e];
+                        let rhs = if a.use_imm { a.imm } else { self.acc[src_idx * n + e] };
+                        let res = if a.reset { 0 } else { alu_eval(a.op, lhs, rhs) };
+                        self.acc[dst_idx * n + e] = res;
+                        // Hardware narrows every ALU result into the OUT
+                        // scratchpad (8-bit truncation, as in upstream
+                        // VTA's fsim).
+                        self.out[dst_idx * n + e] = res as i8;
+                    }
+                }
+            }
+        }
+        self.counters.alu_ops += a.total_ops();
+        self.counters.alu_elems += a.total_ops() * n as u64;
+    }
+
+    /// FNV-1a digest of one buffer's contents — the trace-manager hook
+    /// for dynamic trace-based validation (§III-C).
+    pub fn buffer_digest(&self, buffer: BufferId) -> u64 {
+        let mut h = Fnv::new();
+        match buffer {
+            BufferId::Uop => {
+                for u in &self.uop {
+                    h.write_u32(u.acc);
+                    h.write_u32(u.inp);
+                    h.write_u32(u.wgt);
+                }
+            }
+            BufferId::Inp => h.write_i8s(&self.inp),
+            BufferId::Wgt => h.write_i8s(&self.wgt),
+            BufferId::Acc | BufferId::Acc8 => {
+                for v in &self.acc {
+                    h.write_u32(*v as u32);
+                }
+            }
+            BufferId::Out => h.write_i8s(&self.out),
+        }
+        h.finish()
+    }
+}
+
+/// int8 dot product in fixed 16-lane blocks — the shape LLVM
+/// autovectorizes (sign-extend to i16, widening multiply, i32 reduce).
+#[inline]
+fn dot_i8(x: &[i8], w: &[i8]) -> i32 {
+    let mut sum = 0i32;
+    let mut xc = x.chunks_exact(16);
+    let mut wc = w.chunks_exact(16);
+    for (xb, wb) in (&mut xc).zip(&mut wc) {
+        let xb: &[i8; 16] = xb.try_into().unwrap();
+        let wb: &[i8; 16] = wb.try_into().unwrap();
+        let mut s = 0i32;
+        for k in 0..16 {
+            s += xb[k] as i32 * wb[k] as i32;
+        }
+        sum += s;
+    }
+    for (&a, &b) in xc.remainder().iter().zip(wc.remainder()) {
+        sum += a as i32 * b as i32;
+    }
+    sum
+}
+
+/// ALU datapath (shared by exec + golden tests). All int32, wrapping.
+pub fn alu_eval(op: AluOp, dst: i32, src: i32) -> i32 {
+    match op {
+        AluOp::Min => dst.min(src),
+        AluOp::Max => dst.max(src),
+        AluOp::Add => dst.wrapping_add(src),
+        AluOp::Shr => {
+            // Negative immediate shifts left (upstream VTA convention).
+            if src >= 0 {
+                dst >> (src & 31)
+            } else {
+                dst << ((-src) & 31)
+            }
+        }
+        // New (§IV-D3): 8-bit element-wise multiply for depthwise conv —
+        // operands are narrowed to int8 before the multiply, matching the
+        // 8×8 multiplier the instruction adds in hardware.
+        AluOp::Mul => (dst as i8 as i32).wrapping_mul(src as i8 as i32),
+        // New: single-instruction clamp to [-imm, imm].
+        AluOp::Clip => dst.clamp(-src, src),
+        AluOp::Mov => src,
+    }
+}
+
+/// Tiny FNV-1a hasher for state digests.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    fn write_u8(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x100000001b3);
+    }
+
+    fn write_u32(&mut self, v: u32) {
+        for b in v.to_le_bytes() {
+            self.write_u8(b);
+        }
+    }
+
+    fn write_i8s(&mut self, vs: &[i8]) {
+        for &v in vs {
+            self.write_u8(v as u8);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::isa::DepFlags;
+    use crate::util::rng::Pcg32;
+
+    fn setup() -> (CoreState, Dram) {
+        let cfg = presets::tiny_config();
+        (CoreState::new(&cfg), Dram::new(1 << 20))
+    }
+
+    fn load_insn(buffer: BufferId, sram: u32, dram: u32, x_size: u32) -> Insn {
+        Insn::Mem(MemInsn {
+            opcode: Opcode::Load,
+            deps: DepFlags::NONE,
+            buffer,
+            sram_base: sram,
+            dram_base: dram,
+            y_size: 1,
+            x_size,
+            x_stride: x_size,
+            y_pad0: 0,
+            y_pad1: 0,
+            x_pad0: 0,
+            x_pad1: 0,
+            pad_value: 0,
+        })
+    }
+
+    #[test]
+    fn load_inp_roundtrips_dram() {
+        let (mut st, mut dram) = setup();
+        let tile = st.cfg.inp_tile_bytes();
+        let r = dram.alloc(4 * tile, tile);
+        let data: Vec<i8> = (0..(4 * tile) as i32).map(|v| (v % 17 - 8) as i8).collect();
+        dram.write_i8(r, &data);
+        st.execute(&load_insn(BufferId::Inp, 2, r.tile_base(tile), 4), &mut dram);
+        assert_eq!(&st.inp[2 * tile..6 * tile], &data[..]);
+        assert_eq!(st.counters.load_bytes_inp, (4 * tile) as u64);
+    }
+
+    #[test]
+    fn load_padding_uses_pad_value() {
+        let (mut st, mut dram) = setup();
+        let tile = st.cfg.inp_tile_bytes();
+        let r = dram.alloc(tile, tile);
+        dram.write_i8(r, &vec![1i8; tile]);
+        let insn = Insn::Mem(MemInsn {
+            opcode: Opcode::Load,
+            deps: DepFlags::NONE,
+            buffer: BufferId::Inp,
+            sram_base: 0,
+            dram_base: r.tile_base(tile),
+            y_size: 1,
+            x_size: 1,
+            x_stride: 1,
+            y_pad0: 1,
+            y_pad1: 0,
+            x_pad0: 1,
+            x_pad1: 1,
+            pad_value: -128,
+        });
+        st.execute(&insn, &mut dram);
+        // Layout: row 0 = 3 pad tiles, row 1 = pad, data, pad.
+        let n = st.cfg.inp_tile_elems();
+        assert!(st.inp[0..3 * n].iter().all(|&v| v == -128));
+        assert!(st.inp[3 * n..4 * n].iter().all(|&v| v == -128));
+        assert!(st.inp[4 * n..5 * n].iter().all(|&v| v == 1));
+        assert!(st.inp[5 * n..6 * n].iter().all(|&v| v == -128));
+        assert_eq!(st.counters.pad_tiles, 5);
+    }
+
+    #[test]
+    fn gemm_matches_reference_matmul() {
+        let (mut st, mut dram) = setup();
+        let cfg = st.cfg.clone();
+        let mut rng = Pcg32::seeded(11);
+        // One tile matmul: inp[0], wgt[0] -> acc[0].
+        let inp = rng.i8_vec(cfg.inp_tile_elems());
+        let wgt = rng.i8_vec(cfg.wgt_tile_elems());
+        let ti = dram.alloc(cfg.inp_tile_bytes(), cfg.inp_tile_bytes());
+        let tw = dram.alloc(cfg.wgt_tile_bytes(), cfg.wgt_tile_bytes());
+        dram.write_i8(ti, &inp);
+        dram.write_i8(tw, &wgt);
+        st.execute(&load_insn(BufferId::Inp, 0, ti.tile_base(cfg.inp_tile_bytes()), 1), &mut dram);
+        st.execute(&load_insn(BufferId::Wgt, 0, tw.tile_base(cfg.wgt_tile_bytes()), 1), &mut dram);
+        st.uop[0] = Uop::gemm(0, 0, 0);
+        let gemm = GemmInsn {
+            deps: DepFlags::NONE,
+            reset: false,
+            uop_bgn: 0,
+            uop_end: 1,
+            lp_out: 1,
+            lp_in: 1,
+            acc_f0: 0,
+            acc_f1: 0,
+            inp_f0: 0,
+            inp_f1: 0,
+            wgt_f0: 0,
+            wgt_f1: 0,
+        };
+        st.execute(&Insn::Gemm(gemm), &mut dram);
+        for b in 0..cfg.batch {
+            for o in 0..cfg.block_out {
+                let expect: i32 = (0..cfg.block_in)
+                    .map(|i| {
+                        inp[b * cfg.block_in + i] as i32 * wgt[o * cfg.block_in + i] as i32
+                    })
+                    .sum();
+                assert_eq!(st.acc[b * cfg.block_out + o], expect);
+            }
+        }
+        assert_eq!(st.counters.macs, cfg.macs_per_gemm_op() as u64);
+    }
+
+    #[test]
+    fn gemm_reset_zeroes() {
+        let (mut st, mut dram) = setup();
+        st.acc[0..st.cfg.acc_tile_elems()].fill(77);
+        st.uop[0] = Uop::gemm(0, 0, 0);
+        let gemm = GemmInsn {
+            deps: DepFlags::NONE,
+            reset: true,
+            uop_bgn: 0,
+            uop_end: 1,
+            lp_out: 1,
+            lp_in: 1,
+            acc_f0: 0,
+            acc_f1: 0,
+            inp_f0: 0,
+            inp_f1: 0,
+            wgt_f0: 0,
+            wgt_f1: 0,
+        };
+        st.execute(&Insn::Gemm(gemm), &mut dram);
+        assert!(st.acc[..st.cfg.acc_tile_elems()].iter().all(|&v| v == 0));
+        assert_eq!(st.counters.macs, 0);
+    }
+
+    #[test]
+    fn gemm_loop_factors_walk_indices() {
+        // 2x1 loop with acc_f0=1 writes two different acc tiles.
+        let (mut st, mut dram) = setup();
+        st.uop[0] = Uop::gemm(0, 0, 0);
+        st.inp.fill(1);
+        st.wgt.fill(1);
+        let gemm = GemmInsn {
+            deps: DepFlags::NONE,
+            reset: false,
+            uop_bgn: 0,
+            uop_end: 1,
+            lp_out: 2,
+            lp_in: 1,
+            acc_f0: 1,
+            acc_f1: 0,
+            inp_f0: 0,
+            inp_f1: 0,
+            wgt_f0: 0,
+            wgt_f1: 0,
+        };
+        st.execute(&Insn::Gemm(gemm), &mut dram);
+        let n = st.cfg.acc_tile_elems();
+        let bi = st.cfg.block_in as i32;
+        assert!(st.acc[..n].iter().all(|&v| v == bi));
+        assert!(st.acc[n..2 * n].iter().all(|&v| v == bi));
+        assert!(st.acc[2 * n..3 * n].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn alu_ops_semantics() {
+        assert_eq!(alu_eval(AluOp::Min, 3, -5), -5);
+        assert_eq!(alu_eval(AluOp::Max, 3, -5), 3);
+        assert_eq!(alu_eval(AluOp::Add, 3, -5), -2);
+        assert_eq!(alu_eval(AluOp::Shr, -16, 2), -4);
+        assert_eq!(alu_eval(AluOp::Shr, 5, -3), 40); // negative = shift left
+        assert_eq!(alu_eval(AluOp::Mul, 300, 2), (300i32 as i8 as i32) * 2); // 8-bit truncation
+        assert_eq!(alu_eval(AluOp::Mul, -3, 7), -21);
+        assert_eq!(alu_eval(AluOp::Clip, 200, 127), 127);
+        assert_eq!(alu_eval(AluOp::Clip, -200, 127), -127);
+        assert_eq!(alu_eval(AluOp::Clip, 50, 127), 50);
+        assert_eq!(alu_eval(AluOp::Mov, 1, 9), 9);
+    }
+
+    #[test]
+    fn alu_writes_acc_and_out() {
+        let (mut st, mut dram) = setup();
+        let n = st.cfg.acc_tile_elems();
+        st.acc[..n].fill(300);
+        st.uop[0] = Uop::alu(0, 0);
+        let alu = AluInsn {
+            deps: DepFlags::NONE,
+            reset: false,
+            op: AluOp::Clip,
+            uop_bgn: 0,
+            uop_end: 1,
+            lp_out: 1,
+            lp_in: 1,
+            dst_f0: 0,
+            dst_f1: 0,
+            src_f0: 0,
+            src_f1: 0,
+            use_imm: true,
+            imm: 127,
+        };
+        st.execute(&Insn::Alu(alu), &mut dram);
+        assert!(st.acc[..n].iter().all(|&v| v == 127));
+        assert!(st.out[..n].iter().all(|&v| v == 127));
+    }
+
+    #[test]
+    fn store_writes_out_to_dram() {
+        let (mut st, mut dram) = setup();
+        let n = st.cfg.acc_tile_elems();
+        let tile = st.cfg.out_tile_bytes();
+        for (i, v) in st.out[..2 * n].iter_mut().enumerate() {
+            *v = i as i8;
+        }
+        let r = dram.alloc(2 * tile, tile);
+        let store = Insn::Mem(MemInsn {
+            opcode: Opcode::Store,
+            deps: DepFlags::NONE,
+            buffer: BufferId::Out,
+            sram_base: 0,
+            dram_base: r.tile_base(tile),
+            y_size: 1,
+            x_size: 2,
+            x_stride: 2,
+            y_pad0: 0,
+            y_pad1: 0,
+            x_pad0: 0,
+            x_pad1: 0,
+            pad_value: 0,
+        });
+        st.execute(&store, &mut dram);
+        let read = dram.read_i8(r);
+        let expect: Vec<i8> = (0..2 * n as i32).map(|v| v as i8).collect();
+        assert_eq!(read, expect);
+        assert_eq!(st.counters.store_bytes, (2 * tile) as u64);
+    }
+
+    #[test]
+    fn uop_load_decodes() {
+        let (mut st, mut dram) = setup();
+        let l = st.layout.clone();
+        let uops = vec![Uop::gemm(1, 2, 3), Uop::gemm(4, 5, 6)];
+        let bytes = Uop::stream_to_bytes(&uops, &l);
+        let r = dram.alloc(bytes.len(), l.uop_bytes());
+        dram.write(r.addr, &bytes);
+        st.execute(
+            &load_insn(BufferId::Uop, 10, r.tile_base(l.uop_bytes()), 2),
+            &mut dram,
+        );
+        assert_eq!(st.uop[10], uops[0]);
+        assert_eq!(st.uop[11], uops[1]);
+    }
+
+    #[test]
+    fn digest_changes_with_state() {
+        let (mut st, mut dram) = setup();
+        let before = st.buffer_digest(BufferId::Acc);
+        st.uop[0] = Uop::alu(0, 0);
+        let alu = AluInsn {
+            deps: DepFlags::NONE,
+            reset: false,
+            op: AluOp::Mov,
+            uop_bgn: 0,
+            uop_end: 1,
+            lp_out: 1,
+            lp_in: 1,
+            dst_f0: 0,
+            dst_f1: 0,
+            src_f0: 0,
+            src_f1: 0,
+            use_imm: true,
+            imm: 5,
+        };
+        st.execute(&Insn::Alu(alu), &mut dram);
+        assert_ne!(st.buffer_digest(BufferId::Acc), before);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows scratchpad")]
+    fn load_overflow_panics() {
+        let (mut st, mut dram) = setup();
+        let depth = st.cfg.inp_depth as u32;
+        let _r = dram.alloc(1 << 16, 64);
+        st.execute(&load_insn(BufferId::Inp, depth - 1, 0, 4), &mut dram);
+    }
+}

@@ -1,0 +1,329 @@
+//! Floorplanning library (§IV-B "Flexible Floorplans").
+//!
+//! The paper built a Python library for generating physical floorplans
+//! of VTA configurations: "definition of layout objects with design
+//! sub-hierarchy name, width, height, and orientation ... capability to
+//! instantiate arrays of floorplan instances and flip individual objects
+//! ... Result visualization and overlap/spacing, unique instance name
+//! checks". This module is that library, plus the paper's ACC-centric
+//! VTA floorplan generator (Fig 7b): a tile per accumulator slice
+//! containing its GEMM lane and the WGT scratchpad portion feeding it,
+//! with INP/UOP/instruction distribution left at the periphery.
+
+use crate::config::VtaConfig;
+use std::collections::BTreeSet;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Orient {
+    R0,
+    R90,
+    /// Mirrored about the Y axis ("flip individual objects").
+    MX,
+    MY,
+}
+
+/// A placed rectangle in the floorplan (leaf = macro, e.g. an SRAM).
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub name: String,
+    pub x: f64,
+    pub y: f64,
+    pub w: f64,
+    pub h: f64,
+    pub orient: Orient,
+    /// Hierarchy path ("core/acc_tile3/wgt_mem").
+    pub hier: String,
+}
+
+impl Instance {
+    /// Effective bounding box (R90 swaps width/height).
+    pub fn bbox(&self) -> (f64, f64, f64, f64) {
+        let (w, h) = match self.orient {
+            Orient::R90 => (self.h, self.w),
+            _ => (self.w, self.h),
+        };
+        (self.x, self.y, self.x + w, self.y + h)
+    }
+
+    pub fn overlaps(&self, other: &Instance) -> bool {
+        let (ax0, ay0, ax1, ay1) = self.bbox();
+        let (bx0, by0, bx1, by1) = other.bbox();
+        ax0 < bx1 && bx0 < ax1 && ay0 < by1 && by0 < ay1
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Floorplan {
+    pub name: String,
+    pub instances: Vec<Instance>,
+    /// Die bounds (0,0)..(w,h).
+    pub die_w: f64,
+    pub die_h: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum FloorplanError {
+    Overlap(String, String),
+    DuplicateName(String),
+    OutOfDie(String),
+}
+
+impl std::fmt::Display for FloorplanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FloorplanError::Overlap(a, b) => write!(f, "instances '{a}' and '{b}' overlap"),
+            FloorplanError::DuplicateName(n) => write!(f, "duplicate instance name '{n}'"),
+            FloorplanError::OutOfDie(n) => write!(f, "instance '{n}' outside the die"),
+        }
+    }
+}
+
+impl Floorplan {
+    pub fn new(name: &str, die_w: f64, die_h: f64) -> Floorplan {
+        Floorplan { name: name.to_string(), die_w, die_h, instances: Vec::new() }
+    }
+
+    pub fn place(&mut self, name: &str, hier: &str, x: f64, y: f64, w: f64, h: f64, orient: Orient) {
+        self.instances.push(Instance {
+            name: name.to_string(),
+            hier: hier.to_string(),
+            x,
+            y,
+            w,
+            h,
+            orient,
+        });
+    }
+
+    /// Instantiate a grid array of identical objects ("capability to
+    /// instantiate arrays of floorplan instances"), optionally flipping
+    /// alternate columns (common for abutted power rails).
+    #[allow(clippy::too_many_arguments)]
+    pub fn place_array(
+        &mut self,
+        base_name: &str,
+        hier: &str,
+        x0: f64,
+        y0: f64,
+        w: f64,
+        h: f64,
+        nx: usize,
+        ny: usize,
+        pitch_x: f64,
+        pitch_y: f64,
+        flip_alternate: bool,
+    ) {
+        for j in 0..ny {
+            for i in 0..nx {
+                let orient = if flip_alternate && i % 2 == 1 { Orient::MY } else { Orient::R0 };
+                self.place(
+                    &format!("{base_name}_{j}_{i}"),
+                    hier,
+                    x0 + i as f64 * pitch_x,
+                    y0 + j as f64 * pitch_y,
+                    w,
+                    h,
+                    orient,
+                );
+            }
+        }
+    }
+
+    /// The paper's checks: unique instance names, no overlapping macros,
+    /// everything inside the die.
+    pub fn check(&self) -> Result<(), FloorplanError> {
+        let mut names = BTreeSet::new();
+        for inst in &self.instances {
+            if !names.insert(inst.name.clone()) {
+                return Err(FloorplanError::DuplicateName(inst.name.clone()));
+            }
+            let (x0, y0, x1, y1) = inst.bbox();
+            if x0 < -1e-9 || y0 < -1e-9 || x1 > self.die_w + 1e-9 || y1 > self.die_h + 1e-9 {
+                return Err(FloorplanError::OutOfDie(inst.name.clone()));
+            }
+        }
+        for i in 0..self.instances.len() {
+            for j in i + 1..self.instances.len() {
+                if self.instances[i].overlaps(&self.instances[j]) {
+                    return Err(FloorplanError::Overlap(
+                        self.instances[i].name.clone(),
+                        self.instances[j].name.clone(),
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Macro-area utilization of the die.
+    pub fn utilization(&self) -> f64 {
+        let used: f64 = self.instances.iter().map(|i| i.w * i.h).sum();
+        used / (self.die_w * self.die_h)
+    }
+
+    /// ASCII visualization ("Result visualization").
+    pub fn ascii(&self, cols: usize, rows: usize) -> String {
+        let mut grid = vec![vec!['.'; cols]; rows];
+        for (idx, inst) in self.instances.iter().enumerate() {
+            let ch = char::from(b'A' + (idx % 26) as u8);
+            let (x0, y0, x1, y1) = inst.bbox();
+            let c0 = (x0 / self.die_w * cols as f64) as usize;
+            let c1 = ((x1 / self.die_w * cols as f64).ceil() as usize).min(cols);
+            let r0 = (y0 / self.die_h * rows as f64) as usize;
+            let r1 = ((y1 / self.die_h * rows as f64).ceil() as usize).min(rows);
+            for r in r0..r1 {
+                for c in c0..c1 {
+                    grid[r][c] = ch;
+                }
+            }
+        }
+        let mut out = format!("floorplan '{}' ({}x{})\n", self.name, self.die_w, self.die_h);
+        for row in grid.iter().rev() {
+            out.push_str(&row.iter().collect::<String>());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// SRAM macro geometry: area proportional to bits, aspect ratio ~2:1.
+fn sram_dims(bytes: usize) -> (f64, f64) {
+    let area = bytes as f64 * 8.0; // 1 unit^2 per bit
+    let h = (area / 2.0).sqrt();
+    (2.0 * h, h)
+}
+
+/// Generate the ACC-centric VTA floorplan of Fig 7b: a row-major array
+/// of accumulator tiles, each containing the ACC slice, its GEMM lane
+/// and the WGT scratchpad portion feeding that slice ("It makes sense to
+/// place a portion of WGT scratchpad close to respective ACC module"),
+/// with INP/UOP/OUT memories and the instruction path at the periphery.
+pub fn vta_floorplan(cfg: &VtaConfig) -> Floorplan {
+    // One tile per BLOCK_OUT lane group; paper groups "as many units as
+    // needed to complete computation in one cycle".
+    let n_tiles = cfg.block_out.min(16);
+    let acc_bytes = cfg.acc_depth * cfg.acc_tile_bytes() / n_tiles;
+    let wgt_bytes = cfg.wgt_depth * cfg.wgt_tile_bytes() / n_tiles;
+    let (acc_w, acc_h) = sram_dims(acc_bytes);
+    let (wgt_w, wgt_h) = sram_dims(wgt_bytes);
+    let mac_h = (cfg.batch * cfg.block_in) as f64 * 2.0;
+    let tile_w = acc_w.max(wgt_w) + 4.0;
+    let tile_h = acc_h + wgt_h + mac_h + 6.0;
+
+    let nx = (n_tiles as f64).sqrt().ceil() as usize;
+    let ny = n_tiles.div_ceil(nx);
+    let (inp_w, inp_h) = sram_dims(cfg.inp_depth * cfg.inp_tile_bytes());
+    let (uop_w, uop_h) = sram_dims(cfg.uop_depth * cfg.isa_layout().uop_bytes());
+    let (out_w, out_h) = sram_dims(cfg.acc_depth * cfg.out_tile_bytes());
+
+    let core_w = nx as f64 * tile_w;
+    let periph_h = inp_h.max(uop_h).max(out_h) + 4.0;
+    let die_w = core_w.max(inp_w + uop_w + out_w + 8.0) + 8.0;
+    let die_h = ny as f64 * tile_h + periph_h + 8.0;
+
+    let mut fp = Floorplan::new(&format!("vta-{}", cfg.tag()), die_w, die_h);
+    // Peripheral row: INP, UOP, OUT memories + instruction path.
+    fp.place("inp_mem", "core/inp", 2.0, 2.0, inp_w, inp_h, Orient::R0);
+    fp.place("uop_mem", "core/uop", 4.0 + inp_w, 2.0, uop_w, uop_h, Orient::R0);
+    fp.place("out_mem", "core/out", 6.0 + inp_w + uop_w, 2.0, out_w, out_h, Orient::R0);
+    // ACC-centric tiles.
+    for t in 0..n_tiles {
+        let ix = t % nx;
+        let iy = t / nx;
+        let x0 = 4.0 + ix as f64 * tile_w;
+        let y0 = periph_h + 4.0 + iy as f64 * tile_h;
+        let hier = format!("core/acc_tile{t}");
+        fp.place(&format!("acc_mem{t}"), &hier, x0, y0, acc_w, acc_h, Orient::R0);
+        fp.place(
+            &format!("gemm_lane{t}"),
+            &hier,
+            x0,
+            y0 + acc_h + 2.0,
+            acc_w.max(wgt_w),
+            mac_h,
+            if t % 2 == 1 { Orient::MY } else { Orient::R0 },
+        );
+        fp.place(
+            &format!("wgt_mem{t}"),
+            &hier,
+            x0,
+            y0 + acc_h + mac_h + 4.0,
+            wgt_w,
+            wgt_h,
+            Orient::R0,
+        );
+    }
+    fp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn overlap_detection() {
+        let mut fp = Floorplan::new("t", 100.0, 100.0);
+        fp.place("a", "h", 0.0, 0.0, 10.0, 10.0, Orient::R0);
+        fp.place("b", "h", 5.0, 5.0, 10.0, 10.0, Orient::R0);
+        assert!(matches!(fp.check(), Err(FloorplanError::Overlap(_, _))));
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut fp = Floorplan::new("t", 100.0, 100.0);
+        fp.place("a", "h", 0.0, 0.0, 10.0, 10.0, Orient::R0);
+        fp.place("a", "h", 20.0, 0.0, 10.0, 10.0, Orient::R0);
+        assert!(matches!(fp.check(), Err(FloorplanError::DuplicateName(_))));
+    }
+
+    #[test]
+    fn out_of_die_rejected() {
+        let mut fp = Floorplan::new("t", 10.0, 10.0);
+        fp.place("a", "h", 5.0, 5.0, 10.0, 10.0, Orient::R0);
+        assert!(matches!(fp.check(), Err(FloorplanError::OutOfDie(_))));
+    }
+
+    #[test]
+    fn r90_swaps_bbox() {
+        let i = Instance {
+            name: "x".into(),
+            hier: "h".into(),
+            x: 0.0,
+            y: 0.0,
+            w: 4.0,
+            h: 2.0,
+            orient: Orient::R90,
+        };
+        assert_eq!(i.bbox(), (0.0, 0.0, 2.0, 4.0));
+    }
+
+    #[test]
+    fn array_placement_unique_and_clean() {
+        let mut fp = Floorplan::new("t", 100.0, 100.0);
+        fp.place_array("m", "h", 0.0, 0.0, 8.0, 8.0, 4, 3, 10.0, 10.0, true);
+        assert_eq!(fp.instances.len(), 12);
+        fp.check().unwrap();
+        // Alternate columns flipped.
+        assert_eq!(fp.instances[1].orient, Orient::MY);
+        assert_eq!(fp.instances[2].orient, Orient::R0);
+    }
+
+    #[test]
+    fn vta_floorplans_check_clean_for_presets() {
+        for cfg in presets::all() {
+            let fp = vta_floorplan(&cfg);
+            fp.check().unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
+            assert!(fp.utilization() > 0.05, "{}: unreasonably sparse", cfg.name);
+            assert!(fp.utilization() < 1.0);
+        }
+    }
+
+    #[test]
+    fn ascii_visualization_nonempty() {
+        let fp = vta_floorplan(&presets::default_config());
+        let art = fp.ascii(60, 20);
+        assert!(art.lines().count() == 21);
+        assert!(art.contains('A'));
+    }
+}

@@ -1,0 +1,95 @@
+//! *fsim* — the behavioral simulator target (§III-C).
+//!
+//! Executes an instruction stream back-to-back with no timing model.
+//! Its value in the paper's methodology is "its relative simplicity":
+//! functional discrepancies introduced by the micro-architectural model
+//! (*tsim*) are debugged against this reference via dynamic trace-based
+//! validation (see [`crate::trace`]).
+
+use crate::config::VtaConfig;
+use crate::exec::{CoreState, ExecCounters};
+use crate::isa::{Insn, Opcode};
+use crate::mem::Dram;
+
+#[derive(Debug, Clone, Default)]
+pub struct FsimReport {
+    pub insns_executed: u64,
+    pub finished: bool,
+    pub counters: ExecCounters,
+}
+
+pub struct Fsim {
+    pub state: CoreState,
+    /// Optional per-instruction observer (trace manager hook). Called
+    /// *after* each instruction's architectural effect.
+    pub observer: Option<Box<dyn FnMut(u64, &Insn, &CoreState)>>,
+}
+
+impl Fsim {
+    pub fn new(cfg: &VtaConfig) -> Fsim {
+        Fsim { state: CoreState::new(cfg), observer: None }
+    }
+
+    /// Execute instructions in program order until FINISH (or the end of
+    /// the stream). Returns the execution report; counters accumulate
+    /// across calls (use [`Fsim::reset_counters`] between runs).
+    pub fn run(&mut self, insns: &[Insn], dram: &mut Dram) -> FsimReport {
+        let mut report = FsimReport::default();
+        for (i, insn) in insns.iter().enumerate() {
+            self.state.execute(insn, dram);
+            report.insns_executed += 1;
+            if let Some(obs) = &mut self.observer {
+                obs(i as u64, insn, &self.state);
+            }
+            if insn.opcode() == Opcode::Finish {
+                report.finished = true;
+                break;
+            }
+        }
+        report.counters = self.state.counters;
+        report
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.state.counters = ExecCounters::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::isa::DepFlags;
+
+    #[test]
+    fn runs_to_finish() {
+        let cfg = presets::tiny_config();
+        let mut sim = Fsim::new(&cfg);
+        let mut dram = Dram::new(1 << 16);
+        let insns = vec![Insn::Finish(DepFlags::NONE), Insn::Finish(DepFlags::NONE)];
+        let report = sim.run(&insns, &mut dram);
+        assert!(report.finished);
+        assert_eq!(report.insns_executed, 1);
+    }
+
+    #[test]
+    fn stops_without_finish() {
+        let cfg = presets::tiny_config();
+        let mut sim = Fsim::new(&cfg);
+        let mut dram = Dram::new(1 << 16);
+        let report = sim.run(&[], &mut dram);
+        assert!(!report.finished);
+    }
+
+    #[test]
+    fn observer_sees_each_insn() {
+        let cfg = presets::tiny_config();
+        let mut sim = Fsim::new(&cfg);
+        let mut dram = Dram::new(1 << 16);
+        let count = std::rc::Rc::new(std::cell::Cell::new(0u64));
+        let c2 = count.clone();
+        sim.observer = Some(Box::new(move |_, _, _| c2.set(c2.get() + 1)));
+        sim.run(&[Insn::Finish(DepFlags::NONE)], &mut dram);
+        assert_eq!(count.get(), 1);
+    }
+}

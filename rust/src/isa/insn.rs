@@ -1,0 +1,509 @@
+//! Instruction structures and bit-accurate encode/decode.
+//!
+//! Encoding is parameterized by [`IsaLayout`] — the same binary program is
+//! *not* portable between configurations, exactly as in VTA where the JSON
+//! config fixes field widths for every target. Encode/decode are exact
+//! inverses (property-tested) and both simulators consume the *decoded*
+//! form, so any encoding bug shows up as an fsim/tsim divergence.
+
+use super::{AluOp, BufferId, DepFlags, Opcode};
+use crate::config::{IsaLayout, INSN_BITS};
+use crate::util::bitfield::{BitReader, BitWriter};
+
+/// LOAD/STORE: 2-D strided DMA between DRAM and a scratchpad, with
+/// zero/valued padding inserted around the transferred block.
+///
+/// All sizes are in scratchpad *tiles* (the buffer's element granularity).
+/// `dram_base` is also tile-granular.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemInsn {
+    pub opcode: Opcode, // Load or Store
+    pub deps: DepFlags,
+    pub buffer: BufferId,
+    pub sram_base: u32,
+    pub dram_base: u32,
+    /// Rows to transfer.
+    pub y_size: u32,
+    /// Tiles per row.
+    pub x_size: u32,
+    /// DRAM tiles between consecutive row starts.
+    pub x_stride: u32,
+    pub y_pad0: u32,
+    pub y_pad1: u32,
+    pub x_pad0: u32,
+    pub x_pad1: u32,
+    /// Fill value for padded tiles — new in this work; `-128` enables
+    /// max-pooling over padded borders, `0` is the conv default.
+    pub pad_value: i8,
+}
+
+impl MemInsn {
+    /// Tiles written to SRAM including padding.
+    pub fn sram_tiles(&self) -> u64 {
+        (self.y_pad0 + self.y_size + self.y_pad1) as u64
+            * (self.x_pad0 + self.x_size + self.x_pad1) as u64
+    }
+
+    /// Tiles actually transferred from/to DRAM.
+    pub fn dram_tiles(&self) -> u64 {
+        self.y_size as u64 * self.x_size as u64
+    }
+}
+
+/// GEMM: a two-level loop nest over a uop sequence. Each uop supplies
+/// scratchpad base indices; the loop factors advance them per iteration:
+///
+/// ```text
+/// for i0 in 0..lp_out:
+///   for i1 in 0..lp_in:
+///     for u in uop_bgn..uop_end:
+///       acc[u.acc + i0*acc_f0 + i1*acc_f1]
+///         (+)= inp[u.inp + i0*inp_f0 + i1*inp_f1]
+///            · wgtᵀ[u.wgt + i0*wgt_f0 + i1*wgt_f1]
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmInsn {
+    pub deps: DepFlags,
+    /// Reset mode: zero the destination accumulator tiles instead of
+    /// performing MACs.
+    pub reset: bool,
+    pub uop_bgn: u32,
+    pub uop_end: u32,
+    pub lp_out: u32,
+    pub lp_in: u32,
+    pub acc_f0: u32,
+    pub acc_f1: u32,
+    pub inp_f0: u32,
+    pub inp_f1: u32,
+    pub wgt_f0: u32,
+    pub wgt_f1: u32,
+}
+
+impl GemmInsn {
+    /// Number of uop executions (tile-matmuls) this instruction performs.
+    pub fn total_ops(&self) -> u64 {
+        self.lp_out as u64 * self.lp_in as u64 * (self.uop_end - self.uop_bgn) as u64
+    }
+}
+
+/// ALU: same loop structure as GEMM but over accumulator tiles, with a
+/// vector op per element; src is a second accumulator index or an
+/// immediate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AluInsn {
+    pub deps: DepFlags,
+    pub reset: bool,
+    pub op: AluOp,
+    pub uop_bgn: u32,
+    pub uop_end: u32,
+    pub lp_out: u32,
+    pub lp_in: u32,
+    pub dst_f0: u32,
+    pub dst_f1: u32,
+    pub src_f0: u32,
+    pub src_f1: u32,
+    pub use_imm: bool,
+    pub imm: i32,
+}
+
+impl AluInsn {
+    pub fn total_ops(&self) -> u64 {
+        self.lp_out as u64 * self.lp_in as u64 * (self.uop_end - self.uop_bgn) as u64
+    }
+}
+
+/// A decoded VTA instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Insn {
+    Mem(MemInsn),
+    Gemm(GemmInsn),
+    Alu(AluInsn),
+    Finish(DepFlags),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodeError {
+    pub message: String,
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "instruction decode: {}", self.message)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+impl Insn {
+    pub fn opcode(&self) -> Opcode {
+        match self {
+            Insn::Mem(m) => m.opcode,
+            Insn::Gemm(_) => Opcode::Gemm,
+            Insn::Alu(_) => Opcode::Alu,
+            Insn::Finish(_) => Opcode::Finish,
+        }
+    }
+
+    pub fn deps(&self) -> DepFlags {
+        match self {
+            Insn::Mem(m) => m.deps,
+            Insn::Gemm(g) => g.deps,
+            Insn::Alu(a) => a.deps,
+            Insn::Finish(d) => *d,
+        }
+    }
+
+    pub fn deps_mut(&mut self) -> &mut DepFlags {
+        match self {
+            Insn::Mem(m) => &mut m.deps,
+            Insn::Gemm(g) => &mut g.deps,
+            Insn::Alu(a) => &mut a.deps,
+            Insn::Finish(d) => d,
+        }
+    }
+
+    /// Encode into the 128-bit instruction word under `layout`.
+    ///
+    /// Panics if a field exceeds its configured width — the runtime is
+    /// responsible for never emitting such instructions (and its tests
+    /// assert that), mirroring hardware where the field would silently
+    /// wrap.
+    pub fn encode(&self, layout: &IsaLayout) -> u128 {
+        let mut w = BitWriter::new();
+        match self {
+            Insn::Mem(m) => {
+                w.push(m.opcode as u64, 3)
+                    .push(m.deps.to_bits(), 4)
+                    .push(m.buffer as u64, 3)
+                    .push(m.sram_base as u64, layout.sram_bits)
+                    .push(m.dram_base as u64, layout.dram_bits)
+                    .push(m.y_size as u64, layout.mem_size_bits)
+                    .push(m.x_size as u64, layout.mem_size_bits)
+                    .push(m.x_stride as u64, layout.mem_size_bits)
+                    .push(m.y_pad0 as u64, layout.pad_bits)
+                    .push(m.y_pad1 as u64, layout.pad_bits)
+                    .push(m.x_pad0 as u64, layout.pad_bits)
+                    .push(m.x_pad1 as u64, layout.pad_bits)
+                    .push((m.pad_value as u8) as u64, layout.pad_val_bits);
+            }
+            Insn::Gemm(g) => {
+                w.push(Opcode::Gemm as u64, 3)
+                    .push(g.deps.to_bits(), 4)
+                    .push(g.reset as u64, 1)
+                    .push(g.uop_bgn as u64, layout.uop_idx_bits)
+                    .push(g.uop_end as u64, layout.uop_end_bits())
+                    .push(g.lp_out as u64, layout.loop_bits)
+                    .push(g.lp_in as u64, layout.loop_bits)
+                    .push(g.acc_f0 as u64, layout.acc_idx_bits)
+                    .push(g.acc_f1 as u64, layout.acc_idx_bits)
+                    .push(g.inp_f0 as u64, layout.inp_idx_bits)
+                    .push(g.inp_f1 as u64, layout.inp_idx_bits)
+                    .push(g.wgt_f0 as u64, layout.wgt_idx_bits)
+                    .push(g.wgt_f1 as u64, layout.wgt_idx_bits);
+            }
+            Insn::Alu(a) => {
+                w.push(Opcode::Alu as u64, 3)
+                    .push(a.deps.to_bits(), 4)
+                    .push(a.reset as u64, 1)
+                    .push(a.uop_bgn as u64, layout.uop_idx_bits)
+                    .push(a.uop_end as u64, layout.uop_end_bits())
+                    .push(a.lp_out as u64, layout.loop_bits)
+                    .push(a.lp_in as u64, layout.loop_bits)
+                    .push(a.dst_f0 as u64, layout.acc_idx_bits)
+                    .push(a.dst_f1 as u64, layout.acc_idx_bits)
+                    .push(a.src_f0 as u64, layout.acc_idx_bits)
+                    .push(a.src_f1 as u64, layout.acc_idx_bits)
+                    .push(a.op as u64, layout.alu_op_bits)
+                    .push(a.use_imm as u64, 1)
+                    .push_signed(a.imm as i64, layout.imm_bits);
+            }
+            Insn::Finish(deps) => {
+                w.push(Opcode::Finish as u64, 3).push(deps.to_bits(), 4);
+            }
+        }
+        debug_assert!(w.bits_used() <= INSN_BITS);
+        w.finish()
+    }
+
+    /// Decode a 128-bit instruction word under `layout`.
+    pub fn decode(word: u128, layout: &IsaLayout) -> Result<Insn, DecodeError> {
+        let mut r = BitReader::new(word);
+        let opcode = Opcode::from_bits(r.pull(3))
+            .ok_or_else(|| DecodeError { message: "bad opcode".into() })?;
+        let deps = DepFlags::from_bits(r.pull(4));
+        match opcode {
+            Opcode::Load | Opcode::Store => {
+                let buffer = BufferId::from_bits(r.pull(3))
+                    .ok_or_else(|| DecodeError { message: "bad buffer id".into() })?;
+                Ok(Insn::Mem(MemInsn {
+                    opcode,
+                    deps,
+                    buffer,
+                    sram_base: r.pull(layout.sram_bits) as u32,
+                    dram_base: r.pull(layout.dram_bits) as u32,
+                    y_size: r.pull(layout.mem_size_bits) as u32,
+                    x_size: r.pull(layout.mem_size_bits) as u32,
+                    x_stride: r.pull(layout.mem_size_bits) as u32,
+                    y_pad0: r.pull(layout.pad_bits) as u32,
+                    y_pad1: r.pull(layout.pad_bits) as u32,
+                    x_pad0: r.pull(layout.pad_bits) as u32,
+                    x_pad1: r.pull(layout.pad_bits) as u32,
+                    pad_value: r.pull(layout.pad_val_bits) as u8 as i8,
+                }))
+            }
+            Opcode::Gemm => Ok(Insn::Gemm(GemmInsn {
+                deps,
+                reset: r.pull(1) != 0,
+                uop_bgn: r.pull(layout.uop_idx_bits) as u32,
+                uop_end: r.pull(layout.uop_end_bits()) as u32,
+                lp_out: r.pull(layout.loop_bits) as u32,
+                lp_in: r.pull(layout.loop_bits) as u32,
+                acc_f0: r.pull(layout.acc_idx_bits) as u32,
+                acc_f1: r.pull(layout.acc_idx_bits) as u32,
+                inp_f0: r.pull(layout.inp_idx_bits) as u32,
+                inp_f1: r.pull(layout.inp_idx_bits) as u32,
+                wgt_f0: r.pull(layout.wgt_idx_bits) as u32,
+                wgt_f1: r.pull(layout.wgt_idx_bits) as u32,
+            })),
+            Opcode::Alu => Ok(Insn::Alu(AluInsn {
+                deps,
+                reset: r.pull(1) != 0,
+                uop_bgn: r.pull(layout.uop_idx_bits) as u32,
+                uop_end: r.pull(layout.uop_end_bits()) as u32,
+                lp_out: r.pull(layout.loop_bits) as u32,
+                lp_in: r.pull(layout.loop_bits) as u32,
+                dst_f0: r.pull(layout.acc_idx_bits) as u32,
+                dst_f1: r.pull(layout.acc_idx_bits) as u32,
+                src_f0: r.pull(layout.acc_idx_bits) as u32,
+                src_f1: r.pull(layout.acc_idx_bits) as u32,
+                op: AluOp::from_bits(r.pull(layout.alu_op_bits))
+                    .ok_or_else(|| DecodeError { message: "bad alu op".into() })?,
+                use_imm: r.pull(1) != 0,
+                imm: r.pull_signed(layout.imm_bits) as i32,
+            })),
+            Opcode::Finish => Ok(Insn::Finish(deps)),
+        }
+    }
+
+    /// Serialize an instruction stream to bytes (DRAM image format:
+    /// 16 bytes per instruction, little-endian).
+    pub fn stream_to_bytes(insns: &[Insn], layout: &IsaLayout) -> Vec<u8> {
+        let mut bytes = Vec::with_capacity(insns.len() * 16);
+        for insn in insns {
+            bytes.extend_from_slice(&insn.encode(layout).to_le_bytes());
+        }
+        bytes
+    }
+
+    /// Parse an instruction stream from a DRAM image.
+    pub fn stream_from_bytes(bytes: &[u8], layout: &IsaLayout) -> Result<Vec<Insn>, DecodeError> {
+        if bytes.len() % 16 != 0 {
+            return Err(DecodeError {
+                message: format!("stream length {} not a multiple of 16", bytes.len()),
+            });
+        }
+        bytes
+            .chunks_exact(16)
+            .map(|c| {
+                let word = u128::from_le_bytes(c.try_into().unwrap());
+                Insn::decode(word, layout)
+            })
+            .collect()
+    }
+
+    /// One-line disassembly (debug traces, gantt tooltips).
+    pub fn disasm(&self) -> String {
+        match self {
+            Insn::Mem(m) => format!(
+                "{:?} {:?} sram={} dram={} y={} x={} stride={} pad=[{},{},{},{}]@{}",
+                m.opcode,
+                m.buffer,
+                m.sram_base,
+                m.dram_base,
+                m.y_size,
+                m.x_size,
+                m.x_stride,
+                m.y_pad0,
+                m.y_pad1,
+                m.x_pad0,
+                m.x_pad1,
+                m.pad_value
+            ),
+            Insn::Gemm(g) => format!(
+                "GEMM{} uops=[{},{}) loops={}x{} acc=({},{}) inp=({},{}) wgt=({},{})",
+                if g.reset { ".rst" } else { "" },
+                g.uop_bgn,
+                g.uop_end,
+                g.lp_out,
+                g.lp_in,
+                g.acc_f0,
+                g.acc_f1,
+                g.inp_f0,
+                g.inp_f1,
+                g.wgt_f0,
+                g.wgt_f1
+            ),
+            Insn::Alu(a) => format!(
+                "ALU.{:?}{} uops=[{},{}) loops={}x{} dst=({},{}) src=({},{}) imm={}({})",
+                a.op,
+                if a.reset { ".rst" } else { "" },
+                a.uop_bgn,
+                a.uop_end,
+                a.lp_out,
+                a.lp_in,
+                a.dst_f0,
+                a.dst_f1,
+                a.src_f0,
+                a.src_f1,
+                a.imm,
+                if a.use_imm { "imm" } else { "reg" }
+            ),
+            Insn::Finish(_) => "FINISH".to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn layout() -> IsaLayout {
+        presets::default_config().isa_layout()
+    }
+
+    fn sample_mem() -> Insn {
+        Insn::Mem(MemInsn {
+            opcode: Opcode::Load,
+            deps: DepFlags::NONE.pop_next().push_next(),
+            buffer: BufferId::Inp,
+            sram_base: 17,
+            dram_base: 123456,
+            y_size: 14,
+            x_size: 15,
+            x_stride: 56,
+            y_pad0: 1,
+            y_pad1: 1,
+            x_pad0: 1,
+            x_pad1: 1,
+            pad_value: -128,
+        })
+    }
+
+    fn sample_gemm() -> Insn {
+        Insn::Gemm(GemmInsn {
+            deps: DepFlags::NONE.pop_prev(),
+            reset: false,
+            uop_bgn: 3,
+            uop_end: 12,
+            lp_out: 7,
+            lp_in: 9,
+            acc_f0: 14,
+            acc_f1: 1,
+            inp_f0: 14,
+            inp_f1: 0,
+            wgt_f0: 0,
+            wgt_f1: 1,
+        })
+    }
+
+    fn sample_alu() -> Insn {
+        Insn::Alu(AluInsn {
+            deps: DepFlags::NONE.push_next(),
+            reset: false,
+            op: AluOp::Clip,
+            uop_bgn: 0,
+            uop_end: 4,
+            lp_out: 8,
+            lp_in: 2,
+            dst_f0: 16,
+            dst_f1: 1,
+            src_f0: 16,
+            src_f1: 1,
+            use_imm: true,
+            imm: -127,
+        })
+    }
+
+    #[test]
+    fn roundtrip_all_forms() {
+        let l = layout();
+        for insn in [sample_mem(), sample_gemm(), sample_alu(), Insn::Finish(DepFlags::NONE)] {
+            let word = insn.encode(&l);
+            let back = Insn::decode(word, &l).unwrap();
+            assert_eq!(back, insn, "roundtrip failed: {}", insn.disasm());
+        }
+    }
+
+    #[test]
+    fn negative_values_roundtrip() {
+        let l = layout();
+        if let Insn::Mem(mut m) = sample_mem() {
+            m.pad_value = -1;
+            let back = Insn::decode(Insn::Mem(m).encode(&l), &l).unwrap();
+            assert_eq!(back, Insn::Mem(m));
+        }
+        if let Insn::Alu(mut a) = sample_alu() {
+            a.imm = -32768;
+            let back = Insn::decode(Insn::Alu(a).encode(&l), &l).unwrap();
+            assert_eq!(back, Insn::Alu(a));
+        }
+    }
+
+    #[test]
+    fn bad_opcode_rejected() {
+        let l = layout();
+        // opcode 7 is unused
+        assert!(Insn::decode(7u128, &l).is_err());
+    }
+
+    #[test]
+    fn stream_roundtrip() {
+        let l = layout();
+        let insns = vec![sample_mem(), sample_gemm(), sample_alu(), Insn::Finish(DepFlags::NONE)];
+        let bytes = Insn::stream_to_bytes(&insns, &l);
+        assert_eq!(bytes.len(), 64);
+        let back = Insn::stream_from_bytes(&bytes, &l).unwrap();
+        assert_eq!(back, insns);
+    }
+
+    #[test]
+    fn stream_bad_length_rejected() {
+        let l = layout();
+        assert!(Insn::stream_from_bytes(&[0u8; 17], &l).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit")]
+    fn field_overflow_panics() {
+        let l = layout();
+        // acc_depth 2048 -> 11 bits; 4096 doesn't fit.
+        let mut g = match sample_gemm() {
+            Insn::Gemm(g) => g,
+            _ => unreachable!(),
+        };
+        g.acc_f0 = 4096;
+        Insn::Gemm(g).encode(&l);
+    }
+
+    #[test]
+    fn layouts_differ_between_configs() {
+        // The same instruction encodes differently under different
+        // configurations — binaries are config-specific by design.
+        let small = presets::tiny_config().isa_layout();
+        let big = presets::default_config().isa_layout();
+        let insn = sample_gemm();
+        assert_ne!(insn.encode(&small), insn.encode(&big));
+        assert_eq!(Insn::decode(insn.encode(&small), &small).unwrap(), insn);
+    }
+
+    #[test]
+    fn total_ops() {
+        if let Insn::Gemm(g) = sample_gemm() {
+            assert_eq!(g.total_ops(), 7 * 9 * 9);
+        }
+        if let Insn::Alu(a) = sample_alu() {
+            assert_eq!(a.total_ops(), 8 * 2 * 4);
+        }
+    }
+}

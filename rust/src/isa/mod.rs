@@ -1,0 +1,219 @@
+//! VTA instruction set architecture (§II-B).
+//!
+//! Five instructions — LOAD, STORE, GEMM, ALU, FINISH — encoded in a fixed
+//! 128 bits with configuration-dependent field widths, plus micro-ops
+//! (uops). Extensions from the paper relative to upstream VTA:
+//!
+//! * variable field widths driven by [`IsaLayout`](crate::config::IsaLayout),
+//! * LOAD carries an explicit 8-bit pad value (max-pooling support),
+//! * new ALU opcodes: `MUL` (element-wise 8-bit multiply for depthwise
+//!   convolution), `CLIP` (ResNet requantization pattern), `MOV`,
+//! * uop width extended beyond 32 bits when scratchpad indices demand it.
+
+pub mod insn;
+pub mod uop;
+
+pub use insn::{AluInsn, GemmInsn, Insn, MemInsn};
+pub use uop::Uop;
+
+/// Top-level opcodes (3 bits). Values match upstream VTA.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Opcode {
+    Load = 0,
+    Store = 1,
+    Gemm = 2,
+    Finish = 3,
+    Alu = 4,
+}
+
+impl Opcode {
+    pub fn from_bits(v: u64) -> Option<Opcode> {
+        match v {
+            0 => Some(Opcode::Load),
+            1 => Some(Opcode::Store),
+            2 => Some(Opcode::Gemm),
+            3 => Some(Opcode::Finish),
+            4 => Some(Opcode::Alu),
+            _ => None,
+        }
+    }
+}
+
+/// Scratchpad / memory-type selector for LOAD/STORE (3 bits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum BufferId {
+    Uop = 0,
+    Wgt = 1,
+    Inp = 2,
+    Acc = 3,
+    Out = 4,
+    /// 8-bit view of the accumulator: LOAD widens int8 DRAM data into
+    /// int32 accumulator entries. Used to feed residual adds, pooling and
+    /// depthwise convolution (upstream VTA's `ACC_8BIT` memory type).
+    Acc8 = 5,
+}
+
+impl BufferId {
+    pub fn from_bits(v: u64) -> Option<BufferId> {
+        match v {
+            0 => Some(BufferId::Uop),
+            1 => Some(BufferId::Wgt),
+            2 => Some(BufferId::Inp),
+            3 => Some(BufferId::Acc),
+            4 => Some(BufferId::Out),
+            5 => Some(BufferId::Acc8),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [BufferId; 6] = [
+        BufferId::Uop,
+        BufferId::Wgt,
+        BufferId::Inp,
+        BufferId::Acc,
+        BufferId::Out,
+        BufferId::Acc8,
+    ];
+}
+
+/// ALU micro-operations (4-bit field). MIN/MAX/ADD/SHR match upstream
+/// VTA; MUL, CLIP and MOV are the paper's additions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum AluOp {
+    Min = 0,
+    Max = 1,
+    Add = 2,
+    /// Arithmetic shift right by immediate; negative immediate shifts
+    /// left (upstream VTA convention).
+    Shr = 3,
+    /// Element-wise multiply, truncating operands to 8 bits — the new
+    /// instruction enabling depthwise convolution on the ALU (§IV-D3).
+    Mul = 4,
+    /// dst = clamp(dst, -imm, imm) — the new single-instruction form of
+    /// the MIN+MAX requantization pattern common in ResNets.
+    Clip = 5,
+    /// dst = src (or immediate) — used to seed pooling reductions.
+    Mov = 6,
+}
+
+impl AluOp {
+    pub fn from_bits(v: u64) -> Option<AluOp> {
+        match v {
+            0 => Some(AluOp::Min),
+            1 => Some(AluOp::Max),
+            2 => Some(AluOp::Add),
+            3 => Some(AluOp::Shr),
+            4 => Some(AluOp::Mul),
+            5 => Some(AluOp::Clip),
+            6 => Some(AluOp::Mov),
+            _ => None,
+        }
+    }
+
+    /// Whether the op reads a second scratchpad operand when `use_imm`
+    /// is false (everything except pure-immediate forms).
+    pub fn is_binary(&self) -> bool {
+        true
+    }
+}
+
+/// The four dependency-token bits carried by every instruction (§II-A).
+/// `prev`/`next` refer to the neighbouring module in the
+/// load → compute → store chain from the executing module's viewpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct DepFlags {
+    pub pop_prev: bool,
+    pub pop_next: bool,
+    pub push_prev: bool,
+    pub push_next: bool,
+}
+
+impl DepFlags {
+    pub const NONE: DepFlags =
+        DepFlags { pop_prev: false, pop_next: false, push_prev: false, push_next: false };
+
+    pub fn to_bits(self) -> u64 {
+        (self.pop_prev as u64)
+            | (self.pop_next as u64) << 1
+            | (self.push_prev as u64) << 2
+            | (self.push_next as u64) << 3
+    }
+
+    pub fn from_bits(v: u64) -> DepFlags {
+        DepFlags {
+            pop_prev: v & 1 != 0,
+            pop_next: v & 2 != 0,
+            push_prev: v & 4 != 0,
+            push_next: v & 8 != 0,
+        }
+    }
+
+    pub fn pop_prev(mut self) -> Self {
+        self.pop_prev = true;
+        self
+    }
+
+    pub fn pop_next(mut self) -> Self {
+        self.pop_next = true;
+        self
+    }
+
+    pub fn push_prev(mut self) -> Self {
+        self.push_prev = true;
+        self
+    }
+
+    pub fn push_next(mut self) -> Self {
+        self.push_next = true;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opcode_roundtrip() {
+        for op in [Opcode::Load, Opcode::Store, Opcode::Gemm, Opcode::Finish, Opcode::Alu] {
+            assert_eq!(Opcode::from_bits(op as u64), Some(op));
+        }
+        assert_eq!(Opcode::from_bits(7), None);
+    }
+
+    #[test]
+    fn buffer_roundtrip() {
+        for b in BufferId::ALL {
+            assert_eq!(BufferId::from_bits(b as u64), Some(b));
+        }
+        assert_eq!(BufferId::from_bits(6), None);
+    }
+
+    #[test]
+    fn aluop_roundtrip() {
+        for op in [
+            AluOp::Min,
+            AluOp::Max,
+            AluOp::Add,
+            AluOp::Shr,
+            AluOp::Mul,
+            AluOp::Clip,
+            AluOp::Mov,
+        ] {
+            assert_eq!(AluOp::from_bits(op as u64), Some(op));
+        }
+        assert_eq!(AluOp::from_bits(9), None);
+    }
+
+    #[test]
+    fn depflags_bits() {
+        let d = DepFlags::NONE.pop_prev().push_next();
+        assert_eq!(d.to_bits(), 0b1001);
+        assert_eq!(DepFlags::from_bits(0b1001), d);
+        assert_eq!(DepFlags::from_bits(0), DepFlags::NONE);
+        assert_eq!(DepFlags::from_bits(0b1111).to_bits(), 0b1111);
+    }
+}

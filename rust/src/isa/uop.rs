@@ -1,0 +1,124 @@
+//! Micro-operations (§II-B).
+//!
+//! A uop supplies the per-step scratchpad base indices inside a GEMM/ALU
+//! loop nest. GEMM uops carry (acc, inp, wgt); ALU uops reuse the same
+//! storage as (dst, src, _). Upstream VTA packs uops into 32 bits; this
+//! work widens them when larger scratchpads need more index bits
+//! ("Wider uops can support wider fields, allowing larger scratchpads,
+//! but also require additional storage and memory bandwidth").
+
+use crate::config::IsaLayout;
+use crate::util::bitfield::{BitReader, BitWriter};
+
+/// A decoded micro-op. For GEMM the fields are (acc, inp, wgt) indices;
+/// for ALU, `acc` is the destination and `inp` the source (wgt unused).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Uop {
+    pub acc: u32,
+    pub inp: u32,
+    pub wgt: u32,
+}
+
+impl Uop {
+    pub fn gemm(acc: u32, inp: u32, wgt: u32) -> Uop {
+        Uop { acc, inp, wgt }
+    }
+
+    /// ALU uop: destination and source accumulator indices.
+    pub fn alu(dst: u32, src: u32) -> Uop {
+        Uop { acc: dst, inp: src, wgt: 0 }
+    }
+
+    pub fn dst(&self) -> u32 {
+        self.acc
+    }
+
+    pub fn src(&self) -> u32 {
+        self.inp
+    }
+
+    /// Encode into the configuration's uop width. Fields are packed
+    /// little-endian: acc, inp, wgt.
+    pub fn encode(&self, layout: &IsaLayout) -> u64 {
+        let mut w = BitWriter::new();
+        w.push(self.acc as u64, layout.acc_idx_bits)
+            .push(self.inp as u64, layout.inp_idx_bits)
+            .push(self.wgt as u64, layout.wgt_idx_bits);
+        debug_assert!(w.bits_used() <= layout.uop_bits);
+        w.finish() as u64
+    }
+
+    pub fn decode(word: u64, layout: &IsaLayout) -> Uop {
+        let mut r = BitReader::new(word as u128);
+        Uop {
+            acc: r.pull(layout.acc_idx_bits) as u32,
+            inp: r.pull(layout.inp_idx_bits) as u32,
+            wgt: r.pull(layout.wgt_idx_bits) as u32,
+        }
+    }
+
+    /// Serialize a uop sequence to its DRAM image (uop_bytes per entry,
+    /// little-endian).
+    pub fn stream_to_bytes(uops: &[Uop], layout: &IsaLayout) -> Vec<u8> {
+        let ub = layout.uop_bytes();
+        let mut bytes = Vec::with_capacity(uops.len() * ub);
+        for u in uops {
+            bytes.extend_from_slice(&u.encode(layout).to_le_bytes()[..ub]);
+        }
+        bytes
+    }
+
+    pub fn stream_from_bytes(bytes: &[u8], layout: &IsaLayout) -> Vec<Uop> {
+        let ub = layout.uop_bytes();
+        bytes
+            .chunks_exact(ub)
+            .map(|c| {
+                let mut raw = [0u8; 8];
+                raw[..ub].copy_from_slice(c);
+                Uop::decode(u64::from_le_bytes(raw), layout)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn roundtrip_default_layout() {
+        let l = presets::default_config().isa_layout();
+        for u in [Uop::gemm(0, 0, 0), Uop::gemm(2047, 2047, 1023), Uop::alu(100, 7)] {
+            assert_eq!(Uop::decode(u.encode(&l), &l), u);
+        }
+    }
+
+    #[test]
+    fn default_layout_is_32bit_like_upstream() {
+        let l = presets::default_config().isa_layout();
+        assert_eq!(l.uop_bytes(), 4);
+        // Max encodable uop fits in 32 bits.
+        let u = Uop::gemm(2047, 2047, 1023);
+        assert!(u.encode(&l) < (1u64 << 32));
+    }
+
+    #[test]
+    fn stream_roundtrip() {
+        let l = presets::default_config().isa_layout();
+        let uops: Vec<Uop> = (0..17).map(|i| Uop::gemm(i, i * 2 % 2048, i % 1024)).collect();
+        let bytes = Uop::stream_to_bytes(&uops, &l);
+        assert_eq!(bytes.len(), 17 * 4);
+        assert_eq!(Uop::stream_from_bytes(&bytes, &l), uops);
+    }
+
+    #[test]
+    fn wide_uop_roundtrip() {
+        // A big config forces uops beyond 32 bits.
+        let cfg = presets::scaled_config(1, 64, 64, 8, 64);
+        let l = cfg.isa_layout();
+        assert!(l.uop_bits > 32);
+        let u = Uop::gemm(cfg.acc_depth as u32 - 1, cfg.inp_depth as u32 - 1, cfg.wgt_depth as u32 - 1);
+        assert_eq!(Uop::decode(u.encode(&l), &l), u);
+    }
+}

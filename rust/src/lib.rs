@@ -1,0 +1,28 @@
+//! # vta-stack — a highly configurable hardware/software stack for DNN
+//! inference acceleration
+//!
+//! Reproduction of Banerjee et al. (Intel Labs, 2021): the enhanced
+//! TVM/VTA inference stack, built as a three-layer Rust + JAX + Pallas
+//! system. This crate is the Rust layer: the VTA cycle-accurate simulator
+//! (*tsim*), behavioral simulator (*fsim*), the compiler (tiling parameter
+//! search, double buffering, full-network schedules), the JIT runtime, the
+//! analysis tooling (roofline, utilization, area), and a PJRT-based golden
+//! verification path against the JAX/Pallas model compiled AOT to HLO.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured results.
+
+pub mod analysis;
+pub mod compiler;
+pub mod config;
+pub mod exec;
+pub mod floorplan;
+pub mod fsim;
+pub mod isa;
+pub mod mem;
+pub mod repro;
+pub mod runtime;
+pub mod util;
+pub mod workloads;
+pub mod sim;
+pub mod trace;

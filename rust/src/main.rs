@@ -1,0 +1,234 @@
+//! `vta` — the stack's command-line launcher.
+//!
+//! Subcommands:
+//!   run        run a network end-to-end on a simulator target
+//!   repro      regenerate a paper figure/table (pipelining, fig2, fig3,
+//!              fig10, fig11, fig12, fig13, all)
+//!   config     show or save a named configuration as JSON
+//!   floorplan  generate + check the ACC-centric floorplan for a config
+//!   isa        print the derived ISA field layout for a config
+
+use vta::analysis::area;
+use vta::config::{presets, VtaConfig};
+use vta::floorplan;
+use vta::repro;
+use vta::runtime::{Session, SessionOptions, Target};
+use vta::util::cli::Args;
+use vta::util::rng::Pcg32;
+use vta::util::stats;
+use vta::workloads;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: vta <command> [options]\n\
+         \n\
+         commands:\n\
+           run        --net resnet18|resnet34|resnet50|resnet101|mobilenet\n\
+                      [--config default|original|tiny|large|wide32 | --config-file f.json]\n\
+                      [--target tsim|fsim] [--hw 224] [--seed 1] [--no-tps] [--no-dbuf]\n\
+           repro      pipelining|ablation|fig2|fig3|fig10|fig11|fig12|fig13|all [--quick] [--out results]\n\
+           config     show|save --config <name> [--out path.json]\n\
+           floorplan  [--config <name>]\n\
+           isa        [--config <name>]"
+    );
+    std::process::exit(2);
+}
+
+fn load_config(args: &Args) -> VtaConfig {
+    if let Some(path) = args.get("config-file") {
+        return VtaConfig::load(path).unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        });
+    }
+    let name = args.get_or("config", "default");
+    presets::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown config preset '{name}'");
+        std::process::exit(1);
+    })
+}
+
+fn build_net(name: &str, hw: usize, seed: u64) -> vta::compiler::graph::Graph {
+    match name {
+        "resnet18" => workloads::resnet(18, hw, seed),
+        "resnet34" => workloads::resnet(34, hw, seed),
+        "resnet50" => workloads::resnet(50, hw, seed),
+        "resnet101" => workloads::resnet(101, hw, seed),
+        "mobilenet" => workloads::mobilenet(hw, seed),
+        "micro" => workloads::micro_resnet(16, seed),
+        _ => {
+            eprintln!("unknown network '{name}'");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_run(args: &Args) {
+    let cfg = load_config(args);
+    let net = args.get_or("net", "resnet18");
+    let hw = args.get_usize("hw", 224);
+    let seed = args.get_u64("seed", 1);
+    let target = match args.get_or("target", "tsim") {
+        "tsim" => Target::Tsim,
+        "fsim" => Target::Fsim,
+        other => {
+            eprintln!("unknown target '{other}'");
+            std::process::exit(1);
+        }
+    };
+    let opts = SessionOptions {
+        target,
+        trace: args.has_flag("trace"),
+        dbuf_reuse: !args.has_flag("no-dbuf"),
+        tps: !args.has_flag("no-tps"),
+    };
+    let graph = build_net(net, hw, seed);
+    let mut rng = Pcg32::seeded(seed.wrapping_add(100));
+    let input = rng.i8_vec(cfg.batch * graph.input_shape.elems());
+
+    println!("running {net} (input {hw}x{hw}) on {} / {:?}", cfg.tag(), target);
+    let start = std::time::Instant::now();
+    let mut session = Session::new(&cfg, opts);
+    let out = session.run_graph(&graph, &input);
+    let wall = start.elapsed();
+
+    println!(
+        "\n{:<26} {:>5} {:>12} {:>12} {:>12} {:>12} {:>8}",
+        "layer", "kind", "cycles", "macs", "dram rd", "dram wr", "insns"
+    );
+    for l in &session.layer_stats {
+        println!(
+            "{:<26} {:>5} {:>12} {:>12} {:>12} {:>12} {:>8}{}",
+            l.name.split(':').next_back().unwrap_or(&l.name),
+            l.kind,
+            l.cycles,
+            l.macs,
+            l.dram_rd,
+            l.dram_wr,
+            l.insns,
+            if l.on_cpu { "  [cpu]" } else { "" }
+        );
+    }
+    println!(
+        "\ntotal cycles: {} ({} sim wall)",
+        session.cycles(),
+        stats::fmt_ns(wall.as_nanos() as f64)
+    );
+    if let Some(r) = session.perf_report() {
+        println!(
+            "macs: {}  macs/cycle: {:.1}  dram rd/wr: {} / {}",
+            stats::si(r.exec.macs as f64),
+            r.macs_per_cycle(),
+            stats::si(r.vme.bytes_read as f64),
+            stats::si(r.vme.bytes_written as f64),
+        );
+    }
+    println!("scaled area: {:.2}", area::scaled_area(&cfg));
+    println!("output head: {:?}", &out[..out.len().min(8)]);
+}
+
+fn cmd_repro(args: &Args) {
+    let which = match args.positional.get(1) {
+        Some(s) => s.as_str(),
+        None => usage(),
+    };
+    let quick = args.has_flag("quick");
+    let out = args.get_or("out", "results");
+    match which {
+        "pipelining" => {
+            repro::pipelining(quick);
+        }
+        "fig2" => {
+            repro::fig2(quick);
+        }
+        "fig3" | "fig4" => {
+            repro::fig3(quick, out);
+        }
+        "fig10" => {
+            repro::fig10();
+        }
+        "fig11" => {
+            repro::fig11(quick);
+        }
+        "fig12" => {
+            repro::fig12(quick);
+        }
+        "fig13" => {
+            repro::fig13(quick);
+        }
+        "ablation" => {
+            repro::ablation(quick);
+            repro::ablation_compiler(quick);
+        }
+        "all" => {
+            repro::pipelining(quick);
+            repro::ablation(quick);
+            repro::ablation_compiler(quick);
+            repro::fig2(quick);
+            repro::fig3(quick, out);
+            repro::fig10();
+            repro::fig11(quick);
+            repro::fig12(quick);
+            repro::fig13(quick);
+        }
+        _ => usage(),
+    }
+}
+
+fn cmd_config(args: &Args) {
+    let cfg = load_config(args);
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("show") | None => println!("{}", cfg.to_json().to_string_pretty()),
+        Some("save") => {
+            let path = args.get_or("out", "vta_config.json");
+            cfg.save(path).expect("write config");
+            println!("wrote {path}");
+        }
+        _ => usage(),
+    }
+}
+
+fn cmd_floorplan(args: &Args) {
+    let cfg = load_config(args);
+    let fp = floorplan::vta_floorplan(&cfg);
+    match fp.check() {
+        Ok(()) => println!("floorplan checks: OK (utilization {:.1}%)", fp.utilization() * 100.0),
+        Err(e) => println!("floorplan checks: FAILED: {e}"),
+    }
+    print!("{}", fp.ascii(72, 24));
+}
+
+fn cmd_isa(args: &Args) {
+    let cfg = load_config(args);
+    let l = cfg.isa_layout();
+    println!("ISA layout for {}:", cfg.tag());
+    println!("  uop_idx {} (+1 end)  loop {}  imm {}", l.uop_idx_bits, l.loop_bits, l.imm_bits);
+    println!(
+        "  idx bits: acc {}  inp {}  wgt {}  sram {}  dram {}",
+        l.acc_idx_bits, l.inp_idx_bits, l.wgt_idx_bits, l.sram_bits, l.dram_bits
+    );
+    println!(
+        "  mem fields: size {}  pad {}  pad_val {}",
+        l.mem_size_bits, l.pad_bits, l.pad_val_bits
+    );
+    println!(
+        "  instruction bits: GEMM {}  ALU {}  LOAD/STORE {} (of {})",
+        l.gemm_bits(),
+        l.alu_bits(),
+        l.mem_bits(),
+        vta::config::INSN_BITS
+    );
+    println!("  uop width: {} bits ({} bytes)", l.uop_bits, l.uop_bytes());
+}
+
+fn main() {
+    let args = Args::parse_env();
+    match args.subcommand() {
+        Some("run") => cmd_run(&args),
+        Some("repro") => cmd_repro(&args),
+        Some("config") => cmd_config(&args),
+        Some("floorplan") => cmd_floorplan(&args),
+        Some("isa") => cmd_isa(&args),
+        _ => usage(),
+    }
+}

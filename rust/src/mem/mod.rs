@@ -1,0 +1,162 @@
+//! DRAM model shared by both simulator targets and the JIT runtime.
+//!
+//! A flat byte space with a bump allocator. Memory instructions address
+//! DRAM at *tile* granularity (address = `dram_base * tile_bytes`), so
+//! tensor allocations are tile-aligned. Also provides typed read/write
+//! helpers used by the runtime to stage inputs and collect outputs.
+
+/// Default DRAM capacity: 256 MiB — comfortably holds ResNet-101 with
+/// double-buffered activations.
+pub const DEFAULT_DRAM_BYTES: usize = 256 << 20;
+
+#[derive(Debug, Clone)]
+pub struct Dram {
+    bytes: Vec<u8>,
+    next: usize,
+}
+
+/// A DRAM allocation handle (byte address + length).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DramRegion {
+    pub addr: usize,
+    pub len: usize,
+}
+
+impl DramRegion {
+    /// Tile-granular base address for memory instructions.
+    pub fn tile_base(&self, tile_bytes: usize) -> u32 {
+        debug_assert_eq!(self.addr % tile_bytes, 0, "region not tile-aligned");
+        (self.addr / tile_bytes) as u32
+    }
+}
+
+impl Dram {
+    pub fn new(capacity: usize) -> Dram {
+        Dram { bytes: vec![0; capacity], next: 0 }
+    }
+
+    pub fn with_default_capacity() -> Dram {
+        Dram::new(DEFAULT_DRAM_BYTES)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn allocated(&self) -> usize {
+        self.next
+    }
+
+    /// Bump-allocate `len` bytes aligned to `align` (power of two).
+    pub fn alloc(&mut self, len: usize, align: usize) -> DramRegion {
+        assert!(align.is_power_of_two(), "alignment must be a power of two");
+        let addr = (self.next + align - 1) & !(align - 1);
+        assert!(
+            addr + len <= self.bytes.len(),
+            "DRAM exhausted: need {} bytes at {}, capacity {}",
+            len,
+            addr,
+            self.bytes.len()
+        );
+        self.next = addr + len;
+        DramRegion { addr, len }
+    }
+
+    /// Reset the allocator (keeps capacity; zeroes nothing).
+    pub fn reset(&mut self) {
+        self.next = 0;
+    }
+
+    // ---- typed access ----
+
+    pub fn read(&self, addr: usize, len: usize) -> &[u8] {
+        &self.bytes[addr..addr + len]
+    }
+
+    pub fn write(&mut self, addr: usize, data: &[u8]) {
+        self.bytes[addr..addr + data.len()].copy_from_slice(data);
+    }
+
+    pub fn write_i8(&mut self, region: DramRegion, data: &[i8]) {
+        assert!(data.len() <= region.len);
+        let raw: &[u8] = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+        self.write(region.addr, raw);
+    }
+
+    pub fn read_i8(&self, region: DramRegion) -> Vec<i8> {
+        self.read(region.addr, region.len).iter().map(|&b| b as i8).collect()
+    }
+
+    pub fn write_i32(&mut self, region: DramRegion, data: &[i32]) {
+        assert!(data.len() * 4 <= region.len);
+        let mut addr = region.addr;
+        for v in data {
+            self.bytes[addr..addr + 4].copy_from_slice(&v.to_le_bytes());
+            addr += 4;
+        }
+    }
+
+    pub fn read_i32(&self, region: DramRegion) -> Vec<i32> {
+        assert_eq!(region.len % 4, 0);
+        self.read(region.addr, region.len)
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_respects_alignment() {
+        let mut d = Dram::new(1 << 16);
+        let a = d.alloc(10, 64);
+        assert_eq!(a.addr % 64, 0);
+        let b = d.alloc(100, 256);
+        assert_eq!(b.addr % 256, 0);
+        assert!(b.addr >= a.addr + a.len);
+    }
+
+    #[test]
+    #[should_panic(expected = "DRAM exhausted")]
+    fn alloc_exhaustion_panics() {
+        let mut d = Dram::new(128);
+        d.alloc(256, 1);
+    }
+
+    #[test]
+    fn i8_roundtrip() {
+        let mut d = Dram::new(4096);
+        let r = d.alloc(16, 16);
+        let data: Vec<i8> = (-8..8).collect();
+        d.write_i8(r, &data);
+        assert_eq!(d.read_i8(r), data);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let mut d = Dram::new(4096);
+        let r = d.alloc(32, 64);
+        let data = vec![i32::MIN, -1, 0, 1, i32::MAX, 42, -42, 7];
+        d.write_i32(r, &data);
+        assert_eq!(d.read_i32(r), data);
+    }
+
+    #[test]
+    fn tile_base() {
+        let mut d = Dram::new(1 << 16);
+        let r = d.alloc(256, 256);
+        assert_eq!(r.tile_base(256) as usize * 256, r.addr);
+    }
+
+    #[test]
+    fn reset_reclaims() {
+        let mut d = Dram::new(1024);
+        d.alloc(512, 1);
+        d.reset();
+        let r = d.alloc(1024, 1);
+        assert_eq!(r.addr, 0);
+    }
+}

@@ -1,0 +1,397 @@
+//! The software-defined runtime (§II-C): stages tensors into DRAM in the
+//! accelerator layouts, JIT-lowers each graph node to an instruction
+//! stream (one kernel launch per layer, as TVM/VTA does), runs it on the
+//! selected target (*fsim* or *tsim*), and manages CPU fallback for
+//! layers the accelerator does not execute (the channel-light first
+//! convolution) — "thus ensuring that a DNN can be executed on VTA even
+//! if the accelerator doesn't support all layers".
+
+pub mod pjrt;
+
+use crate::compiler::builder::ProgramBuilder;
+use crate::compiler::conv::{lower_conv, ConvBases, ConvParams};
+use crate::compiler::depthwise::{lower_depthwise, DepthwiseParams};
+use crate::compiler::eltwise::{lower_add, lower_pool, PoolParams};
+use crate::compiler::graph::{Graph, Op};
+use crate::compiler::layout::{
+    pack_activation, pack_conv_weights, pack_depthwise_weights, unpack_activation, Shape,
+};
+use crate::compiler::tps::{self, Tiling};
+use crate::config::VtaConfig;
+use crate::exec::ExecCounters;
+use crate::fsim::Fsim;
+use crate::mem::{Dram, DramRegion};
+use crate::sim::{PerfReport, Tsim};
+use crate::util::bitfield::clog2;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// Behavioral simulation (no timing).
+    Fsim,
+    /// Cycle-accurate simulation.
+    Tsim,
+}
+
+#[derive(Debug, Clone)]
+pub struct SessionOptions {
+    pub target: Target,
+    /// Record per-cycle activity intervals (Figs 3/4).
+    pub trace: bool,
+    /// Improved double buffering: eliminate redundant input loads
+    /// (§IV-D2). `false` reproduces the original TVM behaviour.
+    pub dbuf_reuse: bool,
+    /// Use TPS-optimized tilings; `false` uses the fallback schedule
+    /// (the Fig 10 baseline).
+    pub tps: bool,
+}
+
+impl Default for SessionOptions {
+    fn default() -> Self {
+        SessionOptions { target: Target::Tsim, trace: false, dbuf_reuse: true, tps: true }
+    }
+}
+
+/// Per-layer execution record.
+#[derive(Debug, Clone)]
+pub struct LayerStat {
+    pub name: String,
+    pub kind: &'static str,
+    pub cycles: u64,
+    pub insns: usize,
+    pub uops: usize,
+    pub macs: u64,
+    pub dram_rd: u64,
+    pub dram_wr: u64,
+    pub on_cpu: bool,
+}
+
+enum Backend {
+    F(Box<Fsim>),
+    T(Box<Tsim>),
+}
+
+pub struct Session {
+    pub cfg: VtaConfig,
+    pub opts: SessionOptions,
+    pub dram: Dram,
+    backend: Backend,
+    pub layer_stats: Vec<LayerStat>,
+}
+
+impl Session {
+    pub fn new(cfg: &VtaConfig, opts: SessionOptions) -> Session {
+        assert_eq!(
+            cfg.block_in, cfg.block_out,
+            "network execution requires BLOCK_IN == BLOCK_OUT (activation \
+             tiles feed both GEMM operands); the paper's swept configs are square"
+        );
+        let backend = match opts.target {
+            Target::Fsim => Backend::F(Box::new(Fsim::new(cfg))),
+            Target::Tsim => {
+                let mut t = Tsim::new(cfg);
+                if opts.trace {
+                    t.enable_trace();
+                }
+                Backend::T(Box::new(t))
+            }
+        };
+        Session {
+            cfg: cfg.clone(),
+            opts,
+            dram: Dram::with_default_capacity(),
+            backend,
+            layer_stats: Vec::new(),
+        }
+    }
+
+    /// Cumulative execution counters of the active backend.
+    pub fn exec_counters(&self) -> ExecCounters {
+        match &self.backend {
+            Backend::F(f) => f.state.counters,
+            Backend::T(t) => t.core.counters,
+        }
+    }
+
+    /// Total simulated cycles (tsim target only; 0 under fsim).
+    pub fn cycles(&self) -> u64 {
+        match &self.backend {
+            Backend::F(_) => 0,
+            Backend::T(t) => t.cycle(),
+        }
+    }
+
+    pub fn perf_report(&self) -> Option<PerfReport> {
+        match &self.backend {
+            Backend::F(_) => None,
+            Backend::T(t) => Some(t.report()),
+        }
+    }
+
+    pub fn tsim(&self) -> Option<&Tsim> {
+        match &self.backend {
+            Backend::F(_) => None,
+            Backend::T(t) => Some(t),
+        }
+    }
+
+    fn run_program(&mut self, insns: &[crate::isa::Insn], label: &str) -> u64 {
+        match &mut self.backend {
+            Backend::F(f) => {
+                let report = f.run(insns, &mut self.dram);
+                assert!(report.finished, "fsim program did not reach FINISH");
+                0
+            }
+            Backend::T(t) => t.run(insns, &mut self.dram, label),
+        }
+    }
+
+    /// Allocate a DRAM region for a tiled activation of `shape`.
+    fn alloc_activation(&mut self, shape: Shape) -> DramRegion {
+        let block = self.cfg.block_in;
+        let tile = self.cfg.inp_tile_bytes();
+        self.dram.alloc(shape.tiles(block) * tile, tile)
+    }
+
+    /// Run a graph end-to-end. `input` is `[batch][c][h][w]` int8 with
+    /// `batch == cfg.batch`; returns the final node's output in the same
+    /// layout. Per-layer statistics accumulate in `layer_stats`.
+    pub fn run_graph(&mut self, graph: &Graph, input: &[i8]) -> Vec<i8> {
+        let cfg = self.cfg.clone();
+        let block = cfg.block_in;
+        let batch = cfg.batch;
+        let shapes = graph.shapes();
+        assert_eq!(input.len(), batch * graph.input_shape.elems(), "input size mismatch");
+
+        // Stage the input activation.
+        let mut regions: Vec<Option<DramRegion>> = vec![None; graph.nodes.len()];
+        let r0 = self.alloc_activation(graph.input_shape);
+        let tiled = pack_activation(input, batch, graph.input_shape, block);
+        self.dram.write_i8(r0, &tiled);
+        regions[0] = Some(r0);
+
+        for (i, node) in graph.nodes.iter().enumerate().skip(1) {
+            let in_shape = shapes[node.inputs[0]];
+            let out_shape = shapes[i];
+            let out_region = self.alloc_activation(out_shape);
+            regions[i] = Some(out_region);
+            let in_region = regions[node.inputs[0]].expect("producer region");
+            let before = self.exec_counters();
+            let label = format!("{}:{}", graph.name, node.name);
+
+            let (cycles, insns, uops, on_cpu) = match &node.op {
+                Op::Input => unreachable!(),
+                Op::Conv { shift, relu, weights, .. } => {
+                    let spec = graph.conv_spec(i, &shapes);
+                    if spec.c_in < block {
+                        // Channel-light layer: CPU fallback (§IV-E).
+                        self.run_conv_on_cpu(
+                            graph, i, &shapes, weights, *shift, *relu, in_region, out_region,
+                        );
+                        (0, 0, 0, true)
+                    } else {
+                        let n = self.run_conv_on_vta(
+                            &spec, weights, *shift, *relu, in_region, out_region, &label,
+                        );
+                        (n.0, n.1, n.2, false)
+                    }
+                }
+                Op::Dense { shift, relu, weights, .. } => {
+                    let spec = graph.conv_spec(i, &shapes);
+                    let n = self.run_conv_on_vta(
+                        &spec, weights, *shift, *relu, in_region, out_region, &label,
+                    );
+                    (n.0, n.1, n.2, false)
+                }
+                Op::Depthwise { k, stride, pad, shift, relu, weights } => {
+                    let wgt =
+                        pack_depthwise_weights(weights, in_shape.c, *k, *k, batch, block);
+                    let tileb = cfg.acc_tile_elems(); // Acc8 tile bytes
+                    let wr = self.dram.alloc(wgt.len(), tileb);
+                    self.dram.write_i8(wr, &wgt);
+                    let p = DepthwiseParams {
+                        c_tiles: in_shape.c_tiles(block),
+                        h: in_shape.h,
+                        w: in_shape.w,
+                        k: *k,
+                        stride: *stride,
+                        pad: *pad,
+                        shift: *shift,
+                        relu: *relu,
+                    };
+                    let mut b = ProgramBuilder::new(&cfg);
+                    lower_depthwise(
+                        &mut b,
+                        &p,
+                        in_region.tile_base(cfg.acc_tile_elems()),
+                        wr.tile_base(tileb),
+                        out_region.tile_base(cfg.out_tile_bytes()),
+                    );
+                    let prog = b.finish(&label, &mut self.dram);
+                    let c = self.run_program(&prog.insns, &label);
+                    (c, prog.insns.len(), prog.uop_count, false)
+                }
+                Op::MaxPool { k, stride, pad } => {
+                    let p = PoolParams {
+                        c_tiles: in_shape.c_tiles(block),
+                        h: in_shape.h,
+                        w: in_shape.w,
+                        k: *k,
+                        stride: *stride,
+                        pad: *pad,
+                        is_max: true,
+                        shift: 0,
+                    };
+                    self.run_pool(&p, in_region, out_region, &label)
+                }
+                Op::GlobalAvgPool => {
+                    assert_eq!(in_shape.h, in_shape.w, "global pool expects square input");
+                    let p = PoolParams {
+                        c_tiles: in_shape.c_tiles(block),
+                        h: in_shape.h,
+                        w: in_shape.w,
+                        k: in_shape.h,
+                        stride: 1,
+                        pad: 0,
+                        is_max: false,
+                        shift: clog2((in_shape.h * in_shape.w) as u64),
+                    };
+                    self.run_pool(&p, in_region, out_region, &label)
+                }
+                Op::Add { relu } => {
+                    let b_region = regions[node.inputs[1]].expect("skip region");
+                    let mut b = ProgramBuilder::new(&cfg);
+                    lower_add(
+                        &mut b,
+                        out_shape.tiles(block),
+                        in_region.tile_base(cfg.acc_tile_elems()),
+                        b_region.tile_base(cfg.acc_tile_elems()),
+                        out_region.tile_base(cfg.out_tile_bytes()),
+                        *relu,
+                    );
+                    let prog = b.finish(&label, &mut self.dram);
+                    let c = self.run_program(&prog.insns, &label);
+                    (c, prog.insns.len(), prog.uop_count, false)
+                }
+            };
+
+            let after = self.exec_counters();
+            self.layer_stats.push(LayerStat {
+                name: label,
+                kind: node.op.kind(),
+                cycles,
+                insns,
+                uops,
+                macs: after.macs - before.macs,
+                dram_rd: after.load_bytes_total() - before.load_bytes_total(),
+                dram_wr: after.store_bytes - before.store_bytes,
+                on_cpu,
+            });
+        }
+
+        let out_shape = *shapes.last().unwrap();
+        let out_region = regions.last().unwrap().unwrap();
+        let tiled = self.dram.read_i8(out_region);
+        unpack_activation(&tiled, batch, out_shape, block)
+    }
+
+    /// Choose the tiling for a conv per session options.
+    ///
+    /// The *tiling* is always searched under the improved-reuse cost
+    /// model; `dbuf_reuse` then controls only the thread-injection
+    /// behaviour — matching the paper's Fig 11/12 experiment, which
+    /// flips the IR pass while keeping the schedule.
+    pub fn tiling_for(&self, spec: &tps::ConvSpec) -> Tiling {
+        let mut t = if self.opts.tps {
+            tps::search(spec, &self.cfg, true)
+        } else {
+            tps::fallback(spec, &self.cfg)
+        };
+        t.reuse_inp = self.opts.dbuf_reuse;
+        t
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_conv_on_vta(
+        &mut self,
+        spec: &tps::ConvSpec,
+        weights: &[i8],
+        shift: u32,
+        relu: bool,
+        in_region: DramRegion,
+        out_region: DramRegion,
+        label: &str,
+    ) -> (u64, usize, usize) {
+        let cfg = self.cfg.clone();
+        let wgt = pack_conv_weights(
+            weights,
+            spec.c_out,
+            spec.c_in,
+            spec.kh,
+            spec.kw,
+            cfg.block_out,
+            cfg.block_in,
+        );
+        let wr = self.dram.alloc(wgt.len(), cfg.wgt_tile_bytes());
+        self.dram.write_i8(wr, &wgt);
+        let tiling = self.tiling_for(spec);
+        let mut b = ProgramBuilder::new(&cfg);
+        lower_conv(
+            &mut b,
+            &ConvParams { spec: *spec, shift, relu },
+            &tiling,
+            ConvBases {
+                inp: in_region.tile_base(cfg.inp_tile_bytes()),
+                wgt: wr.tile_base(cfg.wgt_tile_bytes()),
+                out: out_region.tile_base(cfg.out_tile_bytes()),
+            },
+        );
+        let prog = b.finish(label, &mut self.dram);
+        let c = self.run_program(&prog.insns, label);
+        (c, prog.insns.len(), prog.uop_count)
+    }
+
+    fn run_pool(
+        &mut self,
+        p: &PoolParams,
+        in_region: DramRegion,
+        out_region: DramRegion,
+        label: &str,
+    ) -> (u64, usize, usize, bool) {
+        let cfg = self.cfg.clone();
+        let mut b = ProgramBuilder::new(&cfg);
+        lower_pool(
+            &mut b,
+            p,
+            in_region.tile_base(cfg.acc_tile_elems()),
+            out_region.tile_base(cfg.out_tile_bytes()),
+        );
+        let prog = b.finish(label, &mut self.dram);
+        let c = self.run_program(&prog.insns, label);
+        (c, prog.insns.len(), prog.uop_count, false)
+    }
+
+    /// CPU fallback: unpack, run the reference op, repack.
+    #[allow(clippy::too_many_arguments)]
+    fn run_conv_on_cpu(
+        &mut self,
+        graph: &Graph,
+        idx: usize,
+        shapes: &[Shape],
+        weights: &[i8],
+        shift: u32,
+        relu: bool,
+        in_region: DramRegion,
+        out_region: DramRegion,
+    ) {
+        let cfg = &self.cfg;
+        let spec = graph.conv_spec(idx, shapes);
+        let in_shape = shapes[graph.nodes[idx].inputs[0]];
+        let out_shape = shapes[idx];
+        let tiled = self.dram.read_i8(in_region);
+        let nchw = unpack_activation(&tiled, cfg.batch, in_shape, cfg.block_in);
+        let out =
+            crate::compiler::cpu_ref::conv2d(&nchw, weights, cfg.batch, &spec, shift, relu);
+        let packed = pack_activation(&out, cfg.batch, out_shape, cfg.block_in);
+        self.dram.write_i8(out_region, &packed);
+    }
+}

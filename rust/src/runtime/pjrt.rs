@@ -1,0 +1,114 @@
+//! PJRT golden-model runtime.
+//!
+//! Loads the AOT-compiled JAX/Pallas golden computations
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and runs
+//! them on the PJRT CPU client via the `xla` crate. This is the
+//! cross-language verification gate: the simulated accelerator's outputs
+//! must match the golden model bit-for-bit. Python is never on this
+//! path — only the HLO text artifact is.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Default artifact directory relative to the crate root.
+pub fn default_artifact_dir() -> PathBuf {
+    // CARGO_MANIFEST_DIR points at the repo root (Cargo.toml location).
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// A PJRT CPU client with a cache of compiled golden executables.
+pub struct Golden {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Golden {
+    /// Create a CPU PJRT client over an artifact directory.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Golden> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Golden { client, exes: HashMap::new(), dir: dir.as_ref().to_path_buf() })
+    }
+
+    pub fn with_default_dir() -> Result<Golden> {
+        Self::new(default_artifact_dir())
+    }
+
+    /// Whether the artifact exists (lets tests skip gracefully when
+    /// `make artifacts` has not been run).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            self.exes.insert(name.to_string(), exe);
+        }
+        Ok(self.exes.get(name).unwrap())
+    }
+
+    /// Run a two-input artifact on int8 tensors, returning the int8
+    /// result (artifacts are lowered with `return_tuple=True`, so the
+    /// output is a 1-tuple).
+    pub fn run_i8(
+        &mut self,
+        name: &str,
+        x: &[i8],
+        x_dims: &[i64],
+        w: &[i8],
+        w_dims: &[i64],
+    ) -> Result<Vec<i8>> {
+        let result = self.run_raw(name, x, x_dims, w, w_dims)?;
+        result.to_vec::<i8>().context("reading i8 output")
+    }
+
+    /// Same, but for artifacts producing int32 (the raw GEMM kernel).
+    pub fn run_i8_to_i32(
+        &mut self,
+        name: &str,
+        x: &[i8],
+        x_dims: &[i64],
+        w: &[i8],
+        w_dims: &[i64],
+    ) -> Result<Vec<i32>> {
+        let result = self.run_raw(name, x, x_dims, w, w_dims)?;
+        result.to_vec::<i32>().context("reading i32 output")
+    }
+
+    fn run_raw(
+        &mut self,
+        name: &str,
+        x: &[i8],
+        x_dims: &[i64],
+        w: &[i8],
+        w_dims: &[i64],
+    ) -> Result<xla::Literal> {
+        let xl = i8_literal(x, x_dims).context("creating x literal")?;
+        let wl = i8_literal(w, w_dims).context("creating w literal")?;
+        let exe = self.load(name)?;
+        let out = exe.execute::<xla::Literal>(&[xl, wl]).context("executing golden")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        out.to_tuple1().context("unwrapping 1-tuple")
+    }
+}
+
+/// Build an s8 literal from raw int8 data (the crate's `NativeType`
+/// constructors do not cover i8; the untyped-data path does).
+fn i8_literal(data: &[i8], dims: &[i64]) -> Result<xla::Literal> {
+    let dims_usize: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+    let raw: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, &dims_usize, raw)
+        .context("creating s8 literal")
+}

@@ -1,0 +1,118 @@
+//! Per-module activity recording — the data behind the paper's process
+//! utilization visualizations (Figs 3 and 4). Each module logs busy
+//! intervals tagged with what it was doing; the gantt renderer in
+//! `analysis::gantt` turns these into the load/compute/store bars with
+//! GEMM (red) vs ALU (green) distinction.
+
+/// The three loosely-coupled processes (plus fetch, which the paper's
+/// charts omit but which we record anyway).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Module {
+    Fetch,
+    Load,
+    Compute,
+    Store,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Activity {
+    /// DMA transfer from DRAM into INP/WGT scratchpads.
+    LoadDma,
+    /// Padding fill overlapped with DMA (Fig 5).
+    PadFill,
+    /// GEMM execution (red in Fig 3).
+    Gemm,
+    /// ALU execution (green in Fig 3).
+    Alu,
+    /// Compute-side loads (UOP / ACC buffers).
+    LoadUop,
+    LoadAcc,
+    /// Store DMA to DRAM.
+    StoreDma,
+    /// Instruction fetch DMA.
+    FetchDma,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Interval {
+    pub module: Module,
+    pub activity: Activity,
+    pub start: u64,
+    pub end: u64, // exclusive
+}
+
+#[derive(Debug, Default)]
+pub struct ActivityTrace {
+    pub enabled: bool,
+    pub intervals: Vec<Interval>,
+    /// Layer boundary markers (the red `vcr_finish` ticks of Fig 4).
+    pub markers: Vec<(u64, String)>,
+}
+
+impl ActivityTrace {
+    pub fn new(enabled: bool) -> ActivityTrace {
+        ActivityTrace { enabled, ..Default::default() }
+    }
+
+    pub fn record(&mut self, module: Module, activity: Activity, start: u64, end: u64) {
+        if self.enabled && end > start {
+            self.intervals.push(Interval { module, activity, start, end });
+        }
+    }
+
+    pub fn mark(&mut self, cycle: u64, label: &str) {
+        if self.enabled {
+            self.markers.push((cycle, label.to_string()));
+        }
+    }
+
+    /// Total busy cycles for a module (intervals may not overlap within
+    /// one module by construction).
+    pub fn busy_cycles(&self, module: Module) -> u64 {
+        self.intervals
+            .iter()
+            .filter(|iv| iv.module == module)
+            .map(|iv| iv.end - iv.start)
+            .sum()
+    }
+
+    pub fn busy_cycles_kind(&self, activity: Activity) -> u64 {
+        self.intervals
+            .iter()
+            .filter(|iv| iv.activity == activity)
+            .map(|iv| iv.end - iv.start)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let mut t = ActivityTrace::new(false);
+        t.record(Module::Load, Activity::LoadDma, 0, 10);
+        t.mark(5, "layer");
+        assert!(t.intervals.is_empty());
+        assert!(t.markers.is_empty());
+    }
+
+    #[test]
+    fn busy_accounting() {
+        let mut t = ActivityTrace::new(true);
+        t.record(Module::Compute, Activity::Gemm, 0, 10);
+        t.record(Module::Compute, Activity::Alu, 10, 14);
+        t.record(Module::Load, Activity::LoadDma, 3, 9);
+        assert_eq!(t.busy_cycles(Module::Compute), 14);
+        assert_eq!(t.busy_cycles(Module::Load), 6);
+        assert_eq!(t.busy_cycles_kind(Activity::Gemm), 10);
+    }
+
+    #[test]
+    fn empty_intervals_dropped() {
+        let mut t = ActivityTrace::new(true);
+        t.record(Module::Load, Activity::LoadDma, 5, 5);
+        assert!(t.intervals.is_empty());
+    }
+}

@@ -1,0 +1,129 @@
+//! Command and dependency-token queues (§II-A).
+//!
+//! The four dependency queues (LD→CMP, CMP→LD, CMP→ST, ST→CMP) carry
+//! single-bit tokens; `pop*` dependency flags block instruction start
+//! until a token is present, `push*` flags deposit a token at instruction
+//! completion. Bounded capacity matters: a full token queue back-pressures
+//! the producer, and mis-set flags can deadlock the machine — which the
+//! simulator detects and reports (§II-A: "Setting extraneous dependency
+//! bits can result in longer cycle counts or even deadlock").
+
+use crate::isa::Insn;
+use std::collections::VecDeque;
+
+/// A bounded single-bit token queue.
+#[derive(Debug, Clone)]
+pub struct TokenQueue {
+    pub name: &'static str,
+    count: usize,
+    capacity: usize,
+    pub pushes: u64,
+    pub pops: u64,
+}
+
+impl TokenQueue {
+    pub fn new(name: &'static str, capacity: usize) -> TokenQueue {
+        TokenQueue { name, count: 0, capacity, pushes: 0, pops: 0 }
+    }
+
+    pub fn try_pop(&mut self) -> bool {
+        if self.count > 0 {
+            self.count -= 1;
+            self.pops += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn try_push(&mut self) -> bool {
+        if self.count < self.capacity {
+            self.count += 1;
+            self.pushes += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.count
+    }
+}
+
+/// A bounded command queue between fetch and an execution module.
+#[derive(Debug, Clone)]
+pub struct CmdQueue {
+    pub name: &'static str,
+    items: VecDeque<Insn>,
+    capacity: usize,
+}
+
+impl CmdQueue {
+    pub fn new(name: &'static str, capacity: usize) -> CmdQueue {
+        CmdQueue { name, items: VecDeque::new(), capacity }
+    }
+
+    pub fn has_space(&self) -> bool {
+        self.items.len() < self.capacity
+    }
+
+    pub fn push(&mut self, insn: Insn) {
+        assert!(self.has_space(), "cmd queue {} overflow", self.name);
+        self.items.push_back(insn);
+    }
+
+    pub fn front(&self) -> Option<&Insn> {
+        self.items.front()
+    }
+
+    pub fn pop(&mut self) -> Option<Insn> {
+        self.items.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::DepFlags;
+
+    #[test]
+    fn token_queue_bounded() {
+        let mut q = TokenQueue::new("t", 2);
+        assert!(!q.try_pop());
+        assert!(q.try_push());
+        assert!(q.try_push());
+        assert!(!q.try_push(), "capacity reached");
+        assert!(q.try_pop());
+        assert_eq!(q.tokens(), 1);
+        assert_eq!(q.pushes, 2);
+        assert_eq!(q.pops, 1);
+    }
+
+    #[test]
+    fn cmd_queue_fifo() {
+        let mut q = CmdQueue::new("c", 2);
+        q.push(Insn::Finish(DepFlags::NONE));
+        q.push(Insn::Finish(DepFlags::NONE.pop_prev()));
+        assert!(!q.has_space());
+        let first = q.pop().unwrap();
+        assert_eq!(first.deps(), DepFlags::NONE);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn cmd_queue_overflow_panics() {
+        let mut q = CmdQueue::new("c", 1);
+        q.push(Insn::Finish(DepFlags::NONE));
+        q.push(Insn::Finish(DepFlags::NONE));
+    }
+}

@@ -1,0 +1,214 @@
+//! Criterion-style micro/macro benchmark harness (criterion itself is not
+//! available in the offline vendor set). Provides warmup, adaptive
+//! iteration counts, and mean/median/stddev reporting. `cargo bench`
+//! targets use `harness = false` and drive this directly.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    /// Optional throughput denominator (e.g. simulated cycles per call)
+    /// set via `Bencher::throughput`.
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let mut line = format!(
+            "{:<44} {:>12}/iter  median {:>12}  sd {:>10}  ({} iters)",
+            self.name,
+            stats::fmt_ns(self.mean_ns),
+            stats::fmt_ns(self.median_ns),
+            stats::fmt_ns(self.stddev_ns),
+            self.iters,
+        );
+        if let Some((units, label)) = self.throughput {
+            let per_sec = units / (self.mean_ns / 1e9);
+            line.push_str(&format!("  [{} {label}/s]", stats::si(per_sec)));
+        }
+        line
+    }
+}
+
+pub struct Bench {
+    /// Minimum measurement time per benchmark.
+    pub measure_time: Duration,
+    pub warmup_time: Duration,
+    /// Cap on total iterations (protects multi-second macro benches).
+    pub max_iters: u64,
+    pub results: Vec<BenchResult>,
+    filter: Option<String>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            measure_time: Duration::from_millis(700),
+            warmup_time: Duration::from_millis(200),
+            max_iters: 100_000_000,
+            results: Vec::new(),
+            filter: None,
+        }
+    }
+}
+
+impl Bench {
+    /// Standard constructor honoring a `--bench <filter>`-style argv filter
+    /// (cargo bench passes the filter as a bare positional).
+    pub fn from_env() -> Self {
+        let mut b = Bench::default();
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        // cargo bench passes `--bench`; any other non-flag positional is a
+        // name filter.
+        b.filter = args.iter().find(|a| !a.starts_with('-')).cloned();
+        if args.iter().any(|a| a == "--quick") {
+            b.measure_time = Duration::from_millis(120);
+            b.warmup_time = Duration::from_millis(30);
+        }
+        b
+    }
+
+    fn matches(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => name.contains(f.as_str()),
+            None => true,
+        }
+    }
+
+    /// Benchmark a closure. The closure's return value is black-boxed to
+    /// keep the optimizer honest.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, f: F) {
+        self.bench_throughput(name, None, f)
+    }
+
+    /// Benchmark with a throughput annotation, e.g.
+    /// `(cycles_per_call as f64, "sim-cycles")`.
+    pub fn bench_throughput<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        throughput: Option<(f64, &'static str)>,
+        mut f: F,
+    ) {
+        if !self.matches(name) {
+            return;
+        }
+        // Warmup and calibration: how many iters fit in the warmup window?
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.warmup_time || warm_iters == 0 {
+            black_box(f());
+            warm_iters += 1;
+            if warm_iters >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = self.warmup_time.as_secs_f64() / warm_iters as f64;
+        // Target ~30 samples of batched iterations within measure_time.
+        let samples = 30u64;
+        let batch = ((self.measure_time.as_secs_f64() / samples as f64 / per_iter).ceil()
+            as u64)
+            .clamp(1, self.max_iters);
+
+        let mut sample_ns: Vec<f64> = Vec::with_capacity(samples as usize);
+        let mut total_iters = 0u64;
+        let measure_start = Instant::now();
+        for _ in 0..samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            sample_ns.push(t.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+            if measure_start.elapsed() > self.measure_time * 4 {
+                break; // macro bench taking too long; stop early
+            }
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: stats::mean(&sample_ns),
+            median_ns: stats::median(&sample_ns),
+            stddev_ns: stats::stddev(&sample_ns),
+            min_ns: sample_ns.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_ns: sample_ns.iter().cloned().fold(0.0, f64::max),
+            throughput,
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+    }
+
+    /// Run a one-shot macro measurement (no repetition) for multi-second
+    /// end-to-end runs where repetition is impractical.
+    pub fn once<T, F: FnOnce() -> T>(&mut self, name: &str, f: F) -> Option<T> {
+        if !self.matches(name) {
+            return None;
+        }
+        let t = Instant::now();
+        let out = black_box(f());
+        let ns = t.elapsed().as_nanos() as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            mean_ns: ns,
+            median_ns: ns,
+            stddev_ns: 0.0,
+            min_ns: ns,
+            max_ns: ns,
+            throughput: None,
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        Some(out)
+    }
+}
+
+/// Optimization barrier (stable-Rust `std::hint::black_box`).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(5),
+            ..Bench::default()
+        };
+        let mut acc = 0u64;
+        b.bench("noop-sum", || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].mean_ns > 0.0);
+        assert!(b.results[0].iters > 0);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut b = Bench::default();
+        b.filter = Some("match-me".into());
+        b.bench("other", || 1);
+        assert!(b.results.is_empty());
+    }
+
+    #[test]
+    fn once_returns_value() {
+        let mut b = Bench::default();
+        let v = b.once("one-shot", || 42);
+        assert_eq!(v, Some(42));
+        assert_eq!(b.results[0].iters, 1);
+    }
+}

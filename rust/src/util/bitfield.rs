@@ -1,0 +1,182 @@
+//! Bit-packing helpers for the variable-width ISA encoding (§II-B).
+//!
+//! VTA instructions are a fixed 128 bits with *configuration-dependent*
+//! field widths; uops are a configurable multiple of 8 bits. `BitWriter`
+//! and `BitReader` pack/unpack little-endian bit streams over `u128`,
+//! which covers both.
+
+/// Sequential little-endian bit writer into a `u128`.
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    value: u128,
+    pos: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append `width` bits of `v` (must fit). Panics on overflow of the
+    /// value or the 128-bit budget — these are *compiler* bugs, matching
+    /// the paper's "compile-time checks ... need to be implemented".
+    pub fn push(&mut self, v: u64, width: u32) -> &mut Self {
+        assert!(width <= 64, "field width {width} > 64");
+        assert!(
+            width == 64 || v < (1u64 << width),
+            "value {v} does not fit in {width} bits"
+        );
+        assert!(
+            self.pos + width <= 128,
+            "instruction overflows 128 bits at bit {}",
+            self.pos
+        );
+        self.value |= (v as u128) << self.pos;
+        self.pos += width;
+        self
+    }
+
+    /// Append a signed value in two's complement over `width` bits.
+    pub fn push_signed(&mut self, v: i64, width: u32) -> &mut Self {
+        assert!(width >= 1 && width <= 64);
+        let lo = -(1i64 << (width - 1));
+        let hi = (1i64 << (width - 1)) - 1;
+        assert!(v >= lo && v <= hi, "signed value {v} does not fit in {width} bits");
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        self.push((v as u64) & mask, width)
+    }
+
+    pub fn bits_used(&self) -> u32 {
+        self.pos
+    }
+
+    pub fn finish(&self) -> u128 {
+        self.value
+    }
+}
+
+/// Sequential little-endian bit reader from a `u128`.
+#[derive(Debug, Clone)]
+pub struct BitReader {
+    value: u128,
+    pos: u32,
+}
+
+impl BitReader {
+    pub fn new(value: u128) -> Self {
+        BitReader { value, pos: 0 }
+    }
+
+    pub fn pull(&mut self, width: u32) -> u64 {
+        assert!(width <= 64);
+        assert!(self.pos + width <= 128, "read past 128 bits");
+        let mask: u128 = if width == 128 { u128::MAX } else { (1u128 << width) - 1 };
+        let v = ((self.value >> self.pos) & mask) as u64;
+        self.pos += width;
+        v
+    }
+
+    pub fn pull_signed(&mut self, width: u32) -> i64 {
+        let raw = self.pull(width);
+        let sign_bit = 1u64 << (width - 1);
+        if raw & sign_bit != 0 {
+            (raw as i64) - (1i64 << width)
+        } else {
+            raw as i64
+        }
+    }
+
+    pub fn bits_read(&self) -> u32 {
+        self.pos
+    }
+}
+
+/// Number of bits needed to address `n` distinct values (`ceil(log2 n)`,
+/// minimum 1). This is how scratchpad depths become ISA field widths.
+pub fn addr_bits(n: u64) -> u32 {
+    if n <= 1 {
+        1
+    } else {
+        64 - (n - 1).leading_zeros()
+    }
+}
+
+/// `ceil(log2 n)` for sizes (0 for n<=1).
+pub fn clog2(n: u64) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        64 - (n - 1).leading_zeros()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_fields() {
+        let mut w = BitWriter::new();
+        w.push(0b101, 3).push(0xff, 8).push(1, 1).push(12345, 20);
+        let mut r = BitReader::new(w.finish());
+        assert_eq!(r.pull(3), 0b101);
+        assert_eq!(r.pull(8), 0xff);
+        assert_eq!(r.pull(1), 1);
+        assert_eq!(r.pull(20), 12345);
+    }
+
+    #[test]
+    fn signed_roundtrip() {
+        for v in [-8i64, -1, 0, 1, 7] {
+            let mut w = BitWriter::new();
+            w.push_signed(v, 4);
+            let mut r = BitReader::new(w.finish());
+            assert_eq!(r.pull_signed(4), v, "width 4 value {v}");
+        }
+        let mut w = BitWriter::new();
+        w.push_signed(-32768, 16).push_signed(32767, 16);
+        let mut r = BitReader::new(w.finish());
+        assert_eq!(r.pull_signed(16), -32768);
+        assert_eq!(r.pull_signed(16), 32767);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit")]
+    fn overflow_value_panics() {
+        BitWriter::new().push(16, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows 128 bits")]
+    fn overflow_budget_panics() {
+        let mut w = BitWriter::new();
+        w.push(0, 64).push(0, 64).push(1, 1);
+    }
+
+    #[test]
+    fn full_128_bits_ok() {
+        let mut w = BitWriter::new();
+        w.push(u64::MAX, 64).push(u64::MAX, 64);
+        assert_eq!(w.bits_used(), 128);
+        let mut r = BitReader::new(w.finish());
+        assert_eq!(r.pull(64), u64::MAX);
+        assert_eq!(r.pull(64), u64::MAX);
+    }
+
+    #[test]
+    fn addr_bits_values() {
+        assert_eq!(addr_bits(1), 1);
+        assert_eq!(addr_bits(2), 1);
+        assert_eq!(addr_bits(3), 2);
+        assert_eq!(addr_bits(1024), 10);
+        assert_eq!(addr_bits(1025), 11);
+    }
+
+    #[test]
+    fn clog2_values() {
+        assert_eq!(clog2(1), 0);
+        assert_eq!(clog2(2), 1);
+        assert_eq!(clog2(16), 4);
+        assert_eq!(clog2(17), 5);
+    }
+}

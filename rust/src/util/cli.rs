@@ -1,0 +1,172 @@
+//! Tiny CLI argument parser (no external crates available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands. Used by the `vta` binary and the example/bench drivers.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Declared option names (for typo detection); empty = accept anything.
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — `argv[0]` must already
+    /// be stripped.
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest is positional.
+                    out.positional.extend(iter.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn parse_env() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    /// First positional argument, typically the subcommand.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse::<usize>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| {
+                v.parse::<u64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    /// Declare the full set of legal option/flag names; returns an error
+    /// message listing unknown ones (typo protection for experiment
+    /// drivers where a silently ignored flag would invalidate a run).
+    pub fn check_known(&mut self, names: &[&str]) -> Result<(), String> {
+        self.known = names.iter().map(|s| s.to_string()).collect();
+        let mut unknown: Vec<&String> = Vec::new();
+        for k in self.options.keys() {
+            if !self.known.contains(k) {
+                unknown.push(k);
+            }
+        }
+        for f in &self.flags {
+            if !self.known.contains(f) {
+                unknown.push(f);
+            }
+        }
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "unknown option(s): {} (known: {})",
+                unknown.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(", "),
+                names.join(", ")
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse_from(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_subcommand() {
+        let a = parse(&["run", "input.json"]);
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.positional[1], "input.json");
+    }
+
+    #[test]
+    fn options_both_styles() {
+        let a = parse(&["--cfg", "default.json", "--steps=100"]);
+        assert_eq!(a.get("cfg"), Some("default.json"));
+        assert_eq!(a.get_usize("steps", 0), 100);
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse(&["--verbose", "--out", "x.txt", "--quiet"]);
+        assert!(a.has_flag("verbose"));
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.get("out"), Some("x.txt"));
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["--a", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.get("a"), Some("1"));
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn unknown_detection() {
+        let mut a = parse(&["--cfg", "x", "--tyop", "y"]);
+        let err = a.check_known(&["cfg"]).unwrap_err();
+        assert!(err.contains("tyop"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_f64("x", 1.5), 1.5);
+    }
+}

@@ -1,0 +1,11 @@
+//! Self-contained substrate utilities (no external crates are reachable
+//! offline, so JSON, CLI parsing, PRNG, stats, benching and property
+//! testing are implemented here from scratch).
+
+pub mod bench;
+pub mod bitfield;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

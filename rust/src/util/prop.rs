@@ -1,0 +1,267 @@
+//! Mini property-testing framework (proptest is not in the offline vendor
+//! set). Provides seeded random case generation, a configurable case
+//! count, and greedy input shrinking for integer-vector-shaped cases.
+//!
+//! Usage (`no_run`: doctest executables can't resolve the XLA rpath):
+//! ```no_run
+//! use vta::util::prop::{Prop, Gen};
+//! Prop::new("add-commutes").cases(256).run(|g| {
+//!     let a = g.i64(-1000, 1000);
+//!     let b = g.i64(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Pcg32;
+
+/// Per-case generator handed to the property closure. Records every draw
+/// so failing cases can be replayed and shrunk.
+pub struct Gen {
+    rng: Pcg32,
+    /// Log of (lo, hi, value) integer draws for shrink replay.
+    draws: Vec<(i64, i64, i64)>,
+    /// When replaying a shrunk candidate, values come from here instead of
+    /// the RNG.
+    replay: Option<Vec<i64>>,
+    cursor: usize,
+}
+
+impl Gen {
+    fn fresh(seed: u64) -> Gen {
+        Gen { rng: Pcg32::seeded(seed), draws: Vec::new(), replay: None, cursor: 0 }
+    }
+
+    fn replaying(values: Vec<i64>) -> Gen {
+        Gen {
+            rng: Pcg32::seeded(0),
+            draws: Vec::new(),
+            replay: Some(values),
+            cursor: 0,
+        }
+    }
+
+    /// Draw an integer in `[lo, hi]` — the primitive all other generators
+    /// build on.
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi, "empty range");
+        let v = if let Some(replay) = &self.replay {
+            let raw = replay.get(self.cursor).copied().unwrap_or(lo);
+            self.cursor += 1;
+            raw.clamp(lo, hi)
+        } else {
+            self.rng.range_i64(lo, hi)
+        };
+        self.draws.push((lo, hi, v));
+        v
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.i64(lo as i64, hi as i64) as usize
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.i64(0, 1) == 1
+    }
+
+    pub fn i8(&mut self) -> i8 {
+        self.i64(i8::MIN as i64, i8::MAX as i64) as i8
+    }
+
+    /// Power-of-two in `[2^lo_log, 2^hi_log]` — ubiquitous in VTA configs.
+    pub fn pow2(&mut self, lo_log: u32, hi_log: u32) -> usize {
+        1usize << self.i64(lo_log as i64, hi_log as i64)
+    }
+
+    pub fn vec_i8(&mut self, len: usize) -> Vec<i8> {
+        (0..len).map(|_| self.i8()).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize(0, items.len() - 1)]
+    }
+}
+
+pub struct Prop {
+    name: String,
+    cases: usize,
+    seed: u64,
+    max_shrink_steps: usize,
+}
+
+impl Prop {
+    pub fn new(name: &str) -> Prop {
+        // VTA_PROP_CASES lets CI scale effort without code changes.
+        let cases = std::env::var("VTA_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(128);
+        Prop { name: name.to_string(), cases, seed: 0x5eed, max_shrink_steps: 400 }
+    }
+
+    pub fn cases(mut self, n: usize) -> Prop {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Prop {
+        self.seed = seed;
+        self
+    }
+
+    /// Run the property over `cases` random inputs; on failure, shrink the
+    /// recorded draw vector greedily (each draw toward its lower bound,
+    /// then halving) and panic with the minimal reproduction.
+    pub fn run<F>(self, mut prop: F)
+    where
+        F: FnMut(&mut Gen) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let case_seed = self.seed ^ (case as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            let mut g = Gen::fresh(case_seed);
+            let outcome = prop(&mut g);
+            if let Err(msg) = outcome {
+                let draws = g.draws.clone();
+                let (min_draws, min_msg) =
+                    self.shrink(draws, msg, &mut prop);
+                panic!(
+                    "property '{}' failed (case {case}, seed {case_seed:#x}): {}\n  minimal draws: {:?}",
+                    self.name, min_msg,
+                    min_draws.iter().map(|(_, _, v)| *v).collect::<Vec<_>>()
+                );
+            }
+        }
+    }
+
+    fn shrink<F>(
+        &self,
+        mut draws: Vec<(i64, i64, i64)>,
+        mut msg: String,
+        prop: &mut F,
+    ) -> (Vec<(i64, i64, i64)>, String)
+    where
+        F: FnMut(&mut Gen) -> Result<(), String>,
+    {
+        let mut steps = 0;
+        let mut progress = true;
+        while progress && steps < self.max_shrink_steps {
+            progress = false;
+            for i in 0..draws.len() {
+                let (lo, _hi, v) = draws[i];
+                if v == lo {
+                    continue;
+                }
+                // Candidate values, most aggressive first.
+                for cand in [lo, lo + (v - lo) / 2, v - 1] {
+                    if cand == v {
+                        continue;
+                    }
+                    let mut candidate = draws.clone();
+                    candidate[i].2 = cand;
+                    let values: Vec<i64> = candidate.iter().map(|d| d.2).collect();
+                    let mut g = Gen::replaying(values);
+                    steps += 1;
+                    if let Err(new_msg) = prop(&mut g) {
+                        // still failing — keep the smaller case (use the
+                        // replay-recorded draws, which may differ in length)
+                        draws = g.draws.clone();
+                        msg = new_msg;
+                        progress = true;
+                        break;
+                    }
+                    if steps >= self.max_shrink_steps {
+                        break;
+                    }
+                }
+                if steps >= self.max_shrink_steps {
+                    break;
+                }
+            }
+        }
+        (draws, msg)
+    }
+}
+
+/// Assertion helper returning `Err` instead of panicking, so the runner
+/// can shrink.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Equality assertion variant of [`prop_assert!`].
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        Prop::new("count").cases(50).run(|g| {
+            let _ = g.i64(0, 10);
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics() {
+        Prop::new("fails").cases(50).run(|g| {
+            let v = g.i64(0, 100);
+            if v >= 10 {
+                Err(format!("v={v} too big"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_minimizes() {
+        // Catch the panic and confirm the counterexample shrank to the
+        // boundary (v == 10).
+        let result = std::panic::catch_unwind(|| {
+            Prop::new("shrinks").cases(50).run(|g| {
+                let v = g.i64(0, 1000);
+                if v >= 10 {
+                    Err("too big".into())
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("minimal draws: [10]"), "got: {msg}");
+    }
+
+    #[test]
+    fn pow2_in_bounds() {
+        Prop::new("pow2").cases(64).run(|g| {
+            let v = g.pow2(0, 10);
+            prop_assert!(v.is_power_of_two() && v <= 1024, "bad pow2 {v}");
+            Ok(())
+        });
+    }
+}

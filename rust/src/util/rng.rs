@@ -1,0 +1,180 @@
+//! Deterministic PRNG (PCG32) used everywhere randomness is needed:
+//! synthetic int8 weights/activations, property-test case generation, and
+//! workload sampling. Seeded explicitly so every experiment in
+//! EXPERIMENTS.md is exactly reproducible.
+
+/// PCG-XSH-RR 64/32 — small, fast, and statistically solid for test-data
+/// generation. Not cryptographic (doesn't need to be).
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience constructor with the default stream.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6364136223846793005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, bound)` via Lemire's multiply-shift with rejection.
+    pub fn next_below(&mut self, bound: u32) -> u32 {
+        assert!(bound > 0, "next_below(0)");
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u32();
+            let m = (r as u64) * (bound as u64);
+            if (m as u32) >= threshold {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Uniform in the inclusive range `[lo, hi]`.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        if span == 0 {
+            // full u64 range
+            return self.next_u64() as i64;
+        }
+        lo + (self.next_u64() % span) as i64
+    }
+
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_i64(lo as i64, hi as i64) as usize
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u32() & 1 == 1
+    }
+
+    /// Synthetic int8 tensor data. Values are kept in a sub-range by
+    /// default (`[-8, 8)`) so deep int32 accumulations stay far from
+    /// overflow — matching how quantized models keep activations small.
+    pub fn i8_vec(&mut self, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (self.next_below(16) as i64 - 8) as i8).collect()
+    }
+
+    /// Full-range int8 data for stress tests.
+    pub fn i8_vec_full(&mut self, n: usize) -> Vec<i8> {
+        (0..n).map(|_| self.next_u32() as i8).collect()
+    }
+
+    pub fn i32_vec(&mut self, n: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..n).map(|_| self.range_i64(lo as i64, hi as i64) as i32).collect()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.next_below(i as u32 + 1) as usize;
+            items.swap(i, j);
+        }
+    }
+
+    /// Pick one element by reference.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.next_below(items.len() as u32) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Pcg32::seeded(7);
+        let mut b = Pcg32::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let a: Vec<u32> = (0..8).map(|_| 0).collect();
+        let mut r1 = Pcg32::seeded(1);
+        let mut r2 = Pcg32::seeded(2);
+        let s1: Vec<u32> = a.iter().map(|_| r1.next_u32()).collect();
+        let s2: Vec<u32> = a.iter().map(|_| r2.next_u32()).collect();
+        assert_ne!(s1, s2);
+    }
+
+    #[test]
+    fn next_below_in_range() {
+        let mut r = Pcg32::seeded(3);
+        for bound in [1u32, 2, 3, 7, 100, 1 << 20] {
+            for _ in 0..200 {
+                assert!(r.next_below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn range_inclusive_hits_endpoints() {
+        let mut r = Pcg32::seeded(4);
+        let mut saw_lo = false;
+        let mut saw_hi = false;
+        for _ in 0..1000 {
+            match r.range_i64(-2, 2) {
+                -2 => saw_lo = true,
+                2 => saw_hi = true,
+                v => assert!((-2..=2).contains(&v)),
+            }
+        }
+        assert!(saw_lo && saw_hi);
+    }
+
+    #[test]
+    fn i8_vec_bounded() {
+        let mut r = Pcg32::seeded(5);
+        for v in r.i8_vec(512) {
+            assert!((-8..8).contains(&(v as i32)));
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Pcg32::seeded(6);
+        for _ in 0..1000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::seeded(8);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,293 @@
+//! Evaluation workloads: the ResNet family and MobileNet-1.0 used
+//! throughout the paper's results (§IV-E: "we are able to execute the
+//! full ResNets from the 2nd convolution layer ... to the final
+//! fully-connected layer", "the end-to-end MobileNet1.0 network").
+//!
+//! Weights are synthetic int8 (seeded PRNG) — the evaluation metrics
+//! (cycles, DRAM bytes, area) are data-independent, and numeric
+//! correctness is established against the bit-exact golden models (see
+//! DESIGN.md §Substitutions).
+
+use crate::compiler::cpu_ref::default_shift;
+use crate::compiler::graph::{Graph, Op};
+use crate::compiler::layout::Shape;
+use crate::util::rng::Pcg32;
+
+/// ResNet depths supported (the four networks of Figs 11/12).
+pub const RESNET_DEPTHS: [usize; 4] = [18, 34, 50, 101];
+
+fn conv_op(rng: &mut Pcg32, c_in: usize, c_out: usize, k: usize, stride: usize, pad: usize, relu: bool) -> Op {
+    Op::Conv {
+        c_out,
+        k,
+        stride,
+        pad,
+        shift: default_shift(c_in * k * k),
+        relu,
+        weights: rng.i8_vec(c_out * c_in * k * k),
+    }
+}
+
+/// Build a ResNet-{18,34,50,101} graph. `hw` is the input resolution
+/// (224 for the paper's workloads; smaller values make fast tests).
+pub fn resnet(depth: usize, hw: usize, seed: u64) -> Graph {
+    let mut rng = Pcg32::seeded(seed);
+    let (blocks, bottleneck) = match depth {
+        18 => (vec![2, 2, 2, 2], false),
+        34 => (vec![3, 4, 6, 3], false),
+        50 => (vec![3, 4, 6, 3], true),
+        101 => (vec![3, 4, 23, 3], true),
+        _ => panic!("unsupported ResNet depth {depth}"),
+    };
+    let mut g = Graph::new(&format!("resnet{depth}"), Shape::new(3, hw, hw));
+    // Stem: 7x7/2 conv (CPU fallback: 3 input channels) + 3x3/2 maxpool.
+    let mut x = g.add("conv1", conv_op(&mut rng, 3, 64, 7, 2, 3, true), vec![0]);
+    x = g.add("pool1", Op::MaxPool { k: 3, stride: 2, pad: 1 }, vec![x]);
+    let mut c_in = 64;
+    for (stage, &n_blocks) in blocks.iter().enumerate() {
+        let width = 64 << stage;
+        let stride = if stage == 0 { 1 } else { 2 };
+        for blk in 0..n_blocks {
+            let s = if blk == 0 { stride } else { 1 };
+            let prefix = format!("s{}b{}", stage + 2, blk);
+            if bottleneck {
+                let c_out = width * 4;
+                let skip = if s != 1 || c_in != c_out {
+                    g.add(
+                        &format!("{prefix}_down"),
+                        conv_op(&mut rng, c_in, c_out, 1, s, 0, false),
+                        vec![x],
+                    )
+                } else {
+                    x
+                };
+                let c1 = g.add(
+                    &format!("{prefix}_c1"),
+                    conv_op(&mut rng, c_in, width, 1, 1, 0, true),
+                    vec![x],
+                );
+                let c2 = g.add(
+                    &format!("{prefix}_c2"),
+                    conv_op(&mut rng, width, width, 3, s, 1, true),
+                    vec![c1],
+                );
+                let c3 = g.add(
+                    &format!("{prefix}_c3"),
+                    conv_op(&mut rng, width, c_out, 1, 1, 0, false),
+                    vec![c2],
+                );
+                x = g.add(&format!("{prefix}_add"), Op::Add { relu: true }, vec![c3, skip]);
+                c_in = c_out;
+            } else {
+                let c_out = width;
+                let skip = if s != 1 || c_in != c_out {
+                    g.add(
+                        &format!("{prefix}_down"),
+                        conv_op(&mut rng, c_in, c_out, 1, s, 0, false),
+                        vec![x],
+                    )
+                } else {
+                    x
+                };
+                let c1 = g.add(
+                    &format!("{prefix}_c1"),
+                    conv_op(&mut rng, c_in, c_out, 3, s, 1, true),
+                    vec![x],
+                );
+                let c2 = g.add(
+                    &format!("{prefix}_c2"),
+                    conv_op(&mut rng, c_out, c_out, 3, 1, 1, false),
+                    vec![c1],
+                );
+                x = g.add(&format!("{prefix}_add"), Op::Add { relu: true }, vec![c2, skip]);
+                c_in = c_out;
+            }
+        }
+    }
+    let gap = g.add("gap", Op::GlobalAvgPool, vec![x]);
+    g.add(
+        "fc",
+        Op::Dense {
+            units: 1000,
+            shift: default_shift(c_in),
+            relu: false,
+            weights: rng.i8_vec(1000 * c_in),
+        },
+        vec![gap],
+    );
+    g
+}
+
+/// MobileNet-1.0 (width multiplier 1.0): depthwise-separable blocks.
+pub fn mobilenet(hw: usize, seed: u64) -> Graph {
+    let mut rng = Pcg32::seeded(seed);
+    let mut g = Graph::new("mobilenet1.0", Shape::new(3, hw, hw));
+    // Stem conv (CPU fallback: 3 channels).
+    let mut x = g.add("conv1", conv_op(&mut rng, 3, 32, 3, 2, 1, true), vec![0]);
+    let mut c_in = 32;
+    // (out channels, depthwise stride) per separable block.
+    let cfg: [(usize, usize); 13] = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    for (i, &(c_out, s)) in cfg.iter().enumerate() {
+        let dw = g.add(
+            &format!("dw{}", i + 1),
+            Op::Depthwise {
+                k: 3,
+                stride: s,
+                pad: 1,
+                shift: default_shift(9),
+                relu: true,
+                weights: rng.i8_vec(c_in * 9),
+            },
+            vec![x],
+        );
+        x = g.add(
+            &format!("pw{}", i + 1),
+            conv_op(&mut rng, c_in, c_out, 1, 1, 0, true),
+            vec![dw],
+        );
+        c_in = c_out;
+    }
+    let gap = g.add("gap", Op::GlobalAvgPool, vec![x]);
+    g.add(
+        "fc",
+        Op::Dense {
+            units: 1000,
+            shift: default_shift(c_in),
+            relu: false,
+            weights: rng.i8_vec(1000 * c_in),
+        },
+        vec![gap],
+    );
+    g
+}
+
+/// Small ResNet-like test network (fast in CI; exercises every operator
+/// kind: CPU-fallback conv, VTA conv, maxpool, residual add, downsample,
+/// global pool, dense).
+pub fn micro_resnet(block: usize, seed: u64) -> Graph {
+    let mut rng = Pcg32::seeded(seed);
+    let c = block; // one channel tile wide
+    let mut g = Graph::new("micro-resnet", Shape::new(3, 16, 16));
+    let conv1 = g.add("conv1", conv_op(&mut rng, 3, c, 3, 1, 1, true), vec![0]);
+    let pool1 = g.add("pool1", Op::MaxPool { k: 2, stride: 2, pad: 0 }, vec![conv1]);
+    let c1 = g.add("b1_c1", conv_op(&mut rng, c, c, 3, 1, 1, true), vec![pool1]);
+    let c2 = g.add("b1_c2", conv_op(&mut rng, c, c, 3, 1, 1, false), vec![c1]);
+    let add1 = g.add("b1_add", Op::Add { relu: true }, vec![c2, pool1]);
+    let down = g.add("b2_down", conv_op(&mut rng, c, 2 * c, 1, 2, 0, false), vec![add1]);
+    let c3 = g.add("b2_c1", conv_op(&mut rng, c, 2 * c, 3, 2, 1, true), vec![add1]);
+    let c4 = g.add("b2_c2", conv_op(&mut rng, 2 * c, 2 * c, 3, 1, 1, false), vec![c3]);
+    let add2 = g.add("b2_add", Op::Add { relu: true }, vec![c4, down]);
+    let gap = g.add("gap", Op::GlobalAvgPool, vec![add2]);
+    g.add(
+        "fc",
+        Op::Dense {
+            units: 10,
+            shift: default_shift(2 * c),
+            relu: false,
+            weights: rng.i8_vec(10 * 2 * c),
+        },
+        vec![gap],
+    );
+    g
+}
+
+/// Small MobileNet-like test network (depthwise + pointwise).
+pub fn micro_mobilenet(block: usize, seed: u64) -> Graph {
+    let mut rng = Pcg32::seeded(seed);
+    let c = block;
+    let mut g = Graph::new("micro-mobilenet", Shape::new(3, 16, 16));
+    let mut x = g.add("conv1", conv_op(&mut rng, 3, c, 3, 2, 1, true), vec![0]);
+    for (i, s) in [1usize, 2].into_iter().enumerate() {
+        let dw = g.add(
+            &format!("dw{}", i + 1),
+            Op::Depthwise {
+                k: 3,
+                stride: s,
+                pad: 1,
+                shift: default_shift(9),
+                relu: true,
+                weights: rng.i8_vec(c * 9),
+            },
+            vec![x],
+        );
+        x = g.add(&format!("pw{}", i + 1), conv_op(&mut rng, c, c, 1, 1, 0, true), vec![dw]);
+    }
+    let gap = g.add("gap", Op::GlobalAvgPool, vec![x]);
+    g.add(
+        "fc",
+        Op::Dense { units: 10, shift: default_shift(c), relu: false, weights: rng.i8_vec(10 * c) },
+        vec![gap],
+    );
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_shape_count() {
+        let g = resnet(18, 224, 1);
+        let shapes = g.shapes();
+        // 4 stages of 2 basic blocks; final activation 512x7x7.
+        let pre_gap = shapes[shapes.len() - 3];
+        assert_eq!((pre_gap.c, pre_gap.h, pre_gap.w), (512, 7, 7));
+        assert_eq!(shapes.last().unwrap().c, 1000);
+    }
+
+    #[test]
+    fn resnet50_uses_bottleneck() {
+        let g = resnet(50, 224, 1);
+        let shapes = g.shapes();
+        let pre_gap = shapes[shapes.len() - 3];
+        assert_eq!(pre_gap.c, 2048);
+    }
+
+    #[test]
+    fn resnet18_macs_near_published() {
+        // ResNet-18 @224 is ~1.81 G MACs; VTA executes all but conv1
+        // (~118M MACs), so ~1.70G (plus fc channel padding).
+        let cfg = crate::config::presets::default_config();
+        let g = resnet(18, 224, 1);
+        let macs = g.vta_macs(&cfg) as f64;
+        assert!(macs > 1.6e9 && macs < 1.8e9, "got {macs:e}");
+    }
+
+    #[test]
+    fn mobilenet_structure() {
+        let g = mobilenet(224, 1);
+        let shapes = g.shapes();
+        let pre_gap = shapes[shapes.len() - 3];
+        assert_eq!((pre_gap.c, pre_gap.h, pre_gap.w), (1024, 7, 7));
+        let n_dw = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, crate::compiler::graph::Op::Depthwise { .. }))
+            .count();
+        assert_eq!(n_dw, 13);
+    }
+
+    #[test]
+    fn micro_nets_run_on_cpu() {
+        let mut rng = Pcg32::seeded(9);
+        for g in [micro_resnet(4, 1), micro_mobilenet(4, 1)] {
+            let input = rng.i8_vec(g.input_shape.elems());
+            let out = g.run_cpu(&input, 1);
+            assert_eq!(out.len(), 10);
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Failure-injection tests: deliberately break the stack and check the
+//! validation machinery catches and localizes the defects — the paper's
+//! §III-C claim that trace-based validation "was found to be very
+//! effective at quickly locating defects".
+
+use vta::compiler::builder::ProgramBuilder;
+use vta::compiler::conv::{lower_conv, ConvBases, ConvParams};
+use vta::compiler::tps::{self, ConvSpec};
+use vta::config::presets;
+use vta::isa::{BufferId, Insn, Opcode};
+use vta::mem::Dram;
+use vta::sim::Tsim;
+use vta::trace::{first_divergence, trace_fsim, TraceMode};
+use vta::util::rng::Pcg32;
+
+fn small_conv_program(dram: &mut Dram, seed: u64) -> Vec<Insn> {
+    let cfg = presets::tiny_config();
+    let spec = ConvSpec {
+        c_in: 8,
+        c_out: 8,
+        h: 6,
+        w: 6,
+        kh: 3,
+        kw: 3,
+        sh: 1,
+        sw: 1,
+        ph: 1,
+        pw: 1,
+    };
+    let mut rng = Pcg32::seeded(seed);
+    // Stage input + weights.
+    let inp_bytes = 2 * 6 * 6 * cfg.inp_tile_bytes();
+    let wgt_bytes = 2 * 2 * 9 * cfg.wgt_tile_bytes();
+    let out_bytes = 2 * 6 * 6 * cfg.out_tile_bytes();
+    let ri = dram.alloc(inp_bytes, cfg.inp_tile_bytes());
+    let rw = dram.alloc(wgt_bytes, cfg.wgt_tile_bytes());
+    let ro = dram.alloc(out_bytes, cfg.out_tile_bytes());
+    dram.write_i8(ri, &rng.i8_vec(inp_bytes));
+    dram.write_i8(rw, &rng.i8_vec(wgt_bytes));
+    let tiling = tps::search(&spec, &cfg, true);
+    let mut b = ProgramBuilder::new(&cfg);
+    lower_conv(
+        &mut b,
+        &ConvParams { spec, shift: 4, relu: true },
+        &tiling,
+        ConvBases {
+            inp: ri.tile_base(cfg.inp_tile_bytes()),
+            wgt: rw.tile_base(cfg.wgt_tile_bytes()),
+            out: ro.tile_base(cfg.out_tile_bytes()),
+        },
+    );
+    b.finish("inject", dram).insns
+}
+
+#[test]
+#[should_panic(expected = "deadlock")]
+fn dropping_a_push_token_deadlocks_tsim() {
+    // Remove the first push_next from a load instruction: the dependent
+    // compute pops a token that never arrives. The simulator must report
+    // deadlock (not hang, not silently compute).
+    let cfg = presets::tiny_config();
+    let mut dram = Dram::new(1 << 22);
+    let mut insns = small_conv_program(&mut dram, 1);
+    let victim = insns
+        .iter()
+        .position(|i| {
+            matches!(i, Insn::Mem(m) if m.opcode == Opcode::Load && i.deps().push_next)
+        })
+        .expect("program should contain a load that signals compute");
+    insns[victim].deps_mut().push_next = false;
+    let mut sim = Tsim::new(&cfg);
+    sim.run(&insns, &mut dram, "deadlock-injection");
+}
+
+#[test]
+fn corrupted_instruction_diverges_and_is_localized() {
+    // Flip one GEMM's loop extent: fsim traces of good vs bad programs
+    // must diverge exactly at that instruction (paper: "pinpointed the
+    // location in the trace where the behavior ... diverged").
+    let cfg = presets::tiny_config();
+    let mode = TraceMode::default();
+    let mut d1 = Dram::new(1 << 22);
+    let good = small_conv_program(&mut d1, 2);
+    let mut d2 = Dram::new(1 << 22);
+    let mut bad = small_conv_program(&mut d2, 2);
+    let victim = bad
+        .iter()
+        .position(|i| matches!(i, Insn::Gemm(g) if !g.reset))
+        .expect("program contains a GEMM");
+    if let Insn::Gemm(g) = &mut bad[victim] {
+        g.lp_in = g.lp_in.max(2) - 1; // drop one reduction iteration
+    }
+    let t_good = trace_fsim(&cfg, &good, &mut d1, &mode);
+    let t_bad = trace_fsim(&cfg, &bad, &mut d2, &mode);
+    let (at, buffer) = first_divergence(&t_good, &t_bad).expect("must diverge");
+    assert_eq!(at, victim, "divergence localized at the corrupted instruction");
+    assert_eq!(buffer, BufferId::Acc, "GEMM corruption shows in the accumulator");
+}
+
+#[test]
+fn corrupted_weights_caught_by_golden_comparison() {
+    // End-to-end: flip one staged weight byte; the CPU-reference check
+    // must fail (this is what the CI equality-checking stage catches).
+    use vta::compiler::graph::{Graph, Op};
+    use vta::compiler::layout::Shape;
+    use vta::runtime::{Session, SessionOptions};
+    let cfg = presets::tiny_config();
+    let mut rng = Pcg32::seeded(3);
+    let weights = rng.i8_vec(8 * 8 * 9);
+    let input = rng.i8_vec(8 * 6 * 6);
+    let build = |w: Vec<i8>| {
+        let mut g = Graph::new("wcheck", Shape::new(8, 6, 6));
+        g.add(
+            "conv",
+            Op::Conv { c_out: 8, k: 3, stride: 1, pad: 1, shift: 4, relu: true, weights: w },
+            vec![0],
+        );
+        g
+    };
+    let good = build(weights.clone());
+    let mut corrupt = weights;
+    corrupt[17] = corrupt[17].wrapping_add(1);
+    let bad = build(corrupt);
+    let expect = good.run_cpu(&input, 1);
+    let mut s = Session::new(&cfg, SessionOptions::default());
+    let got = s.run_graph(&bad, &input);
+    assert_ne!(got, expect, "corruption must be visible in the output");
+}
+
+#[test]
+fn truncated_program_missing_finish_rejected() {
+    let cfg = presets::tiny_config();
+    let mut dram = Dram::new(1 << 22);
+    let mut insns = small_conv_program(&mut dram, 4);
+    insns.pop(); // drop FINISH
+    let mut sim = Tsim::new(&cfg);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        sim.run(&insns, &mut dram, "no-finish");
+    }));
+    assert!(result.is_err(), "missing FINISH must be rejected");
+}

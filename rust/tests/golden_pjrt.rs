@@ -1,0 +1,124 @@
+//! Golden verification: the rust-simulated accelerator vs the
+//! AOT-compiled JAX/Pallas model executed through PJRT. Bit-exact
+//! agreement across the whole three-layer stack is the release gate.
+//!
+//! Tests skip (with a notice) when `artifacts/` has not been built —
+//! run `make artifacts` first.
+
+use vta::compiler::graph::{Graph, Op};
+use vta::compiler::layout::Shape;
+use vta::config::presets;
+use vta::runtime::pjrt::Golden;
+use vta::runtime::{Session, SessionOptions, Target};
+use vta::util::rng::Pcg32;
+
+fn golden_or_skip(names: &[&str]) -> Option<Golden> {
+    let g = Golden::with_default_dir().expect("PJRT client");
+    for n in names {
+        if !g.has_artifact(n) {
+            eprintln!("SKIP: artifact '{n}' missing; run `make artifacts`");
+            return None;
+        }
+    }
+    Some(g)
+}
+
+#[test]
+fn gemm_kernel_matches_exec_core() {
+    let Some(mut golden) = golden_or_skip(&["gemm"]) else { return };
+    let mut rng = Pcg32::seeded(21);
+    let x = rng.i8_vec_full(64 * 64);
+    let w = rng.i8_vec_full(64 * 16);
+    let got = golden
+        .run_i8_to_i32("gemm", &x, &[64, 64], &w, &[64, 16])
+        .expect("golden gemm run");
+    // Reference: plain int32 matmul (same as the exec core's tile op).
+    let mut expect = vec![0i32; 64 * 16];
+    for i in 0..64 {
+        for j in 0..16 {
+            let mut acc = 0i32;
+            for kk in 0..64 {
+                acc += x[i * 64 + kk] as i32 * w[kk * 16 + j] as i32;
+            }
+            expect[i * 16 + j] = acc;
+        }
+    }
+    assert_eq!(got, expect, "Pallas GEMM artifact != int32 reference");
+}
+
+fn run_conv_on_stack(
+    cfg: &vta::config::VtaConfig,
+    target: Target,
+    c_in: usize,
+    c_out: usize,
+    hw: usize,
+    stride: usize,
+    shift: u32,
+    relu: bool,
+    weights: &[i8],
+    input: &[i8],
+) -> Vec<i8> {
+    let mut g = Graph::new("golden-conv", Shape::new(c_in, hw, hw));
+    g.add(
+        "conv",
+        Op::Conv { c_out, k: 3, stride, pad: 1, shift, relu, weights: weights.to_vec() },
+        vec![0],
+    );
+    let mut s = Session::new(cfg, SessionOptions { target, ..Default::default() });
+    s.run_graph(&g, input)
+}
+
+#[test]
+fn conv_quickstart_stack_vs_golden() {
+    // x: [1,16,14,14], w: [16,16,3,3], stride 1 pad 1 shift 5 relu —
+    // must agree bit-for-bit between tsim, fsim and the PJRT golden.
+    let Some(mut golden) = golden_or_skip(&["conv_quickstart"]) else { return };
+    let cfg = presets::default_config();
+    let mut rng = Pcg32::seeded(33);
+    let x = rng.i8_vec(16 * 14 * 14);
+    let w = rng.i8_vec(16 * 16 * 9);
+    let want = golden
+        .run_i8("conv_quickstart", &x, &[1, 16, 14, 14], &w, &[16, 16, 3, 3])
+        .expect("golden conv run");
+    for target in [Target::Fsim, Target::Tsim] {
+        let got = run_conv_on_stack(&cfg, target, 16, 16, 14, 1, 5, true, &w, &x);
+        assert_eq!(got, want, "{target:?} disagrees with PJRT golden");
+    }
+}
+
+#[test]
+fn conv_stride2_stack_vs_golden() {
+    // x: [1,32,12,12], w: [16,32,3,3], stride 2 pad 1 shift 6 no relu.
+    let Some(mut golden) = golden_or_skip(&["conv_stride2"]) else { return };
+    let cfg = presets::default_config();
+    let mut rng = Pcg32::seeded(34);
+    let x = rng.i8_vec(32 * 12 * 12);
+    let w = rng.i8_vec(16 * 32 * 9);
+    let want = golden
+        .run_i8("conv_stride2", &x, &[1, 32, 12, 12], &w, &[16, 32, 3, 3])
+        .expect("golden conv run");
+    let got = run_conv_on_stack(&cfg, Target::Tsim, 32, 16, 12, 2, 6, false, &w, &x);
+    assert_eq!(got, want, "tsim disagrees with PJRT golden (stride 2)");
+}
+
+#[test]
+fn dense_stack_vs_golden() {
+    // x: [4,64] (batch 4!), w: [32,64], shift 4. Uses a batch=4 config.
+    let Some(mut golden) = golden_or_skip(&["dense"]) else { return };
+    let mut cfg = presets::default_config();
+    cfg.batch = 4;
+    let mut rng = Pcg32::seeded(35);
+    let x = rng.i8_vec(4 * 64);
+    let w = rng.i8_vec(32 * 64);
+    let want =
+        golden.run_i8("dense", &x, &[4, 64], &w, &[32, 64]).expect("golden dense run");
+    let mut g = Graph::new("golden-dense", Shape::new(64, 1, 1));
+    g.add(
+        "fc",
+        Op::Dense { units: 32, shift: 4, relu: false, weights: w.clone() },
+        vec![0],
+    );
+    let mut s = Session::new(&cfg, SessionOptions { target: Target::Tsim, ..Default::default() });
+    let got = s.run_graph(&g, &x);
+    assert_eq!(got, want, "tsim dense disagrees with PJRT golden");
+}

@@ -1,0 +1,162 @@
+//! Per-schedule integration tests: each ALU-based layer kind (pooling,
+//! residual add, depthwise) and structural variants (bottleneck blocks,
+//! larger strides, ragged channel counts) verified bit-exactly against
+//! the CPU reference on both simulator targets.
+
+use vta::compiler::graph::{Graph, Op};
+use vta::compiler::layout::Shape;
+use vta::config::presets;
+use vta::runtime::{Session, SessionOptions, Target};
+use vta::util::rng::Pcg32;
+
+fn check(graph: &Graph, seed: u64) {
+    let cfg = presets::tiny_config();
+    let mut rng = Pcg32::seeded(seed);
+    let input = rng.i8_vec(cfg.batch * graph.input_shape.elems());
+    let expect = graph.run_cpu(&input, cfg.batch);
+    for target in [Target::Fsim, Target::Tsim] {
+        let mut s = Session::new(&cfg, SessionOptions { target, ..Default::default() });
+        let got = s.run_graph(graph, &input);
+        assert_eq!(got, expect, "{target:?} mismatch for {}", graph.name);
+    }
+}
+
+#[test]
+fn maxpool_3x3_stride2_padded() {
+    let mut g = Graph::new("pool-3x3", Shape::new(8, 9, 9));
+    g.add("pool", Op::MaxPool { k: 3, stride: 2, pad: 1 }, vec![0]);
+    check(&g, 1);
+}
+
+#[test]
+fn maxpool_2x2_stride2() {
+    let mut g = Graph::new("pool-2x2", Shape::new(4, 8, 8));
+    g.add("pool", Op::MaxPool { k: 2, stride: 2, pad: 0 }, vec![0]);
+    check(&g, 2);
+}
+
+#[test]
+fn global_avgpool_7x7() {
+    let mut g = Graph::new("gap", Shape::new(8, 7, 7));
+    g.add("gap", Op::GlobalAvgPool, vec![0]);
+    check(&g, 3);
+}
+
+#[test]
+fn residual_add_with_relu() {
+    let mut rng = Pcg32::seeded(4);
+    let mut g = Graph::new("residual", Shape::new(4, 6, 6));
+    let c = g.add(
+        "conv",
+        Op::Conv { c_out: 4, k: 3, stride: 1, pad: 1, shift: 4, relu: false, weights: rng.i8_vec(4 * 4 * 9) },
+        vec![0],
+    );
+    g.add("add", Op::Add { relu: true }, vec![c, 0]);
+    check(&g, 5);
+}
+
+#[test]
+fn residual_add_large_tile_count() {
+    // Enough tiles to force multiple chunks through the add schedule.
+    let mut rng = Pcg32::seeded(6);
+    let mut g = Graph::new("residual-big", Shape::new(8, 16, 16));
+    let c = g.add(
+        "conv",
+        Op::Conv { c_out: 8, k: 1, stride: 1, pad: 0, shift: 3, relu: false, weights: rng.i8_vec(8 * 8) },
+        vec![0],
+    );
+    g.add("add", Op::Add { relu: false }, vec![c, 0]);
+    check(&g, 7);
+}
+
+#[test]
+fn depthwise_stride1_and_2() {
+    for (seed, stride) in [(8u64, 1usize), (9, 2)] {
+        let mut rng = Pcg32::seeded(seed);
+        let mut g = Graph::new("dw", Shape::new(8, 9, 9));
+        g.add(
+            "dw",
+            Op::Depthwise { k: 3, stride, pad: 1, shift: 3, relu: true, weights: rng.i8_vec(8 * 9) },
+            vec![0],
+        );
+        check(&g, seed + 10);
+    }
+}
+
+#[test]
+fn depthwise_extreme_weights() {
+    // Full-range int8 weights stress the 8-bit MUL truncation semantics.
+    let mut rng = Pcg32::seeded(11);
+    let mut g = Graph::new("dw-extreme", Shape::new(4, 6, 6));
+    g.add(
+        "dw",
+        Op::Depthwise { k: 3, stride: 1, pad: 1, shift: 0, relu: false, weights: rng.i8_vec_full(4 * 9) },
+        vec![0],
+    );
+    check(&g, 12);
+}
+
+#[test]
+fn bottleneck_block() {
+    // ResNet-50-style bottleneck: 1x1 reduce, 3x3, 1x1 expand + skip.
+    let mut rng = Pcg32::seeded(13);
+    let c = 4;
+    let mut g = Graph::new("bottleneck", Shape::new(4 * c, 8, 8));
+    let r = g.add(
+        "reduce",
+        Op::Conv { c_out: c, k: 1, stride: 1, pad: 0, shift: 4, relu: true, weights: rng.i8_vec(c * 4 * c) },
+        vec![0],
+    );
+    let m = g.add(
+        "mid",
+        Op::Conv { c_out: c, k: 3, stride: 1, pad: 1, shift: 4, relu: true, weights: rng.i8_vec(c * c * 9) },
+        vec![r],
+    );
+    let e = g.add(
+        "expand",
+        Op::Conv { c_out: 4 * c, k: 1, stride: 1, pad: 0, shift: 3, relu: false, weights: rng.i8_vec(4 * c * c) },
+        vec![m],
+    );
+    g.add("add", Op::Add { relu: true }, vec![e, 0]);
+    check(&g, 14);
+}
+
+#[test]
+fn ragged_channel_count_padded() {
+    // 5 channels with block 4: exercises channel zero-padding end to end.
+    let mut rng = Pcg32::seeded(15);
+    let mut g = Graph::new("ragged", Shape::new(5, 6, 6));
+    g.add(
+        "conv",
+        // c_in = 5 > block 4, so the layer runs on the accelerator with
+        // a zero-padded channel tail.
+        Op::Conv { c_out: 8, k: 3, stride: 1, pad: 1, shift: 4, relu: true, weights: rng.i8_vec(8 * 5 * 9) },
+        vec![0],
+    );
+    check(&g, 16);
+}
+
+#[test]
+fn dense_after_gap() {
+    let mut rng = Pcg32::seeded(17);
+    let mut g = Graph::new("head", Shape::new(8, 4, 4));
+    let gap = g.add("gap", Op::GlobalAvgPool, vec![0]);
+    g.add(
+        "fc",
+        Op::Dense { units: 12, shift: 2, relu: false, weights: rng.i8_vec(12 * 8) },
+        vec![gap],
+    );
+    check(&g, 18);
+}
+
+#[test]
+fn deep_chain_of_mixed_layers() {
+    // A longer mixed pipeline on the default (16-block) config.
+    let cfg = presets::default_config();
+    let g = vta::workloads::micro_mobilenet(16, 19);
+    let mut rng = Pcg32::seeded(20);
+    let input = rng.i8_vec(cfg.batch * g.input_shape.elems());
+    let expect = g.run_cpu(&input, cfg.batch);
+    let mut s = Session::new(&cfg, SessionOptions::default());
+    assert_eq!(s.run_graph(&g, &input), expect);
+}

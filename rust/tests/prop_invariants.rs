@@ -1,0 +1,251 @@
+//! Property-based tests over the stack's core invariants (mini-proptest
+//! in `vta::util::prop`): ISA encode/decode inversion across random
+//! configurations, dependency-token safety of generated programs, TPS
+//! feasibility soundness, layout pack/unpack inversion, and fsim==tsim
+//! state equivalence on randomized conv layers.
+
+use vta::compiler::graph::{Graph, Op};
+use vta::compiler::layout::{self, Shape};
+use vta::compiler::tps::{self, ConvSpec};
+use vta::config::{presets, VtaConfig};
+use vta::isa::{AluInsn, AluOp, BufferId, DepFlags, GemmInsn, Insn, MemInsn, Opcode, Uop};
+use vta::runtime::{Session, SessionOptions, Target};
+use vta::util::prop::{Gen, Prop};
+use vta::{prop_assert, prop_assert_eq};
+
+/// A random-but-valid configuration.
+fn gen_config(g: &mut Gen) -> VtaConfig {
+    let block = g.pow2(2, 6); // 4..64
+    VtaConfig {
+        name: "prop".into(),
+        batch: g.pow2(0, 1),
+        block_in: block,
+        block_out: block,
+        uop_depth: g.pow2(9, 13),
+        inp_depth: g.pow2(7, 11),
+        wgt_depth: g.pow2(7, 10),
+        acc_depth: g.pow2(7, 11),
+        axi_bytes: g.pow2(3, 6),
+        dram_latency: g.i64(1, 64) as u64,
+        vme_inflight: g.i64(1, 16) as usize,
+        gemm_pipelined: g.bool(),
+        alu_pipelined: g.bool(),
+        cmd_queue_depth: 256,
+        dep_queue_depth: 64,
+    }
+}
+
+#[test]
+fn prop_isa_roundtrip_random_configs() {
+    Prop::new("isa-roundtrip").cases(200).run(|g| {
+        let cfg = gen_config(g);
+        if cfg.validate().is_err() {
+            return Ok(()); // skip invalid corners
+        }
+        let l = cfg.isa_layout();
+        let insn = match g.i64(0, 3) {
+            0 => Insn::Mem(MemInsn {
+                opcode: if g.bool() { Opcode::Load } else { Opcode::Store },
+                deps: DepFlags::from_bits(g.i64(0, 15) as u64),
+                buffer: *g.choose(&BufferId::ALL),
+                sram_base: g.i64(0, (1 << l.sram_bits) - 1) as u32,
+                dram_base: g.i64(0, (1i64 << 31) - 1) as u32,
+                y_size: g.i64(0, (1 << l.mem_size_bits) - 1) as u32,
+                x_size: g.i64(0, (1 << l.mem_size_bits) - 1) as u32,
+                x_stride: g.i64(0, (1 << l.mem_size_bits) - 1) as u32,
+                y_pad0: g.i64(0, 15) as u32,
+                y_pad1: g.i64(0, 15) as u32,
+                x_pad0: g.i64(0, 15) as u32,
+                x_pad1: g.i64(0, 15) as u32,
+                pad_value: g.i8(),
+            }),
+            1 => Insn::Gemm(GemmInsn {
+                deps: DepFlags::from_bits(g.i64(0, 15) as u64),
+                reset: g.bool(),
+                uop_bgn: g.i64(0, (1 << l.uop_idx_bits) - 1) as u32,
+                uop_end: g.i64(0, (1 << (l.uop_idx_bits + 1)) - 1) as u32,
+                lp_out: g.i64(0, (1 << l.loop_bits) - 1) as u32,
+                lp_in: g.i64(0, (1 << l.loop_bits) - 1) as u32,
+                acc_f0: g.i64(0, (1 << l.acc_idx_bits) - 1) as u32,
+                acc_f1: g.i64(0, (1 << l.acc_idx_bits) - 1) as u32,
+                inp_f0: g.i64(0, (1 << l.inp_idx_bits) - 1) as u32,
+                inp_f1: g.i64(0, (1 << l.inp_idx_bits) - 1) as u32,
+                wgt_f0: g.i64(0, (1 << l.wgt_idx_bits) - 1) as u32,
+                wgt_f1: g.i64(0, (1 << l.wgt_idx_bits) - 1) as u32,
+            }),
+            2 => Insn::Alu(AluInsn {
+                deps: DepFlags::from_bits(g.i64(0, 15) as u64),
+                reset: g.bool(),
+                op: *g.choose(&[
+                    AluOp::Min,
+                    AluOp::Max,
+                    AluOp::Add,
+                    AluOp::Shr,
+                    AluOp::Mul,
+                    AluOp::Clip,
+                    AluOp::Mov,
+                ]),
+                uop_bgn: g.i64(0, (1 << l.uop_idx_bits) - 1) as u32,
+                uop_end: g.i64(0, (1 << (l.uop_idx_bits + 1)) - 1) as u32,
+                lp_out: g.i64(0, (1 << l.loop_bits) - 1) as u32,
+                lp_in: g.i64(0, (1 << l.loop_bits) - 1) as u32,
+                dst_f0: g.i64(0, (1 << l.acc_idx_bits) - 1) as u32,
+                dst_f1: g.i64(0, (1 << l.acc_idx_bits) - 1) as u32,
+                src_f0: g.i64(0, (1 << l.acc_idx_bits) - 1) as u32,
+                src_f1: g.i64(0, (1 << l.acc_idx_bits) - 1) as u32,
+                use_imm: g.bool(),
+                imm: g.i64(-(1 << (l.imm_bits - 1)), (1 << (l.imm_bits - 1)) - 1) as i32,
+            }),
+            _ => Insn::Finish(DepFlags::from_bits(g.i64(0, 15) as u64)),
+        };
+        let back = Insn::decode(insn.encode(&l), &l)
+            .map_err(|e| format!("decode failed: {e}"))?;
+        prop_assert_eq!(back, insn);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_uop_roundtrip() {
+    Prop::new("uop-roundtrip").cases(200).run(|g| {
+        let cfg = gen_config(g);
+        if cfg.validate().is_err() {
+            return Ok(());
+        }
+        let l = cfg.isa_layout();
+        let u = Uop::gemm(
+            g.i64(0, cfg.acc_depth as i64 - 1) as u32,
+            g.i64(0, cfg.inp_depth as i64 - 1) as u32,
+            g.i64(0, cfg.wgt_depth as i64 - 1) as u32,
+        );
+        prop_assert_eq!(Uop::decode(u.encode(&l), &l), u);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_activation_pack_unpack_inverse() {
+    Prop::new("layout-inverse").cases(100).run(|g| {
+        let batch = g.usize(1, 2);
+        let shape = Shape::new(g.usize(1, 9), g.usize(1, 6), g.usize(1, 6));
+        let block = g.pow2(1, 3);
+        let data = g.vec_i8(batch * shape.elems());
+        let tiled = layout::pack_activation(&data, batch, shape, block);
+        prop_assert_eq!(layout::unpack_activation(&tiled, batch, shape, block), data);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tps_search_always_feasible_and_no_worse_than_fallback() {
+    Prop::new("tps-feasible").cases(40).run(|g| {
+        let cfg = match g.i64(0, 2) {
+            0 => presets::default_config(),
+            1 => presets::scaled_config(1, 32, 32, 2, 16),
+            _ => presets::tiny_config(),
+        };
+        let block = cfg.block_in;
+        let spec = ConvSpec {
+            c_in: block * g.usize(1, 4),
+            c_out: block * g.usize(1, 4),
+            h: g.usize(4, 28),
+            w: g.usize(4, 28),
+            kh: *g.choose(&[1, 3]),
+            kw: 0,
+            sh: g.usize(1, 2),
+            sw: 0,
+            ph: 0,
+            pw: 0,
+        };
+        let spec = ConvSpec {
+            kw: spec.kh,
+            sw: spec.sh,
+            ph: spec.kh / 2,
+            pw: spec.kh / 2,
+            ..spec
+        };
+        if spec.h < spec.kh || spec.w < spec.kw {
+            return Ok(());
+        }
+        let best = tps::search(&spec, &cfg, true);
+        prop_assert!(best.feasible(&spec, &cfg), "search returned infeasible tiling");
+        let fb = tps::fallback(&spec, &cfg);
+        if fb.feasible(&spec, &cfg) {
+            prop_assert!(
+                best.dram_bytes(&spec, &cfg) <= fb.dram_bytes(&spec, &cfg),
+                "TPS worse than fallback"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_random_conv_fsim_tsim_cpu_agree() {
+    // The heavyweight invariant: for random small convs, the compiled
+    // program computes identically on fsim and tsim and matches the CPU
+    // reference (catching scheduling/token bugs via real divergence).
+    Prop::new("conv-equivalence").cases(12).run(|g| {
+        let cfg = presets::tiny_config();
+        let block = cfg.block_in;
+        let c_in = block * g.usize(1, 2);
+        let c_out = block * g.usize(1, 2);
+        let hw = g.usize(4, 10);
+        let k = *g.choose(&[1usize, 3]);
+        let stride = g.usize(1, 2);
+        if hw < k {
+            return Ok(());
+        }
+        let pad = k / 2;
+        let mut graph = Graph::new("prop-conv", Shape::new(c_in, hw, hw));
+        graph.add(
+            "conv",
+            Op::Conv {
+                c_out,
+                k,
+                stride,
+                pad,
+                shift: g.i64(0, 6) as u32,
+                relu: g.bool(),
+                weights: g.vec_i8(c_out * c_in * k * k),
+            },
+            vec![0],
+        );
+        let input = g.vec_i8(cfg.batch * graph.input_shape.elems());
+        let expect = graph.run_cpu(&input, cfg.batch);
+        let reuse = g.bool();
+        let tps_on = g.bool();
+        for target in [Target::Fsim, Target::Tsim] {
+            let mut s = Session::new(
+                &cfg,
+                SessionOptions { target, dbuf_reuse: reuse, tps: tps_on, trace: false },
+            );
+            let got = s.run_graph(&graph, &input);
+            prop_assert!(
+                got == expect,
+                "{target:?} mismatch (c_in={c_in} c_out={c_out} hw={hw} k={k} s={stride} reuse={reuse} tps={tps_on})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dependency_tokens_never_deadlock_random_pools() {
+    // Random pooling layers exercise the compute-store token protocol.
+    Prop::new("pool-no-deadlock").cases(12).run(|g| {
+        let cfg = presets::tiny_config();
+        let c = cfg.block_in * g.usize(1, 2);
+        let hw = g.usize(4, 12);
+        let k = g.usize(2, 3.min(hw));
+        let stride = g.usize(1, 2);
+        let mut graph = Graph::new("prop-pool", Shape::new(c, hw, hw));
+        graph.add("pool", Op::MaxPool { k, stride, pad: k / 2 }, vec![0]);
+        let input = g.vec_i8(cfg.batch * graph.input_shape.elems());
+        let expect = graph.run_cpu(&input, cfg.batch);
+        let mut s = Session::new(&cfg, SessionOptions::default());
+        let got = s.run_graph(&graph, &input);
+        prop_assert!(got == expect, "pool mismatch c={c} hw={hw} k={k} s={stride}");
+        Ok(())
+    });
+}

@@ -1,0 +1,166 @@
+//! Cross-layer integration tests: the full compile → stage → simulate
+//! pipeline must agree bit-exactly with the CPU reference model, on both
+//! simulator targets, across schedules and configurations.
+
+use vta::compiler::graph::{Graph, Op};
+use vta::compiler::layout::Shape;
+use vta::config::presets;
+use vta::runtime::{Session, SessionOptions, Target};
+use vta::util::rng::Pcg32;
+use vta::workloads;
+
+fn run_both(graph: &Graph, cfg: &vta::config::VtaConfig, opts: SessionOptions, seed: u64) {
+    let mut rng = Pcg32::seeded(seed);
+    let input = rng.i8_vec(cfg.batch * graph.input_shape.elems());
+    let expect = graph.run_cpu(&input, cfg.batch);
+
+    let mut fs = Session::new(cfg, SessionOptions { target: Target::Fsim, ..opts.clone() });
+    let got_f = fs.run_graph(graph, &input);
+    assert_eq!(got_f, expect, "fsim output != cpu reference ({})", graph.name);
+
+    let mut ts = Session::new(cfg, SessionOptions { target: Target::Tsim, ..opts });
+    let got_t = ts.run_graph(graph, &input);
+    assert_eq!(got_t, expect, "tsim output != cpu reference ({})", graph.name);
+    assert!(ts.cycles() > 0);
+}
+
+#[test]
+fn single_conv_layer_tiny() {
+    let cfg = presets::tiny_config();
+    let mut rng = Pcg32::seeded(3);
+    let mut g = Graph::new("conv-only", Shape::new(4, 8, 8));
+    g.add(
+        "conv",
+        Op::Conv {
+            c_out: 8,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            shift: 4,
+            relu: true,
+            weights: rng.i8_vec(8 * 4 * 9),
+        },
+        vec![0],
+    );
+    run_both(&g, &cfg, SessionOptions::default(), 10);
+}
+
+#[test]
+fn conv_stride2_no_pad() {
+    let cfg = presets::tiny_config();
+    let mut rng = Pcg32::seeded(4);
+    let mut g = Graph::new("conv-s2", Shape::new(8, 9, 9));
+    g.add(
+        "conv",
+        Op::Conv {
+            c_out: 4,
+            k: 3,
+            stride: 2,
+            pad: 0,
+            shift: 4,
+            relu: false,
+            weights: rng.i8_vec(4 * 8 * 9),
+        },
+        vec![0],
+    );
+    run_both(&g, &cfg, SessionOptions::default(), 11);
+}
+
+#[test]
+fn conv_1x1() {
+    let cfg = presets::tiny_config();
+    let mut rng = Pcg32::seeded(5);
+    let mut g = Graph::new("conv-1x1", Shape::new(8, 6, 6));
+    g.add(
+        "conv",
+        Op::Conv {
+            c_out: 8,
+            k: 1,
+            stride: 1,
+            pad: 0,
+            shift: 3,
+            relu: true,
+            weights: rng.i8_vec(8 * 8),
+        },
+        vec![0],
+    );
+    run_both(&g, &cfg, SessionOptions::default(), 12);
+}
+
+#[test]
+fn conv_fallback_schedule_matches_too() {
+    let cfg = presets::tiny_config();
+    let mut rng = Pcg32::seeded(6);
+    let mut g = Graph::new("conv-fb", Shape::new(8, 8, 8));
+    g.add(
+        "conv",
+        Op::Conv {
+            c_out: 8,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            shift: 4,
+            relu: true,
+            weights: rng.i8_vec(8 * 8 * 9),
+        },
+        vec![0],
+    );
+    run_both(&g, &cfg, SessionOptions { tps: false, ..Default::default() }, 13);
+}
+
+#[test]
+fn conv_without_dbuf_reuse_matches() {
+    let cfg = presets::tiny_config();
+    let mut rng = Pcg32::seeded(7);
+    let mut g = Graph::new("conv-nodbuf", Shape::new(8, 8, 8));
+    g.add(
+        "conv",
+        Op::Conv {
+            c_out: 16,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            shift: 4,
+            relu: true,
+            weights: rng.i8_vec(16 * 8 * 9),
+        },
+        vec![0],
+    );
+    run_both(&g, &cfg, SessionOptions { dbuf_reuse: false, ..Default::default() }, 14);
+}
+
+#[test]
+fn micro_resnet_end_to_end() {
+    let cfg = presets::tiny_config();
+    let g = workloads::micro_resnet(4, 42);
+    run_both(&g, &cfg, SessionOptions::default(), 15);
+}
+
+#[test]
+fn micro_mobilenet_end_to_end() {
+    let cfg = presets::tiny_config();
+    let g = workloads::micro_mobilenet(4, 43);
+    run_both(&g, &cfg, SessionOptions::default(), 16);
+}
+
+#[test]
+fn micro_resnet_on_default_config() {
+    let cfg = presets::default_config();
+    let g = workloads::micro_resnet(16, 44);
+    run_both(&g, &cfg, SessionOptions::default(), 17);
+}
+
+#[test]
+fn micro_resnet_unpipelined() {
+    let cfg = presets::original_config();
+    let g = workloads::micro_resnet(16, 45);
+    run_both(&g, &cfg, SessionOptions::default(), 18);
+}
+
+#[test]
+fn batch2_config() {
+    let mut cfg = presets::tiny_config();
+    cfg.batch = 2;
+    let g = workloads::micro_resnet(4, 46);
+    run_both(&g, &cfg, SessionOptions::default(), 19);
+}
