@@ -3,6 +3,9 @@
 //! CLI (without --quick) for the full-resolution numbers recorded in
 //! EXPERIMENTS.md.
 //!
+//! Declared `harness = false` in Cargo.toml: a plain `fn main()` binary,
+//! so it builds and runs on stable cargo (no nightly `#[bench]`).
+//!
 //!     cargo bench --bench paper_figures [-- <filter>]
 
 use vta::repro;

@@ -2,6 +2,9 @@
 //! harness; see `vta::util::bench`). These are the before/after probes
 //! for the EXPERIMENTS.md §Perf optimization log.
 //!
+//! Declared `harness = false` in Cargo.toml: a plain `fn main()` binary,
+//! so it builds and runs on stable cargo (no nightly `#[bench]`).
+//!
 //!     cargo bench --bench sim_hotpath [-- <filter>] [--quick]
 
 use vta::compiler::graph::{Graph, Op};

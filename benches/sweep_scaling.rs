@@ -1,0 +1,68 @@
+//! Sweep-engine scaling probes: cold sweep wall time at 1 worker vs all
+//! cores (the work-stealing speedup), and the warm-cache resume path
+//! (which must be near-instant: no simulation, just JSONL replay).
+//!
+//!     cargo bench --bench sweep_scaling [-- <filter>] [--quick]
+
+use vta::config::presets;
+use vta::sweep::{self, SweepOptions, SweepSpec, WorkloadSpec};
+use vta::util::bench::Bench;
+
+/// 16-point micro grid: big enough to expose load imbalance (scratchpad
+/// scale changes per-point cost), small enough for a bench harness.
+fn micro_grid() -> SweepSpec {
+    let mut configs = Vec::new();
+    for axi in [8usize, 16, 32, 64] {
+        for scale in [1usize, 2] {
+            let mut cfg = presets::tiny_config();
+            cfg.name = format!("tiny-s{scale}-m{axi}");
+            cfg.axi_bytes = axi;
+            cfg.inp_depth *= scale;
+            cfg.wgt_depth *= scale;
+            cfg.acc_depth *= scale;
+            configs.push(cfg);
+        }
+    }
+    SweepSpec {
+        configs,
+        workloads: vec![WorkloadSpec::Micro { block: 4 }],
+        seeds: vec![7, 8],
+        graph_seed: 42,
+    }
+}
+
+fn main() {
+    let mut b = Bench::from_env();
+    let spec = micro_grid();
+    let n_points = spec.jobs().len();
+    let cores = sweep::effective_jobs(0).min(n_points);
+
+    let serial = b.once("sweep/cold_1_worker", || {
+        let o = sweep::run(&spec, &SweepOptions { jobs: 1, ..Default::default() }).unwrap();
+        assert_eq!(o.simulated, n_points);
+        o.front.len()
+    });
+    let parallel = b.once(&format!("sweep/cold_{cores}_workers"), || {
+        let o = sweep::run(&spec, &SweepOptions { jobs: cores, ..Default::default() }).unwrap();
+        assert_eq!(o.simulated, n_points);
+        o.front.len()
+    });
+    if let (Some(s), Some(p)) = (serial, parallel) {
+        assert_eq!(s, p, "frontier size must not depend on worker count");
+    }
+
+    // Warm-cache resume: populate once, then measure the replay path.
+    let path =
+        std::env::temp_dir().join(format!("vta_sweep_bench_{}.jsonl", std::process::id()));
+    let warm_opts =
+        SweepOptions { jobs: cores, cache_path: Some(path.clone()), resume: true, progress: false };
+    sweep::run(&spec, &SweepOptions { resume: false, ..warm_opts.clone() }).unwrap();
+    b.once("sweep/warm_cache_resume", || {
+        let o = sweep::run(&spec, &warm_opts).unwrap();
+        assert_eq!(o.simulated, 0, "warm resume must not simulate");
+        o.cached
+    });
+    std::fs::remove_file(&path).ok();
+
+    println!("\n{} benchmarks complete ({n_points} design points)", b.results.len());
+}

@@ -1,18 +1,51 @@
-//! Design-space exploration (Fig 13): sweep MAC shape x memory width x
-//! scratchpad scaling, run ResNet-18 on each point, and print the cycle
+//! Design-space exploration (Fig 13) on the parallel sweep engine:
+//! shard MAC shape x memory width x scratchpad scaling across worker
+//! threads, stream results into a resumable cache, and print the cycle
 //! count vs scaled-area Pareto frontier.
 //!
 //!     cargo run --release --example pareto_sweep [-- --quick]
+//!         [--jobs N] [--cache sweep_cache.jsonl --resume]
+//!
+//! Re-running with `--cache f --resume` completes from cache without
+//! re-simulating; the frontier is identical for any worker count.
 
-use vta::repro;
+use vta::sweep::{self, GridSpec, SweepOptions};
 use vta::util::cli::Args;
 
 fn main() {
     let args = Args::parse_from(std::env::args().skip(1));
-    let rows = repro::fig13(args.has_flag("quick"));
+    let spec = GridSpec::fig13(args.has_flag("quick")).to_sweep_spec();
+    let resume = args.has_flag("resume");
+    // Same data-loss guard as `vta sweep`: without --resume the engine
+    // truncates the cache, so refuse to clobber a non-empty one unless
+    // --fresh says so.
+    if let Some(cache) = args.get("cache") {
+        if !resume && !args.has_flag("fresh") {
+            if let Ok(meta) = std::fs::metadata(cache) {
+                if meta.len() > 0 {
+                    eprintln!(
+                        "error: cache '{cache}' already holds results; pass --resume to \
+                         reuse them or --fresh to discard and start over"
+                    );
+                    std::process::exit(1);
+                }
+            }
+        }
+    }
+    let opts = SweepOptions {
+        jobs: args.get_usize("jobs", 0),
+        cache_path: args.get("cache").map(Into::into),
+        resume,
+        progress: true,
+    };
+    let start = std::time::Instant::now();
+    let outcome = sweep::run(&spec, &opts).expect("sweep I/O");
+    let rows = &outcome.results;
+
     println!("\n{} design points; pareto frontier:", rows.len());
-    for r in rows.iter().filter(|r| r.pareto) {
-        println!("  {:<22} cycles={:<12} area={:.2}", r.config, r.cycles, r.scaled_area);
+    for p in outcome.front.points() {
+        let r = &rows[p.id];
+        println!("  {:<22} cycles={:<12} area={:.2}", r.config.tag(), r.cycles, r.scaled_area);
     }
     let min_c = rows.iter().map(|r| r.cycles).min().unwrap();
     let max_c = rows.iter().map(|r| r.cycles).max().unwrap();
@@ -22,5 +55,12 @@ fn main() {
         "\ncycle span {:.1}x | area span {:.1}x (paper: ~11.5x cycles at ~12x area)",
         max_c as f64 / min_c as f64,
         max_a / min_a
+    );
+    println!(
+        "{} simulated, {} cached, up to {} workers, {:.1}s wall",
+        outcome.simulated,
+        outcome.cached,
+        sweep::effective_jobs(opts.jobs).min(outcome.simulated.max(1)),
+        start.elapsed().as_secs_f64()
     );
 }

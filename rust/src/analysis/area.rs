@@ -50,9 +50,17 @@ impl AreaModel {
     }
 }
 
-/// Convenience: scaled area under the default model.
+/// Convenience: scaled area under the default model. The normalization
+/// base (the default configuration's area) is computed once per process
+/// — this sits on the sweep engine's per-point path, where rebuilding
+/// the default config and its ISA layout for every design point is
+/// measurable at large grid sizes.
 pub fn scaled_area(cfg: &VtaConfig) -> f64 {
-    AreaModel::default().scaled_area(cfg)
+    static BASE: std::sync::OnceLock<f64> = std::sync::OnceLock::new();
+    let base = *BASE.get_or_init(|| {
+        AreaModel::default().area_units(&crate::config::presets::default_config())
+    });
+    AreaModel::default().area_units(cfg) / base
 }
 
 #[cfg(test)]
@@ -63,6 +71,15 @@ mod tests {
     #[test]
     fn default_config_is_unity() {
         assert!((scaled_area(&presets::default_config()) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn memoized_base_matches_model() {
+        // The cached-base fast path must be bit-identical to the
+        // uncached AreaModel::scaled_area.
+        for cfg in presets::all() {
+            assert_eq!(scaled_area(&cfg), AreaModel::default().scaled_area(&cfg), "{}", cfg.name);
+        }
     }
 
     #[test]

@@ -11,6 +11,7 @@ use crate::config::VtaConfig;
 use crate::config::IsaLayout;
 use crate::isa::{AluInsn, AluOp, BufferId, GemmInsn, Insn, MemInsn, Opcode, Uop};
 use crate::mem::Dram;
+use crate::util::hash::Fnv;
 
 /// Byte/operation counters. LOAD byte counters per buffer feed the
 /// Fig 10/11 DRAM-traffic experiments directly.
@@ -400,36 +401,6 @@ pub fn alu_eval(op: AluOp, dst: i32, src: i32) -> i32 {
         // New: single-instruction clamp to [-imm, imm].
         AluOp::Clip => dst.clamp(-src, src),
         AluOp::Mov => src,
-    }
-}
-
-/// Tiny FNV-1a hasher for state digests.
-struct Fnv(u64);
-
-impl Fnv {
-    fn new() -> Fnv {
-        Fnv(0xcbf29ce484222325)
-    }
-
-    fn write_u8(&mut self, b: u8) {
-        self.0 ^= b as u64;
-        self.0 = self.0.wrapping_mul(0x100000001b3);
-    }
-
-    fn write_u32(&mut self, v: u32) {
-        for b in v.to_le_bytes() {
-            self.write_u8(b);
-        }
-    }
-
-    fn write_i8s(&mut self, vs: &[i8]) {
-        for &v in vs {
-            self.write_u8(v as u8);
-        }
-    }
-
-    fn finish(&self) -> u64 {
-        self.0
     }
 }
 

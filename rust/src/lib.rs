@@ -6,8 +6,11 @@
 //! system. This crate is the Rust layer: the VTA cycle-accurate simulator
 //! (*tsim*), behavioral simulator (*fsim*), the compiler (tiling parameter
 //! search, double buffering, full-network schedules), the JIT runtime, the
-//! analysis tooling (roofline, utilization, area), and a PJRT-based golden
-//! verification path against the JAX/Pallas model compiled AOT to HLO.
+//! analysis tooling (roofline, utilization, area), the parallel
+//! design-space-exploration engine (*sweep*: work-stealing workers, a
+//! resumable on-disk result cache, incremental Pareto extraction), and a
+//! PJRT-based golden verification path against the JAX/Pallas model
+//! compiled AOT to HLO (behind the `pjrt` cargo feature).
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured results.
@@ -22,6 +25,7 @@ pub mod isa;
 pub mod mem;
 pub mod repro;
 pub mod runtime;
+pub mod sweep;
 pub mod util;
 pub mod workloads;
 pub mod sim;

@@ -4,6 +4,8 @@
 //!   run        run a network end-to-end on a simulator target
 //!   repro      regenerate a paper figure/table (pipelining, fig2, fig3,
 //!              fig10, fig11, fig12, fig13, all)
+//!   sweep      parallel design-space exploration over a config grid,
+//!              with a resumable on-disk result cache (Fig 13 and beyond)
 //!   config     show or save a named configuration as JSON
 //!   floorplan  generate + check the ACC-centric floorplan for a config
 //!   isa        print the derived ISA field layout for a config
@@ -13,7 +15,9 @@ use vta::config::{presets, VtaConfig};
 use vta::floorplan;
 use vta::repro;
 use vta::runtime::{Session, SessionOptions, Target};
+use vta::sweep::{self, GridSpec, SweepOptions, WorkloadSpec};
 use vta::util::cli::Args;
+use vta::util::json::{obj, Json};
 use vta::util::rng::Pcg32;
 use vta::util::stats;
 use vta::workloads;
@@ -27,6 +31,12 @@ fn usage() -> ! {
                       [--config default|original|tiny|large|wide32 | --config-file f.json]\n\
                       [--target tsim|fsim] [--hw 224] [--seed 1] [--no-tps] [--no-dbuf]\n\
            repro      pipelining|ablation|fig2|fig3|fig10|fig11|fig12|fig13|all [--quick] [--out results]\n\
+                      [--jobs N]  (fig13 runs on the parallel sweep engine)\n\
+           sweep      [--quick] [--jobs N] [--resume|--fresh] [--cache sweep_cache.jsonl]\n\
+                      [--out sweep_results.json] [--no-progress]\n\
+                      grid: [--blocks 16,32,64] [--axi 8,16,32,64] [--scales 1,2,4]\n\
+                      [--batch 1] [--net resnet18|...|mobilenet|micro] [--hw 224]\n\
+                      [--workloads resnet18@224,mobilenet@56] [--seeds 7,8] [--graph-seed 1]\n\
            config     show|save --config <name> [--out path.json]\n\
            floorplan  [--config <name>]\n\
            isa        [--config <name>]"
@@ -154,7 +164,7 @@ fn cmd_repro(args: &Args) {
             repro::fig12(quick);
         }
         "fig13" => {
-            repro::fig13(quick);
+            repro::fig13_jobs(quick, args.get_usize("jobs", 0));
         }
         "ablation" => {
             repro::ablation(quick);
@@ -172,6 +182,146 @@ fn cmd_repro(args: &Args) {
             repro::fig13(quick);
         }
         _ => usage(),
+    }
+}
+
+fn parse_workload(s: &str) -> WorkloadSpec {
+    WorkloadSpec::parse(s).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    })
+}
+
+fn cmd_sweep(args: &Args) {
+    let quick = args.has_flag("quick");
+    let mut grid = GridSpec::fig13(quick);
+    grid.batch = args.get_usize("batch", grid.batch);
+    grid.blocks = args.get_usize_list("blocks", &grid.blocks);
+    grid.axi = args.get_usize_list("axi", &grid.axi);
+    grid.scales = args.get_usize_list("scales", &grid.scales);
+    grid.seeds = args.get_u64_list("seeds", &grid.seeds);
+    grid.graph_seed = args.get_u64("graph-seed", grid.graph_seed);
+    if args.get("net").is_some() || args.get("hw").is_some() {
+        let net = args.get_or("net", "resnet18");
+        // For `micro` the @-suffix is a channel-block width, not an
+        // image size — never apply the image-resolution default to it.
+        let workload = match (args.get("hw"), net) {
+            (Some(_), _) => parse_workload(&format!("{net}@{}", args.get_usize("hw", 224))),
+            (None, "micro") => parse_workload(net),
+            (None, _) => {
+                parse_workload(&format!("{net}@{}", if quick { 56 } else { 224 }))
+            }
+        };
+        grid.workloads = vec![workload];
+    }
+    if let Some(list) = args.get("workloads") {
+        grid.workloads = list
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(parse_workload)
+            .collect();
+    }
+
+    let spec = grid.to_sweep_spec();
+    let n_points = spec.jobs().len();
+    if n_points == 0 {
+        eprintln!("error: the grid contains no valid design points");
+        std::process::exit(1);
+    }
+    let jobs = args.get_usize("jobs", 0);
+    let cache = args.get_or("cache", "sweep_cache.jsonl");
+    let resume = args.has_flag("resume");
+    // Guard the cache: without --resume the engine truncates the file,
+    // which would silently destroy a previous (possibly hours-long)
+    // run's results. Require an explicit --fresh to overwrite.
+    if !resume && !args.has_flag("fresh") {
+        if let Ok(meta) = std::fs::metadata(cache) {
+            if meta.len() > 0 {
+                eprintln!(
+                    "error: cache '{cache}' already holds results; pass --resume to \
+                     reuse them or --fresh to discard and start over"
+                );
+                std::process::exit(1);
+            }
+        }
+    }
+    let opts = SweepOptions {
+        jobs,
+        cache_path: Some(cache.into()),
+        resume,
+        progress: !args.has_flag("no-progress"),
+    };
+    // "up to": the engine spawns min(workers, uncached points), which
+    // is only known once the cache has been consulted.
+    println!(
+        "sweep: {} design points, up to {} workers, cache {cache}{}",
+        n_points,
+        sweep::effective_jobs(jobs).min(n_points),
+        if opts.resume { " (resume)" } else { "" }
+    );
+    let start = std::time::Instant::now();
+    let outcome = sweep::run(&spec, &opts).unwrap_or_else(|e| {
+        eprintln!("sweep I/O error: {e}");
+        std::process::exit(1);
+    });
+    let wall = start.elapsed();
+
+    println!(
+        "\n{:<22} {:<14} {:>6} {:>12} {:>10} {:>7}",
+        "config", "workload", "seed", "cycles", "area", "pareto"
+    );
+    for (i, r) in outcome.results.iter().enumerate() {
+        println!(
+            "{:<22} {:<14} {:>6} {:>12} {:>10.2} {:>7}",
+            r.config.tag(),
+            r.workload,
+            r.seed,
+            r.cycles,
+            r.scaled_area,
+            if outcome.front.contains(i) { "*" } else { "" }
+        );
+    }
+    println!("\npareto frontier ({} points):", outcome.front.len());
+    for p in outcome.front.points() {
+        let r = &outcome.results[p.id];
+        println!("  {:<22} cycles={:<12} area={:.2}", r.config.tag(), r.cycles, r.scaled_area);
+    }
+    println!(
+        "\n{} simulated, {} from cache in {}",
+        outcome.simulated,
+        outcome.cached,
+        stats::fmt_ns(wall.as_nanos() as f64)
+    );
+
+    let out = args.get_or("out", "sweep_results.json");
+    let points: Vec<Json> = outcome
+        .results
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let mut j = r.to_json();
+            if let Json::Object(map) = &mut j {
+                map.insert("pareto".to_string(), Json::Bool(outcome.front.contains(i)));
+            }
+            j
+        })
+        .collect();
+    let summary = obj([
+        ("points", Json::Array(points)),
+        (
+            "pareto_ids",
+            Json::Array(outcome.front.ids().iter().map(|&i| Json::Int(i as i64)).collect()),
+        ),
+        ("cached", Json::Int(outcome.cached as i64)),
+        ("simulated", Json::Int(outcome.simulated as i64)),
+    ]);
+    match std::fs::write(out, summary.to_string_pretty()) {
+        Ok(()) => println!("results written to {out}"),
+        Err(e) => {
+            eprintln!("error writing {out}: {e}");
+            std::process::exit(1);
+        }
     }
 }
 
@@ -226,6 +376,7 @@ fn main() {
     match args.subcommand() {
         Some("run") => cmd_run(&args),
         Some("repro") => cmd_repro(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("config") => cmd_config(&args),
         Some("floorplan") => cmd_floorplan(&args),
         Some("isa") => cmd_isa(&args),

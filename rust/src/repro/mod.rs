@@ -10,6 +10,7 @@ use crate::analysis::{area, gantt, roofline};
 use crate::compiler::graph::Graph;
 use crate::config::{presets, VtaConfig};
 use crate::runtime::{Session, SessionOptions, Target};
+use crate::sweep;
 use crate::util::rng::Pcg32;
 use crate::util::stats;
 use crate::workloads;
@@ -314,35 +315,41 @@ pub struct Fig13Row {
 /// ResNet-18 over MAC shape × memory width × scratchpad scaling. Paper:
 /// ~12× area buys a further ~11.5× cycle reduction past the pipelined
 /// default, in three MAC-shape clusters.
+///
+/// Runs on the parallel sweep engine with one worker per core; the
+/// engine is deterministic, so rows and frontier are identical to the
+/// historical serial loop for any worker count (see `rust/tests/
+/// sweep_engine.rs`).
 pub fn fig13(quick: bool) -> Vec<Fig13Row> {
-    let g = workloads::resnet(18, resnet_hw(quick), 1);
-    let blocks: &[usize] = &[16, 32, 64];
-    let axis: &[usize] = if quick { &[8, 64] } else { &[8, 16, 32, 64] };
-    let scales: &[usize] = if quick { &[2] } else { &[1, 2, 4] };
-    let mut rows = Vec::new();
+    fig13_jobs(quick, 0)
+}
+
+/// Fig 13 with an explicit worker count (`0` = one per core).
+pub fn fig13_jobs(quick: bool, jobs: usize) -> Vec<Fig13Row> {
+    let spec = sweep::GridSpec::fig13(quick).to_sweep_spec();
     println!("== Design-space sweep (Fig 13): ResNet-18 ==");
+    // Stream progress as points land (the full grid runs for hours);
+    // the row table below is re-printed in grid order at the end.
+    let opts = sweep::SweepOptions { jobs, progress: true, ..Default::default() };
+    let outcome = sweep::run(&spec, &opts).expect("in-memory sweep performs no I/O");
     println!("{:<22} {:>6} {:>12} {:>10}", "config", "block", "cycles", "area");
-    for &block in blocks {
-        for &axi in axis {
-            for &scale in scales {
-                let cfg = presets::scaled_config(1, block, block, scale, axi);
-                if cfg.validate().is_err() {
-                    continue;
-                }
-                let s = run_tsim(&g, &cfg, SessionOptions::default(), 7);
-                let a = area::scaled_area(&cfg);
-                println!("{:<22} {:>6} {:>12} {:>10.2}", cfg.tag(), block, s.cycles(), a);
-                rows.push(Fig13Row {
-                    config: cfg.tag(),
-                    block,
-                    cycles: s.cycles(),
-                    scaled_area: a,
-                    pareto: false,
-                });
-            }
-        }
+    let mut rows = Vec::new();
+    for (i, r) in outcome.results.iter().enumerate() {
+        println!(
+            "{:<22} {:>6} {:>12} {:>10.2}",
+            r.config.tag(),
+            r.config.block_in,
+            r.cycles,
+            r.scaled_area
+        );
+        rows.push(Fig13Row {
+            config: r.config.tag(),
+            block: r.config.block_in,
+            cycles: r.cycles,
+            scaled_area: r.scaled_area,
+            pareto: outcome.front.contains(i),
+        });
     }
-    mark_pareto(&mut rows);
     let best = rows.iter().filter(|r| r.pareto).map(|r| r.config.clone()).collect::<Vec<_>>();
     println!("pareto frontier: {}", best.join(", "));
     rows

@@ -1,0 +1,177 @@
+//! On-disk, resumable result cache for the sweep engine.
+//!
+//! Append-only JSONL (`util/json` codec): one completed design point per
+//! line, written and flushed as workers finish, so a killed sweep loses
+//! at most the in-flight points. Records are keyed by a stable FNV-1a
+//! hash of the canonical `(config JSON, workload id, seed, graph seed)`
+//! string — the config's serialized form is deterministic (BTreeMap
+//! keys), so keys survive process restarts and cross-machine moves.
+//!
+//! Loading tolerates a truncated or corrupt line (the kill-mid-write
+//! case): such lines are counted in [`ResultCache::skipped`] and their
+//! points simply re-simulate on resume.
+
+use super::PointResult;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufRead, BufReader, Write};
+use std::path::Path;
+
+pub struct ResultCache {
+    seen: BTreeMap<u64, PointResult>,
+    file: Option<File>,
+    /// Valid records recovered from an existing cache file.
+    pub loaded: usize,
+    /// Unparsable lines ignored during load (truncated final write).
+    pub skipped: usize,
+}
+
+impl ResultCache {
+    /// Cache without a backing file (results kept only in memory).
+    pub fn in_memory() -> ResultCache {
+        ResultCache { seen: BTreeMap::new(), file: None, loaded: 0, skipped: 0 }
+    }
+
+    /// Open a file-backed cache. With `resume`, existing records are
+    /// loaded and new ones appended; without, the file is truncated and
+    /// the sweep starts cold.
+    pub fn open(path: &Path, resume: bool) -> io::Result<ResultCache> {
+        let mut seen = BTreeMap::new();
+        let mut loaded = 0;
+        let mut skipped = 0;
+        if resume && path.exists() {
+            let reader = BufReader::new(File::open(path)?);
+            for line in reader.lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match Json::parse(&line).ok().and_then(|j| PointResult::from_json(&j)) {
+                    Some(result) => {
+                        seen.insert(result.cache_key(), result);
+                        loaded += 1;
+                    }
+                    None => skipped += 1,
+                }
+            }
+        }
+        let file = if resume {
+            OpenOptions::new().create(true).append(true).open(path)?
+        } else {
+            OpenOptions::new().create(true).write(true).truncate(true).open(path)?
+        };
+        Ok(ResultCache { seen, file: Some(file), loaded, skipped })
+    }
+
+    pub fn get(&self, key: u64) -> Option<&PointResult> {
+        self.seen.get(&key)
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.seen.contains_key(&key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.seen.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seen.is_empty()
+    }
+
+    /// Record a completed point: one JSONL line, flushed immediately so
+    /// a kill after this call never loses the result.
+    pub fn insert(&mut self, result: &PointResult) -> io::Result<()> {
+        if let Some(file) = &mut self.file {
+            let mut line = result.to_json().to_string_compact();
+            line.push('\n');
+            file.write_all(line.as_bytes())?;
+            file.flush()?;
+        }
+        self.seen.insert(result.cache_key(), result.clone());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use std::path::PathBuf;
+
+    fn sample(seed: u64) -> PointResult {
+        PointResult {
+            config: presets::tiny_config(),
+            workload: "micro@4".to_string(),
+            seed,
+            graph_seed: 42,
+            cycles: 1000 + seed,
+            macs: 5000,
+            dram_rd: 640,
+            dram_wr: 320,
+            insns: 12,
+            scaled_area: 0.25,
+        }
+    }
+
+    fn temp_path(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("vta_cache_test_{}_{name}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn in_memory_roundtrip() {
+        let mut c = ResultCache::in_memory();
+        let r = sample(1);
+        c.insert(&r).unwrap();
+        assert_eq!(c.get(r.cache_key()), Some(&r));
+        assert!(!c.contains(sample(2).cache_key()));
+    }
+
+    #[test]
+    fn file_backed_resume_recovers_records() {
+        let path = temp_path("resume");
+        {
+            let mut c = ResultCache::open(&path, false).unwrap();
+            c.insert(&sample(1)).unwrap();
+            c.insert(&sample(2)).unwrap();
+        }
+        let c = ResultCache::open(&path, true).unwrap();
+        assert_eq!(c.loaded, 2);
+        assert_eq!(c.skipped, 0);
+        assert_eq!(c.get(sample(1).cache_key()).unwrap().cycles, 1001);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_tail_line_is_skipped() {
+        let path = temp_path("truncated");
+        {
+            let mut c = ResultCache::open(&path, false).unwrap();
+            c.insert(&sample(1)).unwrap();
+        }
+        // Simulate a kill mid-write: append half a record.
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        let full = text.clone();
+        text.push_str(&full[..full.len() / 2].replace('\n', " "));
+        std::fs::write(&path, &text).unwrap();
+        let c = ResultCache::open(&path, true).unwrap();
+        assert_eq!(c.loaded, 1);
+        assert_eq!(c.skipped, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn open_without_resume_truncates() {
+        let path = temp_path("truncate");
+        {
+            let mut c = ResultCache::open(&path, false).unwrap();
+            c.insert(&sample(1)).unwrap();
+        }
+        let c = ResultCache::open(&path, false).unwrap();
+        assert_eq!(c.loaded, 0);
+        assert!(c.is_empty());
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 0);
+        std::fs::remove_file(&path).ok();
+    }
+}

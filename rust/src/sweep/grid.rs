@@ -1,0 +1,196 @@
+//! Grid specifications: which (configuration × workload × seed) points a
+//! sweep covers.
+//!
+//! A [`GridSpec`] is the CLI-facing description (axis lists, mirroring
+//! the paper's Fig 13 axes: MAC shape × memory width × scratchpad
+//! scaling); it expands to the engine-facing [`super::SweepSpec`] — an
+//! explicit configuration list — so callers can also sweep arbitrary
+//! hand-built configurations.
+
+use crate::compiler::graph::Graph;
+use crate::config::presets;
+use crate::workloads;
+
+/// A workload the sweep can build, identified by a stable string id
+/// (used in cache keys and result records): `resnet18@224`,
+/// `mobilenet@56`, `micro@16`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorkloadSpec {
+    /// `resnet{depth}@{hw}` — ResNet at an input resolution.
+    Resnet { depth: usize, hw: usize },
+    /// `mobilenet@{hw}` — MobileNet-1.0 at an input resolution.
+    Mobilenet { hw: usize },
+    /// `micro@{block}` — the fast micro-ResNet test network; `block`
+    /// must match the configuration's BLOCK for accelerator execution.
+    Micro { block: usize },
+}
+
+impl WorkloadSpec {
+    /// Parse an id like `resnet18@56`, `mobilenet`, `micro@4`. The part
+    /// after `@` defaults to 224 (nets) or 16 (micro).
+    pub fn parse(s: &str) -> Result<WorkloadSpec, String> {
+        let (name, size) = match s.split_once('@') {
+            Some((n, v)) => {
+                let v = v
+                    .parse::<usize>()
+                    .map_err(|_| format!("bad size in workload '{s}'"))?;
+                (n, Some(v))
+            }
+            None => (s, None),
+        };
+        match name {
+            "mobilenet" => Ok(WorkloadSpec::Mobilenet { hw: size.unwrap_or(224) }),
+            "micro" => Ok(WorkloadSpec::Micro { block: size.unwrap_or(16) }),
+            _ => {
+                let depth = name
+                    .strip_prefix("resnet")
+                    .and_then(|d| d.parse::<usize>().ok())
+                    .ok_or_else(|| format!("unknown workload '{s}'"))?;
+                if !workloads::RESNET_DEPTHS.contains(&depth) {
+                    return Err(format!("unsupported ResNet depth {depth} in '{s}'"));
+                }
+                Ok(WorkloadSpec::Resnet { depth, hw: size.unwrap_or(224) })
+            }
+        }
+    }
+
+    /// Stable identifier; `parse(id())` round-trips.
+    pub fn id(&self) -> String {
+        match self {
+            WorkloadSpec::Resnet { depth, hw } => format!("resnet{depth}@{hw}"),
+            WorkloadSpec::Mobilenet { hw } => format!("mobilenet@{hw}"),
+            WorkloadSpec::Micro { block } => format!("micro@{block}"),
+        }
+    }
+
+    /// Build the graph with synthetic weights seeded by `graph_seed`.
+    pub fn build(&self, graph_seed: u64) -> Graph {
+        match self {
+            WorkloadSpec::Resnet { depth, hw } => workloads::resnet(*depth, *hw, graph_seed),
+            WorkloadSpec::Mobilenet { hw } => workloads::mobilenet(*hw, graph_seed),
+            WorkloadSpec::Micro { block } => workloads::micro_resnet(*block, graph_seed),
+        }
+    }
+}
+
+/// Axis-product grid over `presets::scaled_config` points.
+#[derive(Debug, Clone)]
+pub struct GridSpec {
+    /// GEMM tile batch dimension (square MAC arrays: BLOCK_IN=BLOCK_OUT).
+    pub batch: usize,
+    /// MAC-shape axis (BLOCK values).
+    pub blocks: Vec<usize>,
+    /// Memory-interface-width axis (AXI bytes/cycle).
+    pub axi: Vec<usize>,
+    /// Scratchpad-scaling axis.
+    pub scales: Vec<usize>,
+    pub workloads: Vec<WorkloadSpec>,
+    /// Input-data seeds (one job per seed).
+    pub seeds: Vec<u64>,
+    /// Synthetic-weight seed, shared by all points.
+    pub graph_seed: u64,
+}
+
+impl GridSpec {
+    /// The paper's Fig 13 grid: ResNet-18 over MAC shape × memory width
+    /// × scratchpad scaling, with the historical seeds of the serial
+    /// `repro::fig13` driver (weights seed 1, input seed 7).
+    pub fn fig13(quick: bool) -> GridSpec {
+        GridSpec {
+            batch: 1,
+            blocks: vec![16, 32, 64],
+            axi: if quick { vec![8, 64] } else { vec![8, 16, 32, 64] },
+            scales: if quick { vec![2] } else { vec![1, 2, 4] },
+            workloads: vec![WorkloadSpec::Resnet { depth: 18, hw: if quick { 56 } else { 224 } }],
+            seeds: vec![7],
+            graph_seed: 1,
+        }
+    }
+
+    /// Expand the axes into an explicit configuration list, in the same
+    /// nested order (block, then axi, then scale) as the serial Fig 13
+    /// loop, so row order is stable across engine versions.
+    pub fn to_sweep_spec(&self) -> super::SweepSpec {
+        let mut configs = Vec::new();
+        for &block in &self.blocks {
+            for &axi in &self.axi {
+                for &scale in &self.scales {
+                    configs.push(presets::scaled_config(self.batch, block, block, scale, axi));
+                }
+            }
+        }
+        super::SweepSpec {
+            configs,
+            workloads: self.workloads.clone(),
+            seeds: self.seeds.clone(),
+            graph_seed: self.graph_seed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_id_parse_roundtrip() {
+        for id in ["resnet18@224", "resnet50@56", "mobilenet@224", "micro@4"] {
+            let w = WorkloadSpec::parse(id).unwrap();
+            assert_eq!(w.id(), id);
+        }
+    }
+
+    #[test]
+    fn workload_parse_defaults() {
+        assert_eq!(
+            WorkloadSpec::parse("resnet34").unwrap(),
+            WorkloadSpec::Resnet { depth: 34, hw: 224 }
+        );
+        assert_eq!(WorkloadSpec::parse("micro").unwrap(), WorkloadSpec::Micro { block: 16 });
+    }
+
+    #[test]
+    fn workload_parse_rejects_garbage() {
+        assert!(WorkloadSpec::parse("resnet19").is_err());
+        assert!(WorkloadSpec::parse("alexnet").is_err());
+        assert!(WorkloadSpec::parse("resnet18@big").is_err());
+    }
+
+    #[test]
+    fn fig13_grid_matches_serial_driver() {
+        let quick = GridSpec::fig13(true);
+        assert_eq!(quick.blocks, vec![16, 32, 64]);
+        assert_eq!(quick.axi, vec![8, 64]);
+        assert_eq!(quick.scales, vec![2]);
+        assert_eq!(quick.workloads[0].id(), "resnet18@56");
+        let full = GridSpec::fig13(false);
+        assert_eq!(full.axi, vec![8, 16, 32, 64]);
+        assert_eq!(full.scales, vec![1, 2, 4]);
+        assert_eq!(full.workloads[0].id(), "resnet18@224");
+    }
+
+    #[test]
+    fn grid_expansion_order_is_block_axi_scale() {
+        let g = GridSpec {
+            batch: 1,
+            blocks: vec![16, 32],
+            axi: vec![8, 16],
+            scales: vec![1],
+            workloads: vec![WorkloadSpec::Micro { block: 16 }],
+            seeds: vec![7],
+            graph_seed: 1,
+        };
+        let spec = g.to_sweep_spec();
+        let names: Vec<&str> = spec.configs.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["b1-i16-o16-s1-m8", "b1-i16-o16-s1-m16", "b1-i32-o32-s1-m8", "b1-i32-o32-s1-m16"]
+        );
+    }
+
+    #[test]
+    fn micro_workload_builds() {
+        let g = WorkloadSpec::Micro { block: 4 }.build(42);
+        assert_eq!(g.name, "micro-resnet");
+    }
+}

@@ -1,0 +1,408 @@
+//! Parallel design-space-exploration engine (the paper's Fig 13
+//! workflow, generalized and made a first-class subsystem).
+//!
+//! A sweep is a (configuration × workload × seed) grid. The engine:
+//!
+//! * expands the grid into jobs and shards them across `std::thread`
+//!   workers through a work-stealing deque ([`queue::JobQueue`]);
+//! * evaluates each point by running the full stack — graph build,
+//!   compile, cycle-accurate tsim — exactly as the serial drivers do, so
+//!   a parallel sweep is bit-identical to a serial one;
+//! * streams finished points into an on-disk resumable JSONL cache
+//!   ([`cache::ResultCache`]) keyed by a stable hash of the point, so a
+//!   killed sweep resumes where it stopped and warm re-runs are instant;
+//! * maintains the (scaled area, cycles) Pareto frontier incrementally
+//!   ([`pareto::ParetoFront`]) as results land.
+//!
+//! Determinism: simulation is seeded and single-threaded per point, the
+//! result vector is indexed by job order (grid order), and the frontier
+//! is an order-independent set — so the outcome is byte-identical
+//! regardless of `--jobs` and of cache warmth.
+
+pub mod cache;
+pub mod grid;
+pub mod pareto;
+pub mod queue;
+
+pub use cache::ResultCache;
+pub use grid::{GridSpec, WorkloadSpec};
+pub use pareto::{ParetoFront, ParetoPoint};
+
+use crate::analysis::area;
+use crate::compiler::graph::Graph;
+use crate::config::VtaConfig;
+use crate::runtime::{Session, SessionOptions};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Pcg32;
+use queue::JobQueue;
+use std::collections::BTreeMap;
+use std::io;
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+/// Stable 64-bit cache-key hash (FNV-1a via `util::hash`): stable
+/// across processes, which `std::hash` explicitly is not.
+pub fn stable_hash64(s: &str) -> u64 {
+    crate::util::hash::fnv1a64(s)
+}
+
+/// Canonical identity string of a design point; its hash is the cache
+/// key. The config's JSON form is deterministic (sorted keys).
+fn key_string(cfg: &VtaConfig, workload: &str, seed: u64, graph_seed: u64) -> String {
+    format!("{}|{}|{}|{}", cfg.to_json().to_string_compact(), workload, seed, graph_seed)
+}
+
+/// The grid a sweep covers: every valid config × workload × seed.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub configs: Vec<VtaConfig>,
+    pub workloads: Vec<WorkloadSpec>,
+    /// Input-data seeds; one job per seed.
+    pub seeds: Vec<u64>,
+    /// Synthetic-weight seed shared by all jobs.
+    pub graph_seed: u64,
+}
+
+impl SweepSpec {
+    /// Expand into the job list, skipping configurations that fail
+    /// `validate()` (exactly as the serial Fig 13 loop did). Job index =
+    /// position here = row order of every report.
+    pub fn jobs(&self) -> Vec<SweepJob> {
+        let mut jobs = Vec::new();
+        for cfg in &self.configs {
+            if cfg.validate().is_err() {
+                continue;
+            }
+            for workload in &self.workloads {
+                for &seed in &self.seeds {
+                    jobs.push(SweepJob {
+                        index: jobs.len(),
+                        cfg: cfg.clone(),
+                        workload: workload.clone(),
+                        seed,
+                        graph_seed: self.graph_seed,
+                    });
+                }
+            }
+        }
+        jobs
+    }
+}
+
+/// One design point to evaluate.
+#[derive(Debug, Clone)]
+pub struct SweepJob {
+    pub index: usize,
+    pub cfg: VtaConfig,
+    pub workload: WorkloadSpec,
+    pub seed: u64,
+    pub graph_seed: u64,
+}
+
+impl SweepJob {
+    pub fn cache_key(&self) -> u64 {
+        stable_hash64(&key_string(&self.cfg, &self.workload.id(), self.seed, self.graph_seed))
+    }
+}
+
+/// A completed design point: the full configuration plus the measured
+/// metrics, self-contained so the cache file is the sweep's artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PointResult {
+    pub config: VtaConfig,
+    /// Workload id (`WorkloadSpec::id`).
+    pub workload: String,
+    pub seed: u64,
+    pub graph_seed: u64,
+    pub cycles: u64,
+    pub macs: u64,
+    pub dram_rd: u64,
+    pub dram_wr: u64,
+    pub insns: u64,
+    pub scaled_area: f64,
+}
+
+impl PointResult {
+    pub fn cache_key(&self) -> u64 {
+        stable_hash64(&key_string(&self.config, &self.workload, self.seed, self.graph_seed))
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("config", self.config.to_json()),
+            ("workload", Json::Str(self.workload.clone())),
+            ("seed", Json::Int(self.seed as i64)),
+            ("graph_seed", Json::Int(self.graph_seed as i64)),
+            ("cycles", Json::Int(self.cycles as i64)),
+            ("macs", Json::Int(self.macs as i64)),
+            ("dram_rd", Json::Int(self.dram_rd as i64)),
+            ("dram_wr", Json::Int(self.dram_wr as i64)),
+            ("insns", Json::Int(self.insns as i64)),
+            ("area", Json::Float(self.scaled_area)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<PointResult> {
+        let int = |name: &str| j.get(name).and_then(|v| v.as_i64()).map(|v| v as u64);
+        Some(PointResult {
+            config: VtaConfig::from_json(j.get("config")?).ok()?,
+            workload: j.get("workload")?.as_str()?.to_string(),
+            seed: int("seed")?,
+            graph_seed: int("graph_seed")?,
+            cycles: int("cycles")?,
+            macs: int("macs")?,
+            dram_rd: int("dram_rd")?,
+            dram_wr: int("dram_wr")?,
+            insns: int("insns")?,
+            scaled_area: j.get("area")?.as_f64()?,
+        })
+    }
+}
+
+/// Evaluate one design point by running the full stack on tsim — the
+/// same path as the serial `repro` drivers (graph weights from
+/// `graph_seed`, input data from `seed`), so results are comparable and
+/// cacheable across entry points.
+pub fn evaluate(job: &SweepJob) -> PointResult {
+    evaluate_with_graph(job, &job.workload.build(job.graph_seed))
+}
+
+/// [`evaluate`] against a pre-built graph. The engine builds each
+/// distinct workload's graph once and shares it read-only across
+/// workers — synthetic weights depend only on `(workload, graph_seed)`,
+/// and regenerating ResNet-18's ~11M weights per design point (one copy
+/// per concurrent worker) would dominate small-config sweeps.
+pub fn evaluate_with_graph(job: &SweepJob, graph: &Graph) -> PointResult {
+    let mut session = Session::new(&job.cfg, SessionOptions::default());
+    let mut rng = Pcg32::seeded(job.seed);
+    let input = rng.i8_vec(job.cfg.batch * graph.input_shape.elems());
+    session.run_graph(graph, &input);
+    let counters = session.exec_counters();
+    PointResult {
+        config: job.cfg.clone(),
+        workload: job.workload.id(),
+        seed: job.seed,
+        graph_seed: job.graph_seed,
+        cycles: session.cycles(),
+        macs: counters.macs,
+        dram_rd: counters.load_bytes_total(),
+        dram_wr: counters.store_bytes,
+        insns: counters.insn_count,
+        scaled_area: area::scaled_area(&job.cfg),
+    }
+}
+
+/// Execution options for a sweep run.
+#[derive(Debug, Clone, Default)]
+pub struct SweepOptions {
+    /// Worker threads; 0 = one per available core.
+    pub jobs: usize,
+    /// JSONL cache file; `None` keeps results in memory only.
+    pub cache_path: Option<PathBuf>,
+    /// Load existing cache records and append, instead of truncating.
+    pub resume: bool,
+    /// Print a line as each point completes.
+    pub progress: bool,
+}
+
+/// Everything a sweep produced.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    /// One result per job, in job (grid) order.
+    pub results: Vec<PointResult>,
+    /// Pareto frontier over (scaled area, cycles); ids are job indices.
+    pub front: ParetoFront,
+    /// Points served from the cache without simulating.
+    pub cached: usize,
+    /// Points actually simulated in this run.
+    pub simulated: usize,
+}
+
+/// Run a sweep: shard pending points across workers, stream results to
+/// the cache, and extract the Pareto frontier incrementally.
+pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> io::Result<SweepOutcome> {
+    let jobs = spec.jobs();
+    let mut cache = match &opts.cache_path {
+        Some(path) => ResultCache::open(path, opts.resume)?,
+        None => ResultCache::in_memory(),
+    };
+
+    let mut results: Vec<Option<PointResult>> = vec![None; jobs.len()];
+    let mut front = ParetoFront::new();
+    let mut pending = Vec::new();
+    let mut cached = 0;
+    for job in &jobs {
+        match cache.get(job.cache_key()) {
+            Some(hit) => {
+                front.insert(hit.scaled_area, hit.cycles, job.index);
+                results[job.index] = Some(hit.clone());
+                cached += 1;
+            }
+            None => pending.push(job.index),
+        }
+    }
+    let simulated = pending.len();
+
+    if !pending.is_empty() {
+        let workers = effective_jobs(opts.jobs).min(pending.len());
+        let job_queue = JobQueue::new(workers, &pending);
+        // One graph per distinct workload, shared read-only by all
+        // workers (weights depend only on the workload and the spec-wide
+        // graph_seed — see `evaluate_with_graph`).
+        let mut graphs: BTreeMap<String, Graph> = BTreeMap::new();
+        for &j in &pending {
+            let workload = &jobs[j].workload;
+            graphs
+                .entry(workload.id())
+                .or_insert_with(|| workload.build(spec.graph_seed));
+        }
+        let (tx, rx) = mpsc::channel::<(usize, PointResult)>();
+        let total = jobs.len();
+        std::thread::scope(|scope| -> io::Result<()> {
+            let mut handles = Vec::with_capacity(workers);
+            for w in 0..workers {
+                let tx = tx.clone();
+                let job_queue = &job_queue;
+                let jobs = &jobs;
+                let graphs = &graphs;
+                handles.push(scope.spawn(move || {
+                    while let Some(j) = job_queue.pop(w) {
+                        let job = &jobs[j];
+                        let result = evaluate_with_graph(job, &graphs[&job.workload.id()]);
+                        if tx.send((j, result)).is_err() {
+                            break; // collector gone (I/O error); stop early
+                        }
+                    }
+                }));
+            }
+            drop(tx);
+            let mut done = cached;
+            for (j, result) in rx {
+                cache.insert(&result)?;
+                let on_front = front.insert(result.scaled_area, result.cycles, j);
+                done += 1;
+                if opts.progress {
+                    println!(
+                        "[{done}/{total}] {:<22} {:<14} seed={} cycles={:>12} area={:>7.2}{}",
+                        result.config.name,
+                        result.workload,
+                        result.seed,
+                        result.cycles,
+                        result.scaled_area,
+                        if on_front { "  *pareto" } else { "" }
+                    );
+                }
+                results[j] = Some(result);
+            }
+            Ok(())
+        })?;
+    }
+
+    let results = results
+        .into_iter()
+        .map(|r| r.expect("every job either cached or simulated"))
+        .collect();
+    Ok(SweepOutcome { results, front, cached, simulated })
+}
+
+/// Resolve `jobs = 0` to the core count.
+pub fn effective_jobs(jobs: usize) -> usize {
+    if jobs > 0 {
+        jobs
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn stable_hash_is_stable_and_discriminating() {
+        let cfg = presets::tiny_config();
+        let a = stable_hash64(&key_string(&cfg, "micro@4", 7, 42));
+        let b = stable_hash64(&key_string(&cfg, "micro@4", 7, 42));
+        assert_eq!(a, b, "same point must hash identically");
+        assert_ne!(a, stable_hash64(&key_string(&cfg, "micro@4", 8, 42)), "seed changes key");
+        assert_ne!(
+            a,
+            stable_hash64(&key_string(&cfg, "micro@8", 7, 42)),
+            "workload changes key"
+        );
+        let mut other = presets::tiny_config();
+        other.axi_bytes = 16;
+        assert_ne!(
+            a,
+            stable_hash64(&key_string(&other, "micro@4", 7, 42)),
+            "config changes key"
+        );
+    }
+
+    #[test]
+    fn job_and_result_keys_agree() {
+        let job = SweepJob {
+            index: 0,
+            cfg: presets::tiny_config(),
+            workload: WorkloadSpec::Micro { block: 4 },
+            seed: 7,
+            graph_seed: 42,
+        };
+        let result = PointResult {
+            config: job.cfg.clone(),
+            workload: job.workload.id(),
+            seed: job.seed,
+            graph_seed: job.graph_seed,
+            cycles: 1,
+            macs: 2,
+            dram_rd: 3,
+            dram_wr: 4,
+            insns: 5,
+            scaled_area: 0.5,
+        };
+        assert_eq!(job.cache_key(), result.cache_key());
+    }
+
+    #[test]
+    fn point_result_json_roundtrip() {
+        let r = PointResult {
+            config: presets::scaled_config(1, 32, 32, 2, 16),
+            workload: "resnet18@56".to_string(),
+            seed: 7,
+            graph_seed: 1,
+            cycles: 123_456_789,
+            macs: 987_654_321,
+            dram_rd: 11,
+            dram_wr: 22,
+            insns: 33,
+            scaled_area: 3.141592653589793,
+        };
+        let text = r.to_json().to_string_compact();
+        let back = PointResult::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r, "JSONL record must round-trip exactly");
+    }
+
+    #[test]
+    fn spec_jobs_skip_invalid_configs() {
+        let mut bad = presets::tiny_config();
+        bad.axi_bytes = 128; // out of range
+        let spec = SweepSpec {
+            configs: vec![presets::tiny_config(), bad],
+            workloads: vec![WorkloadSpec::Micro { block: 4 }],
+            seeds: vec![7, 8],
+            graph_seed: 1,
+        };
+        let jobs = spec.jobs();
+        assert_eq!(jobs.len(), 2, "invalid config contributes no jobs");
+        assert!(jobs.iter().all(|j| j.cfg.axi_bytes == 8));
+        assert_eq!(jobs[0].index, 0);
+        assert_eq!(jobs[1].index, 1);
+    }
+
+    #[test]
+    fn effective_jobs_resolves_zero() {
+        assert_eq!(effective_jobs(3), 3);
+        assert!(effective_jobs(0) >= 1);
+    }
+}

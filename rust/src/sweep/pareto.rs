@@ -1,0 +1,135 @@
+//! Incremental Pareto-frontier extraction for the design-space sweep.
+//!
+//! The sweep engine streams `(scaled area, cycles)` points in whatever
+//! order workers finish; the frontier is maintained online so progress
+//! output can report it at any time without rescanning all results. The
+//! maintained set is exactly the set of non-dominated points — identical
+//! to a batch `repro::mark_pareto` pass over the same points (including
+//! the tie convention: points equal on both axes do not dominate each
+//! other, so duplicates are all kept).
+
+/// One point on (or off) the frontier: minimize both `area` and `cycles`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParetoPoint {
+    pub area: f64,
+    pub cycles: u64,
+    /// Caller-supplied identifier (the sweep uses the job index).
+    pub id: usize,
+}
+
+/// `a` dominates `b` when it is no worse on both axes and strictly
+/// better on at least one.
+pub fn dominates(a: &ParetoPoint, b: &ParetoPoint) -> bool {
+    a.area <= b.area && a.cycles <= b.cycles && (a.area < b.area || a.cycles < b.cycles)
+}
+
+/// Online Pareto frontier over `(area ↓, cycles ↓)`.
+#[derive(Debug, Clone, Default)]
+pub struct ParetoFront {
+    points: Vec<ParetoPoint>,
+}
+
+impl ParetoFront {
+    pub fn new() -> ParetoFront {
+        ParetoFront::default()
+    }
+
+    /// Insert a point. Returns `true` if the point joins the frontier
+    /// (dominated incumbents are evicted), `false` if it is dominated.
+    pub fn insert(&mut self, area: f64, cycles: u64, id: usize) -> bool {
+        let p = ParetoPoint { area, cycles, id };
+        if self.points.iter().any(|q| dominates(q, &p)) {
+            return false;
+        }
+        self.points.retain(|q| !dominates(&p, q));
+        self.points.push(p);
+        true
+    }
+
+    /// Frontier points sorted by `(area, cycles, id)` — a deterministic
+    /// order regardless of insertion order (and thus of worker count).
+    pub fn points(&self) -> Vec<ParetoPoint> {
+        let mut out = self.points.clone();
+        out.sort_by(|a, b| {
+            a.area
+                .total_cmp(&b.area)
+                .then(a.cycles.cmp(&b.cycles))
+                .then(a.id.cmp(&b.id))
+        });
+        out
+    }
+
+    /// Sorted ids of the frontier points.
+    pub fn ids(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self.points.iter().map(|p| p.id).collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Whether the point with `id` is currently on the frontier.
+    pub fn contains(&self, id: usize) -> bool {
+        self.points.iter().any(|p| p.id == id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_non_dominated_points() {
+        let mut f = ParetoFront::new();
+        assert!(f.insert(1.0, 100, 0));
+        assert!(f.insert(2.0, 50, 1)); // trades area for cycles
+        assert!(!f.insert(1.5, 120, 2)); // dominated by id 0
+        assert!(!f.insert(3.0, 50, 3)); // dominated by id 1
+        assert_eq!(f.ids(), vec![0, 1]);
+    }
+
+    #[test]
+    fn evicts_dominated_incumbents() {
+        let mut f = ParetoFront::new();
+        f.insert(2.0, 100, 0);
+        f.insert(3.0, 90, 1);
+        assert!(f.insert(1.0, 80, 2)); // dominates both
+        assert_eq!(f.ids(), vec![2]);
+    }
+
+    #[test]
+    fn ties_on_both_axes_are_kept() {
+        // Matches `repro::mark_pareto`: equal points do not dominate each
+        // other, so both stay on the frontier.
+        let mut f = ParetoFront::new();
+        assert!(f.insert(1.0, 100, 0));
+        assert!(f.insert(1.0, 100, 1));
+        assert_eq!(f.ids(), vec![0, 1]);
+    }
+
+    #[test]
+    fn single_axis_tie_dominance() {
+        let mut f = ParetoFront::new();
+        f.insert(1.0, 100, 0);
+        assert!(!f.insert(1.0, 110, 1)); // same area, more cycles
+        assert!(f.insert(1.0, 90, 2)); // same area, fewer cycles: evicts 0
+        assert_eq!(f.ids(), vec![2]);
+    }
+
+    #[test]
+    fn points_sorted_deterministically() {
+        let mut f = ParetoFront::new();
+        f.insert(3.0, 10, 5);
+        f.insert(1.0, 100, 2);
+        f.insert(2.0, 40, 9);
+        let pts = f.points();
+        let areas: Vec<f64> = pts.iter().map(|p| p.area).collect();
+        assert_eq!(areas, vec![1.0, 2.0, 3.0]);
+    }
+}

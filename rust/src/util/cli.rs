@@ -81,6 +81,35 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Comma-separated list parser behind the typed list getters. Empty
+    /// items are ignored so a trailing comma is harmless.
+    fn get_list<T: std::str::FromStr + Clone>(&self, name: &str, default: &[T]) -> Vec<T> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse::<T>().unwrap_or_else(|_| {
+                        panic!("--{name} expects comma-separated integers, got '{v}'")
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated integer list, e.g. `--blocks 16,32,64` (used by
+    /// the sweep grid axes).
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        self.get_list(name, default)
+    }
+
+    /// `get_usize_list` for u64 values (seed lists).
+    pub fn get_u64_list(&self, name: &str, default: &[u64]) -> Vec<u64> {
+        self.get_list(name, default)
+    }
+
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name)
             .map(|v| {
@@ -168,5 +197,19 @@ mod tests {
         assert_eq!(a.get_or("missing", "d"), "d");
         assert_eq!(a.get_usize("n", 7), 7);
         assert_eq!(a.get_f64("x", 1.5), 1.5);
+    }
+
+    #[test]
+    fn integer_lists() {
+        let a = parse(&["--blocks", "16,32, 64,", "--seeds=1,2"]);
+        assert_eq!(a.get_usize_list("blocks", &[8]), vec![16, 32, 64]);
+        assert_eq!(a.get_u64_list("seeds", &[7]), vec![1, 2]);
+        assert_eq!(a.get_usize_list("missing", &[4, 8]), vec![4, 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "--blocks expects comma-separated integers")]
+    fn integer_list_rejects_garbage() {
+        parse(&["--blocks", "16,banana"]).get_usize_list("blocks", &[]);
     }
 }

@@ -1,0 +1,73 @@
+//! Stable FNV-1a (64-bit) hashing.
+//!
+//! Used for exec-state buffer digests (trace-based validation) and the
+//! sweep engine's result-cache keys. `std::hash` is explicitly not
+//! stable across processes or releases; FNV-1a is, and is plenty for
+//! our own canonical strings and buffer contents (no DoS exposure).
+
+pub struct Fnv(u64);
+
+impl Fnv {
+    pub fn new() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    pub fn write_u8(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x100000001b3);
+    }
+
+    pub fn write_u32(&mut self, v: u32) {
+        for b in v.to_le_bytes() {
+            self.write_u8(b);
+        }
+    }
+
+    pub fn write_i8s(&mut self, vs: &[i8]) {
+        for &v in vs {
+            self.write_u8(v as u8);
+        }
+    }
+
+    pub fn write_str(&mut self, s: &str) {
+        for &b in s.as_bytes() {
+            self.write_u8(b);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Fnv {
+        Fnv::new()
+    }
+}
+
+/// One-shot FNV-1a of a string (the sweep cache-key hash).
+pub fn fnv1a64(s: &str) -> u64 {
+    let mut h = Fnv::new();
+    h.write_str(s);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_published_fnv1a_vectors() {
+        assert_eq!(fnv1a64(""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64("a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64("foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn byte_writers_agree_with_str() {
+        let mut h = Fnv::new();
+        h.write_u8(b'a');
+        assert_eq!(h.finish(), fnv1a64("a"));
+    }
+}

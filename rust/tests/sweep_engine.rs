@@ -1,0 +1,247 @@
+//! Sweep-engine integration tests: determinism (same grid + seed =>
+//! identical results for any worker count), cache-resume correctness
+//! (killing a sweep mid-run and resuming yields the same frontier
+//! without re-simulating completed points), and Pareto-frontier
+//! invariants as properties over random point clouds (`util/prop`).
+
+use vta::config::presets;
+use vta::repro::{mark_pareto, Fig13Row};
+use vta::sweep::pareto::{dominates, ParetoFront, ParetoPoint};
+use vta::sweep::{self, SweepOptions, SweepSpec, WorkloadSpec};
+use vta::util::prop::Prop;
+use vta::{prop_assert, prop_assert_eq};
+
+use std::path::PathBuf;
+
+/// A fast 8-point grid: the micro-ResNet on tiny-geometry variants
+/// (2 AXI widths x 2 scratchpad scalings x 2 input seeds).
+fn micro_spec() -> SweepSpec {
+    let mut configs = Vec::new();
+    for axi in [8usize, 16] {
+        for scale in [1usize, 2] {
+            let mut cfg = presets::tiny_config();
+            cfg.name = format!("tiny-s{scale}-m{axi}");
+            cfg.axi_bytes = axi;
+            cfg.inp_depth *= scale;
+            cfg.wgt_depth *= scale;
+            cfg.acc_depth *= scale;
+            configs.push(cfg);
+        }
+    }
+    SweepSpec {
+        configs,
+        workloads: vec![WorkloadSpec::Micro { block: 4 }],
+        seeds: vec![7, 8],
+        graph_seed: 42,
+    }
+}
+
+fn temp_cache(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("vta_sweep_test_{}_{name}.jsonl", std::process::id()))
+}
+
+fn run_opts(jobs: usize, cache: Option<PathBuf>, resume: bool) -> SweepOptions {
+    SweepOptions { jobs, cache_path: cache, resume, progress: false }
+}
+
+#[test]
+fn parallel_results_identical_to_serial() {
+    let spec = micro_spec();
+    let n = spec.jobs().len();
+    assert_eq!(n, 8);
+    let serial = sweep::run(&spec, &run_opts(1, None, false)).unwrap();
+    let parallel = sweep::run(&spec, &run_opts(4, None, false)).unwrap();
+    assert_eq!(serial.simulated, n);
+    assert_eq!(parallel.simulated, n);
+    assert_eq!(
+        serial.results, parallel.results,
+        "results must be identical for any worker count"
+    );
+    assert_eq!(serial.front.points(), parallel.front.points(), "frontier must be identical");
+    assert!(!serial.front.is_empty());
+}
+
+#[test]
+fn results_land_in_grid_order_with_full_metrics() {
+    let spec = micro_spec();
+    let outcome = sweep::run(&spec, &run_opts(3, None, false)).unwrap();
+    // Row order: config-major, then seed — exactly spec.jobs() order.
+    let jobs = spec.jobs();
+    for (job, r) in jobs.iter().zip(&outcome.results) {
+        assert_eq!(r.config, job.cfg);
+        assert_eq!(r.workload, "micro@4");
+        assert_eq!(r.seed, job.seed);
+        assert!(r.cycles > 0, "tsim must report cycles");
+        assert!(r.macs > 0 && r.insns > 0 && r.dram_rd > 0 && r.dram_wr > 0);
+        assert!(r.scaled_area > 0.0);
+    }
+}
+
+#[test]
+fn cache_resume_completes_without_resimulating() {
+    let spec = micro_spec();
+    let path = temp_cache("resume");
+    let full = sweep::run(&spec, &run_opts(2, Some(path.clone()), false)).unwrap();
+    assert_eq!(full.simulated, full.results.len());
+    assert_eq!(full.cached, 0);
+
+    // Simulate a kill mid-sweep: keep only the first half of the cache
+    // records on disk.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), full.results.len(), "one JSONL record per point");
+    let keep = lines.len() / 2;
+    std::fs::write(&path, lines[..keep].join("\n") + "\n").unwrap();
+
+    let resumed = sweep::run(&spec, &run_opts(3, Some(path.clone()), true)).unwrap();
+    assert_eq!(resumed.cached, keep, "surviving records must be served from cache");
+    assert_eq!(resumed.simulated, full.results.len() - keep, "only lost points re-simulate");
+    assert_eq!(resumed.results, full.results, "resume must reproduce the cold run exactly");
+    assert_eq!(resumed.front.points(), full.front.points(), "same frontier after resume");
+
+    // A second resume finds every point cached: no simulation at all.
+    let warm = sweep::run(&spec, &run_opts(4, Some(path.clone()), true)).unwrap();
+    assert_eq!(warm.simulated, 0, "warm-cache re-run must not simulate");
+    assert_eq!(warm.cached, full.results.len());
+    assert_eq!(warm.results, full.results);
+    assert_eq!(warm.front.points(), full.front.points());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn corrupt_cache_tail_is_resimulated_not_fatal() {
+    let spec = micro_spec();
+    let path = temp_cache("corrupt");
+    let full = sweep::run(&spec, &run_opts(2, Some(path.clone()), false)).unwrap();
+    // Append a truncated record (kill mid-write): resume must ignore it
+    // and still serve every complete record from cache.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let tail = &text[..text.len() / 3];
+    std::fs::write(&path, format!("{text}{}", tail.replace('\n', " "))).unwrap();
+    let warm = sweep::run(&spec, &run_opts(2, Some(path.clone()), true)).unwrap();
+    assert_eq!(warm.simulated, 0, "all complete records were present");
+    assert_eq!(warm.results, full.results);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn without_resume_cache_is_cold() {
+    let spec = micro_spec();
+    let path = temp_cache("cold");
+    sweep::run(&spec, &run_opts(2, Some(path.clone()), false)).unwrap();
+    // resume: false truncates and re-simulates everything.
+    let again = sweep::run(&spec, &run_opts(2, Some(path.clone()), false)).unwrap();
+    assert_eq!(again.cached, 0);
+    assert_eq!(again.simulated, again.results.len());
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------- pareto
+
+#[test]
+fn prop_incremental_front_equals_batch_marking() {
+    // Small coordinate ranges force heavy tie/duplicate coverage.
+    Prop::new("pareto-incremental").cases(300).run(|g| {
+        let n = g.usize(0, 40);
+        let pts: Vec<ParetoPoint> = (0..n)
+            .map(|i| ParetoPoint {
+                area: g.i64(0, 15) as f64,
+                cycles: g.i64(0, 15) as u64,
+                id: i,
+            })
+            .collect();
+        let mut front = ParetoFront::new();
+        for p in &pts {
+            front.insert(p.area, p.cycles, p.id);
+        }
+        let naive: Vec<usize> = pts
+            .iter()
+            .filter(|p| !pts.iter().any(|q| dominates(q, p)))
+            .map(|p| p.id)
+            .collect();
+        prop_assert_eq!(front.ids(), naive);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_front_invariant_under_insertion_order() {
+    Prop::new("pareto-order-invariance").cases(200).run(|g| {
+        let n = g.usize(0, 24);
+        let pts: Vec<ParetoPoint> = (0..n)
+            .map(|i| ParetoPoint {
+                area: g.i64(0, 10) as f64,
+                cycles: g.i64(0, 10) as u64,
+                id: i,
+            })
+            .collect();
+        let mut perm: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = g.usize(0, i);
+            perm.swap(i, j);
+        }
+        let mut forward = ParetoFront::new();
+        for p in &pts {
+            forward.insert(p.area, p.cycles, p.id);
+        }
+        let mut shuffled = ParetoFront::new();
+        for &k in &perm {
+            shuffled.insert(pts[k].area, pts[k].cycles, pts[k].id);
+        }
+        prop_assert_eq!(forward.ids(), shuffled.ids());
+        prop_assert_eq!(forward.points(), shuffled.points());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_front_matches_repro_mark_pareto() {
+    // The engine's incremental frontier and the legacy batch
+    // `mark_pareto` must agree point-for-point, ties included.
+    Prop::new("front-vs-mark-pareto").cases(200).run(|g| {
+        let n = g.usize(0, 30);
+        let mut rows: Vec<Fig13Row> = (0..n)
+            .map(|i| Fig13Row {
+                config: format!("p{i}"),
+                block: 16,
+                cycles: g.i64(0, 12) as u64,
+                scaled_area: g.i64(0, 12) as f64,
+                pareto: false,
+            })
+            .collect();
+        let mut front = ParetoFront::new();
+        for (i, r) in rows.iter().enumerate() {
+            front.insert(r.scaled_area, r.cycles, i);
+        }
+        mark_pareto(&mut rows);
+        let expect: Vec<usize> = rows
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.pareto)
+            .map(|(i, _)| i)
+            .collect();
+        prop_assert_eq!(front.ids(), expect);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_frontier_points_mutually_non_dominating() {
+    Prop::new("frontier-antichain").cases(150).run(|g| {
+        let n = g.usize(0, 30);
+        let mut front = ParetoFront::new();
+        for i in 0..n {
+            front.insert(g.i64(0, 12) as f64, g.i64(0, 12) as u64, i);
+        }
+        let pts = front.points();
+        for a in &pts {
+            for b in &pts {
+                prop_assert!(
+                    !dominates(a, b),
+                    "frontier must be an antichain: {a:?} dominates {b:?}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
