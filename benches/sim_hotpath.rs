@@ -1,11 +1,14 @@
 //! Microbenchmarks of the stack's hot paths (custom criterion-style
 //! harness; see `vta::util::bench`). These are the before/after probes
-//! for the EXPERIMENTS.md §Perf optimization log.
+//! for the EXPERIMENTS.md §Perf optimization log; `--save-json` writes
+//! the machine-readable artifact tracked as `BENCH_sim_hotpath.json`
+//! (and uploaded per CI run).
 //!
 //! Declared `harness = false` in Cargo.toml: a plain `fn main()` binary,
 //! so it builds and runs on stable cargo (no nightly `#[bench]`).
 //!
 //!     cargo bench --bench sim_hotpath [-- <filter>] [--quick]
+//!                 [--save-json BENCH_sim_hotpath.json]
 
 use vta::compiler::graph::{Graph, Op};
 use vta::compiler::layout::Shape;
@@ -76,6 +79,48 @@ fn main() {
             s.run_graph(&g, black_box(&input));
             s.cycles()
         });
+    }
+
+    // --- tsim timing-only: identical timing wheel and cycle counts,
+    // functional datapath skipped (the sweep fast path) ---
+    {
+        let g = workloads::micro_resnet(16, 3);
+        let cfg = presets::default_config();
+        let mut rng = Pcg32::seeded(4);
+        let input = rng.i8_vec(g.input_shape.elems());
+        let topts = SessionOptions { timing_only: true, ..Default::default() };
+        let mut s = Session::new(&cfg, topts.clone());
+        s.run_graph(&g, &input);
+        let cycles = s.cycles();
+        b.bench_throughput(
+            "tsim/micro_resnet_timing_only",
+            Some((cycles as f64, "sim-cycles")),
+            || {
+                let mut s = Session::new(&cfg, topts.clone());
+                s.run_graph(&g, black_box(&input));
+                s.cycles()
+            },
+        );
+
+        // --- memo-warm timing-only: every layer spliced from the shared
+        // LayerMemo; measures the per-point floor of a warmed sweep ---
+        let memo = std::sync::Arc::new(vta::memo::LayerMemo::in_memory());
+        let mopts = SessionOptions {
+            timing_only: true,
+            memo: Some(memo.clone()),
+            ..Default::default()
+        };
+        let mut warm = Session::new(&cfg, mopts.clone());
+        warm.run_graph(&g, &input); // populate the memo
+        b.bench_throughput(
+            "tsim/micro_resnet_memo_warm",
+            Some((cycles as f64, "sim-cycles")),
+            || {
+                let mut s = Session::new(&cfg, mopts.clone());
+                s.run_graph(&g, black_box(&input));
+                s.cycles()
+            },
+        );
     }
 
     // --- fsim for comparison ---
@@ -153,5 +198,6 @@ fn main() {
         });
     }
 
+    b.save_if_requested();
     println!("\n{} benchmarks complete", b.results.len());
 }

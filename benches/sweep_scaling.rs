@@ -51,11 +51,32 @@ fn main() {
         assert_eq!(s, p, "frontier size must not depend on worker count");
     }
 
+    // The ISSUE-2 fast path: shared layer memo + timing-only simulation.
+    // Bit-identical frontier, collapsed wall clock (the before/after
+    // probe EXPERIMENTS.md records).
+    let memoized = b.once("sweep/cold_memo_timing_only", || {
+        let o = sweep::run(
+            &spec,
+            &SweepOptions { jobs: cores, memo: true, timing_only: true, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(o.simulated, n_points);
+        assert!(o.memo_hits > 0, "2 seeds per config must reuse layers");
+        o.front.len()
+    });
+    if let (Some(p), Some(m)) = (parallel, memoized) {
+        assert_eq!(p, m, "the fast path must not change the frontier");
+    }
+
     // Warm-cache resume: populate once, then measure the replay path.
     let path =
         std::env::temp_dir().join(format!("vta_sweep_bench_{}.jsonl", std::process::id()));
-    let warm_opts =
-        SweepOptions { jobs: cores, cache_path: Some(path.clone()), resume: true, progress: false };
+    let warm_opts = SweepOptions {
+        jobs: cores,
+        cache_path: Some(path.clone()),
+        resume: true,
+        ..Default::default()
+    };
     sweep::run(&spec, &SweepOptions { resume: false, ..warm_opts.clone() }).unwrap();
     b.once("sweep/warm_cache_resume", || {
         let o = sweep::run(&spec, &warm_opts).unwrap();
@@ -64,5 +85,6 @@ fn main() {
     });
     std::fs::remove_file(&path).ok();
 
+    b.save_if_requested();
     println!("\n{} benchmarks complete ({n_points} design points)", b.results.len());
 }

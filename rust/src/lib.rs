@@ -23,6 +23,7 @@ pub mod floorplan;
 pub mod fsim;
 pub mod isa;
 pub mod mem;
+pub mod memo;
 pub mod repro;
 pub mod runtime;
 pub mod sweep;

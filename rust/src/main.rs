@@ -34,6 +34,8 @@ fn usage() -> ! {
                       [--jobs N]  (fig13 runs on the parallel sweep engine)\n\
            sweep      [--quick] [--jobs N] [--resume|--fresh] [--cache sweep_cache.jsonl]\n\
                       [--out sweep_results.json] [--no-progress]\n\
+                      [--timing-only] (skip functional effects; cycles identical)\n\
+                      [--no-memo] (disable the cross-point layer-result cache)\n\
                       grid: [--blocks 16,32,64] [--axi 8,16,32,64] [--scales 1,2,4]\n\
                       [--batch 1] [--net resnet18|...|mobilenet|micro] [--hw 224]\n\
                       [--workloads resnet18@224,mobilenet@56] [--seeds 7,8] [--graph-seed 1]\n\
@@ -91,6 +93,7 @@ fn cmd_run(args: &Args) {
         trace: args.has_flag("trace"),
         dbuf_reuse: !args.has_flag("no-dbuf"),
         tps: !args.has_flag("no-tps"),
+        ..Default::default()
     };
     let graph = build_net(net, hw, seed);
     let mut rng = Pcg32::seeded(seed.wrapping_add(100));
@@ -251,6 +254,12 @@ fn cmd_sweep(args: &Args) {
         cache_path: Some(cache.into()),
         resume,
         progress: !args.has_flag("no-progress"),
+        // The layer memo is on by default (results are bit-identical
+        // with or without it — see rust/tests/sweep_engine.rs);
+        // --timing-only additionally skips the functional datapath when
+        // only cycles/counters are needed.
+        memo: !args.has_flag("no-memo"),
+        timing_only: args.has_flag("timing-only"),
     };
     // "up to": the engine spawns min(workers, uncached points), which
     // is only known once the cache has been consulted.
@@ -293,6 +302,15 @@ fn cmd_sweep(args: &Args) {
         outcome.cached,
         stats::fmt_ns(wall.as_nanos() as f64)
     );
+    if opts.memo && outcome.memo_hits + outcome.memo_misses > 0 {
+        println!(
+            "layer memo: {} hits / {} layers simulated ({:.1}% reuse)",
+            outcome.memo_hits,
+            outcome.memo_misses,
+            100.0 * outcome.memo_hits as f64
+                / (outcome.memo_hits + outcome.memo_misses) as f64
+        );
+    }
 
     let out = args.get_or("out", "sweep_results.json");
     let points: Vec<Json> = outcome

@@ -1,0 +1,307 @@
+//! Layer-memoized simulation cache.
+//!
+//! VTA's decoupled access-execute design makes a layer's cycle count a
+//! pure function of (hardware configuration, layer op, chosen tiling):
+//! timing depends only on instruction fields (transfer sizes, loop
+//! extents), never on tensor data or DRAM addresses. A design-space
+//! sweep therefore re-derives the same per-layer results millions of
+//! times — ResNet's residual stages repeat identical layer shapes within
+//! one network, ResNet-18/34/50 share most conv shapes across networks,
+//! and every extra input seed repeats the whole network verbatim.
+//!
+//! This module collapses that: a [`LayerSig`](sig::LayerSig) hash keys a
+//! [`LayerMemo`] of per-layer [`LayerRecord`]s (cycles, program insn/uop
+//! counts, and the full [`ExecCounters`] delta). The runtime consults
+//! the memo before compiling/simulating a layer and splices hits into
+//! the session, so per-layer reports and whole-network totals are
+//! bit-identical to an unmemoized run (property-tested in
+//! `rust/tests/memo_correctness.rs`).
+//!
+//! Cache layers:
+//! * **in-process**: a `Mutex<HashMap>` shared by all sweep workers
+//!   (hits cross worker threads, workloads, and seeds within a run);
+//! * **on-disk spill** (optional): append-only JSONL next to the sweep
+//!   [`ResultCache`](crate::sweep::ResultCache), so resumed sweeps warm
+//!   up instantly. Records carry [`SIM_SCHEMA_VERSION`]; records from an
+//!   older simulator schema are rejected at load instead of silently
+//!   mixed with new-semantics results.
+
+pub mod sig;
+
+pub use sig::LayerSig;
+
+use crate::exec::ExecCounters;
+use crate::util::json::{obj, Json};
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufRead, BufReader, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Version of the simulator/memo semantics. Bump whenever a change can
+/// alter cycle counts or counters (timing model, compiler schedules,
+/// counter definitions): the version is hashed into every layer
+/// signature *and* every sweep result-cache key, so stale caches miss
+/// cleanly instead of mixing incompatible results.
+///
+/// v1 = the PR-1 sweep cache (implicit, unversioned keys);
+/// v2 = this scheme (layer memo + explicit schema fields).
+pub const SIM_SCHEMA_VERSION: u32 = 2;
+
+/// Everything the runtime needs to splice a cached layer into a session
+/// without simulating it: cycles consumed, program shape (for
+/// `LayerStat`), and the exact execution-counter delta.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerRecord {
+    pub cycles: u64,
+    /// Instructions in the lowered program (`Program::insns.len()`).
+    pub prog_insns: u32,
+    /// Uops staged for the program (`Program::uop_count`).
+    pub prog_uops: u32,
+    /// Counter delta the layer's execution produces.
+    pub exec: ExecCounters,
+}
+
+impl LayerRecord {
+    pub fn to_json(&self, sig: LayerSig) -> Json {
+        obj([
+            ("schema", Json::Int(SIM_SCHEMA_VERSION as i64)),
+            ("sig", Json::Str(format!("{:016x}", sig.0))),
+            ("cycles", Json::Int(self.cycles as i64)),
+            ("prog_insns", Json::Int(self.prog_insns as i64)),
+            ("prog_uops", Json::Int(self.prog_uops as i64)),
+            ("exec", self.exec.to_json()),
+        ])
+    }
+
+    /// Parse one spill line; `None` on any malformed field *or* a schema
+    /// version other than [`SIM_SCHEMA_VERSION`].
+    pub fn from_json(j: &Json) -> Option<(LayerSig, LayerRecord)> {
+        if j.get("schema")?.as_i64()? != SIM_SCHEMA_VERSION as i64 {
+            return None;
+        }
+        let sig = LayerSig(u64::from_str_radix(j.get("sig")?.as_str()?, 16).ok()?);
+        let int = |name: &str| j.get(name).and_then(|v| v.as_i64()).map(|v| v as u64);
+        Some((
+            sig,
+            LayerRecord {
+                cycles: int("cycles")?,
+                prog_insns: int("prog_insns")? as u32,
+                prog_uops: int("prog_uops")? as u32,
+                exec: ExecCounters::from_json(j.get("exec")?)?,
+            },
+        ))
+    }
+}
+
+/// The shared layer-result cache. Thread-safe: sweep workers hold one
+/// instance behind an `Arc` and consult it concurrently. The map and
+/// the spill file take separate locks so a worker's lookup never waits
+/// behind another worker's disk write.
+#[derive(Debug)]
+pub struct LayerMemo {
+    map: Mutex<HashMap<u64, LayerRecord>>,
+    /// Append-only JSONL spill; dropped (cache degrades to in-memory)
+    /// after the first write error.
+    spill: Mutex<Option<File>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// Valid records recovered from an existing spill file.
+    pub loaded: usize,
+    /// Lines rejected during load: truncated writes *and* records from
+    /// an older [`SIM_SCHEMA_VERSION`].
+    pub skipped: usize,
+}
+
+impl LayerMemo {
+    /// Cache without a backing file.
+    pub fn in_memory() -> LayerMemo {
+        LayerMemo {
+            map: Mutex::new(HashMap::new()),
+            spill: Mutex::new(None),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            loaded: 0,
+            skipped: 0,
+        }
+    }
+
+    /// Open a file-backed memo. With `resume`, current-schema records
+    /// are loaded and new ones appended; without, the file is truncated.
+    pub fn open(path: &Path, resume: bool) -> io::Result<LayerMemo> {
+        let mut map = HashMap::new();
+        let mut loaded = 0;
+        let mut skipped = 0;
+        if resume && path.exists() {
+            let reader = BufReader::new(File::open(path)?);
+            for line in reader.lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match Json::parse(&line).ok().and_then(|j| LayerRecord::from_json(&j)) {
+                    Some((sig, rec)) => {
+                        map.insert(sig.0, rec);
+                        loaded += 1;
+                    }
+                    None => skipped += 1,
+                }
+            }
+        }
+        let spill = if resume {
+            OpenOptions::new().create(true).append(true).open(path)?
+        } else {
+            OpenOptions::new().create(true).write(true).truncate(true).open(path)?
+        };
+        Ok(LayerMemo {
+            map: Mutex::new(map),
+            spill: Mutex::new(Some(spill)),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            loaded,
+            skipped,
+        })
+    }
+
+    /// Look a layer up; counts toward the hit/miss statistics.
+    pub fn get(&self, sig: LayerSig) -> Option<LayerRecord> {
+        let found = self.map.lock().unwrap().get(&sig.0).copied();
+        if found.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        found
+    }
+
+    /// Record a simulated layer. Spill writes are best-effort: an I/O
+    /// error silently downgrades the memo to in-memory-only (the sweep's
+    /// correctness never depends on the spill). The map lock is released
+    /// before the disk write, so concurrent lookups never stall on I/O.
+    pub fn insert(&self, sig: LayerSig, rec: LayerRecord) {
+        // First writer wins; concurrent workers may race to simulate the
+        // same layer, but determinism makes their records identical.
+        if self.map.lock().unwrap().insert(sig.0, rec).is_some() {
+            return;
+        }
+        let mut spill = self.spill.lock().unwrap();
+        let mut write_failed = false;
+        if let Some(file) = spill.as_mut() {
+            let mut line = rec.to_json(sig).to_string_compact();
+            line.push('\n');
+            write_failed = file.write_all(line.as_bytes()).and_then(|_| file.flush()).is_err();
+        }
+        if write_failed {
+            *spill = None;
+        }
+    }
+
+    /// Distinct layers cached.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn sample_rec(cycles: u64) -> LayerRecord {
+        LayerRecord {
+            cycles,
+            prog_insns: 12,
+            prog_uops: 34,
+            exec: ExecCounters {
+                insn_count: 12,
+                gemm_ops: 5,
+                macs: 1280,
+                alu_ops: 3,
+                alu_elems: 48,
+                load_bytes_inp: 256,
+                load_bytes_wgt: 512,
+                load_bytes_acc: 64,
+                load_bytes_uop: 16,
+                store_bytes: 128,
+                pad_tiles: 9,
+            },
+        }
+    }
+
+    fn temp_path(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("vta_memo_test_{}_{name}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn in_memory_roundtrip_and_stats() {
+        let memo = LayerMemo::in_memory();
+        let sig = LayerSig(0xdead_beef_0123_4567);
+        assert_eq!(memo.get(sig), None);
+        memo.insert(sig, sample_rec(1000));
+        assert_eq!(memo.get(sig), Some(sample_rec(1000)));
+        assert_eq!((memo.hits(), memo.misses()), (1, 1));
+        assert_eq!(memo.len(), 1);
+    }
+
+    #[test]
+    fn record_json_roundtrip() {
+        let sig = LayerSig(0x0000_00ff_ffff_0001);
+        let rec = sample_rec(987_654_321);
+        let text = rec.to_json(sig).to_string_compact();
+        let (s2, r2) = LayerRecord::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!((s2, r2), (sig, rec));
+    }
+
+    #[test]
+    fn old_schema_records_rejected() {
+        let sig = LayerSig(42);
+        let mut j = sample_rec(5).to_json(sig);
+        if let Json::Object(map) = &mut j {
+            map.insert("schema".into(), Json::Int(SIM_SCHEMA_VERSION as i64 - 1));
+        }
+        assert_eq!(LayerRecord::from_json(&j), None, "stale schema must not load");
+    }
+
+    #[test]
+    fn spill_resume_recovers_and_truncate_discards() {
+        let path = temp_path("resume");
+        {
+            let memo = LayerMemo::open(&path, false).unwrap();
+            memo.insert(LayerSig(1), sample_rec(10));
+            memo.insert(LayerSig(2), sample_rec(20));
+        }
+        let memo = LayerMemo::open(&path, true).unwrap();
+        assert_eq!((memo.loaded, memo.skipped), (2, 0));
+        assert_eq!(memo.get(LayerSig(2)).unwrap().cycles, 20);
+        let cold = LayerMemo::open(&path, false).unwrap();
+        assert_eq!(cold.loaded, 0);
+        assert!(cold.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn duplicate_insert_keeps_first_record_once() {
+        let path = temp_path("dup");
+        {
+            let memo = LayerMemo::open(&path, false).unwrap();
+            memo.insert(LayerSig(7), sample_rec(70));
+            memo.insert(LayerSig(7), sample_rec(70));
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 1, "duplicate inserts must not duplicate spill lines");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,211 @@
+//! Layer-signature hashing: the memo key.
+//!
+//! A signature is a stable 64-bit FNV-1a hash over everything the
+//! simulated result of one layer can depend on:
+//!
+//! * [`SIM_SCHEMA_VERSION`](super::SIM_SCHEMA_VERSION) — so entries from
+//!   an older simulator/compiler semantics can never be confused with
+//!   current ones;
+//! * the perf-relevant [`VtaConfig`] fields (everything except the
+//!   cosmetic `name`): tile geometry and scratchpad depths determine the
+//!   compiled program, AXI/latency/queue parameters the timing;
+//! * an op-kind tag plus the op's own parameters (shapes, kernel,
+//!   stride, padding, requantization shift, ReLU);
+//! * for convolutions, the chosen [`Tiling`] — the schedule, including
+//!   the improved-double-buffering flag, is part of the program
+//!   identity (so `--no-tps` / `--no-dbuf` runs key separately).
+//!
+//! Deliberately excluded: DRAM base addresses (instructions encode them
+//! but neither timing nor byte counters depend on them), tensor data
+//! (VTA timing is data-independent), and the session's `timing_only`
+//! flag (both modes produce identical cycles and counters — the
+//! invariant `rust/tests/memo_correctness.rs` enforces).
+
+use super::SIM_SCHEMA_VERSION;
+use crate::compiler::depthwise::DepthwiseParams;
+use crate::compiler::eltwise::PoolParams;
+use crate::compiler::tps::{ConvSpec, Tiling};
+use crate::config::VtaConfig;
+use crate::util::hash::Fnv;
+
+/// A layer's memo key. Stable across processes and machines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LayerSig(pub u64);
+
+/// Op-kind tags keep equal parameter lists of different ops from
+/// colliding (e.g. a pool and a depthwise layer with identical numeric
+/// fields).
+const TAG_CONV: u8 = 1; // also dense (a dense layer *is* a 1x1 conv spec)
+const TAG_DEPTHWISE: u8 = 2;
+const TAG_POOL: u8 = 3;
+const TAG_ADD: u8 = 4;
+
+/// Hash the schema version and the perf-relevant configuration fields.
+fn config_hasher(cfg: &VtaConfig) -> Fnv {
+    // Exhaustive destructuring on purpose: adding a `VtaConfig` field
+    // breaks this line, forcing a decision on whether it is
+    // perf-relevant (and a SIM_SCHEMA_VERSION bump if layer timing
+    // changes) instead of silently excluding it from the memo key.
+    let VtaConfig {
+        name: _,
+        batch,
+        block_in,
+        block_out,
+        uop_depth,
+        inp_depth,
+        wgt_depth,
+        acc_depth,
+        axi_bytes,
+        dram_latency,
+        vme_inflight,
+        gemm_pipelined,
+        alu_pipelined,
+        cmd_queue_depth,
+        dep_queue_depth,
+    } = cfg;
+    let mut h = Fnv::new();
+    h.write_u32(SIM_SCHEMA_VERSION);
+    for v in [batch, block_in, block_out, uop_depth, inp_depth, wgt_depth, acc_depth] {
+        h.write_u64(*v as u64);
+    }
+    for v in [axi_bytes, vme_inflight, cmd_queue_depth, dep_queue_depth] {
+        h.write_u64(*v as u64);
+    }
+    h.write_u64(*dram_latency);
+    h.write_bool(*gemm_pipelined);
+    h.write_bool(*alu_pipelined);
+    h
+}
+
+/// Signature of a convolution (or dense — the spec *is* the identity)
+/// lowered with `tiling`.
+pub fn conv_sig(
+    cfg: &VtaConfig,
+    spec: &ConvSpec,
+    shift: u32,
+    relu: bool,
+    tiling: &Tiling,
+) -> LayerSig {
+    let mut h = config_hasher(cfg);
+    h.write_u8(TAG_CONV);
+    for v in [spec.c_in, spec.c_out, spec.h, spec.w, spec.kh, spec.kw] {
+        h.write_u64(v as u64);
+    }
+    for v in [spec.sh, spec.sw, spec.ph, spec.pw] {
+        h.write_u64(v as u64);
+    }
+    h.write_u32(shift);
+    h.write_bool(relu);
+    for v in [tiling.th_o, tiling.tw_o, tiling.tco_o, tiling.tci_o] {
+        h.write_u64(v as u64);
+    }
+    h.write_bool(tiling.reuse_inp);
+    LayerSig(h.finish())
+}
+
+/// Signature of a depthwise-convolution layer.
+pub fn depthwise_sig(cfg: &VtaConfig, p: &DepthwiseParams) -> LayerSig {
+    let mut h = config_hasher(cfg);
+    h.write_u8(TAG_DEPTHWISE);
+    for v in [p.c_tiles, p.h, p.w, p.k, p.stride, p.pad] {
+        h.write_u64(v as u64);
+    }
+    h.write_u32(p.shift);
+    h.write_bool(p.relu);
+    LayerSig(h.finish())
+}
+
+/// Signature of a pooling layer (max or average — `is_max`/`shift`
+/// distinguish them, covering `GlobalAvgPool` as well).
+pub fn pool_sig(cfg: &VtaConfig, p: &PoolParams) -> LayerSig {
+    let mut h = config_hasher(cfg);
+    h.write_u8(TAG_POOL);
+    for v in [p.c_tiles, p.h, p.w, p.k, p.stride, p.pad] {
+        h.write_u64(v as u64);
+    }
+    h.write_bool(p.is_max);
+    h.write_u32(p.shift);
+    LayerSig(h.finish())
+}
+
+/// Signature of a residual-add layer over `tiles` activation tiles.
+pub fn add_sig(cfg: &VtaConfig, tiles: usize, relu: bool) -> LayerSig {
+    let mut h = config_hasher(cfg);
+    h.write_u8(TAG_ADD);
+    h.write_u64(tiles as u64);
+    h.write_bool(relu);
+    LayerSig(h.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn spec() -> ConvSpec {
+        ConvSpec { c_in: 16, c_out: 32, h: 8, w: 8, kh: 3, kw: 3, sh: 1, sw: 1, ph: 1, pw: 1 }
+    }
+
+    fn tiling() -> Tiling {
+        Tiling { th_o: 2, tw_o: 1, tco_o: 1, tci_o: 1, reuse_inp: true }
+    }
+
+    #[test]
+    fn conv_sig_is_stable_and_ignores_config_name() {
+        let cfg = presets::default_config();
+        let a = conv_sig(&cfg, &spec(), 5, true, &tiling());
+        assert_eq!(a, conv_sig(&cfg, &spec(), 5, true, &tiling()));
+        let mut renamed = cfg.clone();
+        renamed.name = "something-else".into();
+        assert_eq!(a, conv_sig(&renamed, &spec(), 5, true, &tiling()), "name is cosmetic");
+    }
+
+    #[test]
+    fn conv_sig_discriminates_perf_fields() {
+        let cfg = presets::default_config();
+        let base = conv_sig(&cfg, &spec(), 5, true, &tiling());
+        let mut axi = cfg.clone();
+        axi.axi_bytes = 64;
+        assert_ne!(base, conv_sig(&axi, &spec(), 5, true, &tiling()));
+        let mut pipe = cfg.clone();
+        pipe.gemm_pipelined = false;
+        assert_ne!(base, conv_sig(&pipe, &spec(), 5, true, &tiling()));
+        let mut s2 = spec();
+        s2.h = 16;
+        assert_ne!(base, conv_sig(&cfg, &s2, 5, true, &tiling()));
+        assert_ne!(base, conv_sig(&cfg, &spec(), 6, true, &tiling()));
+        assert_ne!(base, conv_sig(&cfg, &spec(), 5, false, &tiling()));
+        let mut t2 = tiling();
+        t2.reuse_inp = false;
+        assert_ne!(base, conv_sig(&cfg, &spec(), 5, true, &t2));
+    }
+
+    #[test]
+    fn op_kinds_do_not_collide() {
+        // A pool and a depthwise layer with numerically identical fields
+        // must hash apart (the tag byte).
+        let cfg = presets::tiny_config();
+        let dw = DepthwiseParams {
+            c_tiles: 2,
+            h: 8,
+            w: 8,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            shift: 0,
+            relu: false,
+        };
+        let pl = PoolParams {
+            c_tiles: 2,
+            h: 8,
+            w: 8,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            is_max: false,
+            shift: 0,
+        };
+        assert_ne!(depthwise_sig(&cfg, &dw), pool_sig(&cfg, &pl));
+        assert_ne!(add_sig(&cfg, 2, false), pool_sig(&cfg, &pl));
+    }
+}

@@ -5,10 +5,23 @@
 //! layers the accelerator does not execute (the channel-light first
 //! convolution) — "thus ensuring that a DNN can be executed on VTA even
 //! if the accelerator doesn't support all layers".
+//!
+//! Two sweep fast paths thread through here (see `crate::memo` and
+//! DESIGN.md §Layer memo):
+//!
+//! * **timing-only** ([`SessionOptions::timing_only`]): tsim computes
+//!   cycles and execution counters bit-identically but skips all
+//!   functional datapath effects (and the data staging that feeds them);
+//! * **layer memo** ([`SessionOptions::memo`]): per-layer results are
+//!   keyed by a [`LayerSig`] and spliced from a shared [`LayerMemo`]
+//!   instead of re-simulated — in timing-only mode a hit skips the layer
+//!   entirely; in functional mode a hit replays the program through the
+//!   exec core (outputs stay bit-exact) and only the timing wheel is
+//!   skipped.
 
 pub mod pjrt;
 
-use crate::compiler::builder::ProgramBuilder;
+use crate::compiler::builder::{Program, ProgramBuilder};
 use crate::compiler::conv::{lower_conv, ConvBases, ConvParams};
 use crate::compiler::depthwise::{lower_depthwise, DepthwiseParams};
 use crate::compiler::eltwise::{lower_add, lower_pool, PoolParams};
@@ -21,8 +34,10 @@ use crate::config::VtaConfig;
 use crate::exec::ExecCounters;
 use crate::fsim::Fsim;
 use crate::mem::{Dram, DramRegion};
+use crate::memo::{sig, LayerMemo, LayerRecord, LayerSig};
 use crate::sim::{PerfReport, Tsim};
 use crate::util::bitfield::clog2;
+use std::sync::Arc;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Target {
@@ -43,11 +58,29 @@ pub struct SessionOptions {
     /// Use TPS-optimized tilings; `false` uses the fallback schedule
     /// (the Fig 10 baseline).
     pub tps: bool,
+    /// Timing-only simulation (tsim only): cycles, per-layer stats, and
+    /// execution counters are bit-identical to a functional run
+    /// (property-tested), but scratchpad/DRAM data movement is skipped —
+    /// [`Session::run_graph`]'s returned output is all zeros by
+    /// contract. Digest and golden checks are unavailable.
+    pub timing_only: bool,
+    /// Layer-memo cache consulted before compiling/simulating each
+    /// accelerator layer; shared (via `Arc`) across sessions and sweep
+    /// worker threads. Tsim only; incompatible with `trace` (memo hits
+    /// record no activity intervals).
+    pub memo: Option<Arc<LayerMemo>>,
 }
 
 impl Default for SessionOptions {
     fn default() -> Self {
-        SessionOptions { target: Target::Tsim, trace: false, dbuf_reuse: true, tps: true }
+        SessionOptions {
+            target: Target::Tsim,
+            trace: false,
+            dbuf_reuse: true,
+            tps: true,
+            timing_only: false,
+            memo: None,
+        }
     }
 }
 
@@ -76,6 +109,12 @@ pub struct Session {
     pub dram: Dram,
     backend: Backend,
     pub layer_stats: Vec<LayerStat>,
+    /// Cycles spliced in from memoized layers (absent from the backend's
+    /// own cycle counter).
+    memo_cycles: u64,
+    /// Counter deltas spliced in from memoized timing-only hits
+    /// (functional-mode hits replay and accrue counters naturally).
+    memo_extra: ExecCounters,
 }
 
 impl Session {
@@ -85,6 +124,19 @@ impl Session {
             "network execution requires BLOCK_IN == BLOCK_OUT (activation \
              tiles feed both GEMM operands); the paper's swept configs are square"
         );
+        if opts.timing_only || opts.memo.is_some() {
+            assert_eq!(
+                opts.target,
+                Target::Tsim,
+                "timing-only / memoized execution is a tsim fast path \
+                 (fsim is already the functional fast path)"
+            );
+        }
+        assert!(
+            !(opts.trace && opts.memo.is_some()),
+            "activity tracing requires unmemoized simulation (memo hits \
+             record no activity intervals)"
+        );
         let backend = match opts.target {
             Target::Fsim => Backend::F(Box::new(Fsim::new(cfg))),
             Target::Tsim => {
@@ -92,6 +144,7 @@ impl Session {
                 if opts.trace {
                     t.enable_trace();
                 }
+                t.set_timing_only(opts.timing_only);
                 Backend::T(Box::new(t))
             }
         };
@@ -101,29 +154,45 @@ impl Session {
             dram: Dram::with_default_capacity(),
             backend,
             layer_stats: Vec::new(),
+            memo_cycles: 0,
+            memo_extra: ExecCounters::default(),
         }
     }
 
-    /// Cumulative execution counters of the active backend.
+    /// Cumulative execution counters of the session: the active
+    /// backend's counters plus everything spliced in from memoized
+    /// layers — bit-identical to what an unmemoized run accumulates.
     pub fn exec_counters(&self) -> ExecCounters {
-        match &self.backend {
+        let mut c = match &self.backend {
             Backend::F(f) => f.state.counters,
             Backend::T(t) => t.core.counters,
-        }
+        };
+        c.accumulate(&self.memo_extra);
+        c
     }
 
-    /// Total simulated cycles (tsim target only; 0 under fsim).
+    /// Total simulated cycles including memo-spliced layers (tsim target
+    /// only; 0 under fsim).
     pub fn cycles(&self) -> u64 {
         match &self.backend {
             Backend::F(_) => 0,
-            Backend::T(t) => t.cycle(),
+            Backend::T(t) => t.cycle() + self.memo_cycles,
         }
     }
 
+    /// Performance report. Cycle and execution-counter totals include
+    /// memo-spliced layers; the per-module busy/stall and VME breakdowns
+    /// cover only the layers this session actually simulated (memoized
+    /// layers produce no module activity).
     pub fn perf_report(&self) -> Option<PerfReport> {
         match &self.backend {
             Backend::F(_) => None,
-            Backend::T(t) => Some(t.report()),
+            Backend::T(t) => {
+                let mut r = t.report();
+                r.cycles += self.memo_cycles;
+                r.exec.accumulate(&self.memo_extra);
+                Some(r)
+            }
         }
     }
 
@@ -145,6 +214,73 @@ impl Session {
         }
     }
 
+    /// Apply a program's architectural effects in program order without
+    /// timing simulation — the functional half of a memo hit. Program
+    /// order and tsim's time-ordered completion produce bit-identical
+    /// architectural state (the tsim/fsim equivalence invariant, which
+    /// `rust/tests/stack_integration.rs` pins down).
+    fn replay_program(&mut self, insns: &[crate::isa::Insn]) {
+        match &mut self.backend {
+            Backend::F(_) => unreachable!("memoization is tsim-only (asserted in Session::new)"),
+            Backend::T(t) => {
+                for insn in insns {
+                    t.core.execute(insn, &mut self.dram);
+                }
+            }
+        }
+    }
+
+    /// Execute one layer program through the memo (see `crate::memo`):
+    ///
+    /// * memo disabled → compile and simulate as always;
+    /// * miss → compile, simulate, record cycles + the counter delta;
+    /// * hit, timing-only → splice the record; nothing compiles or runs;
+    /// * hit, functional → compile and replay through the exec core
+    ///   (outputs bit-exact), splicing the recorded cycles.
+    ///
+    /// Returns `(cycles, program insns, program uops)`.
+    fn memo_run(
+        &mut self,
+        sig: LayerSig,
+        label: &str,
+        build: impl FnOnce(&mut Session) -> Program,
+    ) -> (u64, usize, usize) {
+        let Some(memo) = self.opts.memo.clone() else {
+            let prog = build(self);
+            let cycles = self.run_program(&prog.insns, label);
+            return (cycles, prog.insns.len(), prog.uop_count);
+        };
+        if let Some(rec) = memo.get(sig) {
+            if self.opts.timing_only {
+                self.memo_cycles += rec.cycles;
+                self.memo_extra.accumulate(&rec.exec);
+                return (rec.cycles, rec.prog_insns as usize, rec.prog_uops as usize);
+            }
+            let prog = build(self);
+            debug_assert_eq!(
+                prog.insns.len(),
+                rec.prog_insns as usize,
+                "memo record does not match the compiled program for {label}"
+            );
+            self.replay_program(&prog.insns);
+            self.memo_cycles += rec.cycles;
+            return (rec.cycles, prog.insns.len(), prog.uop_count);
+        }
+        let before = self.exec_counters();
+        let prog = build(self);
+        let cycles = self.run_program(&prog.insns, label);
+        memo.insert(
+            sig,
+            LayerRecord {
+                cycles,
+                prog_insns: prog.insns.len() as u32,
+                prog_uops: prog.uop_count as u32,
+                exec: self.exec_counters().minus(&before),
+            },
+        );
+        (cycles, prog.insns.len(), prog.uop_count)
+    }
+
     /// Allocate a DRAM region for a tiled activation of `shape`.
     fn alloc_activation(&mut self, shape: Shape) -> DramRegion {
         let block = self.cfg.block_in;
@@ -154,7 +290,9 @@ impl Session {
 
     /// Run a graph end-to-end. `input` is `[batch][c][h][w]` int8 with
     /// `batch == cfg.batch`; returns the final node's output in the same
-    /// layout. Per-layer statistics accumulate in `layer_stats`.
+    /// layout (all zeros in timing-only mode, where outputs are not
+    /// computed by contract). Per-layer statistics accumulate in
+    /// `layer_stats`.
     pub fn run_graph(&mut self, graph: &Graph, input: &[i8]) -> Vec<i8> {
         let cfg = self.cfg.clone();
         let block = cfg.block_in;
@@ -162,11 +300,15 @@ impl Session {
         let shapes = graph.shapes();
         assert_eq!(input.len(), batch * graph.input_shape.elems(), "input size mismatch");
 
-        // Stage the input activation.
+        // Stage the input activation. Timing-only runs never read tensor
+        // data, so only the allocation (which fixes downstream DRAM
+        // addresses) happens — packing 224x224 inputs is pure overhead.
         let mut regions: Vec<Option<DramRegion>> = vec![None; graph.nodes.len()];
         let r0 = self.alloc_activation(graph.input_shape);
-        let tiled = pack_activation(input, batch, graph.input_shape, block);
-        self.dram.write_i8(r0, &tiled);
+        if !self.opts.timing_only {
+            let tiled = pack_activation(input, batch, graph.input_shape, block);
+            self.dram.write_i8(r0, &tiled);
+        }
         regions[0] = Some(r0);
 
         for (i, node) in graph.nodes.iter().enumerate().skip(1) {
@@ -184,9 +326,14 @@ impl Session {
                     let spec = graph.conv_spec(i, &shapes);
                     if spec.c_in < block {
                         // Channel-light layer: CPU fallback (§IV-E).
-                        self.run_conv_on_cpu(
-                            graph, i, &shapes, weights, *shift, *relu, in_region, out_region,
-                        );
+                        // Contributes zero cycles and no counters, so
+                        // timing-only runs skip it entirely (its output
+                        // is never consumed there).
+                        if !self.opts.timing_only {
+                            self.run_conv_on_cpu(
+                                graph, i, &shapes, weights, *shift, *relu, in_region, out_region,
+                            );
+                        }
                         (0, 0, 0, true)
                     } else {
                         let n = self.run_conv_on_vta(
@@ -203,11 +350,6 @@ impl Session {
                     (n.0, n.1, n.2, false)
                 }
                 Op::Depthwise { k, stride, pad, shift, relu, weights } => {
-                    let wgt =
-                        pack_depthwise_weights(weights, in_shape.c, *k, *k, batch, block);
-                    let tileb = cfg.acc_tile_elems(); // Acc8 tile bytes
-                    let wr = self.dram.alloc(wgt.len(), tileb);
-                    self.dram.write_i8(wr, &wgt);
                     let p = DepthwiseParams {
                         c_tiles: in_shape.c_tiles(block),
                         h: in_shape.h,
@@ -218,17 +360,27 @@ impl Session {
                         shift: *shift,
                         relu: *relu,
                     };
-                    let mut b = ProgramBuilder::new(&cfg);
-                    lower_depthwise(
-                        &mut b,
-                        &p,
-                        in_region.tile_base(cfg.acc_tile_elems()),
-                        wr.tile_base(tileb),
-                        out_region.tile_base(cfg.out_tile_bytes()),
-                    );
-                    let prog = b.finish(&label, &mut self.dram);
-                    let c = self.run_program(&prog.insns, &label);
-                    (c, prog.insns.len(), prog.uop_count, false)
+                    let layer_sig = sig::depthwise_sig(&cfg, &p);
+                    let tileb = cfg.acc_tile_elems(); // Acc8 tile bytes
+                    let in_base = in_region.tile_base(tileb);
+                    let out_base = out_region.tile_base(cfg.out_tile_bytes());
+                    // Packed image size without packing (timing-only
+                    // skips the data, not the allocation).
+                    let wgt_len = in_shape.c.div_ceil(block) * p.k * p.k * batch * block;
+                    let n = self.memo_run(layer_sig, &label, |s| {
+                        let wr = s.dram.alloc(wgt_len, tileb);
+                        if !s.opts.timing_only {
+                            let wgt = pack_depthwise_weights(
+                                weights, in_shape.c, p.k, p.k, batch, block,
+                            );
+                            debug_assert_eq!(wgt.len(), wgt_len);
+                            s.dram.write_i8(wr, &wgt);
+                        }
+                        let mut b = ProgramBuilder::new(&s.cfg);
+                        lower_depthwise(&mut b, &p, in_base, wr.tile_base(tileb), out_base);
+                        b.finish(&label, &mut s.dram)
+                    });
+                    (n.0, n.1, n.2, false)
                 }
                 Op::MaxPool { k, stride, pad } => {
                     let p = PoolParams {
@@ -259,18 +411,18 @@ impl Session {
                 }
                 Op::Add { relu } => {
                     let b_region = regions[node.inputs[1]].expect("skip region");
-                    let mut b = ProgramBuilder::new(&cfg);
-                    lower_add(
-                        &mut b,
-                        out_shape.tiles(block),
-                        in_region.tile_base(cfg.acc_tile_elems()),
-                        b_region.tile_base(cfg.acc_tile_elems()),
-                        out_region.tile_base(cfg.out_tile_bytes()),
-                        *relu,
-                    );
-                    let prog = b.finish(&label, &mut self.dram);
-                    let c = self.run_program(&prog.insns, &label);
-                    (c, prog.insns.len(), prog.uop_count, false)
+                    let tiles = out_shape.tiles(block);
+                    let layer_sig = sig::add_sig(&cfg, tiles, *relu);
+                    let in_base = in_region.tile_base(cfg.acc_tile_elems());
+                    let b_base = b_region.tile_base(cfg.acc_tile_elems());
+                    let out_base = out_region.tile_base(cfg.out_tile_bytes());
+                    let relu = *relu;
+                    let n = self.memo_run(layer_sig, &label, |s| {
+                        let mut b = ProgramBuilder::new(&s.cfg);
+                        lower_add(&mut b, tiles, in_base, b_base, out_base, relu);
+                        b.finish(&label, &mut s.dram)
+                    });
+                    (n.0, n.1, n.2, false)
                 }
             };
 
@@ -290,6 +442,9 @@ impl Session {
 
         let out_shape = *shapes.last().unwrap();
         let out_region = regions.last().unwrap().unwrap();
+        if self.opts.timing_only {
+            return vec![0; batch * out_shape.elems()];
+        }
         let tiled = self.dram.read_i8(out_region);
         unpack_activation(&tiled, batch, out_shape, block)
     }
@@ -322,32 +477,46 @@ impl Session {
         label: &str,
     ) -> (u64, usize, usize) {
         let cfg = self.cfg.clone();
-        let wgt = pack_conv_weights(
-            weights,
-            spec.c_out,
-            spec.c_in,
-            spec.kh,
-            spec.kw,
-            cfg.block_out,
-            cfg.block_in,
-        );
-        let wr = self.dram.alloc(wgt.len(), cfg.wgt_tile_bytes());
-        self.dram.write_i8(wr, &wgt);
         let tiling = self.tiling_for(spec);
-        let mut b = ProgramBuilder::new(&cfg);
-        lower_conv(
-            &mut b,
-            &ConvParams { spec: *spec, shift, relu },
-            &tiling,
-            ConvBases {
-                inp: in_region.tile_base(cfg.inp_tile_bytes()),
-                wgt: wr.tile_base(cfg.wgt_tile_bytes()),
-                out: out_region.tile_base(cfg.out_tile_bytes()),
-            },
-        );
-        let prog = b.finish(label, &mut self.dram);
-        let c = self.run_program(&prog.insns, label);
-        (c, prog.insns.len(), prog.uop_count)
+        let layer_sig = sig::conv_sig(&cfg, spec, shift, relu, &tiling);
+        // Packed-weight image size (pack_conv_weights zero-pads both
+        // channel dimensions up to the block), computable without
+        // packing.
+        let wgt_len = spec.c_out.div_ceil(cfg.block_out)
+            * spec.c_in.div_ceil(cfg.block_in)
+            * spec.kh
+            * spec.kw
+            * cfg.block_out
+            * cfg.block_in;
+        let spec = *spec;
+        self.memo_run(layer_sig, label, |s| {
+            let wr = s.dram.alloc(wgt_len, cfg.wgt_tile_bytes());
+            if !s.opts.timing_only {
+                let wgt = pack_conv_weights(
+                    weights,
+                    spec.c_out,
+                    spec.c_in,
+                    spec.kh,
+                    spec.kw,
+                    cfg.block_out,
+                    cfg.block_in,
+                );
+                debug_assert_eq!(wgt.len(), wgt_len);
+                s.dram.write_i8(wr, &wgt);
+            }
+            let mut b = ProgramBuilder::new(&cfg);
+            lower_conv(
+                &mut b,
+                &ConvParams { spec, shift, relu },
+                &tiling,
+                ConvBases {
+                    inp: in_region.tile_base(cfg.inp_tile_bytes()),
+                    wgt: wr.tile_base(cfg.wgt_tile_bytes()),
+                    out: out_region.tile_base(cfg.out_tile_bytes()),
+                },
+            );
+            b.finish(label, &mut s.dram)
+        })
     }
 
     fn run_pool(
@@ -358,16 +527,16 @@ impl Session {
         label: &str,
     ) -> (u64, usize, usize, bool) {
         let cfg = self.cfg.clone();
-        let mut b = ProgramBuilder::new(&cfg);
-        lower_pool(
-            &mut b,
-            p,
-            in_region.tile_base(cfg.acc_tile_elems()),
-            out_region.tile_base(cfg.out_tile_bytes()),
-        );
-        let prog = b.finish(label, &mut self.dram);
-        let c = self.run_program(&prog.insns, label);
-        (c, prog.insns.len(), prog.uop_count, false)
+        let layer_sig = sig::pool_sig(&cfg, p);
+        let p = *p;
+        let in_base = in_region.tile_base(cfg.acc_tile_elems());
+        let out_base = out_region.tile_base(cfg.out_tile_bytes());
+        let n = self.memo_run(layer_sig, label, |s| {
+            let mut b = ProgramBuilder::new(&cfg);
+            lower_pool(&mut b, &p, in_base, out_base);
+            b.finish(label, &mut s.dram)
+        });
+        (n.0, n.1, n.2, false)
     }
 
     /// CPU fallback: unpack, run the reference op, repack.

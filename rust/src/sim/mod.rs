@@ -211,6 +211,14 @@ impl Tsim {
         self.trace.enabled = true;
     }
 
+    /// Timing-only mode: the timing wheel runs exactly as usual (cycle
+    /// counts are bit-identical — VTA timing never reads tensor data),
+    /// but instruction completion skips all datapath effects. See
+    /// [`CoreState::timing_only`].
+    pub fn set_timing_only(&mut self, on: bool) {
+        self.core.timing_only = on;
+    }
+
     pub fn cycle(&self) -> u64 {
         self.cycle
     }

@@ -10,6 +10,12 @@
 //! Loading tolerates a truncated or corrupt line (the kill-mid-write
 //! case): such lines are counted in [`ResultCache::skipped`] and their
 //! points simply re-simulate on resume.
+//!
+//! Records and keys are versioned by
+//! [`SIM_SCHEMA_VERSION`](crate::memo::SIM_SCHEMA_VERSION): a cache
+//! written under older simulator semantics is rejected at load (every
+//! line counts as skipped) *and* misses by key, so stale results are
+//! re-simulated rather than silently mixed with new ones.
 
 use super::PointResult;
 use crate::util::json::Json;

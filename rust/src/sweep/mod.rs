@@ -12,12 +12,23 @@
 //!   ([`cache::ResultCache`]) keyed by a stable hash of the point, so a
 //!   killed sweep resumes where it stopped and warm re-runs are instant;
 //! * maintains the (scaled area, cycles) Pareto frontier incrementally
-//!   ([`pareto::ParetoFront`]) as results land.
+//!   ([`pareto::ParetoFront`]) as results land;
+//! * shares a [`LayerMemo`](crate::memo::LayerMemo) across all workers
+//!   ([`SweepOptions::memo`]): a layer's cycle count is a pure function
+//!   of (config, op, tiling), so repeated layer shapes — within one
+//!   network, across ResNet depths, and across input seeds — simulate
+//!   once per unique signature instead of once per grid cell. Combined
+//!   with [`SweepOptions::timing_only`] this collapses the Fig 13 grid
+//!   from O(cells × layers) simulations to O(unique (config, layer))
+//!   with bit-identical cycles and counters (see
+//!   `rust/tests/sweep_engine.rs`).
 //!
 //! Determinism: simulation is seeded and single-threaded per point, the
 //! result vector is indexed by job order (grid order), and the frontier
 //! is an order-independent set — so the outcome is byte-identical
-//! regardless of `--jobs` and of cache warmth.
+//! regardless of `--jobs`, of cache warmth, and of the memo/timing-only
+//! fast paths (memo records are deterministic, so whichever worker
+//! simulates a layer first records the same values).
 
 pub mod cache;
 pub mod grid;
@@ -31,14 +42,16 @@ pub use pareto::{ParetoFront, ParetoPoint};
 use crate::analysis::area;
 use crate::compiler::graph::Graph;
 use crate::config::VtaConfig;
+use crate::memo::{LayerMemo, SIM_SCHEMA_VERSION};
 use crate::runtime::{Session, SessionOptions};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Pcg32;
 use queue::JobQueue;
 use std::collections::BTreeMap;
 use std::io;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc;
+use std::sync::Arc;
 
 /// Stable 64-bit cache-key hash (FNV-1a via `util::hash`): stable
 /// across processes, which `std::hash` explicitly is not.
@@ -47,9 +60,19 @@ pub fn stable_hash64(s: &str) -> u64 {
 }
 
 /// Canonical identity string of a design point; its hash is the cache
-/// key. The config's JSON form is deterministic (sorted keys).
+/// key. The config's JSON form is deterministic (sorted keys). The
+/// simulator schema version leads the string, so caches written under
+/// older simulation semantics miss cleanly instead of being silently
+/// mixed with new results (their records are additionally rejected at
+/// load — see [`PointResult::from_json`]).
 fn key_string(cfg: &VtaConfig, workload: &str, seed: u64, graph_seed: u64) -> String {
-    format!("{}|{}|{}|{}", cfg.to_json().to_string_compact(), workload, seed, graph_seed)
+    format!(
+        "v{SIM_SCHEMA_VERSION}|{}|{}|{}|{}",
+        cfg.to_json().to_string_compact(),
+        workload,
+        seed,
+        graph_seed
+    )
 }
 
 /// The grid a sweep covers: every valid config × workload × seed.
@@ -129,6 +152,7 @@ impl PointResult {
 
     pub fn to_json(&self) -> Json {
         obj([
+            ("schema", Json::Int(SIM_SCHEMA_VERSION as i64)),
             ("config", self.config.to_json()),
             ("workload", Json::Str(self.workload.clone())),
             ("seed", Json::Int(self.seed as i64)),
@@ -142,7 +166,13 @@ impl PointResult {
         ])
     }
 
+    /// Parse one cache line; `None` on any malformed field *or* a
+    /// schema version other than [`SIM_SCHEMA_VERSION`] (records from
+    /// an older simulator semantics are rejected, not mixed in).
     pub fn from_json(j: &Json) -> Option<PointResult> {
+        if j.get("schema")?.as_i64()? != SIM_SCHEMA_VERSION as i64 {
+            return None;
+        }
         let int = |name: &str| j.get(name).and_then(|v| v.as_i64()).map(|v| v as u64);
         Some(PointResult {
             config: VtaConfig::from_json(j.get("config")?).ok()?,
@@ -159,6 +189,17 @@ impl PointResult {
     }
 }
 
+/// Per-point evaluation options (the sweep fast paths).
+#[derive(Debug, Clone, Default)]
+pub struct EvalOptions {
+    /// Timing-only simulation: cycles and counters are bit-identical,
+    /// functional datapath effects are skipped (see
+    /// [`SessionOptions::timing_only`]).
+    pub timing_only: bool,
+    /// Shared layer-memo cache (see [`crate::memo`]).
+    pub memo: Option<Arc<LayerMemo>>,
+}
+
 /// Evaluate one design point by running the full stack on tsim — the
 /// same path as the serial `repro` drivers (graph weights from
 /// `graph_seed`, input data from `seed`), so results are comparable and
@@ -173,7 +214,23 @@ pub fn evaluate(job: &SweepJob) -> PointResult {
 /// and regenerating ResNet-18's ~11M weights per design point (one copy
 /// per concurrent worker) would dominate small-config sweeps.
 pub fn evaluate_with_graph(job: &SweepJob, graph: &Graph) -> PointResult {
-    let mut session = Session::new(&job.cfg, SessionOptions::default());
+    evaluate_with_graph_opts(job, graph, &EvalOptions::default())
+}
+
+/// [`evaluate_with_graph`] under explicit evaluation options. All modes
+/// produce bit-identical `PointResult`s (the memo/timing-only
+/// invariants, asserted by `rust/tests/sweep_engine.rs`).
+pub fn evaluate_with_graph_opts(
+    job: &SweepJob,
+    graph: &Graph,
+    eval: &EvalOptions,
+) -> PointResult {
+    let opts = SessionOptions {
+        timing_only: eval.timing_only,
+        memo: eval.memo.clone(),
+        ..SessionOptions::default()
+    };
+    let mut session = Session::new(&job.cfg, opts);
     let mut rng = Pcg32::seeded(job.seed);
     let input = rng.i8_vec(job.cfg.batch * graph.input_shape.elems());
     session.run_graph(graph, &input);
@@ -203,6 +260,14 @@ pub struct SweepOptions {
     pub resume: bool,
     /// Print a line as each point completes.
     pub progress: bool,
+    /// Share per-layer simulation results across all points and workers
+    /// (see [`crate::memo`]). With a file-backed cache the memo spills
+    /// to `<cache stem>.layers.jsonl` next to it, honoring `resume`.
+    /// Results are bit-identical either way.
+    pub memo: bool,
+    /// Timing-only simulation: skip functional datapath effects (the
+    /// sweep only consumes cycles/counters, which are bit-identical).
+    pub timing_only: bool,
 }
 
 /// Everything a sweep produced.
@@ -216,6 +281,20 @@ pub struct SweepOutcome {
     pub cached: usize,
     /// Points actually simulated in this run.
     pub simulated: usize,
+    /// Layer-memo lookups served from the cache (0 when memo disabled).
+    pub memo_hits: u64,
+    /// Layer-memo misses, i.e. layers actually simulated.
+    pub memo_misses: u64,
+}
+
+/// Spill-file path for the layer memo: `sweep_cache.jsonl` →
+/// `sweep_cache.layers.jsonl`, always next to the result cache.
+fn memo_spill_path(cache: &Path) -> PathBuf {
+    let stem = cache
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "sweep_cache".to_string());
+    cache.with_file_name(format!("{stem}.layers.jsonl"))
 }
 
 /// Run a sweep: shard pending points across workers, stream results to
@@ -243,6 +322,17 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> io::Result<SweepOutcome> {
     }
     let simulated = pending.len();
 
+    // The shared layer memo (when enabled): one instance behind an Arc,
+    // consulted by every worker, spilled next to the result cache.
+    let memo: Option<Arc<LayerMemo>> = if opts.memo {
+        Some(Arc::new(match &opts.cache_path {
+            Some(path) => LayerMemo::open(&memo_spill_path(path), opts.resume)?,
+            None => LayerMemo::in_memory(),
+        }))
+    } else {
+        None
+    };
+
     if !pending.is_empty() {
         let workers = effective_jobs(opts.jobs).min(pending.len());
         let job_queue = JobQueue::new(workers, &pending);
@@ -265,10 +355,12 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> io::Result<SweepOutcome> {
                 let job_queue = &job_queue;
                 let jobs = &jobs;
                 let graphs = &graphs;
+                let eval = EvalOptions { timing_only: opts.timing_only, memo: memo.clone() };
                 handles.push(scope.spawn(move || {
                     while let Some(j) = job_queue.pop(w) {
                         let job = &jobs[j];
-                        let result = evaluate_with_graph(job, &graphs[&job.workload.id()]);
+                        let result =
+                            evaluate_with_graph_opts(job, &graphs[&job.workload.id()], &eval);
                         if tx.send((j, result)).is_err() {
                             break; // collector gone (I/O error); stop early
                         }
@@ -302,7 +394,9 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> io::Result<SweepOutcome> {
         .into_iter()
         .map(|r| r.expect("every job either cached or simulated"))
         .collect();
-    Ok(SweepOutcome { results, front, cached, simulated })
+    let (memo_hits, memo_misses) =
+        memo.as_ref().map(|m| (m.hits(), m.misses())).unwrap_or((0, 0));
+    Ok(SweepOutcome { results, front, cached, simulated, memo_hits, memo_misses })
 }
 
 /// Resolve `jobs = 0` to the core count.
@@ -381,6 +475,40 @@ mod tests {
         let text = r.to_json().to_string_compact();
         let back = PointResult::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, r, "JSONL record must round-trip exactly");
+    }
+
+    #[test]
+    fn old_schema_cache_records_rejected() {
+        let r = PointResult {
+            config: presets::tiny_config(),
+            workload: "micro@4".to_string(),
+            seed: 7,
+            graph_seed: 42,
+            cycles: 1,
+            macs: 2,
+            dram_rd: 3,
+            dram_wr: 4,
+            insns: 5,
+            scaled_area: 0.5,
+        };
+        let mut j = r.to_json();
+        if let Json::Object(map) = &mut j {
+            map.insert("schema".into(), Json::Int(SIM_SCHEMA_VERSION as i64 - 1));
+        }
+        assert!(PointResult::from_json(&j).is_none(), "older schema must be rejected");
+        // A PR-1-era record carries no schema field at all.
+        if let Json::Object(map) = &mut j {
+            map.remove("schema");
+        }
+        assert!(PointResult::from_json(&j).is_none(), "unversioned record must be rejected");
+    }
+
+    #[test]
+    fn memo_spill_path_sits_next_to_cache() {
+        assert_eq!(
+            memo_spill_path(Path::new("results/sweep_cache.jsonl")),
+            PathBuf::from("results/sweep_cache.layers.jsonl")
+        );
     }
 
     #[test]

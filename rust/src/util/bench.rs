@@ -45,6 +45,8 @@ pub struct Bench {
     /// Cap on total iterations (protects multi-second macro benches).
     pub max_iters: u64,
     pub results: Vec<BenchResult>,
+    /// Destination for the JSON artifact (`--save-json <path>`).
+    pub json_path: Option<String>,
     filter: Option<String>,
 }
 
@@ -55,6 +57,7 @@ impl Default for Bench {
             warmup_time: Duration::from_millis(200),
             max_iters: 100_000_000,
             results: Vec::new(),
+            json_path: None,
             filter: None,
         }
     }
@@ -62,18 +65,73 @@ impl Default for Bench {
 
 impl Bench {
     /// Standard constructor honoring a `--bench <filter>`-style argv filter
-    /// (cargo bench passes the filter as a bare positional).
+    /// (cargo bench passes the filter as a bare positional), `--quick`,
+    /// and `--save-json <path>` (machine-readable results for the
+    /// perf-trajectory artifact — see `BENCH_sim_hotpath.json`).
     pub fn from_env() -> Self {
         let mut b = Bench::default();
         let args: Vec<String> = std::env::args().skip(1).collect();
-        // cargo bench passes `--bench`; any other non-flag positional is a
-        // name filter.
-        b.filter = args.iter().find(|a| !a.starts_with('-')).cloned();
-        if args.iter().any(|a| a == "--quick") {
-            b.measure_time = Duration::from_millis(120);
-            b.warmup_time = Duration::from_millis(30);
+        let mut i = 0;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--quick" => {
+                    b.measure_time = Duration::from_millis(120);
+                    b.warmup_time = Duration::from_millis(30);
+                }
+                "--save-json" => match args.get(i + 1) {
+                    Some(path) if !path.starts_with('-') => {
+                        b.json_path = Some(path.clone());
+                        i += 1;
+                    }
+                    _ => panic!("--save-json requires a path argument"),
+                },
+                // cargo bench passes `--bench`; any other non-flag
+                // positional is a name filter.
+                a if !a.starts_with('-') && b.filter.is_none() => {
+                    b.filter = Some(a.to_string());
+                }
+                _ => {}
+            }
+            i += 1;
         }
         b
+    }
+
+    /// Serialize all results to the machine-readable artifact format.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut fields = vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("iters", Json::Int(r.iters as i64)),
+                    ("mean_ns", Json::Float(r.mean_ns)),
+                    ("median_ns", Json::Float(r.median_ns)),
+                    ("stddev_ns", Json::Float(r.stddev_ns)),
+                    ("min_ns", Json::Float(r.min_ns)),
+                    ("max_ns", Json::Float(r.max_ns)),
+                ];
+                if let Some((units, label)) = &r.throughput {
+                    fields.push(("throughput_units", Json::Float(*units)));
+                    fields.push(("throughput_label", Json::Str(label.to_string())));
+                    fields.push(("per_sec", Json::Float(*units / (r.mean_ns / 1e9))));
+                }
+                obj(fields)
+            })
+            .collect();
+        obj([("results", Json::Array(results))])
+    }
+
+    /// Write the JSON artifact if `--save-json <path>` was requested.
+    /// Bench mains call this once after their last benchmark.
+    pub fn save_if_requested(&self) {
+        if let Some(path) = &self.json_path {
+            std::fs::write(path, self.to_json().to_string_pretty())
+                .unwrap_or_else(|e| panic!("writing bench json {path}: {e}"));
+            println!("bench results written to {path}");
+        }
     }
 
     fn matches(&self, name: &str) -> bool {
@@ -202,6 +260,24 @@ mod tests {
         b.filter = Some("match-me".into());
         b.bench("other", || 1);
         assert!(b.results.is_empty());
+    }
+
+    #[test]
+    fn json_artifact_contains_results() {
+        let mut b = Bench {
+            measure_time: Duration::from_millis(10),
+            warmup_time: Duration::from_millis(2),
+            ..Bench::default()
+        };
+        b.bench_throughput("probe", Some((100.0, "ops")), || 1);
+        let j = b.to_json();
+        let arr = match j.get("results") {
+            Some(crate::util::json::Json::Array(a)) => a,
+            other => panic!("expected results array, got {other:?}"),
+        };
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "probe");
+        assert!(arr[0].get("per_sec").is_some(), "throughput probes record per_sec");
     }
 
     #[test]

@@ -23,6 +23,16 @@ impl Fnv {
         }
     }
 
+    pub fn write_u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.write_u8(b);
+        }
+    }
+
+    pub fn write_bool(&mut self, v: bool) {
+        self.write_u8(v as u8);
+    }
+
     pub fn write_i8s(&mut self, vs: &[i8]) {
         for &v in vs {
             self.write_u8(v as u8);
@@ -62,6 +72,19 @@ mod tests {
         assert_eq!(fnv1a64(""), 0xcbf29ce484222325);
         assert_eq!(fnv1a64("a"), 0xaf63dc4c8601ec8c);
         assert_eq!(fnv1a64("foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn wide_writers_agree_with_bytes() {
+        let mut a = Fnv::new();
+        a.write_u64(0x0102030405060708);
+        a.write_bool(true);
+        let mut b = Fnv::new();
+        for byte in 0x0102030405060708u64.to_le_bytes() {
+            b.write_u8(byte);
+        }
+        b.write_u8(1);
+        assert_eq!(a.finish(), b.finish());
     }
 
     #[test]

@@ -1,0 +1,162 @@
+//! Memo / timing-only correctness invariants (the contract that makes
+//! the ISSUE-2 fast paths sound):
+//!
+//! * timing-only simulation produces *exactly* the cycles, per-layer
+//!   stats, and execution counters of a functional run;
+//! * memoized runs (cold and warm, timing-only and functional) are
+//!   bit-identical to unmemoized runs in all of the above;
+//! * functional-mode memo hits preserve network outputs bit-exactly
+//!   (hits replay the program through the shared exec core).
+
+use std::sync::Arc;
+use vta::compiler::graph::{Graph, Op};
+use vta::compiler::layout::Shape;
+use vta::config::presets;
+use vta::exec::ExecCounters;
+use vta::memo::LayerMemo;
+use vta::runtime::{LayerStat, Session, SessionOptions};
+use vta::util::prop::Prop;
+use vta::util::rng::Pcg32;
+use vta::workloads;
+use vta::{prop_assert, prop_assert_eq};
+
+/// Comparable projection of a `LayerStat` (the struct itself does not
+/// implement `PartialEq`).
+type StatKey = (String, &'static str, u64, usize, usize, u64, u64, u64, bool);
+
+fn stat_key(s: &LayerStat) -> StatKey {
+    (s.name.clone(), s.kind, s.cycles, s.insns, s.uops, s.macs, s.dram_rd, s.dram_wr, s.on_cpu)
+}
+
+type RunResult = (Vec<i8>, u64, ExecCounters, Vec<StatKey>);
+
+fn run(
+    graph: &Graph,
+    input: &[i8],
+    cfg: &vta::config::VtaConfig,
+    opts: SessionOptions,
+) -> RunResult {
+    let mut s = Session::new(cfg, opts);
+    let out = s.run_graph(graph, input);
+    let stats = s.layer_stats.iter().map(stat_key).collect();
+    (out, s.cycles(), s.exec_counters(), stats)
+}
+
+#[test]
+fn micro_resnet_fast_paths_match_functional() {
+    let cfg = presets::default_config();
+    let g = workloads::micro_resnet(16, 3);
+    let mut rng = Pcg32::seeded(11);
+    let input = rng.i8_vec(cfg.batch * g.input_shape.elems());
+
+    let base = run(&g, &input, &cfg, SessionOptions::default());
+    let timing = run(&g, &input, &cfg, SessionOptions { timing_only: true, ..Default::default() });
+    assert_eq!(timing.1, base.1, "timing-only cycles must match functional exactly");
+    assert_eq!(timing.2, base.2, "timing-only counters must match functional exactly");
+    assert_eq!(timing.3, base.3, "timing-only per-layer stats must match functional exactly");
+
+    let memo = Arc::new(LayerMemo::in_memory());
+    let cold = run(
+        &g,
+        &input,
+        &cfg,
+        SessionOptions { memo: Some(memo.clone()), ..Default::default() },
+    );
+    assert!(
+        memo.hits() > 0,
+        "micro-resnet repeats layer shapes (residual blocks); expected in-network hits"
+    );
+    assert_eq!(cold.0, base.0, "functional memo hits must preserve outputs bit-exactly");
+    assert_eq!((cold.1, cold.2, &cold.3), (base.1, base.2, &base.3));
+
+    let warm_timing = run(
+        &g,
+        &input,
+        &cfg,
+        SessionOptions { timing_only: true, memo: Some(memo.clone()), ..Default::default() },
+    );
+    assert_eq!((warm_timing.1, warm_timing.2, &warm_timing.3), (base.1, base.2, &base.3));
+}
+
+#[test]
+fn prop_memoized_and_plain_runs_bit_identical() {
+    Prop::new("memo-bit-identical").cases(10).run(|g| {
+        let cfg = presets::tiny_config();
+        let block = cfg.block_in;
+        let c = block * g.usize(1, 2);
+        let hw = g.usize(6, 10);
+        let relu = g.bool();
+        let shift = g.i64(0, 5) as u32;
+        let mut graph = Graph::new("prop-memo", Shape::new(c, hw, hw));
+        let c1 = graph.add(
+            "conv1",
+            Op::Conv {
+                c_out: c,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                shift,
+                relu,
+                weights: g.vec_i8(c * c * 9),
+            },
+            vec![0],
+        );
+        // Same shape, different weights: an in-network memo hit whose
+        // functional replay must still use *these* weights.
+        let c2 = graph.add(
+            "conv2",
+            Op::Conv {
+                c_out: c,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                shift,
+                relu,
+                weights: g.vec_i8(c * c * 9),
+            },
+            vec![c1],
+        );
+        let add = graph.add("add", Op::Add { relu: true }, vec![c2, c1]);
+        let pool = graph.add("pool", Op::MaxPool { k: 2, stride: 2, pad: 0 }, vec![add]);
+        let gap = graph.add("gap", Op::GlobalAvgPool, vec![pool]);
+        graph.add(
+            "fc",
+            Op::Dense { units: 8, shift: 2, relu: false, weights: g.vec_i8(8 * c) },
+            vec![gap],
+        );
+        let input = g.vec_i8(cfg.batch * graph.input_shape.elems());
+
+        let base = run(&graph, &input, &cfg, SessionOptions::default());
+        let memo = Arc::new(LayerMemo::in_memory());
+        let cold = run(
+            &graph,
+            &input,
+            &cfg,
+            SessionOptions { memo: Some(memo.clone()), ..Default::default() },
+        );
+        let warm = run(
+            &graph,
+            &input,
+            &cfg,
+            SessionOptions { memo: Some(memo.clone()), ..Default::default() },
+        );
+        let timing_memo = run(
+            &graph,
+            &input,
+            &cfg,
+            SessionOptions { timing_only: true, memo: Some(memo.clone()), ..Default::default() },
+        );
+        let timing_plain =
+            run(&graph, &input, &cfg, SessionOptions { timing_only: true, ..Default::default() });
+
+        prop_assert!(memo.hits() > 0, "conv2 repeats conv1's shape; expected a hit");
+        prop_assert_eq!(&cold.0, &base.0);
+        prop_assert_eq!(&warm.0, &base.0);
+        for r in [&cold, &warm, &timing_memo, &timing_plain] {
+            prop_assert_eq!(r.1, base.1);
+            prop_assert_eq!(r.2, base.2);
+            prop_assert_eq!(&r.3, &base.3);
+        }
+        Ok(())
+    });
+}

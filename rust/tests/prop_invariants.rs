@@ -218,7 +218,7 @@ fn prop_random_conv_fsim_tsim_cpu_agree() {
         for target in [Target::Fsim, Target::Tsim] {
             let mut s = Session::new(
                 &cfg,
-                SessionOptions { target, dbuf_reuse: reuse, tps: tps_on, trace: false },
+                SessionOptions { target, dbuf_reuse: reuse, tps: tps_on, ..Default::default() },
             );
             let got = s.run_graph(&graph, &input);
             prop_assert!(

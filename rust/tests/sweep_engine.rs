@@ -41,7 +41,66 @@ fn temp_cache(name: &str) -> PathBuf {
 }
 
 fn run_opts(jobs: usize, cache: Option<PathBuf>, resume: bool) -> SweepOptions {
-    SweepOptions { jobs, cache_path: cache, resume, progress: false }
+    SweepOptions { jobs, cache_path: cache, resume, ..Default::default() }
+}
+
+/// ISSUE-2 acceptance invariant on a reduced grid: the memoized
+/// timing-only fast path must produce bit-identical results (cycles,
+/// counters, area — the whole `PointResult`) to full functional
+/// simulation with the memo disabled.
+#[test]
+fn memo_timing_only_results_bit_identical() {
+    let spec = micro_spec();
+    let baseline = sweep::run(&spec, &run_opts(2, None, false)).unwrap();
+    let fast = sweep::run(
+        &spec,
+        &SweepOptions { jobs: 2, memo: true, timing_only: true, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(baseline.results, fast.results, "fast path must be bit-identical");
+    assert_eq!(baseline.front.points(), fast.front.points(), "frontier must be identical");
+    assert!(
+        fast.memo_hits > 0,
+        "the grid repeats layer shapes (2 seeds per config); expected memo reuse"
+    );
+    // The memo alone (functional mode, hits replayed through the exec
+    // core) must also change nothing.
+    let memo_functional = sweep::run(
+        &spec,
+        &SweepOptions { jobs: 2, memo: true, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(baseline.results, memo_functional.results);
+}
+
+/// The layer-memo spill warms a restarted sweep: lose the result cache
+/// but keep the spill, and every point re-simulates with zero layer
+/// simulations.
+#[test]
+fn memo_spill_warm_restart_simulates_no_layers() {
+    let spec = micro_spec();
+    let cache = temp_cache("memo_spill");
+    let spill = cache.with_file_name(format!(
+        "{}.layers.jsonl",
+        cache.file_stem().unwrap().to_string_lossy()
+    ));
+    let opts = SweepOptions {
+        jobs: 2,
+        cache_path: Some(cache.clone()),
+        resume: false,
+        progress: false,
+        memo: true,
+        timing_only: true,
+    };
+    let first = sweep::run(&spec, &opts).unwrap();
+    assert!(spill.exists(), "memo must spill next to the result cache");
+    std::fs::remove_file(&cache).unwrap();
+    let second = sweep::run(&spec, &SweepOptions { resume: true, ..opts.clone() }).unwrap();
+    assert_eq!(first.results, second.results);
+    assert_eq!(second.simulated, spec.jobs().len(), "result cache was lost");
+    assert_eq!(second.memo_misses, 0, "every layer must come from the spill");
+    std::fs::remove_file(&cache).ok();
+    std::fs::remove_file(&spill).ok();
 }
 
 #[test]
