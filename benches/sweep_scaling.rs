@@ -5,7 +5,8 @@
 //!     cargo bench --bench sweep_scaling [-- <filter>] [--quick]
 
 use vta::config::presets;
-use vta::sweep::{self, SweepOptions, SweepSpec, WorkloadSpec};
+use vta::model;
+use vta::sweep::{self, SweepOptions, SweepSpec, TwoPhaseOptions, WorkloadSpec};
 use vta::util::bench::Bench;
 
 /// 16-point micro grid: big enough to expose load imbalance (scratchpad
@@ -66,6 +67,35 @@ fn main() {
     });
     if let (Some(p), Some(m)) = (parallel, memoized) {
         assert_eq!(p, m, "the fast path must not change the frontier");
+    }
+
+    // ISSUE-3: the two-phase engine — the analytical model prices the
+    // grid in microseconds and tsim runs only on the epsilon-band
+    // survivors. Wall clock scales with the survivor count, not the
+    // grid; the probe also reports the prune factor.
+    let two_phase = b.once("sweep/two_phase_default_epsilon", || {
+        let o = sweep::run(
+            &spec,
+            &SweepOptions {
+                jobs: cores,
+                memo: true,
+                timing_only: true,
+                two_phase: Some(TwoPhaseOptions { epsilon: model::DEFAULT_PRUNE_EPSILON }),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(o.results.len() + o.pruned.len(), n_points);
+        println!(
+            "    two-phase: {}/{} evaluated ({:.1}x fewer tsim evaluations)",
+            o.results.len(),
+            n_points,
+            o.prune_factor()
+        );
+        o.front.len()
+    });
+    if let (Some(m), Some(t)) = (memoized, two_phase) {
+        println!("    front sizes: full {m}, two-phase {t}");
     }
 
     // Warm-cache resume: populate once, then measure the replay path.

@@ -40,6 +40,18 @@ impl Roofline {
     pub fn compute_bound(&self, ops_per_byte: f64) -> bool {
         ops_per_byte >= self.ridge_ops_per_byte()
     }
+
+    /// Lower bound on the cycles any schedule needs for `macs` MACs and
+    /// `dram_bytes` of DRAM traffic: the compute ceiling vs the
+    /// bandwidth diagonal, whichever binds. Shared by the analytical
+    /// sweep model (`crate::model`), which clamps its per-layer
+    /// estimates to this bound, so Fig 2's chart and the phase-1 pruner
+    /// agree on what the hardware ceilings allow.
+    pub fn bound_cycles(&self, macs: u64, dram_bytes: u64) -> u64 {
+        let compute = (macs as f64 / self.peak_ops_per_cycle).ceil() as u64;
+        let memory = (dram_bytes as f64 / self.bytes_per_cycle).ceil() as u64;
+        compute.max(memory)
+    }
 }
 
 /// A measured kernel/workload point on the chart.
@@ -108,6 +120,15 @@ mod tests {
         assert_eq!(r.attainable(1000.0), 256.0); // compute bound
         assert!(r.compute_bound(64.0));
         assert!(!r.compute_bound(4.0));
+    }
+
+    #[test]
+    fn bound_cycles_takes_the_binding_ceiling() {
+        let r = Roofline::of(&presets::default_config()); // 256 MACs/c, 8 B/c
+        assert_eq!(r.bound_cycles(2560, 0), 10); // compute-bound
+        assert_eq!(r.bound_cycles(0, 80), 10); // memory-bound
+        assert_eq!(r.bound_cycles(2560, 800), 100); // memory binds
+        assert_eq!(r.bound_cycles(0, 0), 0);
     }
 
     #[test]

@@ -24,6 +24,7 @@ pub mod fsim;
 pub mod isa;
 pub mod mem;
 pub mod memo;
+pub mod model;
 pub mod repro;
 pub mod runtime;
 pub mod sweep;

@@ -32,11 +32,16 @@ fn usage() -> ! {
                       [--target tsim|fsim] [--hw 224] [--seed 1] [--no-tps] [--no-dbuf]\n\
            repro      pipelining|ablation|fig2|fig3|fig10|fig11|fig12|fig13|all [--quick] [--out results]\n\
                       [--jobs N]  (fig13 runs on the parallel sweep engine)\n\
+                      [--two-phase [--prune-epsilon E]]  (fig13: model-pruned grid, tsim-measured front)\n\
            sweep      [--quick] [--jobs N] [--resume|--fresh] [--cache sweep_cache.jsonl]\n\
                       [--out sweep_results.json] [--no-progress]\n\
                       [--timing-only] (skip functional effects; cycles identical)\n\
                       [--no-memo] (disable the cross-point layer-result cache)\n\
-                      grid: [--blocks 16,32,64] [--axi 8,16,32,64] [--scales 1,2,4]\n\
+                      [--two-phase] (analytical pre-model prunes the grid; tsim only on\n\
+                        predicted-front survivors — the reported front stays 100% measured)\n\
+                      [--prune-epsilon E] (band width; implies --two-phase; default 1.0)\n\
+                      [--no-prune] (force full evaluation, e.g. for model calibration)\n\
+                      grid: [--dense] [--blocks 16,32,64] [--axi 8,16,32,64] [--scales 1,2,4]\n\
                       [--batch 1] [--net resnet18|...|mobilenet|micro] [--hw 224]\n\
                       [--workloads resnet18@224,mobilenet@56] [--seeds 7,8] [--graph-seed 1]\n\
            config     show|save --config <name> [--out path.json]\n\
@@ -167,7 +172,16 @@ fn cmd_repro(args: &Args) {
             repro::fig12(quick);
         }
         "fig13" => {
-            repro::fig13_jobs(quick, args.get_usize("jobs", 0));
+            let jobs = args.get_usize("jobs", 0);
+            if args.has_flag("two-phase") || args.get("prune-epsilon").is_some() {
+                repro::fig13_two_phase(
+                    quick,
+                    jobs,
+                    args.get_f64("prune-epsilon", vta::model::DEFAULT_PRUNE_EPSILON),
+                );
+            } else {
+                repro::fig13_jobs(quick, jobs);
+            }
         }
         "ablation" => {
             repro::ablation(quick);
@@ -197,7 +211,11 @@ fn parse_workload(s: &str) -> WorkloadSpec {
 
 fn cmd_sweep(args: &Args) {
     let quick = args.has_flag("quick");
-    let mut grid = GridSpec::fig13(quick);
+    let mut grid = if args.has_flag("dense") {
+        GridSpec::fig13_dense(quick)
+    } else {
+        GridSpec::fig13(quick)
+    };
     grid.batch = args.get_usize("batch", grid.batch);
     grid.blocks = args.get_usize_list("blocks", &grid.blocks);
     grid.axi = args.get_usize_list("axi", &grid.axi);
@@ -227,7 +245,10 @@ fn cmd_sweep(args: &Args) {
     }
 
     let spec = grid.to_sweep_spec();
-    let n_points = spec.jobs().len();
+    // Expanded once; reused for the point count and pruned-point labels
+    // (the engine's job_indices follow this same grid order).
+    let jobs_list = spec.jobs();
+    let n_points = jobs_list.len();
     if n_points == 0 {
         eprintln!("error: the grid contains no valid design points");
         std::process::exit(1);
@@ -249,6 +270,12 @@ fn cmd_sweep(args: &Args) {
             }
         }
     }
+    // Two-phase pruning: opt in with --two-phase (or by setting a band
+    // width explicitly); --no-prune always wins — required whenever the
+    // run must measure every grid point (model calibration, full-cloud
+    // plots, resuming a cache that should stay complete).
+    let two_phase = (args.has_flag("two-phase") || args.get("prune-epsilon").is_some())
+        && !args.has_flag("no-prune");
     let opts = SweepOptions {
         jobs,
         cache_path: Some(cache.into()),
@@ -260,6 +287,9 @@ fn cmd_sweep(args: &Args) {
         // only cycles/counters are needed.
         memo: !args.has_flag("no-memo"),
         timing_only: args.has_flag("timing-only"),
+        two_phase: two_phase.then(|| sweep::TwoPhaseOptions {
+            epsilon: args.get_f64("prune-epsilon", vta::model::DEFAULT_PRUNE_EPSILON),
+        }),
     };
     // "up to": the engine spawns min(workers, uncached points), which
     // is only known once the cache has been consulted.
@@ -302,6 +332,34 @@ fn cmd_sweep(args: &Args) {
         outcome.cached,
         stats::fmt_ns(wall.as_nanos() as f64)
     );
+    if let Some(tp) = &opts.two_phase {
+        println!(
+            "two-phase: {} grid points scored by the model, {} pruned, {} evaluated \
+             ({:.1}x fewer tsim evaluations, epsilon {:.2}; front is 100% tsim-measured)",
+            n_points,
+            outcome.pruned.len(),
+            outcome.results.len(),
+            outcome.prune_factor(),
+            tp.epsilon
+        );
+        // Predicted-vs-measured on the survivors: free calibration data.
+        let worst = outcome
+            .results
+            .iter()
+            .filter_map(|r| {
+                let p = r.predicted_cycles? as f64;
+                let m = r.cycles as f64;
+                Some((p / m).max(m / p))
+            })
+            .fold(1.0f64, f64::max);
+        if worst > 1.0 {
+            println!(
+                "model error on survivors: worst ratio {:.2} (sound epsilon >= {:.2})",
+                worst,
+                vta::model::epsilon_for_ratio(worst)
+            );
+        }
+    }
     if opts.memo && outcome.memo_hits + outcome.memo_misses > 0 {
         println!(
             "layer memo: {} hits / {} layers simulated ({:.1}% reuse)",
@@ -325,12 +383,30 @@ fn cmd_sweep(args: &Args) {
             j
         })
         .collect();
+    let pruned: Vec<Json> = outcome
+        .pruned
+        .iter()
+        .map(|p| {
+            obj([
+                ("job", Json::Int(p.index as i64)),
+                ("config", Json::Str(jobs_list[p.index].cfg.tag())),
+                ("workload", Json::Str(jobs_list[p.index].workload.id())),
+                ("predicted_cycles", Json::Int(p.predicted_cycles as i64)),
+                ("area", Json::Float(p.scaled_area)),
+            ])
+        })
+        .collect();
     let summary = obj([
         ("points", Json::Array(points)),
         (
             "pareto_ids",
             Json::Array(outcome.front.ids().iter().map(|&i| Json::Int(i as i64)).collect()),
         ),
+        (
+            "job_indices",
+            Json::Array(outcome.job_indices.iter().map(|&i| Json::Int(i as i64)).collect()),
+        ),
+        ("pruned_points", Json::Array(pruned)),
         ("cached", Json::Int(outcome.cached as i64)),
         ("simulated", Json::Int(outcome.simulated as i64)),
     ]);

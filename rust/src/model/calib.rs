@@ -1,0 +1,161 @@
+//! Model calibration against tsim — measures the analytical model's
+//! error band so the sweep's pruning epsilon can be chosen soundly.
+//!
+//! The comparison target is the simulator's own per-layer accounting:
+//! [`Session::layer_stats`](crate::runtime::Session) cycles from a
+//! timing-only run (bit-identical to functional simulation, a fraction
+//! of the wall clock), i.e. exactly the numbers the sweep's
+//! [`PerfReport`](crate::sim::PerfReport)/`ModuleStats` pipeline
+//! aggregates. `rust/tests/model_calibration.rs` runs this harness over
+//! the preset configurations × workload layers; EXPERIMENTS.md records
+//! the measured band per PR.
+
+use super::{epsilon_for_ratio, predict_graph};
+use crate::compiler::graph::Graph;
+use crate::config::VtaConfig;
+use crate::runtime::{Session, SessionOptions};
+use crate::util::rng::Pcg32;
+
+/// One predicted-vs-measured pair (a layer, or a whole network when
+/// `label` ends in `/total`).
+#[derive(Debug, Clone)]
+pub struct CalibPoint {
+    pub label: String,
+    pub predicted: u64,
+    pub measured: u64,
+}
+
+impl CalibPoint {
+    /// Multiplicative error ratio ρ = max(pred/meas, meas/pred) ≥ 1.
+    pub fn ratio(&self) -> f64 {
+        let (p, m) = (self.predicted.max(1) as f64, self.measured.max(1) as f64);
+        (p / m).max(m / p)
+    }
+}
+
+/// Aggregated calibration results.
+#[derive(Debug, Clone, Default)]
+pub struct CalibrationReport {
+    pub points: Vec<CalibPoint>,
+}
+
+impl CalibrationReport {
+    /// Worst multiplicative error ratio over all points (1.0 if empty).
+    pub fn max_ratio(&self) -> f64 {
+        self.points.iter().map(|p| p.ratio()).fold(1.0, f64::max)
+    }
+
+    /// Geometric-mean error ratio (the typical miss, robust to outliers).
+    pub fn geomean_ratio(&self) -> f64 {
+        if self.points.is_empty() {
+            return 1.0;
+        }
+        let s: f64 = self.points.iter().map(|p| p.ratio().ln()).sum();
+        (s / self.points.len() as f64).exp()
+    }
+
+    /// The smallest pruning epsilon that is provably sound for the
+    /// measured error band (ε = ρ² − 1; DESIGN.md §Two-phase sweep).
+    pub fn suggested_epsilon(&self) -> f64 {
+        epsilon_for_ratio(self.max_ratio())
+    }
+
+    /// Human-readable table: one row per point plus the summary.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<34} {:>12} {:>12} {:>7}\n",
+            "layer", "predicted", "measured", "ratio"
+        ));
+        for p in &self.points {
+            out.push_str(&format!(
+                "{:<34} {:>12} {:>12} {:>7.2}\n",
+                p.label,
+                p.predicted,
+                p.measured,
+                p.ratio()
+            ));
+        }
+        out.push_str(&format!(
+            "max ratio {:.2}  geomean {:.2}  sound epsilon >= {:.2}\n",
+            self.max_ratio(),
+            self.geomean_ratio(),
+            self.suggested_epsilon()
+        ));
+        out
+    }
+}
+
+/// Calibrate one `(config, graph)` pair: simulate the network once
+/// (timing-only tsim), predict it with the analytical model, and pair
+/// every accelerated layer plus the network total. CPU-fallback layers
+/// (0 cycles on both sides) are excluded.
+pub fn calibrate_graph(cfg: &VtaConfig, graph: &Graph, seed: u64) -> CalibrationReport {
+    let mut session = Session::new(
+        cfg,
+        SessionOptions { timing_only: true, ..SessionOptions::default() },
+    );
+    let mut rng = Pcg32::seeded(seed);
+    let input = rng.i8_vec(cfg.batch * graph.input_shape.elems());
+    session.run_graph(graph, &input);
+
+    let prediction = predict_graph(cfg, graph);
+    assert_eq!(
+        session.layer_stats.len(),
+        prediction.layers.len(),
+        "model must walk the same layer list as the runtime"
+    );
+    let mut points = Vec::new();
+    for (stat, pred) in session.layer_stats.iter().zip(&prediction.layers) {
+        if stat.on_cpu {
+            assert_eq!(pred.cycles, 0, "model must mirror the CPU-fallback rule");
+            continue;
+        }
+        points.push(CalibPoint {
+            label: format!("{}/{}", cfg.tag(), stat.name),
+            predicted: pred.cycles,
+            measured: stat.cycles,
+        });
+    }
+    points.push(CalibPoint {
+        label: format!("{}/{}/total", cfg.tag(), graph.name),
+        predicted: prediction.cycles,
+        measured: session.cycles(),
+    });
+    CalibrationReport { points }
+}
+
+/// Merge reports (e.g. across the preset grid).
+pub fn merge(reports: impl IntoIterator<Item = CalibrationReport>) -> CalibrationReport {
+    let mut all = CalibrationReport::default();
+    for r in reports {
+        all.points.extend(r.points);
+    }
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(p: u64, m: u64) -> CalibPoint {
+        CalibPoint { label: "t".into(), predicted: p, measured: m }
+    }
+
+    #[test]
+    fn ratio_is_symmetric_and_at_least_one() {
+        assert_eq!(point(100, 100).ratio(), 1.0);
+        assert_eq!(point(200, 100).ratio(), 2.0);
+        assert_eq!(point(100, 200).ratio(), 2.0);
+        assert_eq!(point(0, 0).ratio(), 1.0, "both-zero pairs are exact");
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let r = CalibrationReport { points: vec![point(100, 100), point(300, 100)] };
+        assert_eq!(r.max_ratio(), 3.0);
+        assert!((r.geomean_ratio() - 3.0f64.sqrt()).abs() < 1e-12);
+        assert!((r.suggested_epsilon() - 8.0).abs() < 1e-12);
+        assert!(r.render_table().contains("max ratio 3.00"));
+    }
+}

@@ -1,0 +1,586 @@
+//! Analytical per-layer cycle model — the phase-1 scorer of the
+//! two-phase design-space sweep (DESIGN.md §Two-phase sweep).
+//!
+//! For a `(VtaConfig, layer)` pair the model predicts the tsim cycle
+//! count in microseconds of host time instead of seconds of simulation,
+//! by mirroring the arithmetic the simulator applies to the lowered
+//! program — without compiling or simulating anything:
+//!
+//! * **DMA / bandwidth term**: DRAM byte counts come from the same
+//!   closed forms TPS uses ([`Tiling::dram_bytes`]'s halo sums), divided
+//!   by the AXI width, plus one beat of burst-quantization overhead per
+//!   DMA row (each `y_size` row is a separate burst in the VME);
+//! * **compute term**: GEMM/ALU busy cycles from the exact loop shapes
+//!   the lowering emits (`uops × lp_out × lp_in`), at the configuration's
+//!   initiation intervals (II = 1/4 GEMM, 1/2/4/5 ALU) plus the pipeline
+//!   fill per instruction ([`sim::GEMM_PIPE_FILL`]/[`sim::ALU_PIPE_FILL`]);
+//! * **token-pipeline overlap**: the load, compute and store stages run
+//!   concurrently under dependency tokens, so a double-buffered layer
+//!   costs ≈ `max(read-channel, compute, write-channel)` plus a
+//!   *serialization correction* (DRAM latency exposure, first-block fill
+//!   and last-block drain). A layer whose tiling cannot double buffer
+//!   (single scratchpad slots) degrades to `read + compute`.
+//!
+//! Every estimate is clamped from below by the configuration's roofline
+//! ([`Roofline::bound_cycles`]) — the model and the Fig 2 analysis share
+//! one bandwidth-vs-compute bound.
+//!
+//! Two properties the sweep relies on (enforced by
+//! `rust/tests/model_calibration.rs`):
+//!
+//! * monotonicity — widening the memory interface or enabling
+//!   execution-unit pipelining never *increases* an estimate;
+//! * calibration — per-layer estimates track tsim within the error band
+//!   documented in DESIGN.md (measure it for your workload with
+//!   [`calib::calibrate_graph`]; [`CALIBRATION_SANITY_RATIO`] is the hard
+//!   CI bound, [`DEFAULT_PRUNE_EPSILON`] the band the default pruning
+//!   tolerance covers).
+
+pub mod calib;
+
+use crate::analysis::roofline::Roofline;
+use crate::compiler::depthwise::DepthwiseParams;
+use crate::compiler::eltwise::PoolParams;
+use crate::compiler::graph::{Graph, Op};
+use crate::compiler::tps::{self, ConvSpec, Tiling};
+use crate::config::{VtaConfig, INSN_BYTES};
+use crate::memo::sig;
+use crate::sim::{ALU_PIPE_FILL, GEMM_PIPE_FILL};
+use crate::util::bitfield::clog2;
+use std::collections::HashMap;
+
+/// Default epsilon for the sweep's predicted-pareto pruning band
+/// (`--prune-epsilon`). Derived from the model error bound: if every
+/// prediction is within a multiplicative factor ρ of the measured value
+/// (`pred ∈ [true/ρ, true·ρ]`), pruning with `ε ≥ ρ² − 1` can never
+/// drop a true front point (soundness argument in DESIGN.md). The
+/// default covers ρ = √2 ≈ ±41% relative error — conservative against
+/// the calibration harness's measured band; widen it for workloads
+/// where [`calib::CalibrationReport::suggested_epsilon`] says so.
+pub const DEFAULT_PRUNE_EPSILON: f64 = 1.0;
+
+/// Hard sanity bound on the per-layer prediction/measurement ratio that
+/// CI enforces (`rust/tests/model_calibration.rs`). Well above the
+/// expected band: its job is to catch model regressions (a wrong loop
+/// shape, a dropped term), not to certify pruning soundness — the sweep
+/// acceptance test self-calibrates ε from measured error instead.
+pub const CALIBRATION_SANITY_RATIO: f64 = 8.0;
+
+/// Epsilon that makes epsilon-band pruning sound for a measured
+/// multiplicative error ratio `rho` (`pred ∈ [true/ρ, true·ρ]`):
+/// `ε = ρ² − 1`. See DESIGN.md §Two-phase sweep for the derivation.
+pub fn epsilon_for_ratio(rho: f64) -> f64 {
+    (rho * rho - 1.0).max(0.0)
+}
+
+/// One layer's predicted cost, split by pipeline stage.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerEstimate {
+    /// Read-channel occupancy: input/weight/uop/acc DMA + insn fetch.
+    pub read_cycles: u64,
+    /// Compute-module busy cycles (GEMM + ALU + its own DMA waits).
+    pub compute_cycles: u64,
+    /// Write-channel occupancy (stores).
+    pub write_cycles: u64,
+    /// Serialization correction: latency exposure, fill and drain.
+    pub serial_cycles: u64,
+    /// Tiling cannot double buffer: load and compute alternate instead
+    /// of overlapping, so the stages add rather than max.
+    pub serialized: bool,
+}
+
+impl LayerEstimate {
+    /// Collapse the stage estimates into one cycle count:
+    /// max-of-stages under token-pipeline overlap (sum when the tiling
+    /// forbids double buffering) plus the serialization correction.
+    pub fn cycles(&self) -> u64 {
+        let base = if self.serialized {
+            self.read_cycles + self.compute_cycles
+        } else {
+            self.read_cycles.max(self.compute_cycles)
+        };
+        base.max(self.write_cycles) + self.serial_cycles
+    }
+}
+
+/// GEMM initiation interval (mirrors `sim::step_compute`).
+fn gemm_ii(cfg: &VtaConfig) -> u64 {
+    if cfg.gemm_pipelined {
+        1
+    } else {
+        4
+    }
+}
+
+/// ALU initiation interval (mirrors `sim::step_compute`).
+fn alu_ii(cfg: &VtaConfig, use_imm: bool) -> u64 {
+    match (cfg.alu_pipelined, use_imm) {
+        (true, true) => 1,
+        (true, false) => 2,
+        (false, true) => 4,
+        (false, false) => 5,
+    }
+}
+
+/// Requantization ALU instructions per accumulator block
+/// (`emit_requant`: ADD+SHR when shift > 0, MAX for ReLU, always CLIP).
+fn requant_insns(shift: u32, relu: bool) -> u64 {
+    u64::from(shift > 0) * 2 + u64::from(relu) + 1
+}
+
+/// Predicted cycles of a convolution (or dense: a 1×1 conv spec)
+/// lowered with `tiling` — mirrors `compiler::conv::lower_conv`.
+pub fn conv_estimate(
+    cfg: &VtaConfig,
+    spec: &ConvSpec,
+    shift: u32,
+    relu: bool,
+    t: &Tiling,
+) -> LayerEstimate {
+    let w = cfg.axi_bytes as u64;
+    let lat = cfg.dram_latency;
+    let g = t.geom(spec, cfg);
+    let (oh, ow) = (spec.oh() as u64, spec.ow() as u64);
+    let (di, dout) = (spec.di(cfg) as u64, spec.dout(cfg) as u64);
+    let (th, tw, tco, tci) = (t.th_o as u64, t.tw_o as u64, t.tco_o as u64, t.tci_o as u64);
+    let (kh, kw) = (spec.kh as u64, spec.kw as u64);
+
+    // Halo-inclusive rows/cols summed over spatial chunks (the TPS
+    // closed form): Σ ((oh_c − 1)·sh + kh) = sh·(OH − th) + th·kh.
+    let sum_ih = spec.sh as u64 * oh.saturating_sub(th) + th * kh;
+    let sum_iw = spec.sw as u64 * ow.saturating_sub(tw) + tw * kw;
+
+    // Ring-slot structure, exactly as the lowering decides it (double
+    // buffering needs 2 slots per scratchpad; a layer without any
+    // double-buffered operand buffer serializes load against compute).
+    let inp_slots = (cfg.inp_depth / g.inp_block_tiles).clamp(1, 2);
+    let wgt_slots = (cfg.wgt_depth / g.wgt_block_tiles).clamp(1, 2);
+    let inp_factor = if t.reuse_inp { 1 } else { tco };
+
+    // ---- read channel: DMA bytes + one quantization beat per row ----
+    let inp_tile = cfg.inp_tile_bytes() as u64;
+    let wgt_tile = cfg.wgt_tile_bytes() as u64;
+    let out_tile = cfg.out_tile_bytes() as u64;
+    let inp_bytes = di * sum_ih * sum_iw * inp_factor * inp_tile;
+    let inp_rows = di * tw * sum_ih * inp_factor;
+    let wgt_bytes = th * tw * dout * di * kh * kw * wgt_tile;
+    let wgt_rows = th * tw * tci * dout;
+    // Uop stream (deduplicated by the builder): the TPS feasibility
+    // budget — up to 2 slot variants of the GEMM sequence plus the
+    // per-row ALU/reset sequences.
+    let uop_count = (2 * g.gemm_uops as u64 + 4 * g.ow_i as u64).min(cfg.uop_depth as u64);
+    let uop_bytes = uop_count * cfg.isa_layout().uop_bytes() as u64;
+    let n_alu_per = requant_insns(shift, relu);
+    let n_insns = th * tw * (tco + di * inp_factor + 2 * tco * tci + tco * n_alu_per + dout) + 4;
+    let fetch_bytes = n_insns * INSN_BYTES as u64;
+    let read_cycles =
+        (inp_bytes + wgt_bytes + uop_bytes + fetch_bytes).div_ceil(w) + inp_rows + wgt_rows;
+
+    // ---- compute: loop shapes from the emitted instructions ----
+    let gemm_ops = dout * oh * ow * di * kh * kw; // Σ total_ops over GEMM insns
+    let reset_ops = dout * oh * ow;
+    let n_gemm = th * tw * tco * tci;
+    let n_reset = th * tw * tco;
+    let alu_ops = n_alu_per * dout * oh * ow * cfg.batch as u64; // all use_imm
+    let n_alu = th * tw * tco * n_alu_per;
+    let uop_dma = lat + uop_bytes.div_ceil(w);
+    let compute_cycles = (n_gemm + n_reset) * GEMM_PIPE_FILL
+        + (gemm_ops + reset_ops) * gemm_ii(cfg)
+        + n_alu * ALU_PIPE_FILL
+        + alu_ops * alu_ii(cfg, true)
+        + uop_dma;
+
+    // ---- write channel ----
+    let write_cycles = (dout * oh * ow * out_tile).div_ceil(w) + tw * dout * oh;
+
+    // ---- serialization correction: fill the first input/weight block
+    // before compute starts; drain the last output block after. ----
+    let first_block =
+        (g.inp_block_tiles as u64 * inp_tile + g.wgt_block_tiles as u64 * wgt_tile).div_ceil(w);
+    let last_block = (g.acc_block_tiles as u64 * out_tile).div_ceil(w);
+    let serial_cycles = 2 * lat + first_block + last_block;
+
+    let mut est = LayerEstimate {
+        read_cycles,
+        compute_cycles,
+        write_cycles,
+        serial_cycles,
+        serialized: inp_slots < 2 && wgt_slots < 2,
+    };
+    // Shared bandwidth-vs-compute bound (Fig 2's roofline): neither
+    // stage may be predicted below what the hardware ceilings allow.
+    let roof = Roofline::of(cfg);
+    est.read_cycles = est.read_cycles.max(roof.bound_cycles(0, inp_bytes + wgt_bytes));
+    est.compute_cycles = est.compute_cycles.max(roof.bound_cycles(spec.macs(cfg), 0));
+    est
+}
+
+/// Predicted cycles of a depthwise layer — mirrors
+/// `compiler::depthwise::lower_depthwise` (MOV/MUL/ADD per tap on the
+/// ALU; all DMA runs on the compute module, so it serializes).
+pub fn depthwise_estimate(cfg: &VtaConfig, p: &DepthwiseParams) -> LayerEstimate {
+    let w = cfg.axi_bytes as u64;
+    let lat = cfg.dram_latency;
+    let (oh, ow) = (p.oh() as u64, p.ow() as u64);
+    let iw_c = ((p.ow() - 1) * p.stride + p.k) as u64;
+    let taps = (p.k * p.k) as u64;
+    // Row-chunk sizing, exactly as the lowering chooses it.
+    let mut oh_c = p.oh();
+    loop {
+        let ih_c = (oh_c - 1) * p.stride + p.k;
+        let block = ih_c * iw_c as usize + taps as usize + 2 * oh_c * p.ow();
+        if 2 * block <= cfg.acc_depth || oh_c == 1 {
+            break;
+        }
+        oh_c = oh_c.div_ceil(2);
+    }
+    let n_chunks = p.oh().div_ceil(oh_c) as u64;
+    let ct = p.c_tiles as u64;
+    let iters = ct * n_chunks;
+    let sum_ih = p.stride as u64 * oh.saturating_sub(n_chunks) + n_chunks * p.k as u64;
+    let acc8_tile = cfg.acc_tile_elems() as u64; // Acc8 view: 1 byte/elem
+    let out_tile = cfg.out_tile_bytes() as u64;
+
+    let n_req = requant_insns(p.shift, p.relu);
+    let n_insns = iters * (2 + 1 + 3 * taps + n_req + 1) + 4;
+    let read_bytes = ct * (sum_ih * iw_c + n_chunks * taps) * acc8_tile;
+    let read_rows = ct * (sum_ih + n_chunks);
+    let dma_beats = (read_bytes + n_insns * INSN_BYTES as u64).div_ceil(w) + read_rows;
+
+    let uop_count = (2 * (3 * taps + n_req + 1) * ow).min(cfg.uop_depth as u64);
+    let uop_bytes = uop_count * cfg.isa_layout().uop_bytes() as u64;
+    let elems = ct * oh * ow * cfg.batch as u64;
+    // All layer DMA (input patches + taps) runs on the compute module:
+    // it serializes with the ALU work, so it lands in compute_cycles.
+    let compute_cycles = iters * GEMM_PIPE_FILL
+        + ct * oh * ow * gemm_ii(cfg) // reset
+        + iters * (3 * taps + n_req) * ALU_PIPE_FILL
+        + 3 * taps * elems * alu_ii(cfg, false)
+        + n_req * elems * alu_ii(cfg, true)
+        + dma_beats
+        + 2 * iters * lat // two loads per iteration, each exposing latency
+        + lat
+        + uop_bytes.div_ceil(w);
+
+    LayerEstimate {
+        read_cycles: 0,
+        compute_cycles,
+        write_cycles: (ct * oh * ow * out_tile).div_ceil(w) + ct * oh,
+        serial_cycles: lat,
+        serialized: false,
+    }
+}
+
+/// Predicted cycles of a pooling layer — mirrors
+/// `compiler::eltwise::lower_pool`.
+pub fn pool_estimate(cfg: &VtaConfig, p: &PoolParams) -> LayerEstimate {
+    let w = cfg.axi_bytes as u64;
+    let lat = cfg.dram_latency;
+    let (oh, ow) = (p.oh() as u64, p.ow() as u64);
+    let iw_c = ((p.ow() - 1) * p.stride + p.k) as u64;
+    let taps = (p.k * p.k) as u64;
+    let mut oh_c = p.oh();
+    loop {
+        let ih_c = (oh_c - 1) * p.stride + p.k;
+        let block = ih_c * iw_c as usize + oh_c * p.ow();
+        if 2 * block <= cfg.acc_depth || oh_c == 1 {
+            break;
+        }
+        oh_c = oh_c.div_ceil(2);
+    }
+    let n_chunks = p.oh().div_ceil(oh_c) as u64;
+    let ct = p.c_tiles as u64;
+    let iters = ct * n_chunks;
+    let sum_ih = p.stride as u64 * oh.saturating_sub(n_chunks) + n_chunks * p.k as u64;
+    let acc8_tile = cfg.acc_tile_elems() as u64;
+    let out_tile = cfg.out_tile_bytes() as u64;
+
+    // Average pooling adds a reset pass and the rounding-shift sequence.
+    let n_req = if !p.is_max && p.shift > 0 { 3 } else { 0 };
+    let n_reset = u64::from(!p.is_max);
+    let n_insns = iters * (1 + n_reset + taps + n_req + 1) + 4;
+    let read_bytes = ct * sum_ih * iw_c * acc8_tile;
+    let dma_beats = (read_bytes + n_insns * INSN_BYTES as u64).div_ceil(w) + ct * sum_ih;
+
+    let uop_count = (2 * (taps + n_req + 1) * ow).min(cfg.uop_depth as u64);
+    let uop_bytes = uop_count * cfg.isa_layout().uop_bytes() as u64;
+    let elems = ct * oh * ow * cfg.batch as u64;
+    let compute_cycles = iters * n_reset * GEMM_PIPE_FILL
+        + n_reset * ct * oh * ow * gemm_ii(cfg)
+        + iters * (taps + n_req) * ALU_PIPE_FILL
+        + taps * elems * alu_ii(cfg, false)
+        + n_req * elems * alu_ii(cfg, true)
+        + dma_beats
+        + iters * lat
+        + lat
+        + uop_bytes.div_ceil(w);
+
+    LayerEstimate {
+        read_cycles: 0,
+        compute_cycles,
+        write_cycles: (ct * oh * ow * out_tile).div_ceil(w) + ct * oh,
+        serial_cycles: lat,
+        serialized: false,
+    }
+}
+
+/// Predicted cycles of a residual add over `total_tiles` activation
+/// tiles — mirrors `compiler::eltwise::lower_add`.
+pub fn add_estimate(cfg: &VtaConfig, total_tiles: usize, relu: bool) -> LayerEstimate {
+    let w = cfg.axi_bytes as u64;
+    let lat = cfg.dram_latency;
+    let tiles = total_tiles as u64;
+    let max_loop = (1usize << cfg.isa_layout().loop_bits) - 1;
+    let chunk = (cfg.acc_depth / 4).min(total_tiles).min(max_loop).max(1) as u64;
+    let iters = tiles.div_ceil(chunk);
+    let acc8_tile = cfg.acc_tile_elems() as u64;
+    let out_tile = cfg.out_tile_bytes() as u64;
+
+    let n_alu_per = 2 + u64::from(relu); // ADD, [MAX], CLIP
+    let n_insns = iters * (2 + n_alu_per + 1) + 4;
+    let dma_beats = (2 * tiles * acc8_tile + n_insns * INSN_BYTES as u64).div_ceil(w) + 2 * iters;
+    let elems = tiles * cfg.batch as u64;
+    let compute_cycles = iters * n_alu_per * ALU_PIPE_FILL
+        + elems * alu_ii(cfg, false) // ADD (two-operand)
+        + (n_alu_per - 1) * elems * alu_ii(cfg, true) // MAX/CLIP (immediate)
+        + dma_beats
+        + 2 * iters * lat
+        + lat;
+
+    LayerEstimate {
+        read_cycles: 0,
+        compute_cycles,
+        write_cycles: (tiles * out_tile).div_ceil(w) + iters,
+        serial_cycles: lat,
+        serialized: false,
+    }
+}
+
+/// One layer's prediction inside a [`GraphPrediction`].
+#[derive(Debug, Clone)]
+pub struct LayerPrediction {
+    pub name: String,
+    pub kind: &'static str,
+    pub cycles: u64,
+}
+
+/// Whole-network prediction: the sum of per-layer estimates (layers run
+/// back-to-back as one kernel launch each, so session cycles add).
+#[derive(Debug, Clone)]
+pub struct GraphPrediction {
+    pub cycles: u64,
+    pub layers: Vec<LayerPrediction>,
+}
+
+/// Predict a whole network on a configuration. Mirrors
+/// [`Session::run_graph`](crate::runtime::Session)'s dispatch under the
+/// default session options (TPS tilings, improved double buffering):
+/// channel-light convolutions fall back to the CPU and predict 0 cycles,
+/// exactly as the sweep's evaluation path counts them.
+pub fn predict_graph(cfg: &VtaConfig, graph: &Graph) -> GraphPrediction {
+    predict_graph_cached(cfg, graph, &mut HashMap::new())
+}
+
+/// [`predict_graph`] with an external per-layer cache, keyed by the
+/// layer-memo signature ([`crate::memo::sig`]) — the same identity the
+/// simulator's layer memo uses, so repeated shapes across a grid are
+/// estimated once.
+pub fn predict_graph_cached(
+    cfg: &VtaConfig,
+    graph: &Graph,
+    cache: &mut HashMap<u64, u64>,
+) -> GraphPrediction {
+    let block = cfg.block_in;
+    let shapes = graph.shapes();
+    let mut layers = Vec::with_capacity(graph.nodes.len().saturating_sub(1));
+    let mut total = 0u64;
+    for (i, node) in graph.nodes.iter().enumerate().skip(1) {
+        let in_shape = shapes[node.inputs[0]];
+        let out_shape = shapes[i];
+        let cycles = match &node.op {
+            Op::Input => unreachable!("input nodes are index 0 only"),
+            Op::Conv { shift, relu, .. } => {
+                let spec = graph.conv_spec(i, &shapes);
+                if spec.c_in < block {
+                    0 // CPU fallback: contributes no accelerator cycles
+                } else {
+                    conv_cached(cfg, &spec, *shift, *relu, cache)
+                }
+            }
+            Op::Dense { shift, relu, .. } => {
+                let spec = graph.conv_spec(i, &shapes);
+                conv_cached(cfg, &spec, *shift, *relu, cache)
+            }
+            Op::Depthwise { k, stride, pad, shift, relu, .. } => {
+                let p = DepthwiseParams {
+                    c_tiles: in_shape.c_tiles(block),
+                    h: in_shape.h,
+                    w: in_shape.w,
+                    k: *k,
+                    stride: *stride,
+                    pad: *pad,
+                    shift: *shift,
+                    relu: *relu,
+                };
+                *cache
+                    .entry(sig::depthwise_sig(cfg, &p).0)
+                    .or_insert_with(|| depthwise_estimate(cfg, &p).cycles())
+            }
+            Op::MaxPool { k, stride, pad } => {
+                let p = PoolParams {
+                    c_tiles: in_shape.c_tiles(block),
+                    h: in_shape.h,
+                    w: in_shape.w,
+                    k: *k,
+                    stride: *stride,
+                    pad: *pad,
+                    is_max: true,
+                    shift: 0,
+                };
+                *cache
+                    .entry(sig::pool_sig(cfg, &p).0)
+                    .or_insert_with(|| pool_estimate(cfg, &p).cycles())
+            }
+            Op::GlobalAvgPool => {
+                let p = PoolParams {
+                    c_tiles: in_shape.c_tiles(block),
+                    h: in_shape.h,
+                    w: in_shape.w,
+                    k: in_shape.h,
+                    stride: 1,
+                    pad: 0,
+                    is_max: false,
+                    shift: clog2((in_shape.h * in_shape.w) as u64),
+                };
+                *cache
+                    .entry(sig::pool_sig(cfg, &p).0)
+                    .or_insert_with(|| pool_estimate(cfg, &p).cycles())
+            }
+            Op::Add { relu } => {
+                let tiles = out_shape.tiles(block);
+                *cache
+                    .entry(sig::add_sig(cfg, tiles, *relu).0)
+                    .or_insert_with(|| add_estimate(cfg, tiles, *relu).cycles())
+            }
+        };
+        total += cycles;
+        layers.push(LayerPrediction { name: node.name.clone(), kind: node.op.kind(), cycles });
+    }
+    GraphPrediction { cycles: total, layers }
+}
+
+/// Conv/dense estimate under the runtime's default tiling policy (TPS
+/// search + improved double buffering), cached by layer signature.
+fn conv_cached(
+    cfg: &VtaConfig,
+    spec: &ConvSpec,
+    shift: u32,
+    relu: bool,
+    cache: &mut HashMap<u64, u64>,
+) -> u64 {
+    // Mirror Session::tiling_for under SessionOptions::default():
+    // tps = true, dbuf_reuse = true.
+    let mut t = tps::search(spec, cfg, true);
+    t.reuse_inp = true;
+    *cache
+        .entry(sig::conv_sig(cfg, spec, shift, relu, &t).0)
+        .or_insert_with(|| conv_estimate(cfg, spec, shift, relu, &t).cycles())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::workloads;
+
+    fn c2() -> ConvSpec {
+        tps::resnet18_convs()[0].1
+    }
+
+    #[test]
+    fn conv_estimate_positive_and_roofline_bounded() {
+        let cfg = presets::default_config();
+        let t = tps::search(&c2(), &cfg, true);
+        let est = conv_estimate(&cfg, &c2(), 8, true, &t);
+        let roof = Roofline::of(&cfg);
+        assert!(est.cycles() > 0);
+        assert!(
+            est.compute_cycles >= roof.bound_cycles(c2().macs(&cfg), 0),
+            "compute term must respect the compute ceiling"
+        );
+    }
+
+    #[test]
+    fn estimate_monotone_in_axi_width() {
+        let spec = c2();
+        for axi in [8usize, 16, 32] {
+            let narrow = presets::scaled_config(1, 32, 32, 2, axi);
+            let wide = presets::scaled_config(1, 32, 32, 2, axi * 2);
+            let t = tps::search(&spec, &narrow, true);
+            // Tiling search ignores axi width, so the same tiling applies.
+            assert_eq!(t, tps::search(&spec, &wide, true));
+            assert!(
+                conv_estimate(&wide, &spec, 8, true, &t).cycles()
+                    <= conv_estimate(&narrow, &spec, 8, true, &t).cycles(),
+                "wider memory must never increase the estimate (axi {axi})"
+            );
+        }
+    }
+
+    #[test]
+    fn estimate_monotone_in_pipelining() {
+        let spec = c2();
+        let fast = presets::default_config();
+        let mut slow = fast.clone();
+        slow.gemm_pipelined = false;
+        slow.alu_pipelined = false;
+        let t = tps::search(&spec, &fast, true);
+        assert!(
+            conv_estimate(&fast, &spec, 8, true, &t).cycles()
+                < conv_estimate(&slow, &spec, 8, true, &t).cycles(),
+            "pipelined units must predict strictly fewer cycles on a compute-heavy conv"
+        );
+    }
+
+    #[test]
+    fn predict_graph_sums_layers_and_skips_cpu_fallback() {
+        let cfg = presets::tiny_config();
+        let g = workloads::micro_resnet(4, 42);
+        let p = predict_graph(&cfg, &g);
+        assert_eq!(p.layers.len(), g.nodes.len() - 1);
+        assert_eq!(p.cycles, p.layers.iter().map(|l| l.cycles).sum::<u64>());
+        // conv1 has 3 input channels < BLOCK=4: CPU fallback, 0 cycles.
+        assert_eq!(p.layers[0].name, "conv1");
+        assert_eq!(p.layers[0].cycles, 0);
+        // Everything accelerated predicts nonzero.
+        assert!(p.layers.iter().skip(1).all(|l| l.cycles > 0), "{:?}", p.layers);
+    }
+
+    #[test]
+    fn predict_graph_cached_is_identical_and_hits() {
+        let cfg = presets::tiny_config();
+        let g = workloads::micro_resnet(4, 42);
+        let cold = predict_graph(&cfg, &g);
+        let mut cache = HashMap::new();
+        let first = predict_graph_cached(&cfg, &g, &mut cache);
+        let filled = cache.len();
+        let second = predict_graph_cached(&cfg, &g, &mut cache);
+        assert_eq!(cold.cycles, first.cycles);
+        assert_eq!(first.cycles, second.cycles);
+        assert_eq!(cache.len(), filled, "second pass must be served from the cache");
+        assert!(
+            filled < g.nodes.len() - 1,
+            "CPU-fallback layers must not consume cache entries (and repeated \
+             shapes share one)"
+        );
+    }
+
+    #[test]
+    fn epsilon_derivation() {
+        assert_eq!(epsilon_for_ratio(1.0), 0.0);
+        assert!((epsilon_for_ratio(2.0) - 3.0).abs() < 1e-12);
+        // The default covers ratios up to sqrt(1 + epsilon).
+        let covered = (1.0 + DEFAULT_PRUNE_EPSILON).sqrt();
+        assert!(covered > 1.4, "default must cover at least ±40% error, covers {covered}");
+    }
+}

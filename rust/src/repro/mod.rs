@@ -365,6 +365,59 @@ pub fn fig13_jobs(quick: bool, jobs: usize) -> Vec<Fig13Row> {
     rows
 }
 
+/// Fig 13 on the two-phase engine: phase 1 scores the whole grid with
+/// the analytical cycle model (`crate::model`) and keeps only the
+/// epsilon-band neighborhood of the predicted frontier; phase 2 runs
+/// real tsim (memo + timing-only fast path) on the survivors. Every
+/// returned row is tsim-measured — pruned points are never simulated
+/// and never reported, so the frontier cannot contain model estimates.
+/// Returns survivor rows in grid order with Pareto marks.
+pub fn fig13_two_phase(quick: bool, jobs: usize, epsilon: f64) -> Vec<Fig13Row> {
+    let spec = sweep::GridSpec::fig13(quick).to_sweep_spec();
+    let total = spec.jobs().len();
+    println!("== Design-space sweep (Fig 13, two-phase): ResNet-18 ==");
+    let opts = sweep::SweepOptions {
+        jobs,
+        progress: true,
+        memo: true,
+        timing_only: true,
+        two_phase: Some(sweep::TwoPhaseOptions { epsilon }),
+        ..Default::default()
+    };
+    let outcome = sweep::run(&spec, &opts).expect("in-memory sweep performs no I/O");
+    println!(
+        "phase 1: {} grid points scored, {} pruned, {} evaluated by tsim \
+         ({:.1}x fewer evaluations, epsilon {:.2})",
+        total,
+        outcome.pruned.len(),
+        outcome.results.len(),
+        outcome.prune_factor(),
+        epsilon
+    );
+    println!("{:<22} {:>6} {:>12} {:>12} {:>10}", "config", "block", "cycles", "predicted", "area");
+    let mut rows = Vec::new();
+    for (i, r) in outcome.results.iter().enumerate() {
+        println!(
+            "{:<22} {:>6} {:>12} {:>12} {:>10.2}",
+            r.config.tag(),
+            r.config.block_in,
+            r.cycles,
+            r.predicted_cycles.map(|p| p.to_string()).unwrap_or_else(|| "-".into()),
+            r.scaled_area
+        );
+        rows.push(Fig13Row {
+            config: r.config.tag(),
+            block: r.config.block_in,
+            cycles: r.cycles,
+            scaled_area: r.scaled_area,
+            pareto: outcome.front.contains(i),
+        });
+    }
+    let best = rows.iter().filter(|r| r.pareto).map(|r| r.config.clone()).collect::<Vec<_>>();
+    println!("pareto frontier (100% tsim-measured): {}", best.join(", "));
+    rows
+}
+
 /// Mark points on the (area ↓, cycles ↓) Pareto frontier.
 pub fn mark_pareto(rows: &mut [Fig13Row]) {
     for i in 0..rows.len() {

@@ -49,6 +49,12 @@ impl TokenQueue {
     pub fn tokens(&self) -> usize {
         self.count
     }
+
+    /// Whether a push would currently succeed (used by the simulator's
+    /// event scheduler to avoid busy-polling a blocked producer).
+    pub fn has_space(&self) -> bool {
+        self.count < self.capacity
+    }
 }
 
 /// A bounded command queue between fetch and an execution module.
@@ -99,10 +105,13 @@ mod tests {
     fn token_queue_bounded() {
         let mut q = TokenQueue::new("t", 2);
         assert!(!q.try_pop());
+        assert!(q.has_space());
         assert!(q.try_push());
         assert!(q.try_push());
+        assert!(!q.has_space());
         assert!(!q.try_push(), "capacity reached");
         assert!(q.try_pop());
+        assert!(q.has_space());
         assert_eq!(q.tokens(), 1);
         assert_eq!(q.pushes, 2);
         assert_eq!(q.pops, 1);

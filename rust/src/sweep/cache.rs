@@ -11,11 +11,16 @@
 //! case): such lines are counted in [`ResultCache::skipped`] and their
 //! points simply re-simulate on resume.
 //!
-//! Records and keys are versioned by
-//! [`SIM_SCHEMA_VERSION`](crate::memo::SIM_SCHEMA_VERSION): a cache
-//! written under older simulator semantics is rejected at load (every
-//! line counts as skipped) *and* misses by key, so stale results are
-//! re-simulated rather than silently mixed with new ones.
+//! Records and keys carry two schema versions —
+//! [`SWEEP_SCHEMA_VERSION`](super::SWEEP_SCHEMA_VERSION) (the record
+//! format, e.g. v3's `predicted_cycles` field) and
+//! [`SIM_SCHEMA_VERSION`](crate::memo::SIM_SCHEMA_VERSION) (the
+//! simulator semantics) — so a cache written under either an older
+//! format or older simulation semantics is rejected at load (every line
+//! counts as skipped) *and* misses by key, and stale results are
+//! re-simulated rather than silently mixed with new ones. Every stored
+//! `cycles` value is tsim-measured: the two-phase engine never writes a
+//! model estimate into the cache (pruned points produce no records).
 
 use super::PointResult;
 use crate::util::json::Json;
@@ -118,6 +123,7 @@ mod tests {
             dram_wr: 320,
             insns: 12,
             scaled_area: 0.25,
+            predicted_cycles: Some(900 + seed),
         }
     }
 

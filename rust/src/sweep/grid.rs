@@ -107,6 +107,26 @@ impl GridSpec {
         }
     }
 
+    /// A much denser Fig 13 grid — two-phase-sweep territory: every
+    /// power-of-two MAC shape from 4×4 to 128×128 plus every AXI width
+    /// and scratchpad scale (~2x the paper's 36 valid points; invalid
+    /// corners, e.g. instruction-width overflows at the scale-8
+    /// scratchpad depths, are skipped at job expansion as always). Run
+    /// it with `vta sweep --dense --two-phase`: phase-1 pruning keeps
+    /// the tsim bill near the sparse grid's while the front is resolved
+    /// at the finer granularity.
+    pub fn fig13_dense(quick: bool) -> GridSpec {
+        GridSpec {
+            batch: 1,
+            blocks: vec![4, 8, 16, 32, 64, 128],
+            axi: vec![8, 16, 32, 64],
+            scales: if quick { vec![1, 2, 4] } else { vec![1, 2, 4, 8] },
+            workloads: vec![WorkloadSpec::Resnet { depth: 18, hw: if quick { 56 } else { 224 } }],
+            seeds: vec![7],
+            graph_seed: 1,
+        }
+    }
+
     /// Expand the axes into an explicit configuration list, in the same
     /// nested order (block, then axi, then scale) as the serial Fig 13
     /// loop, so row order is stable across engine versions.
@@ -167,6 +187,27 @@ mod tests {
         assert_eq!(full.axi, vec![8, 16, 32, 64]);
         assert_eq!(full.scales, vec![1, 2, 4]);
         assert_eq!(full.workloads[0].id(), "resnet18@224");
+    }
+
+    #[test]
+    fn dense_grid_strictly_contains_fig13_axes() {
+        let sparse = GridSpec::fig13(false);
+        let dense = GridSpec::fig13_dense(false);
+        for b in &sparse.blocks {
+            assert!(dense.blocks.contains(b));
+        }
+        for a in &sparse.axi {
+            assert!(dense.axi.contains(a));
+        }
+        for s in &sparse.scales {
+            assert!(dense.scales.contains(s));
+        }
+        let n_sparse = sparse.to_sweep_spec().jobs().len();
+        let n_dense = dense.to_sweep_spec().jobs().len();
+        assert!(
+            n_dense >= 2 * n_sparse,
+            "dense grid must be much bigger: {n_dense} vs {n_sparse}"
+        );
     }
 
     #[test]

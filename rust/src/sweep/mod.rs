@@ -29,6 +29,29 @@
 //! regardless of `--jobs`, of cache warmth, and of the memo/timing-only
 //! fast paths (memo records are deterministic, so whichever worker
 //! simulates a layer first records the same values).
+//!
+//! # Two-phase sweep (predict, then verify)
+//!
+//! With [`SweepOptions::two_phase`] set, the engine runs phase 1 first:
+//! the whole grid is scored by the analytical cycle model
+//! ([`crate::model`], microseconds per point), and only the points
+//! inside an epsilon-dominance band of the *predicted* Pareto front
+//! ([`pareto::epsilon_band_survivors`]) proceed to phase 2 — real tsim,
+//! with the memo and timing-only fast paths as usual. Properties:
+//!
+//! * the reported front contains **exclusively tsim-measured cycles** —
+//!   pruned points are never measured, so pruning can drop a front
+//!   point (if ε is below the model's error band) but can never
+//!   *fabricate* one;
+//! * survivors are a pure function of `(grid, model, ε)` — cached
+//!   results of pruned points are deliberately ignored, so the outcome
+//!   is independent of cache warmth, exactly as in single-phase mode;
+//! * `results`/`front` use dense survivor indices;
+//!   [`SweepOutcome::job_indices`] maps them back to grid order.
+//!
+//! See DESIGN.md §Two-phase sweep for the model equations and the
+//! epsilon soundness argument, and `--no-prune` for when the full
+//! measured grid is required (model calibration, full-cloud plots).
 
 pub mod cache;
 pub mod grid;
@@ -43,31 +66,47 @@ use crate::analysis::area;
 use crate::compiler::graph::Graph;
 use crate::config::VtaConfig;
 use crate::memo::{LayerMemo, SIM_SCHEMA_VERSION};
+use crate::model;
 use crate::runtime::{Session, SessionOptions};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Pcg32;
 use queue::JobQueue;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::sync::Arc;
 
-/// Stable 64-bit cache-key hash (FNV-1a via `util::hash`): stable
-/// across processes, which `std::hash` explicitly is not.
+/// Version of the sweep result-record format. Bumped independently of
+/// [`SIM_SCHEMA_VERSION`] (which tracks *simulation semantics* and also
+/// feeds the layer memo): v3 added the `predicted_cycles` field and the
+/// two-phase engine. Both versions are baked into every cache key and
+/// record, so a cache written by either an older record format or older
+/// simulator semantics misses cleanly.
+///
+/// v1 = PR-1 records (implicit, unversioned); v2 = PR-2 versioned
+/// records; v3 = this scheme.
+pub const SWEEP_SCHEMA_VERSION: u32 = 3;
+
+/// Stable 64-bit cache-key hash. One canonical implementation lives in
+/// [`crate::util::hash`] (FNV-1a — stable across processes, which
+/// `std::hash` explicitly is not); this is that function, re-exported
+/// under the sweep's historical name. The exact key of a known point is
+/// pinned by a golden-value test in `rust/tests/sweep_engine.rs`.
 pub fn stable_hash64(s: &str) -> u64 {
     crate::util::hash::fnv1a64(s)
 }
 
 /// Canonical identity string of a design point; its hash is the cache
 /// key. The config's JSON form is deterministic (sorted keys). The
-/// simulator schema version leads the string, so caches written under
-/// older simulation semantics miss cleanly instead of being silently
-/// mixed with new results (their records are additionally rejected at
-/// load — see [`PointResult::from_json`]).
+/// sweep record schema and simulator schema versions lead the string,
+/// so caches written under older record formats or simulation semantics
+/// miss cleanly instead of being silently mixed with new results (their
+/// records are additionally rejected at load — see
+/// [`PointResult::from_json`]).
 fn key_string(cfg: &VtaConfig, workload: &str, seed: u64, graph_seed: u64) -> String {
     format!(
-        "v{SIM_SCHEMA_VERSION}|{}|{}|{}|{}",
+        "v{SWEEP_SCHEMA_VERSION}|s{SIM_SCHEMA_VERSION}|{}|{}|{}|{}",
         cfg.to_json().to_string_compact(),
         workload,
         seed,
@@ -137,12 +176,20 @@ pub struct PointResult {
     pub workload: String,
     pub seed: u64,
     pub graph_seed: u64,
+    /// tsim-measured cycles — **never** a model estimate (the two-phase
+    /// engine's invariant: every stored/reported result is measured).
     pub cycles: u64,
     pub macs: u64,
     pub dram_rd: u64,
     pub dram_wr: u64,
     pub insns: u64,
     pub scaled_area: f64,
+    /// Phase-1 analytical prediction for this point, when the two-phase
+    /// engine scored it (`None` on single-phase runs and on records
+    /// loaded from caches that predate the prediction). Kept alongside
+    /// the measured value so sweep artifacts double as model-calibration
+    /// data (predicted vs measured per point).
+    pub predicted_cycles: Option<u64>,
 }
 
 impl PointResult {
@@ -151,8 +198,8 @@ impl PointResult {
     }
 
     pub fn to_json(&self) -> Json {
-        obj([
-            ("schema", Json::Int(SIM_SCHEMA_VERSION as i64)),
+        let mut j = obj([
+            ("schema", Json::Int(SWEEP_SCHEMA_VERSION as i64)),
             ("config", self.config.to_json()),
             ("workload", Json::Str(self.workload.clone())),
             ("seed", Json::Int(self.seed as i64)),
@@ -163,14 +210,19 @@ impl PointResult {
             ("dram_wr", Json::Int(self.dram_wr as i64)),
             ("insns", Json::Int(self.insns as i64)),
             ("area", Json::Float(self.scaled_area)),
-        ])
+        ]);
+        if let (Some(p), Json::Object(map)) = (self.predicted_cycles, &mut j) {
+            map.insert("predicted_cycles".to_string(), Json::Int(p as i64));
+        }
+        j
     }
 
     /// Parse one cache line; `None` on any malformed field *or* a
-    /// schema version other than [`SIM_SCHEMA_VERSION`] (records from
-    /// an older simulator semantics are rejected, not mixed in).
+    /// schema version other than [`SWEEP_SCHEMA_VERSION`] (records from
+    /// an older record format or simulator semantics are rejected, not
+    /// mixed in). `predicted_cycles` is optional.
     pub fn from_json(j: &Json) -> Option<PointResult> {
-        if j.get("schema")?.as_i64()? != SIM_SCHEMA_VERSION as i64 {
+        if j.get("schema")?.as_i64()? != SWEEP_SCHEMA_VERSION as i64 {
             return None;
         }
         let int = |name: &str| j.get(name).and_then(|v| v.as_i64()).map(|v| v as u64);
@@ -185,6 +237,7 @@ impl PointResult {
             dram_wr: int("dram_wr")?,
             insns: int("insns")?,
             scaled_area: j.get("area")?.as_f64()?,
+            predicted_cycles: int("predicted_cycles"),
         })
     }
 }
@@ -246,6 +299,25 @@ pub fn evaluate_with_graph_opts(
         dram_wr: counters.store_bytes,
         insns: counters.insn_count,
         scaled_area: area::scaled_area(&job.cfg),
+        predicted_cycles: None,
+    }
+}
+
+/// Phase-1 pruning options for the two-phase engine.
+#[derive(Debug, Clone)]
+pub struct TwoPhaseOptions {
+    /// Epsilon-dominance band width over the *predicted* frontier: a
+    /// point survives phase 1 iff its predicted cycles are within
+    /// `(1 + epsilon)` of the best prediction at no-larger area. Sound
+    /// (front-preserving) whenever `epsilon ≥ ρ² − 1` for the model's
+    /// multiplicative error ratio ρ — see
+    /// [`model::DEFAULT_PRUNE_EPSILON`] and DESIGN.md §Two-phase sweep.
+    pub epsilon: f64,
+}
+
+impl Default for TwoPhaseOptions {
+    fn default() -> Self {
+        TwoPhaseOptions { epsilon: model::DEFAULT_PRUNE_EPSILON }
     }
 }
 
@@ -268,15 +340,40 @@ pub struct SweepOptions {
     /// Timing-only simulation: skip functional datapath effects (the
     /// sweep only consumes cycles/counters, which are bit-identical).
     pub timing_only: bool,
+    /// Two-phase mode: score the grid with the analytical model and run
+    /// tsim only on the epsilon-band survivors (see the module docs).
+    /// `None` = single-phase: every grid point is measured.
+    pub two_phase: Option<TwoPhaseOptions>,
+}
+
+/// A grid point eliminated by phase-1 pruning: never simulated, known
+/// only by its model prediction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrunedPoint {
+    /// Grid job index (`SweepSpec::jobs()` order).
+    pub index: usize,
+    /// Phase-1 analytical cycle prediction.
+    pub predicted_cycles: u64,
+    /// Exact scaled area (same model as measured points).
+    pub scaled_area: f64,
 }
 
 /// Everything a sweep produced.
 #[derive(Debug)]
 pub struct SweepOutcome {
-    /// One result per job, in job (grid) order.
+    /// One result per *evaluated* job, in job (grid) order. Single-phase
+    /// sweeps evaluate every job, so index == grid job index; two-phase
+    /// sweeps hold only the phase-1 survivors — map positions back with
+    /// [`SweepOutcome::job_indices`].
     pub results: Vec<PointResult>,
-    /// Pareto frontier over (scaled area, cycles); ids are job indices.
+    /// Grid job index of each `results` entry (identity when no pruning).
+    pub job_indices: Vec<usize>,
+    /// Pareto frontier over (scaled area, tsim-measured cycles); ids
+    /// index into `results`. Built exclusively from measured points, so
+    /// pruning can never place a model estimate on the front.
     pub front: ParetoFront,
+    /// Points eliminated by phase-1 pruning (empty when single-phase).
+    pub pruned: Vec<PrunedPoint>,
     /// Points served from the cache without simulating.
     pub cached: usize,
     /// Points actually simulated in this run.
@@ -285,6 +382,15 @@ pub struct SweepOutcome {
     pub memo_hits: u64,
     /// Layer-memo misses, i.e. layers actually simulated.
     pub memo_misses: u64,
+}
+
+impl SweepOutcome {
+    /// tsim evaluations avoided by pruning, as a ratio: grid points per
+    /// evaluated point (1.0 when nothing was pruned).
+    pub fn prune_factor(&self) -> f64 {
+        let total = self.results.len() + self.pruned.len();
+        total as f64 / self.results.len().max(1) as f64
+    }
 }
 
 /// Spill-file path for the layer memo: `sweep_cache.jsonl` →
@@ -297,27 +403,109 @@ fn memo_spill_path(cache: &Path) -> PathBuf {
     cache.with_file_name(format!("{stem}.layers.jsonl"))
 }
 
-/// Run a sweep: shard pending points across workers, stream results to
-/// the cache, and extract the Pareto frontier incrementally.
+/// Build (once) the graph of every distinct workload the given jobs
+/// reference — shared read-only by phase 1 and the phase-2 workers.
+fn ensure_graphs<'a>(
+    graphs: &mut BTreeMap<String, Graph>,
+    jobs: impl Iterator<Item = &'a SweepJob>,
+    graph_seed: u64,
+) {
+    for job in jobs {
+        graphs.entry(job.workload.id()).or_insert_with(|| job.workload.build(graph_seed));
+    }
+}
+
+/// Phase 1 of the two-phase engine: score every job with the analytical
+/// model and keep the epsilon-band survivors of the predicted frontier.
+/// Returns `(survivor job indices in grid order, pruned points,
+/// per-job predictions)`. Deterministic and cache-independent: the
+/// survivor set is a pure function of `(jobs, model, epsilon)`.
+fn phase1_prune(
+    jobs: &[SweepJob],
+    graphs: &BTreeMap<String, Graph>,
+    tp: &TwoPhaseOptions,
+) -> (Vec<usize>, Vec<PrunedPoint>, Vec<u64>) {
+    // Layer-level model memo (keyed by the layer-memo signature): the
+    // grid repeats layer shapes massively, so each unique (config,
+    // layer) is estimated once.
+    let mut layer_cache: HashMap<u64, u64> = HashMap::new();
+    let predictions: Vec<u64> = jobs
+        .iter()
+        .map(|job| {
+            model::predict_graph_cached(&job.cfg, &graphs[&job.workload.id()], &mut layer_cache)
+                .cycles
+        })
+        .collect();
+    // Area is exact (the identical `analysis::area` model both phases
+    // use); only the cycle axis carries model error, so the band
+    // applies to cycles alone.
+    let points: Vec<(f64, u64)> = jobs
+        .iter()
+        .zip(&predictions)
+        .map(|(job, &p)| (area::scaled_area(&job.cfg), p))
+        .collect();
+    let survive = pareto::epsilon_band_survivors(&points, tp.epsilon);
+    let mut eval = Vec::new();
+    let mut pruned = Vec::new();
+    for (j, &s) in survive.iter().enumerate() {
+        if s {
+            eval.push(j);
+        } else {
+            pruned.push(PrunedPoint {
+                index: j,
+                predicted_cycles: predictions[j],
+                scaled_area: points[j].0,
+            });
+        }
+    }
+    (eval, pruned, predictions)
+}
+
+/// Run a sweep: optionally prune the grid against the analytical model
+/// (phase 1), then shard the surviving points across workers, stream
+/// results to the cache, and extract the Pareto frontier incrementally
+/// from tsim-measured numbers only (phase 2).
 pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> io::Result<SweepOutcome> {
     let jobs = spec.jobs();
+    // One graph per distinct workload (weights depend only on the
+    // workload and the spec-wide graph_seed — see `evaluate_with_graph`).
+    // Built lazily: single-phase warm-cache runs never need a graph.
+    let mut graphs: BTreeMap<String, Graph> = BTreeMap::new();
+
+    let (eval_jobs, pruned, predictions): (Vec<usize>, Vec<PrunedPoint>, Vec<Option<u64>>) =
+        match &opts.two_phase {
+            Some(tp) => {
+                ensure_graphs(&mut graphs, jobs.iter(), spec.graph_seed);
+                let (eval, pruned, predictions) = phase1_prune(&jobs, &graphs, tp);
+                (eval, pruned, predictions.into_iter().map(Some).collect())
+            }
+            None => ((0..jobs.len()).collect(), Vec::new(), vec![None; jobs.len()]),
+        };
+
     let mut cache = match &opts.cache_path {
         Some(path) => ResultCache::open(path, opts.resume)?,
         None => ResultCache::in_memory(),
     };
 
-    let mut results: Vec<Option<PointResult>> = vec![None; jobs.len()];
+    let mut results: Vec<Option<PointResult>> = vec![None; eval_jobs.len()];
     let mut front = ParetoFront::new();
-    let mut pending = Vec::new();
+    let mut pending = Vec::new(); // dense indices into eval_jobs/results
     let mut cached = 0;
-    for job in &jobs {
-        match cache.get(job.cache_key()) {
+    for (d, &j) in eval_jobs.iter().enumerate() {
+        match cache.get(jobs[j].cache_key()) {
             Some(hit) => {
-                front.insert(hit.scaled_area, hit.cycles, job.index);
-                results[job.index] = Some(hit.clone());
+                let mut hit = hit.clone();
+                // Records from single-phase (or pre-v3-annotation) runs
+                // carry no prediction; splice the phase-1 value in so
+                // warm two-phase runs still report predicted-vs-measured.
+                if hit.predicted_cycles.is_none() {
+                    hit.predicted_cycles = predictions[j];
+                }
+                front.insert(hit.scaled_area, hit.cycles, d);
+                results[d] = Some(hit);
                 cached += 1;
             }
-            None => pending.push(job.index),
+            None => pending.push(d),
         }
     }
     let simulated = pending.len();
@@ -335,33 +523,29 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> io::Result<SweepOutcome> {
 
     if !pending.is_empty() {
         let workers = effective_jobs(opts.jobs).min(pending.len());
+        ensure_graphs(
+            &mut graphs,
+            pending.iter().map(|&d| &jobs[eval_jobs[d]]),
+            spec.graph_seed,
+        );
         let job_queue = JobQueue::new(workers, &pending);
-        // One graph per distinct workload, shared read-only by all
-        // workers (weights depend only on the workload and the spec-wide
-        // graph_seed — see `evaluate_with_graph`).
-        let mut graphs: BTreeMap<String, Graph> = BTreeMap::new();
-        for &j in &pending {
-            let workload = &jobs[j].workload;
-            graphs
-                .entry(workload.id())
-                .or_insert_with(|| workload.build(spec.graph_seed));
-        }
         let (tx, rx) = mpsc::channel::<(usize, PointResult)>();
-        let total = jobs.len();
+        let total = eval_jobs.len();
         std::thread::scope(|scope| -> io::Result<()> {
             let mut handles = Vec::with_capacity(workers);
             for w in 0..workers {
                 let tx = tx.clone();
                 let job_queue = &job_queue;
                 let jobs = &jobs;
+                let eval_jobs = &eval_jobs;
                 let graphs = &graphs;
                 let eval = EvalOptions { timing_only: opts.timing_only, memo: memo.clone() };
                 handles.push(scope.spawn(move || {
-                    while let Some(j) = job_queue.pop(w) {
-                        let job = &jobs[j];
+                    while let Some(d) = job_queue.pop(w) {
+                        let job = &jobs[eval_jobs[d]];
                         let result =
                             evaluate_with_graph_opts(job, &graphs[&job.workload.id()], &eval);
-                        if tx.send((j, result)).is_err() {
+                        if tx.send((d, result)).is_err() {
                             break; // collector gone (I/O error); stop early
                         }
                     }
@@ -369,9 +553,12 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> io::Result<SweepOutcome> {
             }
             drop(tx);
             let mut done = cached;
-            for (j, result) in rx {
+            for (d, mut result) in rx {
+                // Record the phase-1 prediction next to the measured
+                // value (calibration data; never replaces `cycles`).
+                result.predicted_cycles = predictions[eval_jobs[d]];
                 cache.insert(&result)?;
-                let on_front = front.insert(result.scaled_area, result.cycles, j);
+                let on_front = front.insert(result.scaled_area, result.cycles, d);
                 done += 1;
                 if opts.progress {
                     println!(
@@ -384,19 +571,28 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> io::Result<SweepOutcome> {
                         if on_front { "  *pareto" } else { "" }
                     );
                 }
-                results[j] = Some(result);
+                results[d] = Some(result);
             }
             Ok(())
         })?;
     }
 
-    let results = results
+    let results: Vec<PointResult> = results
         .into_iter()
-        .map(|r| r.expect("every job either cached or simulated"))
+        .map(|r| r.expect("every evaluated job either cached or simulated"))
         .collect();
     let (memo_hits, memo_misses) =
         memo.as_ref().map(|m| (m.hits(), m.misses())).unwrap_or((0, 0));
-    Ok(SweepOutcome { results, front, cached, simulated, memo_hits, memo_misses })
+    Ok(SweepOutcome {
+        results,
+        job_indices: eval_jobs,
+        front,
+        pruned,
+        cached,
+        simulated,
+        memo_hits,
+        memo_misses,
+    })
 }
 
 /// Resolve `jobs = 0` to the core count.
@@ -454,27 +650,31 @@ mod tests {
             dram_wr: 4,
             insns: 5,
             scaled_area: 0.5,
+            predicted_cycles: None,
         };
         assert_eq!(job.cache_key(), result.cache_key());
     }
 
     #[test]
     fn point_result_json_roundtrip() {
-        let r = PointResult {
-            config: presets::scaled_config(1, 32, 32, 2, 16),
-            workload: "resnet18@56".to_string(),
-            seed: 7,
-            graph_seed: 1,
-            cycles: 123_456_789,
-            macs: 987_654_321,
-            dram_rd: 11,
-            dram_wr: 22,
-            insns: 33,
-            scaled_area: 3.141592653589793,
-        };
-        let text = r.to_json().to_string_compact();
-        let back = PointResult::from_json(&Json::parse(&text).unwrap()).unwrap();
-        assert_eq!(back, r, "JSONL record must round-trip exactly");
+        for predicted in [None, Some(120_000_000u64)] {
+            let r = PointResult {
+                config: presets::scaled_config(1, 32, 32, 2, 16),
+                workload: "resnet18@56".to_string(),
+                seed: 7,
+                graph_seed: 1,
+                cycles: 123_456_789,
+                macs: 987_654_321,
+                dram_rd: 11,
+                dram_wr: 22,
+                insns: 33,
+                scaled_area: 3.141592653589793,
+                predicted_cycles: predicted,
+            };
+            let text = r.to_json().to_string_compact();
+            let back = PointResult::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, r, "JSONL record must round-trip exactly");
+        }
     }
 
     #[test]
@@ -490,10 +690,12 @@ mod tests {
             dram_wr: 4,
             insns: 5,
             scaled_area: 0.5,
+            predicted_cycles: None,
         };
         let mut j = r.to_json();
+        // A PR-2-era record carries the previous sweep schema version.
         if let Json::Object(map) = &mut j {
-            map.insert("schema".into(), Json::Int(SIM_SCHEMA_VERSION as i64 - 1));
+            map.insert("schema".into(), Json::Int(SWEEP_SCHEMA_VERSION as i64 - 1));
         }
         assert!(PointResult::from_json(&j).is_none(), "older schema must be rejected");
         // A PR-1-era record carries no schema field at all.
@@ -501,6 +703,50 @@ mod tests {
             map.remove("schema");
         }
         assert!(PointResult::from_json(&j).is_none(), "unversioned record must be rejected");
+    }
+
+    #[test]
+    fn prune_factor_reports_grid_over_evaluated() {
+        let outcome = SweepOutcome {
+            results: vec![],
+            job_indices: vec![],
+            front: ParetoFront::new(),
+            pruned: vec![],
+            cached: 0,
+            simulated: 0,
+            memo_hits: 0,
+            memo_misses: 0,
+        };
+        assert_eq!(outcome.prune_factor(), 0.0);
+        let r = PointResult {
+            config: presets::tiny_config(),
+            workload: "micro@4".into(),
+            seed: 7,
+            graph_seed: 42,
+            cycles: 10,
+            macs: 1,
+            dram_rd: 1,
+            dram_wr: 1,
+            insns: 1,
+            scaled_area: 1.0,
+            predicted_cycles: Some(12),
+        };
+        let outcome = SweepOutcome {
+            results: vec![r],
+            job_indices: vec![0],
+            front: ParetoFront::new(),
+            pruned: vec![
+                PrunedPoint { index: 1, predicted_cycles: 99, scaled_area: 2.0 },
+                PrunedPoint { index: 2, predicted_cycles: 98, scaled_area: 2.0 },
+                PrunedPoint { index: 3, predicted_cycles: 97, scaled_area: 2.0 },
+                PrunedPoint { index: 4, predicted_cycles: 96, scaled_area: 2.0 },
+            ],
+            cached: 0,
+            simulated: 1,
+            memo_hits: 0,
+            memo_misses: 0,
+        };
+        assert_eq!(outcome.prune_factor(), 5.0);
     }
 
     #[test]

@@ -80,6 +80,46 @@ impl ParetoFront {
     }
 }
 
+/// Epsilon-band survivor selection over `(area, predicted cycles)` —
+/// the phase-1 pruning rule of the two-phase sweep.
+///
+/// Point `p` **survives** iff `p.cycles ≤ (1 + ε) · best`, where `best`
+/// is the minimum predicted cycles over all points with area ≤ `p`'s
+/// (area is exact — both phases compute it with the same
+/// `analysis::area` model — so the band applies only to the predicted
+/// axis). With ε = 0 this keeps exactly the points not strictly
+/// dominated on the cycles axis; growing ε keeps a widening band above
+/// the predicted frontier. Soundness: if every prediction is within a
+/// multiplicative factor ρ of the measured value, `ε ≥ ρ² − 1`
+/// guarantees no measured-front point is pruned (DESIGN.md §Two-phase
+/// sweep). Survivors are always a superset of the predicted frontier,
+/// and monotone in ε (property-tested).
+pub fn epsilon_band_survivors(points: &[(f64, u64)], epsilon: f64) -> Vec<bool> {
+    assert!(epsilon >= 0.0 && epsilon.is_finite(), "epsilon must be a finite non-negative band");
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&a, &b| points[a].0.total_cmp(&points[b].0));
+    let mut survive = vec![false; points.len()];
+    let mut best = u64::MAX;
+    let mut i = 0;
+    while i < idx.len() {
+        // Points of equal area form one group: each may prune the
+        // others (`q.area <= p.area` includes ties), so fold the whole
+        // group into `best` before judging any of its members.
+        let mut j = i;
+        while j < idx.len() && points[idx[j]].0 == points[idx[i]].0 {
+            j += 1;
+        }
+        for &k in &idx[i..j] {
+            best = best.min(points[k].1);
+        }
+        for &k in &idx[i..j] {
+            survive[k] = (points[k].1 as f64) <= (1.0 + epsilon) * best as f64;
+        }
+        i = j;
+    }
+    survive
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,6 +160,44 @@ mod tests {
         assert!(!f.insert(1.0, 110, 1)); // same area, more cycles
         assert!(f.insert(1.0, 90, 2)); // same area, fewer cycles: evicts 0
         assert_eq!(f.ids(), vec![2]);
+    }
+
+    #[test]
+    fn epsilon_band_keeps_front_and_band() {
+        // (area, cycles): id1 and id3 are the frontier; id0 is within a
+        // 50% band of id1; id2 is far off.
+        let pts = vec![(1.0, 140u64), (1.0, 100), (2.0, 300), (2.0, 50)];
+        let s0 = epsilon_band_survivors(&pts, 0.0);
+        assert_eq!(s0, vec![false, true, false, true]);
+        let s50 = epsilon_band_survivors(&pts, 0.5);
+        assert_eq!(s50, vec![true, true, false, true]);
+        // Ties on both axes always co-survive.
+        let ties = vec![(1.0, 100u64), (1.0, 100)];
+        assert_eq!(epsilon_band_survivors(&ties, 0.0), vec![true, true]);
+    }
+
+    #[test]
+    fn epsilon_band_survivors_superset_of_front_and_monotone() {
+        // Deterministic pseudo-random cloud (no RNG in unit tests).
+        let pts: Vec<(f64, u64)> = (0..60u64)
+            .map(|i| (((i * 37) % 11) as f64, (i * 53) % 17))
+            .collect();
+        let mut front = ParetoFront::new();
+        for (i, &(a, c)) in pts.iter().enumerate() {
+            front.insert(a, c, i);
+        }
+        let tight = epsilon_band_survivors(&pts, 0.0);
+        let wide = epsilon_band_survivors(&pts, 1.0);
+        for id in front.ids() {
+            assert!(tight[id], "frontier point {id} must survive at epsilon 0");
+        }
+        for i in 0..pts.len() {
+            assert!(!tight[i] || wide[i], "survivors must be monotone in epsilon");
+        }
+        assert!(
+            epsilon_band_survivors(&pts, 1e18).iter().all(|&s| s),
+            "a huge band keeps everything"
+        );
     }
 
     #[test]

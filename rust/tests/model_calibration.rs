@@ -1,0 +1,118 @@
+//! Calibration and property tests for the analytical cycle model
+//! (`vta::model`) — the phase-1 scorer of the two-phase sweep.
+//!
+//! Two kinds of guarantees:
+//!
+//! * **calibration** — per-layer and whole-network estimates track
+//!   timing-only tsim within [`model::CALIBRATION_SANITY_RATIO`] across
+//!   the preset configurations × workload layers (the hard CI bound; the
+//!   *measured* band, printed by these tests and recorded in
+//!   EXPERIMENTS.md, is what the pruning epsilon is derived from — and
+//!   the sweep acceptance test in `sweep_engine.rs` self-calibrates, so
+//!   front correctness never rests on this bound);
+//! * **monotonicity** — widening the memory interface or enabling
+//!   execution-unit pipelining never increases an estimate, the
+//!   properties the epsilon-band pruner's geometry relies on.
+
+use vta::config::presets;
+use vta::config::VtaConfig;
+use vta::model::{self, calib};
+use vta::workloads;
+
+/// The calibration matrix: every preset geometry × a workload whose
+/// channel blocks match it (micro nets exercise conv, depthwise, pool,
+/// residual add, dense and the CPU-fallback path).
+fn calibration_matrix() -> Vec<(VtaConfig, vta::compiler::graph::Graph)> {
+    vec![
+        (presets::tiny_config(), workloads::micro_resnet(4, 42)),
+        (presets::tiny_config(), workloads::micro_mobilenet(4, 42)),
+        (presets::default_config(), workloads::micro_resnet(16, 42)),
+        (presets::scaled_config(1, 32, 32, 2, 32), workloads::micro_resnet(32, 42)),
+    ]
+}
+
+#[test]
+fn per_layer_estimates_within_documented_band() {
+    let matrix = calibration_matrix();
+    let all = calib::merge(matrix.iter().map(|(cfg, g)| calib::calibrate_graph(cfg, g, 7)));
+    assert!(!all.points.is_empty());
+    // Print the measured band — EXPERIMENTS.md records it per PR, and
+    // CI logs make it greppable.
+    print!("{}", all.render_table());
+    for p in &all.points {
+        assert!(
+            p.ratio() <= model::CALIBRATION_SANITY_RATIO,
+            "{}: predicted {} vs measured {} (ratio {:.2}) exceeds the documented \
+             sanity band {}",
+            p.label,
+            p.predicted,
+            p.measured,
+            p.ratio(),
+            model::CALIBRATION_SANITY_RATIO
+        );
+    }
+    // The whole-network ratio feeds the suggested pruning epsilon.
+    assert!(all.suggested_epsilon().is_finite());
+}
+
+#[test]
+fn network_estimate_monotone_in_memory_width() {
+    let g = workloads::micro_resnet(4, 42);
+    let mut prev = u64::MAX;
+    for axi in [8usize, 16, 32, 64] {
+        let mut cfg = presets::tiny_config();
+        cfg.axi_bytes = axi;
+        let pred = model::predict_graph(&cfg, &g).cycles;
+        assert!(
+            pred <= prev,
+            "widening memory width must never increase the estimate: \
+             axi {axi} predicts {pred} > {prev}"
+        );
+        prev = pred;
+    }
+}
+
+#[test]
+fn network_estimate_monotone_in_pipelining() {
+    for (cfg, g) in calibration_matrix() {
+        let mut unpiped = cfg.clone();
+        unpiped.gemm_pipelined = false;
+        unpiped.alu_pipelined = false;
+        let fast = model::predict_graph(&cfg, &g).cycles;
+        let slow = model::predict_graph(&unpiped, &g).cycles;
+        assert!(
+            fast <= slow,
+            "{} on {}: enabling pipelining must never increase the estimate \
+             ({fast} vs {slow})",
+            g.name,
+            cfg.name
+        );
+    }
+}
+
+#[test]
+fn resnet18_prediction_is_fast_and_scales_sanely() {
+    // The phase-1 scorer must price a full ResNet-18 grid point without
+    // simulating: just assert it runs and orders MAC shapes correctly
+    // (more MACs at the same bandwidth → fewer predicted cycles).
+    let g = workloads::resnet(18, 56, 1);
+    let small = model::predict_graph(&presets::scaled_config(1, 16, 16, 2, 32), &g).cycles;
+    let large = model::predict_graph(&presets::scaled_config(1, 64, 64, 2, 32), &g).cycles;
+    assert!(small > 0 && large > 0);
+    assert!(
+        large < small,
+        "a 16x larger MAC array at equal bandwidth must predict fewer cycles \
+         ({large} vs {small})"
+    );
+}
+
+#[test]
+fn calibration_report_suggests_sound_epsilon() {
+    let (cfg, g) = &calibration_matrix()[0];
+    let report = calib::calibrate_graph(cfg, g, 7);
+    let rho = report.max_ratio();
+    // ε = ρ² − 1 must cover the measured band by construction.
+    let eps = report.suggested_epsilon();
+    assert!((1.0 + eps).sqrt() >= rho - 1e-9);
+    assert!(report.geomean_ratio() <= rho + 1e-9);
+}

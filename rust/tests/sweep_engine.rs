@@ -5,9 +5,10 @@
 //! invariants as properties over random point clouds (`util/prop`).
 
 use vta::config::presets;
+use vta::model;
 use vta::repro::{mark_pareto, Fig13Row};
-use vta::sweep::pareto::{dominates, ParetoFront, ParetoPoint};
-use vta::sweep::{self, SweepOptions, SweepSpec, WorkloadSpec};
+use vta::sweep::pareto::{dominates, epsilon_band_survivors, ParetoFront, ParetoPoint};
+use vta::sweep::{self, SweepJob, SweepOptions, SweepSpec, TwoPhaseOptions, WorkloadSpec};
 use vta::util::prop::Prop;
 use vta::{prop_assert, prop_assert_eq};
 
@@ -91,6 +92,7 @@ fn memo_spill_warm_restart_simulates_no_layers() {
         progress: false,
         memo: true,
         timing_only: true,
+        two_phase: None,
     };
     let first = sweep::run(&spec, &opts).unwrap();
     assert!(spill.exists(), "memo must spill next to the result cache");
@@ -193,6 +195,178 @@ fn without_resume_cache_is_cold() {
     assert_eq!(again.cached, 0);
     assert_eq!(again.simulated, again.results.len());
     std::fs::remove_file(&path).ok();
+}
+
+// ------------------------------------------------------------- two-phase
+
+/// Satellite (hash consolidation): the exact cache key of a known
+/// (config, workload, seed, graph_seed) point, pinned as a golden
+/// value. `sweep::stable_hash64` is the canonical `util::hash::fnv1a64`
+/// — if this value ever moves, every on-disk sweep cache silently goes
+/// cold; change the key format only with a deliberate
+/// `SWEEP_SCHEMA_VERSION` bump and update this constant (computed
+/// independently with a reference FNV-1a implementation).
+#[test]
+fn cache_key_golden_value() {
+    let job = SweepJob {
+        index: 0,
+        cfg: presets::tiny_config(),
+        workload: WorkloadSpec::Micro { block: 4 },
+        seed: 7,
+        graph_seed: 42,
+    };
+    assert_eq!(
+        job.cache_key(),
+        0xd74cf88e988680a1,
+        "v3 cache key of (tiny, micro@4, seed 7, graph_seed 42)"
+    );
+    // And the hash itself matches the published FNV-1a vectors through
+    // the sweep-facing name.
+    assert_eq!(sweep::stable_hash64(""), 0xcbf29ce484222325);
+    assert_eq!(sweep::stable_hash64("foobar"), 0x85944171f73967e8);
+}
+
+fn two_phase_opts(jobs: usize, epsilon: f64) -> SweepOptions {
+    SweepOptions {
+        jobs,
+        memo: true,
+        timing_only: true,
+        two_phase: Some(TwoPhaseOptions { epsilon }),
+        ..Default::default()
+    }
+}
+
+/// ISSUE-3 acceptance invariant on the reduced grid: with a pruning
+/// band covering the model's error — self-calibrated from this very
+/// grid, so the test can only fail on engine logic, never on model
+/// quality — the two-phase front is point-for-point identical to the
+/// full-tsim front, every survivor is bit-identical to the full run's
+/// measured result, and the whole thing is deterministic across worker
+/// counts.
+#[test]
+fn two_phase_front_identical_to_full_tsim_front() {
+    let spec = micro_spec();
+    let jobs = spec.jobs();
+    let full = sweep::run(&spec, &run_opts(2, None, false)).unwrap();
+
+    // Self-calibrate: worst multiplicative model error ρ on this grid,
+    // then the provably sound band ε = ρ² − 1 (DESIGN.md), with margin.
+    let mut rho: f64 = 1.0;
+    for (j, job) in jobs.iter().enumerate() {
+        let graph = job.workload.build(job.graph_seed);
+        let pred = model::predict_graph(&job.cfg, &graph).cycles.max(1) as f64;
+        let meas = full.results[j].cycles.max(1) as f64;
+        rho = rho.max((pred / meas).max(meas / pred));
+    }
+    let epsilon = model::epsilon_for_ratio(rho * 1.001);
+
+    let two = sweep::run(&spec, &two_phase_opts(2, epsilon)).unwrap();
+
+    // Survivors + pruned partition the grid; job_indices maps dense
+    // result positions back to grid job order.
+    assert_eq!(two.results.len() + two.pruned.len(), jobs.len());
+    assert_eq!(two.results.len(), two.job_indices.len());
+
+    // Every survivor is bit-identical (modulo the predicted-cycles
+    // annotation) to the full run's measured result for the same job:
+    // the reported front can only ever contain tsim-measured numbers.
+    for (d, r) in two.results.iter().enumerate() {
+        let j = two.job_indices[d];
+        assert!(r.predicted_cycles.is_some(), "two-phase must annotate predictions");
+        let mut stripped = r.clone();
+        stripped.predicted_cycles = None;
+        assert_eq!(stripped, full.results[j], "survivor {j} must be measured, not estimated");
+    }
+
+    // Front equality, mapped to grid job indices (full-run ids are
+    // already grid indices).
+    let map_front = |front: &ParetoFront, idx: &[usize]| -> Vec<(u64, u64, usize)> {
+        let mut v: Vec<(u64, u64, usize)> = front
+            .points()
+            .iter()
+            .map(|p| (p.area.to_bits(), p.cycles, idx[p.id]))
+            .collect();
+        v.sort_unstable();
+        v
+    };
+    let identity: Vec<usize> = (0..jobs.len()).collect();
+    assert_eq!(
+        map_front(&two.front, &two.job_indices),
+        map_front(&full.front, &identity),
+        "two-phase front must equal the full-tsim front point-for-point"
+    );
+
+    // Pruning is a pure function of (grid, model, ε): a re-run at a
+    // different worker count reproduces results, prune set and front.
+    let again = sweep::run(&spec, &two_phase_opts(4, epsilon)).unwrap();
+    assert_eq!(two.results, again.results);
+    assert_eq!(two.pruned, again.pruned);
+    assert_eq!(two.front.points(), again.front.points());
+    assert_eq!(two.job_indices, again.job_indices);
+}
+
+/// Pruning actually prunes, and can only *drop* points, never fabricate
+/// front entries: a config that is strictly worse on both axes by
+/// construction (larger uop scratchpad → strictly larger area; much
+/// larger DRAM latency → strictly larger prediction, via the additive
+/// latency terms of every layer estimate) is eliminated at ε = 0, and
+/// every reported front point carries the same measured cycles as the
+/// full-tsim run.
+#[test]
+fn two_phase_prunes_dominated_corner_and_never_fabricates() {
+    let mut spec = micro_spec();
+    let mut bad = presets::tiny_config();
+    bad.name = "tiny-bad".into();
+    bad.uop_depth *= 2; // strictly more area
+    bad.dram_latency *= 1000; // strictly (and overwhelmingly) larger predicted cycles
+    spec.configs.push(bad);
+    let n_jobs = spec.jobs().len();
+
+    let full = sweep::run(&spec, &run_opts(2, None, false)).unwrap();
+    let two = sweep::run(&spec, &two_phase_opts(2, 0.0)).unwrap();
+
+    assert!(
+        two.pruned.len() >= 2,
+        "both seeds of the dominated corner must be pruned, got {:?}",
+        two.pruned
+    );
+    assert_eq!(two.results.len() + two.pruned.len(), n_jobs);
+    // Pruned points carry predictions only — and they were never
+    // simulated (simulated + cached covers exactly the survivors).
+    assert_eq!(two.simulated + two.cached, two.results.len());
+    // Every front point the two-phase run reports exists in the full
+    // run with identical measured cycles (drop-only, never fabricate).
+    for p in two.front.points() {
+        let j = two.job_indices[p.id];
+        assert_eq!(
+            two.results[p.id].cycles, full.results[j].cycles,
+            "front point {j} must carry the full run's measured cycles"
+        );
+    }
+}
+
+#[test]
+fn prop_epsilon_band_contains_front_and_is_monotone() {
+    Prop::new("epsilon-band").cases(200).run(|g| {
+        let n = g.usize(0, 40);
+        let pts: Vec<(f64, u64)> = (0..n)
+            .map(|_| (g.i64(0, 12) as f64, g.i64(0, 12) as u64))
+            .collect();
+        let eps = g.i64(0, 30) as f64 / 10.0;
+        let survive = epsilon_band_survivors(&pts, eps);
+        let mut front = ParetoFront::new();
+        for (i, &(a, c)) in pts.iter().enumerate() {
+            front.insert(a, c, i);
+        }
+        for id in front.ids() {
+            prop_assert!(survive[id], "front point {id} must survive any epsilon >= 0");
+        }
+        let tighter = epsilon_band_survivors(&pts, eps / 2.0);
+        for i in 0..n {
+            prop_assert!(!tighter[i] || survive[i], "survivors must be monotone in epsilon");
+        }
+        Ok(())
+    });
 }
 
 // ---------------------------------------------------------------- pareto
