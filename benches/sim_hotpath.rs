@@ -14,8 +14,9 @@ use vta::compiler::graph::{Graph, Op};
 use vta::compiler::layout::Shape;
 use vta::compiler::tps;
 use vta::config::presets;
+use vta::engine::BackendKind;
 use vta::isa::{DepFlags, Insn};
-use vta::runtime::{Session, SessionOptions, Target};
+use vta::runtime::{Session, SessionOptions};
 use vta::util::bench::{black_box, Bench};
 use vta::util::json::Json;
 use vta::util::rng::Pcg32;
@@ -71,12 +72,12 @@ fn main() {
         let mut rng = Pcg32::seeded(4);
         let input = rng.i8_vec(g.input_shape.elems());
         // calibrate cycles once
-        let mut s = Session::new(&cfg, SessionOptions::default());
-        s.run_graph(&g, &input);
+        let mut s = Session::new(&cfg, SessionOptions::default()).unwrap();
+        s.run_graph(&g, &input).unwrap();
         let cycles = s.cycles();
         b.bench_throughput("tsim/micro_resnet", Some((cycles as f64, "sim-cycles")), || {
-            let mut s = Session::new(&cfg, SessionOptions::default());
-            s.run_graph(&g, black_box(&input));
+            let mut s = Session::new(&cfg, SessionOptions::default()).unwrap();
+            s.run_graph(&g, black_box(&input)).unwrap();
             s.cycles()
         });
     }
@@ -88,16 +89,17 @@ fn main() {
         let cfg = presets::default_config();
         let mut rng = Pcg32::seeded(4);
         let input = rng.i8_vec(g.input_shape.elems());
-        let topts = SessionOptions { timing_only: true, ..Default::default() };
-        let mut s = Session::new(&cfg, topts.clone());
-        s.run_graph(&g, &input);
+        let topts =
+            SessionOptions { backend: BackendKind::TsimTiming, ..Default::default() };
+        let mut s = Session::new(&cfg, topts.clone()).unwrap();
+        s.run_graph(&g, &input).unwrap();
         let cycles = s.cycles();
         b.bench_throughput(
             "tsim/micro_resnet_timing_only",
             Some((cycles as f64, "sim-cycles")),
             || {
-                let mut s = Session::new(&cfg, topts.clone());
-                s.run_graph(&g, black_box(&input));
+                let mut s = Session::new(&cfg, topts.clone()).unwrap();
+                s.run_graph(&g, black_box(&input)).unwrap();
                 s.cycles()
             },
         );
@@ -106,18 +108,18 @@ fn main() {
         // LayerMemo; measures the per-point floor of a warmed sweep ---
         let memo = std::sync::Arc::new(vta::memo::LayerMemo::in_memory());
         let mopts = SessionOptions {
-            timing_only: true,
+            backend: BackendKind::TsimTiming,
             memo: Some(memo.clone()),
             ..Default::default()
         };
-        let mut warm = Session::new(&cfg, mopts.clone());
-        warm.run_graph(&g, &input); // populate the memo
+        let mut warm = Session::new(&cfg, mopts.clone()).unwrap();
+        warm.run_graph(&g, &input).unwrap(); // populate the memo
         b.bench_throughput(
             "tsim/micro_resnet_memo_warm",
             Some((cycles as f64, "sim-cycles")),
             || {
-                let mut s = Session::new(&cfg, mopts.clone());
-                s.run_graph(&g, black_box(&input));
+                let mut s = Session::new(&cfg, mopts.clone()).unwrap();
+                s.run_graph(&g, black_box(&input)).unwrap();
                 s.cycles()
             },
         );
@@ -132,9 +134,10 @@ fn main() {
         b.bench("fsim/micro_resnet", || {
             let mut s = Session::new(
                 &cfg,
-                SessionOptions { target: Target::Fsim, ..Default::default() },
-            );
-            s.run_graph(&g, black_box(&input));
+                SessionOptions { backend: BackendKind::Fsim, ..Default::default() },
+            )
+            .unwrap();
+            s.run_graph(&g, black_box(&input)).unwrap();
         });
     }
 

@@ -5,6 +5,7 @@
 //!     cargo bench --bench sweep_scaling [-- <filter>] [--quick]
 
 use vta::config::presets;
+use vta::engine::BackendKind;
 use vta::model;
 use vta::sweep::{self, SweepOptions, SweepSpec, TwoPhaseOptions, WorkloadSpec};
 use vta::util::bench::Bench;
@@ -58,7 +59,12 @@ fn main() {
     let memoized = b.once("sweep/cold_memo_timing_only", || {
         let o = sweep::run(
             &spec,
-            &SweepOptions { jobs: cores, memo: true, timing_only: true, ..Default::default() },
+            &SweepOptions {
+                jobs: cores,
+                memo: true,
+                backend: BackendKind::TsimTiming,
+                ..Default::default()
+            },
         )
         .unwrap();
         assert_eq!(o.simulated, n_points);
@@ -79,7 +85,7 @@ fn main() {
             &SweepOptions {
                 jobs: cores,
                 memo: true,
-                timing_only: true,
+                backend: BackendKind::TsimTiming,
                 two_phase: Some(TwoPhaseOptions { epsilon: model::DEFAULT_PRUNE_EPSILON }),
                 ..Default::default()
             },

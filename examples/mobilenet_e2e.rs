@@ -6,7 +6,7 @@
 //!     cargo run --release --example mobilenet_e2e [-- --quick]
 
 use vta::config::presets;
-use vta::runtime::{Session, SessionOptions, Target};
+use vta::engine::{BackendKind, Engine, EvalRequest};
 use vta::util::cli::Args;
 use vta::util::rng::Pcg32;
 use vta::util::stats;
@@ -22,15 +22,20 @@ fn main() {
     let expect = g.run_cpu(&input, 1);
 
     let t = std::time::Instant::now();
-    let mut s =
-        Session::new(&cfg, SessionOptions { target: Target::Tsim, ..Default::default() });
-    let out = s.run_graph(&g, &input);
+    let engine = Engine::for_config(&cfg)
+        .backend_kind(BackendKind::Tsim)
+        .build()
+        .expect("preset configs are valid");
+    let eval = engine
+        .run(&g, &EvalRequest::with_data(input.clone()))
+        .expect("mobilenet is well-formed");
+    let out = eval.output.expect("tsim computes tensors");
     assert_eq!(out, expect, "MobileNet output mismatch vs CPU golden");
     println!("MobileNet-1.0 @ {hw}x{hw} on {}: VERIFIED", cfg.tag());
 
     let mut dw_cycles = 0u64;
     let mut pw_cycles = 0u64;
-    for l in &s.layer_stats {
+    for l in &eval.layer_stats {
         match l.kind {
             "depthwise" => dw_cycles += l.cycles,
             "conv" | "dense" => pw_cycles += l.cycles,
@@ -39,7 +44,7 @@ fn main() {
     }
     println!(
         "total {} cycles | depthwise(ALU) {} | conv/dense(GEMM) {} | wall {}",
-        s.cycles(),
+        eval.cycles.unwrap_or(0),
         stats::si(dw_cycles as f64),
         stats::si(pw_cycles as f64),
         stats::fmt_ns(t.elapsed().as_nanos() as f64)

@@ -5,14 +5,17 @@
 //!
 //!     cargo run --release --example pareto_sweep [-- --quick]
 //!         [--jobs N] [--cache sweep_cache.jsonl --resume]
+//!         [--backend tsim|timing|model]
 //!         [--two-phase [--prune-epsilon E]]
 //!
 //! Re-running with `--cache f --resume` completes from cache without
 //! re-simulating; the frontier is identical for any worker count. With
 //! `--two-phase` the analytical model prunes the grid first and tsim
 //! runs only on the predicted-front neighborhood — the printed frontier
-//! stays 100% tsim-measured.
+//! stays 100% tsim-measured. `--backend model` scores the whole grid
+//! with the analytical backend instead (instant, unmeasured).
 
+use vta::engine::BackendKind;
 use vta::sweep::{self, GridSpec, SweepOptions, TwoPhaseOptions};
 use vta::util::cli::Args;
 
@@ -36,15 +39,19 @@ fn main() {
             }
         }
     }
-    // Frontier extraction consumes only cycles/area, so run the
-    // memoized timing-only fast path (bit-identical metrics).
+    // Frontier extraction consumes only cycles/area, so default to the
+    // memoized timing-only backend (bit-identical metrics).
+    let backend = BackendKind::parse(args.get_or("backend", "timing")).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
     let opts = SweepOptions {
-        jobs: args.get_usize("jobs", 0),
+        jobs: sweep::effective_jobs(args.get_usize("jobs", 0)),
         cache_path: args.get("cache").map(Into::into),
         resume,
         progress: true,
         memo: true,
-        timing_only: true,
+        backend,
         two_phase: (args.has_flag("two-phase") || args.get("prune-epsilon").is_some()).then(
             || TwoPhaseOptions {
                 epsilon: args.get_f64("prune-epsilon", vta::model::DEFAULT_PRUNE_EPSILON),

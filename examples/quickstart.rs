@@ -1,15 +1,16 @@
-//! Quickstart: compile one quantized conv layer, run it on the
-//! cycle-accurate simulator, and verify it bit-for-bit against the CPU
-//! reference — and, when `make artifacts` has been run, against the
-//! AOT-compiled JAX/Pallas golden model through PJRT.
+//! Quickstart: compile one quantized conv layer, evaluate it through
+//! the unified `Engine` API at every rung of the fidelity ladder, and
+//! verify the functional rungs bit-for-bit against the CPU reference —
+//! and, when `make artifacts` has been run, against the AOT-compiled
+//! JAX/Pallas golden model through PJRT.
 //!
 //!     cargo run --release --example quickstart
 
 use vta::compiler::graph::{Graph, Op};
 use vta::compiler::layout::Shape;
 use vta::config::presets;
+use vta::engine::{BackendKind, Engine, EvalRequest};
 use vta::runtime::pjrt::Golden;
-use vta::runtime::{Session, SessionOptions, Target};
 use vta::util::rng::Pcg32;
 
 fn main() {
@@ -28,20 +29,32 @@ fn main() {
         Op::Conv { c_out: 16, k: 3, stride: 1, pad: 1, shift: 5, relu: true, weights: w.clone() },
         vec![0],
     );
-
-    // Run on the cycle-accurate simulator.
-    let mut session = Session::new(&cfg, SessionOptions { target: Target::Tsim, ..Default::default() });
-    let out = session.run_graph(&g, &x);
-    let stat = &session.layer_stats[0];
-    println!(
-        "tsim: {} cycles, {} MACs, {} insns, {} uops",
-        stat.cycles, stat.macs, stat.insns, stat.uops
-    );
-
-    // Check against the bit-exact CPU reference.
     let expect = g.run_cpu(&x, 1);
-    assert_eq!(out, expect, "simulator disagrees with CPU reference");
-    println!("cpu reference: MATCH ({} int8 values)", out.len());
+
+    // One engine per fidelity rung; swapping the backend is the only
+    // change between a behavioral check, a cycle-accurate measurement,
+    // the timing-only fast path, and an instant analytical estimate.
+    let mut out = Vec::new();
+    for kind in BackendKind::ALL {
+        let engine = Engine::for_config(&cfg).backend_kind(kind).build().expect("valid config");
+        let eval =
+            engine.run(&g, &EvalRequest::with_data(x.clone())).expect("well-formed request");
+        let note = if kind == BackendKind::Analytical {
+            " (predicted)"
+        } else {
+            ""
+        };
+        let cycles = eval
+            .cycles
+            .map(|c| format!("{c}{note}"))
+            .unwrap_or_else(|| "n/a".into());
+        println!("{kind:<7} fidelity {:<14} cycles {cycles}", eval.fidelity);
+        if let Some(tensor) = eval.output {
+            assert_eq!(tensor, expect, "{kind} disagrees with the CPU reference");
+            out = tensor;
+        }
+    }
+    println!("cpu reference: MATCH on every output-producing backend ({} int8 values)", out.len());
 
     // Check against the JAX/Pallas golden model via PJRT (if built).
     let mut golden = Golden::with_default_dir().expect("PJRT client");

@@ -7,7 +7,7 @@
 
 use vta::analysis::{area, gantt};
 use vta::config::presets;
-use vta::runtime::{Session, SessionOptions, Target};
+use vta::engine::{Engine, EvalRequest, TsimBackend};
 use vta::util::cli::Args;
 use vta::util::rng::Pcg32;
 use vta::util::stats;
@@ -24,12 +24,21 @@ fn main() {
     let mut results = Vec::new();
     for cfg in [presets::original_config(), presets::default_config()] {
         let t = std::time::Instant::now();
-        let mut s = Session::new(
-            &cfg,
-            SessionOptions { target: Target::Tsim, trace: true, ..Default::default() },
+        let engine = Engine::for_config(&cfg)
+            .backend(TsimBackend::functional())
+            .trace(true)
+            .build()
+            .expect("preset configs are valid");
+        let eval = engine
+            .run(&g, &EvalRequest::with_data(input.clone()))
+            .expect("resnet18 is well-formed");
+        let cycles = eval.cycles.expect("tsim measures cycles");
+        assert_eq!(
+            eval.output.as_deref(),
+            Some(&expect[..]),
+            "accelerator output mismatch on {}",
+            cfg.name
         );
-        let out = s.run_graph(&g, &input);
-        assert_eq!(out, expect, "accelerator output mismatch on {}", cfg.name);
         println!(
             "\n=== {} ({}; scaled area {:.2}) — verified vs golden ===",
             cfg.name,
@@ -37,7 +46,7 @@ fn main() {
             area::scaled_area(&cfg)
         );
         println!("{:<14} {:>12} {:>10} {:>12}", "layer", "cycles", "macs/cyc", "dram rd");
-        for l in s.layer_stats.iter().filter(|l| !l.on_cpu && l.cycles > 0).take(12) {
+        for l in eval.layer_stats.iter().filter(|l| !l.on_cpu && l.cycles > 0).take(12) {
             println!(
                 "{:<14} {:>12} {:>10.1} {:>12}",
                 l.name.split(':').next_back().unwrap(),
@@ -46,17 +55,17 @@ fn main() {
                 l.dram_rd
             );
         }
-        println!("  ... ({} layers total)", s.layer_stats.len());
-        let r = s.perf_report().unwrap();
+        println!("  ... ({} layers total)", eval.layer_stats.len());
+        let r = eval.report.as_ref().unwrap();
         println!(
             "total: {} cycles | {} MACs | {:.1} MACs/cycle | wall {}",
-            s.cycles(),
+            cycles,
             stats::si(r.exec.macs as f64),
             r.macs_per_cycle(),
             stats::fmt_ns(t.elapsed().as_nanos() as f64)
         );
-        let tr = s.tsim().unwrap();
-        let u = gantt::utilization(&tr.trace, 0, s.cycles());
+        let trace = eval.trace.as_ref().unwrap();
+        let u = gantt::utilization(trace, 0, cycles);
         println!(
             "utilization: load {:.0}% | compute {:.0}% (G {:.0}% / A {:.0}%) | store {:.0}%",
             u.load * 100.0,
@@ -65,7 +74,7 @@ fn main() {
             u.compute_alu * 100.0,
             u.store * 100.0
         );
-        results.push((cfg.name.clone(), s.cycles()));
+        results.push((cfg.name.clone(), cycles));
     }
     println!(
         "\npipelining speedup: {:.2}x (paper: ~4.9x on the tsim target)",

@@ -76,55 +76,168 @@ impl Graph {
         self.nodes.len() - 1
     }
 
-    /// Per-node output shapes.
+    /// Structural validation: node arity and edge direction, operator
+    /// geometry (kernel vs. padded input, strides, dense/pool input
+    /// shapes, a sanity cap on every dimension so no arithmetic can
+    /// overflow), and weight-tensor sizes. Returns a description of the
+    /// first defect. Runtimes call this before execution so malformed
+    /// graphs are rejected with an error instead of panicking mid-run;
+    /// a graph that passes cannot make [`Graph::shapes`] or the
+    /// staging/lowering paths fault on its structure.
+    pub fn validate(&self) -> Result<(), String> {
+        self.try_shapes().map(|_| ())
+    }
+
+    /// Per-node output shapes. Panics on a malformed graph — callers on
+    /// untrusted input go through [`Graph::validate`] (or the engine,
+    /// which does) first; both share [`Graph::try_shapes`], so the
+    /// validated rules and the executed rules cannot drift.
     pub fn shapes(&self) -> Vec<Shape> {
+        self.try_shapes().expect("malformed graph (run Graph::validate first)")
+    }
+
+    /// Fallible shape propagation — the single source of truth behind
+    /// [`Graph::validate`] and [`Graph::shapes`].
+    pub fn try_shapes(&self) -> Result<Vec<Shape>, String> {
+        // Any single dimension (channel, spatial, kernel, stride, pad)
+        // above this is a malformed graph, not a workload — the cap
+        // keeps every downstream sum within `usize` on all supported
+        // targets (products go through `weight_len`).
+        const DIM_LIMIT: usize = 1 << 20;
+        fn windowed(s: Shape, k: usize, stride: usize, pad: usize) -> Result<Shape, String> {
+            if k == 0 || stride == 0 {
+                return Err(format!("kernel {k} / stride {stride} must be positive"));
+            }
+            if k > DIM_LIMIT || stride > DIM_LIMIT || pad > DIM_LIMIT {
+                return Err(format!("kernel {k} / stride {stride} / pad {pad} implausibly large"));
+            }
+            if s.h + 2 * pad < k || s.w + 2 * pad < k {
+                return Err(format!(
+                    "kernel {k} exceeds padded input {}x{} (pad {pad})",
+                    s.h, s.w
+                ));
+            }
+            Ok(Shape::new(
+                s.c,
+                (s.h + 2 * pad - k) / stride + 1,
+                (s.w + 2 * pad - k) / stride + 1,
+            ))
+        }
+        // Checked product for expected weight-tensor lengths.
+        fn weight_len(dims: &[usize]) -> Result<usize, String> {
+            dims.iter().try_fold(1usize, |acc, &d| {
+                acc.checked_mul(d).ok_or_else(|| "weight tensor size overflows".to_string())
+            })
+        }
+        if self.nodes.is_empty() || !matches!(self.nodes[0].op, Op::Input) {
+            return Err("graph must start with its input node".into());
+        }
+        let s0 = self.input_shape;
+        if s0.c == 0 || s0.h == 0 || s0.w == 0 || s0.c > DIM_LIMIT || s0.h > DIM_LIMIT
+            || s0.w > DIM_LIMIT
+        {
+            return Err(format!("implausible input shape {s0:?}"));
+        }
         let mut shapes: Vec<Shape> = Vec::with_capacity(self.nodes.len());
-        for node in &self.nodes {
+        for (i, node) in self.nodes.iter().enumerate() {
+            let fail = |msg: String| Err(format!("node '{}': {msg}", node.name));
+            let arity = match node.op {
+                Op::Input => 0,
+                Op::Add { .. } => 2,
+                _ => 1,
+            };
+            if node.inputs.len() != arity {
+                return fail(format!("{} inputs, operator expects {arity}", node.inputs.len()));
+            }
+            if node.inputs.iter().any(|&j| j >= i) {
+                return fail("references itself or a later node".into());
+            }
             let shape = match &node.op {
-                Op::Input => self.input_shape,
-                Op::Conv { c_out, k, stride, pad, .. } => {
-                    let s = shapes[node.inputs[0]];
-                    Shape::new(
-                        *c_out,
-                        (s.h + 2 * pad - k) / stride + 1,
-                        (s.w + 2 * pad - k) / stride + 1,
-                    )
+                Op::Input => {
+                    if i != 0 {
+                        return fail("input placeholder in graph interior".into());
+                    }
+                    s0
                 }
-                Op::Depthwise { k, stride, pad, .. } => {
+                Op::Conv { c_out, k, stride, pad, weights, .. } => {
                     let s = shapes[node.inputs[0]];
-                    Shape::new(
-                        s.c,
-                        (s.h + 2 * pad - k) / stride + 1,
-                        (s.w + 2 * pad - k) / stride + 1,
-                    )
+                    if *c_out == 0 || *c_out > DIM_LIMIT {
+                        return fail(format!("implausible output channel count {c_out}"));
+                    }
+                    let w = match windowed(s, *k, *stride, *pad) {
+                        Ok(out) => Shape::new(*c_out, out.h, out.w),
+                        Err(msg) => return fail(msg),
+                    };
+                    match weight_len(&[*c_out, s.c, *k, *k]) {
+                        Ok(want) if weights.len() == want => {}
+                        Ok(want) => {
+                            return fail(format!("{} weights, conv needs {want}", weights.len()))
+                        }
+                        Err(msg) => return fail(msg),
+                    }
+                    w
                 }
-                Op::Dense { units, .. } => {
+                Op::Depthwise { k, stride, pad, weights, .. } => {
                     let s = shapes[node.inputs[0]];
-                    assert_eq!((s.h, s.w), (1, 1), "dense expects (c,1,1) input");
+                    let w = match windowed(s, *k, *stride, *pad) {
+                        Ok(out) => out,
+                        Err(msg) => return fail(msg),
+                    };
+                    match weight_len(&[s.c, *k, *k]) {
+                        Ok(want) if weights.len() == want => {}
+                        Ok(want) => {
+                            return fail(format!(
+                                "{} weights, depthwise needs {want}",
+                                weights.len()
+                            ))
+                        }
+                        Err(msg) => return fail(msg),
+                    }
+                    w
+                }
+                Op::Dense { units, weights, .. } => {
+                    let s = shapes[node.inputs[0]];
+                    if (s.h, s.w) != (1, 1) {
+                        return fail(format!("dense expects a (c,1,1) input, got {s:?}"));
+                    }
+                    if *units == 0 || *units > DIM_LIMIT {
+                        return fail(format!("implausible unit count {units}"));
+                    }
+                    match weight_len(&[*units, s.c]) {
+                        Ok(want) if weights.len() == want => {}
+                        Ok(want) => {
+                            return fail(format!("{} weights, dense needs {want}", weights.len()))
+                        }
+                        Err(msg) => return fail(msg),
+                    }
                     Shape::new(*units, 1, 1)
                 }
                 Op::MaxPool { k, stride, pad } => {
                     let s = shapes[node.inputs[0]];
-                    Shape::new(
-                        s.c,
-                        (s.h + 2 * pad - k) / stride + 1,
-                        (s.w + 2 * pad - k) / stride + 1,
-                    )
+                    match windowed(s, *k, *stride, *pad) {
+                        Ok(out) => out,
+                        Err(msg) => return fail(msg),
+                    }
                 }
                 Op::GlobalAvgPool => {
                     let s = shapes[node.inputs[0]];
+                    if s.h != s.w {
+                        return fail(format!("global pool expects a square input, got {s:?}"));
+                    }
                     Shape::new(s.c, 1, 1)
                 }
                 Op::Add { .. } => {
                     let a = shapes[node.inputs[0]];
                     let b = shapes[node.inputs[1]];
-                    assert_eq!(a, b, "Add requires equal shapes");
+                    if a != b {
+                        return fail(format!("add of unequal shapes {a:?} vs {b:?}"));
+                    }
                     a
                 }
             };
             shapes.push(shape);
         }
-        shapes
+        Ok(shapes)
     }
 
     /// The conv spec of a `Conv` node given its input shape.
@@ -269,6 +382,51 @@ mod tests {
             vec![gap],
         );
         g
+    }
+
+    #[test]
+    fn validate_accepts_real_and_rejects_malformed() {
+        assert!(tiny_graph().validate().is_ok());
+        // Wrong arity: Add with one operand.
+        let mut g = Graph::new("bad-add", Shape::new(4, 4, 4));
+        g.add("add", Op::Add { relu: false }, vec![0]);
+        assert!(g.validate().is_err());
+        // Kernel larger than the padded input.
+        let mut g = Graph::new("bad-k", Shape::new(4, 2, 2));
+        g.add(
+            "conv",
+            Op::Conv {
+                c_out: 4,
+                k: 5,
+                stride: 1,
+                pad: 0,
+                shift: 0,
+                relu: false,
+                weights: vec![0; 4 * 4 * 25],
+            },
+            vec![0],
+        );
+        assert!(g.validate().is_err());
+        // Wrong weight-tensor size.
+        let mut g = Graph::new("bad-w", Shape::new(4, 4, 4));
+        g.add(
+            "conv",
+            Op::Conv {
+                c_out: 4,
+                k: 1,
+                stride: 1,
+                pad: 0,
+                shift: 0,
+                relu: false,
+                weights: vec![0; 15],
+            },
+            vec![0],
+        );
+        assert!(g.validate().is_err());
+        // Absurd padding is an error, never an arithmetic panic.
+        let mut g = Graph::new("bad-pad", Shape::new(4, 4, 4));
+        g.add("pool", Op::MaxPool { k: 2, stride: 1, pad: usize::MAX / 2 }, vec![0]);
+        assert!(g.validate().is_err());
     }
 
     #[test]

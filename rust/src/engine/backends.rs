@@ -1,0 +1,353 @@
+//! The built-in [`Backend`] implementations: the two simulators (each
+//! tsim mode is its own backend instance — no mode flags), the
+//! analytical model, and the memo wrapper.
+
+use super::{
+    Backend, BackendKind, Capabilities, EvalRequest, Evaluation, Fidelity, InputSpec, Prepared,
+    Tuning, VtaError,
+};
+use crate::compiler::graph::Graph;
+use crate::config::VtaConfig;
+use crate::exec::ExecCounters;
+use crate::memo::LayerMemo;
+use crate::model;
+use crate::runtime::{LayerStat, Session, SessionOptions};
+use crate::util::rng::Pcg32;
+use std::borrow::Cow;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Resolve a request's input against the prepared graph. Explicit data
+/// is always length-checked (catching client bugs even on backends that
+/// never read it); seeded input is materialized only when the backend
+/// actually consumes tensors.
+fn resolve_input<'r>(
+    prepared: &Prepared<'_>,
+    request: &'r EvalRequest,
+    wants_data: bool,
+) -> Result<Cow<'r, [i8]>, VtaError> {
+    let want = prepared.cfg.batch * prepared.graph.input_shape.elems();
+    match &request.input {
+        InputSpec::Data(data) => {
+            if data.len() != want {
+                return Err(VtaError::InvalidRequest(format!(
+                    "input holds {} values but batch {} x input shape {:?} needs {}",
+                    data.len(),
+                    prepared.cfg.batch,
+                    prepared.graph.input_shape,
+                    want
+                )));
+            }
+            Ok(Cow::Borrowed(&data[..]))
+        }
+        InputSpec::Seeded(seed) => {
+            if wants_data {
+                Ok(Cow::Owned(Pcg32::seeded(*seed).i8_vec(want)))
+            } else {
+                Ok(Cow::Borrowed(&[][..]))
+            }
+        }
+    }
+}
+
+/// Shared simulator evaluation: drive a [`Session`] on the chosen
+/// simulator and collect its products into an [`Evaluation`].
+fn sim_eval(
+    kind: BackendKind,
+    name: &'static str,
+    prepared: &Prepared<'_>,
+    request: &EvalRequest,
+) -> Result<Evaluation, VtaError> {
+    let opts = SessionOptions {
+        backend: kind,
+        trace: prepared.tuning.trace,
+        tps: prepared.tuning.tps,
+        dbuf_reuse: prepared.tuning.dbuf_reuse,
+        memo: prepared.memo.clone(),
+    };
+    let mut session = Session::new(&prepared.cfg, opts)?;
+    let input = resolve_input(prepared, request, kind != BackendKind::TsimTiming)?;
+    let output = session.run_graph(prepared.graph, &input)?;
+    Ok(Evaluation {
+        fidelity: kind.fidelity(),
+        backend: name,
+        cycles: (kind != BackendKind::Fsim).then(|| session.cycles()),
+        output: (kind != BackendKind::TsimTiming).then_some(output),
+        counters: session.exec_counters(),
+        report: session.perf_report(),
+        trace: session.take_trace(),
+        layer_stats: std::mem::take(&mut session.layer_stats),
+    })
+}
+
+/// Behavioral simulation: exact tensors, no timing model. The top of
+/// the fidelity ladder — the reference every other backend's outputs
+/// are validated against.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FsimBackend;
+
+impl Backend for FsimBackend {
+    fn name(&self) -> &'static str {
+        "fsim"
+    }
+
+    fn fidelity(&self) -> Fidelity {
+        Fidelity::Functional
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities { produces_outputs: true, produces_cycles: false, supports_memo: false }
+    }
+
+    fn eval(&self, prepared: &Prepared<'_>, request: &EvalRequest) -> Result<Evaluation, VtaError> {
+        sim_eval(BackendKind::Fsim, self.name(), prepared, request)
+    }
+}
+
+/// Cycle-accurate simulation. The two tsim modes are two backend
+/// *instances* of this type — functional (full datapath, exact outputs)
+/// and timing-only (identical cycles and counters, datapath skipped) —
+/// rather than a runtime flag, so the fidelity choice is visible in the
+/// type of the evaluation pipeline.
+#[derive(Debug, Clone, Copy)]
+pub struct TsimBackend {
+    timing_only: bool,
+}
+
+impl TsimBackend {
+    /// Full cycle-accurate simulation ([`Fidelity::CycleAccurate`]).
+    pub fn functional() -> TsimBackend {
+        TsimBackend { timing_only: false }
+    }
+
+    /// Timing-only simulation ([`Fidelity::TimingOnly`]): the timing
+    /// wheel runs exactly as in functional mode — cycles, per-layer
+    /// stats and execution counters are bit-identical — but all
+    /// datapath effects (and the input staging that feeds them) are
+    /// skipped, so no outputs are produced.
+    pub fn timing_only() -> TsimBackend {
+        TsimBackend { timing_only: true }
+    }
+
+    fn kind(&self) -> BackendKind {
+        if self.timing_only {
+            BackendKind::TsimTiming
+        } else {
+            BackendKind::Tsim
+        }
+    }
+}
+
+impl Backend for TsimBackend {
+    fn name(&self) -> &'static str {
+        if self.timing_only { "timing" } else { "tsim" }
+    }
+
+    fn fidelity(&self) -> Fidelity {
+        self.kind().fidelity()
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            produces_outputs: !self.timing_only,
+            produces_cycles: true,
+            supports_memo: true,
+        }
+    }
+
+    fn eval(&self, prepared: &Prepared<'_>, request: &EvalRequest) -> Result<Evaluation, VtaError> {
+        sim_eval(self.kind(), self.name(), prepared, request)
+    }
+}
+
+/// Per-layer prediction cache shared between [`AnalyticalBackend`]
+/// instances: layer-memo signature → predicted cycles. The signature
+/// hashes the configuration's perf fields, so one cache safely spans a
+/// whole design-space grid (the two-phase sweep shares one across every
+/// phase-1 engine).
+pub type PredictionCache = Arc<Mutex<HashMap<u64, u64>>>;
+
+/// The analytical cycle model as a backend: closed-form per-layer
+/// estimates, microseconds per network, no compilation or simulation.
+/// Cycle counts are *predictions* ([`Fidelity::Analytical`]) — never
+/// mix them with measured results (the sweep keeps them out of its
+/// on-disk cache and flags them via `PointResult::measured`).
+pub struct AnalyticalBackend {
+    cache: PredictionCache,
+}
+
+impl AnalyticalBackend {
+    pub fn new() -> AnalyticalBackend {
+        AnalyticalBackend { cache: PredictionCache::default() }
+    }
+
+    /// Share a prediction cache with other engines (one estimate per
+    /// unique `(config, layer)` across a whole grid).
+    pub fn with_cache(cache: PredictionCache) -> AnalyticalBackend {
+        AnalyticalBackend { cache }
+    }
+
+    /// Handle to this backend's prediction cache.
+    pub fn cache(&self) -> PredictionCache {
+        self.cache.clone()
+    }
+}
+
+impl Default for AnalyticalBackend {
+    fn default() -> AnalyticalBackend {
+        AnalyticalBackend::new()
+    }
+}
+
+impl Backend for AnalyticalBackend {
+    fn name(&self) -> &'static str {
+        "model"
+    }
+
+    fn fidelity(&self) -> Fidelity {
+        Fidelity::Analytical
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities { produces_outputs: false, produces_cycles: true, supports_memo: false }
+    }
+
+    fn eval(&self, prepared: &Prepared<'_>, request: &EvalRequest) -> Result<Evaluation, VtaError> {
+        // Input is never read, but explicit data is still validated so a
+        // malformed request fails identically at every fidelity.
+        resolve_input(prepared, request, false)?;
+        let mut cache = self.cache.lock().unwrap();
+        let prediction = model::predict_graph_cached(&prepared.cfg, prepared.graph, &mut cache);
+        drop(cache);
+        let layer_stats = prediction
+            .layers
+            .iter()
+            .map(|l| LayerStat {
+                name: format!("{}:{}", prepared.graph.name, l.name),
+                kind: l.kind,
+                cycles: l.cycles,
+                insns: 0,
+                uops: 0,
+                macs: 0,
+                dram_rd: 0,
+                dram_wr: 0,
+                on_cpu: false,
+            })
+            .collect();
+        Ok(Evaluation {
+            fidelity: Fidelity::Analytical,
+            backend: self.name(),
+            cycles: Some(prediction.cycles),
+            output: None,
+            counters: ExecCounters::default(),
+            layer_stats,
+            report: None,
+            trace: None,
+        })
+    }
+}
+
+/// Memo-replay as a wrapper backend: injects a shared [`LayerMemo`]
+/// into the inner backend's prepared state, so memo hits splice cached
+/// per-layer results (timing-only) or replay programs through the exec
+/// core (functional) instead of re-simulating. Compose via
+/// [`EngineBuilder::memo`](super::EngineBuilder::memo); results are
+/// bit-identical with or without the wrapper.
+pub struct MemoBackend {
+    inner: Box<dyn Backend>,
+    memo: Arc<LayerMemo>,
+}
+
+impl MemoBackend {
+    pub fn new(inner: Box<dyn Backend>, memo: Arc<LayerMemo>) -> MemoBackend {
+        MemoBackend { inner, memo }
+    }
+
+    pub fn memo(&self) -> &Arc<LayerMemo> {
+        &self.memo
+    }
+}
+
+impl Backend for MemoBackend {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn fidelity(&self) -> Fidelity {
+        self.inner.fidelity()
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.inner.capabilities()
+    }
+
+    fn prepare<'g>(
+        &self,
+        cfg: &VtaConfig,
+        graph: &'g Graph,
+        tuning: &Tuning,
+    ) -> Result<Prepared<'g>, VtaError> {
+        if !self.inner.capabilities().supports_memo {
+            return Err(VtaError::Unsupported(format!(
+                "backend '{}' does not support the layer memo",
+                self.inner.name()
+            )));
+        }
+        let mut prepared = self.inner.prepare(cfg, graph, tuning)?;
+        prepared.memo = Some(self.memo.clone());
+        Ok(prepared)
+    }
+
+    fn eval(&self, prepared: &Prepared<'_>, request: &EvalRequest) -> Result<Evaluation, VtaError> {
+        self.inner.eval(prepared, request)
+    }
+}
+
+// Backend evaluations need a graph + config; keep the unit tests here
+// lightweight (trait wiring) and the cross-backend parity invariants in
+// `rust/tests/backend_parity.rs`.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::engine::Engine;
+    use crate::workloads;
+
+    #[test]
+    fn analytical_matches_predict_graph() {
+        let cfg = presets::tiny_config();
+        let graph = workloads::micro_resnet(cfg.block_in, 42);
+        let engine = Engine::for_config(&cfg).backend(AnalyticalBackend::new()).build().unwrap();
+        let eval = engine.run(&graph, &EvalRequest::seeded(7)).unwrap();
+        let direct = model::predict_graph(&cfg, &graph);
+        assert_eq!(eval.cycles, Some(direct.cycles));
+        assert_eq!(eval.layer_stats.len(), direct.layers.len());
+        assert!(eval.output.is_none());
+        assert_eq!(eval.counters, ExecCounters::default());
+    }
+
+    #[test]
+    fn analytical_prediction_cache_is_shared() {
+        let cfg = presets::tiny_config();
+        let graph = workloads::micro_resnet(cfg.block_in, 42);
+        let shared = PredictionCache::default();
+        let first = AnalyticalBackend::with_cache(shared.clone());
+        let engine = Engine::for_config(&cfg).backend(first).build().unwrap();
+        engine.run(&graph, &EvalRequest::seeded(7)).unwrap();
+        let filled = shared.lock().unwrap().len();
+        assert!(filled > 0, "predictions must land in the shared cache");
+        let second = AnalyticalBackend::with_cache(shared.clone());
+        let engine2 = Engine::for_config(&cfg).backend(second).build().unwrap();
+        engine2.run(&graph, &EvalRequest::seeded(8)).unwrap();
+        assert_eq!(shared.lock().unwrap().len(), filled, "same layers, no new entries");
+    }
+
+    #[test]
+    fn memo_wrapper_reports_inner_identity() {
+        let memo = Arc::new(LayerMemo::in_memory());
+        let wrapped = MemoBackend::new(Box::new(TsimBackend::timing_only()), memo);
+        assert_eq!(wrapped.name(), "timing");
+        assert_eq!(wrapped.fidelity(), Fidelity::TimingOnly);
+        assert!(wrapped.capabilities().supports_memo);
+    }
+}

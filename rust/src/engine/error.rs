@@ -1,0 +1,94 @@
+//! Error taxonomy of the unified evaluation API.
+//!
+//! Every public entry point of `engine`, `runtime` and `sweep` returns
+//! `Result<_, VtaError>` instead of panicking on malformed input, so a
+//! serving layer built on top can shed bad requests instead of dying.
+//! The variants partition by *who* got it wrong:
+//!
+//! * [`VtaError::Config`] — the hardware description is invalid
+//!   (delegates to [`ConfigError`], the config subsystem's own taxonomy);
+//! * [`VtaError::Graph`] — the workload graph is structurally malformed;
+//! * [`VtaError::InvalidRequest`] — the per-evaluation request does not
+//!   fit the prepared `(config, graph)` pair (e.g. wrong input length);
+//! * [`VtaError::Unsupported`] — a coherent request that the *chosen
+//!   backend* cannot satisfy (capability mismatch: memo on a
+//!   memo-less backend, a sweep over a backend that produces no cycles);
+//! * [`VtaError::Io`] — cache/spill filesystem failures.
+//!
+//! Panics remain reserved for internal invariant violations (simulator
+//! deadlock detection, broken program images) — states a well-formed
+//! request can never reach.
+
+use crate::config::ConfigError;
+use std::fmt;
+use std::io;
+
+/// Unified error type of the `Engine`/`Backend` evaluation surface.
+#[derive(Debug)]
+pub enum VtaError {
+    /// The hardware configuration failed validation.
+    Config(ConfigError),
+    /// The graph is structurally malformed (bad arity, dangling edges,
+    /// shape-inconsistent operators, wrong weight-tensor sizes).
+    Graph(String),
+    /// The request does not fit the prepared `(config, graph)` pair.
+    InvalidRequest(String),
+    /// The chosen backend cannot satisfy this (otherwise coherent)
+    /// request — a capability mismatch, not a malformed input.
+    Unsupported(String),
+    /// Result-cache / memo-spill I/O failure.
+    Io(io::Error),
+}
+
+impl fmt::Display for VtaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VtaError::Config(e) => write!(f, "invalid configuration: {e}"),
+            VtaError::Graph(msg) => write!(f, "malformed graph: {msg}"),
+            VtaError::InvalidRequest(msg) => write!(f, "invalid request: {msg}"),
+            VtaError::Unsupported(msg) => write!(f, "unsupported: {msg}"),
+            VtaError::Io(e) => write!(f, "i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for VtaError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            VtaError::Config(e) => Some(e),
+            VtaError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<ConfigError> for VtaError {
+    fn from(e: ConfigError) -> VtaError {
+        VtaError::Config(e)
+    }
+}
+
+impl From<io::Error> for VtaError {
+    fn from(e: io::Error) -> VtaError {
+        VtaError::Io(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_prefixed_by_category() {
+        assert!(VtaError::Graph("x".into()).to_string().starts_with("malformed graph"));
+        assert!(VtaError::InvalidRequest("x".into()).to_string().starts_with("invalid request"));
+        assert!(VtaError::Unsupported("x".into()).to_string().starts_with("unsupported"));
+    }
+
+    #[test]
+    fn config_errors_convert_and_chain() {
+        let err: VtaError = ConfigError::NotPow2 { field: "batch", value: 3 }.into();
+        assert!(matches!(err, VtaError::Config(_)));
+        assert!(std::error::Error::source(&err).is_some());
+    }
+}

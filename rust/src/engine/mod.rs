@@ -1,0 +1,556 @@
+//! Unified evaluation API: one [`Engine`], many [`Backend`]s, a single
+//! fidelity ladder.
+//!
+//! The stack grew four ways to evaluate a workload on a configuration —
+//! functional *fsim*, cycle-accurate *tsim*, the timing-only tsim fast
+//! path, and the analytical cycle model — and they used to be reached
+//! through four inconsistent entry points stitched together with boolean
+//! flags. This module makes the fidelity level a first-class choice: a
+//! [`Backend`] declares where it sits on the [`Fidelity`] ladder and
+//! what it can produce ([`Capabilities`]), and the [`Engine`] builder
+//! owns the plumbing (layer memo, tuning knobs, perf reports) that used
+//! to be distributed across `SessionOptions`, `EvalOptions` and ad-hoc
+//! flags. Swapping fidelity is swapping a backend — nothing else about
+//! the client changes:
+//!
+//! ```no_run
+//! use vta::engine::{BackendKind, Engine, EvalRequest};
+//! use vta::config::presets;
+//! use vta::workloads;
+//!
+//! let cfg = presets::default_config();
+//! let graph = workloads::micro_resnet(16, 1);
+//! for kind in BackendKind::ALL {
+//!     let engine = Engine::for_config(&cfg).backend_kind(kind).build().unwrap();
+//!     let eval = engine.run(&graph, &EvalRequest::seeded(7)).unwrap();
+//!     println!("{kind}: fidelity {} cycles {:?}", eval.fidelity, eval.cycles);
+//! }
+//! ```
+//!
+//! The built-in backends and where they sit:
+//!
+//! | backend | fidelity | outputs | cycles | memo |
+//! |---|---|---|---|---|
+//! | [`AnalyticalBackend`] | `Analytical` | – | predicted | – |
+//! | [`TsimBackend::timing_only`] | `TimingOnly` | – | exact | yes |
+//! | [`TsimBackend::functional`] | `CycleAccurate` | exact | exact | yes |
+//! | [`FsimBackend`] | `Functional` | exact | – | – |
+//!
+//! The ladder ranks how much of the machine each backend exercises on
+//! the way to its numbers: the analytical model touches none of it,
+//! timing-only tsim runs the real timing wheel, cycle-accurate tsim adds
+//! the full datapath, and fsim is the pure behavioral reference the
+//! others are validated against. Two invariants connect the rungs
+//! (pinned by `rust/tests/backend_parity.rs`): every rung that produces
+//! outputs produces *bit-identical* outputs, and every tsim rung
+//! produces *bit-identical* cycles.
+//!
+//! Every entry point returns a `Result` with the [`VtaError`] taxonomy,
+//! so layers above (the sweep service today, a serving tier tomorrow)
+//! can reject bad requests without dying. The memo fast path is
+//! composed in as a wrapper backend ([`MemoBackend`]) rather than a
+//! flag; the builder's [`EngineBuilder::memo`] applies the wrapper for
+//! you.
+
+pub mod backends;
+mod error;
+
+pub use backends::{AnalyticalBackend, FsimBackend, MemoBackend, TsimBackend};
+pub use error::VtaError;
+
+use crate::compiler::graph::Graph;
+use crate::config::VtaConfig;
+use crate::exec::ExecCounters;
+use crate::memo::LayerMemo;
+use crate::runtime::LayerStat;
+use crate::sim::activity::ActivityTrace;
+use crate::sim::PerfReport;
+use std::fmt;
+use std::sync::Arc;
+
+/// The fidelity ladder, ordered by how much of the simulated machine a
+/// backend exercises: `Analytical < TimingOnly < CycleAccurate <
+/// Functional`. `Ord` follows declaration order, so clients can demand
+/// a floor (`backend.fidelity() >= Fidelity::TimingOnly`) instead of
+/// naming backends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Fidelity {
+    /// Closed-form cycle model; microseconds per network, no simulation.
+    Analytical,
+    /// Real timing wheel, datapath skipped: exact cycles, no tensors.
+    TimingOnly,
+    /// Full cycle-accurate simulation: exact cycles and exact tensors.
+    CycleAccurate,
+    /// Pure behavioral reference: exact tensors, no timing model.
+    Functional,
+}
+
+impl Fidelity {
+    /// Every rung, lowest fidelity first.
+    pub const LADDER: [Fidelity; 4] =
+        [Fidelity::Analytical, Fidelity::TimingOnly, Fidelity::CycleAccurate, Fidelity::Functional];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Fidelity::Analytical => "analytical",
+            Fidelity::TimingOnly => "timing-only",
+            Fidelity::CycleAccurate => "cycle-accurate",
+            Fidelity::Functional => "functional",
+        }
+    }
+}
+
+impl fmt::Display for Fidelity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad(self.name())
+    }
+}
+
+/// What a backend can produce. Declared up front so clients (and the
+/// [`EngineBuilder`]) can reject capability mismatches before any work
+/// happens, instead of discovering a `None` mid-pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Capabilities {
+    /// [`Evaluation::output`] carries the network's output tensor.
+    pub produces_outputs: bool,
+    /// [`Evaluation::cycles`] carries a cycle count (measured or
+    /// predicted, per the backend's [`Fidelity`]).
+    pub produces_cycles: bool,
+    /// The backend honors a shared [`LayerMemo`] (see [`MemoBackend`]).
+    pub supports_memo: bool,
+}
+
+/// The built-in backends, as a closed enum for CLI parsing and plumbing
+/// through options structs. [`BackendKind::instantiate`] turns a kind
+/// into the live [`Backend`]; custom backends skip the enum and go
+/// straight to [`EngineBuilder::backend`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Behavioral simulator ([`FsimBackend`]).
+    Fsim,
+    /// Cycle-accurate simulator, functional datapath on ([`TsimBackend`]).
+    Tsim,
+    /// Cycle-accurate simulator, timing only ([`TsimBackend`]).
+    TsimTiming,
+    /// Analytical cycle model ([`AnalyticalBackend`]).
+    Analytical,
+}
+
+impl BackendKind {
+    /// Every built-in backend, lowest fidelity first.
+    pub const ALL: [BackendKind; 4] =
+        [BackendKind::Analytical, BackendKind::TsimTiming, BackendKind::Tsim, BackendKind::Fsim];
+
+    /// Parse a CLI name: `fsim`, `tsim`, `timing` (alias `timing-only`),
+    /// `model` (alias `analytical`).
+    pub fn parse(s: &str) -> Result<BackendKind, VtaError> {
+        match s {
+            "fsim" => Ok(BackendKind::Fsim),
+            "tsim" | "functional" => Ok(BackendKind::Tsim),
+            "timing" | "timing-only" => Ok(BackendKind::TsimTiming),
+            "model" | "analytical" => Ok(BackendKind::Analytical),
+            other => Err(VtaError::InvalidRequest(format!(
+                "unknown backend '{other}' (expected fsim, tsim, timing, or model)"
+            ))),
+        }
+    }
+
+    /// The canonical CLI name ([`BackendKind::parse`] round-trips it).
+    pub fn cli_name(self) -> &'static str {
+        match self {
+            BackendKind::Fsim => "fsim",
+            BackendKind::Tsim => "tsim",
+            BackendKind::TsimTiming => "timing",
+            BackendKind::Analytical => "model",
+        }
+    }
+
+    /// Where this backend sits on the ladder.
+    pub fn fidelity(self) -> Fidelity {
+        match self {
+            BackendKind::Fsim => Fidelity::Functional,
+            BackendKind::Tsim => Fidelity::CycleAccurate,
+            BackendKind::TsimTiming => Fidelity::TimingOnly,
+            BackendKind::Analytical => Fidelity::Analytical,
+        }
+    }
+
+    /// Build the live backend for this kind.
+    pub fn instantiate(self) -> Box<dyn Backend> {
+        match self {
+            BackendKind::Fsim => Box::new(FsimBackend),
+            BackendKind::Tsim => Box::new(TsimBackend::functional()),
+            BackendKind::TsimTiming => Box::new(TsimBackend::timing_only()),
+            BackendKind::Analytical => Box::new(AnalyticalBackend::new()),
+        }
+    }
+}
+
+impl Default for BackendKind {
+    /// Cycle-accurate functional tsim — the historical default target.
+    fn default() -> BackendKind {
+        BackendKind::Tsim
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad(self.cli_name())
+    }
+}
+
+/// Session tuning knobs shared by every simulating backend; orthogonal
+/// to the fidelity choice (they select *which* program is compiled and
+/// whether activity is traced, not how faithfully it runs).
+#[derive(Debug, Clone)]
+pub struct Tuning {
+    /// Record per-cycle activity intervals (Figs 3/4).
+    pub trace: bool,
+    /// TPS-optimized tilings; `false` uses the fallback schedule.
+    pub tps: bool,
+    /// Improved double buffering (eliminate redundant input loads).
+    pub dbuf_reuse: bool,
+}
+
+impl Default for Tuning {
+    fn default() -> Tuning {
+        Tuning { trace: false, tps: true, dbuf_reuse: true }
+    }
+}
+
+/// How the evaluation's input activation is supplied.
+#[derive(Debug, Clone)]
+pub enum InputSpec {
+    /// Explicit `[batch][c][h][w]` int8 data; the length must match the
+    /// prepared graph or the evaluation fails with
+    /// [`VtaError::InvalidRequest`].
+    Data(Vec<i8>),
+    /// Seeded random data (`Pcg32`), materialized only by backends that
+    /// actually read tensors — timing-only and analytical evaluations
+    /// never pay for input generation.
+    Seeded(u64),
+}
+
+/// One evaluation request against a prepared `(config, graph)` pair.
+#[derive(Debug, Clone)]
+pub struct EvalRequest {
+    pub input: InputSpec,
+}
+
+impl EvalRequest {
+    /// Evaluate with explicit input data.
+    pub fn with_data(data: Vec<i8>) -> EvalRequest {
+        EvalRequest { input: InputSpec::Data(data) }
+    }
+
+    /// Evaluate with seeded random input (the sweep's convention: the
+    /// seed is part of the design point's identity).
+    pub fn seeded(seed: u64) -> EvalRequest {
+        EvalRequest { input: InputSpec::Seeded(seed) }
+    }
+}
+
+/// A `(config, graph)` pair validated and bound for evaluation by
+/// [`Backend::prepare`]. Holds everything an [`Backend::eval`] call
+/// needs; build once, evaluate many times.
+pub struct Prepared<'g> {
+    pub cfg: VtaConfig,
+    pub graph: &'g Graph,
+    pub tuning: Tuning,
+    /// Shared layer memo injected by [`MemoBackend`] (`None` otherwise).
+    pub memo: Option<Arc<LayerMemo>>,
+}
+
+/// Everything one evaluation produced. Fields gated by the backend's
+/// [`Capabilities`] are `Option`/empty rather than garbage.
+#[derive(Debug)]
+pub struct Evaluation {
+    /// Rung of the backend that produced this evaluation.
+    pub fidelity: Fidelity,
+    /// Name of the producing backend (diagnostics).
+    pub backend: &'static str,
+    /// Cycle count: tsim-measured at `TimingOnly`/`CycleAccurate`
+    /// fidelity, model-predicted at `Analytical`, `None` from fsim.
+    pub cycles: Option<u64>,
+    /// Final network output, `[batch][c][h][w]` int8 (`None` when the
+    /// backend does not compute tensors).
+    pub output: Option<Vec<i8>>,
+    /// Execution counters (zeroed at `Analytical` fidelity, which runs
+    /// nothing).
+    pub counters: ExecCounters,
+    /// Per-layer breakdown (cycle-only at `Analytical` fidelity).
+    pub layer_stats: Vec<LayerStat>,
+    /// Per-module performance report (tsim backends only).
+    pub report: Option<PerfReport>,
+    /// Activity trace, when [`Tuning::trace`] was set on a tsim backend.
+    pub trace: Option<ActivityTrace>,
+}
+
+/// An evaluation strategy at a declared fidelity. Implementations are
+/// stateless or internally synchronized (`Send + Sync`): one backend
+/// instance may serve many engines and threads.
+pub trait Backend: Send + Sync {
+    /// Short stable name (CLI/report label).
+    fn name(&self) -> &'static str;
+
+    /// Rung on the [`Fidelity`] ladder.
+    fn fidelity(&self) -> Fidelity;
+
+    /// What this backend produces and supports.
+    fn capabilities(&self) -> Capabilities;
+
+    /// Validate `(cfg, graph)` and bind them for evaluation. The default
+    /// performs the shared checks ([`prepare_common`]); backends with
+    /// extra constraints override and extend.
+    fn prepare<'g>(
+        &self,
+        cfg: &VtaConfig,
+        graph: &'g Graph,
+        tuning: &Tuning,
+    ) -> Result<Prepared<'g>, VtaError> {
+        prepare_common(cfg, graph, tuning)
+    }
+
+    /// Evaluate one request against a prepared pair.
+    fn eval(&self, prepared: &Prepared<'_>, request: &EvalRequest) -> Result<Evaluation, VtaError>;
+}
+
+/// The shared half of [`Backend::prepare`]: configuration validity, the
+/// square-block constraint of graph execution, and graph structure.
+pub fn prepare_common<'g>(
+    cfg: &VtaConfig,
+    graph: &'g Graph,
+    tuning: &Tuning,
+) -> Result<Prepared<'g>, VtaError> {
+    cfg.validate()?;
+    if cfg.block_in != cfg.block_out {
+        return Err(VtaError::Unsupported(format!(
+            "network execution requires BLOCK_IN == BLOCK_OUT (activation tiles feed both \
+             GEMM operands); got {}x{}",
+            cfg.block_in, cfg.block_out
+        )));
+    }
+    graph.validate().map_err(VtaError::Graph)?;
+    Ok(Prepared { cfg: cfg.clone(), graph, tuning: tuning.clone(), memo: None })
+}
+
+/// The evaluation front door: one configuration, one backend, the memo
+/// and tuning plumbing owned in one place. Build with
+/// [`Engine::for_config`]; evaluate with [`Engine::run`] (or
+/// [`Engine::prepare`] + [`Engine::eval`] to amortize validation over
+/// many requests against the same graph).
+pub struct Engine {
+    cfg: VtaConfig,
+    backend: Box<dyn Backend>,
+    tuning: Tuning,
+}
+
+impl Engine {
+    /// Start building an engine bound to `cfg`.
+    pub fn for_config(cfg: &VtaConfig) -> EngineBuilder {
+        EngineBuilder { cfg: cfg.clone(), backend: None, memo: None, tuning: Tuning::default() }
+    }
+
+    pub fn cfg(&self) -> &VtaConfig {
+        &self.cfg
+    }
+
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    pub fn fidelity(&self) -> Fidelity {
+        self.backend.fidelity()
+    }
+
+    pub fn capabilities(&self) -> Capabilities {
+        self.backend.capabilities()
+    }
+
+    /// Validate and bind a graph for repeated evaluation.
+    pub fn prepare<'g>(&self, graph: &'g Graph) -> Result<Prepared<'g>, VtaError> {
+        self.backend.prepare(&self.cfg, graph, &self.tuning)
+    }
+
+    /// Evaluate one request against a prepared graph.
+    pub fn eval(
+        &self,
+        prepared: &Prepared<'_>,
+        request: &EvalRequest,
+    ) -> Result<Evaluation, VtaError> {
+        self.backend.eval(prepared, request)
+    }
+
+    /// Prepare + evaluate in one call (the common single-shot path).
+    pub fn run(&self, graph: &Graph, request: &EvalRequest) -> Result<Evaluation, VtaError> {
+        self.eval(&self.prepare(graph)?, request)
+    }
+}
+
+/// Builder for [`Engine`]; see [`Engine::for_config`].
+pub struct EngineBuilder {
+    cfg: VtaConfig,
+    backend: Option<Box<dyn Backend>>,
+    memo: Option<Arc<LayerMemo>>,
+    tuning: Tuning,
+}
+
+impl EngineBuilder {
+    /// Select a custom backend (replaces any earlier selection).
+    pub fn backend(mut self, backend: impl Backend + 'static) -> EngineBuilder {
+        self.backend = Some(Box::new(backend));
+        self
+    }
+
+    /// Select a built-in backend by kind.
+    pub fn backend_kind(mut self, kind: BackendKind) -> EngineBuilder {
+        self.backend = Some(kind.instantiate());
+        self
+    }
+
+    /// Share a layer memo across evaluations: the backend is wrapped in
+    /// [`MemoBackend`] at [`EngineBuilder::build`]. Fails the build if
+    /// the backend does not support memoization.
+    pub fn memo(mut self, memo: Arc<LayerMemo>) -> EngineBuilder {
+        self.memo = Some(memo);
+        self
+    }
+
+    /// Record per-cycle activity intervals (tsim backends).
+    pub fn trace(mut self, on: bool) -> EngineBuilder {
+        self.tuning.trace = on;
+        self
+    }
+
+    /// TPS-optimized tilings (`false` = fallback schedule).
+    pub fn tps(mut self, on: bool) -> EngineBuilder {
+        self.tuning.tps = on;
+        self
+    }
+
+    /// Improved double buffering (`false` = original TVM behaviour).
+    pub fn dbuf_reuse(mut self, on: bool) -> EngineBuilder {
+        self.tuning.dbuf_reuse = on;
+        self
+    }
+
+    /// Validate the configuration and capability choices; returns the
+    /// ready engine. The default backend (when none was selected) is
+    /// cycle-accurate functional tsim.
+    pub fn build(self) -> Result<Engine, VtaError> {
+        self.cfg.validate()?;
+        let mut backend = self.backend.unwrap_or_else(|| BackendKind::default().instantiate());
+        if let Some(memo) = self.memo {
+            if !backend.capabilities().supports_memo {
+                return Err(VtaError::Unsupported(format!(
+                    "backend '{}' does not support the layer memo",
+                    backend.name()
+                )));
+            }
+            if self.tuning.trace {
+                return Err(VtaError::Unsupported(
+                    "activity tracing requires unmemoized simulation (memo hits record no \
+                     activity intervals)"
+                        .into(),
+                ));
+            }
+            backend = Box::new(MemoBackend::new(backend, memo));
+        }
+        Ok(Engine { cfg: self.cfg, backend, tuning: self.tuning })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::workloads;
+
+    #[test]
+    fn fidelity_ladder_is_ordered() {
+        assert!(Fidelity::Analytical < Fidelity::TimingOnly);
+        assert!(Fidelity::TimingOnly < Fidelity::CycleAccurate);
+        assert!(Fidelity::CycleAccurate < Fidelity::Functional);
+        let mut sorted = Fidelity::LADDER;
+        sorted.sort();
+        assert_eq!(sorted, Fidelity::LADDER, "LADDER lists rungs in order");
+    }
+
+    #[test]
+    fn backend_kind_parse_roundtrips_and_rejects() {
+        for kind in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(kind.cli_name()).unwrap(), kind);
+        }
+        assert_eq!(BackendKind::parse("timing-only").unwrap(), BackendKind::TsimTiming);
+        assert_eq!(BackendKind::parse("analytical").unwrap(), BackendKind::Analytical);
+        assert!(matches!(BackendKind::parse("rtl"), Err(VtaError::InvalidRequest(_))));
+    }
+
+    #[test]
+    fn kinds_declare_coherent_capabilities() {
+        for kind in BackendKind::ALL {
+            let b = kind.instantiate();
+            assert_eq!(b.fidelity(), kind.fidelity());
+            let caps = b.capabilities();
+            // Only the simulating-with-datapath rungs produce outputs.
+            assert_eq!(
+                caps.produces_outputs,
+                matches!(kind, BackendKind::Fsim | BackendKind::Tsim)
+            );
+            assert_eq!(caps.produces_cycles, kind != BackendKind::Fsim);
+            assert_eq!(
+                caps.supports_memo,
+                matches!(kind, BackendKind::Tsim | BackendKind::TsimTiming)
+            );
+        }
+    }
+
+    #[test]
+    fn build_rejects_invalid_config() {
+        let mut cfg = presets::tiny_config();
+        cfg.axi_bytes = 3;
+        assert!(matches!(Engine::for_config(&cfg).build(), Err(VtaError::Config(_))));
+    }
+
+    #[test]
+    fn build_rejects_memo_on_memoless_backends() {
+        let cfg = presets::tiny_config();
+        let memo = Arc::new(LayerMemo::in_memory());
+        for kind in [BackendKind::Fsim, BackendKind::Analytical] {
+            let result = Engine::for_config(&cfg).backend_kind(kind).memo(memo.clone()).build();
+            let err = match result {
+                Ok(_) => panic!("memo-less backend {kind} must reject the memo"),
+                Err(e) => e,
+            };
+            assert!(matches!(err, VtaError::Unsupported(_)));
+        }
+    }
+
+    #[test]
+    fn build_rejects_trace_plus_memo() {
+        let cfg = presets::tiny_config();
+        let memo = Arc::new(LayerMemo::in_memory());
+        assert!(matches!(
+            Engine::for_config(&cfg).memo(memo).trace(true).build(),
+            Err(VtaError::Unsupported(_))
+        ));
+    }
+
+    #[test]
+    fn prepare_rejects_non_square_blocks() {
+        let mut cfg = presets::tiny_config();
+        cfg.block_out = cfg.block_in * 2;
+        let graph = workloads::micro_resnet(cfg.block_in, 1);
+        let engine = Engine::for_config(&cfg).build().unwrap();
+        assert!(matches!(engine.prepare(&graph), Err(VtaError::Unsupported(_))));
+    }
+
+    #[test]
+    fn run_rejects_wrong_input_length() {
+        let cfg = presets::tiny_config();
+        let graph = workloads::micro_resnet(cfg.block_in, 1);
+        let engine = Engine::for_config(&cfg).build().unwrap();
+        let err = engine.run(&graph, &EvalRequest::with_data(vec![0; 3])).unwrap_err();
+        assert!(matches!(err, VtaError::InvalidRequest(_)));
+    }
+}

@@ -122,9 +122,37 @@ impl ExecCounters {
         ])
     }
 
-    /// Inverse of [`ExecCounters::to_json`]; `None` on any missing or
-    /// non-integer field.
+    /// The exact key set [`ExecCounters::to_json`] emits, in field
+    /// order. Public so serialization tests can mutate records
+    /// field-by-field.
+    pub const JSON_FIELDS: [&'static str; 11] = [
+        "insn_count",
+        "gemm_ops",
+        "macs",
+        "alu_ops",
+        "alu_elems",
+        "load_bytes_inp",
+        "load_bytes_wgt",
+        "load_bytes_acc",
+        "load_bytes_uop",
+        "store_bytes",
+        "pad_tiles",
+    ];
+
+    /// Inverse of [`ExecCounters::to_json`]; `None` on any missing,
+    /// non-integer, or **unknown** field. Rejecting unknown keys makes
+    /// the roundtrip lossless: a record that carries more than this
+    /// struct can represent (e.g. a counter added by a future schema)
+    /// is refused instead of silently dropped, so
+    /// `from_json(to_json(c)) == Some(c)` and nothing else parses
+    /// (property-tested in `rust/tests/prop_invariants.rs`).
     pub fn from_json(j: &Json) -> Option<ExecCounters> {
+        let map = j.as_object()?;
+        if map.len() != Self::JSON_FIELDS.len()
+            || !Self::JSON_FIELDS.iter().all(|f| map.contains_key(*f))
+        {
+            return None;
+        }
         let int = |name: &str| j.get(name).and_then(|v| v.as_i64()).map(|v| v as u64);
         Some(ExecCounters {
             insn_count: int("insn_count")?,

@@ -18,6 +18,7 @@
 pub mod analysis;
 pub mod compiler;
 pub mod config;
+pub mod engine;
 pub mod exec;
 pub mod floorplan;
 pub mod fsim;
@@ -32,3 +33,5 @@ pub mod util;
 pub mod workloads;
 pub mod sim;
 pub mod trace;
+
+pub use engine::VtaError;

@@ -12,13 +12,12 @@
 
 use vta::analysis::area;
 use vta::config::{presets, VtaConfig};
+use vta::engine::{BackendKind, Engine, EvalRequest};
 use vta::floorplan;
 use vta::repro;
-use vta::runtime::{Session, SessionOptions, Target};
 use vta::sweep::{self, GridSpec, SweepOptions, WorkloadSpec};
 use vta::util::cli::Args;
 use vta::util::json::{obj, Json};
-use vta::util::rng::Pcg32;
 use vta::util::stats;
 use vta::workloads;
 
@@ -27,15 +26,18 @@ fn usage() -> ! {
         "usage: vta <command> [options]\n\
          \n\
          commands:\n\
-           run        --net resnet18|resnet34|resnet50|resnet101|mobilenet\n\
+           run        --net resnet18|resnet34|resnet50|resnet101|mobilenet|micro\n\
                       [--config default|original|tiny|large|wide32 | --config-file f.json]\n\
-                      [--target tsim|fsim] [--hw 224] [--seed 1] [--no-tps] [--no-dbuf]\n\
+                      [--backend fsim|tsim|timing|model] (the fidelity ladder: behavioral,\n\
+                        cycle-accurate, timing-only, analytical estimate)\n\
+                      [--hw 224] [--seed 1] [--no-tps] [--no-dbuf] [--trace]\n\
            repro      pipelining|ablation|fig2|fig3|fig10|fig11|fig12|fig13|all [--quick] [--out results]\n\
                       [--jobs N]  (fig13 runs on the parallel sweep engine)\n\
                       [--two-phase [--prune-epsilon E]]  (fig13: model-pruned grid, tsim-measured front)\n\
            sweep      [--quick] [--jobs N] [--resume|--fresh] [--cache sweep_cache.jsonl]\n\
                       [--out sweep_results.json] [--no-progress]\n\
-                      [--timing-only] (skip functional effects; cycles identical)\n\
+                      [--backend tsim|timing|model] (fidelity per point: functional tsim,\n\
+                        the timing-only fast path, or instant analytical estimates)\n\
                       [--no-memo] (disable the cross-point layer-result cache)\n\
                       [--two-phase] (analytical pre-model prunes the grid; tsim only on\n\
                         predicted-front survivors — the reported front stays 100% measured)\n\
@@ -80,41 +82,59 @@ fn build_net(name: &str, hw: usize, seed: u64) -> vta::compiler::graph::Graph {
     }
 }
 
+fn parse_backend(args: &Args, default: &str) -> BackendKind {
+    // Compatibility aliases for the pre-engine flags: `--target X`
+    // (run) and `--timing-only` (sweep) map onto `--backend`, which
+    // always wins when given explicitly.
+    let name = match (args.get("backend"), args.get("target")) {
+        (Some(b), _) => b,
+        (None, Some(t)) => t,
+        (None, None) if args.has_flag("timing-only") => "timing",
+        (None, None) => default,
+    };
+    BackendKind::parse(name).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    })
+}
+
 fn cmd_run(args: &Args) {
     let cfg = load_config(args);
     let net = args.get_or("net", "resnet18");
     let hw = args.get_usize("hw", 224);
     let seed = args.get_u64("seed", 1);
-    let target = match args.get_or("target", "tsim") {
-        "tsim" => Target::Tsim,
-        "fsim" => Target::Fsim,
-        other => {
-            eprintln!("unknown target '{other}'");
-            std::process::exit(1);
-        }
-    };
-    let opts = SessionOptions {
-        target,
-        trace: args.has_flag("trace"),
-        dbuf_reuse: !args.has_flag("no-dbuf"),
-        tps: !args.has_flag("no-tps"),
-        ..Default::default()
-    };
+    let backend = parse_backend(args, "tsim");
     let graph = build_net(net, hw, seed);
-    let mut rng = Pcg32::seeded(seed.wrapping_add(100));
-    let input = rng.i8_vec(cfg.batch * graph.input_shape.elems());
 
-    println!("running {net} (input {hw}x{hw}) on {} / {:?}", cfg.tag(), target);
+    println!(
+        "running {net} (input {hw}x{hw}) on {} / {backend} ({} fidelity)",
+        cfg.tag(),
+        backend.fidelity()
+    );
     let start = std::time::Instant::now();
-    let mut session = Session::new(&cfg, opts);
-    let out = session.run_graph(&graph, &input);
+    let engine = Engine::for_config(&cfg)
+        .backend_kind(backend)
+        .trace(args.has_flag("trace"))
+        .dbuf_reuse(!args.has_flag("no-dbuf"))
+        .tps(!args.has_flag("no-tps"))
+        .build()
+        .unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        });
+    let eval = engine
+        .run(&graph, &EvalRequest::seeded(seed.wrapping_add(100)))
+        .unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        });
     let wall = start.elapsed();
 
     println!(
         "\n{:<26} {:>5} {:>12} {:>12} {:>12} {:>12} {:>8}",
         "layer", "kind", "cycles", "macs", "dram rd", "dram wr", "insns"
     );
-    for l in &session.layer_stats {
+    for l in &eval.layer_stats {
         println!(
             "{:<26} {:>5} {:>12} {:>12} {:>12} {:>12} {:>8}{}",
             l.name.split(':').next_back().unwrap_or(&l.name),
@@ -127,12 +147,22 @@ fn cmd_run(args: &Args) {
             if l.on_cpu { "  [cpu]" } else { "" }
         );
     }
-    println!(
-        "\ntotal cycles: {} ({} sim wall)",
-        session.cycles(),
-        stats::fmt_ns(wall.as_nanos() as f64)
-    );
-    if let Some(r) = session.perf_report() {
+    let predicted = if eval.fidelity == vta::engine::Fidelity::Analytical {
+        " (predicted)"
+    } else {
+        ""
+    };
+    match eval.cycles {
+        Some(cycles) => println!(
+            "\ntotal cycles: {cycles}{predicted} ({} wall)",
+            stats::fmt_ns(wall.as_nanos() as f64)
+        ),
+        None => println!(
+            "\ntotal cycles: n/a (fsim has no timing model; {} wall)",
+            stats::fmt_ns(wall.as_nanos() as f64)
+        ),
+    }
+    if let Some(r) = &eval.report {
         println!(
             "macs: {}  macs/cycle: {:.1}  dram rd/wr: {} / {}",
             stats::si(r.exec.macs as f64),
@@ -142,7 +172,10 @@ fn cmd_run(args: &Args) {
         );
     }
     println!("scaled area: {:.2}", area::scaled_area(&cfg));
-    println!("output head: {:?}", &out[..out.len().min(8)]);
+    match &eval.output {
+        Some(out) => println!("output head: {:?}", &out[..out.len().min(8)]),
+        None => println!("output: none (the {} backend computes no tensors)", eval.backend),
+    }
 }
 
 fn cmd_repro(args: &Args) {
@@ -253,13 +286,18 @@ fn cmd_sweep(args: &Args) {
         eprintln!("error: the grid contains no valid design points");
         std::process::exit(1);
     }
-    let jobs = args.get_usize("jobs", 0);
+    // Resolved at option-construction time (0 = auto), so the engine
+    // never spawns more workers than the machine has cores.
+    let jobs = sweep::effective_jobs(args.get_usize("jobs", 0));
+    let backend = parse_backend(args, "tsim");
+    let analytical = backend == BackendKind::Analytical;
     let cache = args.get_or("cache", "sweep_cache.jsonl");
     let resume = args.has_flag("resume");
     // Guard the cache: without --resume the engine truncates the file,
     // which would silently destroy a previous (possibly hours-long)
-    // run's results. Require an explicit --fresh to overwrite.
-    if !resume && !args.has_flag("fresh") {
+    // run's results. Require an explicit --fresh to overwrite. An
+    // analytical sweep never touches the cache, so nothing to guard.
+    if !resume && !args.has_flag("fresh") && !analytical {
         if let Ok(meta) = std::fs::metadata(cache) {
             if meta.len() > 0 {
                 eprintln!(
@@ -283,25 +321,34 @@ fn cmd_sweep(args: &Args) {
         progress: !args.has_flag("no-progress"),
         // The layer memo is on by default (results are bit-identical
         // with or without it — see rust/tests/sweep_engine.rs);
-        // --timing-only additionally skips the functional datapath when
-        // only cycles/counters are needed.
+        // --backend timing additionally skips the functional datapath
+        // when only cycles/counters are needed.
         memo: !args.has_flag("no-memo"),
-        timing_only: args.has_flag("timing-only"),
+        backend,
         two_phase: two_phase.then(|| sweep::TwoPhaseOptions {
             epsilon: args.get_f64("prune-epsilon", vta::model::DEFAULT_PRUNE_EPSILON),
         }),
     };
     // "up to": the engine spawns min(workers, uncached points), which
     // is only known once the cache has been consulted.
+    let cache_note = if analytical {
+        " (analytical estimates; cache unused)".to_string()
+    } else {
+        format!(", cache {cache}")
+    };
+    let resume_note = if opts.resume && !analytical {
+        " (resume)"
+    } else {
+        ""
+    };
     println!(
-        "sweep: {} design points, up to {} workers, cache {cache}{}",
+        "sweep: {} design points, backend {backend}, up to {} workers{cache_note}{resume_note}",
         n_points,
-        sweep::effective_jobs(jobs).min(n_points),
-        if opts.resume { " (resume)" } else { "" }
+        jobs.min(n_points),
     );
     let start = std::time::Instant::now();
     let outcome = sweep::run(&spec, &opts).unwrap_or_else(|e| {
-        eprintln!("sweep I/O error: {e}");
+        eprintln!("sweep error: {e}");
         std::process::exit(1);
     });
     let wall = start.elapsed();
@@ -326,11 +373,17 @@ fn cmd_sweep(args: &Args) {
         let r = &outcome.results[p.id];
         println!("  {:<22} cycles={:<12} area={:.2}", r.config.tag(), r.cycles, r.scaled_area);
     }
+    let estimate_note = if analytical {
+        "  [analytical estimates, not measurements]"
+    } else {
+        ""
+    };
     println!(
-        "\n{} simulated, {} from cache in {}",
+        "\n{} evaluated ({} workers), {} from cache in {}{estimate_note}",
         outcome.simulated,
+        outcome.workers,
         outcome.cached,
-        stats::fmt_ns(wall.as_nanos() as f64)
+        stats::fmt_ns(wall.as_nanos() as f64),
     );
     if let Some(tp) = &opts.two_phase {
         println!(

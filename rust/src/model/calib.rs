@@ -13,8 +13,8 @@
 use super::{epsilon_for_ratio, predict_graph};
 use crate::compiler::graph::Graph;
 use crate::config::VtaConfig;
+use crate::engine::BackendKind;
 use crate::runtime::{Session, SessionOptions};
-use crate::util::rng::Pcg32;
 
 /// One predicted-vs-measured pair (a layer, or a whole network when
 /// `label` ends in `/total`).
@@ -87,17 +87,19 @@ impl CalibrationReport {
 }
 
 /// Calibrate one `(config, graph)` pair: simulate the network once
-/// (timing-only tsim), predict it with the analytical model, and pair
+/// (timing-only tsim — cycle counts are data-independent, so no input
+/// tensor is needed), predict it with the analytical model, and pair
 /// every accelerated layer plus the network total. CPU-fallback layers
 /// (0 cycles on both sides) are excluded.
-pub fn calibrate_graph(cfg: &VtaConfig, graph: &Graph, seed: u64) -> CalibrationReport {
+pub fn calibrate_graph(cfg: &VtaConfig, graph: &Graph) -> CalibrationReport {
     let mut session = Session::new(
         cfg,
-        SessionOptions { timing_only: true, ..SessionOptions::default() },
-    );
-    let mut rng = Pcg32::seeded(seed);
-    let input = rng.i8_vec(cfg.batch * graph.input_shape.elems());
-    session.run_graph(graph, &input);
+        SessionOptions { backend: BackendKind::TsimTiming, ..SessionOptions::default() },
+    )
+    .expect("calibration runs on validated configs");
+    // Timing-only sessions never read tensor data; an empty input skips
+    // generation and staging entirely.
+    session.run_graph(graph, &[]).expect("calibration graphs are well-formed");
 
     let prediction = predict_graph(cfg, graph);
     assert_eq!(

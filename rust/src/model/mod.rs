@@ -13,7 +13,8 @@
 //! * **compute term**: GEMM/ALU busy cycles from the exact loop shapes
 //!   the lowering emits (`uops × lp_out × lp_in`), at the configuration's
 //!   initiation intervals (II = 1/4 GEMM, 1/2/4/5 ALU) plus the pipeline
-//!   fill per instruction ([`sim::GEMM_PIPE_FILL`]/[`sim::ALU_PIPE_FILL`]);
+//!   fill per instruction ([`GEMM_PIPE_FILL`](crate::sim::GEMM_PIPE_FILL) /
+//!   [`ALU_PIPE_FILL`](crate::sim::ALU_PIPE_FILL));
 //! * **token-pipeline overlap**: the load, compute and store stages run
 //!   concurrently under dependency tokens, so a double-buffered layer
 //!   costs ≈ `max(read-channel, compute, write-channel)` plus a

@@ -9,26 +9,27 @@
 use crate::analysis::{area, gantt, roofline};
 use crate::compiler::graph::Graph;
 use crate::config::{presets, VtaConfig};
-use crate::runtime::{Session, SessionOptions, Target};
+use crate::engine::BackendKind;
+use crate::runtime::{Session, SessionOptions};
 use crate::sweep;
 use crate::util::rng::Pcg32;
 use crate::util::stats;
 use crate::workloads;
 
-/// Run a graph on tsim under `opts`, returning (cycles, session).
+/// Run a graph on tsim under `opts`, returning the finished session.
 fn run_tsim(graph: &Graph, cfg: &VtaConfig, opts: SessionOptions, seed: u64) -> Session {
-    let mut s = Session::new(cfg, SessionOptions { target: Target::Tsim, ..opts });
-    let mut rng = Pcg32::seeded(seed);
-    let input = rng.i8_vec(cfg.batch * graph.input_shape.elems());
-    s.run_graph(graph, &input);
-    s
+    run_sim(graph, cfg, SessionOptions { backend: BackendKind::Tsim, ..opts }, seed)
 }
 
 fn run_fsim(graph: &Graph, cfg: &VtaConfig, opts: SessionOptions, seed: u64) -> Session {
-    let mut s = Session::new(cfg, SessionOptions { target: Target::Fsim, ..opts });
+    run_sim(graph, cfg, SessionOptions { backend: BackendKind::Fsim, ..opts }, seed)
+}
+
+fn run_sim(graph: &Graph, cfg: &VtaConfig, opts: SessionOptions, seed: u64) -> Session {
+    let mut s = Session::new(cfg, opts).expect("repro presets are valid configs");
     let mut rng = Pcg32::seeded(seed);
     let input = rng.i8_vec(cfg.batch * graph.input_shape.elems());
-    s.run_graph(graph, &input);
+    s.run_graph(graph, &input).expect("repro workloads are well-formed");
     s
 }
 
@@ -331,14 +332,14 @@ pub fn fig13_jobs(quick: bool, jobs: usize) -> Vec<Fig13Row> {
     // Stream progress as points land (the full grid runs for hours);
     // the row table below is re-printed in grid order at the end.
     // The figure consumes only cycles/area, so run the memoized
-    // timing-only fast path — bit-identical metrics (the invariant
+    // timing-only backend — bit-identical metrics (the invariant
     // rust/tests/sweep_engine.rs asserts), at a fraction of the wall
     // clock: repeated layer shapes across the grid simulate once.
     let opts = sweep::SweepOptions {
         jobs,
         progress: true,
         memo: true,
-        timing_only: true,
+        backend: BackendKind::TsimTiming,
         ..Default::default()
     };
     let outcome = sweep::run(&spec, &opts).expect("in-memory sweep performs no I/O");
@@ -380,7 +381,7 @@ pub fn fig13_two_phase(quick: bool, jobs: usize, epsilon: f64) -> Vec<Fig13Row> 
         jobs,
         progress: true,
         memo: true,
-        timing_only: true,
+        backend: BackendKind::TsimTiming,
         two_phase: Some(sweep::TwoPhaseOptions { epsilon }),
         ..Default::default()
     };

@@ -6,10 +6,14 @@
 //! convolution) — "thus ensuring that a DNN can be executed on VTA even
 //! if the accelerator doesn't support all layers".
 //!
-//! Two sweep fast paths thread through here (see `crate::memo` and
-//! DESIGN.md §Layer memo):
+//! The session is the low-level graph executor behind the simulating
+//! backends of [`crate::engine`] — pick a fidelity by picking a
+//! [`BackendKind`] (the preferred front door is
+//! [`Engine`](crate::engine::Engine), which owns the memo and report
+//! plumbing). Two sweep fast paths thread through here (see
+//! `crate::memo` and DESIGN.md §Layer memo):
 //!
-//! * **timing-only** ([`SessionOptions::timing_only`]): tsim computes
+//! * **timing-only** ([`BackendKind::TsimTiming`]): tsim computes
 //!   cycles and execution counters bit-identically but skips all
 //!   functional datapath effects (and the data staging that feeds them);
 //! * **layer memo** ([`SessionOptions::memo`]): per-layer results are
@@ -18,6 +22,9 @@
 //!   entirely; in functional mode a hit replays the program through the
 //!   exec core (outputs stay bit-exact) and only the timing wheel is
 //!   skipped.
+//!
+//! All public entry points here return [`VtaError`] on malformed input
+//! instead of panicking.
 
 pub mod pjrt;
 
@@ -31,25 +38,22 @@ use crate::compiler::layout::{
 };
 use crate::compiler::tps::{self, Tiling};
 use crate::config::VtaConfig;
+use crate::engine::{BackendKind, VtaError};
 use crate::exec::ExecCounters;
 use crate::fsim::Fsim;
 use crate::mem::{Dram, DramRegion};
 use crate::memo::{sig, LayerMemo, LayerRecord, LayerSig};
+use crate::sim::activity::ActivityTrace;
 use crate::sim::{PerfReport, Tsim};
 use crate::util::bitfield::clog2;
 use std::sync::Arc;
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Target {
-    /// Behavioral simulation (no timing).
-    Fsim,
-    /// Cycle-accurate simulation.
-    Tsim,
-}
-
 #[derive(Debug, Clone)]
 pub struct SessionOptions {
-    pub target: Target,
+    /// Which simulator executes the graph. [`BackendKind::Analytical`]
+    /// is rejected by [`Session::new`]: the analytical model needs no
+    /// session (use [`Engine`](crate::engine::Engine) instead).
+    pub backend: BackendKind,
     /// Record per-cycle activity intervals (Figs 3/4).
     pub trace: bool,
     /// Improved double buffering: eliminate redundant input loads
@@ -58,12 +62,6 @@ pub struct SessionOptions {
     /// Use TPS-optimized tilings; `false` uses the fallback schedule
     /// (the Fig 10 baseline).
     pub tps: bool,
-    /// Timing-only simulation (tsim only): cycles, per-layer stats, and
-    /// execution counters are bit-identical to a functional run
-    /// (property-tested), but scratchpad/DRAM data movement is skipped —
-    /// [`Session::run_graph`]'s returned output is all zeros by
-    /// contract. Digest and golden checks are unavailable.
-    pub timing_only: bool,
     /// Layer-memo cache consulted before compiling/simulating each
     /// accelerator layer; shared (via `Arc`) across sessions and sweep
     /// worker threads. Tsim only; incompatible with `trace` (memo hits
@@ -74,11 +72,10 @@ pub struct SessionOptions {
 impl Default for SessionOptions {
     fn default() -> Self {
         SessionOptions {
-            target: Target::Tsim,
+            backend: BackendKind::Tsim,
             trace: false,
             dbuf_reuse: true,
             tps: true,
-            timing_only: false,
             memo: None,
         }
     }
@@ -98,7 +95,7 @@ pub struct LayerStat {
     pub on_cpu: bool,
 }
 
-enum Backend {
+enum Sim {
     F(Box<Fsim>),
     T(Box<Tsim>),
 }
@@ -107,10 +104,10 @@ pub struct Session {
     pub cfg: VtaConfig,
     pub opts: SessionOptions,
     pub dram: Dram,
-    backend: Backend,
+    sim: Sim,
     pub layer_stats: Vec<LayerStat>,
-    /// Cycles spliced in from memoized layers (absent from the backend's
-    /// own cycle counter).
+    /// Cycles spliced in from memoized layers (absent from the
+    /// simulator's own cycle counter).
     memo_cycles: u64,
     /// Counter deltas spliced in from memoized timing-only hits
     /// (functional-mode hits replay and accrue counters naturally).
@@ -118,65 +115,85 @@ pub struct Session {
 }
 
 impl Session {
-    pub fn new(cfg: &VtaConfig, opts: SessionOptions) -> Session {
-        assert_eq!(
-            cfg.block_in, cfg.block_out,
-            "network execution requires BLOCK_IN == BLOCK_OUT (activation \
-             tiles feed both GEMM operands); the paper's swept configs are square"
-        );
-        if opts.timing_only || opts.memo.is_some() {
-            assert_eq!(
-                opts.target,
-                Target::Tsim,
-                "timing-only / memoized execution is a tsim fast path \
-                 (fsim is already the functional fast path)"
-            );
+    pub fn new(cfg: &VtaConfig, opts: SessionOptions) -> Result<Session, VtaError> {
+        cfg.validate()?;
+        if cfg.block_in != cfg.block_out {
+            return Err(VtaError::Unsupported(format!(
+                "network execution requires BLOCK_IN == BLOCK_OUT (activation tiles feed \
+                 both GEMM operands); got {}x{}",
+                cfg.block_in, cfg.block_out
+            )));
         }
-        assert!(
-            !(opts.trace && opts.memo.is_some()),
-            "activity tracing requires unmemoized simulation (memo hits \
-             record no activity intervals)"
-        );
-        let backend = match opts.target {
-            Target::Fsim => Backend::F(Box::new(Fsim::new(cfg))),
-            Target::Tsim => {
-                let mut t = Tsim::new(cfg);
+        if opts.memo.is_some()
+            && !matches!(opts.backend, BackendKind::Tsim | BackendKind::TsimTiming)
+        {
+            return Err(VtaError::Unsupported(format!(
+                "the layer memo is a tsim fast path; backend '{}' does not support it",
+                opts.backend
+            )));
+        }
+        if opts.trace && opts.memo.is_some() {
+            return Err(VtaError::Unsupported(
+                "activity tracing requires unmemoized simulation (memo hits record no \
+                 activity intervals)"
+                    .into(),
+            ));
+        }
+        let sim = match opts.backend {
+            BackendKind::Fsim => Sim::F(Box::new(Fsim::new(cfg))),
+            BackendKind::Tsim | BackendKind::TsimTiming => {
+                let mut t = if opts.backend == BackendKind::TsimTiming {
+                    Tsim::timing_only(cfg)
+                } else {
+                    Tsim::new(cfg)
+                };
                 if opts.trace {
                     t.enable_trace();
                 }
-                t.set_timing_only(opts.timing_only);
-                Backend::T(Box::new(t))
+                Sim::T(Box::new(t))
+            }
+            BackendKind::Analytical => {
+                return Err(VtaError::Unsupported(
+                    "the analytical backend runs no simulation and needs no session; \
+                     evaluate it through the engine"
+                        .into(),
+                ))
             }
         };
-        Session {
+        Ok(Session {
             cfg: cfg.clone(),
             opts,
             dram: Dram::with_default_capacity(),
-            backend,
+            sim,
             layer_stats: Vec::new(),
             memo_cycles: 0,
             memo_extra: ExecCounters::default(),
-        }
+        })
+    }
+
+    /// Timing-only fast path active (see [`BackendKind::TsimTiming`]).
+    fn timing_only(&self) -> bool {
+        self.opts.backend == BackendKind::TsimTiming
     }
 
     /// Cumulative execution counters of the session: the active
-    /// backend's counters plus everything spliced in from memoized
+    /// simulator's counters plus everything spliced in from memoized
     /// layers — bit-identical to what an unmemoized run accumulates.
     pub fn exec_counters(&self) -> ExecCounters {
-        let mut c = match &self.backend {
-            Backend::F(f) => f.state.counters,
-            Backend::T(t) => t.core.counters,
+        let mut c = match &self.sim {
+            Sim::F(f) => f.state.counters,
+            Sim::T(t) => t.core.counters,
         };
         c.accumulate(&self.memo_extra);
         c
     }
 
-    /// Total simulated cycles including memo-spliced layers (tsim target
-    /// only; 0 under fsim).
+    /// Total simulated cycles including memo-spliced layers (tsim
+    /// backends only; 0 under fsim).
     pub fn cycles(&self) -> u64 {
-        match &self.backend {
-            Backend::F(_) => 0,
-            Backend::T(t) => t.cycle() + self.memo_cycles,
+        match &self.sim {
+            Sim::F(_) => 0,
+            Sim::T(t) => t.cycle() + self.memo_cycles,
         }
     }
 
@@ -185,9 +202,9 @@ impl Session {
     /// cover only the layers this session actually simulated (memoized
     /// layers produce no module activity).
     pub fn perf_report(&self) -> Option<PerfReport> {
-        match &self.backend {
-            Backend::F(_) => None,
-            Backend::T(t) => {
+        match &self.sim {
+            Sim::F(_) => None,
+            Sim::T(t) => {
                 let mut r = t.report();
                 r.cycles += self.memo_cycles;
                 r.exec.accumulate(&self.memo_extra);
@@ -197,20 +214,32 @@ impl Session {
     }
 
     pub fn tsim(&self) -> Option<&Tsim> {
-        match &self.backend {
-            Backend::F(_) => None,
-            Backend::T(t) => Some(t),
+        match &self.sim {
+            Sim::F(_) => None,
+            Sim::T(t) => Some(t),
+        }
+    }
+
+    /// Move the recorded activity trace out of the session (`None`
+    /// unless [`SessionOptions::trace`] was set on a tsim backend).
+    pub fn take_trace(&mut self) -> Option<ActivityTrace> {
+        if !self.opts.trace {
+            return None;
+        }
+        match &mut self.sim {
+            Sim::F(_) => None,
+            Sim::T(t) => Some(std::mem::replace(&mut t.trace, ActivityTrace::new(false))),
         }
     }
 
     fn run_program(&mut self, insns: &[crate::isa::Insn], label: &str) -> u64 {
-        match &mut self.backend {
-            Backend::F(f) => {
+        match &mut self.sim {
+            Sim::F(f) => {
                 let report = f.run(insns, &mut self.dram);
                 assert!(report.finished, "fsim program did not reach FINISH");
                 0
             }
-            Backend::T(t) => t.run(insns, &mut self.dram, label),
+            Sim::T(t) => t.run(insns, &mut self.dram, label),
         }
     }
 
@@ -220,9 +249,9 @@ impl Session {
     /// architectural state (the tsim/fsim equivalence invariant, which
     /// `rust/tests/stack_integration.rs` pins down).
     fn replay_program(&mut self, insns: &[crate::isa::Insn]) {
-        match &mut self.backend {
-            Backend::F(_) => unreachable!("memoization is tsim-only (asserted in Session::new)"),
-            Backend::T(t) => {
+        match &mut self.sim {
+            Sim::F(_) => unreachable!("memoization is tsim-only (rejected in Session::new)"),
+            Sim::T(t) => {
                 for insn in insns {
                     t.core.execute(insn, &mut self.dram);
                 }
@@ -251,7 +280,7 @@ impl Session {
             return (cycles, prog.insns.len(), prog.uop_count);
         };
         if let Some(rec) = memo.get(sig) {
-            if self.opts.timing_only {
+            if self.timing_only() {
                 self.memo_cycles += rec.cycles;
                 self.memo_extra.accumulate(&rec.exec);
                 return (rec.cycles, rec.prog_insns as usize, rec.prog_uops as usize);
@@ -291,21 +320,31 @@ impl Session {
     /// Run a graph end-to-end. `input` is `[batch][c][h][w]` int8 with
     /// `batch == cfg.batch`; returns the final node's output in the same
     /// layout (all zeros in timing-only mode, where outputs are not
-    /// computed by contract). Per-layer statistics accumulate in
-    /// `layer_stats`.
-    pub fn run_graph(&mut self, graph: &Graph, input: &[i8]) -> Vec<i8> {
+    /// computed by contract — timing-only sessions also accept an empty
+    /// `input`, since tensor data is never read). Per-layer statistics
+    /// accumulate in `layer_stats`. Malformed graphs and mis-sized
+    /// inputs return [`VtaError`] instead of panicking.
+    pub fn run_graph(&mut self, graph: &Graph, input: &[i8]) -> Result<Vec<i8>, VtaError> {
+        // One pass validates the graph and yields the shapes.
+        let shapes = graph.try_shapes().map_err(VtaError::Graph)?;
         let cfg = self.cfg.clone();
         let block = cfg.block_in;
         let batch = cfg.batch;
-        let shapes = graph.shapes();
-        assert_eq!(input.len(), batch * graph.input_shape.elems(), "input size mismatch");
+        let want = batch * graph.input_shape.elems();
+        if input.len() != want && !(self.timing_only() && input.is_empty()) {
+            return Err(VtaError::InvalidRequest(format!(
+                "input holds {} values but batch {batch} x input shape {:?} needs {want}",
+                input.len(),
+                graph.input_shape
+            )));
+        }
 
         // Stage the input activation. Timing-only runs never read tensor
         // data, so only the allocation (which fixes downstream DRAM
         // addresses) happens — packing 224x224 inputs is pure overhead.
         let mut regions: Vec<Option<DramRegion>> = vec![None; graph.nodes.len()];
         let r0 = self.alloc_activation(graph.input_shape);
-        if !self.opts.timing_only {
+        if !self.timing_only() {
             let tiled = pack_activation(input, batch, graph.input_shape, block);
             self.dram.write_i8(r0, &tiled);
         }
@@ -329,7 +368,7 @@ impl Session {
                         // Contributes zero cycles and no counters, so
                         // timing-only runs skip it entirely (its output
                         // is never consumed there).
-                        if !self.opts.timing_only {
+                        if !self.timing_only() {
                             self.run_conv_on_cpu(
                                 graph, i, &shapes, weights, *shift, *relu, in_region, out_region,
                             );
@@ -369,7 +408,7 @@ impl Session {
                     let wgt_len = in_shape.c.div_ceil(block) * p.k * p.k * batch * block;
                     let n = self.memo_run(layer_sig, &label, |s| {
                         let wr = s.dram.alloc(wgt_len, tileb);
-                        if !s.opts.timing_only {
+                        if !s.timing_only() {
                             let wgt = pack_depthwise_weights(
                                 weights, in_shape.c, p.k, p.k, batch, block,
                             );
@@ -442,11 +481,11 @@ impl Session {
 
         let out_shape = *shapes.last().unwrap();
         let out_region = regions.last().unwrap().unwrap();
-        if self.opts.timing_only {
-            return vec![0; batch * out_shape.elems()];
+        if self.timing_only() {
+            return Ok(vec![0; batch * out_shape.elems()]);
         }
         let tiled = self.dram.read_i8(out_region);
-        unpack_activation(&tiled, batch, out_shape, block)
+        Ok(unpack_activation(&tiled, batch, out_shape, block))
     }
 
     /// Choose the tiling for a conv per session options.
@@ -491,7 +530,7 @@ impl Session {
         let spec = *spec;
         self.memo_run(layer_sig, label, |s| {
             let wr = s.dram.alloc(wgt_len, cfg.wgt_tile_bytes());
-            if !s.opts.timing_only {
+            if !s.timing_only() {
                 let wgt = pack_conv_weights(
                     weights,
                     spec.c_out,

@@ -193,9 +193,25 @@ pub struct Tsim {
 
 impl Tsim {
     pub fn new(cfg: &VtaConfig) -> Tsim {
+        Tsim::with_mode(cfg, false)
+    }
+
+    /// Timing-only tsim: the timing wheel runs exactly as usual (cycle
+    /// counts are bit-identical — VTA timing never reads tensor data),
+    /// but instruction completion skips all datapath effects. See
+    /// [`CoreState::timing_only`]. The mode is fixed at construction —
+    /// each tsim instance sits on exactly one rung of the engine's
+    /// fidelity ladder.
+    pub fn timing_only(cfg: &VtaConfig) -> Tsim {
+        Tsim::with_mode(cfg, true)
+    }
+
+    fn with_mode(cfg: &VtaConfig, timing_only: bool) -> Tsim {
+        let mut core = CoreState::new(cfg);
+        core.timing_only = timing_only;
         Tsim {
             cfg: cfg.clone(),
-            core: CoreState::new(cfg),
+            core,
             trace: ActivityTrace::new(false),
             cycle: 0,
             program: Vec::new(),
@@ -223,14 +239,6 @@ impl Tsim {
 
     pub fn enable_trace(&mut self) {
         self.trace.enabled = true;
-    }
-
-    /// Timing-only mode: the timing wheel runs exactly as usual (cycle
-    /// counts are bit-identical — VTA timing never reads tensor data),
-    /// but instruction completion skips all datapath effects. See
-    /// [`CoreState::timing_only`].
-    pub fn set_timing_only(&mut self, on: bool) {
-        self.core.timing_only = on;
     }
 
     pub fn cycle(&self) -> u64 {

@@ -5,9 +5,12 @@
 //!
 //! * expands the grid into jobs and shards them across `std::thread`
 //!   workers through a work-stealing deque ([`queue::JobQueue`]);
-//! * evaluates each point by running the full stack — graph build,
-//!   compile, cycle-accurate tsim — exactly as the serial drivers do, so
-//!   a parallel sweep is bit-identical to a serial one;
+//! * evaluates each point through the unified evaluation API
+//!   ([`crate::engine`]): one [`BackendKind`] selects the fidelity —
+//!   cycle-accurate tsim (default), the timing-only fast path, or the
+//!   analytical model — and the whole stack (graph build, compile,
+//!   simulate) runs exactly as the serial drivers do, so a parallel
+//!   sweep is bit-identical to a serial one;
 //! * streams finished points into an on-disk resumable JSONL cache
 //!   ([`cache::ResultCache`]) keyed by a stable hash of the point, so a
 //!   killed sweep resumes where it stopped and warm re-runs are instant;
@@ -18,9 +21,9 @@
 //!   of (config, op, tiling), so repeated layer shapes — within one
 //!   network, across ResNet depths, and across input seeds — simulate
 //!   once per unique signature instead of once per grid cell. Combined
-//!   with [`SweepOptions::timing_only`] this collapses the Fig 13 grid
-//!   from O(cells × layers) simulations to O(unique (config, layer))
-//!   with bit-identical cycles and counters (see
+//!   with the timing-only backend this collapses the Fig 13 grid from
+//!   O(cells × layers) simulations to O(unique (config, layer)) with
+//!   bit-identical cycles and counters (see
 //!   `rust/tests/sweep_engine.rs`).
 //!
 //! Determinism: simulation is seeded and single-threaded per point, the
@@ -30,12 +33,19 @@
 //! fast paths (memo records are deterministic, so whichever worker
 //! simulates a layer first records the same values).
 //!
+//! Backends that produce no cycles ([`BackendKind::Fsim`]) are rejected
+//! with [`VtaError::Unsupported`] — the sweep's metrics are cycle
+//! counts. An [`BackendKind::Analytical`] sweep is allowed (instant
+//! whole-grid scoring); its results carry `measured: false` and are
+//! kept out of the on-disk cache so model estimates can never
+//! contaminate measured records.
+//!
 //! # Two-phase sweep (predict, then verify)
 //!
 //! With [`SweepOptions::two_phase`] set, the engine runs phase 1 first:
-//! the whole grid is scored by the analytical cycle model
-//! ([`crate::model`], microseconds per point), and only the points
-//! inside an epsilon-dominance band of the *predicted* Pareto front
+//! the whole grid is scored by the analytical backend (microseconds per
+//! point, one shared prediction cache), and only the points inside an
+//! epsilon-dominance band of the *predicted* Pareto front
 //! ([`pareto::epsilon_band_survivors`]) proceed to phase 2 — real tsim,
 //! with the memo and timing-only fast paths as usual. Properties:
 //!
@@ -65,14 +75,12 @@ pub use pareto::{ParetoFront, ParetoPoint};
 use crate::analysis::area;
 use crate::compiler::graph::Graph;
 use crate::config::VtaConfig;
+use crate::engine::backends::PredictionCache;
+use crate::engine::{AnalyticalBackend, BackendKind, Engine, EvalRequest, VtaError};
 use crate::memo::{LayerMemo, SIM_SCHEMA_VERSION};
-use crate::model;
-use crate::runtime::{Session, SessionOptions};
 use crate::util::json::{obj, Json};
-use crate::util::rng::Pcg32;
 use queue::JobQueue;
-use std::collections::{BTreeMap, HashMap};
-use std::io;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -85,7 +93,9 @@ use std::sync::Arc;
 /// simulator semantics misses cleanly.
 ///
 /// v1 = PR-1 records (implicit, unversioned); v2 = PR-2 versioned
-/// records; v3 = this scheme.
+/// records; v3 = this scheme (the optional `measured` flag added by the
+/// engine redesign defaults to `true`, so pre-existing v3 records still
+/// load).
 pub const SWEEP_SCHEMA_VERSION: u32 = 3;
 
 /// Stable 64-bit cache-key hash. One canonical implementation lives in
@@ -176,8 +186,10 @@ pub struct PointResult {
     pub workload: String,
     pub seed: u64,
     pub graph_seed: u64,
-    /// tsim-measured cycles — **never** a model estimate (the two-phase
-    /// engine's invariant: every stored/reported result is measured).
+    /// Cycle count. Tsim-measured whenever `measured` is `true` (the
+    /// two-phase engine's invariant: every cached/reported result is
+    /// measured); a model prediction only when the sweep itself ran the
+    /// analytical backend.
     pub cycles: u64,
     pub macs: u64,
     pub dram_rd: u64,
@@ -190,6 +202,11 @@ pub struct PointResult {
     /// the measured value so sweep artifacts double as model-calibration
     /// data (predicted vs measured per point).
     pub predicted_cycles: Option<u64>,
+    /// `true` when `cycles` came from simulation ([`BackendKind::Tsim`]
+    /// or [`BackendKind::TsimTiming`] — bit-identical by construction);
+    /// `false` for an analytical-backend sweep. Unmeasured results never
+    /// enter the on-disk cache.
+    pub measured: bool,
 }
 
 impl PointResult {
@@ -210,6 +227,7 @@ impl PointResult {
             ("dram_wr", Json::Int(self.dram_wr as i64)),
             ("insns", Json::Int(self.insns as i64)),
             ("area", Json::Float(self.scaled_area)),
+            ("measured", Json::Bool(self.measured)),
         ]);
         if let (Some(p), Json::Object(map)) = (self.predicted_cycles, &mut j) {
             map.insert("predicted_cycles".to_string(), Json::Int(p as i64));
@@ -220,7 +238,8 @@ impl PointResult {
     /// Parse one cache line; `None` on any malformed field *or* a
     /// schema version other than [`SWEEP_SCHEMA_VERSION`] (records from
     /// an older record format or simulator semantics are rejected, not
-    /// mixed in). `predicted_cycles` is optional.
+    /// mixed in). `predicted_cycles` is optional; `measured` defaults to
+    /// `true` (pre-redesign v3 records stored measured cycles only).
     pub fn from_json(j: &Json) -> Option<PointResult> {
         if j.get("schema")?.as_i64()? != SWEEP_SCHEMA_VERSION as i64 {
             return None;
@@ -238,26 +257,33 @@ impl PointResult {
             insns: int("insns")?,
             scaled_area: j.get("area")?.as_f64()?,
             predicted_cycles: int("predicted_cycles"),
+            measured: j.get("measured").and_then(|v| v.as_bool()).unwrap_or(true),
         })
     }
 }
 
-/// Per-point evaluation options (the sweep fast paths).
+/// Per-point evaluation options (fidelity + the shared fast-path
+/// plumbing), resolved into an [`Engine`] per evaluation.
 #[derive(Debug, Clone, Default)]
 pub struct EvalOptions {
-    /// Timing-only simulation: cycles and counters are bit-identical,
-    /// functional datapath effects are skipped (see
-    /// [`SessionOptions::timing_only`]).
-    pub timing_only: bool,
-    /// Shared layer-memo cache (see [`crate::memo`]).
+    /// Fidelity of the evaluation. [`BackendKind::Fsim`] is rejected
+    /// (no cycles); [`BackendKind::Tsim`] and [`BackendKind::TsimTiming`]
+    /// produce bit-identical results.
+    pub backend: BackendKind,
+    /// Shared layer-memo cache (see [`crate::memo`]); tsim backends only.
     pub memo: Option<Arc<LayerMemo>>,
+    /// Shared per-layer prediction cache for [`BackendKind::Analytical`]
+    /// evaluations — the model-side analogue of `memo`: repeated layer
+    /// signatures across a grid are estimated once. Ignored by the
+    /// simulating backends.
+    pub predictions: Option<PredictionCache>,
 }
 
-/// Evaluate one design point by running the full stack on tsim — the
-/// same path as the serial `repro` drivers (graph weights from
-/// `graph_seed`, input data from `seed`), so results are comparable and
-/// cacheable across entry points.
-pub fn evaluate(job: &SweepJob) -> PointResult {
+/// Evaluate one design point by running the full stack — the same path
+/// as the serial `repro` drivers (graph weights from `graph_seed`,
+/// input data from `seed`), so results are comparable and cacheable
+/// across entry points.
+pub fn evaluate(job: &SweepJob) -> Result<PointResult, VtaError> {
     evaluate_with_graph(job, &job.workload.build(job.graph_seed))
 }
 
@@ -266,41 +292,53 @@ pub fn evaluate(job: &SweepJob) -> PointResult {
 /// workers — synthetic weights depend only on `(workload, graph_seed)`,
 /// and regenerating ResNet-18's ~11M weights per design point (one copy
 /// per concurrent worker) would dominate small-config sweeps.
-pub fn evaluate_with_graph(job: &SweepJob, graph: &Graph) -> PointResult {
+pub fn evaluate_with_graph(job: &SweepJob, graph: &Graph) -> Result<PointResult, VtaError> {
     evaluate_with_graph_opts(job, graph, &EvalOptions::default())
 }
 
-/// [`evaluate_with_graph`] under explicit evaluation options. All modes
-/// produce bit-identical `PointResult`s (the memo/timing-only
-/// invariants, asserted by `rust/tests/sweep_engine.rs`).
+/// [`evaluate_with_graph`] under explicit evaluation options — a thin
+/// client of [`Engine`]. All simulating backends produce bit-identical
+/// `PointResult`s (the memo/timing-only invariants, asserted by
+/// `rust/tests/sweep_engine.rs`).
 pub fn evaluate_with_graph_opts(
     job: &SweepJob,
     graph: &Graph,
     eval: &EvalOptions,
-) -> PointResult {
-    let opts = SessionOptions {
-        timing_only: eval.timing_only,
-        memo: eval.memo.clone(),
-        ..SessionOptions::default()
+) -> Result<PointResult, VtaError> {
+    let mut builder = Engine::for_config(&job.cfg);
+    builder = match (&eval.backend, &eval.predictions) {
+        (BackendKind::Analytical, Some(cache)) => {
+            builder.backend(AnalyticalBackend::with_cache(cache.clone()))
+        }
+        _ => builder.backend_kind(eval.backend),
     };
-    let mut session = Session::new(&job.cfg, opts);
-    let mut rng = Pcg32::seeded(job.seed);
-    let input = rng.i8_vec(job.cfg.batch * graph.input_shape.elems());
-    session.run_graph(graph, &input);
-    let counters = session.exec_counters();
-    PointResult {
+    if let Some(memo) = &eval.memo {
+        builder = builder.memo(memo.clone());
+    }
+    let engine = builder.build()?;
+    let evaluation = engine.run(graph, &EvalRequest::seeded(job.seed))?;
+    let cycles = evaluation.cycles.ok_or_else(|| {
+        VtaError::Unsupported(format!(
+            "the sweep needs cycle counts and backend '{}' produces none \
+             (use tsim, timing, or model)",
+            evaluation.backend
+        ))
+    })?;
+    let measured = eval.backend != BackendKind::Analytical;
+    Ok(PointResult {
         config: job.cfg.clone(),
         workload: job.workload.id(),
         seed: job.seed,
         graph_seed: job.graph_seed,
-        cycles: session.cycles(),
-        macs: counters.macs,
-        dram_rd: counters.load_bytes_total(),
-        dram_wr: counters.store_bytes,
-        insns: counters.insn_count,
+        cycles,
+        macs: evaluation.counters.macs,
+        dram_rd: evaluation.counters.load_bytes_total(),
+        dram_wr: evaluation.counters.store_bytes,
+        insns: evaluation.counters.insn_count,
         scaled_area: area::scaled_area(&job.cfg),
-        predicted_cycles: None,
-    }
+        predicted_cycles: (!measured).then_some(cycles),
+        measured,
+    })
 }
 
 /// Phase-1 pruning options for the two-phase engine.
@@ -311,22 +349,29 @@ pub struct TwoPhaseOptions {
     /// `(1 + epsilon)` of the best prediction at no-larger area. Sound
     /// (front-preserving) whenever `epsilon ≥ ρ² − 1` for the model's
     /// multiplicative error ratio ρ — see
-    /// [`model::DEFAULT_PRUNE_EPSILON`] and DESIGN.md §Two-phase sweep.
+    /// [`model::DEFAULT_PRUNE_EPSILON`](crate::model::DEFAULT_PRUNE_EPSILON)
+    /// and DESIGN.md §Two-phase sweep.
     pub epsilon: f64,
 }
 
 impl Default for TwoPhaseOptions {
     fn default() -> Self {
-        TwoPhaseOptions { epsilon: model::DEFAULT_PRUNE_EPSILON }
+        TwoPhaseOptions { epsilon: crate::model::DEFAULT_PRUNE_EPSILON }
     }
 }
 
 /// Execution options for a sweep run.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct SweepOptions {
-    /// Worker threads; 0 = one per available core.
+    /// Worker-thread cap. The `Default` impl resolves this to the
+    /// available parallelism *at construction* (regression-tested),
+    /// and [`run`] additionally clamps to the pending-point count — a
+    /// single-CPU container never spawns a worker per job. `0` still
+    /// means "auto" for literal construction.
     pub jobs: usize,
-    /// JSONL cache file; `None` keeps results in memory only.
+    /// JSONL cache file; `None` keeps results in memory only. Ignored
+    /// (forced in-memory) by analytical-backend sweeps so predictions
+    /// never land in a measured-results cache.
     pub cache_path: Option<PathBuf>,
     /// Load existing cache records and append, instead of truncating.
     pub resume: bool,
@@ -335,15 +380,33 @@ pub struct SweepOptions {
     /// Share per-layer simulation results across all points and workers
     /// (see [`crate::memo`]). With a file-backed cache the memo spills
     /// to `<cache stem>.layers.jsonl` next to it, honoring `resume`.
-    /// Results are bit-identical either way.
+    /// Results are bit-identical either way. Tsim backends only
+    /// (silently off for the analytical backend, which has its own
+    /// prediction cache).
     pub memo: bool,
-    /// Timing-only simulation: skip functional datapath effects (the
-    /// sweep only consumes cycles/counters, which are bit-identical).
-    pub timing_only: bool,
+    /// Per-point fidelity (see [`EvalOptions::backend`]).
+    pub backend: BackendKind,
     /// Two-phase mode: score the grid with the analytical model and run
-    /// tsim only on the epsilon-band survivors (see the module docs).
-    /// `None` = single-phase: every grid point is measured.
+    /// the configured backend only on the epsilon-band survivors (see
+    /// the module docs). `None` = single-phase: every grid point is
+    /// evaluated.
     pub two_phase: Option<TwoPhaseOptions>,
+}
+
+impl Default for SweepOptions {
+    fn default() -> SweepOptions {
+        SweepOptions {
+            // Resolved once, here, instead of at spawn time (the
+            // satellite fix for over-spawning on small machines).
+            jobs: effective_jobs(0),
+            cache_path: None,
+            resume: false,
+            progress: false,
+            memo: false,
+            backend: BackendKind::Tsim,
+            two_phase: None,
+        }
+    }
 }
 
 /// A grid point eliminated by phase-1 pruning: never simulated, known
@@ -368,16 +431,19 @@ pub struct SweepOutcome {
     pub results: Vec<PointResult>,
     /// Grid job index of each `results` entry (identity when no pruning).
     pub job_indices: Vec<usize>,
-    /// Pareto frontier over (scaled area, tsim-measured cycles); ids
-    /// index into `results`. Built exclusively from measured points, so
-    /// pruning can never place a model estimate on the front.
+    /// Pareto frontier over (scaled area, cycles); ids index into
+    /// `results`. Built exclusively from evaluated points, so two-phase
+    /// pruning can never place a phase-1 estimate on the front.
     pub front: ParetoFront,
     /// Points eliminated by phase-1 pruning (empty when single-phase).
     pub pruned: Vec<PrunedPoint>,
     /// Points served from the cache without simulating.
     pub cached: usize,
-    /// Points actually simulated in this run.
+    /// Points actually evaluated in this run.
     pub simulated: usize,
+    /// Worker threads actually spawned (0 when everything was cached) —
+    /// always ≤ min(available parallelism, pending points).
+    pub workers: usize,
     /// Layer-memo lookups served from the cache (0 when memo disabled).
     pub memo_hits: u64,
     /// Layer-memo misses, i.e. layers actually simulated.
@@ -416,26 +482,28 @@ fn ensure_graphs<'a>(
 }
 
 /// Phase 1 of the two-phase engine: score every job with the analytical
-/// model and keep the epsilon-band survivors of the predicted frontier.
-/// Returns `(survivor job indices in grid order, pruned points,
-/// per-job predictions)`. Deterministic and cache-independent: the
-/// survivor set is a pure function of `(jobs, model, epsilon)`.
+/// backend and keep the epsilon-band survivors of the predicted
+/// frontier. Returns `(survivor job indices in grid order, pruned
+/// points, per-job predictions)`. Deterministic and cache-independent:
+/// the survivor set is a pure function of `(jobs, model, epsilon)`.
 fn phase1_prune(
     jobs: &[SweepJob],
     graphs: &BTreeMap<String, Graph>,
     tp: &TwoPhaseOptions,
-) -> (Vec<usize>, Vec<PrunedPoint>, Vec<u64>) {
-    // Layer-level model memo (keyed by the layer-memo signature): the
-    // grid repeats layer shapes massively, so each unique (config,
-    // layer) is estimated once.
-    let mut layer_cache: HashMap<u64, u64> = HashMap::new();
-    let predictions: Vec<u64> = jobs
-        .iter()
-        .map(|job| {
-            model::predict_graph_cached(&job.cfg, &graphs[&job.workload.id()], &mut layer_cache)
-                .cycles
-        })
-        .collect();
+) -> Result<(Vec<usize>, Vec<PrunedPoint>, Vec<u64>), VtaError> {
+    // One prediction cache (keyed by the layer-memo signature) shared
+    // across every phase-1 engine: the grid repeats layer shapes
+    // massively, so each unique (config, layer) is estimated once.
+    let shared = PredictionCache::default();
+    let mut predictions = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        let engine = Engine::for_config(&job.cfg)
+            .backend(AnalyticalBackend::with_cache(shared.clone()))
+            .build()?;
+        let evaluation =
+            engine.run(&graphs[&job.workload.id()], &EvalRequest::seeded(job.seed))?;
+        predictions.push(evaluation.cycles.unwrap_or(0));
+    }
     // Area is exact (the identical `analysis::area` model both phases
     // use); only the cycle axis carries model error, so the band
     // applies to cycles alone.
@@ -458,14 +526,24 @@ fn phase1_prune(
             });
         }
     }
-    (eval, pruned, predictions)
+    Ok((eval, pruned, predictions))
 }
 
 /// Run a sweep: optionally prune the grid against the analytical model
 /// (phase 1), then shard the surviving points across workers, stream
 /// results to the cache, and extract the Pareto frontier incrementally
-/// from tsim-measured numbers only (phase 2).
-pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> io::Result<SweepOutcome> {
+/// from evaluated points only (phase 2). Fails fast with [`VtaError`]
+/// on capability mismatches (e.g. an fsim backend) and propagates the
+/// first worker/cache error instead of panicking.
+pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome, VtaError> {
+    if opts.backend == BackendKind::Fsim {
+        return Err(VtaError::Unsupported(
+            "the sweep needs cycle counts and fsim produces none (use tsim, timing, or \
+             model)"
+                .into(),
+        ));
+    }
+    let analytical = opts.backend == BackendKind::Analytical;
     let jobs = spec.jobs();
     // One graph per distinct workload (weights depend only on the
     // workload and the spec-wide graph_seed — see `evaluate_with_graph`).
@@ -476,13 +554,20 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> io::Result<SweepOutcome> {
         match &opts.two_phase {
             Some(tp) => {
                 ensure_graphs(&mut graphs, jobs.iter(), spec.graph_seed);
-                let (eval, pruned, predictions) = phase1_prune(&jobs, &graphs, tp);
+                let (eval, pruned, predictions) = phase1_prune(&jobs, &graphs, tp)?;
                 (eval, pruned, predictions.into_iter().map(Some).collect())
             }
             None => ((0..jobs.len()).collect(), Vec::new(), vec![None; jobs.len()]),
         };
 
-    let mut cache = match &opts.cache_path {
+    // Analytical sweeps never touch the on-disk cache: its records are
+    // measured results, and predictions must not masquerade as them.
+    let cache_path = if analytical {
+        None
+    } else {
+        opts.cache_path.clone()
+    };
+    let mut cache = match &cache_path {
         Some(path) => ResultCache::open(path, opts.resume)?,
         None => ResultCache::in_memory(),
     };
@@ -511,9 +596,10 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> io::Result<SweepOutcome> {
     let simulated = pending.len();
 
     // The shared layer memo (when enabled): one instance behind an Arc,
-    // consulted by every worker, spilled next to the result cache.
-    let memo: Option<Arc<LayerMemo>> = if opts.memo {
-        Some(Arc::new(match &opts.cache_path {
+    // consulted by every worker, spilled next to the result cache. The
+    // analytical backend has its own prediction cache instead.
+    let memo: Option<Arc<LayerMemo>> = if opts.memo && !analytical {
+        Some(Arc::new(match &cache_path {
             Some(path) => LayerMemo::open(&memo_spill_path(path), opts.resume)?,
             None => LayerMemo::in_memory(),
         }))
@@ -521,17 +607,26 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> io::Result<SweepOutcome> {
         None
     };
 
+    // Worker count: clamped to both the machine and the work.
+    let workers = if pending.is_empty() {
+        0
+    } else {
+        effective_jobs(opts.jobs).min(pending.len())
+    };
+    let mut failure: Option<VtaError> = None;
     if !pending.is_empty() {
-        let workers = effective_jobs(opts.jobs).min(pending.len());
         ensure_graphs(
             &mut graphs,
             pending.iter().map(|&d| &jobs[eval_jobs[d]]),
             spec.graph_seed,
         );
         let job_queue = JobQueue::new(workers, &pending);
-        let (tx, rx) = mpsc::channel::<(usize, PointResult)>();
+        let (tx, rx) = mpsc::channel::<(usize, Result<PointResult, VtaError>)>();
         let total = eval_jobs.len();
-        std::thread::scope(|scope| -> io::Result<()> {
+        // Analytical sweeps share one prediction cache across workers
+        // (the model-side analogue of the layer memo).
+        let predictions_cache = analytical.then(PredictionCache::default);
+        std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(workers);
             for w in 0..workers {
                 let tx = tx.clone();
@@ -539,25 +634,41 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> io::Result<SweepOutcome> {
                 let jobs = &jobs;
                 let eval_jobs = &eval_jobs;
                 let graphs = &graphs;
-                let eval = EvalOptions { timing_only: opts.timing_only, memo: memo.clone() };
+                let eval = EvalOptions {
+                    backend: opts.backend,
+                    memo: memo.clone(),
+                    predictions: predictions_cache.clone(),
+                };
                 handles.push(scope.spawn(move || {
                     while let Some(d) = job_queue.pop(w) {
                         let job = &jobs[eval_jobs[d]];
                         let result =
                             evaluate_with_graph_opts(job, &graphs[&job.workload.id()], &eval);
                         if tx.send((d, result)).is_err() {
-                            break; // collector gone (I/O error); stop early
+                            break; // collector gone (error); stop early
                         }
                     }
                 }));
             }
             drop(tx);
             let mut done = cached;
-            for (d, mut result) in rx {
+            for (d, result) in rx {
+                let mut result = match result {
+                    Ok(r) => r,
+                    Err(e) => {
+                        failure = Some(e);
+                        break; // dropping rx stops the workers
+                    }
+                };
                 // Record the phase-1 prediction next to the measured
                 // value (calibration data; never replaces `cycles`).
-                result.predicted_cycles = predictions[eval_jobs[d]];
-                cache.insert(&result)?;
+                if result.predicted_cycles.is_none() {
+                    result.predicted_cycles = predictions[eval_jobs[d]];
+                }
+                if let Err(e) = cache.insert(&result) {
+                    failure = Some(VtaError::Io(e));
+                    break;
+                }
                 let on_front = front.insert(result.scaled_area, result.cycles, d);
                 done += 1;
                 if opts.progress {
@@ -573,8 +684,10 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> io::Result<SweepOutcome> {
                 }
                 results[d] = Some(result);
             }
-            Ok(())
-        })?;
+        });
+    }
+    if let Some(e) = failure {
+        return Err(e);
     }
 
     let results: Vec<PointResult> = results
@@ -590,6 +703,7 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> io::Result<SweepOutcome> {
         pruned,
         cached,
         simulated,
+        workers,
         memo_hits,
         memo_misses,
     })
@@ -630,6 +744,23 @@ mod tests {
         );
     }
 
+    fn sample_result() -> PointResult {
+        PointResult {
+            config: presets::tiny_config(),
+            workload: "micro@4".to_string(),
+            seed: 7,
+            graph_seed: 42,
+            cycles: 1,
+            macs: 2,
+            dram_rd: 3,
+            dram_wr: 4,
+            insns: 5,
+            scaled_area: 0.5,
+            predicted_cycles: None,
+            measured: true,
+        }
+    }
+
     #[test]
     fn job_and_result_keys_agree() {
         let job = SweepJob {
@@ -639,25 +770,15 @@ mod tests {
             seed: 7,
             graph_seed: 42,
         };
-        let result = PointResult {
-            config: job.cfg.clone(),
-            workload: job.workload.id(),
-            seed: job.seed,
-            graph_seed: job.graph_seed,
-            cycles: 1,
-            macs: 2,
-            dram_rd: 3,
-            dram_wr: 4,
-            insns: 5,
-            scaled_area: 0.5,
-            predicted_cycles: None,
-        };
+        let result = sample_result();
         assert_eq!(job.cache_key(), result.cache_key());
     }
 
     #[test]
     fn point_result_json_roundtrip() {
-        for predicted in [None, Some(120_000_000u64)] {
+        for (predicted, measured) in
+            [(None, true), (Some(120_000_000u64), true), (Some(99u64), false)]
+        {
             let r = PointResult {
                 config: presets::scaled_config(1, 32, 32, 2, 16),
                 workload: "resnet18@56".to_string(),
@@ -670,6 +791,7 @@ mod tests {
                 insns: 33,
                 scaled_area: 3.141592653589793,
                 predicted_cycles: predicted,
+                measured,
             };
             let text = r.to_json().to_string_compact();
             let back = PointResult::from_json(&Json::parse(&text).unwrap()).unwrap();
@@ -678,20 +800,19 @@ mod tests {
     }
 
     #[test]
+    fn records_without_measured_flag_load_as_measured() {
+        // Pre-redesign v3 records carry no `measured` field.
+        let mut j = sample_result().to_json();
+        if let Json::Object(map) = &mut j {
+            map.remove("measured");
+        }
+        let back = PointResult::from_json(&j).unwrap();
+        assert!(back.measured, "legacy records stored measured cycles only");
+    }
+
+    #[test]
     fn old_schema_cache_records_rejected() {
-        let r = PointResult {
-            config: presets::tiny_config(),
-            workload: "micro@4".to_string(),
-            seed: 7,
-            graph_seed: 42,
-            cycles: 1,
-            macs: 2,
-            dram_rd: 3,
-            dram_wr: 4,
-            insns: 5,
-            scaled_area: 0.5,
-            predicted_cycles: None,
-        };
+        let r = sample_result();
         let mut j = r.to_json();
         // A PR-2-era record carries the previous sweep schema version.
         if let Json::Object(map) = &mut j {
@@ -714,6 +835,7 @@ mod tests {
             pruned: vec![],
             cached: 0,
             simulated: 0,
+            workers: 0,
             memo_hits: 0,
             memo_misses: 0,
         };
@@ -730,6 +852,7 @@ mod tests {
             insns: 1,
             scaled_area: 1.0,
             predicted_cycles: Some(12),
+            measured: true,
         };
         let outcome = SweepOutcome {
             results: vec![r],
@@ -743,6 +866,7 @@ mod tests {
             ],
             cached: 0,
             simulated: 1,
+            workers: 1,
             memo_hits: 0,
             memo_misses: 0,
         };
@@ -778,5 +902,13 @@ mod tests {
     fn effective_jobs_resolves_zero() {
         assert_eq!(effective_jobs(3), 3);
         assert!(effective_jobs(0) >= 1);
+    }
+
+    #[test]
+    fn default_options_resolve_jobs_at_construction() {
+        let opts = SweepOptions::default();
+        assert_eq!(opts.jobs, effective_jobs(0), "jobs resolve when options are built");
+        assert!(opts.jobs >= 1);
+        assert_eq!(opts.backend, BackendKind::Tsim);
     }
 }

@@ -1,0 +1,156 @@
+//! Cross-backend parity: the engine's fidelity-ladder contract on a
+//! reduced grid. The `Backend` trait makes these invariants a loop over
+//! backend kinds instead of bespoke per-path glue:
+//!
+//! * every output-producing backend (fsim, functional tsim) produces a
+//!   **bit-identical output digest** per design point;
+//! * every tsim backend (functional, timing-only) produces **identical
+//!   cycles** per design point;
+//! * every evaluation honors its declared capabilities — no garbage in
+//!   fields a backend claims not to produce.
+
+use vta::config::presets;
+use vta::engine::{BackendKind, Engine, EvalRequest, Evaluation, Fidelity, VtaError};
+use vta::runtime::{Session, SessionOptions};
+use vta::util::hash::Fnv;
+use vta::workloads;
+
+/// The reduced grid: tiny-geometry variants × the micro-ResNet (the
+/// same shape the sweep-engine acceptance tests use).
+fn reduced_grid() -> Vec<vta::config::VtaConfig> {
+    let mut configs = Vec::new();
+    for axi in [8usize, 16] {
+        for scale in [1usize, 2] {
+            let mut cfg = presets::tiny_config();
+            cfg.name = format!("tiny-s{scale}-m{axi}");
+            cfg.axi_bytes = axi;
+            cfg.inp_depth *= scale;
+            cfg.wgt_depth *= scale;
+            cfg.acc_depth *= scale;
+            configs.push(cfg);
+        }
+    }
+    configs
+}
+
+fn digest(output: &[i8]) -> u64 {
+    let mut h = Fnv::new();
+    h.write_i8s(output);
+    h.finish()
+}
+
+fn eval_kind(cfg: &vta::config::VtaConfig, kind: BackendKind, seed: u64) -> Evaluation {
+    let engine = Engine::for_config(cfg).backend_kind(kind).build().unwrap();
+    let graph = workloads::micro_resnet(cfg.block_in, 42);
+    engine.run(&graph, &EvalRequest::seeded(seed)).unwrap()
+}
+
+/// The headline parity loop: one `Evaluation` per rung, compared
+/// pairwise through the capabilities the rungs share.
+#[test]
+fn ladder_rungs_agree_on_shared_products() {
+    for cfg in reduced_grid() {
+        // The 3-line ladder walk the trait buys us:
+        let evals: Vec<Evaluation> =
+            BackendKind::ALL.iter().map(|&kind| eval_kind(&cfg, kind, 7)).collect();
+
+        let out_digests: Vec<u64> =
+            evals.iter().filter_map(|e| e.output.as_deref().map(digest)).collect();
+        assert_eq!(out_digests.len(), 2, "fsim + functional tsim produce outputs");
+        assert_eq!(
+            out_digests[0], out_digests[1],
+            "{}: output digests must be bit-identical across functional backends",
+            cfg.name
+        );
+
+        let tsim_cycles: Vec<u64> = evals
+            .iter()
+            .filter(|e| e.fidelity >= Fidelity::TimingOnly && e.cycles.is_some())
+            .filter_map(|e| e.cycles)
+            .collect();
+        assert_eq!(tsim_cycles.len(), 2, "timing-only + functional tsim produce cycles");
+        assert_eq!(
+            tsim_cycles[0], tsim_cycles[1],
+            "{}: timing-only cycles must equal functional tsim cycles",
+            cfg.name
+        );
+
+        // Counters are part of the timing contract too.
+        let counter_pairs: Vec<_> = evals
+            .iter()
+            .filter(|e| {
+                matches!(e.fidelity, Fidelity::TimingOnly | Fidelity::CycleAccurate)
+            })
+            .map(|e| e.counters)
+            .collect();
+        assert_eq!(counter_pairs.len(), 2);
+        assert_eq!(counter_pairs[0], counter_pairs[1], "{}: tsim counters diverged", cfg.name);
+    }
+}
+
+/// Every evaluation matches the capabilities its backend declared.
+#[test]
+fn evaluations_honor_declared_capabilities() {
+    let cfg = presets::tiny_config();
+    for kind in BackendKind::ALL {
+        let caps = kind.instantiate().capabilities();
+        let eval = eval_kind(&cfg, kind, 9);
+        assert_eq!(eval.fidelity, kind.fidelity());
+        assert_eq!(eval.output.is_some(), caps.produces_outputs, "{kind}: output presence");
+        assert_eq!(eval.cycles.is_some(), caps.produces_cycles, "{kind}: cycle presence");
+        assert!(!eval.layer_stats.is_empty(), "{kind}: per-layer breakdown always present");
+        if let Some(cycles) = eval.cycles {
+            assert!(cycles > 0, "{kind}: cycle counts are positive");
+            let layer_total: u64 = eval.layer_stats.iter().map(|l| l.cycles).sum();
+            assert_eq!(layer_total, cycles, "{kind}: layer stats must sum to the total");
+        }
+    }
+}
+
+/// Identical seeds produce identical evaluations on every rung
+/// (determinism is per-backend, not just per-simulator).
+#[test]
+fn evaluations_are_deterministic_per_rung() {
+    let cfg = presets::tiny_config();
+    for kind in BackendKind::ALL {
+        let a = eval_kind(&cfg, kind, 11);
+        let b = eval_kind(&cfg, kind, 11);
+        assert_eq!(a.cycles, b.cycles, "{kind}: cycles must be deterministic");
+        assert_eq!(
+            a.output.as_deref().map(digest),
+            b.output.as_deref().map(digest),
+            "{kind}: outputs must be deterministic"
+        );
+    }
+}
+
+/// Malformed inputs fail with typed errors — never panics — at every
+/// rung, through both the engine and the raw session.
+#[test]
+fn malformed_inputs_return_typed_errors_everywhere() {
+    let cfg = presets::tiny_config();
+    let graph = workloads::micro_resnet(cfg.block_in, 42);
+    for kind in BackendKind::ALL {
+        let engine = Engine::for_config(&cfg).backend_kind(kind).build().unwrap();
+        let err = engine.run(&graph, &EvalRequest::with_data(vec![1, 2, 3])).unwrap_err();
+        assert!(matches!(err, VtaError::InvalidRequest(_)), "{kind}: got {err:?}");
+    }
+    // Malformed graph: an Add with a single operand.
+    let mut bad = vta::compiler::graph::Graph::new(
+        "bad",
+        vta::compiler::layout::Shape::new(cfg.block_in, 4, 4),
+    );
+    bad.add("add", vta::compiler::graph::Op::Add { relu: false }, vec![0]);
+    let engine = Engine::for_config(&cfg).build().unwrap();
+    assert!(matches!(engine.prepare(&bad), Err(VtaError::Graph(_))));
+    let mut session = Session::new(&cfg, SessionOptions::default()).unwrap();
+    assert!(matches!(session.run_graph(&bad, &[]), Err(VtaError::Graph(_))));
+    // A session cannot host the analytical backend.
+    assert!(matches!(
+        Session::new(
+            &cfg,
+            SessionOptions { backend: BackendKind::Analytical, ..Default::default() }
+        ),
+        Err(VtaError::Unsupported(_))
+    ));
+}

@@ -122,8 +122,8 @@ fn corrupted_weights_caught_by_golden_comparison() {
     corrupt[17] = corrupt[17].wrapping_add(1);
     let bad = build(corrupt);
     let expect = good.run_cpu(&input, 1);
-    let mut s = Session::new(&cfg, SessionOptions::default());
-    let got = s.run_graph(&bad, &input);
+    let mut s = Session::new(&cfg, SessionOptions::default()).unwrap();
+    let got = s.run_graph(&bad, &input).unwrap();
     assert_ne!(got, expect, "corruption must be visible in the output");
 }
 

@@ -8,8 +8,9 @@
 use vta::compiler::graph::{Graph, Op};
 use vta::compiler::layout::Shape;
 use vta::config::presets;
+use vta::engine::BackendKind;
 use vta::runtime::pjrt::Golden;
-use vta::runtime::{Session, SessionOptions, Target};
+use vta::runtime::{Session, SessionOptions};
 use vta::util::rng::Pcg32;
 
 fn golden_or_skip(names: &[&str]) -> Option<Golden> {
@@ -48,7 +49,7 @@ fn gemm_kernel_matches_exec_core() {
 
 fn run_conv_on_stack(
     cfg: &vta::config::VtaConfig,
-    target: Target,
+    backend: BackendKind,
     c_in: usize,
     c_out: usize,
     hw: usize,
@@ -64,8 +65,8 @@ fn run_conv_on_stack(
         Op::Conv { c_out, k: 3, stride, pad: 1, shift, relu, weights: weights.to_vec() },
         vec![0],
     );
-    let mut s = Session::new(cfg, SessionOptions { target, ..Default::default() });
-    s.run_graph(&g, input)
+    let mut s = Session::new(cfg, SessionOptions { backend, ..Default::default() }).unwrap();
+    s.run_graph(&g, input).unwrap()
 }
 
 #[test]
@@ -80,9 +81,9 @@ fn conv_quickstart_stack_vs_golden() {
     let want = golden
         .run_i8("conv_quickstart", &x, &[1, 16, 14, 14], &w, &[16, 16, 3, 3])
         .expect("golden conv run");
-    for target in [Target::Fsim, Target::Tsim] {
-        let got = run_conv_on_stack(&cfg, target, 16, 16, 14, 1, 5, true, &w, &x);
-        assert_eq!(got, want, "{target:?} disagrees with PJRT golden");
+    for backend in [BackendKind::Fsim, BackendKind::Tsim] {
+        let got = run_conv_on_stack(&cfg, backend, 16, 16, 14, 1, 5, true, &w, &x);
+        assert_eq!(got, want, "{backend:?} disagrees with PJRT golden");
     }
 }
 
@@ -97,7 +98,7 @@ fn conv_stride2_stack_vs_golden() {
     let want = golden
         .run_i8("conv_stride2", &x, &[1, 32, 12, 12], &w, &[16, 32, 3, 3])
         .expect("golden conv run");
-    let got = run_conv_on_stack(&cfg, Target::Tsim, 32, 16, 12, 2, 6, false, &w, &x);
+    let got = run_conv_on_stack(&cfg, BackendKind::Tsim, 32, 16, 12, 2, 6, false, &w, &x);
     assert_eq!(got, want, "tsim disagrees with PJRT golden (stride 2)");
 }
 
@@ -118,7 +119,7 @@ fn dense_stack_vs_golden() {
         Op::Dense { units: 32, shift: 4, relu: false, weights: w.clone() },
         vec![0],
     );
-    let mut s = Session::new(&cfg, SessionOptions { target: Target::Tsim, ..Default::default() });
-    let got = s.run_graph(&g, &x);
+    let mut s = Session::new(&cfg, SessionOptions::default()).unwrap();
+    let got = s.run_graph(&g, &x).unwrap();
     assert_eq!(got, want, "tsim dense disagrees with PJRT golden");
 }

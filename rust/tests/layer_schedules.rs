@@ -6,7 +6,8 @@
 use vta::compiler::graph::{Graph, Op};
 use vta::compiler::layout::Shape;
 use vta::config::presets;
-use vta::runtime::{Session, SessionOptions, Target};
+use vta::engine::BackendKind;
+use vta::runtime::{Session, SessionOptions};
 use vta::util::rng::Pcg32;
 
 fn check(graph: &Graph, seed: u64) {
@@ -14,10 +15,10 @@ fn check(graph: &Graph, seed: u64) {
     let mut rng = Pcg32::seeded(seed);
     let input = rng.i8_vec(cfg.batch * graph.input_shape.elems());
     let expect = graph.run_cpu(&input, cfg.batch);
-    for target in [Target::Fsim, Target::Tsim] {
-        let mut s = Session::new(&cfg, SessionOptions { target, ..Default::default() });
-        let got = s.run_graph(graph, &input);
-        assert_eq!(got, expect, "{target:?} mismatch for {}", graph.name);
+    for backend in [BackendKind::Fsim, BackendKind::Tsim] {
+        let mut s = Session::new(&cfg, SessionOptions { backend, ..Default::default() }).unwrap();
+        let got = s.run_graph(graph, &input).unwrap();
+        assert_eq!(got, expect, "{backend:?} mismatch for {}", graph.name);
     }
 }
 
@@ -157,6 +158,6 @@ fn deep_chain_of_mixed_layers() {
     let mut rng = Pcg32::seeded(20);
     let input = rng.i8_vec(cfg.batch * g.input_shape.elems());
     let expect = g.run_cpu(&input, cfg.batch);
-    let mut s = Session::new(&cfg, SessionOptions::default());
-    assert_eq!(s.run_graph(&g, &input), expect);
+    let mut s = Session::new(&cfg, SessionOptions::default()).unwrap();
+    assert_eq!(s.run_graph(&g, &input).unwrap(), expect);
 }

@@ -12,6 +12,7 @@ use std::sync::Arc;
 use vta::compiler::graph::{Graph, Op};
 use vta::compiler::layout::Shape;
 use vta::config::presets;
+use vta::engine::BackendKind;
 use vta::exec::ExecCounters;
 use vta::memo::LayerMemo;
 use vta::runtime::{LayerStat, Session, SessionOptions};
@@ -19,6 +20,11 @@ use vta::util::prop::Prop;
 use vta::util::rng::Pcg32;
 use vta::workloads;
 use vta::{prop_assert, prop_assert_eq};
+
+/// Timing-only session options (the fast-path rung of the ladder).
+fn timing(memo: Option<Arc<LayerMemo>>) -> SessionOptions {
+    SessionOptions { backend: BackendKind::TsimTiming, memo, ..Default::default() }
+}
 
 /// Comparable projection of a `LayerStat` (the struct itself does not
 /// implement `PartialEq`).
@@ -36,8 +42,8 @@ fn run(
     cfg: &vta::config::VtaConfig,
     opts: SessionOptions,
 ) -> RunResult {
-    let mut s = Session::new(cfg, opts);
-    let out = s.run_graph(graph, input);
+    let mut s = Session::new(cfg, opts).unwrap();
+    let out = s.run_graph(graph, input).unwrap();
     let stats = s.layer_stats.iter().map(stat_key).collect();
     (out, s.cycles(), s.exec_counters(), stats)
 }
@@ -50,10 +56,10 @@ fn micro_resnet_fast_paths_match_functional() {
     let input = rng.i8_vec(cfg.batch * g.input_shape.elems());
 
     let base = run(&g, &input, &cfg, SessionOptions::default());
-    let timing = run(&g, &input, &cfg, SessionOptions { timing_only: true, ..Default::default() });
-    assert_eq!(timing.1, base.1, "timing-only cycles must match functional exactly");
-    assert_eq!(timing.2, base.2, "timing-only counters must match functional exactly");
-    assert_eq!(timing.3, base.3, "timing-only per-layer stats must match functional exactly");
+    let fast = run(&g, &input, &cfg, timing(None));
+    assert_eq!(fast.1, base.1, "timing-only cycles must match functional exactly");
+    assert_eq!(fast.2, base.2, "timing-only counters must match functional exactly");
+    assert_eq!(fast.3, base.3, "timing-only per-layer stats must match functional exactly");
 
     let memo = Arc::new(LayerMemo::in_memory());
     let cold = run(
@@ -69,12 +75,7 @@ fn micro_resnet_fast_paths_match_functional() {
     assert_eq!(cold.0, base.0, "functional memo hits must preserve outputs bit-exactly");
     assert_eq!((cold.1, cold.2, &cold.3), (base.1, base.2, &base.3));
 
-    let warm_timing = run(
-        &g,
-        &input,
-        &cfg,
-        SessionOptions { timing_only: true, memo: Some(memo.clone()), ..Default::default() },
-    );
+    let warm_timing = run(&g, &input, &cfg, timing(Some(memo.clone())));
     assert_eq!((warm_timing.1, warm_timing.2, &warm_timing.3), (base.1, base.2, &base.3));
 }
 
@@ -140,14 +141,8 @@ fn prop_memoized_and_plain_runs_bit_identical() {
             &cfg,
             SessionOptions { memo: Some(memo.clone()), ..Default::default() },
         );
-        let timing_memo = run(
-            &graph,
-            &input,
-            &cfg,
-            SessionOptions { timing_only: true, memo: Some(memo.clone()), ..Default::default() },
-        );
-        let timing_plain =
-            run(&graph, &input, &cfg, SessionOptions { timing_only: true, ..Default::default() });
+        let timing_memo = run(&graph, &input, &cfg, timing(Some(memo.clone())));
+        let timing_plain = run(&graph, &input, &cfg, timing(None));
 
         prop_assert!(memo.hits() > 0, "conv2 repeats conv1's shape; expected a hit");
         prop_assert_eq!(&cold.0, &base.0);

@@ -34,7 +34,7 @@ fn calibration_matrix() -> Vec<(VtaConfig, vta::compiler::graph::Graph)> {
 #[test]
 fn per_layer_estimates_within_documented_band() {
     let matrix = calibration_matrix();
-    let all = calib::merge(matrix.iter().map(|(cfg, g)| calib::calibrate_graph(cfg, g, 7)));
+    let all = calib::merge(matrix.iter().map(|(cfg, g)| calib::calibrate_graph(cfg, g)));
     assert!(!all.points.is_empty());
     // Print the measured band — EXPERIMENTS.md records it per PR, and
     // CI logs make it greppable.
@@ -109,7 +109,7 @@ fn resnet18_prediction_is_fast_and_scales_sanely() {
 #[test]
 fn calibration_report_suggests_sound_epsilon() {
     let (cfg, g) = &calibration_matrix()[0];
-    let report = calib::calibrate_graph(cfg, g, 7);
+    let report = calib::calibrate_graph(cfg, g);
     let rho = report.max_ratio();
     // ε = ρ² − 1 must cover the measured band by construction.
     let eps = report.suggested_epsilon();

@@ -8,8 +8,11 @@ use vta::compiler::graph::{Graph, Op};
 use vta::compiler::layout::{self, Shape};
 use vta::compiler::tps::{self, ConvSpec};
 use vta::config::{presets, VtaConfig};
+use vta::engine::BackendKind;
+use vta::exec::ExecCounters;
 use vta::isa::{AluInsn, AluOp, BufferId, DepFlags, GemmInsn, Insn, MemInsn, Opcode, Uop};
-use vta::runtime::{Session, SessionOptions, Target};
+use vta::runtime::{Session, SessionOptions};
+use vta::util::json::Json;
 use vta::util::prop::{Gen, Prop};
 use vta::{prop_assert, prop_assert_eq};
 
@@ -215,15 +218,16 @@ fn prop_random_conv_fsim_tsim_cpu_agree() {
         let expect = graph.run_cpu(&input, cfg.batch);
         let reuse = g.bool();
         let tps_on = g.bool();
-        for target in [Target::Fsim, Target::Tsim] {
+        for backend in [BackendKind::Fsim, BackendKind::Tsim] {
             let mut s = Session::new(
                 &cfg,
-                SessionOptions { target, dbuf_reuse: reuse, tps: tps_on, ..Default::default() },
-            );
-            let got = s.run_graph(&graph, &input);
+                SessionOptions { backend, dbuf_reuse: reuse, tps: tps_on, ..Default::default() },
+            )
+            .map_err(|e| format!("session: {e}"))?;
+            let got = s.run_graph(&graph, &input).map_err(|e| format!("run: {e}"))?;
             prop_assert!(
                 got == expect,
-                "{target:?} mismatch (c_in={c_in} c_out={c_out} hw={hw} k={k} s={stride} reuse={reuse} tps={tps_on})"
+                "{backend:?} mismatch (c_in={c_in} c_out={c_out} hw={hw} k={k} s={stride} reuse={reuse} tps={tps_on})"
             );
         }
         Ok(())
@@ -243,9 +247,53 @@ fn prop_dependency_tokens_never_deadlock_random_pools() {
         graph.add("pool", Op::MaxPool { k, stride, pad: k / 2 }, vec![0]);
         let input = g.vec_i8(cfg.batch * graph.input_shape.elems());
         let expect = graph.run_cpu(&input, cfg.batch);
-        let mut s = Session::new(&cfg, SessionOptions::default());
-        let got = s.run_graph(&graph, &input);
+        let mut s = Session::new(&cfg, SessionOptions::default())
+            .map_err(|e| format!("session: {e}"))?;
+        let got = s.run_graph(&graph, &input).map_err(|e| format!("run: {e}"))?;
         prop_assert!(got == expect, "pool mismatch c={c} hw={hw} k={k} s={stride}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exec_counters_json_roundtrip_is_lossless() {
+    // The counter record is the layer-memo spill's payload: the
+    // roundtrip must be the identity, and any record carrying more or
+    // less than the exact field set must be rejected — unknown fields
+    // silently dropped on load would desynchronize memo-spliced
+    // sessions from simulated ones.
+    Prop::new("exec-counters-lossless").cases(200).run(|g| {
+        let mut draw = |hi: i64| g.i64(0, hi) as u64;
+        let c = ExecCounters {
+            insn_count: draw(1 << 40),
+            gemm_ops: draw(1 << 40),
+            macs: draw(1 << 50),
+            alu_ops: draw(1 << 40),
+            alu_elems: draw(1 << 45),
+            load_bytes_inp: draw(1 << 45),
+            load_bytes_wgt: draw(1 << 45),
+            load_bytes_acc: draw(1 << 45),
+            load_bytes_uop: draw(1 << 40),
+            store_bytes: draw(1 << 45),
+            pad_tiles: draw(1 << 30),
+        };
+        let j = c.to_json();
+        prop_assert_eq!(ExecCounters::from_json(&j), Some(c));
+
+        // Adding any unknown field must reject the record outright.
+        let mut extra = j.clone();
+        if let Json::Object(map) = &mut extra {
+            map.insert("mystery_counter".into(), Json::Int(1));
+        }
+        prop_assert_eq!(ExecCounters::from_json(&extra), None);
+
+        // Dropping any single known field must reject it too.
+        let victim = *g.choose(&ExecCounters::JSON_FIELDS);
+        let mut missing = j;
+        if let Json::Object(map) = &mut missing {
+            map.remove(victim);
+        }
+        prop_assert_eq!(ExecCounters::from_json(&missing), None);
         Ok(())
     });
 }

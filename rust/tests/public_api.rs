@@ -1,0 +1,83 @@
+//! Public-API snapshot: the sorted `pub` items of the redesigned
+//! `engine` / `runtime` / `sweep` surface, pinned in a golden file so a
+//! future PR cannot silently break the evaluation API this redesign
+//! froze (CI fails and shows the diff instead).
+//!
+//! The extraction is deliberately simple and deterministic — the first
+//! line of every `pub `-prefixed item (trimmed, with a trailing `{`
+//! stripped), prefixed by its file — rather than a full parser: the
+//! goal is a tripwire for surface changes, not a semantic model.
+//!
+//! To accept an intentional API change, regenerate the golden file:
+//!
+//!     VTA_UPDATE_API=1 cargo test --test public_api
+//!
+//! and commit the updated `rust/tests/golden/public_api.txt` together
+//! with a short rationale in the PR description.
+
+use std::path::Path;
+
+const MODULES: [&str; 3] = ["rust/src/engine", "rust/src/runtime", "rust/src/sweep"];
+const GOLDEN: &str = "rust/tests/golden/public_api.txt";
+
+fn snapshot(root: &Path) -> String {
+    let mut entries: Vec<String> = Vec::new();
+    for dir in MODULES {
+        let mut files: Vec<_> = std::fs::read_dir(root.join(dir))
+            .expect("API module directory exists")
+            .map(|e| e.expect("readable dir entry").path())
+            .filter(|p| p.extension().is_some_and(|x| x == "rs"))
+            .collect();
+        files.sort();
+        for file in files {
+            let rel =
+                format!("{dir}/{}", file.file_name().unwrap().to_string_lossy());
+            let text = std::fs::read_to_string(&file).expect("readable source file");
+            for line in text.lines() {
+                let trimmed = line.trim();
+                if !trimmed.starts_with("pub ") {
+                    continue;
+                }
+                let mut sig = trimmed.to_string();
+                if let Some(stripped) = sig.strip_suffix('{') {
+                    sig = stripped.trim_end().to_string();
+                }
+                entries.push(format!("{rel}: {sig}"));
+            }
+        }
+    }
+    entries.sort();
+    let mut out = entries.join("\n");
+    out.push('\n');
+    out
+}
+
+#[test]
+fn public_api_matches_golden_snapshot() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let current = snapshot(root);
+    let golden_path = root.join(GOLDEN);
+    if std::env::var_os("VTA_UPDATE_API").is_some() {
+        std::fs::create_dir_all(golden_path.parent().unwrap()).unwrap();
+        std::fs::write(&golden_path, &current).unwrap();
+        println!("regenerated {GOLDEN} ({} entries)", current.lines().count());
+        return;
+    }
+    let golden = std::fs::read_to_string(&golden_path)
+        .expect("golden snapshot missing — run with VTA_UPDATE_API=1 to create it");
+    if golden != current {
+        let golden_set: std::collections::BTreeSet<&str> = golden.lines().collect();
+        let current_set: std::collections::BTreeSet<&str> = current.lines().collect();
+        let mut diff = String::new();
+        for gone in golden_set.difference(&current_set) {
+            diff.push_str(&format!("- {gone}\n"));
+        }
+        for new in current_set.difference(&golden_set) {
+            diff.push_str(&format!("+ {new}\n"));
+        }
+        panic!(
+            "public API surface of engine/runtime/sweep changed:\n{diff}\nIf intentional, \
+             regenerate with: VTA_UPDATE_API=1 cargo test --test public_api"
+        );
+    }
+}

@@ -5,7 +5,8 @@
 use vta::compiler::graph::{Graph, Op};
 use vta::compiler::layout::Shape;
 use vta::config::presets;
-use vta::runtime::{Session, SessionOptions, Target};
+use vta::engine::BackendKind;
+use vta::runtime::{Session, SessionOptions};
 use vta::util::rng::Pcg32;
 use vta::workloads;
 
@@ -14,12 +15,15 @@ fn run_both(graph: &Graph, cfg: &vta::config::VtaConfig, opts: SessionOptions, s
     let input = rng.i8_vec(cfg.batch * graph.input_shape.elems());
     let expect = graph.run_cpu(&input, cfg.batch);
 
-    let mut fs = Session::new(cfg, SessionOptions { target: Target::Fsim, ..opts.clone() });
-    let got_f = fs.run_graph(graph, &input);
+    let mut fs =
+        Session::new(cfg, SessionOptions { backend: BackendKind::Fsim, ..opts.clone() })
+            .unwrap();
+    let got_f = fs.run_graph(graph, &input).unwrap();
     assert_eq!(got_f, expect, "fsim output != cpu reference ({})", graph.name);
 
-    let mut ts = Session::new(cfg, SessionOptions { target: Target::Tsim, ..opts });
-    let got_t = ts.run_graph(graph, &input);
+    let mut ts =
+        Session::new(cfg, SessionOptions { backend: BackendKind::Tsim, ..opts }).unwrap();
+    let got_t = ts.run_graph(graph, &input).unwrap();
     assert_eq!(got_t, expect, "tsim output != cpu reference ({})", graph.name);
     assert!(ts.cycles() > 0);
 }

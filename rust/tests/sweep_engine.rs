@@ -5,6 +5,7 @@
 //! invariants as properties over random point clouds (`util/prop`).
 
 use vta::config::presets;
+use vta::engine::{BackendKind, VtaError};
 use vta::model;
 use vta::repro::{mark_pareto, Fig13Row};
 use vta::sweep::pareto::{dominates, epsilon_band_survivors, ParetoFront, ParetoPoint};
@@ -55,7 +56,12 @@ fn memo_timing_only_results_bit_identical() {
     let baseline = sweep::run(&spec, &run_opts(2, None, false)).unwrap();
     let fast = sweep::run(
         &spec,
-        &SweepOptions { jobs: 2, memo: true, timing_only: true, ..Default::default() },
+        &SweepOptions {
+            jobs: 2,
+            memo: true,
+            backend: BackendKind::TsimTiming,
+            ..Default::default()
+        },
     )
     .unwrap();
     assert_eq!(baseline.results, fast.results, "fast path must be bit-identical");
@@ -88,11 +94,9 @@ fn memo_spill_warm_restart_simulates_no_layers() {
     let opts = SweepOptions {
         jobs: 2,
         cache_path: Some(cache.clone()),
-        resume: false,
-        progress: false,
         memo: true,
-        timing_only: true,
-        two_phase: None,
+        backend: BackendKind::TsimTiming,
+        ..Default::default()
     };
     let first = sweep::run(&spec, &opts).unwrap();
     assert!(spill.exists(), "memo must spill next to the result cache");
@@ -230,7 +234,7 @@ fn two_phase_opts(jobs: usize, epsilon: f64) -> SweepOptions {
     SweepOptions {
         jobs,
         memo: true,
-        timing_only: true,
+        backend: BackendKind::TsimTiming,
         two_phase: Some(TwoPhaseOptions { epsilon }),
         ..Default::default()
     }
@@ -456,6 +460,74 @@ fn prop_front_matches_repro_mark_pareto() {
         prop_assert_eq!(front.ids(), expect);
         Ok(())
     });
+}
+
+// ------------------------------------------------------- engine backends
+
+/// Satellite regression: `jobs: 0` (auto) must clamp once — at options
+/// construction and to the pending-point count — so a single-CPU
+/// container never spawns a worker per job. `SweepOutcome::workers`
+/// records what actually ran.
+#[test]
+fn worker_count_clamped_to_parallelism_and_pending() {
+    assert_eq!(
+        SweepOptions::default().jobs,
+        sweep::effective_jobs(0),
+        "default options resolve jobs at construction, not at spawn time"
+    );
+    let spec = micro_spec();
+    let outcome = sweep::run(&spec, &run_opts(0, None, false)).unwrap();
+    assert!(outcome.workers >= 1);
+    assert!(outcome.workers <= sweep::effective_jobs(0), "never more workers than cores");
+    assert!(outcome.workers <= outcome.simulated, "never more workers than pending points");
+    // A fully cached run spawns no workers at all.
+    let path = temp_cache("worker_clamp");
+    sweep::run(&spec, &run_opts(0, Some(path.clone()), false)).unwrap();
+    let warm = sweep::run(&spec, &run_opts(0, Some(path.clone()), true)).unwrap();
+    assert_eq!(warm.workers, 0, "warm-cache runs have nothing to shard");
+    std::fs::remove_file(&path).ok();
+}
+
+/// Capability mismatches are typed errors, not panics: fsim produces no
+/// cycles, so a sweep over it is rejected up front.
+#[test]
+fn fsim_backend_rejected_with_typed_error() {
+    let spec = micro_spec();
+    let err = sweep::run(
+        &spec,
+        &SweepOptions { backend: BackendKind::Fsim, ..Default::default() },
+    )
+    .expect_err("fsim sweep must be rejected");
+    assert!(matches!(err, VtaError::Unsupported(_)), "got {err:?}");
+}
+
+/// An analytical-backend sweep scores the whole grid through the same
+/// engine path: every result is flagged unmeasured, carries the model's
+/// prediction as its cycle count, and never lands in the on-disk cache.
+#[test]
+fn analytical_backend_sweeps_grid_without_simulating() {
+    let spec = micro_spec();
+    let path = temp_cache("analytical");
+    let outcome = sweep::run(
+        &spec,
+        &SweepOptions {
+            backend: BackendKind::Analytical,
+            cache_path: Some(path.clone()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let jobs = spec.jobs();
+    assert_eq!(outcome.results.len(), jobs.len());
+    for (job, r) in jobs.iter().zip(&outcome.results) {
+        assert!(!r.measured, "analytical results must be flagged unmeasured");
+        let graph = job.workload.build(job.graph_seed);
+        let pred = model::predict_graph(&job.cfg, &graph).cycles;
+        assert_eq!(r.cycles, pred, "cycles must equal the model prediction");
+        assert_eq!(r.predicted_cycles, Some(pred));
+        assert_eq!(r.macs, 0, "nothing executed, so counters stay zero");
+    }
+    assert!(!path.exists(), "predictions must never touch the measured-results cache");
 }
 
 #[test]
