@@ -1,0 +1,113 @@
+//! Serving-runtime throughput probes: the warm session pool + dynamic
+//! batcher against the naive one-engine-per-request baseline, plus a
+//! pure-scheduler probe (the virtual-time planner with no simulation).
+//!
+//! The acceptance gate of the serving PR lives here: batch serving must
+//! amortize prepare cost (graph build, validation, memo warmup) to at
+//! least 2x the baseline's throughput — in practice the gap is far
+//! larger, since a warm timing-only request replays memoized layer
+//! records instead of re-simulating the network.
+//!
+//!     cargo bench --bench serve_throughput [-- <filter>] [--quick]
+
+use vta::config::presets;
+use vta::engine::{BackendKind, Engine, EvalRequest};
+use vta::serve::{self, ArrivalSpec, SchedOptions, ServeOptions};
+use vta::sweep::WorkloadSpec;
+use vta::util::bench::Bench;
+use vta::workloads;
+
+fn main() {
+    let mut b = Bench::from_env();
+    let n = 64usize;
+    let cfg = presets::tiny_config();
+    let opts = ServeOptions {
+        cfg: cfg.clone(),
+        backend: BackendKind::TsimTiming,
+        workloads: vec![WorkloadSpec::Micro { block: 4 }],
+        graph_seed: 42,
+        ..ServeOptions::default()
+    };
+    let ids = vec!["micro@4".to_string()];
+
+    // Baseline: what every pre-serve client does — one engine, one
+    // freshly built graph, one full simulation per request.
+    let baseline_cycles = b.once("serve/one_engine_per_request", || {
+        let mut total = 0u64;
+        for i in 0..n as u64 {
+            let graph = workloads::micro_resnet(4, 42);
+            let engine = Engine::for_config(&cfg)
+                .backend_kind(BackendKind::TsimTiming)
+                .build()
+                .unwrap();
+            let eval = engine.run(&graph, &EvalRequest::seeded(i)).unwrap();
+            total += eval.cycles.unwrap();
+        }
+        total
+    });
+
+    // The serving runtime: pool build + warmup + N batched requests.
+    let served_cycles = b.once("serve/batched_runtime", || {
+        let trace = serve::synth_trace(
+            &ArrivalSpec::Uniform { rate_per_s: 10_000.0 },
+            &ids,
+            n,
+            7,
+        )
+        .unwrap();
+        let outcome = serve::run(&opts, &trace).unwrap();
+        assert_eq!(outcome.report.completed, n, "nothing may be shed in the probe");
+        outcome.report.total_cycles
+    });
+
+    // Both paths evaluated the same work (cycles are data-independent
+    // and the graph seed matches).
+    if let (Some(base), Some(served)) = (baseline_cycles, served_cycles) {
+        assert_eq!(base, served, "served cycles must equal the baseline's");
+    }
+
+    // The acceptance gate: served throughput >= 2x the baseline.
+    let mean = |name: &str| b.results.iter().find(|r| r.name == name).map(|r| r.mean_ns);
+    if let (Some(base_ns), Some(served_ns)) =
+        (mean("serve/one_engine_per_request"), mean("serve/batched_runtime"))
+    {
+        let speedup = base_ns / served_ns;
+        println!(
+            "    amortization: {speedup:.1}x ({:.0}ns/req baseline vs {:.0}ns/req served)",
+            base_ns / n as f64,
+            served_ns / n as f64
+        );
+        assert!(
+            speedup >= 2.0,
+            "batch serving must amortize prepare cost >= 2x the \
+             one-engine-per-request baseline (got {speedup:.2}x)"
+        );
+    }
+
+    // The scheduler alone: virtual-time planning cost per request, no
+    // simulation. This is the hot path of every future scale-out PR.
+    let big_trace = serve::synth_trace(
+        &ArrivalSpec::Poisson { rate_per_s: 5_000.0 },
+        &ids,
+        10_000,
+        9,
+    )
+    .unwrap();
+    let service: std::collections::BTreeMap<String, u64> =
+        [("micro@4".to_string(), 300u64)].into_iter().collect();
+    let sched_opts = SchedOptions {
+        max_batch: 8,
+        max_wait_us: 2_000,
+        queue_depth: 4_096,
+        deadline_us: None,
+        dispatch_overhead_us: 50,
+    };
+    b.bench("serve/schedule_10k_requests", || {
+        let s = serve::schedule(&big_trace, &service, &sched_opts).unwrap();
+        assert!(s.completed() > 0);
+        s.batches.len()
+    });
+
+    b.save_if_requested();
+    println!("\n{} benchmarks complete", b.results.len());
+}

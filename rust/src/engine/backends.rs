@@ -67,7 +67,9 @@ fn sim_eval(
     };
     let mut session = Session::new(&prepared.cfg, opts)?;
     let input = resolve_input(prepared, request, kind != BackendKind::TsimTiming)?;
-    let output = session.run_graph(prepared.graph, &input)?;
+    // Shapes were computed (= the graph validated) at prepare time, so
+    // repeated evaluations of one Prepared skip shape propagation.
+    let output = session.run_graph_shaped(prepared.graph, &prepared.shapes, &input)?;
     Ok(Evaluation {
         fidelity: kind.fidelity(),
         backend: name,

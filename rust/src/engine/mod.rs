@@ -59,6 +59,7 @@ pub use backends::{AnalyticalBackend, FsimBackend, MemoBackend, TsimBackend};
 pub use error::VtaError;
 
 use crate::compiler::graph::Graph;
+use crate::compiler::layout::Shape;
 use crate::config::VtaConfig;
 use crate::exec::ExecCounters;
 use crate::memo::LayerMemo;
@@ -259,6 +260,10 @@ pub struct Prepared<'g> {
     pub tuning: Tuning,
     /// Shared layer memo injected by [`MemoBackend`] (`None` otherwise).
     pub memo: Option<Arc<LayerMemo>>,
+    /// Per-node output shapes, computed once during validation
+    /// ([`prepare_common`]) so repeated evaluations (and every clone of
+    /// a [`PreparedShared`]) never re-run shape propagation.
+    pub shapes: Arc<Vec<Shape>>,
 }
 
 /// Everything one evaluation produced. Fields gated by the backend's
@@ -317,6 +322,9 @@ pub trait Backend: Send + Sync {
 
 /// The shared half of [`Backend::prepare`]: configuration validity, the
 /// square-block constraint of graph execution, and graph structure.
+/// Shape propagation *is* the structural validation
+/// ([`Graph::try_shapes`]), so the shapes it produces are kept in the
+/// [`Prepared`] instead of being recomputed per evaluation.
 pub fn prepare_common<'g>(
     cfg: &VtaConfig,
     graph: &'g Graph,
@@ -330,15 +338,66 @@ pub fn prepare_common<'g>(
             cfg.block_in, cfg.block_out
         )));
     }
-    graph.validate().map_err(VtaError::Graph)?;
-    Ok(Prepared { cfg: cfg.clone(), graph, tuning: tuning.clone(), memo: None })
+    let shapes = graph.try_shapes().map_err(VtaError::Graph)?;
+    Ok(Prepared {
+        cfg: cfg.clone(),
+        graph,
+        tuning: tuning.clone(),
+        memo: None,
+        shapes: Arc::new(shapes),
+    })
+}
+
+/// An owned, shareable [`Prepared`]: the `(config, graph)` pair bound
+/// by [`Engine::prepare_shared`], holding the graph behind an `Arc`
+/// instead of a borrow so it can outlive the call site, cross threads,
+/// and serve many concurrent evaluations. This is the warm artifact the
+/// serving runtime's session pool keeps per
+/// `(config, workload, backend)` key: validation, shape propagation and
+/// memo injection happened once at prepare time, so each request pays
+/// only for its own evaluation ([`Engine::eval_shared`]).
+pub struct PreparedShared {
+    cfg: VtaConfig,
+    graph: Arc<Graph>,
+    tuning: Tuning,
+    memo: Option<Arc<LayerMemo>>,
+    shapes: Arc<Vec<Shape>>,
+}
+
+impl PreparedShared {
+    pub fn cfg(&self) -> &VtaConfig {
+        &self.cfg
+    }
+
+    pub fn graph(&self) -> &Arc<Graph> {
+        &self.graph
+    }
+
+    /// Per-node output shapes (computed once at prepare time).
+    pub fn shapes(&self) -> &Arc<Vec<Shape>> {
+        &self.shapes
+    }
+
+    /// View as a borrow-based [`Prepared`] for one [`Backend::eval`]
+    /// call. Cheap: the config and tuning are small plain data, the
+    /// graph/shapes/memo are `Arc` bumps.
+    pub fn as_prepared(&self) -> Prepared<'_> {
+        Prepared {
+            cfg: self.cfg.clone(),
+            graph: &self.graph,
+            tuning: self.tuning.clone(),
+            memo: self.memo.clone(),
+            shapes: self.shapes.clone(),
+        }
+    }
 }
 
 /// The evaluation front door: one configuration, one backend, the memo
 /// and tuning plumbing owned in one place. Build with
 /// [`Engine::for_config`]; evaluate with [`Engine::run`] (or
 /// [`Engine::prepare`] + [`Engine::eval`] to amortize validation over
-/// many requests against the same graph).
+/// many requests against the same graph — [`Engine::prepare_shared`]
+/// for the owned, thread-crossing variant).
 pub struct Engine {
     cfg: VtaConfig,
     backend: Box<dyn Backend>,
@@ -370,6 +429,26 @@ impl Engine {
     /// Validate and bind a graph for repeated evaluation.
     pub fn prepare<'g>(&self, graph: &'g Graph) -> Result<Prepared<'g>, VtaError> {
         self.backend.prepare(&self.cfg, graph, &self.tuning)
+    }
+
+    /// [`Engine::prepare`] with shared ownership: validate once, then
+    /// evaluate the returned [`PreparedShared`] any number of times —
+    /// from any thread — via [`Engine::eval_shared`]. The serving
+    /// runtime keeps these warm in its session pool.
+    pub fn prepare_shared(&self, graph: Arc<Graph>) -> Result<PreparedShared, VtaError> {
+        let prepared = self.backend.prepare(&self.cfg, &graph, &self.tuning)?;
+        let (cfg, tuning, memo, shapes) =
+            (prepared.cfg, prepared.tuning, prepared.memo, prepared.shapes);
+        Ok(PreparedShared { cfg, graph, tuning, memo, shapes })
+    }
+
+    /// Evaluate one request against a shared prepared graph.
+    pub fn eval_shared(
+        &self,
+        prepared: &PreparedShared,
+        request: &EvalRequest,
+    ) -> Result<Evaluation, VtaError> {
+        self.backend.eval(&prepared.as_prepared(), request)
     }
 
     /// Evaluate one request against a prepared graph.
@@ -543,6 +622,40 @@ mod tests {
         let graph = workloads::micro_resnet(cfg.block_in, 1);
         let engine = Engine::for_config(&cfg).build().unwrap();
         assert!(matches!(engine.prepare(&graph), Err(VtaError::Unsupported(_))));
+    }
+
+    #[test]
+    fn prepare_shared_is_rerunnable_and_thread_crossing() {
+        let cfg = presets::tiny_config();
+        let graph = Arc::new(workloads::micro_resnet(cfg.block_in, 1));
+        let engine =
+            Engine::for_config(&cfg).backend_kind(BackendKind::TsimTiming).build().unwrap();
+        let shared = engine.prepare_shared(graph.clone()).unwrap();
+        assert_eq!(shared.shapes().len(), graph.nodes.len());
+        let a = engine.eval_shared(&shared, &EvalRequest::seeded(7)).unwrap();
+        let b = engine.eval_shared(&shared, &EvalRequest::seeded(7)).unwrap();
+        assert_eq!(a.cycles, b.cycles, "shared prepared must be re-runnable");
+        // Cross a thread boundary: PreparedShared owns its graph.
+        let cycles = std::thread::scope(|s| {
+            s.spawn(|| {
+                engine.eval_shared(&shared, &EvalRequest::seeded(7)).unwrap().cycles
+            })
+            .join()
+            .unwrap()
+        });
+        assert_eq!(cycles, a.cycles);
+    }
+
+    #[test]
+    fn prepare_shared_rejects_bad_graphs() {
+        let cfg = presets::tiny_config();
+        let engine = Engine::for_config(&cfg).build().unwrap();
+        let mut bad = crate::compiler::graph::Graph::new(
+            "bad",
+            crate::compiler::layout::Shape::new(cfg.block_in, 4, 4),
+        );
+        bad.add("add", crate::compiler::graph::Op::Add { relu: false }, vec![0]);
+        assert!(matches!(engine.prepare_shared(Arc::new(bad)), Err(VtaError::Graph(_))));
     }
 
     #[test]

@@ -3,17 +3,113 @@
 //!
 //! Reproduction of Banerjee et al. (Intel Labs, 2021): the enhanced
 //! TVM/VTA inference stack, built as a three-layer Rust + JAX + Pallas
-//! system. This crate is the Rust layer: the VTA cycle-accurate simulator
-//! (*tsim*), behavioral simulator (*fsim*), the compiler (tiling parameter
-//! search, double buffering, full-network schedules), the JIT runtime, the
-//! analysis tooling (roofline, utilization, area), the parallel
-//! design-space-exploration engine (*sweep*: work-stealing workers, a
-//! resumable on-disk result cache, incremental Pareto extraction), and a
-//! PJRT-based golden verification path against the JAX/Pallas model
-//! compiled AOT to HLO (behind the `pjrt` cargo feature).
+//! system. This crate is the Rust layer — simulators, compiler, runtime,
+//! analysis, a parallel design-space-exploration engine, and a
+//! batch-serving runtime, all dependency-free (the offline-first
+//! substrate in [`util`] supplies JSON, CLI parsing, PRNG, stats,
+//! benchmarking, property testing, and the thread pool).
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
-//! paper-vs-measured results.
+//! ## Module map
+//!
+//! Hardware model:
+//!
+//! | module | what it is |
+//! |---|---|
+//! | [`config`] | the single JSON hardware description driving everything (§II-B) |
+//! | [`isa`] | the 128-bit instruction set with config-derived field widths |
+//! | [`exec`] | bit-accurate instruction semantics shared by both simulators |
+//! | [`sim`] | *tsim*, the cycle-accurate simulator (queues, VME, tracing) |
+//! | [`fsim`] | the behavioral simulator — the functional reference |
+//! | [`mem`] | the DRAM model (tile-granular flat byte space) |
+//! | [`floorplan`] | physical floorplan generation + checks (§IV-B) |
+//!
+//! Compiler and runtime:
+//!
+//! | module | what it is |
+//! |---|---|
+//! | [`compiler`] | graph IR, TPS tiling search, per-layer lowering, layouts |
+//! | [`runtime`] | the JIT session: DRAM staging, per-layer launch, CPU fallback |
+//! | [`workloads`] | ResNet-18/34/50/101, MobileNet-1.0, micro test nets |
+//!
+//! Evaluation, exploration, and serving:
+//!
+//! | module | what it is |
+//! |---|---|
+//! | [`engine`] | **the front door**: one `Engine`, many `Backend`s, one fidelity ladder |
+//! | [`memo`] | layer-memoized simulation cache (per-layer results, shared + spillable) |
+//! | [`model`] | analytical per-layer cycle model (phase 1 of the two-phase sweep) |
+//! | [`sweep`] | parallel design-space exploration: work stealing, resumable cache, Pareto |
+//! | [`serve`] | batch-serving runtime: session pool, dynamic batching, load generation |
+//! | [`analysis`] | roofline, gantt/utilization, scaled-area model |
+//! | [`repro`] | one driver per paper figure/table |
+//! | [`trace`] | dynamic trace-based cross-simulator validation (§III-C) |
+//! | [`util`] | the std-only substrate (JSON, CLI, PRNG, stats, bench, pool) |
+//!
+//! ## The fidelity ladder
+//!
+//! Every way of answering "what does workload W cost on configuration
+//! C?" is a [`Backend`](engine::Backend) behind one
+//! [`Engine`](engine::Engine), ranked by how much of the machine it
+//! exercises:
+//!
+//! ```text
+//!   Analytical  <  TimingOnly      <  CycleAccurate    <  Functional
+//!   (model:        (timing: real      (tsim: + full       (fsim: pure
+//!    closed-form    timing wheel,      datapath,           behavioral
+//!    estimate,      exact cycles,      exact outputs)      reference)
+//!    microseconds)  no tensors)
+//! ```
+//!
+//! Rungs that share a product agree bit-for-bit (pinned by
+//! `rust/tests/backend_parity.rs`), so clients pick a rung by cost,
+//! never by fear of divergence. The sweep escalates Analytical →
+//! tsim (the two-phase engine); the serving runtime prices requests at
+//! any cycle-producing rung.
+//!
+//! ## Quick start
+//!
+//! Evaluate a workload on a configuration at a chosen fidelity (this
+//! example runs as a doctest — `cargo test --doc`):
+//!
+//! ```
+//! use vta::config::presets;
+//! use vta::engine::{BackendKind, Engine, EvalRequest};
+//! use vta::workloads;
+//!
+//! let cfg = presets::tiny_config(); // 1x4x4 test geometry, fast
+//! let graph = workloads::micro_resnet(cfg.block_in, 1);
+//! let engine = Engine::for_config(&cfg)
+//!     .backend_kind(BackendKind::TsimTiming) // pick a fidelity rung
+//!     .build()?;
+//! let eval = engine.run(&graph, &EvalRequest::seeded(7))?;
+//! assert!(eval.cycles.unwrap() > 0);
+//! # Ok::<(), vta::VtaError>(())
+//! ```
+//!
+//! Serve a stream of requests against warm prepared graphs with
+//! dynamic batching (see [`serve`] for the full model):
+//!
+//! ```
+//! use vta::config::presets;
+//! use vta::serve::{self, ArrivalSpec, ServeOptions};
+//! use vta::sweep::WorkloadSpec;
+//!
+//! let opts = ServeOptions {
+//!     cfg: presets::tiny_config(),
+//!     workloads: vec![WorkloadSpec::Micro { block: 4 }],
+//!     ..ServeOptions::default()
+//! };
+//! let spec = ArrivalSpec::parse("poisson:500")?;
+//! let trace = serve::synth_trace(&spec, &["micro@4".to_string()], 8, 7)?;
+//! let outcome = serve::run(&opts, &trace)?;
+//! assert_eq!(outcome.report.completed, 8);
+//! # Ok::<(), vta::VtaError>(())
+//! ```
+//!
+//! See `DESIGN.md` for the architecture (engine contract, sweep,
+//! memo, two-phase model, serving runtime) and `EXPERIMENTS.md` for the
+//! paper-vs-measured results. The `vta` binary fronts the same stack;
+//! README.md carries the CLI reference.
 
 pub mod analysis;
 pub mod compiler;
@@ -28,10 +124,17 @@ pub mod memo;
 pub mod model;
 pub mod repro;
 pub mod runtime;
+pub mod serve;
+pub mod sim;
 pub mod sweep;
+pub mod trace;
 pub mod util;
 pub mod workloads;
-pub mod sim;
-pub mod trace;
 
 pub use engine::VtaError;
+
+// Compile and run the README's Rust examples with the crate's doctests
+// (`cargo test --doc`), so the front-page quick start can never rot.
+#[cfg(doctest)]
+#[doc = include_str!("../../README.md")]
+pub struct ReadmeDoctests;

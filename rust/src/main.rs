@@ -6,15 +6,22 @@
 //!              fig10, fig11, fig12, fig13, all)
 //!   sweep      parallel design-space exploration over a config grid,
 //!              with a resumable on-disk result cache (Fig 13 and beyond)
+//!   serve      batch-serving runtime: dynamic request batching over the
+//!              engine API, driven by a seeded open-loop load generator
+//!              or a recorded request trace
 //!   config     show or save a named configuration as JSON
 //!   floorplan  generate + check the ACC-centric floorplan for a config
 //!   isa        print the derived ISA field layout for a config
+//!
+//! The full flag reference lives in README.md §CLI reference.
 
+use std::path::Path;
 use vta::analysis::area;
 use vta::config::{presets, VtaConfig};
 use vta::engine::{BackendKind, Engine, EvalRequest};
 use vta::floorplan;
 use vta::repro;
+use vta::serve;
 use vta::sweep::{self, GridSpec, SweepOptions, WorkloadSpec};
 use vta::util::cli::Args;
 use vta::util::json::{obj, Json};
@@ -46,6 +53,14 @@ fn usage() -> ! {
                       grid: [--dense] [--blocks 16,32,64] [--axi 8,16,32,64] [--scales 1,2,4]\n\
                       [--batch 1] [--net resnet18|...|mobilenet|micro] [--hw 224]\n\
                       [--workloads resnet18@224,mobilenet@56] [--seeds 7,8] [--graph-seed 1]\n\
+           serve      [--workload micro|resnet18@224,mobilenet@56,...] [--config <name>]\n\
+                      [--backend tsim|timing|model] [--jobs N] (workers; report-invariant)\n\
+                      [--max-batch 8] [--max-wait-us 2000] (dynamic batching window)\n\
+                      [--queue 256] [--deadline-us D] (bounded queue + per-request deadline)\n\
+                      [--requests 256] [--arrival poisson:500|uniform:1000] [--seed 42]\n\
+                      [--replay trace.jsonl] [--save-trace trace.jsonl] (recorded traces)\n\
+                      [--clock-mhz 100] [--overhead-us 50] [--no-memo] [--graph-seed 1]\n\
+                      [--out serve_report.json]\n\
            config     show|save --config <name> [--out path.json]\n\
            floorplan  [--config <name>]\n\
            isa        [--config <name>]"
@@ -472,6 +487,134 @@ fn cmd_sweep(args: &Args) {
     }
 }
 
+fn cmd_serve(args: &Args) {
+    let cfg = load_config(args);
+    let backend = parse_backend(args, "timing");
+    // `micro_resnet` is accepted as an alias for the `micro` workload id
+    // (the name the test network goes by elsewhere in the docs).
+    let workloads: Vec<WorkloadSpec> = args
+        .get_or("workload", "micro")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| if s == "micro_resnet" { "micro" } else { s })
+        .map(parse_workload)
+        .collect();
+    let deadline = args.get_u64("deadline-us", 0);
+    let opts = serve::ServeOptions {
+        cfg,
+        backend,
+        workloads,
+        graph_seed: args.get_u64("graph-seed", 1),
+        memo: !args.has_flag("no-memo"),
+        jobs: args.get_usize("jobs", 0),
+        max_batch: args.get_usize("max-batch", 8),
+        max_wait_us: args.get_u64("max-wait-us", 2_000),
+        queue_depth: args.get_usize("queue", 256),
+        deadline_us: (deadline > 0).then_some(deadline),
+        clock_mhz: args.get_u64("clock-mhz", 100),
+        dispatch_overhead_us: args.get_u64("overhead-us", 50),
+    };
+
+    // Request trace: replay a recorded one, or generate a seeded
+    // open-loop arrival stream over the pooled workloads.
+    let trace = match args.get("replay") {
+        Some(path) => serve::read_trace(Path::new(path)).unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }),
+        None => {
+            let spec = serve::ArrivalSpec::parse(args.get_or("arrival", "poisson:500"))
+                .unwrap_or_else(|e| {
+                    eprintln!("error: {e}");
+                    std::process::exit(2);
+                });
+            let ids: Vec<String> = opts.workloads.iter().map(|w| w.id()).collect();
+            let n = args.get_usize("requests", 256);
+            serve::synth_trace(&spec, &ids, n, args.get_u64("seed", 42)).unwrap_or_else(|e| {
+                eprintln!("error: {e}");
+                std::process::exit(1);
+            })
+        }
+    };
+    if let Some(path) = args.get("save-trace") {
+        serve::write_trace(Path::new(path), &trace).unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        });
+        println!("request trace written to {path}");
+    }
+
+    println!(
+        "serving {} requests across {} workload(s) on {} / {backend} ({} fidelity)",
+        trace.len(),
+        opts.workloads.len(),
+        opts.cfg.tag(),
+        backend.fidelity()
+    );
+    let outcome = serve::run(&opts, &trace).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    });
+    let r = &outcome.report;
+
+    println!("\npooled workloads (warm per-request cost):");
+    for (id, cost) in &r.workloads {
+        println!(
+            "  {:<16} {:>12} cycles  {:>8} virtual us",
+            id, cost.cycles_per_request, cost.service_us
+        );
+    }
+    println!(
+        "\nrequests: {} submitted | {} completed | {} shed (queue full) | {} expired (deadline)",
+        r.submitted, r.completed, r.rejected_queue_full, r.expired_deadline
+    );
+    println!(
+        "batches:  {} dispatched, occupancy mean {:.2} max {} (max-batch {}, window {}us)",
+        r.batches_dispatched,
+        r.mean_batch_occupancy,
+        r.max_batch_occupancy,
+        opts.max_batch,
+        opts.max_wait_us
+    );
+    println!(
+        "queue:    depth mean {:.2} max {} (bound {})",
+        r.mean_queue_depth, r.max_queue_depth, opts.queue_depth
+    );
+    println!(
+        "latency:  p50 {:.0}us  p95 {:.0}us  p99 {:.0}us  max {}us (virtual, at {} MHz)",
+        r.latency_p50_us, r.latency_p95_us, r.latency_p99_us, r.latency_max_us, r.clock_mhz
+    );
+    println!(
+        "throughput: {:.1} req/s over {}us virtual makespan ({} cycles total)",
+        r.throughput_rps,
+        r.makespan_us,
+        stats::si(r.total_cycles as f64)
+    );
+    if r.memo_hits + r.memo_misses > 0 {
+        println!(
+            "layer memo: {} hits / {} misses ({:.1}% reuse)",
+            r.memo_hits,
+            r.memo_misses,
+            100.0 * r.memo_hits as f64 / (r.memo_hits + r.memo_misses) as f64
+        );
+    }
+    println!(
+        "wall clock: {} on {} worker(s) (report is worker-count invariant)",
+        stats::fmt_ns(outcome.wall_ns as f64),
+        outcome.workers
+    );
+
+    let out = args.get_or("out", "serve_report.json");
+    match std::fs::write(out, r.to_json().to_string_pretty()) {
+        Ok(()) => println!("report written to {out}"),
+        Err(e) => {
+            eprintln!("error writing {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
 fn cmd_config(args: &Args) {
     let cfg = load_config(args);
     match args.positional.get(1).map(|s| s.as_str()) {
@@ -524,6 +667,7 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("repro") => cmd_repro(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("serve") => cmd_serve(&args),
         Some("config") => cmd_config(&args),
         Some("floorplan") => cmd_floorplan(&args),
         Some("isa") => cmd_isa(&args),

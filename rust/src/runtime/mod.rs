@@ -327,6 +327,22 @@ impl Session {
     pub fn run_graph(&mut self, graph: &Graph, input: &[i8]) -> Result<Vec<i8>, VtaError> {
         // One pass validates the graph and yields the shapes.
         let shapes = graph.try_shapes().map_err(VtaError::Graph)?;
+        self.run_graph_shaped(graph, &shapes, input)
+    }
+
+    /// [`Session::run_graph`] against pre-validated shapes. `shapes`
+    /// must be `graph.try_shapes()?` — the engine's `Prepared` carries
+    /// exactly that, so serving-style callers that evaluate one graph
+    /// many times (sessions are cheap; validation need not be repeated
+    /// per request) skip shape propagation here. Passing shapes from a
+    /// different graph is a caller bug with panic-level consequences,
+    /// the same contract as [`Graph::shapes`].
+    pub fn run_graph_shaped(
+        &mut self,
+        graph: &Graph,
+        shapes: &[Shape],
+        input: &[i8],
+    ) -> Result<Vec<i8>, VtaError> {
         let cfg = self.cfg.clone();
         let block = cfg.block_in;
         let batch = cfg.batch;
@@ -362,7 +378,7 @@ impl Session {
             let (cycles, insns, uops, on_cpu) = match &node.op {
                 Op::Input => unreachable!(),
                 Op::Conv { shift, relu, weights, .. } => {
-                    let spec = graph.conv_spec(i, &shapes);
+                    let spec = graph.conv_spec(i, shapes);
                     if spec.c_in < block {
                         // Channel-light layer: CPU fallback (§IV-E).
                         // Contributes zero cycles and no counters, so
@@ -370,7 +386,7 @@ impl Session {
                         // is never consumed there).
                         if !self.timing_only() {
                             self.run_conv_on_cpu(
-                                graph, i, &shapes, weights, *shift, *relu, in_region, out_region,
+                                graph, i, shapes, weights, *shift, *relu, in_region, out_region,
                             );
                         }
                         (0, 0, 0, true)
@@ -382,7 +398,7 @@ impl Session {
                     }
                 }
                 Op::Dense { shift, relu, weights, .. } => {
-                    let spec = graph.conv_spec(i, &shapes);
+                    let spec = graph.conv_spec(i, shapes);
                     let n = self.run_conv_on_vta(
                         &spec, weights, *shift, *relu, in_region, out_region, &label,
                     );

@@ -1,0 +1,319 @@
+//! Open-loop load generation for the serving runtime: synthetic arrival
+//! processes (seeded, so every run is exactly reproducible) and recorded
+//! request traces (JSONL, one request per line).
+//!
+//! The generator is *open-loop*: arrival times are drawn from the
+//! process up front and never react to service times — the standard
+//! methodology for measuring tail latency (a closed loop would
+//! self-throttle exactly when the system is slowest, hiding the queue).
+//! A synthetic trace is just a `Vec<Request>`; [`write_trace`] /
+//! [`read_trace`] round-trip it through JSONL so a synthetic run can be
+//! archived and replayed (`vta serve --replay`), and external traces can
+//! be produced by any tool that writes the same three fields.
+
+use crate::engine::VtaError;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Pcg32;
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// One inference request: who arrives when, against which pooled
+/// workload, with which input seed. The request's identity is its index
+/// in the trace (arrival order breaks timestamp ties).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    /// Arrival timestamp in virtual microseconds.
+    pub t_us: u64,
+    /// Workload id (`WorkloadSpec::id`), the session-pool key.
+    pub workload: String,
+    /// Input-data seed for this request's evaluation.
+    pub seed: u64,
+}
+
+/// A synthetic arrival process, parsed from the CLI's
+/// `--arrival <kind>:<rate>` syntax.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalSpec {
+    /// Poisson arrivals (exponential inter-arrival times) at `rate`
+    /// requests per second — the standard open-system traffic model.
+    Poisson { rate_per_s: f64 },
+    /// Deterministic arrivals at a fixed `1/rate` spacing.
+    Uniform { rate_per_s: f64 },
+}
+
+impl ArrivalSpec {
+    /// Parse `poisson:<rate>` or `uniform:<rate>` (rate in requests per
+    /// second, must be positive and finite).
+    pub fn parse(s: &str) -> Result<ArrivalSpec, VtaError> {
+        let (kind, rate) = s.split_once(':').ok_or_else(|| {
+            VtaError::InvalidRequest(format!(
+                "arrival spec '{s}' must be <kind>:<rate>, e.g. poisson:500"
+            ))
+        })?;
+        let rate_per_s: f64 = rate.parse().map_err(|_| {
+            VtaError::InvalidRequest(format!("arrival rate '{rate}' is not a number"))
+        })?;
+        if !rate_per_s.is_finite() || rate_per_s <= 0.0 {
+            return Err(VtaError::InvalidRequest(format!(
+                "arrival rate must be positive and finite, got {rate_per_s}"
+            )));
+        }
+        match kind {
+            "poisson" => Ok(ArrivalSpec::Poisson { rate_per_s }),
+            "uniform" => Ok(ArrivalSpec::Uniform { rate_per_s }),
+            other => Err(VtaError::InvalidRequest(format!(
+                "unknown arrival process '{other}' (expected poisson or uniform)"
+            ))),
+        }
+    }
+
+    pub fn rate_per_s(&self) -> f64 {
+        match *self {
+            ArrivalSpec::Poisson { rate_per_s } | ArrivalSpec::Uniform { rate_per_s } => {
+                rate_per_s
+            }
+        }
+    }
+}
+
+/// Generate `requests` arrivals from the process, spread across the
+/// given workload ids (uniformly at random for a mixed pool), with
+/// per-request input seeds — all drawn from one seeded PCG32 stream, so
+/// the trace is a pure function of `(spec, workloads, requests, seed)`.
+pub fn synth_trace(
+    spec: &ArrivalSpec,
+    workloads: &[String],
+    requests: usize,
+    seed: u64,
+) -> Result<Vec<Request>, VtaError> {
+    if workloads.is_empty() {
+        return Err(VtaError::InvalidRequest(
+            "cannot generate load without at least one workload".into(),
+        ));
+    }
+    let mut rng = Pcg32::seeded(seed);
+    let mut trace = Vec::with_capacity(requests);
+    let mut t = 0.0f64;
+    let mean_gap_us = 1e6 / spec.rate_per_s();
+    for _ in 0..requests {
+        let gap = match spec {
+            // Inverse-CDF exponential sample; 1 - f64() is in (0, 1],
+            // so ln never sees zero.
+            ArrivalSpec::Poisson { .. } => -(1.0 - rng.f64()).ln() * mean_gap_us,
+            ArrivalSpec::Uniform { .. } => mean_gap_us,
+        };
+        t += gap;
+        trace.push(Request {
+            t_us: t as u64,
+            workload: rng.choose(workloads).clone(),
+            seed: rng.next_u64(),
+        });
+    }
+    Ok(trace)
+}
+
+/// Write a trace as JSONL: `{"seed":…,"t_us":…,"workload":"…"}` per
+/// line (keys sorted — the codec's deterministic-object property).
+/// `seed` is a full-range `u64` serialized through JSON's signed i64
+/// (seeds ≥ 2^63 appear negative on disk); [`read_trace`] reverses the
+/// reinterpretation bit-exactly.
+pub fn write_trace(path: &Path, trace: &[Request]) -> Result<(), VtaError> {
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for r in trace {
+        let line = obj([
+            ("t_us", Json::Int(r.t_us as i64)),
+            ("workload", Json::Str(r.workload.clone())),
+            ("seed", Json::Int(r.seed as i64)),
+        ]);
+        writeln!(out, "{}", line.to_string_compact())?;
+    }
+    out.flush()?;
+    Ok(())
+}
+
+/// Read a JSONL trace. Every non-empty line must carry a nonnegative
+/// `t_us` timestamp and a `workload`; `seed` defaults to the 0-based
+/// line index and, when present, is reinterpreted bit-exactly from the
+/// signed on-disk form (see [`write_trace`]). Requests are sorted by
+/// arrival time (stably, so equal timestamps keep file order) —
+/// replaying an archived trace is deterministic regardless of how it
+/// was recorded.
+pub fn read_trace(path: &Path) -> Result<Vec<Request>, VtaError> {
+    let reader = BufReader::new(std::fs::File::open(path)?);
+    let mut trace = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(&line).map_err(|e| {
+            VtaError::InvalidRequest(format!("trace line {}: {e}", lineno + 1))
+        })?;
+        let t_us = match j.get("t_us").and_then(|v| v.as_i64()) {
+            Some(t) if t >= 0 => t as u64,
+            Some(t) => {
+                return Err(VtaError::InvalidRequest(format!(
+                    "trace line {}: t_us must be a nonnegative timestamp, got {t}",
+                    lineno + 1
+                )))
+            }
+            None => {
+                return Err(VtaError::InvalidRequest(format!(
+                    "trace line {}: missing t_us",
+                    lineno + 1
+                )))
+            }
+        };
+        let workload = j
+            .get("workload")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| {
+                VtaError::InvalidRequest(format!(
+                    "trace line {}: missing workload",
+                    lineno + 1
+                ))
+            })?
+            .to_string();
+        // Seeds are strict: a present seed must be an exact 64-bit
+        // integer (reinterpreted bit-exactly from the signed on-disk
+        // form). Anything else — a float that overflowed i64, a string
+        // — is rejected rather than silently substituted, so replays
+        // of external traces are reproducible or loudly refused.
+        let seed = match j.get("seed") {
+            None => lineno as u64,
+            Some(Json::Int(v)) => *v as u64,
+            Some(other) => {
+                return Err(VtaError::InvalidRequest(format!(
+                    "trace line {}: seed must be a 64-bit integer, got {other:?}",
+                    lineno + 1
+                )))
+            }
+        };
+        trace.push(Request { t_us, workload, seed });
+    }
+    trace.sort_by_key(|r| r.t_us);
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn arrival_spec_parses_and_rejects() {
+        assert_eq!(
+            ArrivalSpec::parse("poisson:500").unwrap(),
+            ArrivalSpec::Poisson { rate_per_s: 500.0 }
+        );
+        assert_eq!(
+            ArrivalSpec::parse("uniform:2.5").unwrap(),
+            ArrivalSpec::Uniform { rate_per_s: 2.5 }
+        );
+        for bad in ["poisson", "poisson:zero", "poisson:-1", "poisson:0", "burst:9"] {
+            assert!(
+                matches!(ArrivalSpec::parse(bad), Err(VtaError::InvalidRequest(_))),
+                "'{bad}' must be rejected with a typed error"
+            );
+        }
+    }
+
+    #[test]
+    fn synth_trace_is_seed_deterministic_and_ordered() {
+        let spec = ArrivalSpec::Poisson { rate_per_s: 1000.0 };
+        let w = ids(&["micro@4", "micro@8"]);
+        let a = synth_trace(&spec, &w, 64, 42).unwrap();
+        let b = synth_trace(&spec, &w, 64, 42).unwrap();
+        assert_eq!(a, b, "same seed, same trace");
+        assert!(a.windows(2).all(|p| p[0].t_us <= p[1].t_us), "arrivals sorted");
+        let c = synth_trace(&spec, &w, 64, 43).unwrap();
+        assert_ne!(a, c, "different seed, different trace");
+        assert!(a.iter().any(|r| r.workload == "micro@4"));
+        assert!(a.iter().any(|r| r.workload == "micro@8"));
+    }
+
+    #[test]
+    fn uniform_trace_has_fixed_gaps() {
+        let spec = ArrivalSpec::Uniform { rate_per_s: 1000.0 };
+        let trace = synth_trace(&spec, &ids(&["micro@4"]), 8, 7).unwrap();
+        for (i, r) in trace.iter().enumerate() {
+            assert_eq!(r.t_us, 1000 * (i as u64 + 1));
+        }
+    }
+
+    #[test]
+    fn empty_workload_list_rejected() {
+        let spec = ArrivalSpec::Uniform { rate_per_s: 1.0 };
+        assert!(matches!(
+            synth_trace(&spec, &[], 4, 1),
+            Err(VtaError::InvalidRequest(_))
+        ));
+    }
+
+    #[test]
+    fn trace_jsonl_roundtrips() {
+        let spec = ArrivalSpec::Poisson { rate_per_s: 500.0 };
+        let trace = synth_trace(&spec, &ids(&["micro@4"]), 16, 9).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("vta_serve_trace_{}.jsonl", std::process::id()));
+        write_trace(&path, &trace).unwrap();
+        let back = read_trace(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back, trace);
+    }
+
+    #[test]
+    fn malformed_trace_lines_are_typed_errors() {
+        let path = std::env::temp_dir()
+            .join(format!("vta_serve_badtrace_{}.jsonl", std::process::id()));
+        std::fs::write(&path, "{\"workload\":\"micro@4\"}\n").unwrap();
+        let err = read_trace(&path).unwrap_err();
+        assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
+        std::fs::write(&path, "not json\n").unwrap();
+        let err = read_trace(&path).unwrap_err();
+        assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
+        std::fs::write(&path, "{\"t_us\":-100,\"workload\":\"micro@4\"}\n").unwrap();
+        let err = read_trace(&path).unwrap_err();
+        assert!(
+            matches!(err, VtaError::InvalidRequest(_)),
+            "negative timestamps must be rejected, got {err:?}"
+        );
+        // A non-integer seed (here: a u64 too big for i64, which the
+        // JSON parser demotes to a float) is rejected, not mangled.
+        std::fs::write(
+            &path,
+            "{\"t_us\":1,\"workload\":\"micro@4\",\"seed\":18446744073709551615}\n",
+        )
+        .unwrap();
+        let err = read_trace(&path).unwrap_err();
+        assert!(
+            matches!(err, VtaError::InvalidRequest(_)),
+            "non-integer seeds must be rejected, got {err:?}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn full_range_seeds_roundtrip_and_missing_seeds_use_line_index() {
+        let path = std::env::temp_dir()
+            .join(format!("vta_serve_seeds_{}.jsonl", std::process::id()));
+        // A seed >= 2^63 survives the signed on-disk form bit-exactly.
+        let big = Request { t_us: 5, workload: "micro@4".into(), seed: u64::MAX - 1 };
+        write_trace(&path, std::slice::from_ref(&big)).unwrap();
+        assert_eq!(read_trace(&path).unwrap(), vec![big]);
+        // Missing seeds default to the 0-based line index, blank lines
+        // included in the count.
+        std::fs::write(
+            &path,
+            "{\"t_us\":1,\"workload\":\"a\"}\n\n{\"t_us\":2,\"workload\":\"a\"}\n",
+        )
+        .unwrap();
+        let trace = read_trace(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(trace[0].seed, 0);
+        assert_eq!(trace[1].seed, 2, "line index, not parsed-request count");
+    }
+}

@@ -1,0 +1,447 @@
+//! Batch-serving runtime (`vta serve`): multi-tenant dynamic request
+//! batching over the [`Engine`](crate::engine::Engine) API.
+//!
+//! Everything below PR 4 evaluates one request at a time: one engine,
+//! one graph, one answer. This module is the serving loop on top — the
+//! piece a production deployment of the paper's stack would put between
+//! user traffic and the accelerator:
+//!
+//! ```text
+//!   load generator ──> bounded queue ──> dynamic batcher ──> virtual device
+//!   (poisson/uniform      (shed on        (per-workload         (serial, priced
+//!    or --replay trace)    overflow)       max_batch/max_wait)    by warm cycles)
+//!                                               │
+//!                                               v
+//!                              SessionPool: warm PreparedShared per
+//!                              (config, workload, backend) + shared memo
+//!                                               │ batches
+//!                                               v
+//!                              worker pool (util::pool) evaluates
+//!                              batches in parallel — wall clock only
+//! ```
+//!
+//! The three pieces:
+//!
+//! * [`SessionPool`] (`pool`) — N warm prepared graphs keyed by
+//!   `(config, workload, backend)`, built once via
+//!   [`Engine::prepare_shared`](crate::engine::Engine::prepare_shared)
+//!   with one shared [`LayerMemo`](crate::memo::LayerMemo) across the
+//!   pool. A warmup evaluation per entry primes the memo and — because
+//!   VTA cycle counts are data-independent — pins the exact per-request
+//!   service time.
+//! * [`schedule`] (`sched`) — the deterministic virtual-time scheduler:
+//!   bounded admission, per-workload batch coalescing up to
+//!   `max_batch`/`max_wait_us`, per-request deadlines, and a serial
+//!   virtual accelerator that prices batches from the pool's warm cycle
+//!   counts. Load shedding is typed and counted, never silent.
+//! * [`load`] — seeded open-loop arrival generation
+//!   ([`ArrivalSpec`]: `poisson:<rate>` / `uniform:<rate>`) and JSONL
+//!   trace record/replay ([`read_trace`]/[`write_trace`]).
+//!
+//! # Determinism contract
+//!
+//! The schedule — batch compositions, rejections, expirations, queue
+//! depths, every latency — is a pure function of
+//! `(trace, pool service times, scheduler options)`. Worker threads
+//! only parallelize the already-fixed batches' evaluations, so
+//! [`ServeReport::to_json`] is **byte-identical across `--jobs 1` and
+//! `--jobs N`** (wall-clock numbers live outside the report in
+//! [`ServeOutcome`]). `rust/tests/serve_runtime.rs` pins this, and the
+//! CI smoke `cmp`s the report JSON of a 1-worker and a 4-worker run.
+//!
+//! # What batching buys
+//!
+//! In virtual time, each dispatch pays `dispatch_overhead_us` once per
+//! batch — the classic launch-overhead amortization. In wall-clock
+//! time, the pool amortizes the whole prepare pipeline (graph build
+//! with synthetic weights, validation, shape propagation, memo warmup)
+//! across every request: `benches/serve_throughput.rs` measures served
+//! throughput against a one-engine-per-request baseline and asserts the
+//! ≥ 2× amortization gate.
+
+pub mod load;
+pub mod pool;
+pub mod sched;
+
+pub use load::{read_trace, synth_trace, write_trace, ArrivalSpec, Request};
+pub use pool::{PoolEntry, PoolKey, SessionPool};
+pub use sched::{schedule, Batch, SchedOptions, Schedule};
+
+use crate::config::VtaConfig;
+use crate::engine::{BackendKind, EvalRequest, VtaError};
+use crate::sweep::WorkloadSpec;
+use crate::util::hash::Fnv;
+use crate::util::json::{obj, Json};
+use crate::util::stats;
+use std::collections::BTreeMap;
+
+/// Everything a serving run needs. `jobs` affects wall clock only; all
+/// other fields shape the (deterministic) schedule and report.
+#[derive(Clone)]
+pub struct ServeOptions {
+    /// Hardware configuration shared by every pooled entry.
+    pub cfg: VtaConfig,
+    /// Fidelity rung serving requests (must produce cycles: tsim,
+    /// timing, or model — fsim is rejected).
+    pub backend: BackendKind,
+    /// Workloads to pool; requests address them by `WorkloadSpec::id`.
+    pub workloads: Vec<WorkloadSpec>,
+    /// Synthetic-weight seed for the pooled graphs.
+    pub graph_seed: u64,
+    /// Share a layer memo across the pool (tsim backends; on by
+    /// default — serving *is* the memo's best case).
+    pub memo: bool,
+    /// Worker threads for batch execution (0 = auto). Never changes the
+    /// report.
+    pub jobs: usize,
+    /// Max requests coalesced per batch.
+    pub max_batch: usize,
+    /// Batching window (bounds the co-batching delay; see `sched`).
+    pub max_wait_us: u64,
+    /// Bounded-queue depth; arrivals beyond it are shed.
+    pub queue_depth: usize,
+    /// Optional per-request deadline (arrival → batch start).
+    pub deadline_us: Option<u64>,
+    /// Accelerator clock for the cycles → virtual-µs conversion.
+    pub clock_mhz: u64,
+    /// Fixed virtual cost per dispatched batch (what batching
+    /// amortizes in virtual time).
+    pub dispatch_overhead_us: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            cfg: crate::config::presets::default_config(),
+            backend: BackendKind::TsimTiming,
+            workloads: vec![WorkloadSpec::Micro { block: 16 }],
+            graph_seed: 1,
+            memo: true,
+            jobs: 0,
+            max_batch: 8,
+            max_wait_us: 2_000,
+            queue_depth: 256,
+            deadline_us: None,
+            clock_mhz: 100,
+            dispatch_overhead_us: 50,
+        }
+    }
+}
+
+impl ServeOptions {
+    fn sched_options(&self) -> SchedOptions {
+        SchedOptions {
+            max_batch: self.max_batch,
+            max_wait_us: self.max_wait_us,
+            queue_depth: self.queue_depth,
+            deadline_us: self.deadline_us,
+            dispatch_overhead_us: self.dispatch_overhead_us,
+        }
+    }
+}
+
+/// Per-workload line of the report: what one request costs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkloadCost {
+    pub cycles_per_request: u64,
+    pub service_us: u64,
+}
+
+/// The serving run's metrics. Every field is derived from the virtual
+/// schedule, so the JSON is byte-identical across worker counts; wall
+/// clock lives in [`ServeOutcome`] instead.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub config: String,
+    pub backend: BackendKind,
+    pub clock_mhz: u64,
+    pub workloads: BTreeMap<String, WorkloadCost>,
+    pub submitted: usize,
+    pub admitted: usize,
+    pub completed: usize,
+    pub rejected_queue_full: usize,
+    pub expired_deadline: usize,
+    /// Batches that dispatched at least one request.
+    pub batches_dispatched: usize,
+    pub mean_batch_occupancy: f64,
+    pub max_batch_occupancy: usize,
+    pub max_queue_depth: usize,
+    pub mean_queue_depth: f64,
+    pub latency_p50_us: f64,
+    pub latency_p95_us: f64,
+    pub latency_p99_us: f64,
+    pub latency_mean_us: f64,
+    pub latency_max_us: u64,
+    /// First arrival → last completion, virtual µs.
+    pub makespan_us: u64,
+    /// Completed requests per virtual second.
+    pub throughput_rps: f64,
+    /// Accelerator cycles actually evaluated (Σ over completions).
+    pub total_cycles: u64,
+    pub memo_hits: u64,
+    pub memo_misses: u64,
+    /// FNV-1a over every batch's composition and timing — two runs with
+    /// equal digests made identical scheduling decisions.
+    pub schedule_digest: u64,
+}
+
+impl ServeReport {
+    /// Deterministic JSON (sorted keys, no wall-clock or worker-count
+    /// fields) — the artifact `vta serve --out` writes and CI diffs
+    /// across worker counts.
+    pub fn to_json(&self) -> Json {
+        let workloads: Vec<Json> = self
+            .workloads
+            .iter()
+            .map(|(id, c)| {
+                obj([
+                    ("workload", Json::Str(id.clone())),
+                    ("cycles_per_request", Json::Int(c.cycles_per_request as i64)),
+                    ("service_us", Json::Int(c.service_us as i64)),
+                ])
+            })
+            .collect();
+        obj([
+            ("schema", Json::Int(1)),
+            ("config", Json::Str(self.config.clone())),
+            ("backend", Json::Str(self.backend.cli_name().to_string())),
+            ("clock_mhz", Json::Int(self.clock_mhz as i64)),
+            ("workloads", Json::Array(workloads)),
+            ("submitted", Json::Int(self.submitted as i64)),
+            ("admitted", Json::Int(self.admitted as i64)),
+            ("completed", Json::Int(self.completed as i64)),
+            ("rejected_queue_full", Json::Int(self.rejected_queue_full as i64)),
+            ("expired_deadline", Json::Int(self.expired_deadline as i64)),
+            ("batches_dispatched", Json::Int(self.batches_dispatched as i64)),
+            ("mean_batch_occupancy", Json::Float(self.mean_batch_occupancy)),
+            ("max_batch_occupancy", Json::Int(self.max_batch_occupancy as i64)),
+            ("max_queue_depth", Json::Int(self.max_queue_depth as i64)),
+            ("mean_queue_depth", Json::Float(self.mean_queue_depth)),
+            ("latency_p50_us", Json::Float(self.latency_p50_us)),
+            ("latency_p95_us", Json::Float(self.latency_p95_us)),
+            ("latency_p99_us", Json::Float(self.latency_p99_us)),
+            ("latency_mean_us", Json::Float(self.latency_mean_us)),
+            ("latency_max_us", Json::Int(self.latency_max_us as i64)),
+            ("makespan_us", Json::Int(self.makespan_us as i64)),
+            ("throughput_rps", Json::Float(self.throughput_rps)),
+            ("total_cycles", Json::Int(self.total_cycles as i64)),
+            ("memo_hits", Json::Int(self.memo_hits as i64)),
+            ("memo_misses", Json::Int(self.memo_misses as i64)),
+            ("schedule_digest", Json::Str(format!("{:016x}", self.schedule_digest))),
+        ])
+    }
+}
+
+/// What [`run`] hands back: the deterministic report, the full batch
+/// schedule (for inspection and tests), and the wall-clock facts that
+/// deliberately stay out of the report.
+pub struct ServeOutcome {
+    pub report: ServeReport,
+    /// The dispatched schedule, close order (includes all-expired
+    /// batches with empty `requests`).
+    pub batches: Vec<Batch>,
+    /// Wall-clock nanoseconds of the batch-execution phase.
+    pub wall_ns: u64,
+    /// Worker threads used for execution.
+    pub workers: usize,
+}
+
+/// Serve a request trace end-to-end: build + warm the pool, compute the
+/// virtual-time schedule, execute the batches across the worker pool,
+/// and assemble the report. Fails with a typed [`VtaError`] on
+/// malformed options, traces, or capability mismatches — load shedding
+/// and deadline expiry are *counted outcomes*, not errors.
+pub fn run(opts: &ServeOptions, trace: &[Request]) -> Result<ServeOutcome, VtaError> {
+    let pool = SessionPool::build(opts)?;
+    let schedule = sched::schedule(trace, &pool.service_map(), &opts.sched_options())?;
+
+    // Execute the fixed schedule. Workers change wall clock only: slot
+    // `b` always holds batch `b`'s result.
+    let workers = crate::sweep::effective_jobs(opts.jobs).min(schedule.batches.len().max(1));
+    let wall_start = std::time::Instant::now();
+    let batch_results: Vec<Result<u64, VtaError>> =
+        crate::util::pool::run_indexed(workers, schedule.batches.len(), |b| {
+            let batch = &schedule.batches[b];
+            let entry = pool
+                .get(&batch.workload)
+                .expect("the scheduler only dispatches pooled workloads");
+            let mut cycles = 0u64;
+            for &r in &batch.requests {
+                let eval = entry
+                    .engine
+                    .eval_shared(&entry.prepared, &EvalRequest::seeded(trace[r].seed))?;
+                cycles += eval.cycles.expect("pool backends produce cycles");
+            }
+            Ok(cycles)
+        });
+    let wall_ns = wall_start.elapsed().as_nanos() as u64;
+    let mut total_cycles = 0u64;
+    for r in batch_results {
+        total_cycles += r?;
+    }
+
+    let report = assemble_report(opts, &pool, &schedule, trace, total_cycles);
+    Ok(ServeOutcome { report, batches: schedule.batches, wall_ns, workers })
+}
+
+fn assemble_report(
+    opts: &ServeOptions,
+    pool: &SessionPool,
+    schedule: &Schedule,
+    trace: &[Request],
+    total_cycles: u64,
+) -> ServeReport {
+    let mut latencies: Vec<f64> =
+        schedule.latencies_us.iter().map(|&(_, l)| l as f64).collect();
+    // One sort serves every percentile; an empty run reports 0, not
+    // NaN (NaN is null in JSON).
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| {
+        if latencies.is_empty() {
+            0.0
+        } else {
+            stats::percentile_sorted(&latencies, p)
+        }
+    };
+    let completed = schedule.completed();
+    let dispatched: Vec<&Batch> =
+        schedule.batches.iter().filter(|b| b.occupancy() > 0).collect();
+    let first_arrival = trace.iter().map(|r| r.t_us).min().unwrap_or(0);
+    let makespan_us = schedule.makespan_end_us().saturating_sub(first_arrival);
+    let (memo_hits, memo_misses) = pool.memo_stats();
+    ServeReport {
+        config: opts.cfg.tag(),
+        backend: opts.backend,
+        clock_mhz: opts.clock_mhz,
+        workloads: pool
+            .entries()
+            .iter()
+            .map(|e| {
+                (
+                    e.key.workload.clone(),
+                    WorkloadCost {
+                        cycles_per_request: e.cycles_per_request,
+                        service_us: e.service_us,
+                    },
+                )
+            })
+            .collect(),
+        submitted: trace.len(),
+        admitted: schedule.admitted,
+        completed,
+        rejected_queue_full: schedule.rejected_queue_full.len(),
+        expired_deadline: schedule.expired(),
+        batches_dispatched: dispatched.len(),
+        mean_batch_occupancy: if dispatched.is_empty() {
+            0.0
+        } else {
+            completed as f64 / dispatched.len() as f64
+        },
+        max_batch_occupancy: dispatched.iter().map(|b| b.occupancy()).max().unwrap_or(0),
+        max_queue_depth: schedule.max_queue_depth,
+        mean_queue_depth: if schedule.admitted == 0 {
+            0.0
+        } else {
+            schedule.depth_sum as f64 / schedule.admitted as f64
+        },
+        latency_p50_us: pct(50.0),
+        latency_p95_us: pct(95.0),
+        latency_p99_us: pct(99.0),
+        latency_mean_us: if latencies.is_empty() { 0.0 } else { stats::mean(&latencies) },
+        latency_max_us: schedule.latencies_us.iter().map(|&(_, l)| l).max().unwrap_or(0),
+        makespan_us,
+        throughput_rps: completed as f64 / (makespan_us.max(1) as f64 / 1e6),
+        total_cycles,
+        memo_hits,
+        memo_misses,
+        schedule_digest: schedule_digest(&schedule.batches),
+    }
+}
+
+/// FNV-1a fingerprint of the full schedule: batch identities, members,
+/// expirations, and virtual timing. Equal digests ⇒ identical
+/// scheduling decisions (the determinism tests' one-number summary).
+pub fn schedule_digest(batches: &[Batch]) -> u64 {
+    let mut h = Fnv::new();
+    for b in batches {
+        h.write_u64(b.id as u64);
+        h.write_str(&b.workload);
+        h.write_u64(b.open_us);
+        h.write_u64(b.ready_us);
+        h.write_u64(b.start_us);
+        h.write_u64(b.done_us);
+        h.write_u64(b.requests.len() as u64);
+        for &r in &b.requests {
+            h.write_u64(r as u64);
+        }
+        h.write_u64(b.expired.len() as u64);
+        for &r in &b.expired {
+            h.write_u64(r as u64);
+        }
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn micro_opts() -> ServeOptions {
+        ServeOptions {
+            cfg: presets::tiny_config(),
+            workloads: vec![WorkloadSpec::Micro { block: 4 }],
+            ..ServeOptions::default()
+        }
+    }
+
+    #[test]
+    fn serve_completes_a_small_trace() {
+        let opts = micro_opts();
+        let spec = ArrivalSpec::Poisson { rate_per_s: 200.0 };
+        let trace = synth_trace(&spec, &["micro@4".to_string()], 16, 7).unwrap();
+        let outcome = run(&opts, &trace).unwrap();
+        let r = &outcome.report;
+        assert_eq!(r.submitted, 16);
+        assert_eq!(r.completed, 16, "generous queue + no deadline: all complete");
+        assert_eq!((r.rejected_queue_full, r.expired_deadline), (0, 0));
+        assert!(r.throughput_rps > 0.0);
+        assert!(r.latency_p50_us <= r.latency_p95_us);
+        assert!(r.latency_p95_us <= r.latency_p99_us);
+        assert!(r.latency_p99_us <= r.latency_max_us as f64);
+        // Every completion evaluated the warm graph exactly.
+        let per_req = r.workloads["micro@4"].cycles_per_request;
+        assert_eq!(r.total_cycles, 16 * per_req);
+        assert!(r.memo_hits > 0, "served requests hit the warm memo");
+    }
+
+    #[test]
+    fn report_json_lists_every_counter() {
+        let opts = micro_opts();
+        let trace =
+            synth_trace(&ArrivalSpec::Uniform { rate_per_s: 100.0 }, &["micro@4".into()], 4, 1)
+                .unwrap();
+        let outcome = run(&opts, &trace).unwrap();
+        let j = outcome.report.to_json();
+        for key in [
+            "schema",
+            "completed",
+            "rejected_queue_full",
+            "expired_deadline",
+            "latency_p99_us",
+            "throughput_rps",
+            "schedule_digest",
+            "mean_batch_occupancy",
+        ] {
+            assert!(j.get(key).is_some(), "report JSON missing '{key}'");
+        }
+    }
+
+    #[test]
+    fn empty_trace_produces_zeroed_report() {
+        let outcome = run(&micro_opts(), &[]).unwrap();
+        assert_eq!(outcome.report.completed, 0);
+        assert_eq!(outcome.report.throughput_rps, 0.0);
+        assert!(outcome.batches.is_empty());
+    }
+}

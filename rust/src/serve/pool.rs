@@ -1,0 +1,247 @@
+//! The session pool: warm prepared graphs, one per
+//! `(config, workload, backend)` key.
+//!
+//! Building an entry does everything that should happen *once* per
+//! served graph rather than once per request: build the workload graph
+//! (synthetic-weight generation is the single most expensive prepare
+//! step for the big ResNets), validate it and propagate shapes
+//! ([`Engine::prepare_shared`]), wire the shared fast-path caches (one
+//! [`LayerMemo`] across the whole pool for tsim backends, one
+//! prediction cache for the analytical backend), and run one **warmup
+//! evaluation**. The warmup serves two purposes:
+//!
+//! * it primes the memo, so every later request for the entry replays
+//!   cached per-layer results instead of re-simulating;
+//! * it pins the entry's per-request cost: VTA cycle counts are
+//!   data-independent (the layer-memo invariant), so one measurement is
+//!   *the* service time of every future request, which is what lets the
+//!   scheduler plan in virtual time before any request runs.
+//!
+//! Backends that produce no cycles (fsim) cannot price requests and are
+//! rejected with [`VtaError::Unsupported`] at pool build.
+
+use super::ServeOptions;
+use crate::engine::backends::PredictionCache;
+use crate::engine::{
+    AnalyticalBackend, BackendKind, Engine, EvalRequest, PreparedShared, VtaError,
+};
+use crate::memo::LayerMemo;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Identity of a pooled entry. One `ServeOptions` fixes the config and
+/// backend for the whole pool, so within a pool the workload id alone
+/// discriminates — the full key exists so reports and multi-pool
+/// callers stay unambiguous.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct PoolKey {
+    /// Configuration tag (`VtaConfig::tag`).
+    pub config: String,
+    /// Workload id (`WorkloadSpec::id`).
+    pub workload: String,
+    /// Fidelity rung serving this entry.
+    pub backend: BackendKind,
+}
+
+/// One warm `(engine, prepared graph)` pair plus its measured cost.
+pub struct PoolEntry {
+    pub key: PoolKey,
+    /// Engine with the pool's shared memo/prediction cache composed in.
+    pub engine: Engine,
+    /// The shared prepared graph every request evaluates against.
+    pub prepared: PreparedShared,
+    /// Cycles one request costs on this entry (warmup-measured;
+    /// data-independent, so exact for every request).
+    pub cycles_per_request: u64,
+    /// `cycles_per_request` at the pool's clock, in virtual µs (≥ 1).
+    pub service_us: u64,
+}
+
+/// The warm-session pool behind the serving runtime.
+pub struct SessionPool {
+    entries: Vec<PoolEntry>,
+    by_workload: BTreeMap<String, usize>,
+    memo: Option<Arc<LayerMemo>>,
+}
+
+impl SessionPool {
+    /// Build and warm every entry. Typed failures: empty workload list
+    /// or zero clock ([`VtaError::InvalidRequest`]), a cycle-less
+    /// backend ([`VtaError::Unsupported`]), plus whatever
+    /// config/graph validation reports.
+    pub fn build(opts: &ServeOptions) -> Result<SessionPool, VtaError> {
+        if opts.workloads.is_empty() {
+            return Err(VtaError::InvalidRequest(
+                "the session pool needs at least one workload".into(),
+            ));
+        }
+        if opts.clock_mhz == 0 {
+            return Err(VtaError::InvalidRequest(
+                "clock_mhz must be positive (it converts cycles to virtual time)".into(),
+            ));
+        }
+        let caps = opts.backend.instantiate().capabilities();
+        if !caps.produces_cycles {
+            return Err(VtaError::Unsupported(format!(
+                "serving schedules in virtual time and backend '{}' produces no cycles \
+                 (use tsim, timing, or model)",
+                opts.backend
+            )));
+        }
+        // One memo (or prediction cache) spans the pool: repeated layer
+        // shapes across entries warm each other, exactly as in a sweep.
+        let memo = (opts.memo && caps.supports_memo).then(|| Arc::new(LayerMemo::in_memory()));
+        let predictions =
+            (opts.backend == BackendKind::Analytical).then(PredictionCache::default);
+
+        let mut entries: Vec<PoolEntry> = Vec::with_capacity(opts.workloads.len());
+        let mut by_workload = BTreeMap::new();
+        for spec in &opts.workloads {
+            let id = spec.id();
+            if by_workload.contains_key(&id) {
+                return Err(VtaError::InvalidRequest(format!(
+                    "workload '{id}' appears twice in the pool"
+                )));
+            }
+            let mut builder = Engine::for_config(&opts.cfg);
+            builder = match &predictions {
+                Some(cache) => builder.backend(AnalyticalBackend::with_cache(cache.clone())),
+                None => builder.backend_kind(opts.backend),
+            };
+            if let Some(m) = &memo {
+                builder = builder.memo(m.clone());
+            }
+            let engine = builder.build()?;
+            let prepared = engine.prepare_shared(Arc::new(spec.build(opts.graph_seed)))?;
+            let warm = engine.eval_shared(&prepared, &EvalRequest::seeded(0))?;
+            let cycles_per_request =
+                warm.cycles.expect("produces_cycles was checked at pool build");
+            let service_us = (cycles_per_request / opts.clock_mhz).max(1);
+            by_workload.insert(id.clone(), entries.len());
+            entries.push(PoolEntry {
+                key: PoolKey {
+                    config: opts.cfg.tag(),
+                    workload: id,
+                    backend: opts.backend,
+                },
+                engine,
+                prepared,
+                cycles_per_request,
+                service_us,
+            });
+        }
+        Ok(SessionPool { entries, by_workload, memo })
+    }
+
+    /// Entry serving `workload`, if pooled.
+    pub fn get(&self, workload: &str) -> Option<&PoolEntry> {
+        self.by_workload.get(workload).map(|&i| &self.entries[i])
+    }
+
+    pub fn entries(&self) -> &[PoolEntry] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Workload id → per-request virtual service time (the scheduler's
+    /// pricing input).
+    pub fn service_map(&self) -> BTreeMap<String, u64> {
+        self.entries
+            .iter()
+            .map(|e| (e.key.workload.clone(), e.service_us))
+            .collect()
+    }
+
+    /// `(hits, misses)` of the pool-wide layer memo, warmup included
+    /// (`(0, 0)` for memo-less backends).
+    pub fn memo_stats(&self) -> (u64, u64) {
+        self.memo
+            .as_ref()
+            .map(|m| (m.hits(), m.misses()))
+            .unwrap_or((0, 0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::sweep::WorkloadSpec;
+
+    fn tiny_opts(backend: BackendKind) -> ServeOptions {
+        ServeOptions {
+            cfg: presets::tiny_config(),
+            backend,
+            workloads: vec![WorkloadSpec::Micro { block: 4 }],
+            ..ServeOptions::default()
+        }
+    }
+
+    #[test]
+    fn pool_warms_and_prices_entries() {
+        let pool = SessionPool::build(&tiny_opts(BackendKind::TsimTiming)).unwrap();
+        assert_eq!(pool.len(), 1);
+        let entry = pool.get("micro@4").expect("pooled workload");
+        assert!(entry.cycles_per_request > 0);
+        assert!(entry.service_us >= 1);
+        assert_eq!(entry.key.backend, BackendKind::TsimTiming);
+        // Warmup populated the shared memo.
+        let (_, misses) = pool.memo_stats();
+        assert!(misses > 0, "warmup must simulate (and record) each layer once");
+        // A served request after warmup is all memo hits.
+        let eval = entry
+            .engine
+            .eval_shared(&entry.prepared, &EvalRequest::seeded(1))
+            .unwrap();
+        assert_eq!(eval.cycles, Some(entry.cycles_per_request), "cycles are data-independent");
+        let (hits, misses_after) = pool.memo_stats();
+        assert!(hits > 0, "warm entries serve from the memo");
+        assert_eq!(misses_after, misses, "no layer re-simulates after warmup");
+    }
+
+    #[test]
+    fn fsim_pool_rejected_as_unsupported() {
+        let err = SessionPool::build(&tiny_opts(BackendKind::Fsim)).unwrap_err();
+        assert!(matches!(err, VtaError::Unsupported(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn empty_and_duplicate_workloads_rejected() {
+        let mut opts = tiny_opts(BackendKind::TsimTiming);
+        opts.workloads.clear();
+        assert!(matches!(
+            SessionPool::build(&opts),
+            Err(VtaError::InvalidRequest(_))
+        ));
+        opts.workloads =
+            vec![WorkloadSpec::Micro { block: 4 }, WorkloadSpec::Micro { block: 4 }];
+        assert!(matches!(
+            SessionPool::build(&opts),
+            Err(VtaError::InvalidRequest(_))
+        ));
+    }
+
+    #[test]
+    fn zero_clock_rejected() {
+        let mut opts = tiny_opts(BackendKind::TsimTiming);
+        opts.clock_mhz = 0;
+        assert!(matches!(
+            SessionPool::build(&opts),
+            Err(VtaError::InvalidRequest(_))
+        ));
+    }
+
+    #[test]
+    fn analytical_pool_builds_without_memo() {
+        let pool = SessionPool::build(&tiny_opts(BackendKind::Analytical)).unwrap();
+        assert_eq!(pool.memo_stats(), (0, 0));
+        assert!(pool.get("micro@4").unwrap().cycles_per_request > 0);
+    }
+}

@@ -1,0 +1,476 @@
+//! Dynamic-batching scheduler: a deterministic discrete-event model of
+//! the serving queue in *virtual time*.
+//!
+//! All scheduling decisions — batch composition, queue depths, deadline
+//! expiry, per-request latency — are computed in virtual microseconds
+//! from three inputs only: the arrival trace, the per-request service
+//! times the session pool measured at warmup (VTA cycle counts are
+//! data-independent, so one warm evaluation per pooled workload pins
+//! the cost of every future request exactly), and the scheduler
+//! options. Worker threads never appear in this model; they only
+//! parallelize the *execution* of batches the schedule already fixed.
+//! That split is what makes a `ServeReport` byte-identical across
+//! `--jobs 1` and `--jobs N` (pinned by `rust/tests/serve_runtime.rs`).
+//!
+//! # Batching semantics
+//!
+//! Requests for the same pooled workload coalesce into a batch. A batch
+//! *opens* at its first request's arrival and *closes* (becomes ready
+//! to dispatch) at the earlier of:
+//!
+//! * **full** — it reaches `max_batch` members (ready immediately), or
+//! * **window expiry** — `max_wait_us` elapses from its open time.
+//!
+//! `max_wait_us` therefore bounds the co-batching delay any admitted
+//! request can suffer: it waits at most `max_wait_us` for peers, plus
+//! the device backlog ahead of it — which the bounded queue caps — so
+//! the batching window is a direct p99-latency knob (see DESIGN.md
+//! §Serving runtime for the queueing model).
+//!
+//! # Device model
+//!
+//! Closed batches execute in ready order on one serial virtual
+//! accelerator: `start = max(ready, device_free)`,
+//! `done = start + dispatch_overhead_us + Σ service_us(member)`. The
+//! per-dispatch overhead is what batching amortizes in virtual time
+//! (the wall-clock amortization — prepare/validation/memo reuse — is
+//! measured separately by `benches/serve_throughput.rs`).
+//!
+//! # Admission and rejection
+//!
+//! The submission queue is bounded: a request arriving while
+//! `queue_depth` requests are waiting or in flight is rejected (counted
+//! `rejected_queue_full`) — load shedding, not an error. A request
+//! whose per-request deadline (`arrival + deadline_us`) has already
+//! passed when its batch starts is dropped at dispatch (counted
+//! `expired_deadline`) without consuming device time. Malformed input —
+//! a request naming a workload the pool does not hold, or nonsensical
+//! options — is a typed [`VtaError::InvalidRequest`] instead.
+
+use super::load::Request;
+use crate::engine::VtaError;
+use std::collections::{BTreeMap, VecDeque};
+
+/// Scheduler knobs (the `vta serve` flags of the same names).
+#[derive(Debug, Clone)]
+pub struct SchedOptions {
+    /// Maximum requests coalesced into one batch (≥ 1).
+    pub max_batch: usize,
+    /// Batching window: how long an open batch may wait for peers.
+    pub max_wait_us: u64,
+    /// Bound on requests waiting or in flight; arrivals beyond it are
+    /// shed (≥ 1).
+    pub queue_depth: usize,
+    /// Per-request deadline from arrival to batch start; `None` = no
+    /// deadlines.
+    pub deadline_us: Option<u64>,
+    /// Fixed virtual cost charged once per dispatched batch.
+    pub dispatch_overhead_us: u64,
+}
+
+/// One dispatched batch of same-workload requests.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Batch {
+    /// Open order (stable across runs; close order can differ from it).
+    pub id: usize,
+    /// The pooled workload every member runs against.
+    pub workload: String,
+    /// Arrival of the first member.
+    pub open_us: u64,
+    /// When the batch became dispatchable (full, or window expired).
+    pub ready_us: u64,
+    /// When the virtual device started it (`max(ready, device free)`).
+    pub start_us: u64,
+    /// `start + overhead + Σ service` (== `start_us` for all-expired
+    /// batches, which consume no device time).
+    pub done_us: u64,
+    /// Members executed, as indices into the request trace.
+    pub requests: Vec<usize>,
+    /// Members dropped at dispatch because their deadline had passed.
+    pub expired: Vec<usize>,
+}
+
+impl Batch {
+    /// Executed occupancy (expired members don't count).
+    pub fn occupancy(&self) -> usize {
+        self.requests.len()
+    }
+}
+
+/// Everything the scheduling pass decided, in virtual time.
+#[derive(Debug, Default)]
+pub struct Schedule {
+    /// Batches in close (dispatch) order.
+    pub batches: Vec<Batch>,
+    /// Trace indices shed at admission (queue full).
+    pub rejected_queue_full: Vec<usize>,
+    /// `(trace index, done - arrival)` for every completed request.
+    pub latencies_us: Vec<(usize, u64)>,
+    /// Requests admitted past the queue bound.
+    pub admitted: usize,
+    /// Largest queue depth observed at any admission (incl. the
+    /// admitted request).
+    pub max_queue_depth: usize,
+    /// Σ depth-at-admission — `/ admitted` is the mean depth.
+    pub depth_sum: u64,
+}
+
+impl Schedule {
+    /// Requests that ran to completion.
+    pub fn completed(&self) -> usize {
+        self.latencies_us.len()
+    }
+
+    /// Requests dropped at dispatch for a passed deadline.
+    pub fn expired(&self) -> usize {
+        self.batches.iter().map(|b| b.expired.len()).sum()
+    }
+
+    /// Virtual completion time of the last *completed* request (0 when
+    /// nothing ran). All-expired batches are excluded: their `done_us`
+    /// is just the dispatch instant, not a completion.
+    pub fn makespan_end_us(&self) -> u64 {
+        self.batches
+            .iter()
+            .filter(|b| !b.requests.is_empty())
+            .map(|b| b.done_us)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// An open (still collecting) batch.
+struct OpenBatch {
+    id: usize,
+    open_us: u64,
+    members: Vec<usize>,
+}
+
+/// The serial virtual accelerator plus the finished-work bookkeeping
+/// that admission control needs.
+struct Device {
+    free_us: u64,
+    /// `(done_us, members)` of in-flight batches, nondecreasing in
+    /// `done_us` (the device is serial).
+    in_flight: VecDeque<(u64, usize)>,
+    /// Running Σ members over `in_flight` — admission reads the backlog
+    /// in O(1) instead of re-summing the deque per arrival.
+    busy: usize,
+}
+
+/// Compute the full schedule for a trace. Pure and total: no clocks, no
+/// threads — the same inputs always produce the same `Schedule`.
+/// `service_us` maps every pooled workload id to its per-request
+/// virtual service time; a request naming an unknown workload is a
+/// typed error (the trace does not fit the pool).
+pub fn schedule(
+    trace: &[Request],
+    service_us: &BTreeMap<String, u64>,
+    opts: &SchedOptions,
+) -> Result<Schedule, VtaError> {
+    if opts.max_batch == 0 {
+        return Err(VtaError::InvalidRequest("max_batch must be at least 1".into()));
+    }
+    if opts.queue_depth == 0 {
+        return Err(VtaError::InvalidRequest("queue_depth must be at least 1".into()));
+    }
+    for (i, r) in trace.iter().enumerate() {
+        if !service_us.contains_key(&r.workload) {
+            return Err(VtaError::InvalidRequest(format!(
+                "request {i} names workload '{}' which the session pool does not hold",
+                r.workload
+            )));
+        }
+    }
+    // Arrival order: by timestamp, trace order breaking ties.
+    let mut order: Vec<usize> = (0..trace.len()).collect();
+    order.sort_by_key(|&i| (trace[i].t_us, i));
+
+    let mut open: BTreeMap<String, OpenBatch> = BTreeMap::new();
+    let mut device = Device { free_us: 0, in_flight: VecDeque::new(), busy: 0 };
+    let mut out = Schedule::default();
+    let mut next_batch_id = 0usize;
+    // Running Σ members over `open` (the O(1) half of admission depth).
+    let mut waiting = 0usize;
+
+    for &i in &order {
+        let now = trace[i].t_us;
+        // 1. Close every batch whose window expired by `now`, in
+        //    (close time, open order) — i.e. real event — order.
+        while let Some(key) = open
+            .iter()
+            .filter(|(_, b)| b.open_us.saturating_add(opts.max_wait_us) <= now)
+            .min_by_key(|(_, b)| (b.open_us.saturating_add(opts.max_wait_us), b.id))
+            .map(|(k, _)| k.clone())
+        {
+            let b = open.remove(&key).unwrap();
+            let ready = b.open_us.saturating_add(opts.max_wait_us);
+            waiting -= b.members.len();
+            close_batch(b, key, ready, trace, service_us, opts, &mut device, &mut out);
+        }
+        // 2. Retire finished work so admission sees the true backlog.
+        while device.in_flight.front().is_some_and(|&(done, _)| done <= now) {
+            let (_, n) = device.in_flight.pop_front().unwrap();
+            device.busy -= n;
+        }
+        // 3. Bounded admission: waiting (open batches) + in flight.
+        let depth = device.busy + waiting;
+        if depth >= opts.queue_depth {
+            out.rejected_queue_full.push(i);
+            continue;
+        }
+        out.admitted += 1;
+        out.max_queue_depth = out.max_queue_depth.max(depth + 1);
+        out.depth_sum += depth as u64 + 1;
+        // 4. Join (or open) this workload's batch; dispatch when full.
+        let key = trace[i].workload.clone();
+        let entry = open.entry(key.clone()).or_insert_with(|| {
+            let id = next_batch_id;
+            next_batch_id += 1;
+            OpenBatch { id, open_us: now, members: Vec::new() }
+        });
+        entry.members.push(i);
+        waiting += 1;
+        if entry.members.len() >= opts.max_batch {
+            let b = open.remove(&key).unwrap();
+            waiting -= b.members.len();
+            close_batch(b, key, now, trace, service_us, opts, &mut device, &mut out);
+        }
+    }
+    // 5. The generator stopped; flush the still-open batches at their
+    //    window expiries, in the same event order as above.
+    let mut rest: Vec<(String, OpenBatch)> = open.into_iter().collect();
+    rest.sort_by_key(|(_, b)| (b.open_us.saturating_add(opts.max_wait_us), b.id));
+    for (key, b) in rest {
+        let ready = b.open_us.saturating_add(opts.max_wait_us);
+        close_batch(b, key, ready, trace, service_us, opts, &mut device, &mut out);
+    }
+    Ok(out)
+}
+
+/// Dispatch one closed batch on the virtual device: drop expired
+/// members, charge the service time, record completions.
+#[allow(clippy::too_many_arguments)]
+fn close_batch(
+    batch: OpenBatch,
+    workload: String,
+    ready_us: u64,
+    trace: &[Request],
+    service_us: &BTreeMap<String, u64>,
+    opts: &SchedOptions,
+    device: &mut Device,
+    out: &mut Schedule,
+) {
+    let start_us = device.free_us.max(ready_us);
+    let mut requests = Vec::with_capacity(batch.members.len());
+    let mut expired = Vec::new();
+    for i in batch.members {
+        let missed = opts
+            .deadline_us
+            .is_some_and(|d| trace[i].t_us.saturating_add(d) < start_us);
+        if missed {
+            expired.push(i);
+        } else {
+            requests.push(i);
+        }
+    }
+    let done_us = if requests.is_empty() {
+        start_us // nothing dispatched; the device stays free
+    } else {
+        // Saturating throughout: `schedule` stays total (no panic, no
+        // wraparound) even for arrival times near u64::MAX.
+        let service = opts
+            .dispatch_overhead_us
+            .saturating_add(service_us[&workload].saturating_mul(requests.len() as u64));
+        device.free_us = start_us.saturating_add(service);
+        device.in_flight.push_back((device.free_us, requests.len()));
+        device.busy += requests.len();
+        device.free_us
+    };
+    for &i in &requests {
+        out.latencies_us.push((i, done_us.saturating_sub(trace[i].t_us)));
+    }
+    out.batches.push(Batch {
+        id: batch.id,
+        workload,
+        open_us: batch.open_us,
+        ready_us,
+        start_us,
+        done_us,
+        requests,
+        expired,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(t_us: u64, workload: &str) -> Request {
+        Request { t_us, workload: workload.to_string(), seed: t_us }
+    }
+
+    fn service(pairs: &[(&str, u64)]) -> BTreeMap<String, u64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    fn opts(max_batch: usize, max_wait_us: u64) -> SchedOptions {
+        SchedOptions {
+            max_batch,
+            max_wait_us,
+            queue_depth: 1024,
+            deadline_us: None,
+            dispatch_overhead_us: 10,
+        }
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let trace = [req(0, "w"), req(1, "w"), req(2, "w")];
+        let s = schedule(&trace, &service(&[("w", 100)]), &opts(3, 1_000_000)).unwrap();
+        assert_eq!(s.batches.len(), 1);
+        let b = &s.batches[0];
+        assert_eq!((b.ready_us, b.start_us), (2, 2), "full at the third arrival");
+        assert_eq!(b.done_us, 2 + 10 + 3 * 100);
+        assert_eq!(b.occupancy(), 3);
+        assert_eq!(s.completed(), 3);
+    }
+
+    #[test]
+    fn window_expiry_closes_partial_batches() {
+        // One lonely request: the window, not max_batch, dispatches it.
+        let trace = [req(5, "w")];
+        let s = schedule(&trace, &service(&[("w", 100)]), &opts(8, 200)).unwrap();
+        assert_eq!(s.batches.len(), 1);
+        assert_eq!(s.batches[0].ready_us, 205);
+        assert_eq!(s.batches[0].done_us, 205 + 10 + 100);
+        // Latency = window wait + overhead + service.
+        assert_eq!(s.latencies_us[0].1, 200 + 10 + 100);
+    }
+
+    #[test]
+    fn max_wait_bounds_cobatching_delay() {
+        // Sparse arrivals never fill max_batch; each waits exactly the
+        // window (device is idle), so latency ≤ wait + overhead + svc.
+        let trace: Vec<Request> = (0..8).map(|i| req(i * 10_000, "w")).collect();
+        let o = opts(64, 500);
+        let s = schedule(&trace, &service(&[("w", 100)]), &o).unwrap();
+        assert_eq!(s.completed(), 8);
+        for &(_, lat) in &s.latencies_us {
+            assert!(lat <= 500 + 10 + 100, "latency {lat} exceeds the window bound");
+        }
+    }
+
+    #[test]
+    fn device_serializes_batches_and_backlog_accumulates() {
+        // Two batches of one workload, ready back-to-back; the second
+        // starts when the first finishes, not at its ready time.
+        let trace = [req(0, "w"), req(1, "w"), req(2, "w"), req(3, "w")];
+        let s = schedule(&trace, &service(&[("w", 1000)]), &opts(2, 1_000_000)).unwrap();
+        assert_eq!(s.batches.len(), 2);
+        assert_eq!(s.batches[0].start_us, 1);
+        assert_eq!(s.batches[1].ready_us, 3);
+        assert_eq!(s.batches[1].start_us, s.batches[0].done_us);
+    }
+
+    #[test]
+    fn mixed_workloads_batch_separately() {
+        let trace = [req(0, "a"), req(1, "b"), req(2, "a"), req(3, "b")];
+        let s = schedule(&trace, &service(&[("a", 10), ("b", 10)]), &opts(2, 1_000)).unwrap();
+        assert_eq!(s.batches.len(), 2);
+        for b in &s.batches {
+            assert_eq!(b.occupancy(), 2, "batches never mix workloads");
+            let w: Vec<&str> =
+                b.requests.iter().map(|&i| trace[i].workload.as_str()).collect();
+            assert!(w.iter().all(|x| *x == b.workload));
+        }
+    }
+
+    #[test]
+    fn bounded_queue_sheds_overload() {
+        // Service far slower than arrivals and a tiny queue: most of
+        // the burst is shed, nothing is lost silently.
+        let trace: Vec<Request> = (0..32).map(|i| req(i, "w")).collect();
+        let mut o = opts(1, 0);
+        o.queue_depth = 2;
+        let s = schedule(&trace, &service(&[("w", 1_000_000)]), &o).unwrap();
+        assert!(!s.rejected_queue_full.is_empty());
+        assert_eq!(
+            s.admitted + s.rejected_queue_full.len(),
+            32,
+            "every request is admitted or shed, never dropped silently"
+        );
+        assert!(s.max_queue_depth <= 2);
+    }
+
+    #[test]
+    fn passed_deadlines_expire_at_dispatch() {
+        // A long backlog forms; later requests' deadlines pass before
+        // their batches start.
+        let trace: Vec<Request> = (0..8).map(|i| req(i, "w")).collect();
+        let mut o = opts(1, 0);
+        o.deadline_us = Some(50);
+        let s = schedule(&trace, &service(&[("w", 1000)]), &o).unwrap();
+        assert!(s.expired() > 0, "backlogged requests must expire");
+        assert_eq!(s.completed() + s.expired(), 8);
+        // Expired members consume no device time: completions all
+        // started within their deadline.
+        for b in &s.batches {
+            for &i in &b.requests {
+                assert!(b.start_us <= trace[i].t_us + 50);
+            }
+        }
+    }
+
+    #[test]
+    fn all_expired_trailing_batch_does_not_extend_makespan() {
+        // 8 requests at t=0 fill a batch and complete at 810; a
+        // straggler at t=900 waits out its 2000us window, expires at
+        // dispatch (start 2900 > 900 + 1000), and must not count as
+        // the last completion.
+        let mut trace: Vec<Request> = (0..8).map(|_| req(0, "w")).collect();
+        trace.push(req(900, "w"));
+        let mut o = opts(8, 2000);
+        o.deadline_us = Some(1000);
+        let s = schedule(&trace, &service(&[("w", 100)]), &o).unwrap();
+        assert_eq!(s.completed(), 8);
+        assert_eq!(s.expired(), 1);
+        assert_eq!(s.makespan_end_us(), 810, "expired dispatches are not completions");
+    }
+
+    #[test]
+    fn unknown_workload_is_a_typed_error() {
+        let trace = [req(0, "ghost")];
+        let err = schedule(&trace, &service(&[("w", 1)]), &opts(1, 0)).unwrap_err();
+        assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn zero_sized_options_are_typed_errors() {
+        let trace = [req(0, "w")];
+        let svc = service(&[("w", 1)]);
+        let mut o = opts(0, 0);
+        assert!(matches!(
+            schedule(&trace, &svc, &o),
+            Err(VtaError::InvalidRequest(_))
+        ));
+        o.max_batch = 1;
+        o.queue_depth = 0;
+        assert!(matches!(
+            schedule(&trace, &svc, &o),
+            Err(VtaError::InvalidRequest(_))
+        ));
+    }
+
+    #[test]
+    fn schedule_is_a_pure_function_of_inputs() {
+        let trace: Vec<Request> =
+            (0..64).map(|i| req(i * 37 % 1000, if i % 3 == 0 { "a" } else { "b" })).collect();
+        let svc = service(&[("a", 120), ("b", 80)]);
+        let o = opts(4, 300);
+        let s1 = schedule(&trace, &svc, &o).unwrap();
+        let s2 = schedule(&trace, &svc, &o).unwrap();
+        assert_eq!(s1.batches, s2.batches);
+        assert_eq!(s1.latencies_us, s2.latencies_us);
+    }
+}

@@ -1,128 +1,9 @@
 //! Work-stealing job queue for the sweep workers.
 //!
-//! Design points vary enormously in cost (a 1×64×64 configuration at
-//! 224×224 simulates orders of magnitude more slowly than 1×16×16 at
-//! 56×56), so static partitioning leaves workers idle. Jobs are striped
-//! round-robin across per-worker deques at construction; a worker pops
-//! from the front of its own deque and, when empty, steals from the back
-//! of its neighbours'. Stealing from the opposite end keeps contention
-//! low: owner and thief touch different ends of a victim deque.
-//!
-//! `std::sync::Mutex` per deque is deliberate — job granularity is whole
-//! network simulations (milliseconds to minutes), so lock traffic is
-//! noise and the std-only implementation stays dependency-free.
+//! The implementation moved to [`crate::util::pool`] when the serving
+//! runtime (`crate::serve`) started sharing it; this module keeps the
+//! historical `sweep::queue::JobQueue` path alive for the sweep engine
+//! and its tests. See the pool module for the design rationale
+//! (round-robin striping, opposite-end stealing, `Mutex` per deque).
 
-use std::collections::VecDeque;
-use std::sync::Mutex;
-
-pub struct JobQueue {
-    deques: Vec<Mutex<VecDeque<usize>>>,
-}
-
-impl JobQueue {
-    /// Distribute `jobs` (indices into the caller's job list) across
-    /// `workers` deques, round-robin so expensive neighbours in grid
-    /// order land on different workers.
-    pub fn new(workers: usize, jobs: &[usize]) -> JobQueue {
-        let workers = workers.max(1);
-        let mut deques: Vec<VecDeque<usize>> = (0..workers).map(|_| VecDeque::new()).collect();
-        for (i, &job) in jobs.iter().enumerate() {
-            deques[i % workers].push_back(job);
-        }
-        JobQueue { deques: deques.into_iter().map(Mutex::new).collect() }
-    }
-
-    pub fn workers(&self) -> usize {
-        self.deques.len()
-    }
-
-    /// Next job for `worker`: own deque first (front), then steal from
-    /// the back of the nearest non-empty victim. `None` means every
-    /// deque is empty — the worker can exit.
-    pub fn pop(&self, worker: usize) -> Option<usize> {
-        let me = worker % self.deques.len();
-        if let Some(job) = self.deques[me].lock().unwrap().pop_front() {
-            return Some(job);
-        }
-        for off in 1..self.deques.len() {
-            let victim = (me + off) % self.deques.len();
-            if let Some(job) = self.deques[victim].lock().unwrap().pop_back() {
-                return Some(job);
-            }
-        }
-        None
-    }
-
-    /// Jobs not yet handed out (racy under concurrency; for reporting).
-    pub fn remaining(&self) -> usize {
-        self.deques.iter().map(|d| d.lock().unwrap().len()).sum()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn every_job_popped_exactly_once_single_worker() {
-        let jobs: Vec<usize> = (0..17).collect();
-        let q = JobQueue::new(1, &jobs);
-        let mut got = Vec::new();
-        while let Some(j) = q.pop(0) {
-            got.push(j);
-        }
-        assert_eq!(got, jobs);
-    }
-
-    #[test]
-    fn stealing_drains_other_deques() {
-        let jobs: Vec<usize> = (0..8).collect();
-        let q = JobQueue::new(4, &jobs);
-        // Worker 0 drains everything, stealing from workers 1..3.
-        let mut got = Vec::new();
-        while let Some(j) = q.pop(0) {
-            got.push(j);
-        }
-        got.sort_unstable();
-        assert_eq!(got, jobs);
-        assert_eq!(q.remaining(), 0);
-    }
-
-    #[test]
-    fn concurrent_workers_partition_the_jobs() {
-        let jobs: Vec<usize> = (0..64).collect();
-        let q = JobQueue::new(4, &jobs);
-        let got = Mutex::new(Vec::new());
-        std::thread::scope(|s| {
-            for w in 0..4 {
-                let q = &q;
-                let got = &got;
-                s.spawn(move || {
-                    while let Some(j) = q.pop(w) {
-                        got.lock().unwrap().push(j);
-                    }
-                });
-            }
-        });
-        let mut got = got.into_inner().unwrap();
-        got.sort_unstable();
-        assert_eq!(got, jobs, "each job must be handed out exactly once");
-    }
-
-    #[test]
-    fn more_workers_than_jobs() {
-        let jobs = [0usize, 1];
-        let q = JobQueue::new(8, &jobs);
-        assert_eq!(q.pop(5), Some(0));
-        assert_eq!(q.pop(5), Some(1));
-        assert_eq!(q.pop(5), None);
-        assert_eq!(q.pop(0), None);
-    }
-
-    #[test]
-    fn zero_workers_clamped() {
-        let q = JobQueue::new(0, &[3]);
-        assert_eq!(q.workers(), 1);
-        assert_eq!(q.pop(0), Some(3));
-    }
-}
+pub use crate::util::pool::JobQueue;

@@ -1,12 +1,14 @@
 //! Self-contained substrate utilities (no external crates are reachable
-//! offline, so JSON, CLI parsing, PRNG, stats, benching and property
-//! testing are implemented here from scratch).
+//! offline, so JSON, CLI parsing, PRNG, stats, benching, property
+//! testing, and the work-stealing thread pool are implemented here from
+//! scratch).
 
 pub mod bench;
 pub mod bitfield;
 pub mod cli;
 pub mod hash;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,203 @@
+//! Generic work-stealing worker pool (extracted from `sweep::queue` so
+//! the serving runtime and the sweep engine share one implementation).
+//!
+//! Jobs vary enormously in cost (a 1×64×64 configuration at 224×224
+//! simulates orders of magnitude more slowly than 1×16×16 at 56×56; a
+//! serve batch of eight ResNet requests costs more than one micro-net
+//! request), so static partitioning leaves workers idle. Jobs are
+//! striped round-robin across per-worker deques at construction; a
+//! worker pops from the front of its own deque and, when empty, steals
+//! from the back of its neighbours'. Stealing from the opposite end
+//! keeps contention low: owner and thief touch different ends of a
+//! victim deque.
+//!
+//! `std::sync::Mutex` per deque is deliberate — job granularity is
+//! whole network simulations or serve batches (milliseconds to
+//! minutes), so lock traffic is noise and the std-only implementation
+//! stays dependency-free.
+//!
+//! [`run_indexed`] is the convenience front door: evaluate a closure
+//! over `0..jobs` across a scoped thread pool and collect the results
+//! *in job order* — callers get parallel wall-clock with a result
+//! vector indistinguishable from a serial loop's.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+pub struct JobQueue {
+    deques: Vec<Mutex<VecDeque<usize>>>,
+}
+
+impl JobQueue {
+    /// Distribute `jobs` (indices into the caller's job list) across
+    /// `workers` deques, round-robin so expensive neighbours in grid
+    /// order land on different workers.
+    pub fn new(workers: usize, jobs: &[usize]) -> JobQueue {
+        let workers = workers.max(1);
+        let mut deques: Vec<VecDeque<usize>> = (0..workers).map(|_| VecDeque::new()).collect();
+        for (i, &job) in jobs.iter().enumerate() {
+            deques[i % workers].push_back(job);
+        }
+        JobQueue { deques: deques.into_iter().map(Mutex::new).collect() }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.deques.len()
+    }
+
+    /// Next job for `worker`: own deque first (front), then steal from
+    /// the back of the nearest non-empty victim. `None` means every
+    /// deque is empty — the worker can exit.
+    pub fn pop(&self, worker: usize) -> Option<usize> {
+        let me = worker % self.deques.len();
+        if let Some(job) = self.deques[me].lock().unwrap().pop_front() {
+            return Some(job);
+        }
+        for off in 1..self.deques.len() {
+            let victim = (me + off) % self.deques.len();
+            if let Some(job) = self.deques[victim].lock().unwrap().pop_back() {
+                return Some(job);
+            }
+        }
+        None
+    }
+
+    /// Jobs not yet handed out (racy under concurrency; for reporting).
+    pub fn remaining(&self) -> usize {
+        self.deques.iter().map(|d| d.lock().unwrap().len()).sum()
+    }
+}
+
+/// Evaluate `f(0..jobs)` across up to `workers` scoped threads and
+/// return the results in job-index order. The worker count only changes
+/// wall clock, never the result vector: index `i` always holds `f(i)`.
+/// A single worker (or a single job) runs inline with no threads at
+/// all, so debugging a parallel caller under `workers = 1` is exactly
+/// the serial program.
+///
+/// Panics in `f` propagate to the caller (scoped-thread semantics), so
+/// a caller that must not die converts failures into a `Result` item
+/// instead.
+pub fn run_indexed<R, F>(workers: usize, jobs: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    if jobs == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, jobs);
+    if workers == 1 {
+        return (0..jobs).map(f).collect();
+    }
+    let indices: Vec<usize> = (0..jobs).collect();
+    let queue = JobQueue::new(workers, &indices);
+    let mut init: Vec<Option<R>> = Vec::with_capacity(jobs);
+    init.resize_with(jobs, || None);
+    let slots = Mutex::new(init);
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let queue = &queue;
+            let slots = &slots;
+            let f = &f;
+            scope.spawn(move || {
+                while let Some(j) = queue.pop(w) {
+                    let r = f(j);
+                    slots.lock().unwrap()[j] = Some(r);
+                }
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every job index is popped exactly once"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_job_popped_exactly_once_single_worker() {
+        let jobs: Vec<usize> = (0..17).collect();
+        let q = JobQueue::new(1, &jobs);
+        let mut got = Vec::new();
+        while let Some(j) = q.pop(0) {
+            got.push(j);
+        }
+        assert_eq!(got, jobs);
+    }
+
+    #[test]
+    fn stealing_drains_other_deques() {
+        let jobs: Vec<usize> = (0..8).collect();
+        let q = JobQueue::new(4, &jobs);
+        // Worker 0 drains everything, stealing from workers 1..3.
+        let mut got = Vec::new();
+        while let Some(j) = q.pop(0) {
+            got.push(j);
+        }
+        got.sort_unstable();
+        assert_eq!(got, jobs);
+        assert_eq!(q.remaining(), 0);
+    }
+
+    #[test]
+    fn concurrent_workers_partition_the_jobs() {
+        let jobs: Vec<usize> = (0..64).collect();
+        let q = JobQueue::new(4, &jobs);
+        let got = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for w in 0..4 {
+                let q = &q;
+                let got = &got;
+                s.spawn(move || {
+                    while let Some(j) = q.pop(w) {
+                        got.lock().unwrap().push(j);
+                    }
+                });
+            }
+        });
+        let mut got = got.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, jobs, "each job must be handed out exactly once");
+    }
+
+    #[test]
+    fn more_workers_than_jobs() {
+        let jobs = [0usize, 1];
+        let q = JobQueue::new(8, &jobs);
+        assert_eq!(q.pop(5), Some(0));
+        assert_eq!(q.pop(5), Some(1));
+        assert_eq!(q.pop(5), None);
+        assert_eq!(q.pop(0), None);
+    }
+
+    #[test]
+    fn zero_workers_clamped() {
+        let q = JobQueue::new(0, &[3]);
+        assert_eq!(q.workers(), 1);
+        assert_eq!(q.pop(0), Some(3));
+    }
+
+    #[test]
+    fn run_indexed_preserves_job_order() {
+        for workers in [0usize, 1, 3, 8] {
+            let got = run_indexed(workers, 23, |i| i * i);
+            let want: Vec<usize> = (0..23).map(|i| i * i).collect();
+            assert_eq!(got, want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn run_indexed_handles_empty_and_non_clone_results() {
+        let empty: Vec<String> = run_indexed(4, 0, |i| i.to_string());
+        assert!(empty.is_empty());
+        // String is Send but the slots path must not require Clone.
+        let got = run_indexed(4, 5, |i| format!("job-{i}"));
+        assert_eq!(got[4], "job-4");
+    }
+}

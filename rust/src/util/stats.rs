@@ -24,6 +24,16 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
     let mut sorted = xs.to_vec();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, p)
+}
+
+/// [`percentile`] over an already-sorted slice — no copy, no re-sort.
+/// Callers extracting several percentiles from one sample (the serve
+/// report takes p50/p95/p99) sort once and interpolate per rank.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
     let rank = (p / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -98,6 +108,12 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert_eq!(median(&xs), 2.5);
+        // The no-copy path agrees with the sorting one bit-for-bit.
+        let unsorted = [3.0, 1.0, 4.0, 2.0];
+        for p in [0.0, 37.5, 50.0, 95.0, 100.0] {
+            assert_eq!(percentile_sorted(&xs, p), percentile(&unsorted, p));
+        }
+        assert!(percentile_sorted(&[], 50.0).is_nan());
     }
 
     #[test]

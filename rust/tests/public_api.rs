@@ -1,7 +1,7 @@
-//! Public-API snapshot: the sorted `pub` items of the redesigned
-//! `engine` / `runtime` / `sweep` surface, pinned in a golden file so a
-//! future PR cannot silently break the evaluation API this redesign
-//! froze (CI fails and shows the diff instead).
+//! Public-API snapshot: the sorted `pub` items of the
+//! `engine` / `runtime` / `serve` / `sweep` surface, pinned in a golden
+//! file so a future PR cannot silently break the evaluation or serving
+//! API (CI fails and shows the diff instead).
 //!
 //! The extraction is deliberately simple and deterministic — the first
 //! line of every `pub `-prefixed item (trimmed, with a trailing `{`
@@ -17,7 +17,8 @@
 
 use std::path::Path;
 
-const MODULES: [&str; 3] = ["rust/src/engine", "rust/src/runtime", "rust/src/sweep"];
+const MODULES: [&str; 4] =
+    ["rust/src/engine", "rust/src/runtime", "rust/src/serve", "rust/src/sweep"];
 const GOLDEN: &str = "rust/tests/golden/public_api.txt";
 
 fn snapshot(root: &Path) -> String {

@@ -1,0 +1,261 @@
+//! Serving-runtime acceptance tests: the determinism contract (worker
+//! count never changes the schedule or the report), the batching and
+//! amortization invariants, and the typed rejection surface — the
+//! `backend_parity.rs` style applied to the serving layer.
+
+use vta::config::presets;
+use vta::engine::{BackendKind, VtaError};
+use vta::serve::{
+    self, schedule_digest, ArrivalSpec, Request, ServeOptions, SessionPool,
+};
+use vta::sweep::WorkloadSpec;
+
+fn micro_opts() -> ServeOptions {
+    ServeOptions {
+        cfg: presets::tiny_config(),
+        backend: BackendKind::TsimTiming,
+        workloads: vec![WorkloadSpec::Micro { block: 4 }],
+        ..ServeOptions::default()
+    }
+}
+
+fn micro_trace(requests: usize, seed: u64) -> Vec<Request> {
+    serve::synth_trace(
+        &ArrivalSpec::Poisson { rate_per_s: 500.0 },
+        &["micro@4".to_string()],
+        requests,
+        seed,
+    )
+    .unwrap()
+}
+
+/// The acceptance headline: a fixed seed produces byte-identical
+/// `ServeReport` JSON — and identical batch compositions — for
+/// `--jobs 1` and `--jobs 4`.
+#[test]
+fn report_is_byte_identical_across_worker_counts() {
+    let trace = micro_trace(48, 7);
+    let mut serial_opts = micro_opts();
+    serial_opts.jobs = 1;
+    let mut parallel_opts = micro_opts();
+    parallel_opts.jobs = 4;
+    let serial = serve::run(&serial_opts, &trace).unwrap();
+    let parallel = serve::run(&parallel_opts, &trace).unwrap();
+    assert_eq!(
+        serial.batches, parallel.batches,
+        "batch compositions must not depend on the worker count"
+    );
+    assert_eq!(
+        schedule_digest(&serial.batches),
+        schedule_digest(&parallel.batches)
+    );
+    assert_eq!(
+        serial.report.to_json().to_string_pretty(),
+        parallel.report.to_json().to_string_pretty(),
+        "ServeReport JSON must be byte-identical across --jobs 1 and --jobs 4"
+    );
+    assert_eq!(serial.report.completed, 48);
+}
+
+/// Replaying an archived trace reproduces the synthetic run exactly.
+#[test]
+fn replayed_trace_reproduces_the_run() {
+    let trace = micro_trace(24, 11);
+    let path = std::env::temp_dir()
+        .join(format!("vta_serve_replay_{}.jsonl", std::process::id()));
+    serve::write_trace(&path, &trace).unwrap();
+    let replayed = serve::read_trace(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let opts = micro_opts();
+    let a = serve::run(&opts, &trace).unwrap();
+    let b = serve::run(&opts, &replayed).unwrap();
+    assert_eq!(
+        a.report.to_json().to_string_pretty(),
+        b.report.to_json().to_string_pretty()
+    );
+}
+
+/// Warm-pool amortization: the first evaluation per workload simulates,
+/// every served request after it replays the memo, and the cycle
+/// accounting stays exact.
+#[test]
+fn warm_pool_amortizes_and_accounts_cycles_exactly() {
+    let opts = micro_opts();
+    // Arrivals much denser than the 2000us batching window, so
+    // coalescing is certain (~40 arrivals per window on average).
+    let trace = serve::synth_trace(
+        &ArrivalSpec::Poisson { rate_per_s: 20_000.0 },
+        &["micro@4".to_string()],
+        32,
+        3,
+    )
+    .unwrap();
+    let outcome = serve::run(&opts, &trace).unwrap();
+    let r = &outcome.report;
+    assert_eq!(r.completed, 32);
+    assert!(r.memo_hits > 0, "served requests must hit the warm memo");
+    let per_req = r.workloads["micro@4"].cycles_per_request;
+    assert!(per_req > 0);
+    assert_eq!(
+        r.total_cycles,
+        32 * per_req,
+        "cycles are data-independent: every request costs the warm amount"
+    );
+    // The batcher actually batched: fewer dispatches than requests.
+    assert!(r.batches_dispatched < 32, "dense arrivals must coalesce");
+    assert!(r.mean_batch_occupancy > 1.0);
+}
+
+/// A mixed pool serves both workloads and never mixes them in a batch.
+#[test]
+fn mixed_workload_pool_batches_separately() {
+    let mut opts = micro_opts();
+    opts.workloads =
+        vec![WorkloadSpec::Micro { block: 4 }, WorkloadSpec::Micro { block: 8 }];
+    let trace = serve::synth_trace(
+        &ArrivalSpec::Poisson { rate_per_s: 500.0 },
+        &["micro@4".to_string(), "micro@8".to_string()],
+        32,
+        5,
+    )
+    .unwrap();
+    let outcome = serve::run(&opts, &trace).unwrap();
+    assert_eq!(outcome.report.completed, 32);
+    assert_eq!(outcome.report.workloads.len(), 2);
+    for batch in &outcome.batches {
+        for &i in &batch.requests {
+            assert_eq!(trace[i].workload, batch.workload, "batches never mix workloads");
+        }
+    }
+}
+
+/// Overload sheds at the bounded queue — with exact, loss-free
+/// accounting. (Deadline expiry, which itself sheds load and therefore
+/// keeps the queue short, is exercised separately below.)
+#[test]
+fn overload_sheds_at_the_bounded_queue() {
+    let mut opts = micro_opts();
+    opts.max_batch = 1;
+    opts.max_wait_us = 0;
+    opts.queue_depth = 4;
+    // A burst far faster than the service rate.
+    let trace: Vec<Request> = (0..64)
+        .map(|i| Request { t_us: i, workload: "micro@4".to_string(), seed: i })
+        .collect();
+    let outcome = serve::run(&opts, &trace).unwrap();
+    let r = &outcome.report;
+    assert!(r.rejected_queue_full > 0, "the bounded queue must shed");
+    assert_eq!(
+        r.completed + r.rejected_queue_full + r.expired_deadline,
+        r.submitted,
+        "every request is completed, shed, or expired — never lost"
+    );
+    assert!(r.max_queue_depth <= opts.queue_depth);
+}
+
+/// Backlogged requests whose deadline passes before their batch starts
+/// expire at dispatch instead of wasting device time.
+#[test]
+fn backlog_expires_past_deadline_requests() {
+    let mut opts = micro_opts();
+    opts.max_batch = 1;
+    opts.max_wait_us = 0;
+    opts.deadline_us = Some(100);
+    let trace: Vec<Request> = (0..64)
+        .map(|i| Request { t_us: i, workload: "micro@4".to_string(), seed: i })
+        .collect();
+    let outcome = serve::run(&opts, &trace).unwrap();
+    let r = &outcome.report;
+    assert!(r.expired_deadline > 0, "a backlog past the deadline must expire requests");
+    assert!(r.completed > 0, "the head of the burst still completes");
+    assert_eq!(r.completed + r.rejected_queue_full + r.expired_deadline, r.submitted);
+    // Expired requests consumed no device time.
+    let per_req = r.workloads["micro@4"].cycles_per_request;
+    assert_eq!(r.total_cycles, r.completed as u64 * per_req);
+}
+
+/// The typed rejection surface of the serving layer.
+#[test]
+fn rejections_are_typed_vta_errors() {
+    // fsim produces no cycles: the pool cannot price requests.
+    let mut opts = micro_opts();
+    opts.backend = BackendKind::Fsim;
+    let err = serve::run(&opts, &[]).unwrap_err();
+    assert!(matches!(err, VtaError::Unsupported(_)), "got {err:?}");
+
+    // A trace naming an unpooled workload does not fit the pool.
+    let opts = micro_opts();
+    let ghost =
+        [Request { t_us: 0, workload: "resnet18@224".to_string(), seed: 1 }];
+    let err = serve::run(&opts, &ghost).unwrap_err();
+    assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
+
+    // Nonsensical scheduler options.
+    let mut opts = micro_opts();
+    opts.max_batch = 0;
+    let err = serve::run(&opts, &micro_trace(2, 1)).unwrap_err();
+    assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
+
+    // A malformed arrival spec never reaches the runtime.
+    let err = ArrivalSpec::parse("burst:10").unwrap_err();
+    assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
+
+    // An invalid hardware configuration fails with the config taxonomy.
+    let mut opts = micro_opts();
+    opts.cfg.axi_bytes = 3;
+    let err = SessionPool::build(&opts).unwrap_err();
+    assert!(matches!(err, VtaError::Config(_)), "got {err:?}");
+}
+
+/// The functional rungs serve too (with bit-exact outputs via memo
+/// replay); the report stays deterministic per rung.
+#[test]
+fn functional_tsim_serves_deterministically() {
+    let mut opts = micro_opts();
+    opts.backend = BackendKind::Tsim;
+    let trace = micro_trace(8, 9);
+    let a = serve::run(&opts, &trace).unwrap();
+    let b = serve::run(&opts, &trace).unwrap();
+    assert_eq!(
+        a.report.to_json().to_string_pretty(),
+        b.report.to_json().to_string_pretty()
+    );
+    assert_eq!(a.report.completed, 8);
+}
+
+/// The analytical rung serves instantly: same scheduler, predicted
+/// service times.
+#[test]
+fn analytical_backend_serves() {
+    let mut opts = micro_opts();
+    opts.backend = BackendKind::Analytical;
+    let trace = micro_trace(16, 13);
+    let outcome = serve::run(&opts, &trace).unwrap();
+    assert_eq!(outcome.report.completed, 16);
+    assert_eq!(outcome.report.memo_hits, 0, "the model pool has no layer memo");
+    assert!(outcome.report.total_cycles > 0);
+}
+
+/// `max_wait_us` bounds the co-batching delay of an unloaded system:
+/// no admitted request waits longer than window + overhead + service.
+#[test]
+fn max_wait_bounds_unloaded_latency() {
+    let mut opts = micro_opts();
+    opts.max_batch = 64; // never fills: the window is the only trigger
+    opts.max_wait_us = 500;
+    // Arrivals far apart: the device is always idle at dispatch.
+    let trace: Vec<Request> = (0..6)
+        .map(|i| Request { t_us: i * 10_000_000, workload: "micro@4".to_string(), seed: i })
+        .collect();
+    let outcome = serve::run(&opts, &trace).unwrap();
+    let r = &outcome.report;
+    let service = r.workloads["micro@4"].service_us;
+    let bound = (opts.max_wait_us + opts.dispatch_overhead_us + service) as f64;
+    assert_eq!(r.completed, 6);
+    assert!(
+        r.latency_max_us as f64 <= bound,
+        "unloaded latency {} must respect the window bound {}",
+        r.latency_max_us,
+        bound
+    );
+}
