@@ -108,6 +108,31 @@ fn main() {
         s.batches.len()
     });
 
+    // The fleet router: the same 10k-request trace planned across three
+    // heterogeneous virtual devices (pure virtual-time planning — this
+    // is the per-request cost `vta serve --fleet` adds over `schedule`).
+    let devices: Vec<serve::DeviceCost> = [(300u64, 1.0f64), (150, 2.0), (75, 4.0)]
+        .iter()
+        .enumerate()
+        .map(|(d, &(us, area))| serve::DeviceCost {
+            config: format!("dev{d}"),
+            service_us: [("micro@4".to_string(), us)].into_iter().collect(),
+            scaled_area: area,
+        })
+        .collect();
+    b.bench("serve/fleet_schedule_10k_requests", || {
+        let fs = serve::schedule_fleet(
+            &big_trace,
+            &devices,
+            &serve::EarliestFeasibleCheapest,
+            &sched_opts,
+            None,
+        )
+        .unwrap();
+        assert!(fs.schedule.completed() > 0);
+        fs.schedule.batches.len()
+    });
+
     b.save_if_requested();
     println!("\n{} benchmarks complete", b.results.len());
 }

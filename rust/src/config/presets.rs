@@ -106,7 +106,27 @@ pub fn tiny_config() -> VtaConfig {
     }
 }
 
-/// Look a preset up by name (CLI `--config <name>` path).
+/// Parse a [`scaled_config`] name — the
+/// `b{batch}-i{in}-o{out}-s{scale}-m{axi}` format `scaled_config`
+/// itself stamps — back into its configuration, so sweep-result names
+/// round-trip through the CLI (`--config`, `--fleet-configs`).
+pub fn parse_scaled_name(s: &str) -> Option<VtaConfig> {
+    let parts: Vec<&str> = s.split('-').collect();
+    if parts.len() != 5 {
+        return None;
+    }
+    let mut vals = [0usize; 5];
+    for (slot, (part, prefix)) in vals.iter_mut().zip(parts.iter().zip(["b", "i", "o", "s", "m"]))
+    {
+        *slot = part.strip_prefix(prefix)?.parse().ok()?;
+    }
+    let [batch, block_in, block_out, spad_scale, axi_bytes] = vals;
+    Some(scaled_config(batch, block_in, block_out, spad_scale, axi_bytes))
+}
+
+/// Look a preset up by name (CLI `--config <name>` path). Falls back to
+/// [`parse_scaled_name`] so any design point a sweep names is reachable
+/// directly.
 pub fn by_name(name: &str) -> Option<VtaConfig> {
     match name {
         "default" => Some(default_config()),
@@ -114,7 +134,7 @@ pub fn by_name(name: &str) -> Option<VtaConfig> {
         "tiny" => Some(tiny_config()),
         "large" => Some(scaled_config(1, 64, 64, 2, 64)),
         "wide32" => Some(scaled_config(1, 32, 32, 2, 32)),
-        _ => None,
+        _ => parse_scaled_name(name),
     }
 }
 
@@ -155,5 +175,15 @@ mod tests {
         assert!(by_name("default").is_some());
         assert!(by_name("original").is_some());
         assert!(by_name("nonsense").is_none());
+    }
+
+    #[test]
+    fn scaled_names_parse_back() {
+        let cfg = scaled_config(1, 32, 32, 2, 16);
+        assert_eq!(parse_scaled_name(&cfg.name), Some(cfg.clone()));
+        assert_eq!(by_name(&cfg.name), Some(cfg));
+        assert!(parse_scaled_name("b1-i16-o16").is_none(), "too few parts");
+        assert!(parse_scaled_name("b1-i16-o16-s1-mx").is_none(), "non-numeric field");
+        assert!(parse_scaled_name("x1-i16-o16-s1-m8").is_none(), "wrong prefix");
     }
 }

@@ -303,6 +303,10 @@ impl Backend for MemoBackend {
     fn eval(&self, prepared: &Prepared<'_>, request: &EvalRequest) -> Result<Evaluation, VtaError> {
         self.inner.eval(prepared, request)
     }
+
+    fn layer_memo(&self) -> Option<Arc<LayerMemo>> {
+        Some(self.memo.clone())
+    }
 }
 
 // Backend evaluations need a graph + config; keep the unit tests here

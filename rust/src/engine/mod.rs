@@ -318,6 +318,15 @@ pub trait Backend: Send + Sync {
 
     /// Evaluate one request against a prepared pair.
     fn eval(&self, prepared: &Prepared<'_>, request: &EvalRequest) -> Result<Evaluation, VtaError>;
+
+    /// The shared layer memo this backend injects at prepare time
+    /// (`Some` only for [`MemoBackend`]). Lets shape-reusing prepare
+    /// paths ([`Engine::prepare_shared_with_shapes`]) attach the memo
+    /// without re-running the graph-structural half of
+    /// [`Backend::prepare`].
+    fn layer_memo(&self) -> Option<Arc<LayerMemo>> {
+        None
+    }
 }
 
 /// The shared half of [`Backend::prepare`]: configuration validity, the
@@ -330,14 +339,7 @@ pub fn prepare_common<'g>(
     graph: &'g Graph,
     tuning: &Tuning,
 ) -> Result<Prepared<'g>, VtaError> {
-    cfg.validate()?;
-    if cfg.block_in != cfg.block_out {
-        return Err(VtaError::Unsupported(format!(
-            "network execution requires BLOCK_IN == BLOCK_OUT (activation tiles feed both \
-             GEMM operands); got {}x{}",
-            cfg.block_in, cfg.block_out
-        )));
-    }
+    check_exec_config(cfg)?;
     let shapes = graph.try_shapes().map_err(VtaError::Graph)?;
     Ok(Prepared {
         cfg: cfg.clone(),
@@ -346,6 +348,21 @@ pub fn prepare_common<'g>(
         memo: None,
         shapes: Arc::new(shapes),
     })
+}
+
+/// The config-only half of [`prepare_common`]: configuration validity
+/// plus the square-block constraint of graph execution. Factored out so
+/// shape-reusing prepare paths run exactly the same checks.
+fn check_exec_config(cfg: &VtaConfig) -> Result<(), VtaError> {
+    cfg.validate()?;
+    if cfg.block_in != cfg.block_out {
+        return Err(VtaError::Unsupported(format!(
+            "network execution requires BLOCK_IN == BLOCK_OUT (activation tiles feed both \
+             GEMM operands); got {}x{}",
+            cfg.block_in, cfg.block_out
+        )));
+    }
+    Ok(())
 }
 
 /// An owned, shareable [`Prepared`]: the `(config, graph)` pair bound
@@ -440,6 +457,36 @@ impl Engine {
         let (cfg, tuning, memo, shapes) =
             (prepared.cfg, prepared.tuning, prepared.memo, prepared.shapes);
         Ok(PreparedShared { cfg, graph, tuning, memo, shapes })
+    }
+
+    /// [`Engine::prepare_shared`] for callers that already ran the
+    /// graph-structural pass: reuses precomputed per-node `shapes`
+    /// instead of re-propagating them. Shapes depend only on the graph
+    /// — never on the config — so a serving fleet shares one graph
+    /// build + shape pass across N device configs and pays only the
+    /// config-level checks per device. The memo this engine's backend
+    /// would inject at prepare time is attached exactly as
+    /// [`Engine::prepare_shared`] would ([`Backend::layer_memo`]).
+    pub fn prepare_shared_with_shapes(
+        &self,
+        graph: Arc<Graph>,
+        shapes: Arc<Vec<Shape>>,
+    ) -> Result<PreparedShared, VtaError> {
+        check_exec_config(&self.cfg)?;
+        if shapes.len() != graph.nodes.len() {
+            return Err(VtaError::Graph(format!(
+                "shape vector holds {} entries for a {}-node graph (stale shapes?)",
+                shapes.len(),
+                graph.nodes.len()
+            )));
+        }
+        Ok(PreparedShared {
+            cfg: self.cfg.clone(),
+            graph,
+            tuning: self.tuning.clone(),
+            memo: self.backend.layer_memo(),
+            shapes,
+        })
     }
 
     /// Evaluate one request against a shared prepared graph.

@@ -61,6 +61,12 @@ fn usage() -> ! {
                       [--replay trace.jsonl] [--save-trace trace.jsonl] (recorded traces)\n\
                       [--clock-mhz 100] [--overhead-us 50] [--no-memo] [--graph-seed 1]\n\
                       [--out serve_report.json]\n\
+                      fleet: [--fleet] [--fleet-configs tiny,large,b1-i32-o32-s2-m32,...]\n\
+                      [--fleet-from-sweep cache.jsonl [--fleet-max 4]] (Pareto-point devices)\n\
+                      [--route earliest|least-loaded|cheapest] (deadline-aware routing)\n\
+                      [--autoscale R [--autoscale-interval-us 5000] [--scale-up-depth 4]]\n\
+                      (runs every single-device candidate + the combined fleet over the\n\
+                       same trace and reports the cost-vs-SLO frontier)\n\
            config     show|save --config <name> [--out path.json]\n\
            floorplan  [--config <name>]\n\
            isa        [--config <name>]"
@@ -501,20 +507,24 @@ fn cmd_serve(args: &Args) {
         .map(parse_workload)
         .collect();
     let deadline = args.get_u64("deadline-us", 0);
-    let opts = serve::ServeOptions {
-        cfg,
-        backend,
-        workloads,
-        graph_seed: args.get_u64("graph-seed", 1),
-        memo: !args.has_flag("no-memo"),
-        jobs: args.get_usize("jobs", 0),
-        max_batch: args.get_usize("max-batch", 8),
-        max_wait_us: args.get_u64("max-wait-us", 2_000),
-        queue_depth: args.get_usize("queue", 256),
-        deadline_us: (deadline > 0).then_some(deadline),
-        clock_mhz: args.get_u64("clock-mhz", 100),
-        dispatch_overhead_us: args.get_u64("overhead-us", 50),
-    };
+    let opts = serve::ServeOptions::builder()
+        .cfg(cfg)
+        .backend(backend)
+        .workloads(workloads)
+        .graph_seed(args.get_u64("graph-seed", 1))
+        .memo(!args.has_flag("no-memo"))
+        .jobs(args.get_usize("jobs", 0))
+        .max_batch(args.get_usize("max-batch", 8))
+        .max_wait_us(args.get_u64("max-wait-us", 2_000))
+        .queue_depth(args.get_usize("queue", 256))
+        .deadline_us((deadline > 0).then_some(deadline))
+        .clock_mhz(args.get_u64("clock-mhz", 100))
+        .dispatch_overhead_us(args.get_u64("overhead-us", 50))
+        .build()
+        .unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        });
 
     // Request trace: replay a recorded one, or generate a seeded
     // open-loop arrival stream over the pooled workloads.
@@ -543,6 +553,18 @@ fn cmd_serve(args: &Args) {
             std::process::exit(1);
         });
         println!("request trace written to {path}");
+    }
+
+    // `--fleet` (or any fleet-shaping option) switches to the
+    // heterogeneous frontier path; the single-device report below is
+    // itself one of the frontier's candidates.
+    let fleet_mode = args.has_flag("fleet")
+        || args.get("fleet").is_some()
+        || args.get("fleet-configs").is_some()
+        || args.get("fleet-from-sweep").is_some();
+    if fleet_mode {
+        cmd_serve_fleet(args, opts, &trace);
+        return;
     }
 
     println!(
@@ -608,6 +630,119 @@ fn cmd_serve(args: &Args) {
     let out = args.get_or("out", "serve_report.json");
     match std::fs::write(out, r.to_json().to_string_pretty()) {
         Ok(()) => println!("report written to {out}"),
+        Err(e) => {
+            eprintln!("error writing {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Resolve the fleet's device configs: a sweep cache's Pareto survivors
+/// (`--fleet-from-sweep`), an explicit list of preset /
+/// `bB-iI-oO-sS-mM` names (`--fleet-configs`), or the built-in
+/// three-point default.
+fn fleet_configs(args: &Args) -> Vec<VtaConfig> {
+    if let Some(path) = args.get("fleet-from-sweep") {
+        let max = args.get_usize("fleet-max", 4);
+        return serve::configs_from_sweep(Path::new(path), max).unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        });
+    }
+    match args.get("fleet-configs") {
+        Some(list) => list
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|name| {
+                presets::by_name(name).unwrap_or_else(|| {
+                    eprintln!(
+                        "error: unknown fleet config '{name}' (expected a preset name or a \
+                         bB-iI-oO-sS-mM scaled-config name)"
+                    );
+                    std::process::exit(2);
+                })
+            })
+            .collect(),
+        None => serve::fleet::default_fleet_configs(),
+    }
+}
+
+fn cmd_serve_fleet(args: &Args, base: serve::ServeOptions, trace: &[serve::Request]) {
+    let configs = fleet_configs(args);
+    let policy = serve::RoutePolicyKind::parse(args.get_or("route", "earliest"))
+        .unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        });
+    let auto_on = args.has_flag("autoscale") || args.get("autoscale").is_some();
+    let autoscale = auto_on.then(|| {
+        let d = serve::AutoscaleOptions::default();
+        serve::AutoscaleOptions {
+            interval_us: args.get_u64("autoscale-interval-us", d.interval_us),
+            max_replicas: args.get_usize("autoscale", d.max_replicas),
+            scale_up_depth: args.get_usize("scale-up-depth", d.scale_up_depth),
+        }
+    });
+    let opts = serve::FleetOptions { base, configs, policy, autoscale };
+
+    println!(
+        "fleet frontier: {} device configs + combined fleet, policy {policy}, {} requests",
+        opts.configs.len(),
+        trace.len()
+    );
+    let outcome = serve::frontier(&opts, trace).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    });
+
+    println!(
+        "\n{:<16} {:>9} {:>9} {:>6} {:>7} {:>9} {:>9} {:>10} {:>7}",
+        "candidate",
+        "peak_area",
+        "completed",
+        "shed",
+        "expired",
+        "p50_us",
+        "p99_us",
+        "thr_rps",
+        "pareto"
+    );
+    for e in &outcome.entries {
+        let r = &e.report;
+        println!(
+            "{:<16} {:>9.2} {:>9} {:>6} {:>7} {:>9.0} {:>9.0} {:>10.1} {:>7}",
+            e.label,
+            r.peak_area,
+            r.completed,
+            r.rejected_queue_full,
+            r.expired_deadline,
+            r.latency_p50_us,
+            r.latency_p99_us,
+            r.throughput_rps,
+            if e.pareto { "*" } else { "" }
+        );
+    }
+
+    if let Some(fleet) = outcome.entries.iter().find(|e| e.label.starts_with("fleet(")) {
+        println!("\nfleet device detail ({}, routed by {policy}):", fleet.label);
+        for d in &fleet.report.devices {
+            println!(
+                "  {:<16} area {:>6.2}  peak replicas {}  routed {:>5}  done {:>5}  batches {:>4}",
+                d.config,
+                d.scaled_area,
+                d.peak_replicas,
+                d.routed,
+                d.completed,
+                d.batches_dispatched
+            );
+        }
+    }
+    println!("\nwall clock: {}", stats::fmt_ns(outcome.wall_ns as f64));
+
+    let out = args.get_or("out", "fleet_frontier.json");
+    match std::fs::write(out, outcome.to_json().to_string_pretty()) {
+        Ok(()) => println!("frontier written to {out}"),
         Err(e) => {
             eprintln!("error writing {out}: {e}");
             std::process::exit(1);

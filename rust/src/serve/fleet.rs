@@ -1,0 +1,1402 @@
+//! SLO-aware heterogeneous serving fleet (`vta serve --fleet`).
+//!
+//! A [`Fleet`] is N *virtual devices*, each a `(VtaConfig, warm
+//! SessionPool)` pair instantiated at a different point of the
+//! area/performance curve — typically Pareto points from a design-space
+//! sweep ([`configs_from_sweep`]) or an explicit config list. Every
+//! device prices each pooled workload at warmup (VTA cycle counts are
+//! data-independent), so the fleet scheduler knows, before anything
+//! runs, exactly what a request costs on every device.
+//!
+//! # Routing
+//!
+//! [`schedule_fleet`] extends the single-device virtual-time scheduler
+//! (`serve::sched`) to one `Lane` per device replica. Each admitted
+//! arrival is routed by a pluggable [`RoutePolicy`] over [`LaneView`]s
+//! — per-lane snapshots of queue depth, warm per-request cost, device
+//! area, and an optimistic completion estimate. The default
+//! [`EarliestFeasibleCheapest`] policy picks the cheapest (smallest
+//! scaled-area) device estimated to finish within the request's
+//! deadline, falling back to the earliest-finishing lane when none is
+//! feasible; [`LeastLoaded`] and [`CheapestFirst`] are the pluggable
+//! alternatives. The completion estimate ignores co-batching (it
+//! assumes the request dispatches alone), so it is a routing heuristic,
+//! not a guarantee — the scheduler's start-time deadline rule still
+//! decides expiry.
+//!
+//! # Work shedding and autoscaling
+//!
+//! The driver only offers lanes with admission headroom
+//! (`depth < queue_depth`), so a full device spills its overflow onto
+//! its peers — cross-replica shedding is structural, not a policy
+//! concern. A request every active lane refuses is shed and counted
+//! `rejected_queue_full`, exactly as in the single-device path.
+//! Optional simulated autoscaling ([`AutoscaleOptions`]) walks fixed
+//! virtual-time boundaries: a device whose total backlog exceeds
+//! `scale_up_depth × active_replicas` spawns one replica lane (up to
+//! `max_replicas`); an underloaded device retires its highest-indexed
+//! idle replica, never its last. Replica-seconds are priced by
+//! [`scaled_area`] into the report's `area_us` integral.
+//!
+//! # Determinism and the frontier
+//!
+//! Routing and autoscaling are part of the virtual-time model: a
+//! [`FleetReport`] is a pure function of `(trace, device costs,
+//! options)` and its JSON is byte-identical across `--jobs 1/N`
+//! (`rust/tests/fleet_serving.rs` pins this). [`frontier`] runs every
+//! single-device candidate plus the combined fleet over the same trace
+//! and marks the `(peak_area, p99 latency)` Pareto survivors — the
+//! cost-vs-SLO report `vta serve --fleet` prints.
+
+use super::load::Request;
+use super::pool::{shared_graphs, SessionPool};
+use super::sched::{self, Batch, Lane, SchedOptions, Schedule};
+use super::{schedule_digest, summarize_latencies, ServeOptions};
+use crate::analysis::area::scaled_area;
+use crate::config::{presets, VtaConfig};
+use crate::engine::{BackendKind, EvalRequest, VtaError};
+use crate::sweep::{ParetoFront, PointResult};
+use crate::util::json::{obj, Json};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Version stamped into [`FleetReport::to_json`] and
+/// [`FrontierOutcome::to_json`] as `schema_version`; the strict
+/// [`FleetReport::from_json`] requires it verbatim. Bump on any field
+/// change.
+pub const FLEET_SCHEMA_VERSION: u32 = 1;
+
+/// What the scheduler knows about one device *kind*: its config tag,
+/// its warm per-request service times, and its area price. Built from a
+/// real [`Fleet`] by [`Fleet::device_costs`], or by hand for
+/// scheduler-level tests — routing never needs an engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceCost {
+    /// Config tag ([`VtaConfig::tag`]) — the device's identity in
+    /// reports.
+    pub config: String,
+    /// Workload id → warm per-request virtual service time
+    /// ([`SessionPool::service_map`]).
+    pub service_us: BTreeMap<String, u64>,
+    /// Area price of one replica, relative to the default config
+    /// ([`scaled_area`]).
+    pub scaled_area: f64,
+}
+
+/// One routable lane, as a [`RoutePolicy`] sees it at an arrival. The
+/// driver only offers lanes with admission headroom, so any offered
+/// lane can accept the request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LaneView {
+    /// Lane id; `route` returns one of the offered ids.
+    pub lane: usize,
+    /// Device kind backing this lane (index into the fleet's devices).
+    pub device: usize,
+    /// Area price of this lane's device.
+    pub scaled_area: f64,
+    /// Warm per-request service time of the arriving request's workload
+    /// on this device.
+    pub service_us: u64,
+    /// Requests waiting or in flight on this lane.
+    pub depth: usize,
+    /// Optimistic completion estimate: the lane frees up, pays the
+    /// dispatch overhead, and runs the request alone (co-batching and
+    /// the open-batch window are ignored).
+    pub est_done_us: u64,
+}
+
+/// A deterministic routing rule: pick one lane for each admitted
+/// arrival.
+///
+/// The contract, pinned by `rust/tests/fleet_serving.rs`:
+///
+/// * `lanes` is never empty and every offered lane has admission
+///   headroom (the driver sheds the request itself when no lane does);
+/// * the return value must be the `lane` id of an *offered* view —
+///   anything else sheds the request (counted `rejected_queue_full`),
+///   keeping the schedule total rather than panicking on a buggy
+///   policy;
+/// * the decision may depend only on the arguments — no clocks, no
+///   randomness — or fleet reports lose their cross-worker-count
+///   byte-identity.
+pub trait RoutePolicy: Send + Sync {
+    /// Short stable name, recorded in [`FleetReport::policy`].
+    fn name(&self) -> &'static str;
+
+    /// Choose a lane for a request arriving at `now_us` with an
+    /// optional relative deadline of `deadline_us`.
+    fn route(&self, now_us: u64, deadline_us: Option<u64>, lanes: &[LaneView]) -> usize;
+}
+
+/// Default policy: the cheapest device estimated to finish within the
+/// deadline; ties break toward the earlier finisher, then the lower
+/// lane id. With no deadline every lane is feasible, so this routes to
+/// the cheapest device outright; when *no* lane is feasible it degrades
+/// to earliest-finishing (minimize lateness).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EarliestFeasibleCheapest;
+
+impl RoutePolicy for EarliestFeasibleCheapest {
+    fn name(&self) -> &'static str {
+        "earliest"
+    }
+
+    fn route(&self, now_us: u64, deadline_us: Option<u64>, lanes: &[LaneView]) -> usize {
+        let feasible = |v: &&LaneView| match deadline_us {
+            Some(d) => v.est_done_us <= now_us.saturating_add(d),
+            None => true,
+        };
+        let cheapest_feasible = lanes.iter().filter(feasible).min_by(|a, b| {
+            a.scaled_area
+                .total_cmp(&b.scaled_area)
+                .then(a.est_done_us.cmp(&b.est_done_us))
+                .then(a.lane.cmp(&b.lane))
+        });
+        match cheapest_feasible {
+            Some(v) => v.lane,
+            None => {
+                lanes
+                    .iter()
+                    .min_by(|a, b| a.est_done_us.cmp(&b.est_done_us).then(a.lane.cmp(&b.lane)))
+                    .expect("the driver never offers an empty lane set")
+                    .lane
+            }
+        }
+    }
+}
+
+/// Route to the shallowest queue; ties break toward the earlier
+/// finisher, then the lower lane id. Deadline-blind load balancing.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LeastLoaded;
+
+impl RoutePolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn route(&self, _now_us: u64, _deadline_us: Option<u64>, lanes: &[LaneView]) -> usize {
+        lanes
+            .iter()
+            .min_by(|a, b| {
+                a.depth
+                    .cmp(&b.depth)
+                    .then(a.est_done_us.cmp(&b.est_done_us))
+                    .then(a.lane.cmp(&b.lane))
+            })
+            .expect("the driver never offers an empty lane set")
+            .lane
+    }
+}
+
+/// Route to the lowest-area device unconditionally (the cost-greedy
+/// baseline the frontier compares against); ties break toward the
+/// lower lane id.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CheapestFirst;
+
+impl RoutePolicy for CheapestFirst {
+    fn name(&self) -> &'static str {
+        "cheapest"
+    }
+
+    fn route(&self, _now_us: u64, _deadline_us: Option<u64>, lanes: &[LaneView]) -> usize {
+        lanes
+            .iter()
+            .min_by(|a, b| a.scaled_area.total_cmp(&b.scaled_area).then(a.lane.cmp(&b.lane)))
+            .expect("the driver never offers an empty lane set")
+            .lane
+    }
+}
+
+/// The built-in routing policies, as a CLI-parseable enum
+/// (`vta serve --fleet --route <name>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicyKind {
+    EarliestFeasibleCheapest,
+    LeastLoaded,
+    CheapestFirst,
+}
+
+impl RoutePolicyKind {
+    /// Parse a CLI token; the error names the offending token.
+    pub fn parse(s: &str) -> Result<RoutePolicyKind, VtaError> {
+        match s {
+            "earliest" | "efc" | "earliest-feasible-cheapest" => {
+                Ok(RoutePolicyKind::EarliestFeasibleCheapest)
+            }
+            "least-loaded" | "least_loaded" => Ok(RoutePolicyKind::LeastLoaded),
+            "cheapest" | "cheapest-first" => Ok(RoutePolicyKind::CheapestFirst),
+            _ => Err(VtaError::InvalidRequest(format!(
+                "unknown route policy '{s}' (expected earliest, least-loaded, or cheapest)"
+            ))),
+        }
+    }
+
+    /// Canonical CLI name (`parse` round-trips it); matches the
+    /// instantiated policy's [`RoutePolicy::name`].
+    pub fn cli_name(self) -> &'static str {
+        match self {
+            RoutePolicyKind::EarliestFeasibleCheapest => "earliest",
+            RoutePolicyKind::LeastLoaded => "least-loaded",
+            RoutePolicyKind::CheapestFirst => "cheapest",
+        }
+    }
+
+    pub fn instantiate(self) -> Box<dyn RoutePolicy> {
+        match self {
+            RoutePolicyKind::EarliestFeasibleCheapest => Box::new(EarliestFeasibleCheapest),
+            RoutePolicyKind::LeastLoaded => Box::new(LeastLoaded),
+            RoutePolicyKind::CheapestFirst => Box::new(CheapestFirst),
+        }
+    }
+}
+
+impl std::fmt::Display for RoutePolicyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.cli_name())
+    }
+}
+
+/// Simulated autoscaling knobs. The scaler walks fixed virtual-time
+/// boundaries (`interval_us` apart) and takes at most one action per
+/// device per boundary: spawn one replica when the device's total
+/// backlog exceeds `scale_up_depth × active_replicas` (up to
+/// `max_replicas`), otherwise retire the highest-indexed idle replica
+/// when more than one is active.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AutoscaleOptions {
+    /// Virtual µs between autoscaling decisions (≥ 1).
+    pub interval_us: u64,
+    /// Replica cap per device kind (≥ 1).
+    pub max_replicas: usize,
+    /// Backlog-per-replica threshold that triggers a scale-up (≥ 1).
+    pub scale_up_depth: usize,
+}
+
+impl Default for AutoscaleOptions {
+    fn default() -> AutoscaleOptions {
+        AutoscaleOptions { interval_us: 5_000, max_replicas: 4, scale_up_depth: 4 }
+    }
+}
+
+impl AutoscaleOptions {
+    pub fn validate(&self) -> Result<(), VtaError> {
+        if self.interval_us == 0 {
+            return Err(VtaError::InvalidRequest(
+                "autoscale interval_us must be at least 1".into(),
+            ));
+        }
+        if self.max_replicas == 0 {
+            return Err(VtaError::InvalidRequest(
+                "autoscale max_replicas must be at least 1".into(),
+            ));
+        }
+        if self.scale_up_depth == 0 {
+            return Err(VtaError::InvalidRequest(
+                "autoscale scale_up_depth must be at least 1".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One lane's lifetime: which device kind it replicates and when the
+/// autoscaler spawned/retired it (virtual µs). Lane 0..N-1 are the
+/// initial replicas (spawned at 0, one per device); autoscaled replicas
+/// append after them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneAssignment {
+    /// Device kind (index into the fleet's devices / `DeviceCost`s).
+    pub device: usize,
+    pub spawned_us: u64,
+    /// `None` while the lane is still active at trace end.
+    pub retired_us: Option<u64>,
+}
+
+/// Everything [`schedule_fleet`] decided: the merged virtual-time
+/// [`Schedule`] (each [`Batch::device`] is a lane id), the lane → device
+/// map, and the autoscaler's area accounting.
+#[derive(Debug)]
+pub struct FleetSchedule {
+    pub schedule: Schedule,
+    /// Lane id → its assignment ([`Batch::device`] indexes this).
+    pub lanes: Vec<LaneAssignment>,
+    /// Largest Σ scaled-area over simultaneously active lanes.
+    pub peak_area: f64,
+    /// Per device kind: most replicas simultaneously active.
+    pub peak_replicas: Vec<usize>,
+}
+
+/// One live lane plus its lifetime record.
+struct LaneState {
+    meta: LaneAssignment,
+    lane: Lane,
+}
+
+/// The fleet driver's mutable state: lanes plus the autoscaler's
+/// per-device accounting.
+struct FleetState {
+    lanes: Vec<LaneState>,
+    /// Active replicas per device kind.
+    active: Vec<usize>,
+    peak_replicas: Vec<usize>,
+    current_area: f64,
+    peak_area: f64,
+}
+
+impl FleetState {
+    fn new(devices: &[DeviceCost]) -> FleetState {
+        let lanes: Vec<LaneState> = devices
+            .iter()
+            .enumerate()
+            .map(|(d, _)| LaneState {
+                meta: LaneAssignment { device: d, spawned_us: 0, retired_us: None },
+                lane: Lane::new(d),
+            })
+            .collect();
+        let current_area: f64 = devices.iter().map(|d| d.scaled_area).sum();
+        FleetState {
+            lanes,
+            active: vec![1; devices.len()],
+            peak_replicas: vec![1; devices.len()],
+            current_area,
+            peak_area: current_area,
+        }
+    }
+
+    /// Advance every active lane's virtual clock to `now`.
+    fn advance(
+        &mut self,
+        now: u64,
+        trace: &[Request],
+        devices: &[DeviceCost],
+        opts: &SchedOptions,
+        out: &mut Schedule,
+    ) {
+        for ls in &mut self.lanes {
+            if ls.meta.retired_us.is_none() {
+                ls.lane.advance(now, trace, &devices[ls.meta.device].service_us, opts, out);
+            }
+        }
+    }
+
+    /// Lanes a router may pick for `workload` at `now`: active, with
+    /// admission headroom. Cross-replica shedding falls out of this
+    /// filter — a full lane's traffic can only go to its peers.
+    fn views(
+        &self,
+        workload: &str,
+        now: u64,
+        devices: &[DeviceCost],
+        opts: &SchedOptions,
+    ) -> Vec<LaneView> {
+        self.lanes
+            .iter()
+            .enumerate()
+            .filter(|(_, ls)| ls.meta.retired_us.is_none() && ls.lane.depth() < opts.queue_depth)
+            .map(|(id, ls)| {
+                let device = ls.meta.device;
+                let service_us = devices[device].service_us[workload];
+                let est_done_us = ls
+                    .lane
+                    .free_us()
+                    .max(now)
+                    .saturating_add(opts.dispatch_overhead_us)
+                    .saturating_add(service_us);
+                LaneView {
+                    lane: id,
+                    device,
+                    scaled_area: devices[device].scaled_area,
+                    service_us,
+                    depth: ls.lane.depth(),
+                    est_done_us,
+                }
+            })
+            .collect()
+    }
+
+    /// One autoscaling decision per device kind at boundary `t` (the
+    /// lanes are already advanced to `t`): spawn one replica if
+    /// overloaded and under the cap, else retire the highest-indexed
+    /// idle replica if underloaded and more than one is active.
+    fn autoscale_step(&mut self, t: u64, devices: &[DeviceCost], auto: &AutoscaleOptions) {
+        for d in 0..devices.len() {
+            let backlog: usize = self
+                .lanes
+                .iter()
+                .filter(|ls| ls.meta.device == d && ls.meta.retired_us.is_none())
+                .map(|ls| ls.lane.depth())
+                .sum();
+            let overloaded = backlog > auto.scale_up_depth * self.active[d];
+            if overloaded && self.active[d] < auto.max_replicas {
+                let id = self.lanes.len();
+                self.lanes.push(LaneState {
+                    meta: LaneAssignment { device: d, spawned_us: t, retired_us: None },
+                    lane: Lane::new(id),
+                });
+                self.active[d] += 1;
+                self.peak_replicas[d] = self.peak_replicas[d].max(self.active[d]);
+                self.current_area += devices[d].scaled_area;
+                self.peak_area = self.peak_area.max(self.current_area);
+            } else if !overloaded && self.active[d] > 1 {
+                let idle = self
+                    .lanes
+                    .iter()
+                    .enumerate()
+                    .rev()
+                    .find(|(_, ls)| {
+                        ls.meta.device == d
+                            && ls.meta.retired_us.is_none()
+                            && ls.lane.depth() == 0
+                            && ls.lane.free_us() <= t
+                    })
+                    .map(|(i, _)| i);
+                if let Some(i) = idle {
+                    self.lanes[i].meta.retired_us = Some(t);
+                    self.active[d] -= 1;
+                    self.current_area -= devices[d].scaled_area;
+                }
+            }
+        }
+    }
+}
+
+/// Compute a fleet schedule: one `Lane` per device replica, arrivals
+/// routed by `policy`, optional simulated autoscaling. Pure and total —
+/// the same inputs always produce the same [`FleetSchedule`] — and
+/// built on the exact event machinery of the single-device
+/// [`schedule`](super::schedule): with one device, no deadline
+/// pressure, and no autoscaler it makes identical decisions.
+pub fn schedule_fleet(
+    trace: &[Request],
+    devices: &[DeviceCost],
+    policy: &dyn RoutePolicy,
+    opts: &SchedOptions,
+    autoscale: Option<&AutoscaleOptions>,
+) -> Result<FleetSchedule, VtaError> {
+    sched::check_options(opts)?;
+    if devices.is_empty() {
+        return Err(VtaError::InvalidRequest("a fleet needs at least one device".into()));
+    }
+    for d in devices {
+        sched::check_trace(trace, &d.service_us)?;
+    }
+    if let Some(a) = autoscale {
+        a.validate()?;
+    }
+
+    let mut order: Vec<usize> = (0..trace.len()).collect();
+    order.sort_by_key(|&i| (trace[i].t_us, i));
+
+    let mut state = FleetState::new(devices);
+    let mut out = Schedule::default();
+    let mut next_batch_id = 0usize;
+    let mut next_step = autoscale.map(|a| a.interval_us);
+
+    for &i in &order {
+        let now = trace[i].t_us;
+        // Autoscaling boundaries fire in event order, interleaved with
+        // arrivals: lanes advance to each boundary before it decides.
+        if let Some(auto) = autoscale {
+            while let Some(t) = next_step.filter(|&t| t <= now) {
+                state.advance(t, trace, devices, opts, &mut out);
+                state.autoscale_step(t, devices, auto);
+                let following = t.saturating_add(auto.interval_us);
+                // A saturated clock has no further boundaries.
+                next_step = (following > t).then_some(following);
+            }
+        }
+        state.advance(now, trace, devices, opts, &mut out);
+        let views = state.views(&trace[i].workload, now, devices, opts);
+        if views.is_empty() {
+            out.rejected_queue_full.push(i);
+            continue;
+        }
+        let choice = policy.route(now, opts.deadline_us, &views);
+        if !views.iter().any(|v| v.lane == choice) {
+            out.rejected_queue_full.push(i);
+            continue;
+        }
+        let ls = &mut state.lanes[choice];
+        let svc = &devices[ls.meta.device].service_us;
+        ls.lane.admit(i, now, trace, svc, opts, &mut out, &mut next_batch_id);
+    }
+    for ls in &mut state.lanes {
+        ls.lane.flush(trace, &devices[ls.meta.device].service_us, opts, &mut out);
+    }
+    Ok(FleetSchedule {
+        schedule: out,
+        lanes: state.lanes.into_iter().map(|ls| ls.meta).collect(),
+        peak_area: state.peak_area,
+        peak_replicas: state.peak_replicas,
+    })
+}
+
+/// One device kind of a built fleet: its config, identity tag, area
+/// price, and warm session pool.
+pub struct FleetDevice {
+    pub cfg: VtaConfig,
+    /// [`VtaConfig::tag`] — the device's identity in reports.
+    pub tag: String,
+    pub scaled_area: f64,
+    pub pool: SessionPool,
+}
+
+/// N warm virtual devices over one shared set of workload graphs.
+pub struct Fleet {
+    devices: Vec<FleetDevice>,
+}
+
+impl Fleet {
+    /// Build and warm one [`SessionPool`] per device config. The
+    /// expensive graph build + shape propagation run once
+    /// ([`shared_graphs`]); each device pays only its own config
+    /// validation and warmup.
+    pub fn build(opts: &FleetOptions) -> Result<Fleet, VtaError> {
+        opts.validate()?;
+        let graphs = shared_graphs(&opts.base.workloads, opts.base.graph_seed)?;
+        let mut devices = Vec::with_capacity(opts.configs.len());
+        for cfg in &opts.configs {
+            let pool = SessionPool::build_for(cfg, &opts.base, &graphs)?;
+            devices.push(FleetDevice {
+                cfg: cfg.clone(),
+                tag: cfg.tag(),
+                scaled_area: scaled_area(cfg),
+                pool,
+            });
+        }
+        Ok(Fleet { devices })
+    }
+
+    pub fn devices(&self) -> &[FleetDevice] {
+        &self.devices
+    }
+
+    /// The scheduler-facing view of every device.
+    pub fn device_costs(&self) -> Vec<DeviceCost> {
+        self.devices
+            .iter()
+            .map(|d| DeviceCost {
+                config: d.tag.clone(),
+                service_us: d.pool.service_map(),
+                scaled_area: d.scaled_area,
+            })
+            .collect()
+    }
+}
+
+/// The default three-device fleet: one geometry (1×16×16) at three
+/// memory/scratchpad scaling points, spanning the area axis. Tags:
+/// `1x16x16-axi8`, `1x16x16-axi16`, `1x16x16-axi64`.
+pub fn default_fleet_configs() -> Vec<VtaConfig> {
+    vec![
+        presets::scaled_config(1, 16, 16, 1, 8),
+        presets::scaled_config(1, 16, 16, 2, 16),
+        presets::scaled_config(1, 16, 16, 4, 64),
+    ]
+}
+
+/// Everything a fleet run needs: the base serving options (workloads,
+/// backend, scheduler knobs — `base.cfg` is unused, each device brings
+/// its own), the device configs, the routing policy, and optional
+/// autoscaling.
+#[derive(Clone)]
+pub struct FleetOptions {
+    pub base: ServeOptions,
+    /// One entry per device kind; tags must be distinct.
+    pub configs: Vec<VtaConfig>,
+    pub policy: RoutePolicyKind,
+    /// `None` = fixed one-replica-per-device fleet.
+    pub autoscale: Option<AutoscaleOptions>,
+}
+
+impl Default for FleetOptions {
+    fn default() -> FleetOptions {
+        FleetOptions {
+            base: ServeOptions::default(),
+            configs: default_fleet_configs(),
+            policy: RoutePolicyKind::EarliestFeasibleCheapest,
+            autoscale: None,
+        }
+    }
+}
+
+impl FleetOptions {
+    /// The full option check ([`ServeOptions::validate`] plus the
+    /// fleet-specific rules): at least one valid device config,
+    /// pairwise-distinct tags, valid autoscale knobs.
+    pub fn validate(&self) -> Result<(), VtaError> {
+        self.base.validate()?;
+        if self.configs.is_empty() {
+            return Err(VtaError::InvalidRequest("a fleet needs at least one device".into()));
+        }
+        let mut tags: Vec<String> = Vec::with_capacity(self.configs.len());
+        for cfg in &self.configs {
+            cfg.validate()?;
+            let tag = cfg.tag();
+            if tags.contains(&tag) {
+                return Err(VtaError::InvalidRequest(format!(
+                    "fleet device tag '{tag}' appears twice (device identity is the config \
+                     tag, which ignores scratchpad scale — vary batch, block, or axi_bytes)"
+                )));
+            }
+            tags.push(tag);
+        }
+        if let Some(a) = &self.autoscale {
+            a.validate()?;
+        }
+        Ok(())
+    }
+}
+
+/// Per-device line of a [`FleetReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceReport {
+    /// Config tag.
+    pub config: String,
+    /// Area price of one replica.
+    pub scaled_area: f64,
+    /// Most replicas simultaneously active.
+    pub peak_replicas: usize,
+    /// Replicas ever spawned (initial + autoscaled).
+    pub lanes_spawned: usize,
+    /// Requests the router sent here (completed + expired).
+    pub routed: usize,
+    pub completed: usize,
+    pub expired_deadline: usize,
+    pub batches_dispatched: usize,
+    pub total_cycles: u64,
+    /// Σ over this device's lanes of `scaled_area × active time` —
+    /// replica-µs priced by area.
+    pub area_us: f64,
+}
+
+impl DeviceReport {
+    /// Every key of a device entry; [`DeviceReport::from_json`]
+    /// requires exactly this set.
+    pub const JSON_FIELDS: [&'static str; 10] = [
+        "config",
+        "scaled_area",
+        "peak_replicas",
+        "lanes_spawned",
+        "routed",
+        "completed",
+        "expired_deadline",
+        "batches_dispatched",
+        "total_cycles",
+        "area_us",
+    ];
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("config", Json::Str(self.config.clone())),
+            ("scaled_area", Json::Float(self.scaled_area)),
+            ("peak_replicas", Json::Int(self.peak_replicas as i64)),
+            ("lanes_spawned", Json::Int(self.lanes_spawned as i64)),
+            ("routed", Json::Int(self.routed as i64)),
+            ("completed", Json::Int(self.completed as i64)),
+            ("expired_deadline", Json::Int(self.expired_deadline as i64)),
+            ("batches_dispatched", Json::Int(self.batches_dispatched as i64)),
+            ("total_cycles", Json::Int(self.total_cycles as i64)),
+            ("area_us", Json::Float(self.area_us)),
+        ])
+    }
+
+    /// Strict inverse of [`DeviceReport::to_json`] (exact field set).
+    pub fn from_json(j: &Json) -> Option<DeviceReport> {
+        let map = j.as_object()?;
+        if map.len() != Self::JSON_FIELDS.len()
+            || !Self::JSON_FIELDS.iter().all(|f| map.contains_key(*f))
+        {
+            return None;
+        }
+        let int = |name: &str| j.get(name).and_then(|v| v.as_i64()).map(|v| v as u64);
+        Some(DeviceReport {
+            config: j.get("config")?.as_str()?.to_string(),
+            scaled_area: j.get("scaled_area")?.as_f64()?,
+            peak_replicas: int("peak_replicas")? as usize,
+            lanes_spawned: int("lanes_spawned")? as usize,
+            routed: int("routed")? as usize,
+            completed: int("completed")? as usize,
+            expired_deadline: int("expired_deadline")? as usize,
+            batches_dispatched: int("batches_dispatched")? as usize,
+            total_cycles: int("total_cycles")?,
+            area_us: j.get("area_us")?.as_f64()?,
+        })
+    }
+}
+
+/// The fleet run's metrics. Like [`ServeReport`](super::ServeReport),
+/// every field derives from the virtual schedule, so the JSON is
+/// byte-identical across worker counts; wall clock lives in
+/// [`FleetOutcome`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetReport {
+    /// Routing policy name ([`RoutePolicy::name`]).
+    pub policy: String,
+    pub backend: BackendKind,
+    pub clock_mhz: u64,
+    /// One line per device kind, fleet order.
+    pub devices: Vec<DeviceReport>,
+    pub submitted: usize,
+    pub admitted: usize,
+    pub completed: usize,
+    pub rejected_queue_full: usize,
+    pub expired_deadline: usize,
+    pub latency_p50_us: f64,
+    pub latency_p95_us: f64,
+    pub latency_p99_us: f64,
+    pub latency_mean_us: f64,
+    pub latency_max_us: u64,
+    /// First arrival → last completion, virtual µs.
+    pub makespan_us: u64,
+    /// Completed requests per virtual second.
+    pub throughput_rps: f64,
+    pub total_cycles: u64,
+    /// Largest Σ scaled-area over simultaneously active replicas — the
+    /// frontier's provisioning-cost axis.
+    pub peak_area: f64,
+    /// Σ replica-µs priced by area (the autoscaler's energy-style
+    /// integral).
+    pub area_us: f64,
+    pub memo_hits: u64,
+    pub memo_misses: u64,
+    pub schedule_digest: u64,
+}
+
+impl FleetReport {
+    /// Every key [`FleetReport::to_json`] writes;
+    /// [`FleetReport::from_json`] requires exactly this set.
+    pub const JSON_FIELDS: [&'static str; 23] = [
+        "schema_version",
+        "policy",
+        "backend",
+        "clock_mhz",
+        "devices",
+        "submitted",
+        "admitted",
+        "completed",
+        "rejected_queue_full",
+        "expired_deadline",
+        "latency_p50_us",
+        "latency_p95_us",
+        "latency_p99_us",
+        "latency_mean_us",
+        "latency_max_us",
+        "makespan_us",
+        "throughput_rps",
+        "total_cycles",
+        "peak_area",
+        "area_us",
+        "memo_hits",
+        "memo_misses",
+        "schedule_digest",
+    ];
+
+    /// Deterministic JSON (no wall-clock or worker-count fields);
+    /// carries [`FLEET_SCHEMA_VERSION`] as `schema_version`.
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("schema_version", Json::Int(FLEET_SCHEMA_VERSION as i64)),
+            ("policy", Json::Str(self.policy.clone())),
+            ("backend", Json::Str(self.backend.cli_name().to_string())),
+            ("clock_mhz", Json::Int(self.clock_mhz as i64)),
+            ("devices", Json::Array(self.devices.iter().map(|d| d.to_json()).collect())),
+            ("submitted", Json::Int(self.submitted as i64)),
+            ("admitted", Json::Int(self.admitted as i64)),
+            ("completed", Json::Int(self.completed as i64)),
+            ("rejected_queue_full", Json::Int(self.rejected_queue_full as i64)),
+            ("expired_deadline", Json::Int(self.expired_deadline as i64)),
+            ("latency_p50_us", Json::Float(self.latency_p50_us)),
+            ("latency_p95_us", Json::Float(self.latency_p95_us)),
+            ("latency_p99_us", Json::Float(self.latency_p99_us)),
+            ("latency_mean_us", Json::Float(self.latency_mean_us)),
+            ("latency_max_us", Json::Int(self.latency_max_us as i64)),
+            ("makespan_us", Json::Int(self.makespan_us as i64)),
+            ("throughput_rps", Json::Float(self.throughput_rps)),
+            ("total_cycles", Json::Int(self.total_cycles as i64)),
+            ("peak_area", Json::Float(self.peak_area)),
+            ("area_us", Json::Float(self.area_us)),
+            ("memo_hits", Json::Int(self.memo_hits as i64)),
+            ("memo_misses", Json::Int(self.memo_misses as i64)),
+            ("schedule_digest", Json::Str(format!("{:016x}", self.schedule_digest))),
+        ])
+    }
+
+    /// Strict inverse of [`FleetReport::to_json`]: `None` unless the
+    /// object holds **exactly** [`FleetReport::JSON_FIELDS`] (same for
+    /// each device entry) and `schema_version` matches
+    /// [`FLEET_SCHEMA_VERSION`] — the `ExecCounters::from_json`
+    /// contract.
+    pub fn from_json(j: &Json) -> Option<FleetReport> {
+        let map = j.as_object()?;
+        if map.len() != Self::JSON_FIELDS.len()
+            || !Self::JSON_FIELDS.iter().all(|f| map.contains_key(*f))
+        {
+            return None;
+        }
+        if j.get("schema_version")?.as_i64()? != FLEET_SCHEMA_VERSION as i64 {
+            return None;
+        }
+        let int = |name: &str| j.get(name).and_then(|v| v.as_i64()).map(|v| v as u64);
+        let float = |name: &str| j.get(name).and_then(|v| v.as_f64());
+        let mut devices = Vec::new();
+        for d in j.get("devices")?.as_array()? {
+            devices.push(DeviceReport::from_json(d)?);
+        }
+        Some(FleetReport {
+            policy: j.get("policy")?.as_str()?.to_string(),
+            backend: BackendKind::parse(j.get("backend")?.as_str()?).ok()?,
+            clock_mhz: int("clock_mhz")?,
+            devices,
+            submitted: int("submitted")? as usize,
+            admitted: int("admitted")? as usize,
+            completed: int("completed")? as usize,
+            rejected_queue_full: int("rejected_queue_full")? as usize,
+            expired_deadline: int("expired_deadline")? as usize,
+            latency_p50_us: float("latency_p50_us")?,
+            latency_p95_us: float("latency_p95_us")?,
+            latency_p99_us: float("latency_p99_us")?,
+            latency_mean_us: float("latency_mean_us")?,
+            latency_max_us: int("latency_max_us")?,
+            makespan_us: int("makespan_us")?,
+            throughput_rps: float("throughput_rps")?,
+            total_cycles: int("total_cycles")?,
+            peak_area: float("peak_area")?,
+            area_us: float("area_us")?,
+            memo_hits: int("memo_hits")?,
+            memo_misses: int("memo_misses")?,
+            schedule_digest: u64::from_str_radix(j.get("schedule_digest")?.as_str()?, 16)
+                .ok()?,
+        })
+    }
+}
+
+/// What [`run_fleet`] hands back: the deterministic report, the merged
+/// batch schedule and lane map (for inspection and tests), and the
+/// wall-clock facts that deliberately stay out of the report.
+pub struct FleetOutcome {
+    pub report: FleetReport,
+    /// The dispatched schedule, close order; [`Batch::device`] indexes
+    /// `lanes`.
+    pub batches: Vec<Batch>,
+    pub lanes: Vec<LaneAssignment>,
+    /// Wall-clock nanoseconds of the batch-execution phase.
+    pub wall_ns: u64,
+    /// Worker threads used for execution.
+    pub workers: usize,
+}
+
+/// Serve a trace on a heterogeneous fleet end-to-end: build + warm one
+/// pool per device over shared graphs, compute the routed virtual-time
+/// schedule, execute every batch on its device's warm pool across the
+/// worker pool, and assemble the report.
+pub fn run_fleet(opts: &FleetOptions, trace: &[Request]) -> Result<FleetOutcome, VtaError> {
+    let fleet = Fleet::build(opts)?;
+    let devices = fleet.device_costs();
+    let policy = opts.policy.instantiate();
+    let fs = schedule_fleet(
+        trace,
+        &devices,
+        policy.as_ref(),
+        &opts.base.sched_options(),
+        opts.autoscale.as_ref(),
+    )?;
+
+    // Execute the fixed schedule. Workers change wall clock only: slot
+    // `b` always holds batch `b`'s cycles.
+    let jobs = crate::sweep::effective_jobs(opts.base.jobs);
+    let workers = jobs.min(fs.schedule.batches.len().max(1));
+    let wall_start = std::time::Instant::now();
+    let batch_results: Vec<Result<u64, VtaError>> =
+        crate::util::pool::run_indexed(workers, fs.schedule.batches.len(), |b| {
+            let batch = &fs.schedule.batches[b];
+            let device = fs.lanes[batch.device].device;
+            let entry = fleet.devices[device]
+                .pool
+                .get(&batch.workload)
+                .expect("the scheduler only dispatches pooled workloads");
+            let mut cycles = 0u64;
+            for &r in &batch.requests {
+                let eval = entry
+                    .engine
+                    .eval_shared(&entry.prepared, &EvalRequest::seeded(trace[r].seed))?;
+                cycles += eval.cycles.expect("pool backends produce cycles");
+            }
+            Ok(cycles)
+        });
+    let wall_ns = wall_start.elapsed().as_nanos() as u64;
+    let mut batch_cycles = Vec::with_capacity(batch_results.len());
+    for r in batch_results {
+        batch_cycles.push(r?);
+    }
+
+    let report = assemble_fleet_report(opts, &fleet, &fs, trace, &batch_cycles);
+    Ok(FleetOutcome { report, batches: fs.schedule.batches, lanes: fs.lanes, wall_ns, workers })
+}
+
+fn assemble_fleet_report(
+    opts: &FleetOptions,
+    fleet: &Fleet,
+    fs: &FleetSchedule,
+    trace: &[Request],
+    batch_cycles: &[u64],
+) -> FleetReport {
+    let n = fleet.devices.len();
+    let mut routed = vec![0usize; n];
+    let mut dev_completed = vec![0usize; n];
+    let mut dev_expired = vec![0usize; n];
+    let mut dev_batches = vec![0usize; n];
+    let mut dev_cycles = vec![0u64; n];
+    for (b, batch) in fs.schedule.batches.iter().enumerate() {
+        let d = fs.lanes[batch.device].device;
+        routed[d] += batch.requests.len() + batch.expired.len();
+        dev_completed[d] += batch.requests.len();
+        dev_expired[d] += batch.expired.len();
+        if batch.occupancy() > 0 {
+            dev_batches[d] += 1;
+        }
+        dev_cycles[d] += batch_cycles[b];
+    }
+
+    // Replica-µs: each lane is priced from spawn to retirement (or to
+    // the horizon — last completion or last arrival — while active).
+    let first_arrival = trace.iter().map(|r| r.t_us).min().unwrap_or(0);
+    let last_arrival = trace.iter().map(|r| r.t_us).max().unwrap_or(0);
+    let horizon = fs.schedule.makespan_end_us().max(last_arrival);
+    let mut lanes_spawned = vec![0usize; n];
+    let mut dev_area_us = vec![0.0f64; n];
+    for lane in &fs.lanes {
+        lanes_spawned[lane.device] += 1;
+        let until = lane.retired_us.unwrap_or(horizon).min(horizon);
+        let active_us = until.saturating_sub(lane.spawned_us) as f64;
+        dev_area_us[lane.device] += fleet.devices[lane.device].scaled_area * active_us;
+    }
+
+    let mut memo_hits = 0u64;
+    let mut memo_misses = 0u64;
+    for dev in &fleet.devices {
+        let (h, m) = dev.pool.memo_stats();
+        memo_hits += h;
+        memo_misses += m;
+    }
+
+    let devices: Vec<DeviceReport> = fleet
+        .devices
+        .iter()
+        .enumerate()
+        .map(|(d, dev)| DeviceReport {
+            config: dev.tag.clone(),
+            scaled_area: dev.scaled_area,
+            peak_replicas: fs.peak_replicas[d],
+            lanes_spawned: lanes_spawned[d],
+            routed: routed[d],
+            completed: dev_completed[d],
+            expired_deadline: dev_expired[d],
+            batches_dispatched: dev_batches[d],
+            total_cycles: dev_cycles[d],
+            area_us: dev_area_us[d],
+        })
+        .collect();
+
+    let lat = summarize_latencies(&fs.schedule.latencies_us);
+    let completed = fs.schedule.completed();
+    let makespan_us = fs.schedule.makespan_end_us().saturating_sub(first_arrival);
+    FleetReport {
+        policy: opts.policy.cli_name().to_string(),
+        backend: opts.base.backend,
+        clock_mhz: opts.base.clock_mhz,
+        devices,
+        submitted: trace.len(),
+        admitted: fs.schedule.admitted,
+        completed,
+        rejected_queue_full: fs.schedule.rejected_queue_full.len(),
+        expired_deadline: fs.schedule.expired(),
+        latency_p50_us: lat.p50,
+        latency_p95_us: lat.p95,
+        latency_p99_us: lat.p99,
+        latency_mean_us: lat.mean,
+        latency_max_us: lat.max_us,
+        makespan_us,
+        throughput_rps: completed as f64 / (makespan_us.max(1) as f64 / 1e6),
+        total_cycles: batch_cycles.iter().sum(),
+        peak_area: fs.peak_area,
+        area_us: dev_area_us.iter().sum(),
+        memo_hits,
+        memo_misses,
+        schedule_digest: schedule_digest(&fs.schedule.batches),
+    }
+}
+
+/// One candidate of the cost-vs-SLO frontier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierEntry {
+    /// A single device's tag, or `fleet(N)` for the combined fleet.
+    pub label: String,
+    /// Device tags of this candidate, fleet order.
+    pub configs: Vec<String>,
+    pub report: FleetReport,
+    /// On the `(peak_area, p99 latency)` Pareto frontier over the
+    /// candidates.
+    pub pareto: bool,
+}
+
+/// The frontier over every candidate fleet composition, same trace.
+pub struct FrontierOutcome {
+    pub entries: Vec<FrontierEntry>,
+    /// Wall-clock nanoseconds for the whole frontier run (stays out of
+    /// [`FrontierOutcome::to_json`]).
+    pub wall_ns: u64,
+}
+
+impl FrontierOutcome {
+    /// Deterministic JSON: `schema_version` plus one entry per
+    /// candidate, each embedding its full [`FleetReport::to_json`] —
+    /// byte-identical across worker counts, like every report here.
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                obj([
+                    ("label", Json::Str(e.label.clone())),
+                    (
+                        "configs",
+                        Json::Array(e.configs.iter().map(|c| Json::Str(c.clone())).collect()),
+                    ),
+                    ("pareto", Json::Bool(e.pareto)),
+                    ("report", e.report.to_json()),
+                ])
+            })
+            .collect();
+        obj([
+            ("schema_version", Json::Int(FLEET_SCHEMA_VERSION as i64)),
+            ("entries", Json::Array(entries)),
+        ])
+    }
+}
+
+/// Run the cost-vs-SLO frontier: every single-device candidate in
+/// `opts.configs`, plus the combined fleet when there is more than one,
+/// all over the same trace and scheduler knobs. Entries on the
+/// `(peak_area, rounded p99 latency)` Pareto frontier (both minimized)
+/// are marked `pareto` — the fleet earns its place only by dominating
+/// on cost or SLO.
+pub fn frontier(opts: &FleetOptions, trace: &[Request]) -> Result<FrontierOutcome, VtaError> {
+    opts.validate()?;
+    let wall_start = std::time::Instant::now();
+    let mut candidates: Vec<(String, Vec<VtaConfig>)> =
+        opts.configs.iter().map(|c| (c.tag(), vec![c.clone()])).collect();
+    if opts.configs.len() > 1 {
+        candidates.push((format!("fleet({})", opts.configs.len()), opts.configs.clone()));
+    }
+    let mut entries = Vec::with_capacity(candidates.len());
+    let mut front = ParetoFront::new();
+    for (i, (label, configs)) in candidates.into_iter().enumerate() {
+        let sub = FleetOptions { configs, ..opts.clone() };
+        let outcome = run_fleet(&sub, trace)?;
+        front.insert(outcome.report.peak_area, outcome.report.latency_p99_us.round() as u64, i);
+        entries.push(FrontierEntry {
+            label,
+            configs: outcome.report.devices.iter().map(|d| d.config.clone()).collect(),
+            report: outcome.report,
+            pareto: false,
+        });
+    }
+    for (i, e) in entries.iter_mut().enumerate() {
+        e.pareto = front.contains(i);
+    }
+    Ok(FrontierOutcome { entries, wall_ns: wall_start.elapsed().as_nanos() as u64 })
+}
+
+/// Seed a fleet from a sweep's JSONL result cache: keep each config
+/// tag's best (fewest-cycle) measured point, take the
+/// `(scaled_area, cycles)` Pareto survivors, and return up to
+/// `max_devices` configs in ascending-area order. Unparseable lines are
+/// skipped (the cache may mix schema versions); a cache that yields no
+/// readable point at all is a typed error.
+pub fn configs_from_sweep(path: &Path, max_devices: usize) -> Result<Vec<VtaConfig>, VtaError> {
+    if max_devices == 0 {
+        return Err(VtaError::InvalidRequest(
+            "a fleet needs at least one device (max_devices is 0)".into(),
+        ));
+    }
+    let text = std::fs::read_to_string(path).map_err(VtaError::Io)?;
+    let mut best: BTreeMap<String, (u64, VtaConfig)> = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(j) = Json::parse(line) else { continue };
+        let Some(p) = PointResult::from_json(&j) else { continue };
+        let tag = p.config.tag();
+        match best.get(&tag) {
+            Some(&(cycles, _)) if cycles <= p.cycles => {}
+            _ => {
+                best.insert(tag, (p.cycles, p.config));
+            }
+        }
+    }
+    if best.is_empty() {
+        return Err(VtaError::InvalidRequest(format!(
+            "sweep cache '{}' holds no readable design points",
+            path.display()
+        )));
+    }
+    let points: Vec<(u64, VtaConfig)> = best.into_values().collect();
+    let mut front = ParetoFront::new();
+    for (i, (cycles, cfg)) in points.iter().enumerate() {
+        front.insert(scaled_area(cfg), *cycles, i);
+    }
+    let picked: Vec<VtaConfig> =
+        front.points().into_iter().take(max_devices).map(|p| points[p.id].1.clone()).collect();
+    Ok(picked)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::WorkloadSpec;
+
+    fn req(t_us: u64, workload: &str) -> Request {
+        Request { t_us, workload: workload.to_string(), seed: t_us }
+    }
+
+    fn device(config: &str, service: u64, area: f64) -> DeviceCost {
+        DeviceCost {
+            config: config.to_string(),
+            service_us: [("w".to_string(), service)].into_iter().collect(),
+            scaled_area: area,
+        }
+    }
+
+    fn sched_opts(max_batch: usize, queue_depth: usize) -> SchedOptions {
+        SchedOptions {
+            max_batch,
+            max_wait_us: 0,
+            queue_depth,
+            deadline_us: None,
+            dispatch_overhead_us: 0,
+        }
+    }
+
+    fn view(lane: usize, area: f64, depth: usize, est_done_us: u64) -> LaneView {
+        LaneView { lane, device: lane, scaled_area: area, service_us: 10, depth, est_done_us }
+    }
+
+    #[test]
+    fn earliest_feasible_cheapest_prefers_cheap_feasible_lanes() {
+        let lanes = [view(0, 1.0, 0, 100), view(1, 4.0, 0, 40), view(2, 2.0, 0, 45)];
+        let p = EarliestFeasibleCheapest;
+        // Deadline 50: lanes 1 and 2 are feasible; 2 is cheaper.
+        assert_eq!(p.route(0, Some(50), &lanes), 2);
+        // No deadline: everything is feasible; 0 is cheapest.
+        assert_eq!(p.route(0, None, &lanes), 0);
+        // Nothing feasible: minimize lateness (earliest estimate).
+        assert_eq!(p.route(0, Some(10), &lanes), 1);
+    }
+
+    #[test]
+    fn least_loaded_and_cheapest_first_pick_as_named() {
+        let lanes = [view(0, 1.0, 2, 100), view(1, 4.0, 0, 40), view(2, 2.0, 1, 45)];
+        assert_eq!(LeastLoaded.route(0, None, &lanes), 1);
+        assert_eq!(CheapestFirst.route(0, None, &lanes), 0);
+    }
+
+    #[test]
+    fn route_policy_kind_parses_and_round_trips() {
+        for kind in [
+            RoutePolicyKind::EarliestFeasibleCheapest,
+            RoutePolicyKind::LeastLoaded,
+            RoutePolicyKind::CheapestFirst,
+        ] {
+            assert_eq!(RoutePolicyKind::parse(kind.cli_name()).unwrap(), kind);
+            assert_eq!(kind.instantiate().name(), kind.cli_name());
+        }
+        let err = RoutePolicyKind::parse("round-robin").unwrap_err();
+        assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
+        assert!(err.to_string().contains("round-robin"), "error must name the token: {err}");
+    }
+
+    #[test]
+    fn full_lanes_spill_to_peers_then_shed() {
+        // queue_depth 1, two devices: the second request spills to the
+        // second lane, the rest shed. One device alone sheds three.
+        let devices = [device("a", 100, 1.0), device("b", 100, 1.0)];
+        let trace: Vec<Request> = (0..4).map(|_| req(0, "w")).collect();
+        let opts = sched_opts(1, 1);
+        let fleet = schedule_fleet(&trace, &devices, &LeastLoaded, &opts, None).unwrap();
+        assert_eq!(fleet.schedule.admitted, 2, "one request per lane");
+        assert_eq!(fleet.schedule.rejected_queue_full.len(), 2);
+        assert_eq!(fleet.schedule.completed(), 2);
+        let single = schedule_fleet(&trace, &devices[..1], &LeastLoaded, &opts, None).unwrap();
+        assert_eq!(single.schedule.rejected_queue_full.len(), 3);
+        assert!(
+            fleet.schedule.completed() > single.schedule.completed(),
+            "a second device must absorb spilled work"
+        );
+    }
+
+    #[test]
+    fn schedule_fleet_is_deterministic() {
+        let devices = [device("a", 120, 1.0), device("b", 60, 2.0)];
+        let trace: Vec<Request> = (0..64).map(|i| req(i * 37 % 1000, "w")).collect();
+        let opts = sched_opts(4, 16);
+        let auto = AutoscaleOptions { interval_us: 200, max_replicas: 3, scale_up_depth: 2 };
+        let a = schedule_fleet(&trace, &devices, &EarliestFeasibleCheapest, &opts, Some(&auto))
+            .unwrap();
+        let b = schedule_fleet(&trace, &devices, &EarliestFeasibleCheapest, &opts, Some(&auto))
+            .unwrap();
+        assert_eq!(schedule_digest(&a.schedule.batches), schedule_digest(&b.schedule.batches));
+        assert_eq!(a.lanes, b.lanes);
+        assert_eq!(a.peak_replicas, b.peak_replicas);
+    }
+
+    #[test]
+    fn autoscaler_spawns_replicas_under_backlog() {
+        // Service 1000us vs arrivals every 100us: backlog builds fast,
+        // so the scaler must spawn extra replicas of the one device.
+        let devices = [device("a", 1000, 2.0)];
+        let trace: Vec<Request> = (0..20).map(|i| req(i * 100, "w")).collect();
+        let opts = sched_opts(1, 1024);
+        let auto = AutoscaleOptions { interval_us: 1000, max_replicas: 3, scale_up_depth: 1 };
+        let fs = schedule_fleet(&trace, &devices, &LeastLoaded, &opts, Some(&auto)).unwrap();
+        assert!(fs.lanes.len() > 1, "backlog must trigger a spawn");
+        assert!(fs.peak_replicas[0] > 1);
+        assert!(fs.peak_area > 2.0, "replicas are priced by scaled area");
+        assert!(fs.lanes[1].spawned_us > 0, "autoscaled lanes spawn at boundaries");
+        // Loss-free accounting still holds across replicas.
+        assert_eq!(fs.schedule.completed() + fs.schedule.rejected_queue_full.len(), trace.len());
+    }
+
+    #[test]
+    fn empty_device_set_and_bad_autoscale_are_typed_errors() {
+        let trace = [req(0, "w")];
+        let err = schedule_fleet(&trace, &[], &LeastLoaded, &sched_opts(1, 1), None).unwrap_err();
+        assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
+        let devices = [device("a", 100, 1.0)];
+        let auto = AutoscaleOptions { interval_us: 0, ..AutoscaleOptions::default() };
+        let err = schedule_fleet(&trace, &devices, &LeastLoaded, &sched_opts(1, 1), Some(&auto))
+            .unwrap_err();
+        assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn fleet_options_reject_duplicate_tags() {
+        let opts = FleetOptions {
+            configs: vec![
+                presets::scaled_config(1, 16, 16, 1, 8),
+                // Same tag as above: spad_scale is not part of the tag.
+                presets::scaled_config(1, 16, 16, 2, 8),
+            ],
+            ..FleetOptions::default()
+        };
+        let err = opts.validate().unwrap_err();
+        assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
+        assert!(err.to_string().contains("1x16x16-axi8"), "error names the tag: {err}");
+    }
+
+    #[test]
+    fn run_fleet_serves_across_two_devices() {
+        let opts = FleetOptions {
+            base: ServeOptions {
+                cfg: presets::tiny_config(),
+                workloads: vec![WorkloadSpec::Micro { block: 4 }],
+                max_batch: 1,
+                max_wait_us: 0,
+                queue_depth: 1,
+                ..ServeOptions::default()
+            },
+            configs: vec![presets::tiny_config(), presets::scaled_config(1, 4, 4, 2, 32)],
+            policy: RoutePolicyKind::LeastLoaded,
+            autoscale: None,
+        };
+        // Simultaneous arrivals + queue_depth 1 force both devices into
+        // service.
+        let trace: Vec<Request> = (0..6)
+            .map(|i| Request { t_us: 0, workload: "micro@4".into(), seed: i })
+            .collect();
+        let outcome = run_fleet(&opts, &trace).unwrap();
+        let r = &outcome.report;
+        assert_eq!(r.devices.len(), 2);
+        assert_eq!(r.submitted, 6);
+        assert_eq!(
+            r.completed + r.rejected_queue_full + r.expired_deadline,
+            r.submitted,
+            "every request is completed, shed, or expired"
+        );
+        assert_eq!(r.devices.iter().map(|d| d.routed).sum::<usize>(), r.admitted);
+        assert!(r.devices.iter().all(|d| d.completed > 0), "both devices served work");
+        let cycles: u64 = r.devices.iter().map(|d| d.total_cycles).sum();
+        assert_eq!(cycles, r.total_cycles);
+        assert!(r.peak_area > 0.0 && r.area_us > 0.0);
+    }
+
+    fn temp_path(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("vta_fleet_test_{}_{name}.jsonl", std::process::id()))
+    }
+
+    fn point(cfg: VtaConfig, cycles: u64) -> PointResult {
+        let area = scaled_area(&cfg);
+        PointResult {
+            config: cfg,
+            workload: "micro@4".into(),
+            seed: 0,
+            graph_seed: 1,
+            cycles,
+            macs: 1,
+            dram_rd: 1,
+            dram_wr: 1,
+            insns: 1,
+            scaled_area: area,
+            predicted_cycles: None,
+            measured: true,
+        }
+    }
+
+    #[test]
+    fn configs_from_sweep_keeps_pareto_survivors_in_area_order() {
+        let path = temp_path("pareto");
+        let tiny = presets::tiny_config();
+        let large = presets::scaled_config(1, 64, 64, 2, 64);
+        let mid = presets::scaled_config(1, 32, 32, 2, 32);
+        // tiny dominates mid (cheaper and faster); large is fastest.
+        let lines = [
+            point(tiny.clone(), 10_000),
+            point(tiny.clone(), 12_000), // worse duplicate of the same tag
+            point(mid, 20_000),
+            point(large.clone(), 1_000),
+        ]
+        .iter()
+        .map(|p| p.to_json().to_string_compact())
+        .collect::<Vec<_>>()
+        .join("\n");
+        std::fs::write(&path, lines).unwrap();
+        let cfgs = configs_from_sweep(&path, 8).unwrap();
+        std::fs::remove_file(&path).ok();
+        let tags: Vec<String> = cfgs.iter().map(|c| c.tag()).collect();
+        assert_eq!(tags, vec![tiny.tag(), large.tag()], "area-ordered Pareto survivors");
+        // max_devices truncates from the cheap end.
+        std::fs::write(&path, point(tiny.clone(), 10_000).to_json().to_string_compact())
+            .unwrap();
+        let one = configs_from_sweep(&path, 1).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(one.len(), 1);
+    }
+
+    #[test]
+    fn configs_from_sweep_error_paths() {
+        let err = configs_from_sweep(Path::new("/nonexistent/cache.jsonl"), 2).unwrap_err();
+        assert!(matches!(err, VtaError::Io(_)), "got {err:?}");
+        let err = configs_from_sweep(Path::new("whatever.jsonl"), 0).unwrap_err();
+        assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
+        let path = temp_path("garbage");
+        std::fs::write(&path, "not json\n{\"schema\": -1}\n").unwrap();
+        let err = configs_from_sweep(&path, 2).unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
+        assert!(err.to_string().contains("garbage"), "error names the cache file: {err}");
+    }
+}

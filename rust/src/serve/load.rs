@@ -43,7 +43,9 @@ pub enum ArrivalSpec {
 
 impl ArrivalSpec {
     /// Parse `poisson:<rate>` or `uniform:<rate>` (rate in requests per
-    /// second, must be positive and finite).
+    /// second, must be positive and finite). Every rejection is a typed
+    /// [`VtaError::InvalidRequest`] quoting the offending spec, so the
+    /// CLI surfaces exactly what was typed.
     pub fn parse(s: &str) -> Result<ArrivalSpec, VtaError> {
         let (kind, rate) = s.split_once(':').ok_or_else(|| {
             VtaError::InvalidRequest(format!(
@@ -51,18 +53,20 @@ impl ArrivalSpec {
             ))
         })?;
         let rate_per_s: f64 = rate.parse().map_err(|_| {
-            VtaError::InvalidRequest(format!("arrival rate '{rate}' is not a number"))
+            VtaError::InvalidRequest(format!(
+                "arrival spec '{s}': rate '{rate}' is not a number"
+            ))
         })?;
         if !rate_per_s.is_finite() || rate_per_s <= 0.0 {
             return Err(VtaError::InvalidRequest(format!(
-                "arrival rate must be positive and finite, got {rate_per_s}"
+                "arrival spec '{s}': rate must be positive and finite, got {rate_per_s}"
             )));
         }
         match kind {
             "poisson" => Ok(ArrivalSpec::Poisson { rate_per_s }),
             "uniform" => Ok(ArrivalSpec::Uniform { rate_per_s }),
             other => Err(VtaError::InvalidRequest(format!(
-                "unknown arrival process '{other}' (expected poisson or uniform)"
+                "arrival spec '{s}': unknown process '{other}' (expected poisson or uniform)"
             ))),
         }
     }
@@ -137,9 +141,14 @@ pub fn write_trace(path: &Path, trace: &[Request]) -> Result<(), VtaError> {
 /// signed on-disk form (see [`write_trace`]). Requests are sorted by
 /// arrival time (stably, so equal timestamps keep file order) —
 /// replaying an archived trace is deterministic regardless of how it
-/// was recorded.
+/// was recorded. A trace file that cannot be opened is an
+/// [`VtaError::InvalidRequest`] naming the path (the `--replay` token
+/// was wrong), not a bare I/O error.
 pub fn read_trace(path: &Path) -> Result<Vec<Request>, VtaError> {
-    let reader = BufReader::new(std::fs::File::open(path)?);
+    let file = std::fs::File::open(path).map_err(|e| {
+        VtaError::InvalidRequest(format!("cannot read trace '{}': {e}", path.display()))
+    })?;
+    let reader = BufReader::new(file);
     let mut trace = Vec::new();
     for (lineno, line) in reader.lines().enumerate() {
         let line = line?;
@@ -214,11 +223,23 @@ mod tests {
             ArrivalSpec::Uniform { rate_per_s: 2.5 }
         );
         for bad in ["poisson", "poisson:zero", "poisson:-1", "poisson:0", "burst:9"] {
+            let err = ArrivalSpec::parse(bad).unwrap_err();
             assert!(
-                matches!(ArrivalSpec::parse(bad), Err(VtaError::InvalidRequest(_))),
-                "'{bad}' must be rejected with a typed error"
+                matches!(err, VtaError::InvalidRequest(_)),
+                "'{bad}' must be rejected with a typed error, got {err:?}"
+            );
+            assert!(
+                err.to_string().contains(bad),
+                "the error for '{bad}' must quote the offending spec: {err}"
             );
         }
+    }
+
+    #[test]
+    fn missing_trace_file_error_names_the_path() {
+        let err = read_trace(Path::new("/nonexistent/replay.jsonl")).unwrap_err();
+        assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
+        assert!(err.to_string().contains("/nonexistent/replay.jsonl"), "got {err}");
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //!                              batches in parallel — wall clock only
 //! ```
 //!
-//! The three pieces:
+//! The pieces:
 //!
 //! * [`SessionPool`] (`pool`) — N warm prepared graphs keyed by
 //!   `(config, workload, backend)`, built once via
@@ -37,6 +37,13 @@
 //! * [`load`] — seeded open-loop arrival generation
 //!   ([`ArrivalSpec`]: `poisson:<rate>` / `uniform:<rate>`) and JSONL
 //!   trace record/replay ([`read_trace`]/[`write_trace`]).
+//! * [`fleet`] — the heterogeneous scale-out path (`vta serve
+//!   --fleet`): N virtual devices instantiated at different Pareto
+//!   points of the area/performance curve, a pluggable [`RoutePolicy`]
+//!   assigning each admitted request a device by deadline slack and
+//!   warm cost, simulated autoscaling priced by
+//!   [`scaled_area`](crate::analysis::area::scaled_area), and a
+//!   cost-vs-SLO [`frontier`] over candidate fleet compositions.
 //!
 //! # Determinism contract
 //!
@@ -46,8 +53,22 @@
 //! only parallelize the already-fixed batches' evaluations, so
 //! [`ServeReport::to_json`] is **byte-identical across `--jobs 1` and
 //! `--jobs N`** (wall-clock numbers live outside the report in
-//! [`ServeOutcome`]). `rust/tests/serve_runtime.rs` pins this, and the
-//! CI smoke `cmp`s the report JSON of a 1-worker and a 4-worker run.
+//! [`ServeOutcome`]). The same contract covers [`FleetReport`]:
+//! routing and autoscaling decisions are part of the virtual-time
+//! model, never of execution. `rust/tests/serve_runtime.rs` and
+//! `rust/tests/fleet_serving.rs` pin this, and the CI smokes `cmp` the
+//! report JSON of a 1-worker and a 4-worker run.
+//!
+//! # Construction and schema
+//!
+//! [`ServeOptions`] can be filled as a struct literal (every consumer
+//! routes it through [`ServeOptions::validate`]) or assembled with the
+//! validating [`ServeOptions::builder`], which surfaces contradictory
+//! settings as typed [`VtaError::InvalidRequest`] at build time.
+//! Report JSON carries a `schema_version` (see
+//! [`SERVE_SCHEMA_VERSION`]); the strict [`ServeReport::from_json`]
+//! rejects unknown, missing, or version-mismatched fields, matching
+//! the `ExecCounters::from_json` contract.
 //!
 //! # What batching buys
 //!
@@ -59,10 +80,17 @@
 //! throughput against a one-engine-per-request baseline and asserts the
 //! ≥ 2× amortization gate.
 
+pub mod fleet;
 pub mod load;
 pub mod pool;
 pub mod sched;
 
+pub use fleet::{
+    configs_from_sweep, frontier, run_fleet, schedule_fleet, AutoscaleOptions, CheapestFirst,
+    DeviceCost, DeviceReport, EarliestFeasibleCheapest, Fleet, FleetOptions, FleetOutcome,
+    FleetReport, FleetSchedule, FrontierEntry, FrontierOutcome, LaneView, LeastLoaded,
+    RoutePolicy, RoutePolicyKind, FLEET_SCHEMA_VERSION,
+};
 pub use load::{read_trace, synth_trace, write_trace, ArrivalSpec, Request};
 pub use pool::{PoolEntry, PoolKey, SessionPool};
 pub use sched::{schedule, Batch, SchedOptions, Schedule};
@@ -75,8 +103,17 @@ use crate::util::json::{obj, Json};
 use crate::util::stats;
 use std::collections::BTreeMap;
 
+/// Version stamped into [`ServeReport::to_json`] (`schema_version`) and
+/// required verbatim by [`ServeReport::from_json`]. Bump on any field
+/// change.
+pub const SERVE_SCHEMA_VERSION: u32 = 2;
+
 /// Everything a serving run needs. `jobs` affects wall clock only; all
 /// other fields shape the (deterministic) schedule and report.
+///
+/// Construct as a struct literal (validated by every consumer via
+/// [`ServeOptions::validate`]) or through the checked
+/// [`ServeOptions::builder`].
 #[derive(Clone)]
 pub struct ServeOptions {
     /// Hardware configuration shared by every pooled entry.
@@ -129,6 +166,65 @@ impl Default for ServeOptions {
 }
 
 impl ServeOptions {
+    /// Start a validating builder seeded with [`ServeOptions::default`];
+    /// [`ServeOptionsBuilder::build`] surfaces zero or contradictory
+    /// fields as typed errors before any pool or schedule work runs.
+    pub fn builder() -> ServeOptionsBuilder {
+        ServeOptionsBuilder { opts: ServeOptions::default() }
+    }
+
+    /// The full option check every consumer runs — struct literals and
+    /// builder output go through the same gate. Typed failures:
+    /// [`VtaError::Config`] for an invalid hardware configuration,
+    /// [`VtaError::Unsupported`] for a backend that cannot price
+    /// requests (fsim), [`VtaError::InvalidRequest`] for everything
+    /// else (empty/duplicate workloads, zero-sized scheduler knobs, a
+    /// zero deadline).
+    pub fn validate(&self) -> Result<(), VtaError> {
+        self.cfg.validate()?;
+        if self.workloads.is_empty() {
+            return Err(VtaError::InvalidRequest(
+                "the session pool needs at least one workload".into(),
+            ));
+        }
+        let mut seen: Vec<String> = Vec::with_capacity(self.workloads.len());
+        for spec in &self.workloads {
+            let id = spec.id();
+            if seen.contains(&id) {
+                return Err(VtaError::InvalidRequest(format!(
+                    "workload '{id}' appears twice in the pool"
+                )));
+            }
+            seen.push(id);
+        }
+        if self.max_batch == 0 {
+            return Err(VtaError::InvalidRequest("max_batch must be at least 1".into()));
+        }
+        if self.queue_depth == 0 {
+            return Err(VtaError::InvalidRequest("queue_depth must be at least 1".into()));
+        }
+        if self.clock_mhz == 0 {
+            return Err(VtaError::InvalidRequest(
+                "clock_mhz must be positive (it converts cycles to virtual time)".into(),
+            ));
+        }
+        if self.deadline_us == Some(0) {
+            return Err(VtaError::InvalidRequest(
+                "a zero deadline expires every request at dispatch; omit it for no deadline"
+                    .into(),
+            ));
+        }
+        let caps = self.backend.instantiate().capabilities();
+        if !caps.produces_cycles {
+            return Err(VtaError::Unsupported(format!(
+                "serving schedules in virtual time and backend '{}' produces no cycles \
+                 (use tsim, timing, or model)",
+                self.backend
+            )));
+        }
+        Ok(())
+    }
+
     fn sched_options(&self) -> SchedOptions {
         SchedOptions {
             max_batch: self.max_batch,
@@ -137,6 +233,84 @@ impl ServeOptions {
             deadline_us: self.deadline_us,
             dispatch_overhead_us: self.dispatch_overhead_us,
         }
+    }
+}
+
+/// Validating builder for [`ServeOptions`], mirroring the
+/// `Engine::for_config(..).build()?` shape: setters fix fields,
+/// [`ServeOptionsBuilder::build`] runs [`ServeOptions::validate`] and
+/// returns the checked options or a typed [`VtaError`].
+#[derive(Clone)]
+pub struct ServeOptionsBuilder {
+    opts: ServeOptions,
+}
+
+impl ServeOptionsBuilder {
+    pub fn cfg(mut self, cfg: VtaConfig) -> Self {
+        self.opts.cfg = cfg;
+        self
+    }
+
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.opts.backend = backend;
+        self
+    }
+
+    /// Replace the pooled workload set.
+    pub fn workloads(mut self, workloads: Vec<WorkloadSpec>) -> Self {
+        self.opts.workloads = workloads;
+        self
+    }
+
+    pub fn graph_seed(mut self, graph_seed: u64) -> Self {
+        self.opts.graph_seed = graph_seed;
+        self
+    }
+
+    pub fn memo(mut self, memo: bool) -> Self {
+        self.opts.memo = memo;
+        self
+    }
+
+    pub fn jobs(mut self, jobs: usize) -> Self {
+        self.opts.jobs = jobs;
+        self
+    }
+
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.opts.max_batch = max_batch;
+        self
+    }
+
+    pub fn max_wait_us(mut self, max_wait_us: u64) -> Self {
+        self.opts.max_wait_us = max_wait_us;
+        self
+    }
+
+    pub fn queue_depth(mut self, queue_depth: usize) -> Self {
+        self.opts.queue_depth = queue_depth;
+        self
+    }
+
+    pub fn deadline_us(mut self, deadline_us: Option<u64>) -> Self {
+        self.opts.deadline_us = deadline_us;
+        self
+    }
+
+    pub fn clock_mhz(mut self, clock_mhz: u64) -> Self {
+        self.opts.clock_mhz = clock_mhz;
+        self
+    }
+
+    pub fn dispatch_overhead_us(mut self, dispatch_overhead_us: u64) -> Self {
+        self.opts.dispatch_overhead_us = dispatch_overhead_us;
+        self
+    }
+
+    /// Validate and hand back the options ([`ServeOptions::validate`]).
+    pub fn build(self) -> Result<ServeOptions, VtaError> {
+        self.opts.validate()?;
+        Ok(self.opts)
     }
 }
 
@@ -150,7 +324,7 @@ pub struct WorkloadCost {
 /// The serving run's metrics. Every field is derived from the virtual
 /// schedule, so the JSON is byte-identical across worker counts; wall
 /// clock lives in [`ServeOutcome`] instead.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServeReport {
     pub config: String,
     pub backend: BackendKind,
@@ -186,9 +360,47 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
-    /// Deterministic JSON (sorted keys, no wall-clock or worker-count
-    /// fields) — the artifact `vta serve --out` writes and CI diffs
-    /// across worker counts.
+    /// Every key [`ServeReport::to_json`] writes; [`from_json`]
+    /// requires exactly this set — nothing missing, nothing unknown.
+    ///
+    /// [`from_json`]: ServeReport::from_json
+    pub const JSON_FIELDS: [&'static str; 26] = [
+        "schema_version",
+        "config",
+        "backend",
+        "clock_mhz",
+        "workloads",
+        "submitted",
+        "admitted",
+        "completed",
+        "rejected_queue_full",
+        "expired_deadline",
+        "batches_dispatched",
+        "mean_batch_occupancy",
+        "max_batch_occupancy",
+        "max_queue_depth",
+        "mean_queue_depth",
+        "latency_p50_us",
+        "latency_p95_us",
+        "latency_p99_us",
+        "latency_mean_us",
+        "latency_max_us",
+        "makespan_us",
+        "throughput_rps",
+        "total_cycles",
+        "memo_hits",
+        "memo_misses",
+        "schedule_digest",
+    ];
+
+    /// Keys of each entry in the `workloads` array.
+    pub const WORKLOAD_JSON_FIELDS: [&'static str; 3] =
+        ["workload", "cycles_per_request", "service_us"];
+
+    /// Deterministic JSON (sorted workloads, no wall-clock or
+    /// worker-count fields) — the artifact `vta serve --out` writes and
+    /// CI diffs across worker counts. Carries
+    /// [`SERVE_SCHEMA_VERSION`] as `schema_version`.
     pub fn to_json(&self) -> Json {
         let workloads: Vec<Json> = self
             .workloads
@@ -202,7 +414,7 @@ impl ServeReport {
             })
             .collect();
         obj([
-            ("schema", Json::Int(1)),
+            ("schema_version", Json::Int(SERVE_SCHEMA_VERSION as i64)),
             ("config", Json::Str(self.config.clone())),
             ("backend", Json::Str(self.backend.cli_name().to_string())),
             ("clock_mhz", Json::Int(self.clock_mhz as i64)),
@@ -229,6 +441,69 @@ impl ServeReport {
             ("memo_misses", Json::Int(self.memo_misses as i64)),
             ("schedule_digest", Json::Str(format!("{:016x}", self.schedule_digest))),
         ])
+    }
+
+    /// Strict inverse of [`ServeReport::to_json`]: `None` unless the
+    /// object holds **exactly** [`ServeReport::JSON_FIELDS`] (same for
+    /// each workload entry) and `schema_version` matches
+    /// [`SERVE_SCHEMA_VERSION`]. Floats round-trip exactly (shortest
+    /// round-trip formatting on write).
+    pub fn from_json(j: &Json) -> Option<ServeReport> {
+        let map = j.as_object()?;
+        if map.len() != Self::JSON_FIELDS.len()
+            || !Self::JSON_FIELDS.iter().all(|f| map.contains_key(*f))
+        {
+            return None;
+        }
+        if j.get("schema_version")?.as_i64()? != SERVE_SCHEMA_VERSION as i64 {
+            return None;
+        }
+        let int = |name: &str| j.get(name).and_then(|v| v.as_i64()).map(|v| v as u64);
+        let float = |name: &str| j.get(name).and_then(|v| v.as_f64());
+        let mut workloads = BTreeMap::new();
+        for w in j.get("workloads")?.as_array()? {
+            let wmap = w.as_object()?;
+            if wmap.len() != Self::WORKLOAD_JSON_FIELDS.len()
+                || !Self::WORKLOAD_JSON_FIELDS.iter().all(|f| wmap.contains_key(*f))
+            {
+                return None;
+            }
+            workloads.insert(
+                w.get("workload")?.as_str()?.to_string(),
+                WorkloadCost {
+                    cycles_per_request: w.get("cycles_per_request")?.as_i64()? as u64,
+                    service_us: w.get("service_us")?.as_i64()? as u64,
+                },
+            );
+        }
+        Some(ServeReport {
+            config: j.get("config")?.as_str()?.to_string(),
+            backend: BackendKind::parse(j.get("backend")?.as_str()?).ok()?,
+            clock_mhz: int("clock_mhz")?,
+            workloads,
+            submitted: int("submitted")? as usize,
+            admitted: int("admitted")? as usize,
+            completed: int("completed")? as usize,
+            rejected_queue_full: int("rejected_queue_full")? as usize,
+            expired_deadline: int("expired_deadline")? as usize,
+            batches_dispatched: int("batches_dispatched")? as usize,
+            mean_batch_occupancy: float("mean_batch_occupancy")?,
+            max_batch_occupancy: int("max_batch_occupancy")? as usize,
+            max_queue_depth: int("max_queue_depth")? as usize,
+            mean_queue_depth: float("mean_queue_depth")?,
+            latency_p50_us: float("latency_p50_us")?,
+            latency_p95_us: float("latency_p95_us")?,
+            latency_p99_us: float("latency_p99_us")?,
+            latency_mean_us: float("latency_mean_us")?,
+            latency_max_us: int("latency_max_us")?,
+            makespan_us: int("makespan_us")?,
+            throughput_rps: float("throughput_rps")?,
+            total_cycles: int("total_cycles")?,
+            memo_hits: int("memo_hits")?,
+            memo_misses: int("memo_misses")?,
+            schedule_digest: u64::from_str_radix(j.get("schedule_digest")?.as_str()?, 16)
+                .ok()?,
+        })
     }
 }
 
@@ -284,6 +559,32 @@ pub fn run(opts: &ServeOptions, trace: &[Request]) -> Result<ServeOutcome, VtaEr
     Ok(ServeOutcome { report, batches: schedule.batches, wall_ns, workers })
 }
 
+/// Latency percentiles over a set of completed requests, computed the
+/// same way for single-device and fleet reports. An empty run reports
+/// 0, not NaN (NaN is null in JSON).
+pub(crate) struct LatencySummary {
+    pub(crate) p50: f64,
+    pub(crate) p95: f64,
+    pub(crate) p99: f64,
+    pub(crate) mean: f64,
+    pub(crate) max_us: u64,
+}
+
+pub(crate) fn summarize_latencies(latencies_us: &[(usize, u64)]) -> LatencySummary {
+    let mut sorted: Vec<f64> = latencies_us.iter().map(|&(_, l)| l as f64).collect();
+    // One sort serves every percentile.
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct =
+        |p: f64| if sorted.is_empty() { 0.0 } else { stats::percentile_sorted(&sorted, p) };
+    LatencySummary {
+        p50: pct(50.0),
+        p95: pct(95.0),
+        p99: pct(99.0),
+        mean: if sorted.is_empty() { 0.0 } else { stats::mean(&sorted) },
+        max_us: latencies_us.iter().map(|&(_, l)| l).max().unwrap_or(0),
+    }
+}
+
 fn assemble_report(
     opts: &ServeOptions,
     pool: &SessionPool,
@@ -291,18 +592,7 @@ fn assemble_report(
     trace: &[Request],
     total_cycles: u64,
 ) -> ServeReport {
-    let mut latencies: Vec<f64> =
-        schedule.latencies_us.iter().map(|&(_, l)| l as f64).collect();
-    // One sort serves every percentile; an empty run reports 0, not
-    // NaN (NaN is null in JSON).
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| {
-        if latencies.is_empty() {
-            0.0
-        } else {
-            stats::percentile_sorted(&latencies, p)
-        }
-    };
+    let lat = summarize_latencies(&schedule.latencies_us);
     let completed = schedule.completed();
     let dispatched: Vec<&Batch> =
         schedule.batches.iter().filter(|b| b.occupancy() > 0).collect();
@@ -344,11 +634,11 @@ fn assemble_report(
         } else {
             schedule.depth_sum as f64 / schedule.admitted as f64
         },
-        latency_p50_us: pct(50.0),
-        latency_p95_us: pct(95.0),
-        latency_p99_us: pct(99.0),
-        latency_mean_us: if latencies.is_empty() { 0.0 } else { stats::mean(&latencies) },
-        latency_max_us: schedule.latencies_us.iter().map(|&(_, l)| l).max().unwrap_or(0),
+        latency_p50_us: lat.p50,
+        latency_p95_us: lat.p95,
+        latency_p99_us: lat.p99,
+        latency_mean_us: lat.mean,
+        latency_max_us: lat.max_us,
         makespan_us,
         throughput_rps: completed as f64 / (makespan_us.max(1) as f64 / 1e6),
         total_cycles,
@@ -358,13 +648,14 @@ fn assemble_report(
     }
 }
 
-/// FNV-1a fingerprint of the full schedule: batch identities, members,
-/// expirations, and virtual timing. Equal digests ⇒ identical
+/// FNV-1a fingerprint of the full schedule: batch identities, devices,
+/// members, expirations, and virtual timing. Equal digests ⇒ identical
 /// scheduling decisions (the determinism tests' one-number summary).
 pub fn schedule_digest(batches: &[Batch]) -> u64 {
     let mut h = Fnv::new();
     for b in batches {
         h.write_u64(b.id as u64);
+        h.write_u64(b.device as u64);
         h.write_str(&b.workload);
         h.write_u64(b.open_us);
         h.write_u64(b.ready_us);
@@ -423,18 +714,81 @@ mod tests {
                 .unwrap();
         let outcome = run(&opts, &trace).unwrap();
         let j = outcome.report.to_json();
-        for key in [
-            "schema",
-            "completed",
-            "rejected_queue_full",
-            "expired_deadline",
-            "latency_p99_us",
-            "throughput_rps",
-            "schedule_digest",
-            "mean_batch_occupancy",
-        ] {
+        for key in ServeReport::JSON_FIELDS {
             assert!(j.get(key).is_some(), "report JSON missing '{key}'");
         }
+        assert_eq!(
+            j.get("schema_version").and_then(|v| v.as_i64()),
+            Some(SERVE_SCHEMA_VERSION as i64)
+        );
+    }
+
+    #[test]
+    fn report_json_roundtrips_strictly() {
+        let opts = micro_opts();
+        let trace =
+            synth_trace(&ArrivalSpec::Poisson { rate_per_s: 400.0 }, &["micro@4".into()], 12, 3)
+                .unwrap();
+        let report = run(&opts, &trace).unwrap().report;
+        let j = report.to_json();
+        // Exact round trip, through text and back.
+        let reparsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(ServeReport::from_json(&reparsed), Some(report.clone()));
+        // Unknown field → rejected.
+        if let Json::Object(mut map) = j.clone() {
+            map.insert("wall_ns".into(), Json::Int(1));
+            assert_eq!(ServeReport::from_json(&Json::Object(map)), None);
+        }
+        // Missing field → rejected.
+        if let Json::Object(mut map) = j.clone() {
+            map.remove("completed");
+            assert_eq!(ServeReport::from_json(&Json::Object(map)), None);
+        }
+        // Wrong schema version → rejected.
+        if let Json::Object(mut map) = j {
+            map.insert("schema_version".into(), Json::Int(1));
+            assert_eq!(ServeReport::from_json(&Json::Object(map)), None);
+        }
+    }
+
+    #[test]
+    fn builder_validates_at_build_time() {
+        let built = ServeOptions::builder()
+            .cfg(presets::tiny_config())
+            .workloads(vec![WorkloadSpec::Micro { block: 4 }])
+            .max_batch(4)
+            .queue_depth(32)
+            .build()
+            .unwrap();
+        assert_eq!(built.max_batch, 4);
+        assert_eq!(built.queue_depth, 32);
+
+        let err = ServeOptions::builder().max_batch(0).build().unwrap_err();
+        assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
+        let err = ServeOptions::builder().workloads(vec![]).build().unwrap_err();
+        assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
+        let err = ServeOptions::builder().deadline_us(Some(0)).build().unwrap_err();
+        assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
+        let err = ServeOptions::builder().backend(BackendKind::Fsim).build().unwrap_err();
+        assert!(matches!(err, VtaError::Unsupported(_)), "got {err:?}");
+        let err = ServeOptions::builder()
+            .workloads(vec![
+                WorkloadSpec::Micro { block: 4 },
+                WorkloadSpec::Micro { block: 4 },
+            ])
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn struct_literal_path_runs_the_same_validation() {
+        // The old construction style still works and still hits the
+        // builder's checks (via `validate` inside the pool build).
+        let mut opts = micro_opts();
+        opts.deadline_us = Some(0);
+        let err = run(&opts, &[]).unwrap_err();
+        assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
     }
 
     #[test]

@@ -17,22 +17,35 @@
 //!   *the* service time of every future request, which is what lets the
 //!   scheduler plan in virtual time before any request runs.
 //!
+//! A fleet builds one pool per device config over the *same* workload
+//! graphs: [`shared_graphs`] runs the graph build + shape propagation
+//! once, and [`SessionPool::build_for`] instantiates each device's pool
+//! from those shared prepares
+//! ([`Engine::prepare_shared_with_shapes`]) — shapes depend only on
+//! the graph, so only the config-level checks and the warmup are paid
+//! per device.
+//!
 //! Backends that produce no cycles (fsim) cannot price requests and are
-//! rejected with [`VtaError::Unsupported`] at pool build.
+//! rejected with [`VtaError::Unsupported`] at pool build (via
+//! [`ServeOptions::validate`]).
 
 use super::ServeOptions;
+use crate::compiler::graph::Graph;
+use crate::compiler::layout::Shape;
+use crate::config::VtaConfig;
 use crate::engine::backends::PredictionCache;
 use crate::engine::{
     AnalyticalBackend, BackendKind, Engine, EvalRequest, PreparedShared, VtaError,
 };
 use crate::memo::LayerMemo;
+use crate::sweep::WorkloadSpec;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// Identity of a pooled entry. One `ServeOptions` fixes the config and
 /// backend for the whole pool, so within a pool the workload id alone
 /// discriminates — the full key exists so reports and multi-pool
-/// callers stay unambiguous.
+/// callers (the fleet) stay unambiguous.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
 pub struct PoolKey {
     /// Configuration tag (`VtaConfig::tag`).
@@ -57,6 +70,30 @@ pub struct PoolEntry {
     pub service_us: u64,
 }
 
+/// One workload's graph built once for a whole fleet: the graph plus
+/// its propagated per-node shapes. Shape propagation depends only on
+/// the graph — never on the device config — so every device pool can
+/// reuse both.
+pub struct SharedGraph {
+    pub graph: Arc<Graph>,
+    pub shapes: Arc<Vec<Shape>>,
+}
+
+/// Build each workload's graph + shapes once, keyed by workload id, for
+/// sharing across device pools ([`SessionPool::build_for`]).
+pub fn shared_graphs(
+    workloads: &[WorkloadSpec],
+    graph_seed: u64,
+) -> Result<BTreeMap<String, SharedGraph>, VtaError> {
+    let mut out = BTreeMap::new();
+    for spec in workloads {
+        let graph = Arc::new(spec.build(graph_seed));
+        let shapes = Arc::new(graph.try_shapes().map_err(VtaError::Graph)?);
+        out.insert(spec.id(), SharedGraph { graph, shapes });
+    }
+    Ok(out)
+}
+
 /// The warm-session pool behind the serving runtime.
 pub struct SessionPool {
     entries: Vec<PoolEntry>,
@@ -65,29 +102,28 @@ pub struct SessionPool {
 }
 
 impl SessionPool {
-    /// Build and warm every entry. Typed failures: empty workload list
-    /// or zero clock ([`VtaError::InvalidRequest`]), a cycle-less
-    /// backend ([`VtaError::Unsupported`]), plus whatever
-    /// config/graph validation reports.
+    /// Build and warm every entry for `opts.cfg`. Typed failures come
+    /// from [`ServeOptions::validate`] plus whatever config/graph
+    /// validation reports.
     pub fn build(opts: &ServeOptions) -> Result<SessionPool, VtaError> {
-        if opts.workloads.is_empty() {
-            return Err(VtaError::InvalidRequest(
-                "the session pool needs at least one workload".into(),
-            ));
-        }
-        if opts.clock_mhz == 0 {
-            return Err(VtaError::InvalidRequest(
-                "clock_mhz must be positive (it converts cycles to virtual time)".into(),
-            ));
-        }
+        opts.validate()?;
+        let graphs = shared_graphs(&opts.workloads, opts.graph_seed)?;
+        Self::build_for(&opts.cfg, opts, &graphs)
+    }
+
+    /// Build and warm a pool for an explicit device config over
+    /// pre-built workload graphs — the fleet path, where N device
+    /// configs serve the same workloads and the expensive graph build +
+    /// shape propagation ([`shared_graphs`]) happen once, not once per
+    /// device. `opts.cfg` is ignored in favor of `cfg`; everything else
+    /// (backend, memo, clock) applies to this device's pool.
+    pub fn build_for(
+        cfg: &VtaConfig,
+        opts: &ServeOptions,
+        graphs: &BTreeMap<String, SharedGraph>,
+    ) -> Result<SessionPool, VtaError> {
+        opts.validate()?;
         let caps = opts.backend.instantiate().capabilities();
-        if !caps.produces_cycles {
-            return Err(VtaError::Unsupported(format!(
-                "serving schedules in virtual time and backend '{}' produces no cycles \
-                 (use tsim, timing, or model)",
-                opts.backend
-            )));
-        }
         // One memo (or prediction cache) spans the pool: repeated layer
         // shapes across entries warm each other, exactly as in a sweep.
         let memo = (opts.memo && caps.supports_memo).then(|| Arc::new(LayerMemo::in_memory()));
@@ -98,12 +134,12 @@ impl SessionPool {
         let mut by_workload = BTreeMap::new();
         for spec in &opts.workloads {
             let id = spec.id();
-            if by_workload.contains_key(&id) {
-                return Err(VtaError::InvalidRequest(format!(
-                    "workload '{id}' appears twice in the pool"
-                )));
-            }
-            let mut builder = Engine::for_config(&opts.cfg);
+            let shared = graphs.get(&id).ok_or_else(|| {
+                VtaError::InvalidRequest(format!(
+                    "no shared graph was built for pooled workload '{id}'"
+                ))
+            })?;
+            let mut builder = Engine::for_config(cfg);
             builder = match &predictions {
                 Some(cache) => builder.backend(AnalyticalBackend::with_cache(cache.clone())),
                 None => builder.backend_kind(opts.backend),
@@ -112,18 +148,15 @@ impl SessionPool {
                 builder = builder.memo(m.clone());
             }
             let engine = builder.build()?;
-            let prepared = engine.prepare_shared(Arc::new(spec.build(opts.graph_seed)))?;
+            let prepared = engine
+                .prepare_shared_with_shapes(shared.graph.clone(), shared.shapes.clone())?;
             let warm = engine.eval_shared(&prepared, &EvalRequest::seeded(0))?;
             let cycles_per_request =
-                warm.cycles.expect("produces_cycles was checked at pool build");
+                warm.cycles.expect("produces_cycles was checked at validation");
             let service_us = (cycles_per_request / opts.clock_mhz).max(1);
             by_workload.insert(id.clone(), entries.len());
             entries.push(PoolEntry {
-                key: PoolKey {
-                    config: opts.cfg.tag(),
-                    workload: id,
-                    backend: opts.backend,
-                },
+                key: PoolKey { config: cfg.tag(), workload: id, backend: opts.backend },
                 engine,
                 prepared,
                 cycles_per_request,
@@ -243,5 +276,28 @@ mod tests {
         let pool = SessionPool::build(&tiny_opts(BackendKind::Analytical)).unwrap();
         assert_eq!(pool.memo_stats(), (0, 0));
         assert!(pool.get("micro@4").unwrap().cycles_per_request > 0);
+    }
+
+    #[test]
+    fn device_pools_share_prepared_graphs() {
+        // The fleet path: two device configs over one shared graph
+        // build. Both pools evaluate the very same graph object; only
+        // the config-level work is repeated.
+        let opts = tiny_opts(BackendKind::TsimTiming);
+        let graphs = shared_graphs(&opts.workloads, opts.graph_seed).unwrap();
+        let small = SessionPool::build_for(&presets::tiny_config(), &opts, &graphs).unwrap();
+        let wide =
+            SessionPool::build_for(&presets::scaled_config(1, 4, 4, 2, 32), &opts, &graphs)
+                .unwrap();
+        let (a, b) = (small.get("micro@4").unwrap(), wide.get("micro@4").unwrap());
+        assert!(
+            Arc::ptr_eq(a.prepared.graph(), b.prepared.graph()),
+            "device pools must share the workload graph, not rebuild it"
+        );
+        assert_ne!(a.key.config, b.key.config, "distinct devices, distinct config tags");
+        assert!(a.cycles_per_request > 0 && b.cycles_per_request > 0);
+        // The memo still works through the shared-prepare path.
+        let (_, misses) = small.memo_stats();
+        assert!(misses > 0, "warmup recorded layers through the shared prepare");
     }
 }

@@ -36,6 +36,16 @@
 //! (the wall-clock amortization — prepare/validation/memo reuse — is
 //! measured separately by `benches/serve_throughput.rs`).
 //!
+//! # Lanes
+//!
+//! The queue + open batches + serial accelerator triple is factored
+//! into a `Lane` so the same event machinery serves two drivers: the
+//! single-device [`schedule`] below runs one lane, and the fleet
+//! scheduler (`serve::fleet::schedule_fleet`) runs one lane per device
+//! replica, routing each admitted arrival to a lane chosen by a
+//! `RoutePolicy`. Every dispatched [`Batch`] records the lane that ran
+//! it in `Batch::device` (always 0 for single-device schedules).
+//!
 //! # Admission and rejection
 //!
 //! The submission queue is bounded: a request arriving while
@@ -59,7 +69,7 @@ pub struct SchedOptions {
     /// Batching window: how long an open batch may wait for peers.
     pub max_wait_us: u64,
     /// Bound on requests waiting or in flight; arrivals beyond it are
-    /// shed (≥ 1).
+    /// shed (≥ 1). In a fleet this bounds each lane separately.
     pub queue_depth: usize,
     /// Per-request deadline from arrival to batch start; `None` = no
     /// deadlines.
@@ -73,6 +83,9 @@ pub struct SchedOptions {
 pub struct Batch {
     /// Open order (stable across runs; close order can differ from it).
     pub id: usize,
+    /// Lane (virtual device replica) that dispatched this batch; always
+    /// 0 for single-device schedules.
+    pub device: usize,
     /// The pooled workload every member runs against.
     pub workload: String,
     /// Arrival of the first member.
@@ -108,7 +121,7 @@ pub struct Schedule {
     pub latencies_us: Vec<(usize, u64)>,
     /// Requests admitted past the queue bound.
     pub admitted: usize,
-    /// Largest queue depth observed at any admission (incl. the
+    /// Largest lane depth observed at any admission (incl. the
     /// admitted request).
     pub max_queue_depth: usize,
     /// Σ depth-at-admission — `/ admitted` is the mean depth.
@@ -158,6 +171,205 @@ struct Device {
     busy: usize,
 }
 
+/// One virtual device replica: a bounded admission queue, the open
+/// batches collecting behind it, and the serial accelerator that runs
+/// them. [`schedule`] drives a single lane; the fleet scheduler drives
+/// one per replica, all writing into one shared [`Schedule`].
+pub(crate) struct Lane {
+    /// Lane index stamped into every batch this lane dispatches.
+    id: usize,
+    open: BTreeMap<String, OpenBatch>,
+    device: Device,
+    /// Running Σ members over `open` (the O(1) half of admission depth).
+    waiting: usize,
+}
+
+impl Lane {
+    pub(crate) fn new(id: usize) -> Lane {
+        Lane {
+            id,
+            open: BTreeMap::new(),
+            device: Device { free_us: 0, in_flight: VecDeque::new(), busy: 0 },
+            waiting: 0,
+        }
+    }
+
+    /// Waiting (open batches) + in flight: the admission depth the
+    /// bounded queue compares against `queue_depth`.
+    pub(crate) fn depth(&self) -> usize {
+        self.device.busy + self.waiting
+    }
+
+    /// When the serial accelerator behind this lane frees up.
+    pub(crate) fn free_us(&self) -> u64 {
+        self.device.free_us
+    }
+
+    /// Advance this lane's virtual clock to `now`: close every batch
+    /// whose window expired by `now`, in (close time, open order) —
+    /// i.e. real event — order, then retire finished work so admission
+    /// sees the true backlog.
+    pub(crate) fn advance(
+        &mut self,
+        now: u64,
+        trace: &[Request],
+        service_us: &BTreeMap<String, u64>,
+        opts: &SchedOptions,
+        out: &mut Schedule,
+    ) {
+        while let Some(key) = self
+            .open
+            .iter()
+            .filter(|(_, b)| b.open_us.saturating_add(opts.max_wait_us) <= now)
+            .min_by_key(|(_, b)| (b.open_us.saturating_add(opts.max_wait_us), b.id))
+            .map(|(k, _)| k.clone())
+        {
+            let b = self.open.remove(&key).unwrap();
+            let ready = b.open_us.saturating_add(opts.max_wait_us);
+            self.waiting -= b.members.len();
+            self.close_batch(b, key, ready, trace, service_us, opts, out);
+        }
+        while self.device.in_flight.front().is_some_and(|&(done, _)| done <= now) {
+            let (_, n) = self.device.in_flight.pop_front().unwrap();
+            self.device.busy -= n;
+        }
+    }
+
+    /// Admit trace request `i` arriving at `now`: record the depth
+    /// accounting, join (or open) its workload's batch, dispatch when
+    /// full. The caller has already bounded admission
+    /// (`depth() < queue_depth`) and advanced the lane to `now`.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn admit(
+        &mut self,
+        i: usize,
+        now: u64,
+        trace: &[Request],
+        service_us: &BTreeMap<String, u64>,
+        opts: &SchedOptions,
+        out: &mut Schedule,
+        next_batch_id: &mut usize,
+    ) {
+        out.admitted += 1;
+        out.max_queue_depth = out.max_queue_depth.max(self.depth() + 1);
+        out.depth_sum += self.depth() as u64 + 1;
+        let key = trace[i].workload.clone();
+        let entry = self.open.entry(key.clone()).or_insert_with(|| {
+            let id = *next_batch_id;
+            *next_batch_id += 1;
+            OpenBatch { id, open_us: now, members: Vec::new() }
+        });
+        entry.members.push(i);
+        self.waiting += 1;
+        if entry.members.len() >= opts.max_batch {
+            let b = self.open.remove(&key).unwrap();
+            self.waiting -= b.members.len();
+            self.close_batch(b, key, now, trace, service_us, opts, out);
+        }
+    }
+
+    /// The trace ended: close the still-open batches at their window
+    /// expiries, in the same event order `advance` uses.
+    pub(crate) fn flush(
+        &mut self,
+        trace: &[Request],
+        service_us: &BTreeMap<String, u64>,
+        opts: &SchedOptions,
+        out: &mut Schedule,
+    ) {
+        let mut rest: Vec<(String, OpenBatch)> =
+            std::mem::take(&mut self.open).into_iter().collect();
+        rest.sort_by_key(|(_, b)| (b.open_us.saturating_add(opts.max_wait_us), b.id));
+        for (key, b) in rest {
+            let ready = b.open_us.saturating_add(opts.max_wait_us);
+            self.waiting -= b.members.len();
+            self.close_batch(b, key, ready, trace, service_us, opts, out);
+        }
+    }
+
+    /// Dispatch one closed batch on the virtual device: drop expired
+    /// members, charge the service time, record completions.
+    #[allow(clippy::too_many_arguments)]
+    fn close_batch(
+        &mut self,
+        batch: OpenBatch,
+        workload: String,
+        ready_us: u64,
+        trace: &[Request],
+        service_us: &BTreeMap<String, u64>,
+        opts: &SchedOptions,
+        out: &mut Schedule,
+    ) {
+        let start_us = self.device.free_us.max(ready_us);
+        let mut requests = Vec::with_capacity(batch.members.len());
+        let mut expired = Vec::new();
+        for i in batch.members {
+            let missed = opts
+                .deadline_us
+                .is_some_and(|d| trace[i].t_us.saturating_add(d) < start_us);
+            if missed {
+                expired.push(i);
+            } else {
+                requests.push(i);
+            }
+        }
+        let done_us = if requests.is_empty() {
+            start_us // nothing dispatched; the device stays free
+        } else {
+            // Saturating throughout: `schedule` stays total (no panic, no
+            // wraparound) even for arrival times near u64::MAX.
+            let service = opts
+                .dispatch_overhead_us
+                .saturating_add(service_us[&workload].saturating_mul(requests.len() as u64));
+            self.device.free_us = start_us.saturating_add(service);
+            self.device.in_flight.push_back((self.device.free_us, requests.len()));
+            self.device.busy += requests.len();
+            self.device.free_us
+        };
+        for &i in &requests {
+            out.latencies_us.push((i, done_us.saturating_sub(trace[i].t_us)));
+        }
+        out.batches.push(Batch {
+            id: batch.id,
+            device: self.id,
+            workload,
+            open_us: batch.open_us,
+            ready_us,
+            start_us,
+            done_us,
+            requests,
+            expired,
+        });
+    }
+}
+
+/// Shared option validation for the single-device and fleet schedulers.
+pub(crate) fn check_options(opts: &SchedOptions) -> Result<(), VtaError> {
+    if opts.max_batch == 0 {
+        return Err(VtaError::InvalidRequest("max_batch must be at least 1".into()));
+    }
+    if opts.queue_depth == 0 {
+        return Err(VtaError::InvalidRequest("queue_depth must be at least 1".into()));
+    }
+    Ok(())
+}
+
+/// Every trace request must name a workload the service map prices.
+pub(crate) fn check_trace(
+    trace: &[Request],
+    service_us: &BTreeMap<String, u64>,
+) -> Result<(), VtaError> {
+    for (i, r) in trace.iter().enumerate() {
+        if !service_us.contains_key(&r.workload) {
+            return Err(VtaError::InvalidRequest(format!(
+                "request {i} names workload '{}' which the session pool does not hold",
+                r.workload
+            )));
+        }
+    }
+    Ok(())
+}
+
 /// Compute the full schedule for a trace. Pure and total: no clocks, no
 /// threads — the same inputs always produce the same `Schedule`.
 /// `service_us` maps every pooled workload id to its per-request
@@ -168,138 +380,27 @@ pub fn schedule(
     service_us: &BTreeMap<String, u64>,
     opts: &SchedOptions,
 ) -> Result<Schedule, VtaError> {
-    if opts.max_batch == 0 {
-        return Err(VtaError::InvalidRequest("max_batch must be at least 1".into()));
-    }
-    if opts.queue_depth == 0 {
-        return Err(VtaError::InvalidRequest("queue_depth must be at least 1".into()));
-    }
-    for (i, r) in trace.iter().enumerate() {
-        if !service_us.contains_key(&r.workload) {
-            return Err(VtaError::InvalidRequest(format!(
-                "request {i} names workload '{}' which the session pool does not hold",
-                r.workload
-            )));
-        }
-    }
+    check_options(opts)?;
+    check_trace(trace, service_us)?;
     // Arrival order: by timestamp, trace order breaking ties.
     let mut order: Vec<usize> = (0..trace.len()).collect();
     order.sort_by_key(|&i| (trace[i].t_us, i));
 
-    let mut open: BTreeMap<String, OpenBatch> = BTreeMap::new();
-    let mut device = Device { free_us: 0, in_flight: VecDeque::new(), busy: 0 };
+    let mut lane = Lane::new(0);
     let mut out = Schedule::default();
     let mut next_batch_id = 0usize;
-    // Running Σ members over `open` (the O(1) half of admission depth).
-    let mut waiting = 0usize;
 
     for &i in &order {
         let now = trace[i].t_us;
-        // 1. Close every batch whose window expired by `now`, in
-        //    (close time, open order) — i.e. real event — order.
-        while let Some(key) = open
-            .iter()
-            .filter(|(_, b)| b.open_us.saturating_add(opts.max_wait_us) <= now)
-            .min_by_key(|(_, b)| (b.open_us.saturating_add(opts.max_wait_us), b.id))
-            .map(|(k, _)| k.clone())
-        {
-            let b = open.remove(&key).unwrap();
-            let ready = b.open_us.saturating_add(opts.max_wait_us);
-            waiting -= b.members.len();
-            close_batch(b, key, ready, trace, service_us, opts, &mut device, &mut out);
-        }
-        // 2. Retire finished work so admission sees the true backlog.
-        while device.in_flight.front().is_some_and(|&(done, _)| done <= now) {
-            let (_, n) = device.in_flight.pop_front().unwrap();
-            device.busy -= n;
-        }
-        // 3. Bounded admission: waiting (open batches) + in flight.
-        let depth = device.busy + waiting;
-        if depth >= opts.queue_depth {
+        lane.advance(now, trace, service_us, opts, &mut out);
+        if lane.depth() >= opts.queue_depth {
             out.rejected_queue_full.push(i);
             continue;
         }
-        out.admitted += 1;
-        out.max_queue_depth = out.max_queue_depth.max(depth + 1);
-        out.depth_sum += depth as u64 + 1;
-        // 4. Join (or open) this workload's batch; dispatch when full.
-        let key = trace[i].workload.clone();
-        let entry = open.entry(key.clone()).or_insert_with(|| {
-            let id = next_batch_id;
-            next_batch_id += 1;
-            OpenBatch { id, open_us: now, members: Vec::new() }
-        });
-        entry.members.push(i);
-        waiting += 1;
-        if entry.members.len() >= opts.max_batch {
-            let b = open.remove(&key).unwrap();
-            waiting -= b.members.len();
-            close_batch(b, key, now, trace, service_us, opts, &mut device, &mut out);
-        }
+        lane.admit(i, now, trace, service_us, opts, &mut out, &mut next_batch_id);
     }
-    // 5. The generator stopped; flush the still-open batches at their
-    //    window expiries, in the same event order as above.
-    let mut rest: Vec<(String, OpenBatch)> = open.into_iter().collect();
-    rest.sort_by_key(|(_, b)| (b.open_us.saturating_add(opts.max_wait_us), b.id));
-    for (key, b) in rest {
-        let ready = b.open_us.saturating_add(opts.max_wait_us);
-        close_batch(b, key, ready, trace, service_us, opts, &mut device, &mut out);
-    }
+    lane.flush(trace, service_us, opts, &mut out);
     Ok(out)
-}
-
-/// Dispatch one closed batch on the virtual device: drop expired
-/// members, charge the service time, record completions.
-#[allow(clippy::too_many_arguments)]
-fn close_batch(
-    batch: OpenBatch,
-    workload: String,
-    ready_us: u64,
-    trace: &[Request],
-    service_us: &BTreeMap<String, u64>,
-    opts: &SchedOptions,
-    device: &mut Device,
-    out: &mut Schedule,
-) {
-    let start_us = device.free_us.max(ready_us);
-    let mut requests = Vec::with_capacity(batch.members.len());
-    let mut expired = Vec::new();
-    for i in batch.members {
-        let missed = opts
-            .deadline_us
-            .is_some_and(|d| trace[i].t_us.saturating_add(d) < start_us);
-        if missed {
-            expired.push(i);
-        } else {
-            requests.push(i);
-        }
-    }
-    let done_us = if requests.is_empty() {
-        start_us // nothing dispatched; the device stays free
-    } else {
-        // Saturating throughout: `schedule` stays total (no panic, no
-        // wraparound) even for arrival times near u64::MAX.
-        let service = opts
-            .dispatch_overhead_us
-            .saturating_add(service_us[&workload].saturating_mul(requests.len() as u64));
-        device.free_us = start_us.saturating_add(service);
-        device.in_flight.push_back((device.free_us, requests.len()));
-        device.busy += requests.len();
-        device.free_us
-    };
-    for &i in &requests {
-        out.latencies_us.push((i, done_us.saturating_sub(trace[i].t_us)));
-    }
-    out.batches.push(Batch {
-        id: batch.id,
-        workload,
-        open_us: batch.open_us,
-        ready_us,
-        start_us,
-        done_us,
-        requests,
-        expired,
-    });
 }
 
 #[cfg(test)]
@@ -333,6 +434,7 @@ mod tests {
         assert_eq!((b.ready_us, b.start_us), (2, 2), "full at the third arrival");
         assert_eq!(b.done_us, 2 + 10 + 3 * 100);
         assert_eq!(b.occupancy(), 3);
+        assert_eq!(b.device, 0, "single-device schedules run on lane 0");
         assert_eq!(s.completed(), 3);
     }
 

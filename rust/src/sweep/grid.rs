@@ -9,6 +9,7 @@
 
 use crate::compiler::graph::Graph;
 use crate::config::presets;
+use crate::engine::VtaError;
 use crate::workloads;
 
 /// A workload the sweep can build, identified by a stable string id
@@ -27,13 +28,16 @@ pub enum WorkloadSpec {
 
 impl WorkloadSpec {
     /// Parse an id like `resnet18@56`, `mobilenet`, `micro@4`. The part
-    /// after `@` defaults to 224 (nets) or 16 (micro).
-    pub fn parse(s: &str) -> Result<WorkloadSpec, String> {
+    /// after `@` defaults to 224 (nets) or 16 (micro). Failures are
+    /// typed [`VtaError::InvalidRequest`] values quoting the offending
+    /// id.
+    pub fn parse(s: &str) -> Result<WorkloadSpec, VtaError> {
+        let bad = VtaError::InvalidRequest;
         let (name, size) = match s.split_once('@') {
             Some((n, v)) => {
                 let v = v
                     .parse::<usize>()
-                    .map_err(|_| format!("bad size in workload '{s}'"))?;
+                    .map_err(|_| bad(format!("bad size in workload '{s}'")))?;
                 (n, Some(v))
             }
             None => (s, None),
@@ -45,9 +49,9 @@ impl WorkloadSpec {
                 let depth = name
                     .strip_prefix("resnet")
                     .and_then(|d| d.parse::<usize>().ok())
-                    .ok_or_else(|| format!("unknown workload '{s}'"))?;
+                    .ok_or_else(|| bad(format!("unknown workload '{s}'")))?;
                 if !workloads::RESNET_DEPTHS.contains(&depth) {
-                    return Err(format!("unsupported ResNet depth {depth} in '{s}'"));
+                    return Err(bad(format!("unsupported ResNet depth {depth} in '{s}'")));
                 }
                 Ok(WorkloadSpec::Resnet { depth, hw: size.unwrap_or(224) })
             }
@@ -171,9 +175,11 @@ mod tests {
 
     #[test]
     fn workload_parse_rejects_garbage() {
-        assert!(WorkloadSpec::parse("resnet19").is_err());
-        assert!(WorkloadSpec::parse("alexnet").is_err());
-        assert!(WorkloadSpec::parse("resnet18@big").is_err());
+        for bad in ["resnet19", "alexnet", "resnet18@big"] {
+            let err = WorkloadSpec::parse(bad).unwrap_err();
+            assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
+            assert!(err.to_string().contains(bad), "must quote the offending id: {err}");
+        }
     }
 
     #[test]

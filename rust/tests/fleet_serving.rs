@@ -1,0 +1,216 @@
+//! Fleet-serving acceptance tests: the determinism contract extended to
+//! heterogeneous fleets (routing and autoscaling are part of the
+//! virtual-time model, so worker count never changes a `FleetReport`),
+//! loss-free request accounting across devices, routing monotonicity,
+//! the `RoutePolicy` misbehavior contract, and the cost-vs-SLO
+//! frontier's shape.
+
+use std::collections::BTreeMap;
+use vta::config::{presets, VtaConfig};
+use vta::serve::{
+    self, schedule_fleet, CheapestFirst, DeviceCost, EarliestFeasibleCheapest, FleetOptions,
+    FleetReport, LaneView, LeastLoaded, Request, RoutePolicy, RoutePolicyKind, SchedOptions,
+    ServeOptions,
+};
+use vta::sweep::WorkloadSpec;
+use vta::util::json::Json;
+
+fn fleet_opts(configs: Vec<VtaConfig>) -> FleetOptions {
+    FleetOptions {
+        base: ServeOptions {
+            cfg: presets::tiny_config(),
+            workloads: vec![WorkloadSpec::Micro { block: 4 }],
+            ..ServeOptions::default()
+        },
+        configs,
+        policy: RoutePolicyKind::EarliestFeasibleCheapest,
+        autoscale: None,
+    }
+}
+
+fn micro_burst(n: u64, gap_us: u64) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request { t_us: (i / 4) * gap_us, workload: "micro@4".into(), seed: i })
+        .collect()
+}
+
+fn svc(us: u64) -> BTreeMap<String, u64> {
+    [("w".to_string(), us)].into_iter().collect()
+}
+
+fn sched_opts(max_batch: usize, queue_depth: usize) -> SchedOptions {
+    SchedOptions {
+        max_batch,
+        max_wait_us: 0,
+        queue_depth,
+        deadline_us: None,
+        dispatch_overhead_us: 0,
+    }
+}
+
+fn p99(latencies_us: &[(usize, u64)]) -> u64 {
+    let mut v: Vec<u64> = latencies_us.iter().map(|&(_, l)| l).collect();
+    v.sort_unstable();
+    v[(v.len() * 99).div_ceil(100) - 1]
+}
+
+/// The acceptance headline: routing and autoscaling decisions live in
+/// virtual time, so `FleetReport` JSON — and the batch schedule and lane
+/// lifetimes behind it — are byte-identical across `--jobs 1` and
+/// `--jobs 4`.
+#[test]
+fn fleet_report_is_byte_identical_across_worker_counts() {
+    let trace = micro_burst(32, 25);
+    let mut serial =
+        fleet_opts(vec![presets::tiny_config(), presets::scaled_config(1, 4, 4, 2, 32)]);
+    serial.base.jobs = 1;
+    let mut parallel = serial.clone();
+    parallel.base.jobs = 4;
+    let a = serve::run_fleet(&serial, &trace).unwrap();
+    let b = serve::run_fleet(&parallel, &trace).unwrap();
+    assert_eq!(a.batches, b.batches, "batch schedule must not depend on the worker count");
+    assert_eq!(a.lanes, b.lanes, "lane lifetimes must not depend on the worker count");
+    assert_eq!(
+        a.report.to_json().to_string_pretty(),
+        b.report.to_json().to_string_pretty(),
+        "FleetReport JSON must be byte-identical across --jobs 1 and --jobs 4"
+    );
+}
+
+/// Every submitted request lands in exactly one bucket — completed on
+/// some device, shed, or expired — and the per-device counters add back
+/// up to the fleet totals.
+#[test]
+fn accounting_is_loss_free_across_devices_under_shedding() {
+    let mut opts =
+        fleet_opts(vec![presets::tiny_config(), presets::scaled_config(1, 4, 4, 2, 32)]);
+    opts.base.max_batch = 1;
+    opts.base.max_wait_us = 0;
+    opts.base.queue_depth = 3;
+    opts.policy = RoutePolicyKind::LeastLoaded;
+    // 24 simultaneous arrivals vs 2 devices x queue 3: most must shed.
+    let trace: Vec<Request> =
+        (0..24u64).map(|i| Request { t_us: 0, workload: "micro@4".into(), seed: i }).collect();
+    let r = serve::run_fleet(&opts, &trace).unwrap().report;
+    assert!(r.rejected_queue_full > 0, "the burst must overflow both queues");
+    assert_eq!(
+        r.completed + r.rejected_queue_full + r.expired_deadline,
+        r.submitted,
+        "completed + shed + expired must equal submitted"
+    );
+    assert_eq!(r.admitted + r.rejected_queue_full, r.submitted);
+    assert_eq!(r.devices.iter().map(|d| d.routed).sum::<usize>(), r.admitted);
+    assert_eq!(r.devices.iter().map(|d| d.completed).sum::<usize>(), r.completed);
+}
+
+/// Adding a strictly faster (higher-area) device never worsens p99
+/// under the same trace, for every built-in policy. With no deadline the
+/// cost-greedy policies keep everything on the cheap device (equality);
+/// least-loaded must actually improve.
+#[test]
+fn adding_a_strictly_faster_device_never_worsens_p99() {
+    let slow = DeviceCost { config: "slow".into(), service_us: svc(500), scaled_area: 1.0 };
+    let fast = DeviceCost { config: "fast".into(), service_us: svc(100), scaled_area: 4.0 };
+    let trace: Vec<Request> =
+        (0..64u64).map(|i| Request { t_us: i * 50, workload: "w".into(), seed: i }).collect();
+    let opts = sched_opts(1, 10_000);
+    let single = schedule_fleet(&trace, &[slow.clone()], &LeastLoaded, &opts, None).unwrap();
+    let single_p99 = p99(&single.schedule.latencies_us);
+    let pair = [slow, fast];
+    let policies: [&dyn RoutePolicy; 3] =
+        [&EarliestFeasibleCheapest, &LeastLoaded, &CheapestFirst];
+    for policy in policies {
+        let fleet = schedule_fleet(&trace, &pair, policy, &opts, None).unwrap();
+        assert_eq!(fleet.schedule.completed(), trace.len(), "no deadline, huge queue");
+        let fleet_p99 = p99(&fleet.schedule.latencies_us);
+        assert!(
+            fleet_p99 <= single_p99,
+            "policy {}: fleet p99 {fleet_p99} worse than single-device p99 {single_p99}",
+            policy.name()
+        );
+    }
+    let balanced = schedule_fleet(&trace, &pair, &LeastLoaded, &opts, None).unwrap();
+    assert!(
+        p99(&balanced.schedule.latencies_us) < single_p99,
+        "least-loaded must exploit the fast device"
+    );
+}
+
+/// A policy that never returns an offered lane: the contract says every
+/// such request is shed, not panicked on or lost.
+struct Stonewall;
+
+impl RoutePolicy for Stonewall {
+    fn name(&self) -> &'static str {
+        "stonewall"
+    }
+
+    fn route(&self, _now_us: u64, _deadline_us: Option<u64>, _lanes: &[LaneView]) -> usize {
+        usize::MAX
+    }
+}
+
+#[test]
+fn a_policy_returning_an_unoffered_lane_sheds_instead_of_panicking() {
+    let dev = DeviceCost { config: "a".into(), service_us: svc(10), scaled_area: 1.0 };
+    let trace: Vec<Request> =
+        (0..4u64).map(|i| Request { t_us: i, workload: "w".into(), seed: i }).collect();
+    let fs = schedule_fleet(&trace, &[dev], &Stonewall, &sched_opts(1, 8), None).unwrap();
+    assert_eq!(fs.schedule.admitted, 0);
+    assert_eq!(fs.schedule.rejected_queue_full.len(), 4, "every arrival shed, none lost");
+}
+
+/// Strict schema round trip, `ExecCounters::from_json` style: exact
+/// field set, exact `schema_version`, float-exact values.
+#[test]
+fn fleet_report_json_roundtrips_strictly() {
+    let opts = fleet_opts(vec![presets::tiny_config(), presets::scaled_config(1, 4, 4, 2, 32)]);
+    let trace = micro_burst(12, 40);
+    let report = serve::run_fleet(&opts, &trace).unwrap().report;
+    let parsed = Json::parse(&report.to_json().to_string_pretty()).unwrap();
+    assert_eq!(FleetReport::from_json(&parsed), Some(report.clone()));
+    let j = report.to_json();
+    if let Json::Object(mut map) = j.clone() {
+        map.insert("wall_ns".into(), Json::Int(1));
+        assert_eq!(FleetReport::from_json(&Json::Object(map)), None, "unknown field");
+    }
+    if let Json::Object(mut map) = j.clone() {
+        map.remove("peak_area");
+        assert_eq!(FleetReport::from_json(&Json::Object(map)), None, "missing field");
+    }
+    if let Json::Object(mut map) = j {
+        map.insert("schema_version".into(), Json::Int(0));
+        assert_eq!(FleetReport::from_json(&Json::Object(map)), None, "wrong schema version");
+    }
+}
+
+/// The frontier runs every single-device candidate plus the combined
+/// fleet over the same trace, marks the `(peak_area, p99)` Pareto
+/// survivors, and under queue pressure the fleet completes at least as
+/// much as the best single device.
+#[test]
+fn frontier_covers_every_candidate_and_fleet_dominates_under_overload() {
+    let mut opts = fleet_opts(vec![
+        presets::tiny_config(),
+        presets::scaled_config(1, 4, 4, 2, 32),
+        presets::scaled_config(1, 4, 4, 2, 64),
+    ]);
+    opts.base.max_batch = 2;
+    opts.base.queue_depth = 4;
+    let trace = micro_burst(48, 20);
+    let outcome = serve::frontier(&opts, &trace).unwrap();
+    assert_eq!(outcome.entries.len(), 4, "3 single-device candidates + the combined fleet");
+    let fleet = outcome.entries.iter().find(|e| e.label == "fleet(3)").expect("fleet entry");
+    assert_eq!(fleet.configs.len(), 3);
+    assert!(outcome.entries.iter().any(|e| e.pareto), "a nonempty set has Pareto survivors");
+    let singles = outcome.entries.iter().filter(|e| e.label != "fleet(3)");
+    let best_single = singles.map(|e| e.report.completed).max().unwrap();
+    assert!(
+        fleet.report.completed >= best_single,
+        "under queue pressure the fleet must not complete less than the best single device"
+    );
+    let j = outcome.to_json();
+    assert_eq!(j.get("schema_version").and_then(|v| v.as_i64()), Some(1));
+    let entries = j.get("entries").and_then(|e| e.as_array()).map(|a| a.len());
+    assert_eq!(entries, Some(4));
+}

@@ -200,11 +200,29 @@ fn rejections_are_typed_vta_errors() {
     let err = ArrivalSpec::parse("burst:10").unwrap_err();
     assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
 
+    // A missing replay file is an invalid request naming the path, not
+    // a bare I/O error.
+    let err = serve::read_trace(std::path::Path::new("/no/such/replay.jsonl")).unwrap_err();
+    assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
+    assert!(err.to_string().contains("/no/such/replay.jsonl"), "got {err}");
+
     // An invalid hardware configuration fails with the config taxonomy.
     let mut opts = micro_opts();
     opts.cfg.axi_bytes = 3;
     let err = SessionPool::build(&opts).unwrap_err();
     assert!(matches!(err, VtaError::Config(_)), "got {err:?}");
+}
+
+/// Malformed `--arrival` specs surface as typed `InvalidRequest` errors
+/// quoting the offending token, so the CLI message names exactly what
+/// was typed.
+#[test]
+fn malformed_arrival_specs_quote_the_offending_token() {
+    for bad in ["poisson", "poisson:fast", "uniform:0", "uniform:-3", "burst:9"] {
+        let err = ArrivalSpec::parse(bad).unwrap_err();
+        assert!(matches!(err, VtaError::InvalidRequest(_)), "'{bad}': got {err:?}");
+        assert!(err.to_string().contains(bad), "'{bad}' must appear in: {err}");
+    }
 }
 
 /// The functional rungs serve too (with bit-exact outputs via memo
