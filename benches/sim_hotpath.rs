@@ -65,6 +65,32 @@ fn main() {
         });
     }
 
+    // --- exec kernel dispatch: the same 4096 GEMM ops' worth of MACs,
+    // driven directly through the `exec::dot_i8` dispatcher. With
+    // `--features simd` on an AVX2/SSE2 host this takes the vector
+    // path; without it, the scalar path — so the probe pairs with
+    // exec/gemm_insn_4096ops for an on/off A/B read of the kernel. ---
+    {
+        use vta::exec::dot_i8;
+        let cfg = presets::default_config();
+        let bi = cfg.block_in;
+        let bo = cfg.block_out;
+        let mut rng = Pcg32::seeded(2);
+        let x = rng.i8_vec(bi * 4096);
+        let w = rng.i8_vec(bi * bo);
+        let macs = 4096u64 * (bi * bo) as u64;
+        b.bench_throughput("exec/gemm_insn_4096ops_simd", Some((macs as f64, "MACs")), || {
+            let mut acc = 0i32;
+            for op in 0..4096usize {
+                let xi = &x[op * bi..(op + 1) * bi];
+                for r in 0..bo {
+                    acc = acc.wrapping_add(dot_i8(xi, &w[r * bi..(r + 1) * bi]));
+                }
+            }
+            acc
+        });
+    }
+
     // --- tsim end-to-end throughput: simulated cycles per wall second ---
     {
         let g = workloads::micro_resnet(16, 3);
@@ -138,6 +164,22 @@ fn main() {
             )
             .unwrap();
             s.run_graph(&g, black_box(&input)).unwrap();
+        });
+    }
+
+    // --- engine batched evaluation: 16 requests through one prepared
+    // graph and one reused session (`Engine::eval_many`, the serve /
+    // sweep batch path) — amortizes validation, lowering, and DRAM
+    // allocation across the batch ---
+    {
+        use vta::engine::{Engine, EvalRequest};
+        let g = workloads::micro_resnet(16, 3);
+        let cfg = presets::default_config();
+        let engine = Engine::for_config(&cfg).backend_kind(BackendKind::Tsim).build().unwrap();
+        let prepared = engine.prepare(&g).unwrap();
+        let requests: Vec<EvalRequest> = (0..16u64).map(|s| EvalRequest::seeded(s + 1)).collect();
+        b.bench("engine/eval_many_batch16", || {
+            engine.eval_many(&prepared, black_box(&requests)).unwrap().len()
         });
     }
 

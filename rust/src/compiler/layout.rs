@@ -93,10 +93,32 @@ pub fn pack_conv_weights(
     bo: usize,
     bi: usize,
 ) -> Vec<i8> {
+    let mut out = Vec::new();
+    pack_conv_weights_into(&mut out, data, o, i, kh, kw, bo, bi);
+    out
+}
+
+/// [`pack_conv_weights`] into a caller-owned buffer, reusing its
+/// capacity. The buffer is cleared and zero-filled first, so the result
+/// is byte-identical to the allocating variant; repeated layers stop
+/// paying an allocation per pack (§Perf: the runtime's weight-staging
+/// arena, [`crate::runtime::Session`]).
+#[allow(clippy::too_many_arguments)]
+pub fn pack_conv_weights_into(
+    out: &mut Vec<i8>,
+    data: &[i8],
+    o: usize,
+    i: usize,
+    kh: usize,
+    kw: usize,
+    bo: usize,
+    bi: usize,
+) {
     assert_eq!(data.len(), o * i * kh * kw, "weight size mismatch");
     let ob = o.div_ceil(bo);
     let ib = i.div_ceil(bi);
-    let mut out = vec![0i8; ob * ib * kh * kw * bo * bi];
+    out.clear();
+    out.resize(ob * ib * kh * kw * bo * bi, 0);
     for oc in 0..o {
         let (ot, oi) = (oc / bo, oc % bo);
         for ic in 0..i {
@@ -111,7 +133,6 @@ pub fn pack_conv_weights(
             }
         }
     }
-    out
 }
 
 /// Pack depthwise weights `[C][KH][KW]` into `[C/block][KH][KW]` tiles of
@@ -125,9 +146,26 @@ pub fn pack_depthwise_weights(
     batch: usize,
     block: usize,
 ) -> Vec<i8> {
+    let mut out = Vec::new();
+    pack_depthwise_weights_into(&mut out, data, c, kh, kw, batch, block);
+    out
+}
+
+/// [`pack_depthwise_weights`] into a caller-owned buffer (cleared and
+/// zero-filled first; byte-identical output, no per-call allocation).
+pub fn pack_depthwise_weights_into(
+    out: &mut Vec<i8>,
+    data: &[i8],
+    c: usize,
+    kh: usize,
+    kw: usize,
+    batch: usize,
+    block: usize,
+) {
     assert_eq!(data.len(), c * kh * kw, "depthwise weight size mismatch");
     let cb = c.div_ceil(block);
-    let mut out = vec![0i8; cb * kh * kw * batch * block];
+    out.clear();
+    out.resize(cb * kh * kw * batch * block, 0);
     for ch in 0..c {
         let (ct, ci) = (ch / block, ch % block);
         for ky in 0..kh {
@@ -140,7 +178,6 @@ pub fn pack_depthwise_weights(
             }
         }
     }
-    out
 }
 
 /// Conv output spatial size (paper Appendix A, eq. 1).
@@ -208,6 +245,18 @@ mod tests {
         let tiled = pack_depthwise_weights(&data, 2, 1, 1, 2, 2);
         // tile [batch=2][block=2]: both batch rows identical
         assert_eq!(tiled, vec![5, -3, 5, -3]);
+    }
+
+    #[test]
+    fn into_variants_match_with_dirty_buffer() {
+        let mut rng = Pcg32::seeded(3);
+        let conv = rng.i8_vec(5 * 3 * 3 * 3); // o=5 i=3 k=3 (odd sizes)
+        let dw = rng.i8_vec(5 * 3 * 3);
+        let mut buf = vec![77i8; 9999]; // stale garbage must not leak
+        pack_conv_weights_into(&mut buf, &conv, 5, 3, 3, 3, 4, 4);
+        assert_eq!(buf, pack_conv_weights(&conv, 5, 3, 3, 3, 4, 4));
+        pack_depthwise_weights_into(&mut buf, &dw, 5, 3, 3, 2, 4);
+        assert_eq!(buf, pack_depthwise_weights(&dw, 5, 3, 3, 2, 4));
     }
 
     #[test]

@@ -50,14 +50,8 @@ fn resolve_input<'r>(
     }
 }
 
-/// Shared simulator evaluation: drive a [`Session`] on the chosen
-/// simulator and collect its products into an [`Evaluation`].
-fn sim_eval(
-    kind: BackendKind,
-    name: &'static str,
-    prepared: &Prepared<'_>,
-    request: &EvalRequest,
-) -> Result<Evaluation, VtaError> {
+/// Build the [`Session`] a simulating backend evaluates on.
+fn sim_session(kind: BackendKind, prepared: &Prepared<'_>) -> Result<Session, VtaError> {
     let opts = SessionOptions {
         backend: kind,
         trace: prepared.tuning.trace,
@@ -65,7 +59,19 @@ fn sim_eval(
         dbuf_reuse: prepared.tuning.dbuf_reuse,
         memo: prepared.memo.clone(),
     };
-    let mut session = Session::new(&prepared.cfg, opts)?;
+    Session::new(&prepared.cfg, opts)
+}
+
+/// Evaluate one request on an existing session (which must be fresh or
+/// freshly [`Session::reset_for_reuse`]d) and collect its products into
+/// an [`Evaluation`].
+fn sim_eval_with_session(
+    kind: BackendKind,
+    name: &'static str,
+    prepared: &Prepared<'_>,
+    request: &EvalRequest,
+    session: &mut Session,
+) -> Result<Evaluation, VtaError> {
     let input = resolve_input(prepared, request, kind != BackendKind::TsimTiming)?;
     // Shapes were computed (= the graph validated) at prepare time, so
     // repeated evaluations of one Prepared skip shape propagation.
@@ -80,6 +86,42 @@ fn sim_eval(
         trace: session.take_trace(),
         layer_stats: std::mem::take(&mut session.layer_stats),
     })
+}
+
+/// Shared simulator evaluation: drive a [`Session`] on the chosen
+/// simulator and collect its products into an [`Evaluation`].
+fn sim_eval(
+    kind: BackendKind,
+    name: &'static str,
+    prepared: &Prepared<'_>,
+    request: &EvalRequest,
+) -> Result<Evaluation, VtaError> {
+    let mut session = sim_session(kind, prepared)?;
+    sim_eval_with_session(kind, name, prepared, request, &mut session)
+}
+
+/// Batched simulator evaluation: one session serves the whole batch,
+/// [`Session::reset_for_reuse`]d between requests, so session
+/// construction (a 256 MiB DRAM arena, scratchpad allocation, queue
+/// setup) is paid once instead of per request. The reset restores
+/// bit-identical fresh-session state, so every [`Evaluation`] equals
+/// what [`sim_eval`] would have produced for the same request
+/// (`rust/tests/backend_parity.rs::eval_many_matches_per_request_eval`).
+fn sim_eval_many(
+    kind: BackendKind,
+    name: &'static str,
+    prepared: &Prepared<'_>,
+    requests: &[EvalRequest],
+) -> Result<Vec<Evaluation>, VtaError> {
+    let mut session = sim_session(kind, prepared)?;
+    let mut out = Vec::with_capacity(requests.len());
+    for (i, request) in requests.iter().enumerate() {
+        if i > 0 {
+            session.reset_for_reuse();
+        }
+        out.push(sim_eval_with_session(kind, name, prepared, request, &mut session)?);
+    }
+    Ok(out)
 }
 
 /// Behavioral simulation: exact tensors, no timing model. The top of
@@ -103,6 +145,14 @@ impl Backend for FsimBackend {
 
     fn eval(&self, prepared: &Prepared<'_>, request: &EvalRequest) -> Result<Evaluation, VtaError> {
         sim_eval(BackendKind::Fsim, self.name(), prepared, request)
+    }
+
+    fn eval_many(
+        &self,
+        prepared: &Prepared<'_>,
+        requests: &[EvalRequest],
+    ) -> Result<Vec<Evaluation>, VtaError> {
+        sim_eval_many(BackendKind::Fsim, self.name(), prepared, requests)
     }
 }
 
@@ -159,6 +209,14 @@ impl Backend for TsimBackend {
 
     fn eval(&self, prepared: &Prepared<'_>, request: &EvalRequest) -> Result<Evaluation, VtaError> {
         sim_eval(self.kind(), self.name(), prepared, request)
+    }
+
+    fn eval_many(
+        &self,
+        prepared: &Prepared<'_>,
+        requests: &[EvalRequest],
+    ) -> Result<Vec<Evaluation>, VtaError> {
+        sim_eval_many(self.kind(), self.name(), prepared, requests)
     }
 }
 
@@ -302,6 +360,14 @@ impl Backend for MemoBackend {
 
     fn eval(&self, prepared: &Prepared<'_>, request: &EvalRequest) -> Result<Evaluation, VtaError> {
         self.inner.eval(prepared, request)
+    }
+
+    fn eval_many(
+        &self,
+        prepared: &Prepared<'_>,
+        requests: &[EvalRequest],
+    ) -> Result<Vec<Evaluation>, VtaError> {
+        self.inner.eval_many(prepared, requests)
     }
 
     fn layer_memo(&self) -> Option<Arc<LayerMemo>> {

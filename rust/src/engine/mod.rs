@@ -319,6 +319,21 @@ pub trait Backend: Send + Sync {
     /// Evaluate one request against a prepared pair.
     fn eval(&self, prepared: &Prepared<'_>, request: &EvalRequest) -> Result<Evaluation, VtaError>;
 
+    /// Evaluate a batch of requests against one prepared pair. The
+    /// default is the per-request loop; simulating backends override it
+    /// to reuse one session across the batch (validation, DRAM arena and
+    /// scratchpad setup paid once). Results are bit-identical to calling
+    /// [`Backend::eval`] once per request, in order; the first failing
+    /// request fails the whole batch (requests against one prepared pair
+    /// share their validity).
+    fn eval_many(
+        &self,
+        prepared: &Prepared<'_>,
+        requests: &[EvalRequest],
+    ) -> Result<Vec<Evaluation>, VtaError> {
+        requests.iter().map(|r| self.eval(prepared, r)).collect()
+    }
+
     /// The shared layer memo this backend injects at prepare time
     /// (`Some` only for [`MemoBackend`]). Lets shape-reusing prepare
     /// paths ([`Engine::prepare_shared_with_shapes`]) attach the memo
@@ -505,6 +520,28 @@ impl Engine {
         request: &EvalRequest,
     ) -> Result<Evaluation, VtaError> {
         self.backend.eval(prepared, request)
+    }
+
+    /// Evaluate a batch of requests against one prepared graph,
+    /// amortizing session setup across the batch (see
+    /// [`Backend::eval_many`]). Results are bit-identical to calling
+    /// [`Engine::eval`] once per request, in order.
+    pub fn eval_many(
+        &self,
+        prepared: &Prepared<'_>,
+        requests: &[EvalRequest],
+    ) -> Result<Vec<Evaluation>, VtaError> {
+        self.backend.eval_many(prepared, requests)
+    }
+
+    /// [`Engine::eval_many`] against a shared prepared graph — the
+    /// batched request path of the serving runtime.
+    pub fn eval_many_shared(
+        &self,
+        prepared: &PreparedShared,
+        requests: &[EvalRequest],
+    ) -> Result<Vec<Evaluation>, VtaError> {
+        self.backend.eval_many(&prepared.as_prepared(), requests)
     }
 
     /// Prepare + evaluate in one call (the common single-shot path).

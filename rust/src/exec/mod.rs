@@ -7,6 +7,9 @@
 //! mirrors the paper's methodology where fsim is the behavioral reference
 //! whose architectural states are compared against tsim traces (§III-C).
 
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd;
+
 use crate::config::VtaConfig;
 use crate::config::IsaLayout;
 use crate::isa::{AluInsn, AluOp, BufferId, GemmInsn, Insn, MemInsn, Opcode, Uop};
@@ -206,6 +209,19 @@ impl CoreState {
             cfg: cfg.clone(),
             timing_only: false,
         }
+    }
+
+    /// Zero the architectural state in place, keeping every allocation:
+    /// after a reset the state is indistinguishable from
+    /// `CoreState::new(&cfg)` (the batched-evaluation invariant —
+    /// [`crate::runtime::Session::reset_for_reuse`] relies on it).
+    pub fn reset(&mut self) {
+        self.uop.fill(Uop::default());
+        self.inp.fill(0);
+        self.wgt.fill(0);
+        self.acc.fill(0);
+        self.out.fill(0);
+        self.counters = ExecCounters::default();
     }
 
     /// Execute one instruction's full architectural effect.
@@ -471,11 +487,7 @@ impl CoreState {
                     }
                     if a.use_imm {
                         let acc_t = &mut acc[dst * n..][..n];
-                        for (av, ov) in acc_t.iter_mut().zip(out_t.iter_mut()) {
-                            let r = alu_eval(a.op, *av, a.imm);
-                            *av = r;
-                            *ov = r as i8;
-                        }
+                        alu_tile_imm(a.op, a.imm, acc_t, out_t);
                         continue;
                     }
                     let src =
@@ -569,8 +581,15 @@ fn tile_pair_mut(acc: &mut [i32], dst: usize, src: usize, n: usize) -> (&mut [i3
 /// widening multiply-accumulate idiom (`pmaddwd` on x86, `smlal` on
 /// AArch64) — roughly twice the vector throughput of an i32-product
 /// formulation, since each multiply is half as wide.
+///
+/// This is the always-compiled scalar reference. [`dot_i8`] dispatches
+/// to the explicit SIMD kernels under `--features simd`; the two must be
+/// bit-identical for every input (products are exact in i16, `pmaddwd`
+/// pair sums are exact in i32, and i32 addition is associative modulo
+/// 2^32) — asserted over random inputs by
+/// `rust/tests/simd_event_parity.rs`.
 #[inline]
-fn dot_i8(x: &[i8], w: &[i8]) -> i32 {
+pub fn dot_i8_scalar(x: &[i8], w: &[i8]) -> i32 {
     let mut sum = 0i32;
     let mut xc = x.chunks_exact(16);
     let mut wc = w.chunks_exact(16);
@@ -587,6 +606,55 @@ fn dot_i8(x: &[i8], w: &[i8]) -> i32 {
         sum += (a as i16 * b as i16) as i32;
     }
     sum
+}
+
+/// int8 dot product — the GEMM inner kernel. With `--features simd` on
+/// x86_64 this dispatches at runtime (`is_x86_feature_detected!`, cached
+/// by std) to an explicit AVX2 `vpmaddwd` kernel or the SSE2 x86_64
+/// baseline; otherwise it is the scalar reference. All paths return
+/// bit-identical results — see [`dot_i8_scalar`].
+#[inline]
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn dot_i8(x: &[i8], w: &[i8]) -> i32 {
+    simd::dot_i8(x, w)
+}
+
+/// int8 dot product — the GEMM inner kernel (scalar build; see
+/// [`dot_i8_scalar`] and the `simd` feature).
+#[inline]
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn dot_i8(x: &[i8], w: &[i8]) -> i32 {
+    dot_i8_scalar(x, w)
+}
+
+/// ALU immediate-mode element loop over one accumulator tile: applies
+/// `op` with the uniform immediate to every `acc_t` element and narrows
+/// each result into `out_t` (8-bit truncation). Always-compiled scalar
+/// reference for [`alu_tile_imm`].
+#[inline]
+pub fn alu_tile_imm_scalar(op: AluOp, imm: i32, acc_t: &mut [i32], out_t: &mut [i8]) {
+    for (av, ov) in acc_t.iter_mut().zip(out_t.iter_mut()) {
+        let r = alu_eval(op, *av, imm);
+        *av = r;
+        *ov = r as i8;
+    }
+}
+
+/// ALU immediate-mode element loop — dispatches to the AVX2 kernel when
+/// `--features simd` is on and the CPU supports it, else the scalar
+/// reference. Bit-identical either way (the SIMD contract above).
+#[inline]
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn alu_tile_imm(op: AluOp, imm: i32, acc_t: &mut [i32], out_t: &mut [i8]) {
+    simd::alu_tile_imm(op, imm, acc_t, out_t)
+}
+
+/// ALU immediate-mode element loop (scalar build; see
+/// [`alu_tile_imm_scalar`] and the `simd` feature).
+#[inline]
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn alu_tile_imm(op: AluOp, imm: i32, acc_t: &mut [i32], out_t: &mut [i8]) {
+    alu_tile_imm_scalar(op, imm, acc_t, out_t)
 }
 
 /// ALU datapath (shared by exec + golden tests). All int32, wrapping.

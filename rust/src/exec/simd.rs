@@ -1,0 +1,236 @@
+//! Explicit x86_64 SIMD kernels for the exec hot loops (`--features
+//! simd`).
+//!
+//! Contract: every kernel here is bit-identical to its scalar reference
+//! in the parent module ([`dot_i8_scalar`], [`alu_tile_imm_scalar`]) for
+//! every input the simulators produce. The exactness argument:
+//!
+//! * an i8·i8 product always fits in i16, and `pmaddwd`'s pairwise sum
+//!   of two such products always fits in i32, so no intermediate is ever
+//!   rounded or saturated;
+//! * i32 addition is associative and commutative modulo 2^32, so the
+//!   vector reassociation of the reduction cannot change the wrapping
+//!   sum;
+//! * the ALU immediate ops map 1:1 onto lane-wise vector ops (`pminsd`,
+//!   `pmaxsd`, `paddd`, `psrad`/`pslld` with a uniform runtime count,
+//!   `pmulld` after an in-lane sign-extended byte narrow, and clamp as
+//!   max-then-min).
+//!
+//! Dispatch is by runtime feature detection (`is_x86_feature_detected!`,
+//! which caches in an atomic): AVX2 when present; for the dot product
+//! the SSE2 x86_64 baseline otherwise; for the ALU loop the scalar
+//! reference otherwise (SSE2 lacks `pminsd`/`pmulld`, and the ALU loop
+//! is far off the GEMM-dominated critical path). The differential fuzz
+//! suite (`rust/tests/simd_event_parity.rs`) asserts scalar/SIMD
+//! equality on random inputs, and the parity/digest integration tests
+//! run with the feature both on and off in CI.
+
+use super::{alu_eval, alu_tile_imm_scalar, dot_i8_scalar};
+use crate::isa::AluOp;
+use core::arch::x86_64::*;
+
+#[inline]
+fn avx2() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+/// Runtime-dispatched int8 dot product (see [`super::dot_i8`]).
+#[inline]
+pub(super) fn dot_i8(x: &[i8], w: &[i8]) -> i32 {
+    debug_assert_eq!(x.len(), w.len());
+    if x.len() < 16 {
+        return dot_i8_scalar(x, w);
+    }
+    // SAFETY: SSE2 is part of the x86_64 baseline; the AVX2 path only
+    // runs after runtime detection.
+    unsafe {
+        if avx2() {
+            dot_i8_avx2(x, w)
+        } else {
+            dot_i8_sse2(x, w)
+        }
+    }
+}
+
+/// Runtime-dispatched ALU immediate-mode tile loop (see
+/// [`super::alu_tile_imm`]).
+#[inline]
+pub(super) fn alu_tile_imm(op: AluOp, imm: i32, acc_t: &mut [i32], out_t: &mut [i8]) {
+    // Clip with a negative bound panics in the scalar reference (empty
+    // clamp range); defer to it so behavior stays identical.
+    if acc_t.len() < 8 || (op == AluOp::Clip && imm < 0) || !avx2() {
+        return alu_tile_imm_scalar(op, imm, acc_t, out_t);
+    }
+    // SAFETY: AVX2 presence checked above.
+    unsafe { alu_acc_imm_avx2(op, imm, acc_t) };
+    // Narrow into OUT after the fact — equivalent to the interleaved
+    // scalar writes because each OUT element depends only on the final
+    // ACC element. This trivial loop autovectorizes on its own.
+    for (ov, av) in out_t.iter_mut().zip(acc_t.iter()) {
+        *ov = *av as i8;
+    }
+}
+
+/// # Safety
+/// Caller must have verified AVX2 support at runtime.
+#[target_feature(enable = "avx2")]
+unsafe fn dot_i8_avx2(x: &[i8], w: &[i8]) -> i32 {
+    let n = x.len();
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0;
+    // 16 int8 lanes per iteration: widen to i16 (exact), multiply and
+    // pairwise-add with vpmaddwd (exact in i32), accumulate in 8 i32
+    // lanes.
+    while i + 16 <= n {
+        let xv = _mm_loadu_si128(x.as_ptr().add(i) as *const __m128i);
+        let wv = _mm_loadu_si128(w.as_ptr().add(i) as *const __m128i);
+        let prod = _mm256_madd_epi16(_mm256_cvtepi8_epi16(xv), _mm256_cvtepi8_epi16(wv));
+        acc = _mm256_add_epi32(acc, prod);
+        i += 16;
+    }
+    let mut sum = hsum_epi32_128(_mm_add_epi32(
+        _mm256_castsi256_si128(acc),
+        _mm256_extracti128_si256::<1>(acc),
+    ));
+    while i < n {
+        sum = sum.wrapping_add((x[i] as i16 * w[i] as i16) as i32);
+        i += 1;
+    }
+    sum
+}
+
+/// # Safety
+/// SSE2 only — unconditionally available on x86_64, but the raw loads
+/// still require the slices to be valid (guaranteed by the safe
+/// wrapper's bounds).
+unsafe fn dot_i8_sse2(x: &[i8], w: &[i8]) -> i32 {
+    let n = x.len();
+    let mut acc = _mm_setzero_si128();
+    let mut i = 0;
+    while i + 16 <= n {
+        let xv = _mm_loadu_si128(x.as_ptr().add(i) as *const __m128i);
+        let wv = _mm_loadu_si128(w.as_ptr().add(i) as *const __m128i);
+        // Sign-extend each i8 half to i16: duplicate every byte into
+        // both halves of an i16 lane, then arithmetic-shift the copy
+        // down — the SSE2 idiom for pmovsxbw.
+        let xlo = _mm_srai_epi16::<8>(_mm_unpacklo_epi8(xv, xv));
+        let xhi = _mm_srai_epi16::<8>(_mm_unpackhi_epi8(xv, xv));
+        let wlo = _mm_srai_epi16::<8>(_mm_unpacklo_epi8(wv, wv));
+        let whi = _mm_srai_epi16::<8>(_mm_unpackhi_epi8(wv, wv));
+        acc = _mm_add_epi32(acc, _mm_madd_epi16(xlo, wlo));
+        acc = _mm_add_epi32(acc, _mm_madd_epi16(xhi, whi));
+        i += 16;
+    }
+    let mut sum = hsum_epi32_128(acc);
+    while i < n {
+        sum = sum.wrapping_add((x[i] as i16 * w[i] as i16) as i32);
+        i += 1;
+    }
+    sum
+}
+
+/// Horizontal wrapping sum of 4 i32 lanes.
+///
+/// # Safety
+/// SSE2 only (x86_64 baseline).
+unsafe fn hsum_epi32_128(v: __m128i) -> i32 {
+    let s = _mm_add_epi32(v, _mm_shuffle_epi32::<0b01_00_11_10>(v));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b00_00_00_01>(s));
+    _mm_cvtsi128_si32(s)
+}
+
+/// Lane-wise `alu_eval(op, acc[i], imm)` over the accumulator tile.
+///
+/// # Safety
+/// Caller must have verified AVX2 support at runtime, and (for `Clip`)
+/// that `imm >= 0`.
+#[target_feature(enable = "avx2")]
+unsafe fn alu_acc_imm_avx2(op: AluOp, imm: i32, acc_t: &mut [i32]) {
+    let n = acc_t.len();
+    let ptr = acc_t.as_mut_ptr();
+    let iv = _mm256_set1_epi32(imm);
+    // Uniform operands hoisted out of the loop: runtime shift counts
+    // (psrad/pslld take a count register), the byte-narrowed multiply
+    // operand, and the clamp's lower bound.
+    let shr = _mm_cvtsi32_si128(imm & 31);
+    let shl = _mm_cvtsi32_si128(imm.wrapping_neg() & 31);
+    let mul = _mm256_set1_epi32(imm as i8 as i32);
+    let clip_lo = _mm256_set1_epi32(imm.wrapping_neg());
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm256_loadu_si256(ptr.add(i) as *const __m256i);
+        let r = match op {
+            AluOp::Min => _mm256_min_epi32(v, iv),
+            AluOp::Max => _mm256_max_epi32(v, iv),
+            AluOp::Add => _mm256_add_epi32(v, iv),
+            AluOp::Shr => {
+                // Negative immediate shifts left (upstream VTA
+                // convention), mirroring `alu_eval`.
+                if imm >= 0 {
+                    _mm256_sra_epi32(v, shr)
+                } else {
+                    _mm256_sll_epi32(v, shl)
+                }
+            }
+            // 8-bit truncating multiply: in-lane sign-extend of the low
+            // byte ((x << 24) >> 24), then a wrapping 32-bit multiply.
+            AluOp::Mul => {
+                _mm256_mullo_epi32(_mm256_srai_epi32::<24>(_mm256_slli_epi32::<24>(v)), mul)
+            }
+            AluOp::Clip => _mm256_min_epi32(_mm256_max_epi32(v, clip_lo), iv),
+            AluOp::Mov => iv,
+        };
+        _mm256_storeu_si256(ptr.add(i) as *mut __m256i, r);
+        i += 8;
+    }
+    for e in &mut acc_t[i..] {
+        *e = alu_eval(op, *e, imm);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn dot_matches_scalar_on_all_lengths() {
+        let mut rng = Pcg32::seeded(99);
+        for len in 0..80 {
+            let x = rng.i8_vec(len);
+            let w = rng.i8_vec(len);
+            assert_eq!(dot_i8(&x, &w), dot_i8_scalar(&x, &w), "len={len}");
+        }
+    }
+
+    #[test]
+    fn alu_imm_matches_scalar() {
+        let mut rng = Pcg32::seeded(7);
+        let ops = [
+            AluOp::Min,
+            AluOp::Max,
+            AluOp::Add,
+            AluOp::Shr,
+            AluOp::Mul,
+            AluOp::Clip,
+            AluOp::Mov,
+        ];
+        for len in [0usize, 1, 7, 8, 9, 16, 33] {
+            for &op in &ops {
+                for imm in [-130, -31, -1, 0, 1, 5, 127, 1 << 20] {
+                    let imm = if op == AluOp::Clip { imm.abs() } else { imm };
+                    let acc0: Vec<i32> =
+                        (0..len).map(|_| rng.next_u32() as i32).collect();
+                    let mut acc_a = acc0.clone();
+                    let mut acc_b = acc0.clone();
+                    let mut out_a = vec![0i8; len];
+                    let mut out_b = vec![0i8; len];
+                    alu_tile_imm(op, imm, &mut acc_a, &mut out_a);
+                    alu_tile_imm_scalar(op, imm, &mut acc_b, &mut out_b);
+                    assert_eq!(acc_a, acc_b, "op={op:?} imm={imm} len={len}");
+                    assert_eq!(out_a, out_b, "op={op:?} imm={imm} len={len}");
+                }
+            }
+        }
+    }
+}

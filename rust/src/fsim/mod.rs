@@ -53,6 +53,16 @@ impl Fsim {
     pub fn reset_counters(&mut self) {
         self.state.counters = ExecCounters::default();
     }
+
+    /// Restore the simulator to its just-constructed state (buffers
+    /// zeroed, counters cleared, observer detached) without reallocating
+    /// the scratchpads. Used by batched evaluation
+    /// ([`crate::runtime::Session::reset_for_reuse`]) so every request
+    /// in a batch sees a bit-identical fresh core.
+    pub fn reset_for_reuse(&mut self) {
+        self.state.reset();
+        self.observer = None;
+    }
 }
 
 #[cfg(test)]

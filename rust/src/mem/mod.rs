@@ -67,6 +67,17 @@ impl Dram {
         self.next = 0;
     }
 
+    /// Reset the allocator *and* zero everything that was allocated, so
+    /// the memory is byte-identical to a freshly constructed `Dram`.
+    /// Only the allocated prefix is touched — on a 256 MiB default
+    /// arena that is the difference between microseconds and a full
+    /// memset per batched evaluation
+    /// ([`crate::runtime::Session::reset_for_reuse`]).
+    pub fn reset_zeroed(&mut self) {
+        self.bytes[..self.next].fill(0);
+        self.next = 0;
+    }
+
     // ---- typed access ----
 
     pub fn read(&self, addr: usize, len: usize) -> &[u8] {
@@ -149,6 +160,18 @@ mod tests {
         let mut d = Dram::new(1 << 16);
         let r = d.alloc(256, 256);
         assert_eq!(r.tile_base(256) as usize * 256, r.addr);
+    }
+
+    #[test]
+    fn reset_zeroed_matches_fresh() {
+        let mut d = Dram::new(1024);
+        let r = d.alloc(16, 16);
+        d.write_i8(r, &[1, 2, 3, -4]);
+        d.reset_zeroed();
+        assert_eq!(d.allocated(), 0);
+        let r2 = d.alloc(16, 16);
+        assert_eq!(r2, r, "allocator restarts at the same addresses");
+        assert_eq!(d.read_i8(r2), vec![0i8; 16], "old contents wiped");
     }
 
     #[test]

@@ -34,7 +34,8 @@ use crate::compiler::depthwise::{lower_depthwise, DepthwiseParams};
 use crate::compiler::eltwise::{lower_add, lower_pool, PoolParams};
 use crate::compiler::graph::{Graph, Op};
 use crate::compiler::layout::{
-    pack_activation, pack_conv_weights, pack_depthwise_weights, unpack_activation, Shape,
+    pack_activation, pack_conv_weights_into, pack_depthwise_weights_into, unpack_activation,
+    Shape,
 };
 use crate::compiler::tps::{self, Tiling};
 use crate::config::VtaConfig;
@@ -112,6 +113,10 @@ pub struct Session {
     /// Counter deltas spliced in from memoized timing-only hits
     /// (functional-mode hits replay and accrue counters naturally).
     memo_extra: ExecCounters,
+    /// Weight-staging arena reused across layers (and across batched
+    /// requests): the packed-weight image is built here and copied into
+    /// DRAM, so repeated layers stop allocating a fresh `Vec` per pack.
+    wgt_scratch: Vec<i8>,
 }
 
 impl Session {
@@ -168,7 +173,32 @@ impl Session {
             layer_stats: Vec::new(),
             memo_cycles: 0,
             memo_extra: ExecCounters::default(),
+            wgt_scratch: Vec::new(),
         })
+    }
+
+    /// Restore the session to its just-constructed state without
+    /// releasing any allocation: DRAM's allocated prefix is zeroed, the
+    /// simulator core is wiped in place, and per-run bookkeeping is
+    /// cleared. Post-reset state is bit-identical to a fresh
+    /// `Session::new` with the same config and options, which is what
+    /// makes batched evaluation ([`crate::engine::Engine::eval_many`])
+    /// return the same bytes as one session per request. The layer memo
+    /// (shared, content-addressed) deliberately persists.
+    pub fn reset_for_reuse(&mut self) {
+        self.dram.reset_zeroed();
+        match &mut self.sim {
+            Sim::F(f) => f.reset_for_reuse(),
+            Sim::T(t) => {
+                t.reset_for_reuse();
+                if self.opts.trace {
+                    t.enable_trace();
+                }
+            }
+        }
+        self.layer_stats.clear();
+        self.memo_cycles = 0;
+        self.memo_extra = ExecCounters::default();
     }
 
     /// Timing-only fast path active (see [`BackendKind::TsimTiming`]).
@@ -425,11 +455,11 @@ impl Session {
                     let n = self.memo_run(layer_sig, &label, |s| {
                         let wr = s.dram.alloc(wgt_len, tileb);
                         if !s.timing_only() {
-                            let wgt = pack_depthwise_weights(
-                                weights, in_shape.c, p.k, p.k, batch, block,
+                            pack_depthwise_weights_into(
+                                &mut s.wgt_scratch, weights, in_shape.c, p.k, p.k, batch, block,
                             );
-                            debug_assert_eq!(wgt.len(), wgt_len);
-                            s.dram.write_i8(wr, &wgt);
+                            debug_assert_eq!(s.wgt_scratch.len(), wgt_len);
+                            s.dram.write_i8(wr, &s.wgt_scratch);
                         }
                         let mut b = ProgramBuilder::new(&s.cfg);
                         lower_depthwise(&mut b, &p, in_base, wr.tile_base(tileb), out_base);
@@ -547,7 +577,8 @@ impl Session {
         self.memo_run(layer_sig, label, |s| {
             let wr = s.dram.alloc(wgt_len, cfg.wgt_tile_bytes());
             if !s.timing_only() {
-                let wgt = pack_conv_weights(
+                pack_conv_weights_into(
+                    &mut s.wgt_scratch,
                     weights,
                     spec.c_out,
                     spec.c_in,
@@ -556,8 +587,8 @@ impl Session {
                     cfg.block_out,
                     cfg.block_in,
                 );
-                debug_assert_eq!(wgt.len(), wgt_len);
-                s.dram.write_i8(wr, &wgt);
+                debug_assert_eq!(s.wgt_scratch.len(), wgt_len);
+                s.dram.write_i8(wr, &s.wgt_scratch);
             }
             let mut b = ProgramBuilder::new(&cfg);
             lower_conv(

@@ -917,14 +917,16 @@ pub fn run_fleet(opts: &FleetOptions, trace: &[Request]) -> Result<FleetOutcome,
                 .pool
                 .get(&batch.workload)
                 .expect("the scheduler only dispatches pooled workloads");
-            let mut cycles = 0u64;
-            for &r in &batch.requests {
-                let eval = entry
-                    .engine
-                    .eval_shared(&entry.prepared, &EvalRequest::seeded(trace[r].seed))?;
-                cycles += eval.cycles.expect("pool backends produce cycles");
-            }
-            Ok(cycles)
+            // One batched evaluation per dispatched batch (one session
+            // reused across its requests); bit-identical to the
+            // per-request loop, so routing reports are unchanged.
+            let requests: Vec<EvalRequest> =
+                batch.requests.iter().map(|&r| EvalRequest::seeded(trace[r].seed)).collect();
+            let evals = entry.engine.eval_many_shared(&entry.prepared, &requests)?;
+            Ok(evals
+                .iter()
+                .map(|e| e.cycles.expect("pool backends produce cycles"))
+                .sum::<u64>())
         });
     let wall_ns = wall_start.elapsed().as_nanos() as u64;
     let mut batch_cycles = Vec::with_capacity(batch_results.len());

@@ -28,6 +28,7 @@
 pub mod activity;
 pub mod queues;
 pub mod vme;
+pub mod wheel;
 
 use crate::config::VtaConfig;
 use crate::exec::{CoreState, ExecCounters};
@@ -37,6 +38,7 @@ use activity::{Activity, ActivityTrace, Module};
 use queues::{CmdQueue, TokenQueue};
 use std::collections::VecDeque;
 use vme::{Owner, ReqId, Vme, VmeCounters};
+use wheel::EventWheel;
 
 /// Cycles without progress before declaring deadlock.
 const DEADLOCK_LIMIT: u64 = 1_000_000;
@@ -184,6 +186,13 @@ pub struct Tsim {
     compute: Driver,
     store: Driver,
     vme: Vme,
+    /// Pending pure-time wake events (VME finishes, pad fills,
+    /// `busy_until`s), maintained incrementally by the drivers.
+    wheel: EventWheel,
+    /// Use the retained linear condition scan instead of the wheel —
+    /// the reference implementation the differential fuzz suite
+    /// compares against. Timeline-identical, just slower.
+    linear_scan: bool,
     done: bool,
     last_progress: u64,
     gemm_cycles: u64,
@@ -229,6 +238,8 @@ impl Tsim {
             compute: Driver::new(),
             store: Driver::new(),
             vme: Vme::new(cfg.axi_bytes, cfg.dram_latency, cfg.vme_inflight),
+            wheel: EventWheel::new(),
+            linear_scan: false,
             done: false,
             last_progress: 0,
             gemm_cycles: 0,
@@ -239,6 +250,46 @@ impl Tsim {
 
     pub fn enable_trace(&mut self) {
         self.trace.enabled = true;
+    }
+
+    /// Switch `advance_time` to the retained linear condition scan (the
+    /// pre-wheel reference). Completion cycles, counters and digests are
+    /// identical in both modes — asserted across random programs by
+    /// `rust/tests/simd_event_parity.rs`; only wall-clock differs.
+    pub fn set_linear_scan(&mut self, on: bool) {
+        self.linear_scan = on;
+    }
+
+    /// Reset to the freshly-constructed state while keeping every
+    /// allocation (scratchpads, queue storage) — the batched-evaluation
+    /// fast path. Afterwards the simulator is indistinguishable from
+    /// `Tsim::with_mode(&cfg, timing_only)` with the same trace-enable
+    /// and scan-mode flags.
+    pub fn reset_for_reuse(&mut self) {
+        self.core.reset();
+        self.trace = ActivityTrace::new(self.trace.enabled);
+        self.cycle = 0;
+        self.program.clear();
+        self.fetch_pos = 0;
+        self.fetch_chunks.clear();
+        self.fetched.clear();
+        self.load_q = CmdQueue::new("load", self.cfg.cmd_queue_depth);
+        self.compute_q = CmdQueue::new("compute", self.cfg.cmd_queue_depth);
+        self.store_q = CmdQueue::new("store", self.cfg.cmd_queue_depth);
+        self.ld2cmp = TokenQueue::new("ld->cmp", self.cfg.dep_queue_depth);
+        self.cmp2ld = TokenQueue::new("cmp->ld", self.cfg.dep_queue_depth);
+        self.cmp2st = TokenQueue::new("cmp->st", self.cfg.dep_queue_depth);
+        self.st2cmp = TokenQueue::new("st->cmp", self.cfg.dep_queue_depth);
+        self.load = Driver::new();
+        self.compute = Driver::new();
+        self.store = Driver::new();
+        self.vme = Vme::new(self.cfg.axi_bytes, self.cfg.dram_latency, self.cfg.vme_inflight);
+        self.wheel.clear();
+        self.done = false;
+        self.last_progress = 0;
+        self.gemm_cycles = 0;
+        self.alu_cycles = 0;
+        self.compute_dma_cycles = 0;
     }
 
     pub fn cycle(&self) -> u64 {
@@ -259,6 +310,10 @@ impl Tsim {
         self.fetch_pos = 0;
         self.fetch_chunks.clear();
         self.fetched.clear();
+        // The previous program drained completely (the loop below exits
+        // only when every module, queue and the VME are idle), so no
+        // valid wake can be pending — clear any stale ones.
+        self.wheel.clear();
         self.done = false;
         self.last_progress = self.cycle;
         loop {
@@ -285,7 +340,44 @@ impl Tsim {
     }
 
     /// Jump to the next cycle at which anything can happen (event skip).
+    ///
+    /// Every enablement in the machine is one of two kinds: (a) *chained*
+    /// — caused by a state change (progress) in the current cycle, e.g. a
+    /// token push unblocking a pop, queue space freeing, a delivered
+    /// fetch chunk enabling dispatch; or (b) *pure-time* — a threshold
+    /// known at creation time (a VME burst finish, a pad-fill
+    /// completion, a compute `busy_until`), which the drivers schedule
+    /// into the wheel at the moment they compute it. So: after a
+    /// progress cycle, wake at `now + 1` (the chained case); otherwise
+    /// only a scheduled event can unblock anything, and the wheel knows
+    /// the earliest one. Spurious wakes are no-op cycles (all conditions
+    /// are level-triggered and re-checked), so the timeline is identical
+    /// to the exhaustive linear scan — which is retained below as
+    /// [`Tsim::advance_time_linear`] for differential testing.
     fn advance_time(&mut self) {
+        if self.linear_scan {
+            self.advance_time_linear();
+            return;
+        }
+        let now = self.cycle;
+        self.cycle = if self.last_progress == now {
+            now + 1
+        } else {
+            // An empty wheel with no progress is a deadlock: grind one
+            // cycle at a time so the limit counter trips, exactly as the
+            // linear scan did.
+            self.wheel.next_after(now).unwrap_or(now + 1)
+        };
+    }
+
+    /// The pre-wheel exhaustive condition scan, kept as the reference
+    /// implementation for `rust/tests/simd_event_parity.rs` (enable via
+    /// [`Tsim::set_linear_scan`]). Note its fetch terms wake every cycle
+    /// while any instruction is in flight — conservative (extra wakes
+    /// are no-ops) but it defeats event-skip; the wheel path derives
+    /// fetch wakes precisely from chunk-delivery events and dispatch
+    /// progress instead.
+    fn advance_time_linear(&mut self) {
         let now = self.cycle;
         let mut next = u64::MAX;
         let mut consider = |t: u64| {
@@ -395,7 +487,8 @@ impl Tsim {
         {
             let end = (self.fetch_pos + 64).min(self.program.len());
             let bytes = ((end - self.fetch_pos) * crate::config::INSN_BYTES) as u64;
-            let id = self.vme.issue(Owner::Fetch, bytes, false, now);
+            let (id, fin) = self.vme.issue(Owner::Fetch, bytes, false, now);
+            self.wheel.schedule(fin);
             self.fetch_chunks.push_back((id, self.fetch_pos..end, false));
             self.fetch_pos = end;
             self.progress();
@@ -484,6 +577,7 @@ impl Tsim {
                 }
             }
             let pad_tiles = m.sram_tiles() - m.dram_tiles();
+            self.wheel.schedule(now + pad_tiles);
             self.load.dma = Some(DmaJob {
                 bursts,
                 next_burst: 0,
@@ -498,7 +592,8 @@ impl Tsim {
             let job = self.load.dma.as_mut().unwrap();
             while job.next_burst < job.bursts.len() && self.vme.can_issue(now) {
                 let bytes = job.bursts[job.next_burst];
-                self.vme.issue(Owner::Load, bytes, false, now);
+                let (_, fin) = self.vme.issue(Owner::Load, bytes, false, now);
+                self.wheel.schedule(fin);
                 job.next_burst += 1;
                 job.outstanding += 1;
                 self.last_progress = now;
@@ -580,6 +675,7 @@ impl Tsim {
                 Insn::Gemm(g) => {
                     let ii = if self.cfg.gemm_pipelined { 1 } else { 4 };
                     self.compute.busy_until = now + GEMM_PIPE_FILL + g.total_ops() * ii;
+                    self.wheel.schedule(self.compute.busy_until);
                 }
                 Insn::Alu(a) => {
                     let ii = match (self.cfg.alu_pipelined, a.use_imm) {
@@ -590,6 +686,7 @@ impl Tsim {
                     };
                     let beats = a.total_ops() * self.cfg.batch as u64;
                     self.compute.busy_until = now + ALU_PIPE_FILL + beats * ii;
+                    self.wheel.schedule(self.compute.busy_until);
                 }
                 Insn::Mem(m) => {
                     debug_assert_eq!(m.opcode, Opcode::Load);
@@ -601,6 +698,7 @@ impl Tsim {
                         }
                     }
                     let pad_tiles = m.sram_tiles() - m.dram_tiles();
+                    self.wheel.schedule(now + pad_tiles);
                     self.compute.dma = Some(DmaJob {
                         bursts,
                         next_burst: 0,
@@ -610,6 +708,7 @@ impl Tsim {
                 }
                 Insn::Finish(_) => {
                     self.compute.busy_until = now + 1;
+                    self.wheel.schedule(self.compute.busy_until);
                 }
             }
             self.compute.phase = Phase::Run;
@@ -620,7 +719,8 @@ impl Tsim {
             let finished = if let Some(job) = self.compute.dma.as_mut() {
                 while job.next_burst < job.bursts.len() && self.vme.can_issue(now) {
                     let bytes = job.bursts[job.next_burst];
-                    self.vme.issue(Owner::Compute, bytes, false, now);
+                    let (_, fin) = self.vme.issue(Owner::Compute, bytes, false, now);
+                    self.wheel.schedule(fin);
                     job.next_burst += 1;
                     job.outstanding += 1;
                     self.last_progress = now;
@@ -742,6 +842,7 @@ impl Tsim {
                     bursts.extend(self.vme.split_bursts(m.x_size as u64 * tile_bytes));
                 }
             }
+            // No pad fill on stores: pad_ready_at == now needs no wake.
             self.store.dma = Some(DmaJob {
                 bursts,
                 next_burst: 0,
@@ -756,7 +857,8 @@ impl Tsim {
             let job = self.store.dma.as_mut().unwrap();
             while job.next_burst < job.bursts.len() && self.vme.can_issue(now) {
                 let bytes = job.bursts[job.next_burst];
-                self.vme.issue(Owner::Store, bytes, true, now);
+                let (_, fin) = self.vme.issue(Owner::Store, bytes, true, now);
+                self.wheel.schedule(fin);
                 job.next_burst += 1;
                 job.outstanding += 1;
                 self.last_progress = now;
@@ -1242,6 +1344,46 @@ mod tests {
             shallow >= deep,
             "a deeper token queue can only help: depth1={shallow} depth32={deep}"
         );
+    }
+
+    #[test]
+    fn wheel_and_linear_scan_agree() {
+        // The bucketed event core must be timeline-identical to the
+        // exhaustive linear scan (the broad random sweep lives in
+        // rust/tests/simd_event_parity.rs; this is the smoke version).
+        let cfg = presets::tiny_config();
+        let run_mode = |linear: bool| -> (u64, ExecCounters, u64) {
+            let mut rng = Pcg32::seeded(13);
+            let mut dram = Dram::new(1 << 20);
+            let mut sim = Tsim::new(&cfg);
+            sim.set_linear_scan(linear);
+            let (insns, _, _) = tile_program(&sim.core, &mut dram, &mut rng);
+            let cycles = sim.run(&insns, &mut dram, "mode");
+            (cycles, sim.core.counters, sim.core.buffer_digest(BufferId::Out))
+        };
+        assert_eq!(run_mode(false), run_mode(true));
+    }
+
+    #[test]
+    fn reset_for_reuse_is_bit_identical_to_fresh() {
+        let cfg = presets::tiny_config();
+        let mut rng = Pcg32::seeded(17);
+        let mut dram = Dram::new(1 << 20);
+        let mut sim = Tsim::new(&cfg);
+        let (insns, _, rout) = tile_program(&sim.core, &mut dram, &mut rng);
+        let fresh_cycles = sim.run(&insns, &mut dram, "a");
+        let fresh_out = dram.read_i8(rout);
+        let fresh_counters = sim.core.counters;
+        // Same program on a reused simulator against identical DRAM.
+        let mut rng = Pcg32::seeded(17);
+        let mut dram2 = Dram::new(1 << 20);
+        sim.reset_for_reuse();
+        assert_eq!(sim.cycle(), 0);
+        let (insns2, _, rout2) = tile_program(&sim.core, &mut dram2, &mut rng);
+        let reused_cycles = sim.run(&insns2, &mut dram2, "b");
+        assert_eq!(reused_cycles, fresh_cycles);
+        assert_eq!(dram2.read_i8(rout2), fresh_out);
+        assert_eq!(sim.core.counters, fresh_counters);
     }
 
     #[test]

@@ -93,15 +93,18 @@ impl Vme {
 
     /// Issue a burst; its completion time is computed analytically.
     /// Caller must have checked [`Vme::can_issue`]. A zero-byte request
-    /// completes immediately.
-    pub fn issue(&mut self, owner: Owner, bytes: u64, write: bool, now: u64) -> ReqId {
+    /// completes immediately. Returns the request id *and* its delivery
+    /// cycle, so the caller can schedule the completion into the event
+    /// wheel at issue time (analytic FIFO service admits no preemption,
+    /// so the time is exact, never an estimate).
+    pub fn issue(&mut self, owner: Owner, bytes: u64, write: bool, now: u64) -> (ReqId, u64) {
         assert!(self.can_issue(now), "VME tag buffer full");
         let id = self.next_id;
         self.next_id += 1;
         self.counters.requests += 1;
         if bytes == 0 {
             self.completions.push(Completion { owner, id, at: now });
-            return id;
+            return (id, now);
         }
         let beats = bytes.div_ceil(self.axi_bytes);
         let channel_free = if write { &mut self.write_free } else { &mut self.read_free };
@@ -116,7 +119,7 @@ impl Vme {
             self.counters.read_busy_cycles += beats;
         }
         self.completions.push(Completion { owner, id, at: finish });
-        id
+        (id, finish)
     }
 
     /// Advance one cycle — a no-op under analytic scheduling (kept for
@@ -185,7 +188,8 @@ mod tests {
         // 64 bytes over an 8-byte bus with latency 4: data beats occupy
         // cycles 4..12, fully delivered at cycle 12.
         let mut vme = Vme::new(8, 4, 4);
-        let id = vme.issue(Owner::Load, 64, false, 0);
+        let (id, fin) = vme.issue(Owner::Load, 64, false, 0);
+        assert_eq!(fin, 12, "analytic finish time returned at issue");
         assert_eq!(run_until_done(&mut vme, Owner::Load, id, 64), Some(12));
     }
 
@@ -194,10 +198,11 @@ mod tests {
         // Two 64-byte reads issued together: the second streams right
         // after the first — total = latency + 16 beats, not 2*(lat+8).
         let mut vme = Vme::new(8, 10, 4);
-        let a = vme.issue(Owner::Load, 64, false, 0);
-        let b = vme.issue(Owner::Load, 64, false, 0);
+        let (a, fa) = vme.issue(Owner::Load, 64, false, 0);
+        let (b, fb) = vme.issue(Owner::Load, 64, false, 0);
         let ta = run_until_done(&mut vme, Owner::Load, a, 128).unwrap();
         let tb = run_until_done(&mut vme, Owner::Load, b, 128).unwrap();
+        assert_eq!((ta, tb), (fa, fb), "returned finish times are exact");
         assert_eq!(tb - ta, 8, "back-to-back streaming");
         assert!(tb < 2 * (10 + 8), "latency must be overlapped");
     }
@@ -214,8 +219,8 @@ mod tests {
     #[test]
     fn read_and_write_channels_independent() {
         let mut vme = Vme::new(8, 0, 4);
-        let r = vme.issue(Owner::Load, 32, false, 0);
-        let w = vme.issue(Owner::Store, 32, true, 0);
+        let (r, _) = vme.issue(Owner::Load, 32, false, 0);
+        let (w, _) = vme.issue(Owner::Store, 32, true, 0);
         let tr = run_until_done(&mut vme, Owner::Load, r, 64).unwrap();
         let tw = run_until_done(&mut vme, Owner::Store, w, 64).unwrap();
         assert_eq!(tr, tw, "channels run in parallel");
@@ -224,8 +229,8 @@ mod tests {
     #[test]
     fn fifo_service_order_within_channel() {
         let mut vme = Vme::new(8, 0, 4);
-        let first = vme.issue(Owner::Fetch, 8, false, 0);
-        let second = vme.issue(Owner::Load, 8, false, 0);
+        let (first, _) = vme.issue(Owner::Fetch, 8, false, 0);
+        let (second, _) = vme.issue(Owner::Load, 8, false, 0);
         let t1 = run_until_done(&mut vme, Owner::Fetch, first, 16).unwrap();
         let t2 = run_until_done(&mut vme, Owner::Load, second, 16).unwrap();
         assert!(t1 < t2, "FIFO arbitration: {t1} vs {t2}");
@@ -234,7 +239,8 @@ mod tests {
     #[test]
     fn zero_byte_completes_immediately() {
         let mut vme = Vme::new(8, 5, 2);
-        let id = vme.issue(Owner::Compute, 0, false, 3);
+        let (id, fin) = vme.issue(Owner::Compute, 0, false, 3);
+        assert_eq!(fin, 3, "zero-byte requests complete at issue");
         assert_eq!(vme.take_completed_at(Owner::Compute, 3), vec![id]);
         assert!(vme.idle());
     }

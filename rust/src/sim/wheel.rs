@@ -1,0 +1,239 @@
+//! Bucketed event wheel for tsim's event-skip core.
+//!
+//! The old `Tsim::advance_time` re-derived the next wake time with a
+//! linear scan over every driver, queue and the VME on every skip. The
+//! wheel inverts that: every *pure-time* event (a VME burst completion,
+//! a pad-fill finish, a compute `busy_until`) is scheduled once, at the
+//! moment its time becomes known, and `advance_time` just asks for the
+//! next pending wake. Condition-chained enablements (a token push that
+//! unblocks a pop, queue space freeing, instruction dispatch) need no
+//! scheduling at all: they are always caused by *progress* in the
+//! current cycle, and the core wakes at `now + 1` whenever progress
+//! happened (see `Tsim::advance_time`).
+//!
+//! Invariants (the ones DESIGN.md §"Event core & SIMD dispatch" leans
+//! on):
+//!
+//! * **Level-triggered wakes.** A wake is only a hint: every simulator
+//!   condition is re-checked by the woken step. Spurious or duplicate
+//!   wakes are no-op cycles and cannot change the timeline, so the wheel
+//!   may clamp past times, drop already-passed bits on rotation, and
+//!   deliver an overflow event early after a same-time duplicate.
+//! * **No missed wakes.** `schedule` never discards a future time, and
+//!   `next_after(now)` returns the minimum pending time `> now` (the
+//!   near-window bitset is refilled from the overflow heap before it is
+//!   scanned).
+//!
+//! Layout: a 256-cycle near-future window as a 4×u64 bitset anchored at
+//! `base` (bit *d* of the window = cycle `base + d`), plus a min-heap
+//! for events beyond the horizon. Rotation shifts the window rather than
+//! walking cycle-by-cycle, so a long skip costs O(1).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Near-future horizon in cycles (bitset capacity).
+const HORIZON: u64 = 256;
+const WORDS: usize = (HORIZON / 64) as usize;
+
+/// Calendar queue of pending wake times. See the module docs.
+#[derive(Debug, Default)]
+pub struct EventWheel {
+    /// Cycle represented by bit 0 of `bits[0]`.
+    base: u64,
+    bits: [u64; WORDS],
+    /// Events at `base + HORIZON` or later.
+    overflow: BinaryHeap<Reverse<u64>>,
+}
+
+impl EventWheel {
+    pub fn new() -> EventWheel {
+        EventWheel::default()
+    }
+
+    /// Record that something may happen at cycle `at`. Past times clamp
+    /// to the window base: a stale wake is a no-op step, never an error.
+    pub fn schedule(&mut self, at: u64) {
+        let at = at.max(self.base);
+        let d = at - self.base;
+        if d < HORIZON {
+            self.bits[(d / 64) as usize] |= 1u64 << (d % 64);
+        } else {
+            self.overflow.push(Reverse(at));
+        }
+    }
+
+    /// Earliest scheduled cycle strictly after `now`. Rotates the window
+    /// to `now + 1` (dropping past bits — safe under the level-triggered
+    /// invariant) and refills it from the overflow heap before scanning.
+    /// `None` when nothing is pending.
+    pub fn next_after(&mut self, now: u64) -> Option<u64> {
+        self.rotate_to(now + 1);
+        for (wi, &word) in self.bits.iter().enumerate() {
+            if word != 0 {
+                return Some(self.base + wi as u64 * 64 + word.trailing_zeros() as u64);
+            }
+        }
+        // Near window empty: the heap minimum (if any) is next. It is
+        // consumed here — the caller jumps straight to it, which is the
+        // wake it asked for.
+        self.overflow.pop().map(|Reverse(t)| t.max(self.base))
+    }
+
+    /// Drop every pending event (program teardown / session reuse).
+    pub fn clear(&mut self) {
+        self.bits = [0; WORDS];
+        self.overflow.clear();
+    }
+
+    fn rotate_to(&mut self, new_base: u64) {
+        if new_base <= self.base {
+            return;
+        }
+        let delta = new_base - self.base;
+        self.base = new_base;
+        if delta >= HORIZON {
+            self.bits = [0; WORDS];
+        } else {
+            shift_down(&mut self.bits, delta);
+        }
+        while let Some(&Reverse(t)) = self.overflow.peek() {
+            if t >= self.base + HORIZON {
+                break;
+            }
+            self.overflow.pop();
+            let d = t.saturating_sub(self.base);
+            self.bits[(d / 64) as usize] |= 1u64 << (d % 64);
+        }
+    }
+}
+
+/// Shift the 256-bit window down by `delta` bits (`0 < delta < HORIZON`),
+/// discarding the low bits and zero-filling the top.
+fn shift_down(bits: &mut [u64; WORDS], delta: u64) {
+    let words = (delta / 64) as usize;
+    let b = (delta % 64) as u32;
+    if words > 0 {
+        for i in 0..WORDS {
+            bits[i] = if i + words < WORDS { bits[i + words] } else { 0 };
+        }
+    }
+    if b > 0 {
+        for i in 0..WORDS {
+            let hi = if i + 1 < WORDS { bits[i + 1] } else { 0 };
+            bits[i] = (bits[i] >> b) | (hi << (64 - b));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn returns_events_in_order() {
+        let mut w = EventWheel::new();
+        w.schedule(5);
+        w.schedule(3);
+        w.schedule(200);
+        assert_eq!(w.next_after(0), Some(3));
+        assert_eq!(w.next_after(3), Some(5));
+        assert_eq!(w.next_after(5), Some(200));
+        assert_eq!(w.next_after(200), None);
+    }
+
+    #[test]
+    fn strictly_after_now() {
+        let mut w = EventWheel::new();
+        w.schedule(10);
+        assert_eq!(w.next_after(9), Some(10));
+        let mut w = EventWheel::new();
+        w.schedule(10);
+        assert_eq!(w.next_after(10), None, "events at now are not 'after'");
+    }
+
+    #[test]
+    fn overflow_heap_refills_window() {
+        let mut w = EventWheel::new();
+        w.schedule(1_000_000);
+        w.schedule(500);
+        w.schedule(100_000);
+        assert_eq!(w.next_after(0), Some(500));
+        assert_eq!(w.next_after(500), Some(100_000));
+        assert_eq!(w.next_after(100_000), Some(1_000_000));
+        assert_eq!(w.next_after(1_000_000), None);
+    }
+
+    #[test]
+    fn past_times_clamp_and_drop() {
+        let mut w = EventWheel::new();
+        assert_eq!(w.next_after(50), None);
+        w.schedule(10); // already in the past relative to the base
+        let n = w.next_after(60);
+        // Either dropped or clamped to a stale (harmless) wake <= base;
+        // it must never report a *future* phantom event.
+        assert!(n.is_none() || n.unwrap() <= 61, "got {n:?}");
+    }
+
+    #[test]
+    fn duplicates_collapse_or_repeat_harmlessly() {
+        let mut w = EventWheel::new();
+        w.schedule(40);
+        w.schedule(40);
+        w.schedule(40);
+        assert_eq!(w.next_after(0), Some(40));
+        assert_eq!(w.next_after(40), None);
+    }
+
+    #[test]
+    fn duplicate_overflow_events_stay_in_order() {
+        let mut w = EventWheel::new();
+        w.schedule(10_000);
+        w.schedule(10_000);
+        w.schedule(20_000);
+        assert_eq!(w.next_after(0), Some(10_000));
+        // The duplicate may surface as a stale wake at/before 10_001;
+        // the next *new* event must still be 20_000.
+        let mut t = 10_000;
+        loop {
+            match w.next_after(t) {
+                Some(n) if n < 20_000 => t = n,
+                other => {
+                    assert_eq!(other, Some(20_000));
+                    break;
+                }
+            }
+        }
+        assert_eq!(w.next_after(20_000), None);
+    }
+
+    #[test]
+    fn long_jumps_cost_one_rotation() {
+        let mut w = EventWheel::new();
+        w.schedule(3);
+        w.schedule(1 << 40);
+        assert_eq!(w.next_after(0), Some(3));
+        assert_eq!(w.next_after(3), Some(1 << 40));
+        w.schedule((1 << 40) + 7);
+        assert_eq!(w.next_after(1 << 40), Some((1 << 40) + 7));
+    }
+
+    #[test]
+    fn clear_empties_everything() {
+        let mut w = EventWheel::new();
+        w.schedule(5);
+        w.schedule(99_999);
+        w.clear();
+        assert_eq!(w.next_after(0), None);
+    }
+
+    #[test]
+    fn window_boundary_events() {
+        let mut w = EventWheel::new();
+        w.schedule(HORIZON - 1); // last in-window bit
+        w.schedule(HORIZON); // first overflow event
+        assert_eq!(w.next_after(0), Some(HORIZON - 1));
+        assert_eq!(w.next_after(HORIZON - 1), Some(HORIZON));
+        assert_eq!(w.next_after(HORIZON), None);
+    }
+}

@@ -305,7 +305,30 @@ pub fn evaluate_with_graph_opts(
     graph: &Graph,
     eval: &EvalOptions,
 ) -> Result<PointResult, VtaError> {
-    let mut builder = Engine::for_config(&job.cfg);
+    let mut results = evaluate_batch_with_graph_opts(&[job], graph, eval)?;
+    Ok(results.pop().expect("one job in, one result out"))
+}
+
+/// Evaluate a batch of jobs that share a `(config, workload)` pair —
+/// one engine, one [`Engine::prepare`], one batched
+/// [`Engine::eval_many`] call, so per-point session setup is paid once
+/// per batch instead of once per seed. Results are bit-identical to
+/// evaluating each job alone (the `eval_many` contract), in job order.
+/// All jobs must carry the same config, workload and graph seed; the
+/// batch must be non-empty.
+pub fn evaluate_batch_with_graph_opts(
+    batch: &[&SweepJob],
+    graph: &Graph,
+    eval: &EvalOptions,
+) -> Result<Vec<PointResult>, VtaError> {
+    let first = batch.first().expect("batched evaluation needs at least one job");
+    debug_assert!(
+        batch.iter().all(|j| j.workload.id() == first.workload.id()
+            && j.graph_seed == first.graph_seed
+            && j.cfg.name == first.cfg.name),
+        "batched jobs must share their (config, workload) identity"
+    );
+    let mut builder = Engine::for_config(&first.cfg);
     builder = match (&eval.backend, &eval.predictions) {
         (BackendKind::Analytical, Some(cache)) => {
             builder.backend(AnalyticalBackend::with_cache(cache.clone()))
@@ -316,29 +339,39 @@ pub fn evaluate_with_graph_opts(
         builder = builder.memo(memo.clone());
     }
     let engine = builder.build()?;
-    let evaluation = engine.run(graph, &EvalRequest::seeded(job.seed))?;
-    let cycles = evaluation.cycles.ok_or_else(|| {
-        VtaError::Unsupported(format!(
-            "the sweep needs cycle counts and backend '{}' produces none \
-             (use tsim, timing, or model)",
-            evaluation.backend
-        ))
-    })?;
+    let prepared = engine.prepare(graph)?;
+    let requests: Vec<EvalRequest> =
+        batch.iter().map(|j| EvalRequest::seeded(j.seed)).collect();
+    let evaluations = engine.eval_many(&prepared, &requests)?;
     let measured = eval.backend != BackendKind::Analytical;
-    Ok(PointResult {
-        config: job.cfg.clone(),
-        workload: job.workload.id(),
-        seed: job.seed,
-        graph_seed: job.graph_seed,
-        cycles,
-        macs: evaluation.counters.macs,
-        dram_rd: evaluation.counters.load_bytes_total(),
-        dram_wr: evaluation.counters.store_bytes,
-        insns: evaluation.counters.insn_count,
-        scaled_area: area::scaled_area(&job.cfg),
-        predicted_cycles: (!measured).then_some(cycles),
-        measured,
-    })
+    let scaled_area = area::scaled_area(&first.cfg);
+    batch
+        .iter()
+        .zip(evaluations)
+        .map(|(job, evaluation)| {
+            let cycles = evaluation.cycles.ok_or_else(|| {
+                VtaError::Unsupported(format!(
+                    "the sweep needs cycle counts and backend '{}' produces none \
+                     (use tsim, timing, or model)",
+                    evaluation.backend
+                ))
+            })?;
+            Ok(PointResult {
+                config: job.cfg.clone(),
+                workload: job.workload.id(),
+                seed: job.seed,
+                graph_seed: job.graph_seed,
+                cycles,
+                macs: evaluation.counters.macs,
+                dram_rd: evaluation.counters.load_bytes_total(),
+                dram_wr: evaluation.counters.store_bytes,
+                insns: evaluation.counters.insn_count,
+                scaled_area,
+                predicted_cycles: (!measured).then_some(cycles),
+                measured,
+            })
+        })
+        .collect()
 }
 
 /// Phase-1 pruning options for the two-phase engine.
@@ -607,11 +640,29 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome, VtaErr
         None
     };
 
-    // Worker count: clamped to both the machine and the work.
+    // Batch adjacent pending points that share a `(config, workload)`
+    // grid row: the grid is ordered configs → workloads → seeds, so
+    // `grid index / seed count` identifies the row. Each group becomes
+    // one work item evaluated through a single engine + `eval_many`
+    // call (session setup paid once per row, not once per seed) with
+    // bit-identical per-point results.
+    let seeds_per_row = spec.seeds.len().max(1);
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for &d in &pending {
+        let row = jobs[eval_jobs[d]].index / seeds_per_row;
+        match groups.last_mut() {
+            Some(g) if jobs[eval_jobs[*g.last().unwrap()]].index / seeds_per_row == row => {
+                g.push(d)
+            }
+            _ => groups.push(vec![d]),
+        }
+    }
+
+    // Worker count: clamped to the machine and to the (grouped) work.
     let workers = if pending.is_empty() {
         0
     } else {
-        effective_jobs(opts.jobs).min(pending.len())
+        effective_jobs(opts.jobs).min(groups.len())
     };
     let mut failure: Option<VtaError> = None;
     if !pending.is_empty() {
@@ -620,7 +671,8 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome, VtaErr
             pending.iter().map(|&d| &jobs[eval_jobs[d]]),
             spec.graph_seed,
         );
-        let job_queue = JobQueue::new(workers, &pending);
+        let group_ids: Vec<usize> = (0..groups.len()).collect();
+        let job_queue = JobQueue::new(workers, &group_ids);
         let (tx, rx) = mpsc::channel::<(usize, Result<PointResult, VtaError>)>();
         let total = eval_jobs.len();
         // Analytical sweeps share one prediction cache across workers
@@ -634,18 +686,33 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome, VtaErr
                 let jobs = &jobs;
                 let eval_jobs = &eval_jobs;
                 let graphs = &graphs;
+                let groups = &groups;
                 let eval = EvalOptions {
                     backend: opts.backend,
                     memo: memo.clone(),
                     predictions: predictions_cache.clone(),
                 };
                 handles.push(scope.spawn(move || {
-                    while let Some(d) = job_queue.pop(w) {
-                        let job = &jobs[eval_jobs[d]];
-                        let result =
-                            evaluate_with_graph_opts(job, &graphs[&job.workload.id()], &eval);
-                        if tx.send((d, result)).is_err() {
-                            break; // collector gone (error); stop early
+                    while let Some(g) = job_queue.pop(w) {
+                        let group = &groups[g];
+                        let batch: Vec<&SweepJob> =
+                            group.iter().map(|&d| &jobs[eval_jobs[d]]).collect();
+                        let graph = &graphs[&batch[0].workload.id()];
+                        match evaluate_batch_with_graph_opts(&batch, graph, &eval) {
+                            Ok(points) => {
+                                for (&d, p) in group.iter().zip(points) {
+                                    if tx.send((d, Ok(p))).is_err() {
+                                        return; // collector gone (error)
+                                    }
+                                }
+                            }
+                            Err(e) => {
+                                // One typed failure fails the sweep;
+                                // attribute it to the group's first point.
+                                if tx.send((group[0], Err(e))).is_err() {
+                                    return;
+                                }
+                            }
                         }
                     }
                 }));

@@ -124,6 +124,56 @@ fn evaluations_are_deterministic_per_rung() {
     }
 }
 
+/// Batched evaluation is bit-identical to the per-request loop on every
+/// rung: `eval_many` reuses one session (`Session::reset_for_reuse`),
+/// and the reset must be indistinguishable from a fresh session —
+/// cycles, outputs, counters and per-layer stats all match, request by
+/// request.
+#[test]
+fn eval_many_matches_per_request_eval() {
+    let cfg = presets::tiny_config();
+    let graph = workloads::micro_resnet(cfg.block_in, 42);
+    // Mixed seeds, with a repeat, so carry-over from any earlier request
+    // in the batch would show up as a mismatch.
+    let requests: Vec<EvalRequest> =
+        [3u64, 7, 3, 11].iter().map(|&s| EvalRequest::seeded(s)).collect();
+    for kind in BackendKind::ALL {
+        let engine = Engine::for_config(&cfg).backend_kind(kind).build().unwrap();
+        let prepared = engine.prepare(&graph).unwrap();
+        let batched = engine.eval_many(&prepared, &requests).unwrap();
+        assert_eq!(batched.len(), requests.len());
+        for (b, r) in batched.iter().zip(&requests) {
+            let single = engine.eval(&prepared, r).unwrap();
+            assert_eq!(b.cycles, single.cycles, "{kind}: batched cycles diverged");
+            assert_eq!(
+                b.output.as_deref().map(digest),
+                single.output.as_deref().map(digest),
+                "{kind}: batched output diverged"
+            );
+            assert_eq!(b.counters, single.counters, "{kind}: batched counters diverged");
+            assert_eq!(b.layer_stats.len(), single.layer_stats.len());
+            for (bl, sl) in b.layer_stats.iter().zip(&single.layer_stats) {
+                assert_eq!(
+                    (bl.cycles, bl.insns, bl.uops, bl.macs),
+                    (sl.cycles, sl.insns, sl.uops, sl.macs),
+                    "{kind}: layer stat {} diverged",
+                    bl.name
+                );
+            }
+        }
+    }
+    // The shared-prepared path routes through the same override.
+    let engine = Engine::for_config(&cfg).backend_kind(BackendKind::Tsim).build().unwrap();
+    let shared = engine.prepare_shared(std::sync::Arc::new(graph)).unwrap();
+    let batched = engine.eval_many_shared(&shared, &requests).unwrap();
+    let singles: Vec<Evaluation> =
+        requests.iter().map(|r| engine.eval_shared(&shared, r).unwrap()).collect();
+    for (b, s) in batched.iter().zip(&singles) {
+        assert_eq!(b.cycles, s.cycles);
+        assert_eq!(b.output.as_deref().map(digest), s.output.as_deref().map(digest));
+    }
+}
+
 /// Malformed inputs fail with typed errors — never panics — at every
 /// rung, through both the engine and the raw session.
 #[test]

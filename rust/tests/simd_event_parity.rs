@@ -1,0 +1,242 @@
+//! Differential parity for PR 7's two raw-speed mechanisms. Both are
+//! pure optimizations with an exactness contract, so the tests are
+//! seeded fuzzers comparing the fast path against the always-compiled
+//! reference:
+//!
+//! * **SIMD exec kernels** — `exec::dot_i8` / `exec::alu_tile_imm`
+//!   (AVX2/SSE2 under `--features simd`, runtime-detected) must be
+//!   bit-identical to `dot_i8_scalar` / `alu_tile_imm_scalar` for every
+//!   input. Without the feature the dispatchers *are* the scalar
+//!   reference, so the tests pass trivially; CI runs the suite in both
+//!   feature configurations so the vector kernels are actually covered.
+//!
+//! * **Bucketed event wheel** — `Tsim`'s calendar-queue wake scheduling
+//!   must reproduce the retired linear wake scan exactly: identical
+//!   completion cycles, `ExecCounters`, per-module stall accounting,
+//!   scratchpad digests and DRAM output, program for program
+//!   (`Tsim::set_linear_scan` keeps the old scan alive for exactly this
+//!   comparison).
+
+use vta::compiler::builder::ProgramBuilder;
+use vta::compiler::conv::{lower_conv, ConvBases, ConvParams};
+use vta::compiler::tps::{self, ConvSpec};
+use vta::config::presets;
+use vta::config::VtaConfig;
+use vta::exec::{alu_tile_imm, alu_tile_imm_scalar, dot_i8, dot_i8_scalar};
+use vta::isa::{AluOp, BufferId};
+use vta::mem::Dram;
+use vta::sim::Tsim;
+use vta::util::rng::Pcg32;
+
+// ---------------------------------------------------------------------
+// SIMD kernels vs scalar reference
+// ---------------------------------------------------------------------
+
+/// Every length from empty through several vector widths past the
+/// 16/32-lane blocks, full-range i8 values: the dispatcher must agree
+/// with the scalar reference bit for bit (including the worst case,
+/// -128 * -128 accumulated across a long vector).
+#[test]
+fn dot_i8_matches_scalar_reference() {
+    let mut rng = Pcg32::seeded(0xd07);
+    for len in (0..=96).chain([128, 255, 256, 1000, 1024]) {
+        for _ in 0..8 {
+            let x = rng.i8_vec_full(len);
+            let w = rng.i8_vec_full(len);
+            assert_eq!(
+                dot_i8(&x, &w),
+                dot_i8_scalar(&x, &w),
+                "dot_i8 diverged from scalar at len {len}"
+            );
+        }
+    }
+    // Saturation-adjacent corner: all lanes at i8::MIN.
+    let x = vec![i8::MIN; 256];
+    assert_eq!(dot_i8(&x, &x), dot_i8_scalar(&x, &x));
+}
+
+/// All ALU ops × tile lengths straddling the 8-lane blocks × random
+/// accumulators and immediates. Both variants mutate the accumulator
+/// tile in place and narrow into the output tile; both buffers must
+/// match element for element.
+#[test]
+fn alu_tile_imm_matches_scalar_reference() {
+    let ops = [
+        AluOp::Min,
+        AluOp::Max,
+        AluOp::Add,
+        AluOp::Shr,
+        AluOp::Mul,
+        AluOp::Clip,
+        AluOp::Mov,
+    ];
+    let mut rng = Pcg32::seeded(0xa1f);
+    for &op in &ops {
+        for len in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 32, 64, 100] {
+            for _ in 0..8 {
+                let imm = {
+                    let raw = rng.next_u32() as i32;
+                    match op {
+                        // clamp(-imm, imm) requires a non-negative bound;
+                        // negative Clip immediates are rejected upstream.
+                        AluOp::Clip => raw & 0x7fff_ffff,
+                        // Keep shifts in the interesting window (the
+                        // datapath masks to 31 anyway, signed both ways).
+                        AluOp::Shr => raw % 64,
+                        _ => raw,
+                    }
+                };
+                let acc0: Vec<i32> = (0..len).map(|_| rng.next_u32() as i32).collect();
+                let mut acc_fast = acc0.clone();
+                let mut acc_ref = acc0;
+                let mut out_fast = vec![0i8; len];
+                let mut out_ref = vec![0i8; len];
+                alu_tile_imm(op, imm, &mut acc_fast, &mut out_fast);
+                alu_tile_imm_scalar(op, imm, &mut acc_ref, &mut out_ref);
+                assert_eq!(acc_fast, acc_ref, "{op:?} imm={imm} len={len}: acc diverged");
+                assert_eq!(out_fast, out_ref, "{op:?} imm={imm} len={len}: out diverged");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bucketed event wheel vs linear wake scan
+// ---------------------------------------------------------------------
+
+/// Everything the timing contract promises, bundled for equality.
+#[derive(Debug, PartialEq)]
+struct RunFingerprint {
+    cycles: u64,
+    counters: vta::exec::ExecCounters,
+    acc_digest: u64,
+    out_digest: u64,
+    output: Vec<i8>,
+    stalls: [(u64, u64, u64, u64); 3],
+    gemm_cycles: u64,
+    alu_cycles: u64,
+    vme_busy: (u64, u64),
+}
+
+/// Lower one conv with seeded input/weights and run it to completion on
+/// a fresh `Tsim` in the requested wake-scan mode.
+fn run_conv(
+    cfg: &VtaConfig,
+    spec: ConvSpec,
+    seed: u64,
+    linear: bool,
+    timing_only: bool,
+) -> RunFingerprint {
+    let oh = (spec.h + 2 * spec.ph - spec.kh) / spec.sh + 1;
+    let ow = (spec.w + 2 * spec.pw - spec.kw) / spec.sw + 1;
+    let inp_bytes = (spec.c_in / cfg.block_in) * spec.h * spec.w * cfg.inp_tile_bytes();
+    let wgt_bytes = (spec.c_out / cfg.block_out)
+        * (spec.c_in / cfg.block_in)
+        * spec.kh
+        * spec.kw
+        * cfg.wgt_tile_bytes();
+    let out_bytes = (spec.c_out / cfg.block_out) * oh * ow * cfg.out_tile_bytes();
+    let mut dram = Dram::new(1 << 22);
+    let ri = dram.alloc(inp_bytes, cfg.inp_tile_bytes());
+    let rw = dram.alloc(wgt_bytes, cfg.wgt_tile_bytes());
+    let ro = dram.alloc(out_bytes, cfg.out_tile_bytes());
+    let mut rng = Pcg32::seeded(seed);
+    dram.write_i8(ri, &rng.i8_vec(inp_bytes));
+    dram.write_i8(rw, &rng.i8_vec(wgt_bytes));
+    let tiling = tps::search(&spec, cfg, true);
+    let mut b = ProgramBuilder::new(cfg);
+    lower_conv(
+        &mut b,
+        &ConvParams { spec, shift: 4, relu: true },
+        &tiling,
+        ConvBases {
+            inp: ri.tile_base(cfg.inp_tile_bytes()),
+            wgt: rw.tile_base(cfg.wgt_tile_bytes()),
+            out: ro.tile_base(cfg.out_tile_bytes()),
+        },
+    );
+    let insns = b.finish("wheel-parity", &mut dram).insns;
+    let mut sim = if timing_only {
+        Tsim::timing_only(cfg)
+    } else {
+        Tsim::new(cfg)
+    };
+    sim.set_linear_scan(linear);
+    let cycles = sim.run(&insns, &mut dram, "wheel-parity");
+    let report = sim.report();
+    let stat = |s: &vta::sim::ModuleStats| {
+        (s.busy_cycles, s.stall_pop_cycles, s.stall_push_cycles, s.insns)
+    };
+    RunFingerprint {
+        cycles,
+        counters: sim.core.counters,
+        acc_digest: sim.core.buffer_digest(BufferId::Acc),
+        out_digest: sim.core.buffer_digest(BufferId::Out),
+        output: dram.read_i8(ro),
+        stalls: [stat(&report.load), stat(&report.compute), stat(&report.store)],
+        gemm_cycles: report.gemm_cycles,
+        alu_cycles: report.alu_cycles,
+        vme_busy: (report.vme.read_busy_cycles, report.vme.write_busy_cycles),
+    }
+}
+
+fn wheel_grid() -> Vec<(VtaConfig, ConvSpec)> {
+    let spec_for = |cfg: &VtaConfig, h: usize, k: usize, s: usize| ConvSpec {
+        c_in: 2 * cfg.block_in,
+        c_out: 2 * cfg.block_out,
+        h,
+        w: h,
+        kh: k,
+        kw: k,
+        sh: s,
+        sw: s,
+        ph: k / 2,
+        pw: k / 2,
+    };
+    let mut grid = Vec::new();
+    let tiny = presets::tiny_config();
+    grid.push((tiny.clone(), spec_for(&tiny, 6, 3, 1)));
+    grid.push((tiny.clone(), spec_for(&tiny, 8, 3, 2)));
+    grid.push((tiny.clone(), spec_for(&tiny, 5, 1, 1)));
+    // Vary the memory system: wide bus + deeper scratchpads change every
+    // burst length and wake distance the wheel has to schedule.
+    let mut wide = presets::tiny_config();
+    wide.name = "tiny-wide".into();
+    wide.axi_bytes = 16;
+    wide.inp_depth *= 2;
+    wide.wgt_depth *= 2;
+    wide.acc_depth *= 2;
+    grid.push((wide.clone(), spec_for(&wide, 6, 3, 1)));
+    let dflt = presets::default_config();
+    grid.push((dflt.clone(), spec_for(&dflt, 6, 3, 1)));
+    grid
+}
+
+/// The wheel is an exact replacement: functional tsim agrees with the
+/// linear scan on cycles, counters, stall accounting, scratchpad
+/// digests and DRAM output — per config, spec, and input seed.
+#[test]
+fn bucketed_wheel_matches_linear_scan_functional() {
+    for (cfg, spec) in wheel_grid() {
+        for seed in [1u64, 2] {
+            let wheel = run_conv(&cfg, spec, seed, false, false);
+            let linear = run_conv(&cfg, spec, seed, true, false);
+            assert_eq!(
+                wheel, linear,
+                "{}: wheel vs linear scan diverged (functional, seed {seed})",
+                cfg.name
+            );
+        }
+    }
+}
+
+/// Same contract on the timing-only rung (no functional datapath, so
+/// the wake pattern alone determines every number).
+#[test]
+fn bucketed_wheel_matches_linear_scan_timing_only() {
+    for (cfg, spec) in wheel_grid() {
+        let wheel = run_conv(&cfg, spec, 7, false, true);
+        let linear = run_conv(&cfg, spec, 7, true, true);
+        assert_eq!(wheel, linear, "{}: wheel vs linear scan diverged (timing-only)", cfg.name);
+    }
+}
