@@ -12,6 +12,7 @@
 
 use vta::compiler::graph::{Graph, Op};
 use vta::compiler::layout::Shape;
+use vta::compiler::residency::{self, ResidencyMode};
 use vta::compiler::tps;
 use vta::config::presets;
 use vta::engine::BackendKind;
@@ -151,6 +152,30 @@ fn main() {
         );
     }
 
+    // --- tsim under an explicit residency plan: pairs with
+    // tsim/micro_resnet for an A/B read of the planner's end-to-end
+    // cost (plan construction + elided-transfer bookkeeping) against
+    // the cycles it removes from the simulated DMA engine ---
+    {
+        let g = workloads::micro_resnet(16, 3);
+        let cfg = presets::default_config();
+        let mut rng = Pcg32::seeded(4);
+        let input = rng.i8_vec(g.input_shape.elems());
+        let ropts = SessionOptions { residency: ResidencyMode::Lru, ..Default::default() };
+        let mut s = Session::new(&cfg, ropts.clone()).unwrap();
+        s.run_graph(&g, &input).unwrap();
+        let cycles = s.cycles();
+        b.bench_throughput(
+            "tsim/micro_resnet_residency",
+            Some((cycles as f64, "sim-cycles")),
+            || {
+                let mut s = Session::new(&cfg, ropts.clone()).unwrap();
+                s.run_graph(&g, black_box(&input)).unwrap();
+                s.cycles()
+            },
+        );
+    }
+
     // --- fsim for comparison ---
     {
         let g = workloads::micro_resnet(16, 3);
@@ -232,6 +257,27 @@ fn main() {
             );
             let mut dram = Dram::new(1 << 22);
             pb.finish("bench", &mut dram).insns.len()
+        });
+    }
+
+    // --- residency planner: one full cross-layer plan over ResNet-18
+    // (compile-time cost of the interval walk + heuristic, amortized
+    // once per (graph, config, mode) by the session) ---
+    {
+        let cfg = presets::default_config();
+        let g = workloads::resnet(18, 56, 1);
+        let shapes = g.shapes();
+        b.bench("compiler/residency_plan_resnet18", || {
+            residency::plan(
+                black_box(&cfg),
+                black_box(&g),
+                &shapes,
+                ResidencyMode::Lru,
+                true,
+                true,
+            )
+            .unwrap()
+            .elided_bytes
         });
     }
 

@@ -7,6 +7,7 @@
 //!         [--jobs N] [--cache sweep_cache.jsonl --resume]
 //!         [--backend tsim|timing|model]
 //!         [--two-phase [--prune-epsilon E]]
+//!         [--residency off|lru|belady|dtr]
 //!
 //! Re-running with `--cache f --resume` completes from cache without
 //! re-simulating; the frontier is identical for any worker count. With
@@ -57,6 +58,13 @@ fn main() {
                 epsilon: args.get_f64("prune-epsilon", vta::model::DEFAULT_PRUNE_EPSILON),
             },
         ),
+        residency: vta::compiler::residency::ResidencyMode::parse(
+            args.get_or("residency", "lru"),
+        )
+        .unwrap_or_else(|| {
+            eprintln!("error: unknown residency mode (expected off|lru|belady|dtr)");
+            std::process::exit(2);
+        }),
     };
     let start = std::time::Instant::now();
     let outcome = sweep::run(&spec, &opts).expect("sweep I/O");

@@ -11,4 +11,5 @@ pub mod eltwise;
 pub mod graph;
 pub mod layout;
 pub mod packet;
+pub mod residency;
 pub mod tps;

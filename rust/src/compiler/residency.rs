@@ -1,0 +1,747 @@
+//! Inter-layer scratchpad residency planning.
+//!
+//! The per-layer lowering in this crate is load-everything / compute /
+//! store-everything: every producer writes its activation to DRAM and
+//! every consumer immediately DMAs it back, so scratchpad capacity
+//! beyond one layer's working set buys no DMA reduction. This module
+//! adds the missing cross-layer pass: after TPS tiling is fixed, a
+//! *residency plan* decides for each producer→consumer edge whether the
+//! producer's output stays hot in the scratchpads (the store+load pair
+//! is elided from the DMA cost), is spilled to DRAM (the old behavior),
+//! or is recomputed at the consumer (DTR-style rematerialization, for
+//! cheap element-wise producers only).
+//!
+//! The plan is **pure**: `plan()` depends only on the configuration,
+//! the graph, its shapes, and the tiling policy, so the runtime, the
+//! memoizer, and the analytical model all derive the *same* plan
+//! independently — which is what keeps memo signatures and two-phase
+//! sweep pruning sound (see DESIGN.md §Residency planner).
+//!
+//! ## Plan IR
+//!
+//! One [`NodePlan`] per graph node: `resident_inputs[k]` means the
+//! consumer's loads of input `k` are elided (the data is hot —
+//! either kept resident or just rematerialized); `recompute` lists
+//! producers to re-run immediately before this node; `output_elided`
+//! means the node's own store traffic is elided (every consumer takes
+//! the output hot, so it never needs to be in DRAM). Partial residency
+//! is allowed: if only some consumers take an output hot, the store is
+//! paid once (write-through) and only the hot consumers elide their
+//! loads.
+//!
+//! ## Capacity model
+//!
+//! Residency is budgeted against the input scratchpad
+//! (`inp_depth x inp_tile_bytes`), the buffer activations are loaded
+//! through. At each execution position the planner reserves the
+//! executing layer's own working set (for convolutions: the TPS
+//! block × its double-buffer slots; element-wise layers stream through
+//! the accumulator and reserve nothing) and keeps producer outputs
+//! resident in the remainder, evicting by the active
+//! [`ResidencyHeuristic`] when the budget overflows. An evicted
+//! buffer's remaining consumer edges become spills — or recomputes
+//! under [`DtrRecompute`] when the producer is a residual add.
+//!
+//! ## Elision semantics
+//!
+//! Eliding never changes what a program computes: the exec core still
+//! performs every load and store functionally, and only redirects the
+//! byte counters (`dma_bytes_elided`, `resident_tile_hits`) and gives
+//! tsim zero-occupancy DMA for elided transfers. Functional digests
+//! are therefore identical with residency on or off *by construction*.
+
+use super::graph::{Graph, Op};
+use super::layout::Shape;
+use super::tps;
+use crate::config::{ConfigError, VtaConfig};
+use std::collections::VecDeque;
+
+/// Which residency heuristic drives the plan (CLI `--residency`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ResidencyMode {
+    /// Every edge spills through DRAM — the pre-planner behavior.
+    Off,
+    /// Least-recently-used eviction over the static execution order.
+    #[default]
+    Lru,
+    /// Belady's offline-optimal eviction (furthest next use on the
+    /// known static trace), clamped to never spill more than LRU.
+    Belady,
+    /// LRU eviction, but evicted residual-add outputs are recomputed
+    /// at their consumers instead of spilled (DTR-style).
+    Dtr,
+}
+
+impl ResidencyMode {
+    /// CLI / cache-key token.
+    pub fn cli_name(self) -> &'static str {
+        match self {
+            ResidencyMode::Off => "off",
+            ResidencyMode::Lru => "lru",
+            ResidencyMode::Belady => "belady",
+            ResidencyMode::Dtr => "dtr",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ResidencyMode> {
+        match s {
+            "off" => Some(ResidencyMode::Off),
+            "lru" => Some(ResidencyMode::Lru),
+            "belady" => Some(ResidencyMode::Belady),
+            "dtr" => Some(ResidencyMode::Dtr),
+            _ => None,
+        }
+    }
+}
+
+/// How one producer→consumer edge is served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeDecision {
+    /// Through DRAM: producer stores, consumer loads (the default).
+    Spill,
+    /// The producer's output is still hot; the consumer's load is
+    /// elided.
+    Resident,
+    /// The producer is re-run right before the consumer; the rerun
+    /// leaves the output hot and the consumer's load is elided.
+    Recompute,
+}
+
+/// Residency decisions for one graph node.
+#[derive(Debug, Clone)]
+pub struct NodePlan {
+    /// Per input slot: is the consumer's load of that input elided?
+    /// (true for both `Resident` and `Recompute` edges).
+    pub resident_inputs: Vec<bool>,
+    /// Is this node's own store traffic elided? Only when *every*
+    /// consumer takes the output hot and the node is not the graph
+    /// output.
+    pub output_elided: bool,
+    /// Producer node indices to re-run immediately before this node
+    /// (DTR rematerialization).
+    pub recompute: Vec<usize>,
+}
+
+impl NodePlan {
+    fn empty(n_inputs: usize) -> NodePlan {
+        NodePlan { resident_inputs: vec![false; n_inputs], output_elided: false, recompute: vec![] }
+    }
+
+    /// The residency bits folded into this layer's memo signature:
+    /// bit0 = input 0 hot, bit1 = input 1 hot (residual adds), bit2 =
+    /// output elided. A layer lowered against hot inputs is a
+    /// different program identity than a cold one.
+    pub fn sig_bits(&self) -> u8 {
+        let mut b = 0u8;
+        if self.resident_inputs.first() == Some(&true) {
+            b |= 1;
+        }
+        if self.resident_inputs.get(1) == Some(&true) {
+            b |= 2;
+        }
+        if self.output_elided {
+            b |= 4;
+        }
+        b
+    }
+
+    /// The edge decision for one input slot whose producer is node
+    /// `producer`.
+    pub fn edge(&self, slot: usize, producer: usize) -> EdgeDecision {
+        match self.resident_inputs.get(slot) {
+            Some(&true) if self.recompute.contains(&producer) => EdgeDecision::Recompute,
+            Some(&true) => EdgeDecision::Resident,
+            _ => EdgeDecision::Spill,
+        }
+    }
+}
+
+/// Residency bits of a DTR rerun: inputs cold (re-loaded from DRAM),
+/// output elided (left hot for the consumer).
+pub const RECOMPUTE_SIG_BITS: u8 = 0b100;
+
+/// The full cross-layer plan.
+#[derive(Debug, Clone)]
+pub struct ResidencyPlan {
+    pub mode: ResidencyMode,
+    /// One entry per graph node (index-aligned with `graph.nodes`).
+    pub nodes: Vec<NodePlan>,
+    /// Planner's estimate of DMA bytes elided (hot edges + elided
+    /// stores).
+    pub elided_bytes: u64,
+    /// Planner's estimate of bytes still spilled on *eligible* edges
+    /// (plus write-through stores of partially-hot outputs). The
+    /// Belady ≤ LRU property is stated over this metric.
+    pub spilled_bytes: u64,
+}
+
+impl ResidencyPlan {
+    /// The all-spill plan (`--residency off`, and the plan every
+    /// pre-residency memo entry is implicitly keyed under: its sig
+    /// bits are 0 everywhere).
+    pub fn off(graph: &Graph) -> ResidencyPlan {
+        ResidencyPlan {
+            mode: ResidencyMode::Off,
+            nodes: graph.nodes.iter().map(|n| NodePlan::empty(n.inputs.len())).collect(),
+            elided_bytes: 0,
+            spilled_bytes: 0,
+        }
+    }
+
+    pub fn sig_bits(&self, node: usize) -> u8 {
+        self.nodes[node].sig_bits()
+    }
+
+    /// Producers rematerialized anywhere in the plan.
+    pub fn recomputed_producers(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.nodes.iter().flat_map(|n| n.recompute.iter().copied()).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+/// Snapshot of one resident buffer, as seen by a heuristic when an
+/// eviction is needed.
+#[derive(Debug, Clone, Copy)]
+pub struct BufferState {
+    /// Producer node index.
+    pub node: usize,
+    pub bytes: u64,
+    /// Execution position of the most recent access.
+    pub last_use: usize,
+    /// Execution position of the next access on the static trace
+    /// (`None` once dead).
+    pub next_use: Option<usize>,
+}
+
+/// Eviction policy: given the resident buffers, pick the victim. The
+/// planner owns all bookkeeping; heuristics are pure victim selectors
+/// plus the spill-vs-recompute choice.
+pub trait ResidencyHeuristic {
+    fn name(&self) -> &'static str;
+
+    /// Index into `resident` of the buffer to evict. `resident` is
+    /// never empty.
+    fn victim(&self, resident: &[BufferState]) -> usize;
+
+    /// Whether an evicted *recomputable* producer's remaining uses
+    /// become `Recompute` instead of `Spill`.
+    fn recompute_on_evict(&self) -> bool {
+        false
+    }
+}
+
+/// Least-recently-used.
+pub struct Lru;
+
+impl ResidencyHeuristic for Lru {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+
+    fn victim(&self, resident: &[BufferState]) -> usize {
+        resident
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, b)| b.last_use)
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+/// Belady's offline-optimal policy: evict the buffer whose next use is
+/// furthest in the future. The execution order is static, so the full
+/// access trace is known at plan time.
+pub struct BeladyOnTrace;
+
+impl ResidencyHeuristic for BeladyOnTrace {
+    fn name(&self) -> &'static str {
+        "belady"
+    }
+
+    fn victim(&self, resident: &[BufferState]) -> usize {
+        resident
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, b)| b.next_use.unwrap_or(usize::MAX))
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+/// DTR-style: LRU eviction order, but evicted cheap producers are
+/// rematerialized at their consumers instead of spilled.
+pub struct DtrRecompute;
+
+impl ResidencyHeuristic for DtrRecompute {
+    fn name(&self) -> &'static str {
+        "dtr"
+    }
+
+    fn victim(&self, resident: &[BufferState]) -> usize {
+        Lru.victim(resident)
+    }
+
+    fn recompute_on_evict(&self) -> bool {
+        true
+    }
+}
+
+/// Is node `i` executed on VTA? (Ineligible nodes — the input
+/// placeholder and channel-light CPU-fallback convolutions — can
+/// neither keep an output hot nor take an input hot.)
+pub fn on_vta(cfg: &VtaConfig, graph: &Graph, shapes: &[Shape], i: usize) -> bool {
+    match &graph.nodes[i].op {
+        Op::Input => false,
+        Op::Conv { .. } => shapes[graph.nodes[i].inputs[0]].c >= cfg.block_in,
+        _ => true,
+    }
+}
+
+/// Only residual adds are recomputable: they are cheap (one ALU pass,
+/// no GEMM) and carry no weights. Weight-bearing producers (conv,
+/// dense, depthwise) are never rematerialized — a rerun would re-DMA
+/// the whole weight tensor, defeating the point.
+pub fn recomputable(graph: &Graph, i: usize) -> bool {
+    matches!(graph.nodes[i].op, Op::Add { .. })
+}
+
+/// Compute the residency plan. Pure: depends only on the arguments, so
+/// every layer of the stack (runtime, memo, analytical model) derives
+/// an identical plan. `use_tps` / `dbuf_reuse` must match the session's
+/// tiling policy — the conv working set depends on the tiling.
+///
+/// Errors with [`ConfigError::Infeasible`] when a convolution has no
+/// feasible tiling on `cfg` (surfaced instead of panicking so sweeps
+/// can report the config as infeasible rather than dropping it).
+pub fn plan(
+    cfg: &VtaConfig,
+    graph: &Graph,
+    shapes: &[Shape],
+    mode: ResidencyMode,
+    use_tps: bool,
+    dbuf_reuse: bool,
+) -> Result<ResidencyPlan, ConfigError> {
+    match mode {
+        ResidencyMode::Off => {
+            // Still surface infeasible tilings (the walk is what checks
+            // them elsewhere), so `off` and `lru` reject the same
+            // configs.
+            check_feasible(cfg, graph, shapes, use_tps, dbuf_reuse)?;
+            Ok(ResidencyPlan::off(graph))
+        }
+        ResidencyMode::Lru => walk(cfg, graph, shapes, &Lru, mode, use_tps, dbuf_reuse),
+        ResidencyMode::Dtr => walk(cfg, graph, shapes, &DtrRecompute, mode, use_tps, dbuf_reuse),
+        ResidencyMode::Belady => {
+            // Belady is optimal for unit-size buffers; with
+            // variable-size activations the greedy walk can lose to
+            // LRU, so clamp: return whichever plan spills less. This
+            // makes "Belady never spills more than LRU" a structural
+            // guarantee, not an empirical one.
+            let b = walk(cfg, graph, shapes, &BeladyOnTrace, mode, use_tps, dbuf_reuse)?;
+            let l = walk(cfg, graph, shapes, &Lru, mode, use_tps, dbuf_reuse)?;
+            Ok(if b.spilled_bytes <= l.spilled_bytes { b } else { ResidencyPlan { mode, ..l } })
+        }
+    }
+}
+
+fn check_feasible(
+    cfg: &VtaConfig,
+    graph: &Graph,
+    shapes: &[Shape],
+    use_tps: bool,
+    dbuf_reuse: bool,
+) -> Result<(), ConfigError> {
+    for i in 1..graph.nodes.len() {
+        if matches!(graph.nodes[i].op, Op::Conv { .. } | Op::Dense { .. })
+            && on_vta(cfg, graph, shapes, i)
+        {
+            let spec = graph.conv_spec(i, shapes);
+            tps::select_tiling(&spec, cfg, use_tps, dbuf_reuse)?;
+        }
+    }
+    Ok(())
+}
+
+/// One resident buffer in the capacity walk.
+struct ResidentBuf {
+    node: usize,
+    bytes: u64,
+    last_use: usize,
+    /// Remaining eligible consumer positions, ascending.
+    future: VecDeque<usize>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn walk(
+    cfg: &VtaConfig,
+    graph: &Graph,
+    shapes: &[Shape],
+    h: &dyn ResidencyHeuristic,
+    mode: ResidencyMode,
+    use_tps: bool,
+    dbuf_reuse: bool,
+) -> Result<ResidencyPlan, ConfigError> {
+    let n = graph.nodes.len();
+    let block = cfg.block_in;
+    let tile_bytes = cfg.inp_tile_bytes() as u64;
+    let cap = cfg.inp_depth as u64 * tile_bytes;
+    // Activation footprint, matching `Session::alloc_activation`.
+    let bytes = |i: usize| shapes[i].tiles(block) as u64 * tile_bytes;
+    let vta: Vec<bool> = (0..n).map(|i| on_vta(cfg, graph, shapes, i)).collect();
+    let mut uses: Vec<Vec<usize>> = vec![vec![]; n];
+    for (i, node) in graph.nodes.iter().enumerate() {
+        for &p in &node.inputs {
+            uses[p].push(i);
+        }
+    }
+    let mut nodes: Vec<NodePlan> =
+        graph.nodes.iter().map(|nd| NodePlan::empty(nd.inputs.len())).collect();
+
+    let mut set: Vec<ResidentBuf> = Vec::new();
+    let mut resident_total = 0u64;
+
+    // Evict until `resident_total <= limit`, preferring victims that do
+    // not feed the current position. An evicted recomputable producer's
+    // strictly-later uses become recomputes under a DTR heuristic;
+    // uses at the current position (we are evicting to make room for
+    // it) always spill.
+    let mut evict_to = |set: &mut Vec<ResidentBuf>,
+                        resident_total: &mut u64,
+                        nodes: &mut Vec<NodePlan>,
+                        limit: u64,
+                        now: usize,
+                        exclude: &[usize]| {
+        while *resident_total > limit && !set.is_empty() {
+            let mut pool: Vec<usize> =
+                (0..set.len()).filter(|&i| !exclude.contains(&set[i].node)).collect();
+            if pool.is_empty() {
+                pool = (0..set.len()).collect();
+            }
+            let states: Vec<BufferState> = pool
+                .iter()
+                .map(|&i| BufferState {
+                    node: set[i].node,
+                    bytes: set[i].bytes,
+                    last_use: set[i].last_use,
+                    next_use: set[i].future.front().copied(),
+                })
+                .collect();
+            let victim = pool[h.victim(&states)];
+            let buf = set.remove(victim);
+            *resident_total -= buf.bytes;
+            if h.recompute_on_evict() && recomputable(graph, buf.node) {
+                for &c in buf.future.iter().filter(|&&c| c > now) {
+                    for (slot, &p) in graph.nodes[c].inputs.iter().enumerate() {
+                        if p == buf.node {
+                            nodes[c].resident_inputs[slot] = true;
+                        }
+                    }
+                    if !nodes[c].recompute.contains(&buf.node) {
+                        nodes[c].recompute.push(buf.node);
+                    }
+                }
+            }
+            // Non-recompute remaining uses stay Spill (the default).
+        }
+    };
+
+    for t in 1..n {
+        // The executing layer's own scratchpad working set, plus the
+        // footprint of any rematerializations scheduled before it.
+        let w = match &graph.nodes[t].op {
+            Op::Conv { .. } | Op::Dense { .. } if vta[t] => {
+                let spec = graph.conv_spec(t, shapes);
+                let tiling = tps::select_tiling(&spec, cfg, use_tps, dbuf_reuse)?;
+                let g = tiling.geom(&spec, cfg);
+                (tiling.inp_slots() * g.inp_block_tiles) as u64 * tile_bytes
+            }
+            // Element-wise / pooling layers stream through the
+            // accumulator scratchpad; CPU-fallback layers use none.
+            _ => 0,
+        };
+        let w_recompute: u64 = nodes[t].recompute.iter().map(|&p| bytes(p)).sum();
+        let budget = cap.saturating_sub(w + w_recompute);
+        evict_to(&mut set, &mut resident_total, &mut nodes, budget, t, &graph.nodes[t].inputs);
+
+        // Classify this node's input edges against the surviving set.
+        for (slot, &p) in graph.nodes[t].inputs.iter().enumerate() {
+            if !(vta[p] && vta[t]) {
+                continue; // ineligible edge: always a spill
+            }
+            if let Some(pos) = set.iter().position(|r| r.node == p) {
+                nodes[t].resident_inputs[slot] = true;
+                set[pos].last_use = t;
+                while set[pos].future.front() == Some(&t) {
+                    set[pos].future.pop_front();
+                }
+            }
+        }
+        // Drop buffers with no remaining uses.
+        set.retain(|r| {
+            if r.future.is_empty() {
+                resident_total -= r.bytes;
+                false
+            } else {
+                true
+            }
+        });
+
+        // Try to keep this node's own output hot (never the graph
+        // output — the host reads it from DRAM).
+        if vta[t] && t != n - 1 {
+            let future: VecDeque<usize> =
+                uses[t].iter().copied().filter(|&c| vta[c]).collect();
+            if !future.is_empty() {
+                let b = bytes(t);
+                if b <= cap {
+                    evict_to(&mut set, &mut resident_total, &mut nodes, cap - b, t, &[]);
+                    resident_total += b;
+                    set.push(ResidentBuf { node: t, bytes: b, last_use: t, future });
+                } else if h.recompute_on_evict() && recomputable(graph, t) {
+                    // Too big to ever be resident: rematerialize at
+                    // each consumer instead.
+                    for &c in &uses[t] {
+                        if !vta[c] {
+                            continue;
+                        }
+                        for (slot, &p) in graph.nodes[c].inputs.iter().enumerate() {
+                            if p == t {
+                                nodes[c].resident_inputs[slot] = true;
+                            }
+                        }
+                        if !nodes[c].recompute.contains(&t) {
+                            nodes[c].recompute.push(t);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Finalize store elision and the byte metrics.
+    let mut elided = 0u64;
+    let mut spilled = 0u64;
+    for p in 1..n {
+        if !vta[p] || uses[p].is_empty() || p == n - 1 {
+            continue;
+        }
+        let has_eligible_edge = uses[p].iter().any(|&c| vta[c]);
+        if !has_eligible_edge {
+            continue;
+        }
+        let all_hot = uses[p].iter().all(|&c| {
+            vta[c]
+                && graph.nodes[c]
+                    .inputs
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &q)| q == p)
+                    .all(|(slot, _)| nodes[c].resident_inputs[slot])
+        });
+        nodes[p].output_elided = all_hot;
+        if all_hot {
+            elided += bytes(p);
+        } else {
+            spilled += bytes(p); // write-through store still paid
+        }
+    }
+    for (c, node) in graph.nodes.iter().enumerate() {
+        for (slot, &p) in node.inputs.iter().enumerate() {
+            if !(vta[p] && vta[c]) {
+                continue;
+            }
+            if nodes[c].resident_inputs[slot] {
+                elided += bytes(p);
+            } else {
+                spilled += bytes(p);
+            }
+        }
+    }
+
+    Ok(ResidencyPlan { mode, nodes, elided_bytes: elided, spilled_bytes: spilled })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::graph::rand_weights;
+    use crate::config::presets;
+    use crate::util::rng::Pcg32;
+    use crate::workloads;
+
+    fn plan_for(g: &Graph, cfg: &VtaConfig, mode: ResidencyMode) -> ResidencyPlan {
+        plan(cfg, g, &g.shapes(), mode, true, true).unwrap()
+    }
+
+    /// conv → conv chain, one tile wide: trivially fits on tiny.
+    fn chain(block: usize) -> Graph {
+        let mut rng = Pcg32::seeded(7);
+        let mut g = Graph::new("chain", Shape::new(block, 8, 8));
+        let c1 = g.add(
+            "c1",
+            Op::Conv {
+                c_out: block,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                shift: 4,
+                relu: true,
+                weights: rand_weights(&mut rng, block * block * 9),
+            },
+            vec![0],
+        );
+        let c2 = g.add(
+            "c2",
+            Op::Conv {
+                c_out: block,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                shift: 4,
+                relu: true,
+                weights: rand_weights(&mut rng, block * block * 9),
+            },
+            vec![c1],
+        );
+        g.add("add", Op::Add { relu: false }, vec![c2, c1]);
+        g
+    }
+
+    #[test]
+    fn off_mode_elides_nothing() {
+        let cfg = presets::tiny_config();
+        let g = chain(cfg.block_in);
+        let p = plan_for(&g, &cfg, ResidencyMode::Off);
+        assert_eq!(p.elided_bytes, 0);
+        assert!(p.nodes.iter().all(|n| n.sig_bits() == 0 && n.recompute.is_empty()));
+    }
+
+    #[test]
+    fn lru_keeps_chain_hot_when_it_fits() {
+        let cfg = presets::tiny_config();
+        let g = chain(cfg.block_in);
+        let p = plan_for(&g, &cfg, ResidencyMode::Lru);
+        // c1 feeds c2 and add; c2 feeds add. Everything fits → all hot.
+        assert!(p.nodes[2].resident_inputs[0], "c1→c2 should be resident");
+        assert!(p.nodes[3].resident_inputs.iter().all(|&b| b), "both add inputs hot");
+        assert!(p.nodes[1].output_elided && p.nodes[2].output_elided);
+        assert!(!p.nodes[3].output_elided, "graph output is host-read");
+        assert!(p.elided_bytes > 0);
+    }
+
+    #[test]
+    fn input_placeholder_and_cpu_convs_are_never_hot() {
+        let cfg = presets::default_config();
+        let g = workloads::micro_resnet(cfg.block_in, 1);
+        let shapes = g.shapes();
+        let p = plan_for(&g, &cfg, ResidencyMode::Lru);
+        for (i, node) in g.nodes.iter().enumerate() {
+            for (slot, &src) in node.inputs.iter().enumerate() {
+                if !on_vta(&cfg, &g, &shapes, src) {
+                    assert!(
+                        !p.nodes[i].resident_inputs[slot],
+                        "edge {}→{} from ineligible producer marked hot",
+                        g.nodes[src].name, node.name
+                    );
+                }
+            }
+        }
+        // conv1 (3 input channels) is the CPU fallback.
+        assert!(!on_vta(&cfg, &g, &shapes, 1));
+        assert!(!p.nodes[1].output_elided);
+    }
+
+    #[test]
+    fn capacity_pressure_forces_spills() {
+        // Shrink the input scratchpad until residency is impossible:
+        // the plan must degrade to spills, never overcommit.
+        let mut cfg = presets::tiny_config();
+        let g = chain(cfg.block_in);
+        let shapes = g.shapes();
+        let full = plan(&cfg, &g, &shapes, ResidencyMode::Lru, true, true).unwrap();
+        assert!(full.spilled_bytes == 0 || full.elided_bytes > 0);
+        cfg.inp_depth = 64; // 8x8 activation = 64 tiles: one buffer max
+        let tight = plan(&cfg, &g, &shapes, ResidencyMode::Lru, true, true).unwrap();
+        assert!(tight.spilled_bytes > 0, "tight config must spill");
+        assert!(tight.spilled_bytes > full.spilled_bytes);
+    }
+
+    #[test]
+    fn dtr_recomputes_only_adds() {
+        for g in [
+            workloads::micro_resnet(16, 1),
+            workloads::micro_mobilenet(16, 1),
+            workloads::resnet(18, 32, 1),
+        ] {
+            let mut cfg = presets::default_config();
+            cfg.inp_depth = 64; // force evictions
+            let p = plan_for(&g, &cfg, ResidencyMode::Dtr);
+            for q in p.recomputed_producers() {
+                assert!(
+                    recomputable(&g, q),
+                    "{}: recompute of weight-bearing node {}",
+                    g.name, g.nodes[q].name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn belady_never_spills_more_than_lru() {
+        let cfg = presets::default_config();
+        let g = workloads::micro_resnet(cfg.block_in, 1);
+        let shapes = g.shapes();
+        for depth in [64usize, 128, 256, 2048] {
+            let mut c = cfg.clone();
+            c.inp_depth = depth;
+            let b = plan(&c, &g, &shapes, ResidencyMode::Belady, true, true).unwrap();
+            let l = plan(&c, &g, &shapes, ResidencyMode::Lru, true, true).unwrap();
+            assert!(
+                b.spilled_bytes <= l.spilled_bytes,
+                "depth {depth}: belady {} > lru {}",
+                b.spilled_bytes,
+                l.spilled_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let cfg = presets::default_config();
+        let g = workloads::micro_resnet(cfg.block_in, 1);
+        let shapes = g.shapes();
+        for mode in [ResidencyMode::Lru, ResidencyMode::Belady, ResidencyMode::Dtr] {
+            let a = plan(&cfg, &g, &shapes, mode, true, true).unwrap();
+            let b = plan(&cfg, &g, &shapes, mode, true, true).unwrap();
+            assert_eq!(a.elided_bytes, b.elided_bytes);
+            assert_eq!(a.spilled_bytes, b.spilled_bytes);
+            for (x, y) in a.nodes.iter().zip(&b.nodes) {
+                assert_eq!(x.sig_bits(), y.sig_bits());
+                assert_eq!(x.recompute, y.recompute);
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_config_is_a_typed_error() {
+        let mut cfg = presets::tiny_config();
+        cfg.inp_depth = 1;
+        cfg.wgt_depth = 1;
+        cfg.acc_depth = 1;
+        let g = chain(cfg.block_in);
+        let err = plan(&cfg, &g, &g.shapes(), ResidencyMode::Lru, true, true).unwrap_err();
+        assert!(matches!(err, ConfigError::Infeasible { .. }), "got {err:?}");
+    }
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in [ResidencyMode::Off, ResidencyMode::Lru, ResidencyMode::Belady, ResidencyMode::Dtr]
+        {
+            assert_eq!(ResidencyMode::parse(m.cli_name()), Some(m));
+        }
+        assert_eq!(ResidencyMode::parse("belody"), None);
+        assert_eq!(ResidencyMode::default(), ResidencyMode::Lru);
+    }
+}

@@ -118,6 +118,20 @@ impl Tiling {
         }
     }
 
+    /// Input-scratchpad slots this schedule occupies: 2 when the input
+    /// block is double-buffered (more than one block loaded over the
+    /// layer), 1 otherwise. Exposed for the residency planner, whose
+    /// capacity budget must subtract the executing layer's own
+    /// working set (`inp_slots x inp_block_tiles`).
+    pub fn inp_slots(&self) -> usize {
+        let n_spatial = self.th_o * self.tw_o;
+        if n_spatial * self.tci_o * (if self.reuse_inp { 1 } else { self.tco_o }) > 1 {
+            2
+        } else {
+            1
+        }
+    }
+
     /// Scratchpad feasibility (Appendix A's `u_* >= 0` constraints), with
     /// double-buffered (2-slot) blocks whenever more than one block is
     /// loaded, plus uop-buffer and ISA field-width constraints.
@@ -125,7 +139,7 @@ impl Tiling {
         let g = self.geom(spec, cfg);
         let layout = cfg.isa_layout();
         let n_spatial = self.th_o * self.tw_o;
-        let inp_slots = if n_spatial * self.tci_o * (if self.reuse_inp { 1 } else { self.tco_o }) > 1 { 2 } else { 1 };
+        let inp_slots = self.inp_slots();
         let wgt_slots = if n_spatial * self.tco_o * self.tci_o > 1 { 2 } else { 1 };
         let acc_slots = if n_spatial * self.tco_o > 1 { 2 } else { 1 };
         if inp_slots * g.inp_block_tiles > cfg.inp_depth {
@@ -208,7 +222,23 @@ pub fn fallback(spec: &ConvSpec, cfg: &VtaConfig) -> Tiling {
 /// Cost ties break toward virtual-thread-capable tilings (tco_o >= 2,
 /// which enables the double-buffered co-chunk pairs the paper's schedule
 /// template always uses), then toward fewer chunks.
+///
+/// Panics when no tiling (not even the fallback) fits — callers on
+/// untrusted configurations use [`try_search`] / [`select_tiling`],
+/// which surface the typed [`ConfigError::Infeasible`] instead.
 pub fn search(spec: &ConvSpec, cfg: &VtaConfig, reuse_inp: bool) -> Tiling {
+    try_search(spec, cfg, reuse_inp).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible TPS search: like [`search`] but an infeasible space is a
+/// typed error, not a panic — the path `sweep::run` uses so
+/// tiny-scratchpad grid points are *reported* as infeasible rather
+/// than silently dropped.
+pub fn try_search(
+    spec: &ConvSpec,
+    cfg: &VtaConfig,
+    reuse_inp: bool,
+) -> Result<Tiling, crate::config::ConfigError> {
     let mut best: Option<((u64, usize, usize), Tiling)> = None;
     for &th_o in &divisors(spec.oh()) {
         for &tw_o in &divisors(spec.ow()) {
@@ -230,17 +260,46 @@ pub fn search(spec: &ConvSpec, cfg: &VtaConfig, reuse_inp: bool) -> Tiling {
         }
     }
     match best {
-        Some((_, t)) => t,
+        Some((_, t)) => Ok(t),
         None => {
             let fb = fallback(spec, cfg);
-            assert!(
-                fb.feasible(spec, cfg),
-                "no feasible tiling for {spec:?} on {}",
-                cfg.name
-            );
-            fb
+            if fb.feasible(spec, cfg) {
+                Ok(fb)
+            } else {
+                Err(crate::config::ConfigError::Infeasible {
+                    reason: format!("no feasible tiling for {spec:?} on {}", cfg.name),
+                })
+            }
         }
     }
+}
+
+/// The session's tiling policy, shared with the residency planner so
+/// both derive identical schedules (and therefore identical memo
+/// signatures): the tiling is always *searched* under the
+/// improved-reuse cost model when TPS is on (the fallback schedule
+/// otherwise), and `dbuf_reuse` then sets only the double-buffer
+/// thread-injection flag — matching the paper's Fig 11/12 experiment,
+/// which flips the IR pass while keeping the schedule.
+pub fn select_tiling(
+    spec: &ConvSpec,
+    cfg: &VtaConfig,
+    use_tps: bool,
+    dbuf_reuse: bool,
+) -> Result<Tiling, crate::config::ConfigError> {
+    let mut t = if use_tps {
+        try_search(spec, cfg, true)?
+    } else {
+        let fb = fallback(spec, cfg);
+        if !fb.feasible(spec, cfg) {
+            return Err(crate::config::ConfigError::Infeasible {
+                reason: format!("fallback tiling for {spec:?} overflows scratchpads on {}", cfg.name),
+            });
+        }
+        fb
+    };
+    t.reuse_inp = dbuf_reuse;
+    Ok(t)
 }
 
 /// Chunk bounds helper: start offset and size of chunk `idx` when `dim`
@@ -350,6 +409,20 @@ mod tests {
             }
             assert_eq!(total, dim);
         }
+    }
+
+    #[test]
+    fn try_search_reports_infeasible_as_typed_error() {
+        let mut cfg = presets::tiny_config();
+        cfg.inp_depth = 1;
+        cfg.wgt_depth = 1;
+        cfg.acc_depth = 1;
+        let err = try_search(&c2(), &cfg, true).unwrap_err();
+        assert!(matches!(err, crate::config::ConfigError::Infeasible { .. }), "got {err:?}");
+        assert!(select_tiling(&c2(), &cfg, false, true).is_err(), "fallback path too");
+        // A feasible config still searches to the same tiling.
+        let ok = presets::default_config();
+        assert_eq!(try_search(&c2(), &ok, true).unwrap(), search(&c2(), &ok, true));
     }
 
     #[test]

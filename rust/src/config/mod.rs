@@ -169,6 +169,11 @@ pub enum ConfigError {
     NotPow2 { field: &'static str, value: usize },
     OutOfRange { field: &'static str, value: usize, lo: usize, hi: usize },
     InsnOverflow { insn: &'static str, bits: u32 },
+    /// The configuration validates structurally but cannot execute a
+    /// given workload: even the minimal (fallback) tiling overflows the
+    /// scratchpads. Sweeps record these points (`measured: false`) so
+    /// grid coverage stays accountable.
+    Infeasible { reason: String },
     Json(String),
 }
 
@@ -186,6 +191,7 @@ impl fmt::Display for ConfigError {
                 "{insn} instruction needs {bits} bits > {INSN_BITS} even after \
                  field shrinking — reduce scratchpad depths"
             ),
+            ConfigError::Infeasible { reason } => write!(f, "infeasible: {reason}"),
             ConfigError::Json(msg) => write!(f, "config json: {msg}"),
         }
     }

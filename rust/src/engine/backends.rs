@@ -57,6 +57,7 @@ fn sim_session(kind: BackendKind, prepared: &Prepared<'_>) -> Result<Session, Vt
         trace: prepared.tuning.trace,
         tps: prepared.tuning.tps,
         dbuf_reuse: prepared.tuning.dbuf_reuse,
+        residency: prepared.tuning.residency,
         memo: prepared.memo.clone(),
     };
     Session::new(&prepared.cfg, opts)
@@ -277,7 +278,16 @@ impl Backend for AnalyticalBackend {
         // malformed request fails identically at every fidelity.
         resolve_input(prepared, request, false)?;
         let mut cache = self.cache.lock().unwrap();
-        let prediction = model::predict_graph_cached(&prepared.cfg, prepared.graph, &mut cache);
+        // Same residency mode as the simulating backends, and the same
+        // typed rejection of infeasible configurations — phase 1 of the
+        // sweep screens grid points through this path.
+        let prediction = model::try_predict_graph_cached(
+            &prepared.cfg,
+            prepared.graph,
+            prepared.tuning.residency,
+            &mut cache,
+        )
+        .map_err(VtaError::Config)?;
         drop(cache);
         let layer_stats = prediction
             .layers

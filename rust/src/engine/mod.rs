@@ -211,11 +211,20 @@ pub struct Tuning {
     pub tps: bool,
     /// Improved double buffering (eliminate redundant input loads).
     pub dbuf_reuse: bool,
+    /// Cross-layer scratchpad residency heuristic (DESIGN.md §Residency
+    /// planner). Purely a timing/counter optimization: outputs are
+    /// bit-identical at every setting.
+    pub residency: crate::compiler::residency::ResidencyMode,
 }
 
 impl Default for Tuning {
     fn default() -> Tuning {
-        Tuning { trace: false, tps: true, dbuf_reuse: true }
+        Tuning {
+            trace: false,
+            tps: true,
+            dbuf_reuse: true,
+            residency: crate::compiler::residency::ResidencyMode::default(),
+        }
     }
 }
 
@@ -594,6 +603,12 @@ impl EngineBuilder {
     /// Improved double buffering (`false` = original TVM behaviour).
     pub fn dbuf_reuse(mut self, on: bool) -> EngineBuilder {
         self.tuning.dbuf_reuse = on;
+        self
+    }
+
+    /// Cross-layer scratchpad residency heuristic (default LRU).
+    pub fn residency(mut self, mode: crate::compiler::residency::ResidencyMode) -> EngineBuilder {
+        self.tuning.residency = mode;
         self
     }
 

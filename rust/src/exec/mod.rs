@@ -32,6 +32,15 @@ pub struct ExecCounters {
     pub load_bytes_uop: u64,
     pub store_bytes: u64,
     pub pad_tiles: u64,
+    /// DRAM tiles a load took from a residency-plan-resident region
+    /// (the consumer hit hot data instead of paying the DMA).
+    pub resident_tile_hits: u64,
+    /// Bytes of DMA traffic elided by the residency plan (both the
+    /// loads counted by `resident_tile_hits` and elided stores).
+    /// Deliberately *not* part of `load_bytes_*`/`store_bytes`: those
+    /// stay "bytes actually moved", so Fig 10/11-style traffic numbers
+    /// shrink when residency is on.
+    pub dma_bytes_elided: u64,
 }
 
 impl ExecCounters {
@@ -61,6 +70,8 @@ impl ExecCounters {
             load_bytes_uop,
             store_bytes,
             pad_tiles,
+            resident_tile_hits,
+            dma_bytes_elided,
         } = *other;
         self.insn_count += insn_count;
         self.gemm_ops += gemm_ops;
@@ -73,6 +84,8 @@ impl ExecCounters {
         self.load_bytes_uop += load_bytes_uop;
         self.store_bytes += store_bytes;
         self.pad_tiles += pad_tiles;
+        self.resident_tile_hits += resident_tile_hits;
+        self.dma_bytes_elided += dma_bytes_elided;
     }
 
     /// Field-wise difference `self - before` (per-layer deltas; counters
@@ -90,6 +103,8 @@ impl ExecCounters {
             load_bytes_uop: self.load_bytes_uop - before.load_bytes_uop,
             store_bytes: self.store_bytes - before.store_bytes,
             pad_tiles: self.pad_tiles - before.pad_tiles,
+            resident_tile_hits: self.resident_tile_hits - before.resident_tile_hits,
+            dma_bytes_elided: self.dma_bytes_elided - before.dma_bytes_elided,
         }
     }
 
@@ -109,6 +124,8 @@ impl ExecCounters {
             load_bytes_uop,
             store_bytes,
             pad_tiles,
+            resident_tile_hits,
+            dma_bytes_elided,
         } = *self;
         obj([
             ("insn_count", Json::Int(insn_count as i64)),
@@ -122,13 +139,15 @@ impl ExecCounters {
             ("load_bytes_uop", Json::Int(load_bytes_uop as i64)),
             ("store_bytes", Json::Int(store_bytes as i64)),
             ("pad_tiles", Json::Int(pad_tiles as i64)),
+            ("resident_tile_hits", Json::Int(resident_tile_hits as i64)),
+            ("dma_bytes_elided", Json::Int(dma_bytes_elided as i64)),
         ])
     }
 
     /// The exact key set [`ExecCounters::to_json`] emits, in field
     /// order. Public so serialization tests can mutate records
     /// field-by-field.
-    pub const JSON_FIELDS: [&'static str; 11] = [
+    pub const JSON_FIELDS: [&'static str; 13] = [
         "insn_count",
         "gemm_ops",
         "macs",
@@ -140,6 +159,8 @@ impl ExecCounters {
         "load_bytes_uop",
         "store_bytes",
         "pad_tiles",
+        "resident_tile_hits",
+        "dma_bytes_elided",
     ];
 
     /// Inverse of [`ExecCounters::to_json`]; `None` on any missing,
@@ -169,6 +190,8 @@ impl ExecCounters {
             load_bytes_uop: int("load_bytes_uop")?,
             store_bytes: int("store_bytes")?,
             pad_tiles: int("pad_tiles")?,
+            resident_tile_hits: int("resident_tile_hits")?,
+            dma_bytes_elided: int("dma_bytes_elided")?,
         })
     }
 }
@@ -193,6 +216,14 @@ pub struct CoreState {
     /// tensor data (the invariant `rust/tests/memo_correctness.rs`
     /// enforces).
     pub timing_only: bool,
+    /// Residency-plan elided DRAM byte ranges `[start, end)`. A memory
+    /// transfer wholly contained in one range is *elided*: executed
+    /// functionally as always (digests cannot change), but its bytes
+    /// are redirected into `dma_bytes_elided` / `resident_tile_hits`
+    /// instead of the `load_bytes_*` / `store_bytes` traffic counters,
+    /// and tsim gives it zero DMA occupancy. The runtime sets this per
+    /// layer from the [`crate::compiler::residency`] plan.
+    pub elided: Vec<(u64, u64)>,
 }
 
 impl CoreState {
@@ -208,7 +239,33 @@ impl CoreState {
             layout,
             cfg: cfg.clone(),
             timing_only: false,
+            elided: Vec::new(),
         }
+    }
+
+    /// Replace the elided-transfer ranges (byte addresses, `[start,
+    /// end)`). Counters must stay pure functions of the instruction
+    /// stream and this set — never of tensor data — so timing-only and
+    /// functional runs agree under any plan.
+    pub fn set_elided_ranges(&mut self, ranges: Vec<(u64, u64)>) {
+        self.elided = ranges;
+    }
+
+    /// Is this transfer's whole DRAM byte span inside one elided
+    /// range? Pure-padding transfers (no DRAM tiles) never elide.
+    /// Public so tsim can give elided transfers zero DMA occupancy
+    /// with the exact same predicate the counters use.
+    pub fn transfer_elided(&self, m: &MemInsn, tile_bytes: usize) -> bool {
+        if self.elided.is_empty() || m.dram_tiles() == 0 {
+            return false;
+        }
+        let tb = tile_bytes as u64;
+        let start = m.dram_base as u64 * tb;
+        let end = (m.dram_base as u64
+            + (m.y_size as u64 - 1) * m.x_stride as u64
+            + m.x_size as u64)
+            * tb;
+        self.elided.iter().any(|&(s, e)| start >= s && end <= e)
     }
 
     /// Zero the architectural state in place, keeping every allocation:
@@ -222,6 +279,7 @@ impl CoreState {
         self.acc.fill(0);
         self.out.fill(0);
         self.counters = ExecCounters::default();
+        self.elided.clear();
     }
 
     /// Execute one instruction's full architectural effect.
@@ -280,12 +338,20 @@ impl CoreState {
         // tile count is `sram_tiles - dram_tiles` by construction.
         self.counters.pad_tiles += m.sram_tiles() - m.dram_tiles();
         let dram_bytes = m.dram_tiles() * tile_bytes as u64;
-        match m.buffer {
-            BufferId::Inp => self.counters.load_bytes_inp += dram_bytes,
-            BufferId::Wgt => self.counters.load_bytes_wgt += dram_bytes,
-            BufferId::Acc | BufferId::Acc8 => self.counters.load_bytes_acc += dram_bytes,
-            BufferId::Uop => self.counters.load_bytes_uop += dram_bytes,
-            BufferId::Out => {}
+        if self.transfer_elided(m, tile_bytes) {
+            // Residency hit: the data is hot, no DMA is paid. Still
+            // executed functionally below — elision is a counter and
+            // timing property only.
+            self.counters.resident_tile_hits += m.dram_tiles();
+            self.counters.dma_bytes_elided += dram_bytes;
+        } else {
+            match m.buffer {
+                BufferId::Inp => self.counters.load_bytes_inp += dram_bytes,
+                BufferId::Wgt => self.counters.load_bytes_wgt += dram_bytes,
+                BufferId::Acc | BufferId::Acc8 => self.counters.load_bytes_acc += dram_bytes,
+                BufferId::Uop => self.counters.load_bytes_uop += dram_bytes,
+                BufferId::Out => {}
+            }
         }
         if self.timing_only {
             return;
@@ -390,7 +456,14 @@ impl CoreState {
             m.sram_base as usize + m.dram_tiles() as usize <= depth,
             "STORE overflows OUT scratchpad"
         );
-        self.counters.store_bytes += m.dram_tiles() * tile_bytes as u64;
+        if self.transfer_elided(m, tile_bytes) {
+            // Elided store: every consumer takes this output hot, so
+            // the DRAM write-back is free (still performed
+            // functionally below).
+            self.counters.dma_bytes_elided += m.dram_tiles() * tile_bytes as u64;
+        } else {
+            self.counters.store_bytes += m.dram_tiles() * tile_bytes as u64;
+        }
         if self.timing_only {
             return;
         }
@@ -1081,6 +1154,58 @@ mod tests {
             st.counters
         };
         assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn elided_transfers_redirect_counters_not_data() {
+        // A load/store inside an elided range must execute its full
+        // functional effect while counting into the elided counters
+        // instead of the traffic counters.
+        let (mut st, mut dram) = setup();
+        let tile = st.cfg.inp_tile_bytes();
+        let r = dram.alloc(4 * tile, tile);
+        let data: Vec<i8> = (0..(4 * tile) as i32).map(|v| (v % 13 - 6) as i8).collect();
+        dram.write_i8(r, &data);
+        st.set_elided_ranges(vec![(r.addr as u64, (r.addr + r.len) as u64)]);
+        st.execute(&load_insn(BufferId::Inp, 0, r.tile_base(tile), 4), &mut dram);
+        assert_eq!(&st.inp[..4 * tile], &data[..], "functional effect unchanged");
+        assert_eq!(st.counters.load_bytes_inp, 0);
+        assert_eq!(st.counters.resident_tile_hits, 4);
+        assert_eq!(st.counters.dma_bytes_elided, (4 * tile) as u64);
+        // A load outside the range pays as usual.
+        let r2 = dram.alloc(2 * tile, tile);
+        dram.write_i8(r2, &data[..2 * tile]);
+        st.execute(&load_insn(BufferId::Inp, 4, r2.tile_base(tile), 2), &mut dram);
+        assert_eq!(st.counters.load_bytes_inp, (2 * tile) as u64);
+        // Elided store: data lands in DRAM, bytes land in elided.
+        let out_tile = st.cfg.out_tile_bytes();
+        let n = st.cfg.acc_tile_elems();
+        st.out[..n].fill(9);
+        let ro = dram.alloc(out_tile, out_tile);
+        st.set_elided_ranges(vec![(ro.addr as u64, (ro.addr + ro.len) as u64)]);
+        st.execute(
+            &Insn::Mem(MemInsn {
+                opcode: Opcode::Store,
+                deps: DepFlags::NONE,
+                buffer: BufferId::Out,
+                sram_base: 0,
+                dram_base: ro.tile_base(out_tile),
+                y_size: 1,
+                x_size: 1,
+                x_stride: 1,
+                y_pad0: 0,
+                y_pad1: 0,
+                x_pad0: 0,
+                x_pad1: 0,
+                pad_value: 0,
+            }),
+            &mut dram,
+        );
+        assert_eq!(st.counters.store_bytes, 0);
+        assert!(dram.read_i8(ro).iter().all(|&v| v == 9), "store still writes through");
+        // Reset clears the elided set with the rest of the state.
+        st.reset();
+        assert!(st.elided.is_empty());
     }
 
     #[test]

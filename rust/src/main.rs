@@ -17,6 +17,7 @@
 
 use std::path::Path;
 use vta::analysis::area;
+use vta::compiler::residency::ResidencyMode;
 use vta::config::{presets, VtaConfig};
 use vta::engine::{BackendKind, Engine, EvalRequest};
 use vta::floorplan;
@@ -38,6 +39,8 @@ fn usage() -> ! {
                       [--backend fsim|tsim|timing|model] (the fidelity ladder: behavioral,\n\
                         cycle-accurate, timing-only, analytical estimate)\n\
                       [--hw 224] [--seed 1] [--no-tps] [--no-dbuf] [--trace]\n\
+                      [--residency off|lru|belady|dtr] (cross-layer scratchpad residency\n\
+                        planner; default lru — outputs are bit-identical at every setting)\n\
            repro      pipelining|ablation|fig2|fig3|fig10|fig11|fig12|fig13|all [--quick] [--out results]\n\
                       [--jobs N]  (fig13 runs on the parallel sweep engine)\n\
                       [--two-phase [--prune-epsilon E]]  (fig13: model-pruned grid, tsim-measured front)\n\
@@ -50,6 +53,8 @@ fn usage() -> ! {
                         predicted-front survivors — the reported front stays 100% measured)\n\
                       [--prune-epsilon E] (band width; implies --two-phase; default 1.0)\n\
                       [--no-prune] (force full evaluation, e.g. for model calibration)\n\
+                      [--residency off|lru|belady|dtr] (per-point residency mode; part of\n\
+                        every cache key — infeasible points are reported, not dropped)\n\
                       grid: [--dense] [--blocks 16,32,64] [--axi 8,16,32,64] [--scales 1,2,4]\n\
                       [--batch 1] [--net resnet18|...|mobilenet|micro] [--hw 224]\n\
                       [--workloads resnet18@224,mobilenet@56] [--seeds 7,8] [--graph-seed 1]\n\
@@ -60,7 +65,7 @@ fn usage() -> ! {
                       [--requests 256] [--arrival poisson:500|uniform:1000] [--seed 42]\n\
                       [--replay trace.jsonl] [--save-trace trace.jsonl] (recorded traces)\n\
                       [--clock-mhz 100] [--overhead-us 50] [--no-memo] [--graph-seed 1]\n\
-                      [--out serve_report.json]\n\
+                      [--residency off|lru|belady|dtr] [--out serve_report.json]\n\
                       fleet: [--fleet] [--fleet-configs tiny,large,b1-i32-o32-s2-m32,...]\n\
                       [--fleet-from-sweep cache.jsonl [--fleet-max 4]] (Pareto-point devices)\n\
                       [--route earliest|least-loaded|cheapest] (deadline-aware routing)\n\
@@ -119,18 +124,28 @@ fn parse_backend(args: &Args, default: &str) -> BackendKind {
     })
 }
 
+fn parse_residency(args: &Args) -> ResidencyMode {
+    let name = args.get_or("residency", ResidencyMode::default().cli_name());
+    ResidencyMode::parse(name).unwrap_or_else(|| {
+        eprintln!("unknown residency mode '{name}' (expected off|lru|belady|dtr)");
+        std::process::exit(2);
+    })
+}
+
 fn cmd_run(args: &Args) {
     let cfg = load_config(args);
     let net = args.get_or("net", "resnet18");
     let hw = args.get_usize("hw", 224);
     let seed = args.get_u64("seed", 1);
     let backend = parse_backend(args, "tsim");
+    let residency = parse_residency(args);
     let graph = build_net(net, hw, seed);
 
     println!(
-        "running {net} (input {hw}x{hw}) on {} / {backend} ({} fidelity)",
+        "running {net} (input {hw}x{hw}) on {} / {backend} ({} fidelity, residency {})",
         cfg.tag(),
-        backend.fidelity()
+        backend.fidelity(),
+        residency.cli_name()
     );
     let start = std::time::Instant::now();
     let engine = Engine::for_config(&cfg)
@@ -138,6 +153,7 @@ fn cmd_run(args: &Args) {
         .trace(args.has_flag("trace"))
         .dbuf_reuse(!args.has_flag("no-dbuf"))
         .tps(!args.has_flag("no-tps"))
+        .residency(residency)
         .build()
         .unwrap_or_else(|e| {
             eprintln!("error: {e}");
@@ -191,10 +207,19 @@ fn cmd_run(args: &Args) {
             stats::si(r.vme.bytes_read as f64),
             stats::si(r.vme.bytes_written as f64),
         );
+        // Raw integers on purpose: CI greps these to assert the planner
+        // elides traffic without changing the functional digest.
+        println!(
+            "residency: resident tile hits {}  dma bytes elided {}",
+            r.exec.resident_tile_hits, r.exec.dma_bytes_elided
+        );
     }
     println!("scaled area: {:.2}", area::scaled_area(&cfg));
     match &eval.output {
-        Some(out) => println!("output head: {:?}", &out[..out.len().min(8)]),
+        Some(out) => {
+            println!("output head: {:?}", &out[..out.len().min(8)]);
+            println!("output digest: {:#018x}", vta::util::hash::fnv1a64(&format!("{out:?}")));
+        }
         None => println!("output: none (the {} backend computes no tensors)", eval.backend),
     }
 }
@@ -349,6 +374,7 @@ fn cmd_sweep(args: &Args) {
         two_phase: two_phase.then(|| sweep::TwoPhaseOptions {
             epsilon: args.get_f64("prune-epsilon", vta::model::DEFAULT_PRUNE_EPSILON),
         }),
+        residency: parse_residency(args),
     };
     // "up to": the engine spawns min(workers, uncached points), which
     // is only known once the cache has been consulted.
@@ -406,6 +432,20 @@ fn cmd_sweep(args: &Args) {
         outcome.cached,
         stats::fmt_ns(wall.as_nanos() as f64),
     );
+    if !outcome.infeasible.is_empty() {
+        println!(
+            "{} infeasible point(s) screened out (config cannot tile the workload):",
+            outcome.infeasible.len()
+        );
+        for p in &outcome.infeasible {
+            println!(
+                "  {:<22} {:<14} {}",
+                jobs_list[p.index].cfg.tag(),
+                jobs_list[p.index].workload.id(),
+                p.reason
+            );
+        }
+    }
     if let Some(tp) = &opts.two_phase {
         println!(
             "two-phase: {} grid points scored by the model, {} pruned, {} evaluated \
@@ -470,6 +510,18 @@ fn cmd_sweep(args: &Args) {
             ])
         })
         .collect();
+    let infeasible: Vec<Json> = outcome
+        .infeasible
+        .iter()
+        .map(|p| {
+            obj([
+                ("job", Json::Int(p.index as i64)),
+                ("config", Json::Str(jobs_list[p.index].cfg.tag())),
+                ("workload", Json::Str(jobs_list[p.index].workload.id())),
+                ("reason", Json::Str(p.reason.clone())),
+            ])
+        })
+        .collect();
     let summary = obj([
         ("points", Json::Array(points)),
         (
@@ -481,6 +533,7 @@ fn cmd_sweep(args: &Args) {
             Json::Array(outcome.job_indices.iter().map(|&i| Json::Int(i as i64)).collect()),
         ),
         ("pruned_points", Json::Array(pruned)),
+        ("infeasible_points", Json::Array(infeasible)),
         ("cached", Json::Int(outcome.cached as i64)),
         ("simulated", Json::Int(outcome.simulated as i64)),
     ]);
@@ -520,6 +573,7 @@ fn cmd_serve(args: &Args) {
         .deadline_us((deadline > 0).then_some(deadline))
         .clock_mhz(args.get_u64("clock-mhz", 100))
         .dispatch_overhead_us(args.get_u64("overhead-us", 50))
+        .residency(parse_residency(args))
         .build()
         .unwrap_or_else(|e| {
             eprintln!("error: {e}");

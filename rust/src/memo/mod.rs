@@ -46,8 +46,11 @@ use std::sync::Mutex;
 /// cleanly instead of mixing incompatible results.
 ///
 /// v1 = the PR-1 sweep cache (implicit, unversioned keys);
-/// v2 = this scheme (layer memo + explicit schema fields).
-pub const SIM_SCHEMA_VERSION: u32 = 2;
+/// v2 = this scheme (layer memo + explicit schema fields);
+/// v3 = residency planner: signatures carry per-layer residency bits,
+///      [`ExecCounters`] grew `resident_tile_hits` / `dma_bytes_elided`,
+///      and elided transfers changed tsim DMA timing.
+pub const SIM_SCHEMA_VERSION: u32 = 3;
 
 /// Everything the runtime needs to splice a cached layer into a session
 /// without simulating it: cycles consumed, program shape (for
@@ -237,6 +240,8 @@ mod tests {
                 load_bytes_uop: 16,
                 store_bytes: 128,
                 pad_tiles: 9,
+                resident_tile_hits: 6,
+                dma_bytes_elided: 384,
             },
         }
     }

@@ -13,7 +13,14 @@
 //!   stride, padding, requantization shift, ReLU);
 //! * for convolutions, the chosen [`Tiling`] — the schedule, including
 //!   the improved-double-buffering flag, is part of the program
-//!   identity (so `--no-tps` / `--no-dbuf` runs key separately).
+//!   identity (so `--no-tps` / `--no-dbuf` runs key separately);
+//! * the layer's residency bits
+//!   ([`NodePlan::sig_bits`](crate::compiler::residency::NodePlan::sig_bits)):
+//!   a layer executed against hot (elided-load) inputs or with an
+//!   elided store has different DMA counters and cycles than the cold
+//!   variant, so the two must never share a memo entry. Bits of 0 are
+//!   exactly the `--residency off` program, which keeps off-mode and
+//!   all-cold plans sharing entries.
 //!
 //! Deliberately excluded: DRAM base addresses (instructions encode them
 //! but neither timing nor byte counters depend on them), tensor data
@@ -78,13 +85,14 @@ fn config_hasher(cfg: &VtaConfig) -> Fnv {
 }
 
 /// Signature of a convolution (or dense — the spec *is* the identity)
-/// lowered with `tiling`.
+/// lowered with `tiling` under residency bits `res_bits`.
 pub fn conv_sig(
     cfg: &VtaConfig,
     spec: &ConvSpec,
     shift: u32,
     relu: bool,
     tiling: &Tiling,
+    res_bits: u8,
 ) -> LayerSig {
     let mut h = config_hasher(cfg);
     h.write_u8(TAG_CONV);
@@ -100,11 +108,12 @@ pub fn conv_sig(
         h.write_u64(v as u64);
     }
     h.write_bool(tiling.reuse_inp);
+    h.write_u8(res_bits);
     LayerSig(h.finish())
 }
 
 /// Signature of a depthwise-convolution layer.
-pub fn depthwise_sig(cfg: &VtaConfig, p: &DepthwiseParams) -> LayerSig {
+pub fn depthwise_sig(cfg: &VtaConfig, p: &DepthwiseParams, res_bits: u8) -> LayerSig {
     let mut h = config_hasher(cfg);
     h.write_u8(TAG_DEPTHWISE);
     for v in [p.c_tiles, p.h, p.w, p.k, p.stride, p.pad] {
@@ -112,12 +121,13 @@ pub fn depthwise_sig(cfg: &VtaConfig, p: &DepthwiseParams) -> LayerSig {
     }
     h.write_u32(p.shift);
     h.write_bool(p.relu);
+    h.write_u8(res_bits);
     LayerSig(h.finish())
 }
 
 /// Signature of a pooling layer (max or average — `is_max`/`shift`
 /// distinguish them, covering `GlobalAvgPool` as well).
-pub fn pool_sig(cfg: &VtaConfig, p: &PoolParams) -> LayerSig {
+pub fn pool_sig(cfg: &VtaConfig, p: &PoolParams, res_bits: u8) -> LayerSig {
     let mut h = config_hasher(cfg);
     h.write_u8(TAG_POOL);
     for v in [p.c_tiles, p.h, p.w, p.k, p.stride, p.pad] {
@@ -125,15 +135,17 @@ pub fn pool_sig(cfg: &VtaConfig, p: &PoolParams) -> LayerSig {
     }
     h.write_bool(p.is_max);
     h.write_u32(p.shift);
+    h.write_u8(res_bits);
     LayerSig(h.finish())
 }
 
 /// Signature of a residual-add layer over `tiles` activation tiles.
-pub fn add_sig(cfg: &VtaConfig, tiles: usize, relu: bool) -> LayerSig {
+pub fn add_sig(cfg: &VtaConfig, tiles: usize, relu: bool, res_bits: u8) -> LayerSig {
     let mut h = config_hasher(cfg);
     h.write_u8(TAG_ADD);
     h.write_u64(tiles as u64);
     h.write_bool(relu);
+    h.write_u8(res_bits);
     LayerSig(h.finish())
 }
 
@@ -153,31 +165,68 @@ mod tests {
     #[test]
     fn conv_sig_is_stable_and_ignores_config_name() {
         let cfg = presets::default_config();
-        let a = conv_sig(&cfg, &spec(), 5, true, &tiling());
-        assert_eq!(a, conv_sig(&cfg, &spec(), 5, true, &tiling()));
+        let a = conv_sig(&cfg, &spec(), 5, true, &tiling(), 0);
+        assert_eq!(a, conv_sig(&cfg, &spec(), 5, true, &tiling(), 0));
         let mut renamed = cfg.clone();
         renamed.name = "something-else".into();
-        assert_eq!(a, conv_sig(&renamed, &spec(), 5, true, &tiling()), "name is cosmetic");
+        assert_eq!(a, conv_sig(&renamed, &spec(), 5, true, &tiling(), 0), "name is cosmetic");
     }
 
     #[test]
     fn conv_sig_discriminates_perf_fields() {
         let cfg = presets::default_config();
-        let base = conv_sig(&cfg, &spec(), 5, true, &tiling());
+        let base = conv_sig(&cfg, &spec(), 5, true, &tiling(), 0);
         let mut axi = cfg.clone();
         axi.axi_bytes = 64;
-        assert_ne!(base, conv_sig(&axi, &spec(), 5, true, &tiling()));
+        assert_ne!(base, conv_sig(&axi, &spec(), 5, true, &tiling(), 0));
         let mut pipe = cfg.clone();
         pipe.gemm_pipelined = false;
-        assert_ne!(base, conv_sig(&pipe, &spec(), 5, true, &tiling()));
+        assert_ne!(base, conv_sig(&pipe, &spec(), 5, true, &tiling(), 0));
         let mut s2 = spec();
         s2.h = 16;
-        assert_ne!(base, conv_sig(&cfg, &s2, 5, true, &tiling()));
-        assert_ne!(base, conv_sig(&cfg, &spec(), 6, true, &tiling()));
-        assert_ne!(base, conv_sig(&cfg, &spec(), 5, false, &tiling()));
+        assert_ne!(base, conv_sig(&cfg, &s2, 5, true, &tiling(), 0));
+        assert_ne!(base, conv_sig(&cfg, &spec(), 6, true, &tiling(), 0));
+        assert_ne!(base, conv_sig(&cfg, &spec(), 5, false, &tiling(), 0));
         let mut t2 = tiling();
         t2.reuse_inp = false;
-        assert_ne!(base, conv_sig(&cfg, &spec(), 5, true, &t2));
+        assert_ne!(base, conv_sig(&cfg, &spec(), 5, true, &t2, 0));
+    }
+
+    #[test]
+    fn residency_bits_are_part_of_the_identity() {
+        // A hot-input or elided-store lowering must never share a memo
+        // entry with the cold variant: its DMA counters and cycles
+        // differ.
+        let cfg = presets::default_config();
+        for bits in 1u8..=7 {
+            assert_ne!(
+                conv_sig(&cfg, &spec(), 5, true, &tiling(), 0),
+                conv_sig(&cfg, &spec(), 5, true, &tiling(), bits)
+            );
+            assert_ne!(add_sig(&cfg, 2, false, 0), add_sig(&cfg, 2, false, bits));
+        }
+        let dw = DepthwiseParams {
+            c_tiles: 2,
+            h: 8,
+            w: 8,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            shift: 0,
+            relu: false,
+        };
+        assert_ne!(depthwise_sig(&cfg, &dw, 0), depthwise_sig(&cfg, &dw, 1));
+        let pl = PoolParams {
+            c_tiles: 2,
+            h: 8,
+            w: 8,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            is_max: true,
+            shift: 0,
+        };
+        assert_ne!(pool_sig(&cfg, &pl, 0), pool_sig(&cfg, &pl, 5));
     }
 
     #[test]
@@ -205,7 +254,7 @@ mod tests {
             is_max: false,
             shift: 0,
         };
-        assert_ne!(depthwise_sig(&cfg, &dw), pool_sig(&cfg, &pl));
-        assert_ne!(add_sig(&cfg, 2, false), pool_sig(&cfg, &pl));
+        assert_ne!(depthwise_sig(&cfg, &dw, 0), pool_sig(&cfg, &pl, 0));
+        assert_ne!(add_sig(&cfg, 2, false, 0), pool_sig(&cfg, &pl, 0));
     }
 }

@@ -43,8 +43,9 @@ use crate::analysis::roofline::Roofline;
 use crate::compiler::depthwise::DepthwiseParams;
 use crate::compiler::eltwise::PoolParams;
 use crate::compiler::graph::{Graph, Op};
+use crate::compiler::residency::{self, ResidencyMode, RECOMPUTE_SIG_BITS};
 use crate::compiler::tps::{self, ConvSpec, Tiling};
-use crate::config::{VtaConfig, INSN_BYTES};
+use crate::config::{ConfigError, VtaConfig, INSN_BYTES};
 use crate::memo::sig;
 use crate::sim::{ALU_PIPE_FILL, GEMM_PIPE_FILL};
 use crate::util::bitfield::clog2;
@@ -131,13 +132,23 @@ fn requant_insns(shift: u32, relu: bool) -> u64 {
 
 /// Predicted cycles of a convolution (or dense: a 1×1 conv spec)
 /// lowered with `tiling` — mirrors `compiler::conv::lower_conv`.
+///
+/// `res_bits` are the layer's residency bits
+/// ([`NodePlan::sig_bits`](crate::compiler::residency::NodePlan::sig_bits)):
+/// a hot input (bit 0) drops the input-DMA byte and row terms, an
+/// elided store (bit 2) drops the write channel. Only DMA terms move —
+/// compute work is identical in every residency variant, which is what
+/// keeps the model's calibration band intact.
 pub fn conv_estimate(
     cfg: &VtaConfig,
     spec: &ConvSpec,
     shift: u32,
     relu: bool,
     t: &Tiling,
+    res_bits: u8,
 ) -> LayerEstimate {
+    let hot_in = res_bits & 1 != 0;
+    let elide_out = res_bits & 4 != 0;
     let w = cfg.axi_bytes as u64;
     let lat = cfg.dram_latency;
     let g = t.geom(spec, cfg);
@@ -162,8 +173,8 @@ pub fn conv_estimate(
     let inp_tile = cfg.inp_tile_bytes() as u64;
     let wgt_tile = cfg.wgt_tile_bytes() as u64;
     let out_tile = cfg.out_tile_bytes() as u64;
-    let inp_bytes = di * sum_ih * sum_iw * inp_factor * inp_tile;
-    let inp_rows = di * tw * sum_ih * inp_factor;
+    let inp_bytes = if hot_in { 0 } else { di * sum_ih * sum_iw * inp_factor * inp_tile };
+    let inp_rows = if hot_in { 0 } else { di * tw * sum_ih * inp_factor };
     let wgt_bytes = th * tw * dout * di * kh * kw * wgt_tile;
     let wgt_rows = th * tw * tci * dout;
     // Uop stream (deduplicated by the builder): the TPS feasibility
@@ -191,14 +202,16 @@ pub fn conv_estimate(
         + alu_ops * alu_ii(cfg, true)
         + uop_dma;
 
-    // ---- write channel ----
-    let write_cycles = (dout * oh * ow * out_tile).div_ceil(w) + tw * dout * oh;
+    // ---- write channel (zero-occupancy when the store is elided) ----
+    let write_cycles =
+        if elide_out { 0 } else { (dout * oh * ow * out_tile).div_ceil(w) + tw * dout * oh };
 
     // ---- serialization correction: fill the first input/weight block
     // before compute starts; drain the last output block after. ----
-    let first_block =
-        (g.inp_block_tiles as u64 * inp_tile + g.wgt_block_tiles as u64 * wgt_tile).div_ceil(w);
-    let last_block = (g.acc_block_tiles as u64 * out_tile).div_ceil(w);
+    let first_inp = if hot_in { 0 } else { g.inp_block_tiles as u64 * inp_tile };
+    let first_block = (first_inp + g.wgt_block_tiles as u64 * wgt_tile).div_ceil(w);
+    let last_block =
+        if elide_out { 0 } else { (g.acc_block_tiles as u64 * out_tile).div_ceil(w) };
     let serial_cycles = 2 * lat + first_block + last_block;
 
     let mut est = LayerEstimate {
@@ -218,8 +231,13 @@ pub fn conv_estimate(
 
 /// Predicted cycles of a depthwise layer — mirrors
 /// `compiler::depthwise::lower_depthwise` (MOV/MUL/ADD per tap on the
-/// ALU; all DMA runs on the compute module, so it serializes).
-pub fn depthwise_estimate(cfg: &VtaConfig, p: &DepthwiseParams) -> LayerEstimate {
+/// ALU; all DMA runs on the compute module, so it serializes). With a
+/// hot input (`res_bits` bit 0) the activation-patch DMA drops out —
+/// the per-iteration tap loads stay, their DRAM region is never
+/// residency-elided.
+pub fn depthwise_estimate(cfg: &VtaConfig, p: &DepthwiseParams, res_bits: u8) -> LayerEstimate {
+    let hot_in = res_bits & 1 != 0;
+    let elide_out = res_bits & 4 != 0;
     let w = cfg.axi_bytes as u64;
     let lat = cfg.dram_latency;
     let (oh, ow) = (p.oh() as u64, p.ow() as u64);
@@ -244,8 +262,10 @@ pub fn depthwise_estimate(cfg: &VtaConfig, p: &DepthwiseParams) -> LayerEstimate
 
     let n_req = requant_insns(p.shift, p.relu);
     let n_insns = iters * (2 + 1 + 3 * taps + n_req + 1) + 4;
-    let read_bytes = ct * (sum_ih * iw_c + n_chunks * taps) * acc8_tile;
-    let read_rows = ct * (sum_ih + n_chunks);
+    let inp_bytes = if hot_in { 0 } else { ct * sum_ih * iw_c * acc8_tile };
+    let inp_rows = if hot_in { 0 } else { ct * sum_ih };
+    let read_bytes = inp_bytes + ct * n_chunks * taps * acc8_tile;
+    let read_rows = inp_rows + ct * n_chunks;
     let dma_beats = (read_bytes + n_insns * INSN_BYTES as u64).div_ceil(w) + read_rows;
 
     let uop_count = (2 * (3 * taps + n_req + 1) * ow).min(cfg.uop_depth as u64);
@@ -259,22 +279,31 @@ pub fn depthwise_estimate(cfg: &VtaConfig, p: &DepthwiseParams) -> LayerEstimate
         + 3 * taps * elems * alu_ii(cfg, false)
         + n_req * elems * alu_ii(cfg, true)
         + dma_beats
-        + 2 * iters * lat // two loads per iteration, each exposing latency
+        // Patch + tap loads each expose latency; an elided patch load
+        // completes without touching DRAM.
+        + (2 - u64::from(hot_in)) * iters * lat
         + lat
         + uop_bytes.div_ceil(w);
 
     LayerEstimate {
         read_cycles: 0,
         compute_cycles,
-        write_cycles: (ct * oh * ow * out_tile).div_ceil(w) + ct * oh,
+        write_cycles: if elide_out {
+            0
+        } else {
+            (ct * oh * ow * out_tile).div_ceil(w) + ct * oh
+        },
         serial_cycles: lat,
         serialized: false,
     }
 }
 
 /// Predicted cycles of a pooling layer — mirrors
-/// `compiler::eltwise::lower_pool`.
-pub fn pool_estimate(cfg: &VtaConfig, p: &PoolParams) -> LayerEstimate {
+/// `compiler::eltwise::lower_pool`. Residency bits as in
+/// [`conv_estimate`].
+pub fn pool_estimate(cfg: &VtaConfig, p: &PoolParams, res_bits: u8) -> LayerEstimate {
+    let hot_in = res_bits & 1 != 0;
+    let elide_out = res_bits & 4 != 0;
     let w = cfg.axi_bytes as u64;
     let lat = cfg.dram_latency;
     let (oh, ow) = (p.oh() as u64, p.ow() as u64);
@@ -300,8 +329,9 @@ pub fn pool_estimate(cfg: &VtaConfig, p: &PoolParams) -> LayerEstimate {
     let n_req = if !p.is_max && p.shift > 0 { 3 } else { 0 };
     let n_reset = u64::from(!p.is_max);
     let n_insns = iters * (1 + n_reset + taps + n_req + 1) + 4;
-    let read_bytes = ct * sum_ih * iw_c * acc8_tile;
-    let dma_beats = (read_bytes + n_insns * INSN_BYTES as u64).div_ceil(w) + ct * sum_ih;
+    let read_bytes = if hot_in { 0 } else { ct * sum_ih * iw_c * acc8_tile };
+    let read_rows = if hot_in { 0 } else { ct * sum_ih };
+    let dma_beats = (read_bytes + n_insns * INSN_BYTES as u64).div_ceil(w) + read_rows;
 
     let uop_count = (2 * (taps + n_req + 1) * ow).min(cfg.uop_depth as u64);
     let uop_bytes = uop_count * cfg.isa_layout().uop_bytes() as u64;
@@ -312,22 +342,30 @@ pub fn pool_estimate(cfg: &VtaConfig, p: &PoolParams) -> LayerEstimate {
         + taps * elems * alu_ii(cfg, false)
         + n_req * elems * alu_ii(cfg, true)
         + dma_beats
-        + iters * lat
+        + u64::from(!hot_in) * iters * lat
         + lat
         + uop_bytes.div_ceil(w);
 
     LayerEstimate {
         read_cycles: 0,
         compute_cycles,
-        write_cycles: (ct * oh * ow * out_tile).div_ceil(w) + ct * oh,
+        write_cycles: if elide_out {
+            0
+        } else {
+            (ct * oh * ow * out_tile).div_ceil(w) + ct * oh
+        },
         serial_cycles: lat,
         serialized: false,
     }
 }
 
 /// Predicted cycles of a residual add over `total_tiles` activation
-/// tiles — mirrors `compiler::eltwise::lower_add`.
-pub fn add_estimate(cfg: &VtaConfig, total_tiles: usize, relu: bool) -> LayerEstimate {
+/// tiles — mirrors `compiler::eltwise::lower_add`. Bits 0 and 1 of
+/// `res_bits` elide the two operand loads independently; bit 2 elides
+/// the store.
+pub fn add_estimate(cfg: &VtaConfig, total_tiles: usize, relu: bool, res_bits: u8) -> LayerEstimate {
+    let cold_ops = 2 - u64::from(res_bits & 1 != 0) - u64::from(res_bits & 2 != 0);
+    let elide_out = res_bits & 4 != 0;
     let w = cfg.axi_bytes as u64;
     let lat = cfg.dram_latency;
     let tiles = total_tiles as u64;
@@ -339,19 +377,20 @@ pub fn add_estimate(cfg: &VtaConfig, total_tiles: usize, relu: bool) -> LayerEst
 
     let n_alu_per = 2 + u64::from(relu); // ADD, [MAX], CLIP
     let n_insns = iters * (2 + n_alu_per + 1) + 4;
-    let dma_beats = (2 * tiles * acc8_tile + n_insns * INSN_BYTES as u64).div_ceil(w) + 2 * iters;
+    let dma_beats = (cold_ops * tiles * acc8_tile + n_insns * INSN_BYTES as u64).div_ceil(w)
+        + cold_ops * iters;
     let elems = tiles * cfg.batch as u64;
     let compute_cycles = iters * n_alu_per * ALU_PIPE_FILL
         + elems * alu_ii(cfg, false) // ADD (two-operand)
         + (n_alu_per - 1) * elems * alu_ii(cfg, true) // MAX/CLIP (immediate)
         + dma_beats
-        + 2 * iters * lat
+        + cold_ops * iters * lat
         + lat;
 
     LayerEstimate {
         read_cycles: 0,
         compute_cycles,
-        write_cycles: (tiles * out_tile).div_ceil(w) + iters,
+        write_cycles: if elide_out { 0 } else { (tiles * out_tile).div_ceil(w) + iters },
         serial_cycles: lat,
         serialized: false,
     }
@@ -375,9 +414,12 @@ pub struct GraphPrediction {
 
 /// Predict a whole network on a configuration. Mirrors
 /// [`Session::run_graph`](crate::runtime::Session)'s dispatch under the
-/// default session options (TPS tilings, improved double buffering):
-/// channel-light convolutions fall back to the CPU and predict 0 cycles,
-/// exactly as the sweep's evaluation path counts them.
+/// default session options (TPS tilings, improved double buffering, LRU
+/// residency): channel-light convolutions fall back to the CPU and
+/// predict 0 cycles, exactly as the sweep's evaluation path counts
+/// them. Panics on a configuration whose minimal tiling overflows the
+/// scratchpads — use [`try_predict_graph`] where infeasibility is a
+/// reportable outcome rather than a bug.
 pub fn predict_graph(cfg: &VtaConfig, graph: &Graph) -> GraphPrediction {
     predict_graph_cached(cfg, graph, &mut HashMap::new())
 }
@@ -385,32 +427,65 @@ pub fn predict_graph(cfg: &VtaConfig, graph: &Graph) -> GraphPrediction {
 /// [`predict_graph`] with an external per-layer cache, keyed by the
 /// layer-memo signature ([`crate::memo::sig`]) — the same identity the
 /// simulator's layer memo uses, so repeated shapes across a grid are
-/// estimated once.
+/// estimated once. Residency bits are part of the signature, so a hot
+/// and a cold instance of the same shape occupy separate entries.
 pub fn predict_graph_cached(
     cfg: &VtaConfig,
     graph: &Graph,
     cache: &mut HashMap<u64, u64>,
 ) -> GraphPrediction {
+    try_predict_graph_cached(cfg, graph, ResidencyMode::default(), cache)
+        .unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible, residency-aware prediction: an infeasible configuration is
+/// a typed [`ConfigError::Infeasible`] instead of a panic.
+pub fn try_predict_graph(
+    cfg: &VtaConfig,
+    graph: &Graph,
+    mode: ResidencyMode,
+) -> Result<GraphPrediction, ConfigError> {
+    try_predict_graph_cached(cfg, graph, mode, &mut HashMap::new())
+}
+
+/// [`try_predict_graph`] with an external cache.
+///
+/// Soundness note for the two-phase sweep (DESIGN.md §Residency
+/// planner): the prediction subtracts exactly the DMA byte terms the
+/// plan elides and nothing else, and the planner itself is a pure
+/// function of `(cfg, graph, mode)` shared with the runtime — so the
+/// model-vs-tsim error band, and therefore the ε-pruning argument,
+/// is unchanged by residency.
+pub fn try_predict_graph_cached(
+    cfg: &VtaConfig,
+    graph: &Graph,
+    mode: ResidencyMode,
+    cache: &mut HashMap<u64, u64>,
+) -> Result<GraphPrediction, ConfigError> {
     let block = cfg.block_in;
     let shapes = graph.shapes();
+    // Same planner invocation as `Session::run_graph` under the default
+    // tiling options (tps = true, dbuf_reuse = true).
+    let plan = residency::plan(cfg, graph, &shapes, mode, true, true)?;
     let mut layers = Vec::with_capacity(graph.nodes.len().saturating_sub(1));
     let mut total = 0u64;
     for (i, node) in graph.nodes.iter().enumerate().skip(1) {
         let in_shape = shapes[node.inputs[0]];
         let out_shape = shapes[i];
-        let cycles = match &node.op {
+        let bits = plan.sig_bits(i);
+        let mut cycles = match &node.op {
             Op::Input => unreachable!("input nodes are index 0 only"),
             Op::Conv { shift, relu, .. } => {
                 let spec = graph.conv_spec(i, &shapes);
                 if spec.c_in < block {
                     0 // CPU fallback: contributes no accelerator cycles
                 } else {
-                    conv_cached(cfg, &spec, *shift, *relu, cache)
+                    conv_cached(cfg, &spec, *shift, *relu, bits, cache)?
                 }
             }
             Op::Dense { shift, relu, .. } => {
                 let spec = graph.conv_spec(i, &shapes);
-                conv_cached(cfg, &spec, *shift, *relu, cache)
+                conv_cached(cfg, &spec, *shift, *relu, bits, cache)?
             }
             Op::Depthwise { k, stride, pad, shift, relu, .. } => {
                 let p = DepthwiseParams {
@@ -424,8 +499,8 @@ pub fn predict_graph_cached(
                     relu: *relu,
                 };
                 *cache
-                    .entry(sig::depthwise_sig(cfg, &p).0)
-                    .or_insert_with(|| depthwise_estimate(cfg, &p).cycles())
+                    .entry(sig::depthwise_sig(cfg, &p, bits).0)
+                    .or_insert_with(|| depthwise_estimate(cfg, &p, bits).cycles())
             }
             Op::MaxPool { k, stride, pad } => {
                 let p = PoolParams {
@@ -439,8 +514,8 @@ pub fn predict_graph_cached(
                     shift: 0,
                 };
                 *cache
-                    .entry(sig::pool_sig(cfg, &p).0)
-                    .or_insert_with(|| pool_estimate(cfg, &p).cycles())
+                    .entry(sig::pool_sig(cfg, &p, bits).0)
+                    .or_insert_with(|| pool_estimate(cfg, &p, bits).cycles())
             }
             Op::GlobalAvgPool => {
                 let p = PoolParams {
@@ -454,20 +529,32 @@ pub fn predict_graph_cached(
                     shift: clog2((in_shape.h * in_shape.w) as u64),
                 };
                 *cache
-                    .entry(sig::pool_sig(cfg, &p).0)
-                    .or_insert_with(|| pool_estimate(cfg, &p).cycles())
+                    .entry(sig::pool_sig(cfg, &p, bits).0)
+                    .or_insert_with(|| pool_estimate(cfg, &p, bits).cycles())
             }
             Op::Add { relu } => {
                 let tiles = out_shape.tiles(block);
                 *cache
-                    .entry(sig::add_sig(cfg, tiles, *relu).0)
-                    .or_insert_with(|| add_estimate(cfg, tiles, *relu).cycles())
+                    .entry(sig::add_sig(cfg, tiles, *relu, bits).0)
+                    .or_insert_with(|| add_estimate(cfg, tiles, *relu, bits).cycles())
             }
         };
+        // DTR reruns bill to the consumer that triggered them, exactly
+        // as the runtime folds rerun cycles into the consumer's
+        // `LayerStat`.
+        for &p in &plan.nodes[i].recompute {
+            let Op::Add { relu } = &graph.nodes[p].op else {
+                unreachable!("only residual adds are recomputable")
+            };
+            let tiles = shapes[p].tiles(block);
+            cycles += *cache
+                .entry(sig::add_sig(cfg, tiles, *relu, RECOMPUTE_SIG_BITS).0)
+                .or_insert_with(|| add_estimate(cfg, tiles, *relu, RECOMPUTE_SIG_BITS).cycles());
+        }
         total += cycles;
         layers.push(LayerPrediction { name: node.name.clone(), kind: node.op.kind(), cycles });
     }
-    GraphPrediction { cycles: total, layers }
+    Ok(GraphPrediction { cycles: total, layers })
 }
 
 /// Conv/dense estimate under the runtime's default tiling policy (TPS
@@ -477,15 +564,15 @@ fn conv_cached(
     spec: &ConvSpec,
     shift: u32,
     relu: bool,
+    res_bits: u8,
     cache: &mut HashMap<u64, u64>,
-) -> u64 {
+) -> Result<u64, ConfigError> {
     // Mirror Session::tiling_for under SessionOptions::default():
     // tps = true, dbuf_reuse = true.
-    let mut t = tps::search(spec, cfg, true);
-    t.reuse_inp = true;
-    *cache
-        .entry(sig::conv_sig(cfg, spec, shift, relu, &t).0)
-        .or_insert_with(|| conv_estimate(cfg, spec, shift, relu, &t).cycles())
+    let t = tps::select_tiling(spec, cfg, true, true)?;
+    Ok(*cache
+        .entry(sig::conv_sig(cfg, spec, shift, relu, &t, res_bits).0)
+        .or_insert_with(|| conv_estimate(cfg, spec, shift, relu, &t, res_bits).cycles()))
 }
 
 #[cfg(test)]
@@ -502,7 +589,7 @@ mod tests {
     fn conv_estimate_positive_and_roofline_bounded() {
         let cfg = presets::default_config();
         let t = tps::search(&c2(), &cfg, true);
-        let est = conv_estimate(&cfg, &c2(), 8, true, &t);
+        let est = conv_estimate(&cfg, &c2(), 8, true, &t, 0);
         let roof = Roofline::of(&cfg);
         assert!(est.cycles() > 0);
         assert!(
@@ -521,8 +608,8 @@ mod tests {
             // Tiling search ignores axi width, so the same tiling applies.
             assert_eq!(t, tps::search(&spec, &wide, true));
             assert!(
-                conv_estimate(&wide, &spec, 8, true, &t).cycles()
-                    <= conv_estimate(&narrow, &spec, 8, true, &t).cycles(),
+                conv_estimate(&wide, &spec, 8, true, &t, 0).cycles()
+                    <= conv_estimate(&narrow, &spec, 8, true, &t, 0).cycles(),
                 "wider memory must never increase the estimate (axi {axi})"
             );
         }
@@ -537,8 +624,8 @@ mod tests {
         slow.alu_pipelined = false;
         let t = tps::search(&spec, &fast, true);
         assert!(
-            conv_estimate(&fast, &spec, 8, true, &t).cycles()
-                < conv_estimate(&slow, &spec, 8, true, &t).cycles(),
+            conv_estimate(&fast, &spec, 8, true, &t, 0).cycles()
+                < conv_estimate(&slow, &spec, 8, true, &t, 0).cycles(),
             "pipelined units must predict strictly fewer cycles on a compute-heavy conv"
         );
     }
@@ -574,6 +661,59 @@ mod tests {
             "CPU-fallback layers must not consume cache entries (and repeated \
              shapes share one)"
         );
+    }
+
+    #[test]
+    fn residency_bits_subtract_only_dma_terms() {
+        let cfg = presets::default_config();
+        let t = tps::search(&c2(), &cfg, true);
+        let cold = conv_estimate(&cfg, &c2(), 8, true, &t, 0);
+        let hot = conv_estimate(&cfg, &c2(), 8, true, &t, 1);
+        let both = conv_estimate(&cfg, &c2(), 8, true, &t, 0b101);
+        assert_eq!(hot.compute_cycles, cold.compute_cycles, "compute must be untouched");
+        assert!(hot.read_cycles < cold.read_cycles, "hot input must shed read DMA");
+        assert_eq!(hot.write_cycles, cold.write_cycles);
+        assert_eq!(both.write_cycles, 0, "elided store occupies no write channel");
+        assert!(both.cycles() <= hot.cycles() && hot.cycles() <= cold.cycles());
+
+        let a_cold = add_estimate(&cfg, 64, true, 0);
+        let a_hot = add_estimate(&cfg, 64, true, 0b011);
+        assert!(a_hot.compute_cycles < a_cold.compute_cycles, "operand DMA rides compute");
+        assert_eq!(a_hot.write_cycles, a_cold.write_cycles);
+    }
+
+    #[test]
+    fn residency_prediction_never_exceeds_off_and_infeasible_is_typed() {
+        let cfg = presets::default_config();
+        let g = workloads::micro_resnet(cfg.block_in, 42);
+        let plan =
+            residency::plan(&cfg, &g, &g.shapes(), ResidencyMode::Lru, true, true).unwrap();
+        assert!(plan.elided_bytes > 0, "micro_resnet must elide under the default config");
+
+        let off = try_predict_graph(&cfg, &g, ResidencyMode::Off).unwrap();
+        let lru = try_predict_graph(&cfg, &g, ResidencyMode::Lru).unwrap();
+        let dtr = try_predict_graph(&cfg, &g, ResidencyMode::Dtr).unwrap();
+        assert!(
+            lru.cycles < off.cycles,
+            "planned residency must subtract DMA work (lru {} vs off {})",
+            lru.cycles,
+            off.cycles
+        );
+        for (l, o) in lru.layers.iter().zip(&off.layers) {
+            assert!(l.cycles <= o.cycles, "{}: lru layer above off", l.name);
+        }
+        assert!(dtr.cycles <= off.cycles);
+        // The infallible entry point mirrors the session default (LRU).
+        assert_eq!(predict_graph(&cfg, &g).cycles, lru.cycles);
+
+        let mut bad = cfg.clone();
+        bad.inp_depth = 1;
+        bad.wgt_depth = 1;
+        bad.acc_depth = 1;
+        assert!(matches!(
+            try_predict_graph(&bad, &g, ResidencyMode::Lru),
+            Err(ConfigError::Infeasible { .. })
+        ));
     }
 
     #[test]

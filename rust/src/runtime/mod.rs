@@ -37,6 +37,7 @@ use crate::compiler::layout::{
     pack_activation, pack_conv_weights_into, pack_depthwise_weights_into, unpack_activation,
     Shape,
 };
+use crate::compiler::residency::{self, ResidencyMode, ResidencyPlan, RECOMPUTE_SIG_BITS};
 use crate::compiler::tps::{self, Tiling};
 use crate::config::VtaConfig;
 use crate::engine::{BackendKind, VtaError};
@@ -68,6 +69,12 @@ pub struct SessionOptions {
     /// worker threads. Tsim only; incompatible with `trace` (memo hits
     /// record no activity intervals).
     pub memo: Option<Arc<LayerMemo>>,
+    /// Cross-layer scratchpad residency planning (§ DESIGN.md
+    /// Residency planner): which producer→consumer activations stay
+    /// hot across layer boundaries, eliding the store+load DMA pair.
+    /// Purely a timing/counter optimization — outputs are bit-identical
+    /// in every mode.
+    pub residency: ResidencyMode,
 }
 
 impl Default for SessionOptions {
@@ -78,6 +85,7 @@ impl Default for SessionOptions {
             dbuf_reuse: true,
             tps: true,
             memo: None,
+            residency: ResidencyMode::default(),
         }
     }
 }
@@ -262,6 +270,17 @@ impl Session {
         }
     }
 
+    /// Install the residency-elided DRAM byte ranges on the simulator
+    /// core (fsim and tsim share the predicate through
+    /// [`crate::exec::CoreState`], which is what keeps backend counter
+    /// parity). Set per node, cleared after the graph.
+    fn set_elided(&mut self, ranges: Vec<(u64, u64)>) {
+        match &mut self.sim {
+            Sim::F(f) => f.state.set_elided_ranges(ranges),
+            Sim::T(t) => t.core.set_elided_ranges(ranges),
+        }
+    }
+
     fn run_program(&mut self, insns: &[crate::isa::Insn], label: &str) -> u64 {
         match &mut self.sim {
             Sim::F(f) => {
@@ -376,6 +395,18 @@ impl Session {
         let cfg = self.cfg.clone();
         let block = cfg.block_in;
         let batch = cfg.batch;
+        // The cross-layer residency plan (pure: the memoizer and the
+        // analytical model derive the identical plan independently).
+        // Infeasible tilings surface here as typed config errors.
+        let plan = residency::plan(
+            &cfg,
+            graph,
+            shapes,
+            self.opts.residency,
+            self.opts.tps,
+            self.opts.dbuf_reuse,
+        )
+        .map_err(VtaError::Config)?;
         let want = batch * graph.input_shape.elems();
         if input.len() != want && !(self.timing_only() && input.is_empty()) {
             return Err(VtaError::InvalidRequest(format!(
@@ -405,6 +436,17 @@ impl Session {
             let before = self.exec_counters();
             let label = format!("{}:{}", graph.name, node.name);
 
+            // Rematerialize evicted producers scheduled before this node
+            // (DTR). Their cycles and counters fold into this layer's
+            // stats — recompute is a cost this consumer pays.
+            let mut remat = (0u64, 0usize, 0usize);
+            for p in plan.nodes[i].recompute.clone() {
+                let n = self.rerun_producer(graph, shapes, &regions, p, &label);
+                remat = (remat.0 + n.0, remat.1 + n.1, remat.2 + n.2);
+            }
+            let res_bits = plan.sig_bits(i);
+            self.set_elided(Self::elided_ranges_for(&plan, i, node, &regions, out_region));
+
             let (cycles, insns, uops, on_cpu) = match &node.op {
                 Op::Input => unreachable!(),
                 Op::Conv { shift, relu, weights, .. } => {
@@ -423,15 +465,16 @@ impl Session {
                     } else {
                         let n = self.run_conv_on_vta(
                             &spec, weights, *shift, *relu, in_region, out_region, &label,
-                        );
+                            res_bits,
+                        )?;
                         (n.0, n.1, n.2, false)
                     }
                 }
                 Op::Dense { shift, relu, weights, .. } => {
                     let spec = graph.conv_spec(i, shapes);
                     let n = self.run_conv_on_vta(
-                        &spec, weights, *shift, *relu, in_region, out_region, &label,
-                    );
+                        &spec, weights, *shift, *relu, in_region, out_region, &label, res_bits,
+                    )?;
                     (n.0, n.1, n.2, false)
                 }
                 Op::Depthwise { k, stride, pad, shift, relu, weights } => {
@@ -445,7 +488,7 @@ impl Session {
                         shift: *shift,
                         relu: *relu,
                     };
-                    let layer_sig = sig::depthwise_sig(&cfg, &p);
+                    let layer_sig = sig::depthwise_sig(&cfg, &p, res_bits);
                     let tileb = cfg.acc_tile_elems(); // Acc8 tile bytes
                     let in_base = in_region.tile_base(tileb);
                     let out_base = out_region.tile_base(cfg.out_tile_bytes());
@@ -478,7 +521,7 @@ impl Session {
                         is_max: true,
                         shift: 0,
                     };
-                    self.run_pool(&p, in_region, out_region, &label)
+                    self.run_pool(&p, in_region, out_region, &label, res_bits)
                 }
                 Op::GlobalAvgPool => {
                     assert_eq!(in_shape.h, in_shape.w, "global pool expects square input");
@@ -492,12 +535,12 @@ impl Session {
                         is_max: false,
                         shift: clog2((in_shape.h * in_shape.w) as u64),
                     };
-                    self.run_pool(&p, in_region, out_region, &label)
+                    self.run_pool(&p, in_region, out_region, &label, res_bits)
                 }
                 Op::Add { relu } => {
                     let b_region = regions[node.inputs[1]].expect("skip region");
                     let tiles = out_shape.tiles(block);
-                    let layer_sig = sig::add_sig(&cfg, tiles, *relu);
+                    let layer_sig = sig::add_sig(&cfg, tiles, *relu, res_bits);
                     let in_base = in_region.tile_base(cfg.acc_tile_elems());
                     let b_base = b_region.tile_base(cfg.acc_tile_elems());
                     let out_base = out_region.tile_base(cfg.out_tile_bytes());
@@ -515,15 +558,16 @@ impl Session {
             self.layer_stats.push(LayerStat {
                 name: label,
                 kind: node.op.kind(),
-                cycles,
-                insns,
-                uops,
+                cycles: cycles + remat.0,
+                insns: insns + remat.1,
+                uops: uops + remat.2,
                 macs: after.macs - before.macs,
                 dram_rd: after.load_bytes_total() - before.load_bytes_total(),
                 dram_wr: after.store_bytes - before.store_bytes,
                 on_cpu,
             });
         }
+        self.set_elided(Vec::new());
 
         let out_shape = *shapes.last().unwrap();
         let out_region = regions.last().unwrap().unwrap();
@@ -540,14 +584,76 @@ impl Session {
     /// model; `dbuf_reuse` then controls only the thread-injection
     /// behaviour — matching the paper's Fig 11/12 experiment, which
     /// flips the IR pass while keeping the schedule.
-    pub fn tiling_for(&self, spec: &tps::ConvSpec) -> Tiling {
-        let mut t = if self.opts.tps {
-            tps::search(spec, &self.cfg, true)
-        } else {
-            tps::fallback(spec, &self.cfg)
+    ///
+    /// Configurations on which even the fallback schedule overflows a
+    /// scratchpad return [`VtaError::Config`] with
+    /// [`ConfigError::Infeasible`](crate::config::ConfigError::Infeasible)
+    /// instead of panicking, so sweeps record such points as infeasible
+    /// rather than silently dropping them.
+    pub fn tiling_for(&self, spec: &tps::ConvSpec) -> Result<Tiling, VtaError> {
+        tps::select_tiling(spec, &self.cfg, self.opts.tps, self.opts.dbuf_reuse)
+            .map_err(VtaError::Config)
+    }
+
+    /// The DRAM byte ranges elided for node `i`: hot input activations
+    /// plus the node's own output when every consumer takes it hot.
+    fn elided_ranges_for(
+        plan: &ResidencyPlan,
+        i: usize,
+        node: &crate::compiler::graph::Node,
+        regions: &[Option<DramRegion>],
+        out_region: DramRegion,
+    ) -> Vec<(u64, u64)> {
+        let mut ranges = Vec::new();
+        for (slot, &p) in node.inputs.iter().enumerate() {
+            if plan.nodes[i].resident_inputs[slot] {
+                let r = regions[p].expect("producer region");
+                ranges.push((r.addr as u64, (r.addr + r.len) as u64));
+            }
+        }
+        if plan.nodes[i].output_elided {
+            ranges.push((out_region.addr as u64, (out_region.addr + out_region.len) as u64));
+        }
+        ranges
+    }
+
+    /// Re-run an evicted residual-add producer right before a consumer
+    /// (DTR rematerialization). The rerun is the fixed
+    /// [`RECOMPUTE_SIG_BITS`] program variant: its inputs are re-loaded
+    /// from DRAM (cold — elided stores still write through
+    /// functionally, so the data is always there), and its output is
+    /// left hot for the consumer (store elided).
+    fn rerun_producer(
+        &mut self,
+        graph: &Graph,
+        shapes: &[Shape],
+        regions: &[Option<DramRegion>],
+        p: usize,
+        consumer_label: &str,
+    ) -> (u64, usize, usize) {
+        let Op::Add { relu } = &graph.nodes[p].op else {
+            unreachable!("the planner only rematerializes residual adds");
         };
-        t.reuse_inp = self.opts.dbuf_reuse;
-        t
+        let relu = *relu;
+        let cfg = self.cfg.clone();
+        let tiles = shapes[p].tiles(cfg.block_in);
+        let a_region = regions[graph.nodes[p].inputs[0]].expect("producer region");
+        let b_region = regions[graph.nodes[p].inputs[1]].expect("producer region");
+        let out_region = regions[p].expect("rematerialized producer region");
+        self.set_elided(vec![(
+            out_region.addr as u64,
+            (out_region.addr + out_region.len) as u64,
+        )]);
+        let layer_sig = sig::add_sig(&cfg, tiles, relu, RECOMPUTE_SIG_BITS);
+        let in_base = a_region.tile_base(cfg.acc_tile_elems());
+        let b_base = b_region.tile_base(cfg.acc_tile_elems());
+        let out_base = out_region.tile_base(cfg.out_tile_bytes());
+        let label = format!("{consumer_label}:remat:{}", graph.nodes[p].name);
+        self.memo_run(layer_sig, &label, |s| {
+            let mut b = ProgramBuilder::new(&s.cfg);
+            lower_add(&mut b, tiles, in_base, b_base, out_base, relu);
+            b.finish(&label, &mut s.dram)
+        })
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -560,10 +666,11 @@ impl Session {
         in_region: DramRegion,
         out_region: DramRegion,
         label: &str,
-    ) -> (u64, usize, usize) {
+        res_bits: u8,
+    ) -> Result<(u64, usize, usize), VtaError> {
         let cfg = self.cfg.clone();
-        let tiling = self.tiling_for(spec);
-        let layer_sig = sig::conv_sig(&cfg, spec, shift, relu, &tiling);
+        let tiling = self.tiling_for(spec)?;
+        let layer_sig = sig::conv_sig(&cfg, spec, shift, relu, &tiling, res_bits);
         // Packed-weight image size (pack_conv_weights zero-pads both
         // channel dimensions up to the block), computable without
         // packing.
@@ -574,7 +681,7 @@ impl Session {
             * cfg.block_out
             * cfg.block_in;
         let spec = *spec;
-        self.memo_run(layer_sig, label, |s| {
+        Ok(self.memo_run(layer_sig, label, |s| {
             let wr = s.dram.alloc(wgt_len, cfg.wgt_tile_bytes());
             if !s.timing_only() {
                 pack_conv_weights_into(
@@ -602,7 +709,7 @@ impl Session {
                 },
             );
             b.finish(label, &mut s.dram)
-        })
+        }))
     }
 
     fn run_pool(
@@ -611,9 +718,10 @@ impl Session {
         in_region: DramRegion,
         out_region: DramRegion,
         label: &str,
+        res_bits: u8,
     ) -> (u64, usize, usize, bool) {
         let cfg = self.cfg.clone();
-        let layer_sig = sig::pool_sig(&cfg, p);
+        let layer_sig = sig::pool_sig(&cfg, p, res_bits);
         let p = *p;
         let in_base = in_region.tile_base(cfg.acc_tile_elems());
         let out_base = out_region.tile_base(cfg.out_tile_bytes());

@@ -1355,6 +1355,7 @@ mod tests {
             scaled_area: area,
             predicted_cycles: None,
             measured: true,
+            residency: crate::compiler::residency::ResidencyMode::Lru,
         }
     }
 

@@ -144,6 +144,10 @@ pub struct ServeOptions {
     /// Fixed virtual cost per dispatched batch (what batching
     /// amortizes in virtual time).
     pub dispatch_overhead_us: u64,
+    /// Cross-layer scratchpad residency heuristic every pooled session
+    /// runs under (default LRU). Timing/counters only — outputs are
+    /// bit-identical at every setting.
+    pub residency: crate::compiler::residency::ResidencyMode,
 }
 
 impl Default for ServeOptions {
@@ -161,6 +165,7 @@ impl Default for ServeOptions {
             deadline_us: None,
             clock_mhz: 100,
             dispatch_overhead_us: 50,
+            residency: crate::compiler::residency::ResidencyMode::default(),
         }
     }
 }
@@ -304,6 +309,12 @@ impl ServeOptionsBuilder {
 
     pub fn dispatch_overhead_us(mut self, dispatch_overhead_us: u64) -> Self {
         self.opts.dispatch_overhead_us = dispatch_overhead_us;
+        self
+    }
+
+    /// Cross-layer residency heuristic for every pooled session.
+    pub fn residency(mut self, mode: crate::compiler::residency::ResidencyMode) -> Self {
+        self.opts.residency = mode;
         self
     }
 

@@ -139,7 +139,7 @@ impl SessionPool {
                     "no shared graph was built for pooled workload '{id}'"
                 ))
             })?;
-            let mut builder = Engine::for_config(cfg);
+            let mut builder = Engine::for_config(cfg).residency(opts.residency);
             builder = match &predictions {
                 Some(cache) => builder.backend(AnalyticalBackend::with_cache(cache.clone())),
                 None => builder.backend_kind(opts.backend),

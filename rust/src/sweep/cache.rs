@@ -124,6 +124,8 @@ mod tests {
             insns: 12,
             scaled_area: 0.25,
             predicted_cycles: Some(900 + seed),
+            measured: true,
+            residency: crate::compiler::residency::ResidencyMode::Lru,
         }
     }
 

@@ -74,7 +74,8 @@ pub use pareto::{ParetoFront, ParetoPoint};
 
 use crate::analysis::area;
 use crate::compiler::graph::Graph;
-use crate::config::VtaConfig;
+use crate::compiler::residency::{self, ResidencyMode};
+use crate::config::{ConfigError, VtaConfig};
 use crate::engine::backends::PredictionCache;
 use crate::engine::{AnalyticalBackend, BackendKind, Engine, EvalRequest, VtaError};
 use crate::memo::{LayerMemo, SIM_SCHEMA_VERSION};
@@ -93,10 +94,12 @@ use std::sync::Arc;
 /// simulator semantics misses cleanly.
 ///
 /// v1 = PR-1 records (implicit, unversioned); v2 = PR-2 versioned
-/// records; v3 = this scheme (the optional `measured` flag added by the
-/// engine redesign defaults to `true`, so pre-existing v3 records still
-/// load).
-pub const SWEEP_SCHEMA_VERSION: u32 = 3;
+/// records; v3 = the `predicted_cycles` field and the two-phase engine
+/// (the optional `measured` flag added by the engine redesign defaults
+/// to `true`); v4 = this scheme: the residency mode is part of every
+/// key and record (cycles depend on it), and records carry it
+/// explicitly.
+pub const SWEEP_SCHEMA_VERSION: u32 = 4;
 
 /// Stable 64-bit cache-key hash. One canonical implementation lives in
 /// [`crate::util::hash`] (FNV-1a — stable across processes, which
@@ -114,9 +117,16 @@ pub fn stable_hash64(s: &str) -> u64 {
 /// miss cleanly instead of being silently mixed with new results (their
 /// records are additionally rejected at load — see
 /// [`PointResult::from_json`]).
-fn key_string(cfg: &VtaConfig, workload: &str, seed: u64, graph_seed: u64) -> String {
+fn key_string(
+    cfg: &VtaConfig,
+    workload: &str,
+    seed: u64,
+    graph_seed: u64,
+    residency: ResidencyMode,
+) -> String {
     format!(
-        "v{SWEEP_SCHEMA_VERSION}|s{SIM_SCHEMA_VERSION}|{}|{}|{}|{}",
+        "v{SWEEP_SCHEMA_VERSION}|s{SIM_SCHEMA_VERSION}|r:{}|{}|{}|{}|{}",
+        residency.cli_name(),
         cfg.to_json().to_string_compact(),
         workload,
         seed,
@@ -172,8 +182,17 @@ pub struct SweepJob {
 }
 
 impl SweepJob {
-    pub fn cache_key(&self) -> u64 {
-        stable_hash64(&key_string(&self.cfg, &self.workload.id(), self.seed, self.graph_seed))
+    /// Cache key of this point when evaluated under `residency`. The
+    /// mode is an evaluation option rather than a grid axis, but it
+    /// changes measured cycles, so it is part of the key.
+    pub fn cache_key(&self, residency: ResidencyMode) -> u64 {
+        stable_hash64(&key_string(
+            &self.cfg,
+            &self.workload.id(),
+            self.seed,
+            self.graph_seed,
+            residency,
+        ))
     }
 }
 
@@ -207,11 +226,20 @@ pub struct PointResult {
     /// `false` for an analytical-backend sweep. Unmeasured results never
     /// enter the on-disk cache.
     pub measured: bool,
+    /// Residency mode the point was evaluated under (part of the cache
+    /// key: elided DMA changes cycle counts).
+    pub residency: ResidencyMode,
 }
 
 impl PointResult {
     pub fn cache_key(&self) -> u64 {
-        stable_hash64(&key_string(&self.config, &self.workload, self.seed, self.graph_seed))
+        stable_hash64(&key_string(
+            &self.config,
+            &self.workload,
+            self.seed,
+            self.graph_seed,
+            self.residency,
+        ))
     }
 
     pub fn to_json(&self) -> Json {
@@ -228,6 +256,7 @@ impl PointResult {
             ("insns", Json::Int(self.insns as i64)),
             ("area", Json::Float(self.scaled_area)),
             ("measured", Json::Bool(self.measured)),
+            ("residency", Json::Str(self.residency.cli_name().to_string())),
         ]);
         if let (Some(p), Json::Object(map)) = (self.predicted_cycles, &mut j) {
             map.insert("predicted_cycles".to_string(), Json::Int(p as i64));
@@ -258,6 +287,7 @@ impl PointResult {
             scaled_area: j.get("area")?.as_f64()?,
             predicted_cycles: int("predicted_cycles"),
             measured: j.get("measured").and_then(|v| v.as_bool()).unwrap_or(true),
+            residency: ResidencyMode::parse(j.get("residency")?.as_str()?)?,
         })
     }
 }
@@ -277,6 +307,9 @@ pub struct EvalOptions {
     /// signatures across a grid are estimated once. Ignored by the
     /// simulating backends.
     pub predictions: Option<PredictionCache>,
+    /// Cross-layer residency heuristic every evaluation runs under
+    /// (default LRU, matching the session default).
+    pub residency: ResidencyMode,
 }
 
 /// Evaluate one design point by running the full stack — the same path
@@ -328,7 +361,7 @@ pub fn evaluate_batch_with_graph_opts(
             && j.cfg.name == first.cfg.name),
         "batched jobs must share their (config, workload) identity"
     );
-    let mut builder = Engine::for_config(&first.cfg);
+    let mut builder = Engine::for_config(&first.cfg).residency(eval.residency);
     builder = match (&eval.backend, &eval.predictions) {
         (BackendKind::Analytical, Some(cache)) => {
             builder.backend(AnalyticalBackend::with_cache(cache.clone()))
@@ -369,6 +402,7 @@ pub fn evaluate_batch_with_graph_opts(
                 scaled_area,
                 predicted_cycles: (!measured).then_some(cycles),
                 measured,
+                residency: eval.residency,
             })
         })
         .collect()
@@ -424,6 +458,9 @@ pub struct SweepOptions {
     /// the module docs). `None` = single-phase: every grid point is
     /// evaluated.
     pub two_phase: Option<TwoPhaseOptions>,
+    /// Cross-layer residency heuristic every evaluation (and every
+    /// phase-1 prediction) runs under; part of every cache key.
+    pub residency: ResidencyMode,
 }
 
 impl Default for SweepOptions {
@@ -438,8 +475,22 @@ impl Default for SweepOptions {
             memo: false,
             backend: BackendKind::Tsim,
             two_phase: None,
+            residency: ResidencyMode::default(),
         }
     }
+}
+
+/// A grid point rejected before any evaluation: the workload's minimal
+/// tiling overflows the configuration's scratchpads (typed
+/// [`ConfigError::Infeasible`]). Reported in
+/// [`SweepOutcome::infeasible`] instead of silently dropped or failing
+/// the whole sweep mid-run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InfeasiblePoint {
+    /// Grid job index (`SweepSpec::jobs()` order).
+    pub index: usize,
+    /// Human-readable reason from the tiling search.
+    pub reason: String,
 }
 
 /// A grid point eliminated by phase-1 pruning: never simulated, known
@@ -457,10 +508,10 @@ pub struct PrunedPoint {
 /// Everything a sweep produced.
 #[derive(Debug)]
 pub struct SweepOutcome {
-    /// One result per *evaluated* job, in job (grid) order. Single-phase
-    /// sweeps evaluate every job, so index == grid job index; two-phase
-    /// sweeps hold only the phase-1 survivors — map positions back with
-    /// [`SweepOutcome::job_indices`].
+    /// One result per *evaluated* job, in job (grid) order. Infeasible
+    /// points (see [`SweepOutcome::infeasible`]) are never evaluated;
+    /// two-phase sweeps additionally hold only the phase-1 survivors —
+    /// map positions back with [`SweepOutcome::job_indices`].
     pub results: Vec<PointResult>,
     /// Grid job index of each `results` entry (identity when no pruning).
     pub job_indices: Vec<usize>,
@@ -470,6 +521,9 @@ pub struct SweepOutcome {
     pub front: ParetoFront,
     /// Points eliminated by phase-1 pruning (empty when single-phase).
     pub pruned: Vec<PrunedPoint>,
+    /// Points whose configuration cannot tile the workload at all:
+    /// screened out with a typed reason, never evaluated, never cached.
+    pub infeasible: Vec<InfeasiblePoint>,
     /// Points served from the cache without simulating.
     pub cached: usize,
     /// Points actually evaluated in this run.
@@ -514,48 +568,95 @@ fn ensure_graphs<'a>(
     }
 }
 
-/// Phase 1 of the two-phase engine: score every job with the analytical
-/// backend and keep the epsilon-band survivors of the predicted
-/// frontier. Returns `(survivor job indices in grid order, pruned
-/// points, per-job predictions)`. Deterministic and cache-independent:
-/// the survivor set is a pure function of `(jobs, model, epsilon)`.
+/// Feasibility screen: check each candidate job's tiling feasibility
+/// (once per distinct `(config, workload)` pair — feasibility is
+/// seed-independent), recording an [`InfeasiblePoint`] per rejected job.
+/// Returns the per-grid-job feasibility mask; jobs outside `candidates`
+/// stay marked feasible.
+fn screen_feasibility(
+    jobs: &[SweepJob],
+    candidates: &[usize],
+    graphs: &BTreeMap<String, Graph>,
+    residency: ResidencyMode,
+    infeasible: &mut Vec<InfeasiblePoint>,
+) -> Vec<bool> {
+    let mut feasible = vec![true; jobs.len()];
+    let mut verdicts: std::collections::HashMap<u64, Option<String>> =
+        std::collections::HashMap::new();
+    for &j in candidates {
+        let job = &jobs[j];
+        let pair = stable_hash64(&format!(
+            "{}|{}",
+            job.cfg.to_json().to_string_compact(),
+            job.workload.id()
+        ));
+        let verdict = verdicts.entry(pair).or_insert_with(|| {
+            let graph = &graphs[&job.workload.id()];
+            // The planner runs `check_feasible` in every mode (Off
+            // included), under the sweep's fixed tiling policy
+            // (tps = true, dbuf_reuse = true — the engine defaults).
+            match residency::plan(&job.cfg, graph, &graph.shapes(), residency, true, true) {
+                Ok(_) => None,
+                Err(ConfigError::Infeasible { reason }) => Some(reason),
+                Err(e) => Some(e.to_string()),
+            }
+        });
+        if let Some(reason) = verdict.clone() {
+            feasible[j] = false;
+            infeasible.push(InfeasiblePoint { index: j, reason });
+        }
+    }
+    feasible
+}
+
+/// Phase 1 of the two-phase engine: score every feasible job with the
+/// analytical backend and keep the epsilon-band survivors of the
+/// predicted frontier. Returns `(survivor job indices in grid order,
+/// pruned points, per-job predictions)`. Deterministic and
+/// cache-independent: the survivor set is a pure function of
+/// `(jobs, model, epsilon)`.
 fn phase1_prune(
     jobs: &[SweepJob],
     graphs: &BTreeMap<String, Graph>,
     tp: &TwoPhaseOptions,
+    residency: ResidencyMode,
+    feasible: &[bool],
 ) -> Result<(Vec<usize>, Vec<PrunedPoint>, Vec<u64>), VtaError> {
     // One prediction cache (keyed by the layer-memo signature) shared
     // across every phase-1 engine: the grid repeats layer shapes
     // massively, so each unique (config, layer) is estimated once.
     let shared = PredictionCache::default();
-    let mut predictions = Vec::with_capacity(jobs.len());
-    for job in jobs {
+    let feas_idx: Vec<usize> = (0..jobs.len()).filter(|&j| feasible[j]).collect();
+    let mut predictions = vec![0u64; jobs.len()];
+    for &j in &feas_idx {
+        let job = &jobs[j];
+        // Predict under the same residency mode phase 2 will measure —
+        // pruning against a front the measurement can't reach would be
+        // unsound.
         let engine = Engine::for_config(&job.cfg)
+            .residency(residency)
             .backend(AnalyticalBackend::with_cache(shared.clone()))
             .build()?;
         let evaluation =
             engine.run(&graphs[&job.workload.id()], &EvalRequest::seeded(job.seed))?;
-        predictions.push(evaluation.cycles.unwrap_or(0));
+        predictions[j] = evaluation.cycles.unwrap_or(0);
     }
     // Area is exact (the identical `analysis::area` model both phases
     // use); only the cycle axis carries model error, so the band
     // applies to cycles alone.
-    let points: Vec<(f64, u64)> = jobs
-        .iter()
-        .zip(&predictions)
-        .map(|(job, &p)| (area::scaled_area(&job.cfg), p))
-        .collect();
+    let points: Vec<(f64, u64)> =
+        feas_idx.iter().map(|&j| (area::scaled_area(&jobs[j].cfg), predictions[j])).collect();
     let survive = pareto::epsilon_band_survivors(&points, tp.epsilon);
     let mut eval = Vec::new();
     let mut pruned = Vec::new();
-    for (j, &s) in survive.iter().enumerate() {
-        if s {
+    for (pos, &j) in feas_idx.iter().enumerate() {
+        if survive[pos] {
             eval.push(j);
         } else {
             pruned.push(PrunedPoint {
                 index: j,
                 predicted_cycles: predictions[j],
-                scaled_area: points[j].0,
+                scaled_area: points[pos].0,
             });
         }
     }
@@ -583,16 +684,6 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome, VtaErr
     // Built lazily: single-phase warm-cache runs never need a graph.
     let mut graphs: BTreeMap<String, Graph> = BTreeMap::new();
 
-    let (eval_jobs, pruned, predictions): (Vec<usize>, Vec<PrunedPoint>, Vec<Option<u64>>) =
-        match &opts.two_phase {
-            Some(tp) => {
-                ensure_graphs(&mut graphs, jobs.iter(), spec.graph_seed);
-                let (eval, pruned, predictions) = phase1_prune(&jobs, &graphs, tp)?;
-                (eval, pruned, predictions.into_iter().map(Some).collect())
-            }
-            None => ((0..jobs.len()).collect(), Vec::new(), vec![None; jobs.len()]),
-        };
-
     // Analytical sweeps never touch the on-disk cache: its records are
     // measured results, and predictions must not masquerade as them.
     let cache_path = if analytical {
@@ -605,12 +696,42 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome, VtaErr
         None => ResultCache::in_memory(),
     };
 
+    // Screen out grid points whose network cannot be tiled into the
+    // config's scratchpads: they are *reported* ([`SweepOutcome::
+    // infeasible`]) instead of silently dropped (the pre-v4 behavior was
+    // a worker error that killed the whole sweep). Single-phase runs
+    // screen only cache misses — an infeasible point can never have
+    // produced a cached record, so warm runs still skip graph builds.
+    let mut infeasible: Vec<InfeasiblePoint> = Vec::new();
+    let (eval_jobs, pruned, predictions): (Vec<usize>, Vec<PrunedPoint>, Vec<Option<u64>>) =
+        match &opts.two_phase {
+            Some(tp) => {
+                ensure_graphs(&mut graphs, jobs.iter(), spec.graph_seed);
+                let feasible =
+                    screen_feasibility(&jobs, &(0..jobs.len()).collect::<Vec<_>>(), &graphs,
+                        opts.residency, &mut infeasible);
+                let (eval, pruned, predictions) =
+                    phase1_prune(&jobs, &graphs, tp, opts.residency, &feasible)?;
+                (eval, pruned, predictions.into_iter().map(Some).collect())
+            }
+            None => {
+                let misses: Vec<usize> = (0..jobs.len())
+                    .filter(|&j| cache.get(jobs[j].cache_key(opts.residency)).is_none())
+                    .collect();
+                ensure_graphs(&mut graphs, misses.iter().map(|&j| &jobs[j]), spec.graph_seed);
+                let feasible =
+                    screen_feasibility(&jobs, &misses, &graphs, opts.residency, &mut infeasible);
+                let eval: Vec<usize> = (0..jobs.len()).filter(|&j| feasible[j]).collect();
+                (eval, Vec::new(), vec![None; jobs.len()])
+            }
+        };
+
     let mut results: Vec<Option<PointResult>> = vec![None; eval_jobs.len()];
     let mut front = ParetoFront::new();
     let mut pending = Vec::new(); // dense indices into eval_jobs/results
     let mut cached = 0;
     for (d, &j) in eval_jobs.iter().enumerate() {
-        match cache.get(jobs[j].cache_key()) {
+        match cache.get(jobs[j].cache_key(opts.residency)) {
             Some(hit) => {
                 let mut hit = hit.clone();
                 // Records from single-phase (or pre-v3-annotation) runs
@@ -691,6 +812,7 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome, VtaErr
                     backend: opts.backend,
                     memo: memo.clone(),
                     predictions: predictions_cache.clone(),
+                    residency: opts.residency,
                 };
                 handles.push(scope.spawn(move || {
                     while let Some(g) = job_queue.pop(w) {
@@ -768,6 +890,7 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome, VtaErr
         job_indices: eval_jobs,
         front,
         pruned,
+        infeasible,
         cached,
         simulated,
         workers,
@@ -793,20 +916,30 @@ mod tests {
     #[test]
     fn stable_hash_is_stable_and_discriminating() {
         let cfg = presets::tiny_config();
-        let a = stable_hash64(&key_string(&cfg, "micro@4", 7, 42));
-        let b = stable_hash64(&key_string(&cfg, "micro@4", 7, 42));
+        let lru = ResidencyMode::Lru;
+        let a = stable_hash64(&key_string(&cfg, "micro@4", 7, 42, lru));
+        let b = stable_hash64(&key_string(&cfg, "micro@4", 7, 42, lru));
         assert_eq!(a, b, "same point must hash identically");
-        assert_ne!(a, stable_hash64(&key_string(&cfg, "micro@4", 8, 42)), "seed changes key");
         assert_ne!(
             a,
-            stable_hash64(&key_string(&cfg, "micro@8", 7, 42)),
+            stable_hash64(&key_string(&cfg, "micro@4", 8, 42, lru)),
+            "seed changes key"
+        );
+        assert_ne!(
+            a,
+            stable_hash64(&key_string(&cfg, "micro@8", 7, 42, lru)),
             "workload changes key"
+        );
+        assert_ne!(
+            a,
+            stable_hash64(&key_string(&cfg, "micro@4", 7, 42, ResidencyMode::Off)),
+            "residency mode changes key (cycles depend on it)"
         );
         let mut other = presets::tiny_config();
         other.axi_bytes = 16;
         assert_ne!(
             a,
-            stable_hash64(&key_string(&other, "micro@4", 7, 42)),
+            stable_hash64(&key_string(&other, "micro@4", 7, 42, lru)),
             "config changes key"
         );
     }
@@ -825,6 +958,7 @@ mod tests {
             scaled_area: 0.5,
             predicted_cycles: None,
             measured: true,
+            residency: ResidencyMode::Lru,
         }
     }
 
@@ -838,14 +972,22 @@ mod tests {
             graph_seed: 42,
         };
         let result = sample_result();
-        assert_eq!(job.cache_key(), result.cache_key());
+        assert_eq!(job.cache_key(ResidencyMode::Lru), result.cache_key());
+        assert_ne!(
+            job.cache_key(ResidencyMode::Off),
+            result.cache_key(),
+            "a record evaluated under one mode must not satisfy another"
+        );
     }
 
     #[test]
     fn point_result_json_roundtrip() {
-        for (predicted, measured) in
-            [(None, true), (Some(120_000_000u64), true), (Some(99u64), false)]
-        {
+        for (predicted, measured, residency) in [
+            (None, true, ResidencyMode::Off),
+            (Some(120_000_000u64), true, ResidencyMode::Lru),
+            (Some(99u64), false, ResidencyMode::Belady),
+            (None, false, ResidencyMode::Dtr),
+        ] {
             let r = PointResult {
                 config: presets::scaled_config(1, 32, 32, 2, 16),
                 workload: "resnet18@56".to_string(),
@@ -859,6 +1001,7 @@ mod tests {
                 scaled_area: 3.141592653589793,
                 predicted_cycles: predicted,
                 measured,
+                residency,
             };
             let text = r.to_json().to_string_compact();
             let back = PointResult::from_json(&Json::parse(&text).unwrap()).unwrap();
@@ -900,6 +1043,7 @@ mod tests {
             job_indices: vec![],
             front: ParetoFront::new(),
             pruned: vec![],
+            infeasible: vec![],
             cached: 0,
             simulated: 0,
             workers: 0,
@@ -920,6 +1064,7 @@ mod tests {
             scaled_area: 1.0,
             predicted_cycles: Some(12),
             measured: true,
+            residency: ResidencyMode::Lru,
         };
         let outcome = SweepOutcome {
             results: vec![r],
@@ -931,6 +1076,7 @@ mod tests {
                 PrunedPoint { index: 3, predicted_cycles: 97, scaled_area: 2.0 },
                 PrunedPoint { index: 4, predicted_cycles: 96, scaled_area: 2.0 },
             ],
+            infeasible: vec![],
             cached: 0,
             simulated: 1,
             workers: 1,

@@ -276,6 +276,8 @@ fn prop_exec_counters_json_roundtrip_is_lossless() {
             load_bytes_uop: draw(1 << 40),
             store_bytes: draw(1 << 45),
             pad_tiles: draw(1 << 30),
+            resident_tile_hits: draw(1 << 30),
+            dma_bytes_elided: draw(1 << 45),
         };
         let j = c.to_json();
         prop_assert_eq!(ExecCounters::from_json(&j), Some(c));

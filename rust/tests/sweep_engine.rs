@@ -4,6 +4,7 @@
 //! without re-simulating completed points), and Pareto-frontier
 //! invariants as properties over random point clouds (`util/prop`).
 
+use vta::compiler::residency::ResidencyMode;
 use vta::config::presets;
 use vta::engine::{BackendKind, VtaError};
 use vta::model;
@@ -220,9 +221,9 @@ fn cache_key_golden_value() {
         graph_seed: 42,
     };
     assert_eq!(
-        job.cache_key(),
-        0xd74cf88e988680a1,
-        "v3 cache key of (tiny, micro@4, seed 7, graph_seed 42)"
+        job.cache_key(ResidencyMode::Lru),
+        0x02f659858bc4d436,
+        "v4 cache key of (tiny, micro@4, seed 7, graph_seed 42, lru)"
     );
     // And the hash itself matches the published FNV-1a vectors through
     // the sweep-facing name.
@@ -347,6 +348,72 @@ fn two_phase_prunes_dominated_corner_and_never_fabricates() {
             "front point {j} must carry the full run's measured cycles"
         );
     }
+}
+
+/// Satellite regression (infeasible grid points): a config whose
+/// scratchpads cannot hold even the minimal fallback tiling used to be
+/// silently dropped by the sweep (the worker's tiling search panicked /
+/// errored the whole run). It must now surface as a typed
+/// [`sweep::InfeasiblePoint`] with a reason, while every feasible point
+/// still evaluates and the frontier is built from feasible points only.
+#[test]
+fn infeasible_config_reported_not_silently_dropped() {
+    let mut spec = micro_spec();
+    let mut cramped = presets::tiny_config();
+    cramped.name = "tiny-cramped".into();
+    // One scratchpad row each: no tiling of the micro network fits.
+    cramped.inp_depth = 1;
+    cramped.wgt_depth = 1;
+    cramped.acc_depth = 1;
+    spec.configs.push(cramped);
+    let n_feasible = micro_spec().jobs().len();
+    let n_jobs = spec.jobs().len();
+    assert_eq!(n_jobs, n_feasible + 2, "the cramped config contributes one job per seed");
+
+    let outcome = sweep::run(&spec, &run_opts(2, None, false))
+        .expect("an infeasible grid point must not fail the sweep");
+    assert_eq!(outcome.infeasible.len(), 2, "both seeds of the cramped config are screened");
+    for p in &outcome.infeasible {
+        assert_eq!(spec.jobs()[p.index].cfg.name, "tiny-cramped");
+        assert!(!p.reason.is_empty(), "screening must say why the point is infeasible");
+    }
+    assert_eq!(outcome.results.len(), n_feasible, "every feasible point still evaluates");
+    assert!(outcome
+        .job_indices
+        .iter()
+        .all(|&j| outcome.infeasible.iter().all(|p| p.index != j)));
+    // The same grid under --residency off screens identically: feasibility
+    // is a property of (config, workload), not of the residency heuristic.
+    let off = sweep::run(
+        &spec,
+        &SweepOptions { residency: ResidencyMode::Off, ..run_opts(2, None, false) },
+    )
+    .unwrap();
+    assert_eq!(off.infeasible.len(), outcome.infeasible.len());
+}
+
+/// Tentpole acceptance (sweep leg): the default-residency (LRU) sweep
+/// and a residency-off sweep agree on every functional counter — only
+/// cycles and DMA traffic may differ, and LRU can never be slower.
+#[test]
+fn residency_modes_agree_on_functional_counters() {
+    let spec = micro_spec();
+    let lru = sweep::run(&spec, &run_opts(2, None, false)).unwrap();
+    let off = sweep::run(
+        &spec,
+        &SweepOptions { residency: ResidencyMode::Off, ..run_opts(2, None, false) },
+    )
+    .unwrap();
+    assert_eq!(lru.results.len(), off.results.len());
+    let mut some_faster = false;
+    for (l, o) in lru.results.iter().zip(&off.results) {
+        assert_eq!(l.macs, o.macs, "residency must never change what executes");
+        assert_eq!(l.insns, o.insns);
+        assert!(l.cycles <= o.cycles, "eliding DMA can never add cycles");
+        assert!(l.dram_rd <= o.dram_rd);
+        some_faster |= l.cycles < o.cycles;
+    }
+    assert!(some_faster, "the micro grid has cross-layer reuse to elide");
 }
 
 #[test]
