@@ -281,6 +281,40 @@ fn main() {
         });
     }
 
+    // --- artifact store: plan + reuse over the quick Fig 13 grid —
+    // the per-sweep overhead of a fully warmed store (partition the
+    // key list against the store, then serve every measurement without
+    // evaluating). This is the fixed cost a warm `vta sweep --store`
+    // re-run pays before reporting 100% reuse. ---
+    {
+        use vta::store::{materialize_points, ArtifactStore};
+        use vta::sweep::GridSpec;
+        use vta::util::json::obj;
+        let spec = GridSpec::fig13(true).to_sweep_spec();
+        let residency = ResidencyMode::default();
+        let jobs = spec.jobs();
+        let keys: Vec<u64> = jobs.iter().map(|j| j.cache_key(residency)).collect();
+        // Pre-populate: payload shape matches a measured point (config
+        // body + counters) so clone/serve costs are representative, but
+        // no simulation is needed to warm the store for this probe.
+        let store = ArtifactStore::in_memory();
+        for (job, &key) in jobs.iter().zip(&keys) {
+            let payload = obj([
+                ("config", job.cfg.to_json()),
+                ("cycles", Json::Int((key % 1_000_000) as i64 + 1)),
+                ("macs", Json::Int(1 << 20)),
+            ]);
+            store.put(vta::store::ArtifactKind::PointMeasurement, key, payload).unwrap();
+        }
+        b.bench("store/plan_and_reuse_fig13", || {
+            materialize_points(&store, black_box(&keys), 1, |_| {
+                unreachable!("a warmed store evaluates nothing")
+            })
+            .unwrap()
+            .len()
+        });
+    }
+
     // --- JSON config parse (the cross-layer interchange) ---
     {
         let text = presets::default_config().to_json().to_string_pretty();

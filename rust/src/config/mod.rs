@@ -428,7 +428,10 @@ impl VtaConfig {
     }
 
     pub fn save(&self, path: &str) -> std::io::Result<()> {
-        std::fs::write(path, self.to_json().to_string_pretty())
+        crate::util::fsx::atomic_write(
+            std::path::Path::new(path),
+            self.to_json().to_string_pretty().as_bytes(),
+        )
     }
 
     /// Short human-readable identifier, e.g. `1x16x16-axi8`.

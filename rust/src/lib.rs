@@ -40,6 +40,7 @@
 //! | [`model`] | analytical per-layer cycle model (phase 1 of the two-phase sweep) |
 //! | [`sweep`] | parallel design-space exploration: work stealing, resumable cache, Pareto |
 //! | [`serve`] | batch-serving runtime: session pool, dynamic batching, load generation |
+//! | [`store`] | content-addressed artifact store + op-graph planner (one cache discipline) |
 //! | [`analysis`] | roofline, gantt/utilization, scaled-area model |
 //! | [`repro`] | one driver per paper figure/table |
 //! | [`trace`] | dynamic trace-based cross-simulator validation (§III-C) |
@@ -126,6 +127,7 @@ pub mod repro;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
+pub mod store;
 pub mod sweep;
 pub mod trace;
 pub mod util;

@@ -16,6 +16,7 @@
 //! The full flag reference lives in README.md §CLI reference.
 
 use std::path::Path;
+use std::sync::Arc;
 use vta::analysis::area;
 use vta::compiler::residency::ResidencyMode;
 use vta::config::{presets, VtaConfig};
@@ -23,8 +24,10 @@ use vta::engine::{BackendKind, Engine, EvalRequest};
 use vta::floorplan;
 use vta::repro;
 use vta::serve;
+use vta::store::{ArtifactKind, ArtifactStore};
 use vta::sweep::{self, GridSpec, SweepOptions, WorkloadSpec};
 use vta::util::cli::Args;
+use vta::util::fsx::atomic_write;
 use vta::util::json::{obj, Json};
 use vta::util::stats;
 use vta::workloads;
@@ -44,7 +47,10 @@ fn usage() -> ! {
            repro      pipelining|ablation|fig2|fig3|fig10|fig11|fig12|fig13|all [--quick] [--out results]\n\
                       [--jobs N]  (fig13 runs on the parallel sweep engine)\n\
                       [--two-phase [--prune-epsilon E]]  (fig13: model-pruned grid, tsim-measured front)\n\
+                      [--store vta_store]  (fig13: share measurements through the artifact store)\n\
            sweep      [--quick] [--jobs N] [--resume|--fresh] [--cache sweep_cache.jsonl]\n\
+                      [--store vta_store] (content-addressed artifact store shared with serve\n\
+                        and repro; replaces --cache/--resume — the store always resumes)\n\
                       [--out sweep_results.json] [--no-progress]\n\
                       [--backend tsim|timing|model] (fidelity per point: functional tsim,\n\
                         the timing-only fast path, or instant analytical estimates)\n\
@@ -66,12 +72,15 @@ fn usage() -> ! {
                       [--replay trace.jsonl] [--save-trace trace.jsonl] (recorded traces)\n\
                       [--clock-mhz 100] [--overhead-us 50] [--no-memo] [--graph-seed 1]\n\
                       [--residency off|lru|belady|dtr] [--out serve_report.json]\n\
+                      [--store vta_store] (reuse sweep measurements for warmup pricing)\n\
                       fleet: [--fleet] [--fleet-configs tiny,large,b1-i32-o32-s2-m32,...]\n\
                       [--fleet-from-sweep cache.jsonl [--fleet-max 4]] (Pareto-point devices)\n\
                       [--route earliest|least-loaded|cheapest] (deadline-aware routing)\n\
                       [--autoscale R [--autoscale-interval-us 5000] [--scale-up-depth 4]]\n\
                       (runs every single-device candidate + the combined fleet over the\n\
                        same trace and reports the cost-vs-SLO frontier)\n\
+           cache      ls|stats|verify|gc [--store vta_store] [--dry-run]\n\
+                      (inspect, check, and compact the artifact store)\n\
            config     show|save --config <name> [--out path.json]\n\
            floorplan  [--config <name>]\n\
            isa        [--config <name>]"
@@ -121,6 +130,19 @@ fn parse_backend(args: &Args, default: &str) -> BackendKind {
     BackendKind::parse(name).unwrap_or_else(|e| {
         eprintln!("error: {e}");
         std::process::exit(2);
+    })
+}
+
+/// Open the artifact store at `--store DIR` (creating the directory on
+/// first use); `None` when the flag is absent.
+fn open_store(args: &Args) -> Option<Arc<ArtifactStore>> {
+    args.get("store").map(|dir| Arc::new(must_open_store(dir)))
+}
+
+fn must_open_store(dir: &str) -> ArtifactStore {
+    ArtifactStore::open(Path::new(dir)).unwrap_or_else(|e| {
+        eprintln!("error: cannot open artifact store '{dir}': {e}");
+        std::process::exit(1);
     })
 }
 
@@ -259,7 +281,7 @@ fn cmd_repro(args: &Args) {
                     args.get_f64("prune-epsilon", vta::model::DEFAULT_PRUNE_EPSILON),
                 );
             } else {
-                repro::fig13_jobs(quick, jobs);
+                repro::fig13_with_store(quick, jobs, open_store(args));
             }
         }
         "ablation" => {
@@ -339,11 +361,13 @@ fn cmd_sweep(args: &Args) {
     let analytical = backend == BackendKind::Analytical;
     let cache = args.get_or("cache", "sweep_cache.jsonl");
     let resume = args.has_flag("resume");
+    let store = open_store(args);
     // Guard the cache: without --resume the engine truncates the file,
     // which would silently destroy a previous (possibly hours-long)
     // run's results. Require an explicit --fresh to overwrite. An
-    // analytical sweep never touches the cache, so nothing to guard.
-    if !resume && !args.has_flag("fresh") && !analytical {
+    // analytical sweep never touches the cache, and a store-backed
+    // sweep never touches the cache file, so nothing to guard.
+    if !resume && !args.has_flag("fresh") && !analytical && store.is_none() {
         if let Ok(meta) = std::fs::metadata(cache) {
             if meta.len() > 0 {
                 eprintln!(
@@ -375,11 +399,14 @@ fn cmd_sweep(args: &Args) {
             epsilon: args.get_f64("prune-epsilon", vta::model::DEFAULT_PRUNE_EPSILON),
         }),
         residency: parse_residency(args),
+        store: store.clone(),
     };
     // "up to": the engine spawns min(workers, uncached points), which
     // is only known once the cache has been consulted.
     let cache_note = if analytical {
         " (analytical estimates; cache unused)".to_string()
+    } else if let Some(dir) = args.get("store") {
+        format!(", store {dir}")
     } else {
         format!(", cache {cache}")
     };
@@ -432,6 +459,24 @@ fn cmd_sweep(args: &Args) {
         outcome.cached,
         stats::fmt_ns(wall.as_nanos() as f64),
     );
+    if outcome.skipped_stale > 0 {
+        eprintln!(
+            "warning: {} cached record(s) carry an older schema version and were ignored \
+             (their points re-simulated); run `vta cache gc --store <dir>` to compact a \
+             store, or pass --fresh to rewrite a cache file",
+            outcome.skipped_stale
+        );
+    }
+    if let Some(s) = &store {
+        let st = s.stats();
+        println!(
+            "artifact store: {} record(s) across {} kind(s); this run reused {} / {} points",
+            st.total_records(),
+            st.kinds.iter().filter(|k| k.records > 0).count(),
+            outcome.cached,
+            outcome.cached + outcome.simulated,
+        );
+    }
     if !outcome.infeasible.is_empty() {
         println!(
             "{} infeasible point(s) screened out (config cannot tile the workload):",
@@ -536,8 +581,9 @@ fn cmd_sweep(args: &Args) {
         ("infeasible_points", Json::Array(infeasible)),
         ("cached", Json::Int(outcome.cached as i64)),
         ("simulated", Json::Int(outcome.simulated as i64)),
+        ("skipped_stale", Json::Int(outcome.skipped_stale as i64)),
     ]);
-    match std::fs::write(out, summary.to_string_pretty()) {
+    match atomic_write(Path::new(out), summary.to_string_pretty().as_bytes()) {
         Ok(()) => println!("results written to {out}"),
         Err(e) => {
             eprintln!("error writing {out}: {e}");
@@ -574,6 +620,7 @@ fn cmd_serve(args: &Args) {
         .clock_mhz(args.get_u64("clock-mhz", 100))
         .dispatch_overhead_us(args.get_u64("overhead-us", 50))
         .residency(parse_residency(args))
+        .store(open_store(args))
         .build()
         .unwrap_or_else(|e| {
             eprintln!("error: {e}");
@@ -682,7 +729,7 @@ fn cmd_serve(args: &Args) {
     );
 
     let out = args.get_or("out", "serve_report.json");
-    match std::fs::write(out, r.to_json().to_string_pretty()) {
+    match atomic_write(Path::new(out), r.to_json().to_string_pretty().as_bytes()) {
         Ok(()) => println!("report written to {out}"),
         Err(e) => {
             eprintln!("error writing {out}: {e}");
@@ -795,12 +842,112 @@ fn cmd_serve_fleet(args: &Args, base: serve::ServeOptions, trace: &[serve::Reque
     println!("\nwall clock: {}", stats::fmt_ns(outcome.wall_ns as f64));
 
     let out = args.get_or("out", "fleet_frontier.json");
-    match std::fs::write(out, outcome.to_json().to_string_pretty()) {
+    match atomic_write(Path::new(out), outcome.to_json().to_string_pretty().as_bytes()) {
         Ok(()) => println!("frontier written to {out}"),
         Err(e) => {
             eprintln!("error writing {out}: {e}");
             std::process::exit(1);
         }
+    }
+}
+
+fn cmd_cache(args: &Args) {
+    let action = match args.positional.get(1) {
+        Some(s) => s.as_str(),
+        None => usage(),
+    };
+    let dir = args.get_or("store", "vta_store");
+    let store = must_open_store(dir);
+    match action {
+        "ls" => {
+            println!("{:<12} {:<16} payload", "kind", "key");
+            for kind in ArtifactKind::ALL {
+                for (key, payload) in store.records(kind) {
+                    let text = payload.to_string_compact();
+                    let head: String = text.chars().take(60).collect();
+                    let ellipsis = if text.chars().count() > 60 { "…" } else { "" };
+                    println!("{:<12} {key:016x} {head}{ellipsis}", kind.cli_name());
+                }
+            }
+        }
+        "stats" => {
+            let st = store.stats();
+            println!("artifact store '{dir}': {} record(s)", st.total_records());
+            println!(
+                "{:<12} {:>8} {:>8} {:>8}  schema versions",
+                "kind", "records", "stale", "corrupt"
+            );
+            for k in &st.kinds {
+                let versions = k
+                    .schema_counts
+                    .iter()
+                    .map(|(v, n)| format!("v{v}:{n}"))
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                println!(
+                    "{:<12} {:>8} {:>8} {:>8}  {}",
+                    k.kind.cli_name(),
+                    k.records,
+                    k.skipped_stale,
+                    k.skipped,
+                    if versions.is_empty() { "-".to_string() } else { versions }
+                );
+            }
+            if st.skipped_stale() > 0 {
+                println!(
+                    "note: {} stale record(s) from older schema versions are retained on \
+                     disk but never consumed; `vta cache gc` compacts them away",
+                    st.skipped_stale()
+                );
+            }
+            match st.last_run {
+                Some((hits, misses)) => println!(
+                    "last run: {} reused, {} computed (reuse {:.3})",
+                    hits,
+                    misses,
+                    st.last_run_reuse().unwrap_or(0.0)
+                ),
+                None => println!("last run: none recorded"),
+            }
+        }
+        "verify" => {
+            let report = store.verify().unwrap_or_else(|e| {
+                eprintln!("error: verify failed to read '{dir}': {e}");
+                std::process::exit(1);
+            });
+            println!("{:<12} {:>8} {:>8} {:>8}", "kind", "valid", "stale", "corrupt");
+            for (kind, v) in &report.kinds {
+                println!(
+                    "{:<12} {:>8} {:>8} {:>8}",
+                    kind.cli_name(),
+                    v.valid,
+                    v.stale,
+                    v.corrupt
+                );
+            }
+            if report.ok() {
+                println!("store verify: OK (checksums and keys match for every record)");
+            } else {
+                eprintln!("store verify: FAILED (corrupt records found)");
+                std::process::exit(1);
+            }
+        }
+        "gc" => {
+            let dry_run = args.has_flag("dry-run");
+            let r = store.gc(dry_run).unwrap_or_else(|e| {
+                eprintln!("error: gc failed on '{dir}': {e}");
+                std::process::exit(1);
+            });
+            println!(
+                "gc{}: kept {} record(s); dropped {} stale, {} corrupt, {} duplicate",
+                if r.dry_run { " (dry run, nothing rewritten)" } else { "" },
+                r.kept,
+                r.dropped_stale,
+                r.dropped_corrupt,
+                r.dropped_duplicate
+            );
+        }
+        _ => usage(),
     }
 }
 
@@ -857,6 +1004,7 @@ fn main() {
         Some("repro") => cmd_repro(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("serve") => cmd_serve(&args),
+        Some("cache") => cmd_cache(&args),
         Some("config") => cmd_config(&args),
         Some("floorplan") => cmd_floorplan(&args),
         Some("isa") => cmd_isa(&args),

@@ -31,13 +31,14 @@ pub mod sig;
 pub use sig::LayerSig;
 
 use crate::exec::ExecCounters;
+use crate::store::{ArtifactKind, ArtifactStore};
 use crate::util::json::{obj, Json};
 use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
 use std::io::{self, BufRead, BufReader, Write};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Version of the simulator/memo semantics. Bump whenever a change can
 /// alter cycle counts or counters (timing model, compiler schedules,
@@ -108,13 +109,18 @@ pub struct LayerMemo {
     /// Append-only JSONL spill; dropped (cache degrades to in-memory)
     /// after the first write error.
     spill: Mutex<Option<File>>,
+    /// Artifact-store backing (`Program` records); replaces the private
+    /// spill file when the sweep runs against a store.
+    store: Option<Arc<ArtifactStore>>,
     hits: AtomicU64,
     misses: AtomicU64,
     /// Valid records recovered from an existing spill file.
     pub loaded: usize,
-    /// Lines rejected during load: truncated writes *and* records from
-    /// an older [`SIM_SCHEMA_VERSION`].
+    /// Malformed lines rejected during load (truncated writes).
     pub skipped: usize,
+    /// Well-formed records rejected for carrying an older
+    /// [`SIM_SCHEMA_VERSION`].
+    pub skipped_stale: usize,
 }
 
 impl LayerMemo {
@@ -123,10 +129,39 @@ impl LayerMemo {
         LayerMemo {
             map: Mutex::new(HashMap::new()),
             spill: Mutex::new(None),
+            store: None,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             loaded: 0,
             skipped: 0,
+            skipped_stale: 0,
+        }
+    }
+
+    /// Memo backed by the artifact store: existing
+    /// [`ArtifactKind::Program`] records are loaded and new layers land
+    /// as store artifacts (keyed by the layer signature) instead of a
+    /// private spill file.
+    pub fn store_backed(store: Arc<ArtifactStore>) -> LayerMemo {
+        let mut map = HashMap::new();
+        let mut loaded = 0;
+        for (key, payload) in store.records(ArtifactKind::Program) {
+            if let Some((sig, rec)) = LayerRecord::from_json(&payload) {
+                debug_assert_eq!(sig.0, key);
+                map.insert(sig.0, rec);
+                loaded += 1;
+            }
+        }
+        let (_, skipped, skipped_stale) = store.kind_counts(ArtifactKind::Program);
+        LayerMemo {
+            map: Mutex::new(map),
+            spill: Mutex::new(None),
+            store: Some(store),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            loaded,
+            skipped,
+            skipped_stale,
         }
     }
 
@@ -136,6 +171,7 @@ impl LayerMemo {
         let mut map = HashMap::new();
         let mut loaded = 0;
         let mut skipped = 0;
+        let mut skipped_stale = 0;
         if resume && path.exists() {
             let reader = BufReader::new(File::open(path)?);
             for line in reader.lines() {
@@ -143,12 +179,19 @@ impl LayerMemo {
                 if line.trim().is_empty() {
                     continue;
                 }
-                match Json::parse(&line).ok().and_then(|j| LayerRecord::from_json(&j)) {
+                let parsed = Json::parse(&line).ok();
+                match parsed.as_ref().and_then(LayerRecord::from_json) {
                     Some((sig, rec)) => {
                         map.insert(sig.0, rec);
                         loaded += 1;
                     }
-                    None => skipped += 1,
+                    // A well-formed record whose only defect is an
+                    // integer schema stamp ≠ current is *stale*, not
+                    // corrupt — the distinction feeds migration hints.
+                    None => match parsed.and_then(|j| j.get("schema").and_then(|v| v.as_i64())) {
+                        Some(v) if v > 0 && v != SIM_SCHEMA_VERSION as i64 => skipped_stale += 1,
+                        _ => skipped += 1,
+                    },
                 }
             }
         }
@@ -160,10 +203,12 @@ impl LayerMemo {
         Ok(LayerMemo {
             map: Mutex::new(map),
             spill: Mutex::new(Some(spill)),
+            store: None,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             loaded,
             skipped,
+            skipped_stale,
         })
     }
 
@@ -186,6 +231,12 @@ impl LayerMemo {
         // First writer wins; concurrent workers may race to simulate the
         // same layer, but determinism makes their records identical.
         if self.map.lock().unwrap().insert(sig.0, rec).is_some() {
+            return;
+        }
+        if let Some(store) = &self.store {
+            // Same best-effort discipline as the spill: a store write
+            // error costs persistence, never correctness.
+            store.put(ArtifactKind::Program, sig.0, rec.to_json(sig)).ok();
             return;
         }
         let mut spill = self.spill.lock().unwrap();
@@ -295,6 +346,21 @@ mod tests {
         assert_eq!(cold.loaded, 0);
         assert!(cold.is_empty());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn store_backed_memo_shares_program_artifacts() {
+        let store = Arc::new(ArtifactStore::in_memory());
+        {
+            let memo = LayerMemo::store_backed(store.clone());
+            memo.insert(LayerSig(9), sample_rec(90));
+        }
+        // A fresh memo over the same store warms up from it — the
+        // cross-run analogue of the spill file, shared with serve.
+        let memo = LayerMemo::store_backed(store.clone());
+        assert_eq!((memo.loaded, memo.skipped, memo.skipped_stale), (1, 0, 0));
+        assert_eq!(memo.get(LayerSig(9)).unwrap().cycles, 90);
+        assert_eq!(store.len(ArtifactKind::Program), 1);
     }
 
     #[test]

@@ -14,7 +14,11 @@ use super::{epsilon_for_ratio, predict_graph};
 use crate::compiler::graph::Graph;
 use crate::config::VtaConfig;
 use crate::engine::BackendKind;
+use crate::memo::SIM_SCHEMA_VERSION;
 use crate::runtime::{Session, SessionOptions};
+use crate::store::{ArtifactKind, ArtifactStore};
+use crate::sweep::stable_hash64;
+use crate::util::json::{obj, Json};
 
 /// One predicted-vs-measured pair (a layer, or a whole network when
 /// `label` ends in `/total`).
@@ -58,6 +62,49 @@ impl CalibrationReport {
     /// measured error band (ε = ρ² − 1; DESIGN.md §Two-phase sweep).
     pub fn suggested_epsilon(&self) -> f64 {
         epsilon_for_ratio(self.max_ratio())
+    }
+
+    /// Serialize for the artifact store's `Calibration` kind. The
+    /// schema stamp is [`SIM_SCHEMA_VERSION`]: calibration pairs model
+    /// predictions with simulator measurements, so any simulator-
+    /// semantics bump invalidates them.
+    pub fn to_json(&self) -> Json {
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                obj([
+                    ("label", Json::Str(p.label.clone())),
+                    ("predicted", Json::Int(p.predicted as i64)),
+                    ("measured", Json::Int(p.measured as i64)),
+                ])
+            })
+            .collect();
+        obj([
+            ("schema", Json::Int(SIM_SCHEMA_VERSION as i64)),
+            ("points", Json::Array(points)),
+        ])
+    }
+
+    /// Parse a stored report; `None` on any malformed field or a schema
+    /// version other than [`SIM_SCHEMA_VERSION`].
+    pub fn from_json(j: &Json) -> Option<CalibrationReport> {
+        if j.get("schema")?.as_i64()? != SIM_SCHEMA_VERSION as i64 {
+            return None;
+        }
+        let points = j
+            .get("points")?
+            .as_array()?
+            .iter()
+            .map(|p| {
+                Some(CalibPoint {
+                    label: p.get("label")?.as_str()?.to_string(),
+                    predicted: p.get("predicted")?.as_i64()? as u64,
+                    measured: p.get("measured")?.as_i64()? as u64,
+                })
+            })
+            .collect::<Option<Vec<CalibPoint>>>()?;
+        Some(CalibrationReport { points })
     }
 
     /// Human-readable table: one row per point plus the summary.
@@ -125,6 +172,36 @@ pub fn calibrate_graph(cfg: &VtaConfig, graph: &Graph) -> CalibrationReport {
         measured: session.cycles(),
     });
     CalibrationReport { points }
+}
+
+/// Artifact-store key of one `(config, graph)` calibration: FNV-1a of
+/// the canonical `calibrate|s<sim-schema>|<config JSON>|<graph name>`
+/// string (the config's serialized form is deterministic).
+pub fn calibration_key(cfg: &VtaConfig, graph: &Graph) -> u64 {
+    stable_hash64(&format!(
+        "calibrate|s{SIM_SCHEMA_VERSION}|{}|{}",
+        cfg.to_json().to_string_compact(),
+        graph.name
+    ))
+}
+
+/// [`calibrate_graph`] through the artifact store: return the stored
+/// [`ArtifactKind::Calibration`] report when one exists, else calibrate
+/// (one timing-only simulation + one model walk) and persist the result.
+pub fn calibrate_graph_with_store(
+    cfg: &VtaConfig,
+    graph: &Graph,
+    store: &ArtifactStore,
+) -> std::io::Result<CalibrationReport> {
+    let key = calibration_key(cfg, graph);
+    if let Some(report) =
+        store.get(ArtifactKind::Calibration, key).as_ref().and_then(CalibrationReport::from_json)
+    {
+        return Ok(report);
+    }
+    let report = calibrate_graph(cfg, graph);
+    store.put(ArtifactKind::Calibration, key, report.to_json())?;
+    Ok(report)
 }
 
 /// Merge reports (e.g. across the preset grid).

@@ -11,10 +11,13 @@ use crate::compiler::graph::Graph;
 use crate::config::{presets, VtaConfig};
 use crate::engine::BackendKind;
 use crate::runtime::{Session, SessionOptions};
+use crate::store::ArtifactStore;
 use crate::sweep;
+use crate::util::fsx::atomic_write;
 use crate::util::rng::Pcg32;
 use crate::util::stats;
 use crate::workloads;
+use std::sync::Arc;
 
 /// Run a graph on tsim under `opts`, returning the finished session.
 fn run_tsim(graph: &Graph, cfg: &VtaConfig, opts: SessionOptions, seed: u64) -> Session {
@@ -127,10 +130,10 @@ pub fn fig3(quick: bool, out_dir: &str) -> gantt::Utilization {
     }
     std::fs::create_dir_all(out_dir).ok();
     let full = gantt::svg(&tsim.trace, 0, end, 1200);
-    std::fs::write(format!("{out_dir}/fig3_utilization.svg"), full).ok();
+    atomic_write(format!("{out_dir}/fig3_utilization.svg").as_ref(), full.as_bytes()).ok();
     if marks.len() >= 8 {
         let zoom = gantt::svg(&tsim.trace, marks[4].0, marks[7].0, 1200);
-        std::fs::write(format!("{out_dir}/fig4_zoom.svg"), zoom).ok();
+        atomic_write(format!("{out_dir}/fig4_zoom.svg").as_ref(), zoom.as_bytes()).ok();
     }
     println!("(SVGs written to {out_dir}/)");
     util
@@ -327,6 +330,18 @@ pub fn fig13(quick: bool) -> Vec<Fig13Row> {
 
 /// Fig 13 with an explicit worker count (`0` = one per core).
 pub fn fig13_jobs(quick: bool, jobs: usize) -> Vec<Fig13Row> {
+    fig13_with_store(quick, jobs, None)
+}
+
+/// Fig 13 against an artifact store (`vta repro fig13 --store`): every
+/// measured point becomes (or reuses) a store `PointMeasurement`, so
+/// sweeps, the figure, and serve warmups share one measurement pool —
+/// a figure re-run after a sweep of the same grid simulates nothing.
+pub fn fig13_with_store(
+    quick: bool,
+    jobs: usize,
+    store: Option<Arc<ArtifactStore>>,
+) -> Vec<Fig13Row> {
     let spec = sweep::GridSpec::fig13(quick).to_sweep_spec();
     println!("== Design-space sweep (Fig 13): ResNet-18 ==");
     // Stream progress as points land (the full grid runs for hours);
@@ -340,9 +355,10 @@ pub fn fig13_jobs(quick: bool, jobs: usize) -> Vec<Fig13Row> {
         progress: true,
         memo: true,
         backend: BackendKind::TsimTiming,
+        store,
         ..Default::default()
     };
-    let outcome = sweep::run(&spec, &opts).expect("in-memory sweep performs no I/O");
+    let outcome = sweep::run(&spec, &opts).expect("fig13 sweep failed (store I/O?)");
     println!("{:<22} {:>6} {:>12} {:>10}", "config", "block", "cycles", "area");
     let mut rows = Vec::new();
     for (i, r) in outcome.results.iter().enumerate() {

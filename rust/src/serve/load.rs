@@ -12,9 +12,10 @@
 //! be produced by any tool that writes the same three fields.
 
 use crate::engine::VtaError;
+use crate::util::fsx::atomic_write;
 use crate::util::json::{obj, Json};
 use crate::util::rng::Pcg32;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader};
 use std::path::Path;
 
 /// One inference request: who arrives when, against which pooled
@@ -120,18 +121,20 @@ pub fn synth_trace(
 /// line (keys sorted — the codec's deterministic-object property).
 /// `seed` is a full-range `u64` serialized through JSON's signed i64
 /// (seeds ≥ 2^63 appear negative on disk); [`read_trace`] reverses the
-/// reinterpretation bit-exactly.
+/// reinterpretation bit-exactly. Atomic ([`atomic_write`]): a crash
+/// mid-write never leaves a truncated trace to replay.
 pub fn write_trace(path: &Path, trace: &[Request]) -> Result<(), VtaError> {
-    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let mut out = String::new();
     for r in trace {
         let line = obj([
             ("t_us", Json::Int(r.t_us as i64)),
             ("workload", Json::Str(r.workload.clone())),
             ("seed", Json::Int(r.seed as i64)),
         ]);
-        writeln!(out, "{}", line.to_string_compact())?;
+        out.push_str(&line.to_string_compact());
+        out.push('\n');
     }
-    out.flush()?;
+    atomic_write(path, out.as_bytes())?;
     Ok(())
 }
 

@@ -148,6 +148,12 @@ pub struct ServeOptions {
     /// runs under (default LRU). Timing/counters only — outputs are
     /// bit-identical at every setting.
     pub residency: crate::compiler::residency::ResidencyMode,
+    /// Artifact store shared with the sweep (`None` = standalone). When
+    /// set, the pool's layer memo is store-backed, warmup consumes any
+    /// matching sweep `PointMeasurement` (cycles are data-independent,
+    /// so any seed's measurement prices this entry), and fresh warmups
+    /// are persisted for the next run. Never changes the report.
+    pub store: Option<std::sync::Arc<crate::store::ArtifactStore>>,
 }
 
 impl Default for ServeOptions {
@@ -166,6 +172,7 @@ impl Default for ServeOptions {
             clock_mhz: 100,
             dispatch_overhead_us: 50,
             residency: crate::compiler::residency::ResidencyMode::default(),
+            store: None,
         }
     }
 }
@@ -315,6 +322,13 @@ impl ServeOptionsBuilder {
     /// Cross-layer residency heuristic for every pooled session.
     pub fn residency(mut self, mode: crate::compiler::residency::ResidencyMode) -> Self {
         self.opts.residency = mode;
+        self
+    }
+
+    /// Share an artifact store with the sweep (warmup reuse + persisted
+    /// layer memo).
+    pub fn store(mut self, store: Option<std::sync::Arc<crate::store::ArtifactStore>>) -> Self {
+        self.opts.store = store;
         self
     }
 

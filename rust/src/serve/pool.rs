@@ -30,6 +30,7 @@
 //! [`ServeOptions::validate`]).
 
 use super::ServeOptions;
+use crate::analysis::area;
 use crate::compiler::graph::Graph;
 use crate::compiler::layout::Shape;
 use crate::config::VtaConfig;
@@ -38,7 +39,8 @@ use crate::engine::{
     AnalyticalBackend, BackendKind, Engine, EvalRequest, PreparedShared, VtaError,
 };
 use crate::memo::LayerMemo;
-use crate::sweep::WorkloadSpec;
+use crate::store::{ArtifactKind, ArtifactStore};
+use crate::sweep::{PointResult, SweepJob, WorkloadSpec};
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
@@ -68,6 +70,9 @@ pub struct PoolEntry {
     pub cycles_per_request: u64,
     /// `cycles_per_request` at the pool's clock, in virtual µs (≥ 1).
     pub service_us: u64,
+    /// Whether the pricing came from a stored sweep measurement instead
+    /// of a fresh warmup simulation ([`ServeOptions::store`]).
+    pub warmed_from_store: bool,
 }
 
 /// One workload's graph built once for a whole fleet: the graph plus
@@ -126,9 +131,22 @@ impl SessionPool {
         let caps = opts.backend.instantiate().capabilities();
         // One memo (or prediction cache) spans the pool: repeated layer
         // shapes across entries warm each other, exactly as in a sweep.
-        let memo = (opts.memo && caps.supports_memo).then(|| Arc::new(LayerMemo::in_memory()));
+        // With a shared artifact store the memo loads the sweep's
+        // per-layer `Program` records, so warmups replay instead of
+        // re-simulating even on a cold serve process.
+        let memo = (opts.memo && caps.supports_memo).then(|| {
+            Arc::new(match &opts.store {
+                Some(s) => LayerMemo::store_backed(s.clone()),
+                None => LayerMemo::in_memory(),
+            })
+        });
         let predictions =
             (opts.backend == BackendKind::Analytical).then(PredictionCache::default);
+        // Only measured artifacts may price entries: the analytical
+        // backend's cycles are model estimates, which a stored tsim
+        // measurement would not reproduce.
+        let store = opts.store.as_ref().filter(|_| opts.backend != BackendKind::Analytical);
+        let cfg_json = cfg.to_json().to_string_compact();
 
         let mut entries: Vec<PoolEntry> = Vec::with_capacity(opts.workloads.len());
         let mut by_workload = BTreeMap::new();
@@ -150,9 +168,65 @@ impl SessionPool {
             let engine = builder.build()?;
             let prepared = engine
                 .prepare_shared_with_shapes(shared.graph.clone(), shared.shapes.clone())?;
-            let warm = engine.eval_shared(&prepared, &EvalRequest::seeded(0))?;
-            let cycles_per_request =
-                warm.cycles.expect("produces_cycles was checked at validation");
+            // Warm pricing through the store: any measured sweep point of
+            // this exact (config, workload, graph_seed, residency) prices
+            // the entry — cycles are data-independent, so the input seed
+            // is irrelevant and the cheapest match wins.
+            let stored_cycles = store.and_then(|s| {
+                s.find_map(ArtifactKind::PointMeasurement, |_, payload| {
+                    let p = PointResult::from_json(payload)?;
+                    (p.measured
+                        && p.workload == id
+                        && p.graph_seed == opts.graph_seed
+                        && p.residency == opts.residency
+                        && p.config.to_json().to_string_compact() == cfg_json)
+                        .then_some(p.cycles)
+                })
+            });
+            let warmed_from_store = stored_cycles.is_some();
+            let cycles_per_request = match stored_cycles {
+                Some(cycles) => cycles,
+                None => {
+                    let warm = engine.eval_shared(&prepared, &EvalRequest::seeded(0))?;
+                    let cycles =
+                        warm.cycles.expect("produces_cycles was checked at validation");
+                    if let Some(s) = store {
+                        // Persist the warmup as the seed-0 measurement a
+                        // sweep of this point would produce, under the
+                        // sweep's own key — the next sweep or serve run
+                        // reuses it. Best-effort, like the memo spill.
+                        let job = SweepJob {
+                            index: 0,
+                            cfg: cfg.clone(),
+                            workload: spec.clone(),
+                            seed: 0,
+                            graph_seed: opts.graph_seed,
+                        };
+                        let result = PointResult {
+                            config: cfg.clone(),
+                            workload: id.clone(),
+                            seed: 0,
+                            graph_seed: opts.graph_seed,
+                            cycles,
+                            macs: warm.counters.macs,
+                            dram_rd: warm.counters.load_bytes_total(),
+                            dram_wr: warm.counters.store_bytes,
+                            insns: warm.counters.insn_count,
+                            scaled_area: area::scaled_area(cfg),
+                            predicted_cycles: None,
+                            measured: true,
+                            residency: opts.residency,
+                        };
+                        s.put(
+                            ArtifactKind::PointMeasurement,
+                            job.cache_key(opts.residency),
+                            result.to_json(),
+                        )
+                        .ok();
+                    }
+                    cycles
+                }
+            };
             let service_us = (cycles_per_request / opts.clock_mhz).max(1);
             by_workload.insert(id.clone(), entries.len());
             entries.push(PoolEntry {
@@ -161,6 +235,7 @@ impl SessionPool {
                 prepared,
                 cycles_per_request,
                 service_us,
+                warmed_from_store,
             });
         }
         Ok(SessionPool { entries, by_workload, memo })
@@ -237,6 +312,24 @@ mod tests {
         let (hits, misses_after) = pool.memo_stats();
         assert!(hits > 0, "warm entries serve from the memo");
         assert_eq!(misses_after, misses, "no layer re-simulates after warmup");
+    }
+
+    #[test]
+    fn store_prices_warmup_without_simulation() {
+        let store = Arc::new(ArtifactStore::in_memory());
+        let mut opts = tiny_opts(BackendKind::TsimTiming);
+        opts.store = Some(store.clone());
+        let pool = SessionPool::build(&opts).unwrap();
+        let first = pool.get("micro@4").unwrap();
+        assert!(!first.warmed_from_store, "a cold store cannot price the entry");
+        assert_eq!(store.len(ArtifactKind::PointMeasurement), 1, "warmup persisted");
+        // Rebuild against the same store: the persisted warmup prices
+        // the entry with zero simulation, byte-identically.
+        let pool2 = SessionPool::build(&opts).unwrap();
+        let entry = pool2.get("micro@4").unwrap();
+        assert!(entry.warmed_from_store);
+        assert_eq!(entry.cycles_per_request, first.cycles_per_request);
+        assert_eq!(entry.service_us, first.service_us);
     }
 
     #[test]

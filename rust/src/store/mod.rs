@@ -1,0 +1,831 @@
+//! Content-addressed artifact store: one cache discipline for every
+//! derived artifact in the stack.
+//!
+//! Before this module, four subsystems each hand-rolled persistence:
+//! the sweep's [`ResultCache`](crate::sweep::ResultCache) JSONL, the
+//! layer-memo spill (`<cache>.layers.jsonl`), the analytical model's
+//! in-memory `PredictionCache`, and serve trace record/replay. None
+//! could reuse another's work — a sweep's measured points were invisible
+//! to `vta serve`, phase-1 predictions evaporated at process exit, and
+//! only the sweep was resumable. The store unifies them: every derived
+//! value is a typed, keyed **artifact** in one versioned on-disk
+//! directory, and every subsystem reads and writes through the same
+//! first-writer-wins, append-then-compact discipline.
+//!
+//! # Nodes (artifact kinds)
+//!
+//! | kind | payload | key derivation |
+//! |---|---|---|
+//! | [`ArtifactKind::Graph`] | workload identity (graphs rebuild deterministically from `(workload, graph_seed)`) | FNV of `graph\|workload\|graph_seed` |
+//! | [`ArtifactKind::Program`] | lowered layer result: cycles, insn/uop counts, exec counters | [`LayerSig`](crate::memo::LayerSig): config × op × tiling × residency |
+//! | [`ArtifactKind::Prediction`] | phase-1 analytical cycle estimate for a grid point | FNV of `predict\|` + the sweep key string |
+//! | [`ArtifactKind::PointMeasurement`] | a full measured [`PointResult`](crate::sweep::PointResult) | the sweep cache key (config × workload × seed × graph seed × residency) |
+//! | [`ArtifactKind::Calibration`] | predicted-vs-measured ρ table ([`CalibrationReport`](crate::model::calib::CalibrationReport)) | FNV of `calibrate\|` + config + graph identity |
+//! | [`ArtifactKind::Trace`] | a serve request trace | FNV of the serialized request list (content hash) |
+//! | [`ArtifactKind::ServeReport`] | a deterministic serve schedule report | FNV of `serve\|` + config + trace key + scheduler options |
+//!
+//! Every key bakes in the owning subsystem's schema version (the sweep
+//! key string leads with `v{SWEEP}|s{SIM}`, layer signatures hash
+//! [`SIM_SCHEMA_VERSION`](crate::memo::SIM_SCHEMA_VERSION)), so stale
+//! artifacts miss by key as well as being rejected by payload schema.
+//!
+//! # On-disk layout
+//!
+//! One directory, one append-only JSONL file per kind
+//! (`point.jsonl`, `program.jsonl`, …) plus a `manifest.json` summary.
+//! A record line is an envelope around the payload:
+//!
+//! ```text
+//! {"check":"<fnv64 of payload>","key":"<16-hex>","kind":"point",
+//!  "payload":{…},"payload_schema":4,"schema":1}
+//! ```
+//!
+//! * `schema` — the envelope format ([`STORE_SCHEMA_VERSION`]);
+//! * `payload_schema` — the owning subsystem's version
+//!   ([`ArtifactKind::payload_schema`]); records from an older version
+//!   load as **stale**: counted ([`KindStats::skipped_stale`], surfaced
+//!   by `vta cache stats` per version) but never returned by
+//!   [`ArtifactStore::get`];
+//! * `check` — FNV-1a of the compact payload, verified at load, by
+//!   [`ArtifactStore::verify`], and by gc, so a torn or bit-rotted line
+//!   is *corrupt* (skipped and re-derivable), never silently wrong.
+//!
+//! Appends are flushed per record (a killed run loses at most the
+//! in-flight artifact; loaders tolerate a torn tail line). Whole-file
+//! writes — the manifest and gc compaction — go through
+//! [`atomic_write`](crate::util::fsx::atomic_write).
+//!
+//! # Ops and the planner
+//!
+//! [`planner`] declares the operation graph (`lower`, `predict`,
+//! `simulate`, `calibrate`, `serve`) over these kinds and derives the
+//! minimal op path from what a caller *wants* to what the store already
+//! *has*; [`planner::materialize_points`] is the concrete driver,
+//! sharding the missing evaluations across
+//! [`util::pool`](crate::util::pool) workers.
+//!
+//! # Gc policy
+//!
+//! [`ArtifactStore::gc`] drops stale-schema and corrupt lines and
+//! rewrites each kind file compacted (first record per key wins,
+//! matching the in-memory discipline). Current-schema artifacts are
+//! never dropped — they are immutable facts about a deterministic
+//! stack, so there is nothing to invalidate but schema churn.
+
+pub mod planner;
+
+pub use planner::{materialize_points, plan, OpKind, PointPlan};
+
+use crate::util::fsx::atomic_write;
+use crate::util::hash::fnv1a64;
+use crate::util::json::{obj, Json};
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Version of the record *envelope* (the `schema` field of every line
+/// and of the manifest). Payload versioning is per-kind — see
+/// [`ArtifactKind::payload_schema`].
+pub const STORE_SCHEMA_VERSION: u32 = 1;
+
+/// Graph artifacts carry workload identity only (weights rebuild
+/// deterministically), versioned independently of the simulator.
+const GRAPH_PAYLOAD_SCHEMA: u32 = 1;
+
+/// The typed artifact taxonomy (the planner's *states*).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ArtifactKind {
+    /// A workload graph's identity: `(workload id, graph_seed)`.
+    Graph,
+    /// A lowered + simulated layer (the layer-memo record).
+    Program,
+    /// A phase-1 analytical cycle estimate for one grid point.
+    Prediction,
+    /// A tsim-measured design point (the sweep cache record).
+    PointMeasurement,
+    /// A predicted-vs-measured calibration table (model error band ρ).
+    Calibration,
+    /// A serve request trace.
+    Trace,
+    /// A deterministic serve schedule report.
+    ServeReport,
+}
+
+impl ArtifactKind {
+    pub const ALL: [ArtifactKind; 7] = [
+        ArtifactKind::Graph,
+        ArtifactKind::Program,
+        ArtifactKind::Prediction,
+        ArtifactKind::PointMeasurement,
+        ArtifactKind::Calibration,
+        ArtifactKind::Trace,
+        ArtifactKind::ServeReport,
+    ];
+
+    /// Stable short name: the `kind` field of every record, the CLI
+    /// spelling, and the stem of the kind's JSONL file.
+    pub fn cli_name(self) -> &'static str {
+        match self {
+            ArtifactKind::Graph => "graph",
+            ArtifactKind::Program => "program",
+            ArtifactKind::Prediction => "prediction",
+            ArtifactKind::PointMeasurement => "point",
+            ArtifactKind::Calibration => "calibration",
+            ArtifactKind::Trace => "trace",
+            ArtifactKind::ServeReport => "report",
+        }
+    }
+
+    /// File this kind's records append to, inside the store directory.
+    pub fn file_name(self) -> String {
+        format!("{}.jsonl", self.cli_name())
+    }
+
+    pub fn parse(s: &str) -> Option<ArtifactKind> {
+        ArtifactKind::ALL.into_iter().find(|k| k.cli_name() == s)
+    }
+
+    /// The *current* payload schema for this kind: the owning
+    /// subsystem's version constant. A record whose `payload_schema`
+    /// differs is stale — counted, reported, gc-able, never served.
+    pub fn payload_schema(self) -> u32 {
+        match self {
+            ArtifactKind::Graph => GRAPH_PAYLOAD_SCHEMA,
+            // Simulation-derived artifacts track simulator semantics.
+            ArtifactKind::Program
+            | ArtifactKind::Prediction
+            | ArtifactKind::Calibration => crate::memo::SIM_SCHEMA_VERSION,
+            ArtifactKind::PointMeasurement => crate::sweep::SWEEP_SCHEMA_VERSION,
+            ArtifactKind::Trace | ArtifactKind::ServeReport => {
+                crate::serve::SERVE_SCHEMA_VERSION
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ArtifactKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.cli_name())
+    }
+}
+
+/// One record line. `payload_schema` is a parameter (rather than always
+/// the current version) so tests and migrations can fabricate stale
+/// records.
+fn record_line(kind: ArtifactKind, key: u64, payload_schema: u32, payload: &Json) -> String {
+    let compact = payload.to_string_compact();
+    obj([
+        ("schema", Json::Int(STORE_SCHEMA_VERSION as i64)),
+        ("kind", Json::Str(kind.cli_name().to_string())),
+        ("key", Json::Str(format!("{key:016x}"))),
+        ("payload_schema", Json::Int(payload_schema as i64)),
+        ("check", Json::Str(format!("{:016x}", fnv1a64(&compact)))),
+        ("payload", payload.clone()),
+    ])
+    .to_string_compact()
+}
+
+enum Parsed {
+    Valid { key: u64, payload: Json },
+    Stale { payload_schema: u32 },
+    Corrupt,
+}
+
+/// Classify one line of a kind file: envelope schema, kind tag, key,
+/// and checksum must all verify; a verified record from another payload
+/// schema is stale rather than corrupt.
+fn classify_line(line: &str, kind: ArtifactKind) -> Parsed {
+    let Ok(j) = Json::parse(line) else { return Parsed::Corrupt };
+    let envelope_ok = j.get("schema").and_then(|v| v.as_i64())
+        == Some(STORE_SCHEMA_VERSION as i64)
+        && j.get("kind").and_then(|v| v.as_str()) == Some(kind.cli_name());
+    if !envelope_ok {
+        return Parsed::Corrupt;
+    }
+    let Some(key) = j
+        .get("key")
+        .and_then(|v| v.as_str())
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+    else {
+        return Parsed::Corrupt;
+    };
+    let Some(payload) = j.get("payload") else { return Parsed::Corrupt };
+    let check = format!("{:016x}", fnv1a64(&payload.to_string_compact()));
+    if j.get("check").and_then(|v| v.as_str()) != Some(check.as_str()) {
+        return Parsed::Corrupt;
+    }
+    let Some(payload_schema) = j
+        .get("payload_schema")
+        .and_then(|v| v.as_i64())
+        .and_then(|v| u32::try_from(v).ok())
+    else {
+        return Parsed::Corrupt;
+    };
+    if payload_schema != kind.payload_schema() {
+        return Parsed::Stale { payload_schema };
+    }
+    Parsed::Valid { key, payload: payload.clone() }
+}
+
+#[derive(Debug, Default)]
+struct KindState {
+    /// Current-schema records, key → payload. BTreeMap so every scan
+    /// ([`ArtifactStore::find_map`], `vta cache ls`) is deterministic.
+    records: BTreeMap<u64, Json>,
+    /// Lazily opened append handle (on-disk stores only). Dropped after
+    /// a gc compaction so appends reopen the rewritten file.
+    file: Option<File>,
+    /// Valid current-schema records recovered at open.
+    loaded: usize,
+    /// Corrupt lines (torn writes, checksum failures) skipped at open.
+    skipped: usize,
+    /// Verified records from an older payload schema skipped at open.
+    skipped_stale: usize,
+    /// Record count per payload schema version (stale versions
+    /// included) — the `vta cache stats` per-version breakdown.
+    schema_counts: BTreeMap<u32, usize>,
+}
+
+/// Load-time and live statistics for one artifact kind.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KindStats {
+    pub kind: ArtifactKind,
+    /// Live current-schema records.
+    pub records: usize,
+    pub loaded: usize,
+    pub skipped: usize,
+    pub skipped_stale: usize,
+    pub schema_counts: BTreeMap<u32, usize>,
+}
+
+/// Whole-store statistics snapshot ([`ArtifactStore::stats`]).
+#[derive(Debug, Clone)]
+pub struct StoreStats {
+    /// One entry per kind with any activity, in kind order.
+    pub kinds: Vec<KindStats>,
+    /// Lookups served / missed by this process (adapter-level reuse
+    /// recorded via [`ArtifactStore::record_reuse`] included).
+    pub hits: u64,
+    pub misses: u64,
+    /// Hit/miss counters the previous run persisted to the manifest.
+    pub last_run: Option<(u64, u64)>,
+}
+
+impl StoreStats {
+    pub fn total_records(&self) -> usize {
+        self.kinds.iter().map(|k| k.records).sum()
+    }
+
+    pub fn skipped_stale(&self) -> usize {
+        self.kinds.iter().map(|k| k.skipped_stale).sum()
+    }
+
+    /// Reuse ratio of the previous run (`hits / (hits + misses)`), the
+    /// number the warm-rerun acceptance gate reads.
+    pub fn last_run_reuse(&self) -> Option<f64> {
+        let (h, m) = self.last_run?;
+        (h + m > 0).then(|| h as f64 / (h + m) as f64)
+    }
+}
+
+/// Per-kind line verdicts from a [`ArtifactStore::verify`] pass.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct KindVerify {
+    pub valid: usize,
+    pub stale: usize,
+    pub corrupt: usize,
+}
+
+/// Result of a full on-disk re-read + checksum pass.
+#[derive(Debug, Clone, Default)]
+pub struct VerifyReport {
+    pub kinds: Vec<(ArtifactKind, KindVerify)>,
+}
+
+impl VerifyReport {
+    /// `true` when no line failed its checksum or envelope (stale
+    /// records are allowed — they are valid history, gc's business).
+    pub fn ok(&self) -> bool {
+        self.kinds.iter().all(|(_, v)| v.corrupt == 0)
+    }
+}
+
+/// Result of a [`ArtifactStore::gc`] pass (or its `--dry-run` preview).
+#[derive(Debug, Clone, Default)]
+pub struct GcReport {
+    /// Current-schema records kept (first per key).
+    pub kept: usize,
+    pub dropped_stale: usize,
+    pub dropped_corrupt: usize,
+    /// Duplicate current-schema lines merged away.
+    pub dropped_duplicate: usize,
+    pub dry_run: bool,
+}
+
+/// The content-addressed artifact store. Thread-safe: sweep workers,
+/// the serve pool, and adapters share one instance behind an `Arc`.
+#[derive(Debug)]
+pub struct ArtifactStore {
+    dir: Option<PathBuf>,
+    kinds: Mutex<BTreeMap<ArtifactKind, KindState>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    last_run: Option<(u64, u64)>,
+}
+
+impl ArtifactStore {
+    /// Store without a backing directory (tests, analytical runs).
+    pub fn in_memory() -> ArtifactStore {
+        ArtifactStore {
+            dir: None,
+            kinds: Mutex::new(BTreeMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            last_run: None,
+        }
+    }
+
+    /// Open (creating if needed) an on-disk store. Always resume
+    /// semantics: every kind file is loaded, current-schema records
+    /// become live, stale/corrupt lines are counted and skipped.
+    pub fn open(dir: &Path) -> io::Result<ArtifactStore> {
+        std::fs::create_dir_all(dir)?;
+        let mut kinds = BTreeMap::new();
+        for kind in ArtifactKind::ALL {
+            let path = dir.join(kind.file_name());
+            if !path.exists() {
+                continue;
+            }
+            let mut state = KindState::default();
+            for line in BufReader::new(File::open(&path)?).lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match classify_line(&line, kind) {
+                    Parsed::Valid { key, payload } => {
+                        // First record per key wins, matching the
+                        // in-memory first-writer-wins discipline.
+                        if let std::collections::btree_map::Entry::Vacant(e) =
+                            state.records.entry(key)
+                        {
+                            e.insert(payload);
+                        }
+                        state.loaded += 1;
+                        *state.schema_counts.entry(kind.payload_schema()).or_insert(0) += 1;
+                    }
+                    Parsed::Stale { payload_schema } => {
+                        state.skipped_stale += 1;
+                        *state.schema_counts.entry(payload_schema).or_insert(0) += 1;
+                    }
+                    Parsed::Corrupt => state.skipped += 1,
+                }
+            }
+            kinds.insert(kind, state);
+        }
+        let last_run = Self::read_manifest(dir);
+        Ok(ArtifactStore {
+            dir: Some(dir.to_path_buf()),
+            kinds: Mutex::new(kinds),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            last_run,
+        })
+    }
+
+    fn read_manifest(dir: &Path) -> Option<(u64, u64)> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).ok()?;
+        let j = Json::parse(&text).ok()?;
+        let run = j.get("last_run")?;
+        let int = |name: &str| run.get(name).and_then(|v| v.as_i64()).map(|v| v as u64);
+        Some((int("hits")?, int("misses")?))
+    }
+
+    /// Backing directory (`None` for an in-memory store).
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    /// Fetch an artifact; counts toward the hit/miss statistics. Only
+    /// current-payload-schema artifacts are ever returned.
+    pub fn get(&self, kind: ArtifactKind, key: u64) -> Option<Json> {
+        let found = self
+            .kinds
+            .lock()
+            .unwrap()
+            .get(&kind)
+            .and_then(|s| s.records.get(&key).cloned());
+        if found.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        found
+    }
+
+    /// Membership test without touching the hit/miss counters (the
+    /// planner's partitioning probe).
+    pub fn contains(&self, kind: ArtifactKind, key: u64) -> bool {
+        self.kinds
+            .lock()
+            .unwrap()
+            .get(&kind)
+            .is_some_and(|s| s.records.contains_key(&key))
+    }
+
+    /// Store an artifact under the kind's current payload schema.
+    /// First writer wins (deterministic producers make racing records
+    /// identical); returns `Ok(false)` when the key already existed.
+    /// The record is appended and flushed before this returns, so a
+    /// kill after a successful `put` never loses the artifact.
+    pub fn put(&self, kind: ArtifactKind, key: u64, payload: Json) -> io::Result<bool> {
+        let mut kinds = self.kinds.lock().unwrap();
+        let state = kinds.entry(kind).or_default();
+        if state.records.contains_key(&key) {
+            return Ok(false);
+        }
+        if let Some(dir) = &self.dir {
+            if state.file.is_none() {
+                state.file = Some(
+                    OpenOptions::new()
+                        .create(true)
+                        .append(true)
+                        .open(dir.join(kind.file_name()))?,
+                );
+            }
+            let file = state.file.as_mut().expect("just opened");
+            let mut line = record_line(kind, key, kind.payload_schema(), &payload);
+            line.push('\n');
+            file.write_all(line.as_bytes())?;
+            file.flush()?;
+        }
+        *state.schema_counts.entry(kind.payload_schema()).or_insert(0) += 1;
+        state.records.insert(key, payload);
+        Ok(true)
+    }
+
+    /// Deterministic scan (ascending key order): first `Some` wins.
+    /// Counts one hit on success, one miss on exhaustion — the
+    /// cross-subsystem consumers (serve warmup scanning for any-seed
+    /// point measurements) are reuse events worth accounting.
+    pub fn find_map<T>(
+        &self,
+        kind: ArtifactKind,
+        mut f: impl FnMut(u64, &Json) -> Option<T>,
+    ) -> Option<T> {
+        let kinds = self.kinds.lock().unwrap();
+        let found = kinds
+            .get(&kind)
+            .and_then(|s| s.records.iter().find_map(|(&k, p)| f(k, p)));
+        drop(kinds);
+        if found.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        found
+    }
+
+    /// All live records of a kind, in key order (the `ls` view and the
+    /// bulk-load path of the store-backed adapters).
+    pub fn records(&self, kind: ArtifactKind) -> Vec<(u64, Json)> {
+        self.kinds
+            .lock()
+            .unwrap()
+            .get(&kind)
+            .map(|s| s.records.iter().map(|(&k, p)| (k, p.clone())).collect())
+            .unwrap_or_default()
+    }
+
+    /// Live record count for one kind.
+    pub fn len(&self, kind: ArtifactKind) -> usize {
+        self.kinds.lock().unwrap().get(&kind).map(|s| s.records.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kinds.lock().unwrap().values().all(|s| s.records.is_empty())
+    }
+
+    /// `(loaded, skipped, skipped_stale)` counters from open time for
+    /// one kind — what the store-backed adapters surface upward.
+    pub fn kind_counts(&self, kind: ArtifactKind) -> (usize, usize, usize) {
+        self.kinds
+            .lock()
+            .unwrap()
+            .get(&kind)
+            .map(|s| (s.loaded, s.skipped, s.skipped_stale))
+            .unwrap_or((0, 0, 0))
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Fold adapter-level reuse into the store's counters — e.g. the
+    /// sweep reports grid points served from cache vs evaluated, which
+    /// the adapters resolve without per-point `get` calls.
+    pub fn record_reuse(&self, hits: u64, misses: u64) {
+        self.hits.fetch_add(hits, Ordering::Relaxed);
+        self.misses.fetch_add(misses, Ordering::Relaxed);
+    }
+
+    /// Statistics snapshot (kinds with any activity only).
+    pub fn stats(&self) -> StoreStats {
+        let kinds = self.kinds.lock().unwrap();
+        let per_kind = kinds
+            .iter()
+            .map(|(&kind, s)| KindStats {
+                kind,
+                records: s.records.len(),
+                loaded: s.loaded,
+                skipped: s.skipped,
+                skipped_stale: s.skipped_stale,
+                schema_counts: s.schema_counts.clone(),
+            })
+            .collect();
+        StoreStats {
+            kinds: per_kind,
+            hits: self.hits(),
+            misses: self.misses(),
+            last_run: self.last_run,
+        }
+    }
+
+    /// Write the manifest: per-kind record counts and this process's
+    /// hit/miss counters (read back as `last_run` by the next open —
+    /// how `vta cache stats` reports a finished run's reuse ratio).
+    /// No-op for in-memory stores.
+    pub fn sync(&self) -> io::Result<()> {
+        let Some(dir) = &self.dir else { return Ok(()) };
+        let kinds = self.kinds.lock().unwrap();
+        let mut kind_map = BTreeMap::new();
+        for (&kind, s) in kinds.iter() {
+            let counts: BTreeMap<String, Json> = s
+                .schema_counts
+                .iter()
+                .map(|(&v, &n)| (v.to_string(), Json::Int(n as i64)))
+                .collect();
+            kind_map.insert(
+                kind.cli_name().to_string(),
+                obj([
+                    ("records", Json::Int(s.records.len() as i64)),
+                    ("schema_counts", Json::Object(counts)),
+                ]),
+            );
+        }
+        let manifest = obj([
+            ("schema", Json::Int(STORE_SCHEMA_VERSION as i64)),
+            ("kinds", Json::Object(kind_map)),
+            (
+                "last_run",
+                obj([
+                    ("hits", Json::Int(self.hits() as i64)),
+                    ("misses", Json::Int(self.misses() as i64)),
+                ]),
+            ),
+        ]);
+        drop(kinds);
+        atomic_write(&dir.join("manifest.json"), manifest.to_string_pretty().as_bytes())
+    }
+
+    /// Re-read every kind file from disk and re-verify every envelope
+    /// and checksum. In-memory stores trivially verify.
+    pub fn verify(&self) -> io::Result<VerifyReport> {
+        let mut report = VerifyReport::default();
+        let Some(dir) = &self.dir else { return Ok(report) };
+        // Hold the lock so a concurrent put's partial flush can't be
+        // misread as corruption.
+        let _guard = self.kinds.lock().unwrap();
+        for kind in ArtifactKind::ALL {
+            let path = dir.join(kind.file_name());
+            if !path.exists() {
+                continue;
+            }
+            let mut v = KindVerify::default();
+            for line in BufReader::new(File::open(&path)?).lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match classify_line(&line, kind) {
+                    Parsed::Valid { .. } => v.valid += 1,
+                    Parsed::Stale { .. } => v.stale += 1,
+                    Parsed::Corrupt => v.corrupt += 1,
+                }
+            }
+            report.kinds.push((kind, v));
+        }
+        Ok(report)
+    }
+
+    /// Compact the store: drop stale-schema and corrupt lines, merge
+    /// duplicate keys (first wins), and rewrite each kind file
+    /// atomically. With `dry_run` nothing is written — the report
+    /// previews what a real pass would do. In-memory stores are a no-op.
+    pub fn gc(&self, dry_run: bool) -> io::Result<GcReport> {
+        let mut report = GcReport { dry_run, ..GcReport::default() };
+        let Some(dir) = &self.dir else { return Ok(report) };
+        let mut kinds = self.kinds.lock().unwrap();
+        for kind in ArtifactKind::ALL {
+            let path = dir.join(kind.file_name());
+            if !path.exists() {
+                continue;
+            }
+            let mut kept_lines = String::new();
+            let mut kept: BTreeMap<u64, Json> = BTreeMap::new();
+            for line in BufReader::new(File::open(&path)?).lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match classify_line(&line, kind) {
+                    Parsed::Valid { key, payload } => {
+                        if kept.contains_key(&key) {
+                            report.dropped_duplicate += 1;
+                        } else {
+                            kept_lines.push_str(&line);
+                            kept_lines.push('\n');
+                            kept.insert(key, payload);
+                            report.kept += 1;
+                        }
+                    }
+                    Parsed::Stale { .. } => report.dropped_stale += 1,
+                    Parsed::Corrupt => report.dropped_corrupt += 1,
+                }
+            }
+            if !dry_run {
+                atomic_write(&path, kept_lines.as_bytes())?;
+                let state = kinds.entry(kind).or_default();
+                // The old append handle points at the replaced inode;
+                // drop it so the next put reopens the compacted file.
+                state.file = None;
+                state.loaded = kept.len();
+                state.skipped = 0;
+                state.skipped_stale = 0;
+                state.schema_counts =
+                    std::iter::once((kind.payload_schema(), kept.len())).collect();
+                state.records = kept;
+            }
+        }
+        Ok(report)
+    }
+
+    /// The kinds with at least one live artifact — the planner's
+    /// `have` set for whole-pipeline questions.
+    pub fn have(&self) -> BTreeSet<ArtifactKind> {
+        self.kinds
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, s)| !s.records.is_empty())
+            .map(|(&k, _)| k)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_store(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("vta_store_test_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn payload(n: i64) -> Json {
+        obj([("cycles", Json::Int(n))])
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for kind in ArtifactKind::ALL {
+            assert_eq!(ArtifactKind::parse(kind.cli_name()), Some(kind));
+            assert!(kind.file_name().ends_with(".jsonl"));
+        }
+        assert_eq!(ArtifactKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn in_memory_put_get_first_writer_wins() {
+        let store = ArtifactStore::in_memory();
+        assert!(store.put(ArtifactKind::Prediction, 7, payload(100)).unwrap());
+        assert!(!store.put(ArtifactKind::Prediction, 7, payload(999)).unwrap());
+        assert_eq!(store.get(ArtifactKind::Prediction, 7), Some(payload(100)));
+        assert_eq!(store.get(ArtifactKind::Prediction, 8), None);
+        assert_eq!((store.hits(), store.misses()), (1, 1));
+        assert_eq!(store.len(ArtifactKind::Prediction), 1);
+        assert!(store.contains(ArtifactKind::Prediction, 7));
+        assert_eq!((store.hits(), store.misses()), (1, 1), "contains must not count");
+    }
+
+    #[test]
+    fn on_disk_roundtrip_and_reopen() {
+        let dir = temp_store("roundtrip");
+        {
+            let store = ArtifactStore::open(&dir).unwrap();
+            store.put(ArtifactKind::PointMeasurement, 1, payload(10)).unwrap();
+            store.put(ArtifactKind::PointMeasurement, 2, payload(20)).unwrap();
+            store.put(ArtifactKind::Program, 3, payload(30)).unwrap();
+            store.record_reuse(5, 1);
+            store.sync().unwrap();
+        }
+        let store = ArtifactStore::open(&dir).unwrap();
+        assert_eq!(store.get(ArtifactKind::PointMeasurement, 2), Some(payload(20)));
+        assert_eq!(store.len(ArtifactKind::PointMeasurement), 2);
+        assert_eq!(store.len(ArtifactKind::Program), 1);
+        let stats = store.stats();
+        assert_eq!(stats.last_run, Some((5, 1)), "manifest must carry last-run reuse");
+        assert!((stats.last_run_reuse().unwrap() - 5.0 / 6.0).abs() < 1e-12);
+        assert_eq!(
+            store.have(),
+            [ArtifactKind::Program, ArtifactKind::PointMeasurement].into_iter().collect()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_and_corrupt_lines_classified_at_open() {
+        let dir = temp_store("stale");
+        {
+            let store = ArtifactStore::open(&dir).unwrap();
+            store.put(ArtifactKind::PointMeasurement, 1, payload(10)).unwrap();
+        }
+        // Fabricate one stale record (older payload schema, valid
+        // checksum) and one corrupt line.
+        let path = dir.join(ArtifactKind::PointMeasurement.file_name());
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        let old = ArtifactKind::PointMeasurement.payload_schema() - 1;
+        text.push_str(&record_line(ArtifactKind::PointMeasurement, 2, old, &payload(20)));
+        text.push('\n');
+        text.push_str("{\"torn\":tru");
+        std::fs::write(&path, &text).unwrap();
+
+        let store = ArtifactStore::open(&dir).unwrap();
+        assert_eq!(store.kind_counts(ArtifactKind::PointMeasurement), (1, 1, 1));
+        assert_eq!(store.get(ArtifactKind::PointMeasurement, 2), None, "stale never served");
+        let stats = store.stats();
+        let point = stats
+            .kinds
+            .iter()
+            .find(|k| k.kind == ArtifactKind::PointMeasurement)
+            .unwrap();
+        assert_eq!(point.schema_counts.get(&old), Some(&1));
+        assert_eq!(stats.skipped_stale(), 1);
+
+        // verify() sees the same classification; gc drops both bad
+        // lines and the store reloads clean.
+        let verify = store.verify().unwrap();
+        assert!(!verify.ok(), "the torn line is corruption");
+        let gc = store.gc(true).unwrap();
+        assert_eq!((gc.kept, gc.dropped_stale, gc.dropped_corrupt), (1, 1, 1));
+        assert!(gc.dry_run);
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap(),
+            text,
+            "a dry run must not rewrite the file"
+        );
+        let gc = store.gc(false).unwrap();
+        assert_eq!((gc.kept, gc.dropped_stale, gc.dropped_corrupt), (1, 1, 1));
+        assert!(store.verify().unwrap().ok(), "gc leaves a fully valid store");
+        assert_eq!(store.kind_counts(ArtifactKind::PointMeasurement), (1, 0, 0));
+        // Appending after gc lands in the compacted file.
+        store.put(ArtifactKind::PointMeasurement, 9, payload(90)).unwrap();
+        let reopened = ArtifactStore::open(&dir).unwrap();
+        assert_eq!(reopened.len(ArtifactKind::PointMeasurement), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checksum_mismatch_is_corrupt() {
+        let schema = ArtifactKind::Trace.payload_schema();
+        let line = record_line(ArtifactKind::Trace, 5, schema, &payload(1))
+            .replace("\"cycles\":1", "\"cycles\":2");
+        assert!(matches!(classify_line(&line, ArtifactKind::Trace), Parsed::Corrupt));
+        let ok = record_line(ArtifactKind::Trace, 5, schema, &payload(1));
+        assert!(matches!(classify_line(&ok, ArtifactKind::Trace), Parsed::Valid { key: 5, .. }));
+        assert!(
+            matches!(classify_line(&ok, ArtifactKind::Graph), Parsed::Corrupt),
+            "a record in the wrong kind file must not load"
+        );
+    }
+
+    #[test]
+    fn find_map_scans_in_key_order_and_counts() {
+        let store = ArtifactStore::in_memory();
+        store.put(ArtifactKind::PointMeasurement, 20, payload(2)).unwrap();
+        store.put(ArtifactKind::PointMeasurement, 10, payload(1)).unwrap();
+        let first = store.find_map(ArtifactKind::PointMeasurement, |k, _| Some(k));
+        assert_eq!(first, Some(10), "scan order is ascending key order");
+        assert_eq!(store.find_map(ArtifactKind::Graph, |k, _| Some(k)), None);
+        assert_eq!((store.hits(), store.misses()), (1, 1));
+    }
+}

@@ -1,0 +1,268 @@
+//! The op-graph planner: fud2-style *states and operations* over the
+//! artifact taxonomy.
+//!
+//! Each [`ArtifactKind`] is a state; each [`OpKind`] is an operation
+//! consuming input states and producing exactly one output state:
+//!
+//! ```text
+//!   Graph ──lower──> Program ──simulate──> PointMeasurement ─┐
+//!     │                                        │             ├─serve──> ServeReport
+//!     └───predict──> Prediction ──calibrate────┘   Trace ────┘
+//!                         │            │
+//!                         └────────────┴──────> Calibration
+//! ```
+//!
+//! `Graph` and `Trace` are *source* states: no operation produces them
+//! (graphs rebuild deterministically from `(workload, graph_seed)`;
+//! traces come from synthesis or recording), so a plan that needs one
+//! the caller doesn't have is unsatisfiable rather than guessed at.
+//!
+//! [`plan`] answers "what is the minimal op path from what I *have* to
+//! what I *want*?" by deterministic backward chaining — every kind has
+//! exactly one producer, so the minimal plan is unique and duplicate
+//! work is structurally impossible. [`materialize_points`] is the
+//! concrete batch driver: partition a key list against the store
+//! ([`point_plan`]), evaluate only the missing points sharded across
+//! [`util::pool`](crate::util::pool) workers, persist every fresh
+//! artifact, and hand back payloads in input order.
+
+use super::{ArtifactKind, ArtifactStore};
+use crate::engine::VtaError;
+use crate::util::json::Json;
+use crate::util::pool::run_indexed;
+use std::collections::BTreeSet;
+
+/// The operations of the artifact DAG.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Compile + simulate layers: `Graph` → `Program` (the layer memo's
+    /// producer — lowering and per-layer simulation are fused in this
+    /// stack, so one op covers both).
+    Lower,
+    /// Score with the analytical model: `Graph` → `Prediction`.
+    Predict,
+    /// Measure a design point end to end: `Program` → `PointMeasurement`.
+    Simulate,
+    /// Pair predictions with measurements into an error band:
+    /// `Prediction` + `PointMeasurement` → `Calibration`.
+    Calibrate,
+    /// Run the serving scheduler: `PointMeasurement` + `Trace` →
+    /// `ServeReport` (warm service costs come from measurements).
+    Serve,
+}
+
+impl OpKind {
+    pub const ALL: [OpKind; 5] =
+        [OpKind::Lower, OpKind::Predict, OpKind::Simulate, OpKind::Calibrate, OpKind::Serve];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Lower => "lower",
+            OpKind::Predict => "predict",
+            OpKind::Simulate => "simulate",
+            OpKind::Calibrate => "calibrate",
+            OpKind::Serve => "serve",
+        }
+    }
+
+    /// Input states the op consumes.
+    pub fn inputs(self) -> &'static [ArtifactKind] {
+        match self {
+            OpKind::Lower | OpKind::Predict => &[ArtifactKind::Graph],
+            OpKind::Simulate => &[ArtifactKind::Program],
+            OpKind::Calibrate => &[ArtifactKind::Prediction, ArtifactKind::PointMeasurement],
+            OpKind::Serve => &[ArtifactKind::PointMeasurement, ArtifactKind::Trace],
+        }
+    }
+
+    /// The single state the op produces.
+    pub fn output(self) -> ArtifactKind {
+        match self {
+            OpKind::Lower => ArtifactKind::Program,
+            OpKind::Predict => ArtifactKind::Prediction,
+            OpKind::Simulate => ArtifactKind::PointMeasurement,
+            OpKind::Calibrate => ArtifactKind::Calibration,
+            OpKind::Serve => ArtifactKind::ServeReport,
+        }
+    }
+}
+
+impl std::fmt::Display for OpKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The op producing a kind (`None` for the source states).
+fn producer(kind: ArtifactKind) -> Option<OpKind> {
+    OpKind::ALL.into_iter().find(|op| op.output() == kind)
+}
+
+/// Minimal op path from `have` to `want`, in execution order. `Some(vec![])`
+/// when `want` is already materialized; `None` when the path needs a
+/// source state (`Graph`, `Trace`) the caller doesn't have.
+pub fn plan(want: ArtifactKind, have: &BTreeSet<ArtifactKind>) -> Option<Vec<OpKind>> {
+    let mut ops = Vec::new();
+    let mut resolved = have.clone();
+    resolve(want, &mut resolved, &mut ops).then_some(ops)
+}
+
+fn resolve(
+    kind: ArtifactKind,
+    resolved: &mut BTreeSet<ArtifactKind>,
+    ops: &mut Vec<OpKind>,
+) -> bool {
+    if resolved.contains(&kind) {
+        return true;
+    }
+    let Some(op) = producer(kind) else { return false };
+    for &input in op.inputs() {
+        if !resolve(input, resolved, ops) {
+            return false;
+        }
+    }
+    ops.push(op);
+    resolved.insert(kind);
+    true
+}
+
+/// A key list partitioned against the store: which positions reuse a
+/// materialized artifact, which must run the producing op.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PointPlan {
+    /// Positions (into the caller's key list) already in the store.
+    pub reused: Vec<usize>,
+    /// Positions whose artifact must be produced.
+    pub pending: Vec<usize>,
+}
+
+/// Partition `keys` by store membership for `kind` (no hit/miss
+/// accounting — this is the planning probe, not the consumption).
+pub fn point_plan(store: &ArtifactStore, kind: ArtifactKind, keys: &[u64]) -> PointPlan {
+    let (reused, pending): (Vec<usize>, Vec<usize>) =
+        (0..keys.len()).partition(|&i| store.contains(kind, keys[i]));
+    PointPlan { reused, pending }
+}
+
+/// Materialize a batch of [`ArtifactKind::PointMeasurement`]s: reuse
+/// what the store holds, evaluate the rest across up to `workers`
+/// threads (`eval` receives the position in `keys` and returns the
+/// payload), persist every fresh artifact, and return all payloads in
+/// key order. One store hit is counted per returned artifact.
+pub fn materialize_points(
+    store: &ArtifactStore,
+    keys: &[u64],
+    workers: usize,
+    eval: impl Fn(usize) -> Result<Json, VtaError> + Sync,
+) -> Result<Vec<Json>, VtaError> {
+    let plan = point_plan(store, ArtifactKind::PointMeasurement, keys);
+    let fresh = run_indexed(workers, plan.pending.len(), |i| eval(plan.pending[i]));
+    for (&pos, payload) in plan.pending.iter().zip(fresh) {
+        store
+            .put(ArtifactKind::PointMeasurement, keys[pos], payload?)
+            .map_err(VtaError::Io)?;
+    }
+    keys.iter()
+        .map(|&key| {
+            store.get(ArtifactKind::PointMeasurement, key).ok_or_else(|| {
+                VtaError::InvalidRequest(format!(
+                    "artifact {key:016x} vanished during materialization"
+                ))
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::obj;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn have(kinds: &[ArtifactKind]) -> BTreeSet<ArtifactKind> {
+        kinds.iter().copied().collect()
+    }
+
+    #[test]
+    fn every_kind_has_at_most_one_producer() {
+        for kind in ArtifactKind::ALL {
+            let producers: Vec<OpKind> =
+                OpKind::ALL.into_iter().filter(|op| op.output() == kind).collect();
+            assert!(producers.len() <= 1, "{kind}: {producers:?}");
+        }
+        assert_eq!(producer(ArtifactKind::Graph), None, "graphs are a source state");
+        assert_eq!(producer(ArtifactKind::Trace), None, "traces are a source state");
+    }
+
+    #[test]
+    fn plans_are_minimal_and_ordered() {
+        assert_eq!(
+            plan(ArtifactKind::PointMeasurement, &have(&[ArtifactKind::Graph])),
+            Some(vec![OpKind::Lower, OpKind::Simulate])
+        );
+        assert_eq!(
+            plan(ArtifactKind::ServeReport, &have(&[ArtifactKind::Graph, ArtifactKind::Trace])),
+            Some(vec![OpKind::Lower, OpKind::Simulate, OpKind::Serve])
+        );
+        assert_eq!(
+            plan(ArtifactKind::Calibration, &have(&[ArtifactKind::Graph])),
+            Some(vec![OpKind::Predict, OpKind::Lower, OpKind::Simulate, OpKind::Calibrate])
+        );
+        // Materialized intermediates shrink the plan.
+        assert_eq!(
+            plan(
+                ArtifactKind::ServeReport,
+                &have(&[ArtifactKind::PointMeasurement, ArtifactKind::Trace])
+            ),
+            Some(vec![OpKind::Serve])
+        );
+        // Want what you have: empty plan.
+        assert_eq!(
+            plan(ArtifactKind::PointMeasurement, &have(&[ArtifactKind::PointMeasurement])),
+            Some(vec![])
+        );
+    }
+
+    #[test]
+    fn missing_source_states_are_unsatisfiable() {
+        assert_eq!(plan(ArtifactKind::Program, &have(&[])), None);
+        assert_eq!(plan(ArtifactKind::Graph, &have(&[])), None);
+        assert_eq!(
+            plan(ArtifactKind::ServeReport, &have(&[ArtifactKind::Graph])),
+            None,
+            "serve needs a trace no op can fabricate"
+        );
+    }
+
+    #[test]
+    fn materialize_reuses_and_fills_gaps() {
+        let store = ArtifactStore::in_memory();
+        let keys = [10u64, 11, 12];
+        store.put(ArtifactKind::PointMeasurement, 11, obj([("cycles", Json::Int(5))])).unwrap();
+        let evals = AtomicUsize::new(0);
+        let out = materialize_points(&store, &keys, 2, |pos| {
+            evals.fetch_add(1, Ordering::Relaxed);
+            Ok(obj([("cycles", Json::Int(keys[pos] as i64))]))
+        })
+        .unwrap();
+        assert_eq!(evals.load(Ordering::Relaxed), 2, "the cached key must not re-evaluate");
+        assert_eq!(out[0], obj([("cycles", Json::Int(10))]));
+        assert_eq!(out[1], obj([("cycles", Json::Int(5))]), "reused payload, not re-derived");
+        assert_eq!(out[2], obj([("cycles", Json::Int(12))]));
+        assert_eq!(store.len(ArtifactKind::PointMeasurement), 3);
+        // Planning probe agrees with what happened.
+        let p = point_plan(&store, ArtifactKind::PointMeasurement, &keys);
+        assert_eq!(p.pending, Vec::<usize>::new());
+        assert_eq!(p.reused, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn materialize_propagates_eval_errors() {
+        let store = ArtifactStore::in_memory();
+        let err = materialize_points(&store, &[1, 2], 1, |_| {
+            Err(VtaError::InvalidRequest("boom".into()))
+        })
+        .unwrap_err();
+        assert!(matches!(err, VtaError::InvalidRequest(_)));
+    }
+}

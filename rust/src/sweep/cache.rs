@@ -22,26 +22,57 @@
 //! `cycles` value is tsim-measured: the two-phase engine never writes a
 //! model estimate into the cache (pruned points produce no records).
 
-use super::PointResult;
+use super::{PointResult, RecordParse};
+use crate::store::{ArtifactKind, ArtifactStore};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
 use std::io::{self, BufRead, BufReader, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 pub struct ResultCache {
     seen: BTreeMap<u64, PointResult>,
     file: Option<File>,
+    store: Option<Arc<ArtifactStore>>,
     /// Valid records recovered from an existing cache file.
     pub loaded: usize,
     /// Unparsable lines ignored during load (truncated final write).
     pub skipped: usize,
+    /// Well-formed records rejected for carrying an older schema
+    /// version (surfaced so warm runs can warn instead of silently
+    /// re-simulating the whole grid).
+    pub skipped_stale: usize,
 }
 
 impl ResultCache {
     /// Cache without a backing file (results kept only in memory).
     pub fn in_memory() -> ResultCache {
-        ResultCache { seen: BTreeMap::new(), file: None, loaded: 0, skipped: 0 }
+        ResultCache {
+            seen: BTreeMap::new(),
+            file: None,
+            store: None,
+            loaded: 0,
+            skipped: 0,
+            skipped_stale: 0,
+        }
+    }
+
+    /// Cache backed by the artifact store: existing
+    /// [`ArtifactKind::PointMeasurement`] records are loaded (always —
+    /// the store is one shared pool, so `resume` does not apply) and new
+    /// results land as store artifacts instead of a private JSONL file.
+    pub fn store_backed(store: Arc<ArtifactStore>) -> ResultCache {
+        let mut seen = BTreeMap::new();
+        let mut loaded = 0;
+        for (key, payload) in store.records(ArtifactKind::PointMeasurement) {
+            if let Some(result) = PointResult::from_json(&payload) {
+                seen.insert(key, result);
+                loaded += 1;
+            }
+        }
+        let (_, skipped, skipped_stale) = store.kind_counts(ArtifactKind::PointMeasurement);
+        ResultCache { seen, file: None, store: Some(store), loaded, skipped, skipped_stale }
     }
 
     /// Open a file-backed cache. With `resume`, existing records are
@@ -51,6 +82,7 @@ impl ResultCache {
         let mut seen = BTreeMap::new();
         let mut loaded = 0;
         let mut skipped = 0;
+        let mut skipped_stale = 0;
         if resume && path.exists() {
             let reader = BufReader::new(File::open(path)?);
             for line in reader.lines() {
@@ -58,12 +90,16 @@ impl ResultCache {
                 if line.trim().is_empty() {
                     continue;
                 }
-                match Json::parse(&line).ok().and_then(|j| PointResult::from_json(&j)) {
-                    Some(result) => {
-                        seen.insert(result.cache_key(), result);
-                        loaded += 1;
-                    }
-                    None => skipped += 1,
+                match Json::parse(&line) {
+                    Ok(j) => match PointResult::classify(&j) {
+                        RecordParse::Valid(result) => {
+                            seen.insert(result.cache_key(), *result);
+                            loaded += 1;
+                        }
+                        RecordParse::Stale { .. } => skipped_stale += 1,
+                        RecordParse::Malformed => skipped += 1,
+                    },
+                    Err(_) => skipped += 1,
                 }
             }
         }
@@ -72,7 +108,7 @@ impl ResultCache {
         } else {
             OpenOptions::new().create(true).write(true).truncate(true).open(path)?
         };
-        Ok(ResultCache { seen, file: Some(file), loaded, skipped })
+        Ok(ResultCache { seen, file: Some(file), store: None, loaded, skipped, skipped_stale })
     }
 
     pub fn get(&self, key: u64) -> Option<&PointResult> {
@@ -91,10 +127,13 @@ impl ResultCache {
         self.seen.is_empty()
     }
 
-    /// Record a completed point: one JSONL line, flushed immediately so
-    /// a kill after this call never loses the result.
+    /// Record a completed point: one JSONL line (or one store
+    /// artifact), flushed immediately so a kill after this call never
+    /// loses the result.
     pub fn insert(&mut self, result: &PointResult) -> io::Result<()> {
-        if let Some(file) = &mut self.file {
+        if let Some(store) = &self.store {
+            store.put(ArtifactKind::PointMeasurement, result.cache_key(), result.to_json())?;
+        } else if let Some(file) = &mut self.file {
             let mut line = result.to_json().to_string_compact();
             line.push('\n');
             file.write_all(line.as_bytes())?;
@@ -172,6 +211,44 @@ mod tests {
         let c = ResultCache::open(&path, true).unwrap();
         assert_eq!(c.loaded, 1);
         assert_eq!(c.skipped, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn store_backed_cache_shares_point_artifacts() {
+        let store = Arc::new(ArtifactStore::in_memory());
+        let r = sample(1);
+        {
+            let mut c = ResultCache::store_backed(store.clone());
+            c.insert(&r).unwrap();
+        }
+        // A second cache over the same store sees the record: this is
+        // how sweep, repro, and serve share measurements.
+        let c = ResultCache::store_backed(store.clone());
+        assert_eq!(c.loaded, 1);
+        assert_eq!(c.get(r.cache_key()), Some(&r));
+        assert_eq!(store.len(ArtifactKind::PointMeasurement), 1);
+    }
+
+    #[test]
+    fn stale_schema_lines_are_counted_separately() {
+        let path = temp_path("stale");
+        {
+            let mut c = ResultCache::open(&path, false).unwrap();
+            c.insert(&sample(1)).unwrap();
+            c.insert(&sample(2)).unwrap();
+        }
+        // Age one record's schema stamp; it must load as stale, not
+        // malformed (the distinction drives the CLI's migration hint).
+        let text = std::fs::read_to_string(&path).unwrap();
+        let current = format!("\"schema\":{}", crate::sweep::SWEEP_SCHEMA_VERSION);
+        let (first, rest) = text.split_once('\n').unwrap();
+        let aged = format!("{}\n{rest}", first.replace(&current, "\"schema\":2"));
+        std::fs::write(&path, aged).unwrap();
+        let c = ResultCache::open(&path, true).unwrap();
+        assert_eq!(c.loaded, 1);
+        assert_eq!(c.skipped, 0);
+        assert_eq!(c.skipped_stale, 1);
         std::fs::remove_file(&path).ok();
     }
 

@@ -79,6 +79,7 @@ use crate::config::{ConfigError, VtaConfig};
 use crate::engine::backends::PredictionCache;
 use crate::engine::{AnalyticalBackend, BackendKind, Engine, EvalRequest, VtaError};
 use crate::memo::{LayerMemo, SIM_SCHEMA_VERSION};
+use crate::store::{ArtifactKind, ArtifactStore};
 use crate::util::json::{obj, Json};
 use queue::JobQueue;
 use std::collections::BTreeMap;
@@ -194,6 +195,25 @@ impl SweepJob {
             residency,
         ))
     }
+
+    /// Store key of this point's phase-1 prediction artifact
+    /// ([`ArtifactKind::Prediction`]): the point key string under a
+    /// `predict|` tag, so a prediction and a measurement of the same
+    /// point never collide.
+    pub fn prediction_key(&self, residency: ResidencyMode) -> u64 {
+        stable_hash64(&format!(
+            "predict|{}",
+            key_string(&self.cfg, &self.workload.id(), self.seed, self.graph_seed, residency)
+        ))
+    }
+}
+
+/// Store key of a workload-graph artifact ([`ArtifactKind::Graph`]).
+/// Graphs are identified by `(workload id, graph_seed)` alone — the
+/// synthetic weights rebuild deterministically from that pair, so the
+/// artifact records identity and provenance, not tensors.
+pub fn graph_artifact_key(workload: &str, graph_seed: u64) -> u64 {
+    stable_hash64(&format!("graph|{workload}|{graph_seed}"))
 }
 
 /// A completed design point: the full configuration plus the measured
@@ -269,10 +289,32 @@ impl PointResult {
     /// an older record format or simulator semantics are rejected, not
     /// mixed in). `predicted_cycles` is optional; `measured` defaults to
     /// `true` (pre-redesign v3 records stored measured cycles only).
+    /// Loaders that must *count* stale records separately use
+    /// [`PointResult::classify`] instead.
     pub fn from_json(j: &Json) -> Option<PointResult> {
-        if j.get("schema")?.as_i64()? != SWEEP_SCHEMA_VERSION as i64 {
-            return None;
+        match PointResult::classify(j) {
+            RecordParse::Valid(r) => Some(*r),
+            _ => None,
         }
+    }
+
+    /// Tri-state load classification: a well-formed record from an
+    /// older schema is [`RecordParse::Stale`] (counted and surfaced by
+    /// the cache loader and `vta cache stats`), distinct from a torn or
+    /// corrupt [`RecordParse::Malformed`] line.
+    pub fn classify(j: &Json) -> RecordParse {
+        match j.get("schema").and_then(|v| v.as_i64()) {
+            Some(v) if v == SWEEP_SCHEMA_VERSION as i64 => match PointResult::parse_fields(j) {
+                Some(r) => RecordParse::Valid(Box::new(r)),
+                None => RecordParse::Malformed,
+            },
+            Some(v) if v > 0 => RecordParse::Stale { schema: v as u32 },
+            _ => RecordParse::Malformed,
+        }
+    }
+
+    /// Field-level parse (schema already checked by the caller).
+    fn parse_fields(j: &Json) -> Option<PointResult> {
         let int = |name: &str| j.get(name).and_then(|v| v.as_i64()).map(|v| v as u64);
         Some(PointResult {
             config: VtaConfig::from_json(j.get("config")?).ok()?,
@@ -290,6 +332,20 @@ impl PointResult {
             residency: ResidencyMode::parse(j.get("residency")?.as_str()?)?,
         })
     }
+}
+
+/// Result of classifying one cache line at load time
+/// ([`PointResult::classify`]). The distinction between `Stale` and
+/// `Malformed` is what lets the cache report "your cache predates the
+/// current schema" instead of silently re-simulating everything.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RecordParse {
+    /// A current-schema record (boxed: a full config rides along).
+    Valid(Box<PointResult>),
+    /// A well-formed record written under a different schema version.
+    Stale { schema: u32 },
+    /// Not a recognizable record — a torn write or corruption.
+    Malformed,
 }
 
 /// Per-point evaluation options (fidelity + the shared fast-path
@@ -461,6 +517,16 @@ pub struct SweepOptions {
     /// Cross-layer residency heuristic every evaluation (and every
     /// phase-1 prediction) runs under; part of every cache key.
     pub residency: ResidencyMode,
+    /// Artifact store backing this sweep (see [`crate::store`]). When
+    /// set, `cache_path`/`resume` are ignored — the store *is* the
+    /// cache, always with resume semantics: point results load from and
+    /// append to [`ArtifactKind::PointMeasurement`], the layer memo
+    /// from [`ArtifactKind::Program`], phase-1 predictions become
+    /// first-class [`ArtifactKind::Prediction`] artifacts, and the
+    /// run's reuse counters land in the store manifest. Ignored (like
+    /// `cache_path`) by analytical sweeps: model estimates never enter
+    /// the measured store.
+    pub store: Option<Arc<ArtifactStore>>,
 }
 
 impl Default for SweepOptions {
@@ -476,6 +542,7 @@ impl Default for SweepOptions {
             backend: BackendKind::Tsim,
             two_phase: None,
             residency: ResidencyMode::default(),
+            store: None,
         }
     }
 }
@@ -535,6 +602,11 @@ pub struct SweepOutcome {
     pub memo_hits: u64,
     /// Layer-memo misses, i.e. layers actually simulated.
     pub memo_misses: u64,
+    /// Well-formed point records skipped at cache load because they
+    /// were written under an older schema version — surfaced so a
+    /// `--resume` user learns the cache went stale (and everything
+    /// re-simulates) instead of wondering where the warm start went.
+    pub skipped_stale: usize,
 }
 
 impl SweepOutcome {
@@ -621,6 +693,7 @@ fn phase1_prune(
     tp: &TwoPhaseOptions,
     residency: ResidencyMode,
     feasible: &[bool],
+    store: Option<&ArtifactStore>,
 ) -> Result<(Vec<usize>, Vec<PrunedPoint>, Vec<u64>), VtaError> {
     // One prediction cache (keyed by the layer-memo signature) shared
     // across every phase-1 engine: the grid repeats layer shapes
@@ -630,6 +703,17 @@ fn phase1_prune(
     let mut predictions = vec![0u64; jobs.len()];
     for &j in &feas_idx {
         let job = &jobs[j];
+        // A prior run's prediction artifact short-circuits the model
+        // entirely — phase 1 on a warm store is pure lookup.
+        let pkey = job.prediction_key(residency);
+        if let Some(p) = store.and_then(|s| {
+            s.get(ArtifactKind::Prediction, pkey)
+                .and_then(|payload| payload.get("cycles").and_then(|c| c.as_i64()))
+                .map(|v| v as u64)
+        }) {
+            predictions[j] = p;
+            continue;
+        }
         // Predict under the same residency mode phase 2 will measure —
         // pruning against a front the measurement can't reach would be
         // unsound.
@@ -640,6 +724,14 @@ fn phase1_prune(
         let evaluation =
             engine.run(&graphs[&job.workload.id()], &EvalRequest::seeded(job.seed))?;
         predictions[j] = evaluation.cycles.unwrap_or(0);
+        if let Some(s) = store {
+            s.put(
+                ArtifactKind::Prediction,
+                pkey,
+                obj([("cycles", Json::Int(predictions[j] as i64))]),
+            )
+            .map_err(VtaError::Io)?;
+        }
     }
     // Area is exact (the identical `analysis::area` model both phases
     // use); only the cycle axis carries model error, so the band
@@ -684,16 +776,19 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome, VtaErr
     // Built lazily: single-phase warm-cache runs never need a graph.
     let mut graphs: BTreeMap<String, Graph> = BTreeMap::new();
 
-    // Analytical sweeps never touch the on-disk cache: its records are
-    // measured results, and predictions must not masquerade as them.
-    let cache_path = if analytical {
+    // Analytical sweeps never touch the on-disk cache or the artifact
+    // store: their records are measured results, and predictions must
+    // not masquerade as them.
+    let store = if analytical { None } else { opts.store.clone() };
+    let cache_path = if analytical || store.is_some() {
         None
     } else {
         opts.cache_path.clone()
     };
-    let mut cache = match &cache_path {
-        Some(path) => ResultCache::open(path, opts.resume)?,
-        None => ResultCache::in_memory(),
+    let mut cache = match (&store, &cache_path) {
+        (Some(s), _) => ResultCache::store_backed(s.clone()),
+        (None, Some(path)) => ResultCache::open(path, opts.resume)?,
+        (None, None) => ResultCache::in_memory(),
     };
 
     // Screen out grid points whose network cannot be tiled into the
@@ -711,7 +806,7 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome, VtaErr
                     screen_feasibility(&jobs, &(0..jobs.len()).collect::<Vec<_>>(), &graphs,
                         opts.residency, &mut infeasible);
                 let (eval, pruned, predictions) =
-                    phase1_prune(&jobs, &graphs, tp, opts.residency, &feasible)?;
+                    phase1_prune(&jobs, &graphs, tp, opts.residency, &feasible, store.as_deref())?;
                 (eval, pruned, predictions.into_iter().map(Some).collect())
             }
             None => {
@@ -750,12 +845,14 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome, VtaErr
     let simulated = pending.len();
 
     // The shared layer memo (when enabled): one instance behind an Arc,
-    // consulted by every worker, spilled next to the result cache. The
-    // analytical backend has its own prediction cache instead.
+    // consulted by every worker, spilled next to the result cache — or
+    // into the artifact store's Program records when a store backs the
+    // sweep. The analytical backend has its own prediction cache.
     let memo: Option<Arc<LayerMemo>> = if opts.memo && !analytical {
-        Some(Arc::new(match &cache_path {
-            Some(path) => LayerMemo::open(&memo_spill_path(path), opts.resume)?,
-            None => LayerMemo::in_memory(),
+        Some(Arc::new(match (&store, &cache_path) {
+            (Some(s), _) => LayerMemo::store_backed(s.clone()),
+            (None, Some(path)) => LayerMemo::open(&memo_spill_path(path), opts.resume)?,
+            (None, None) => LayerMemo::in_memory(),
         }))
     } else {
         None
@@ -885,6 +982,25 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome, VtaErr
         .collect();
     let (memo_hits, memo_misses) =
         memo.as_ref().map(|m| (m.hits(), m.misses())).unwrap_or((0, 0));
+    if let Some(s) = &store {
+        // Register every graph the sweep touched as a source artifact
+        // (lightweight descriptor: graphs rebuild deterministically from
+        // `(workload, graph_seed)`, so the payload documents rather than
+        // serializes), stamp the run's reuse ratio, and persist the
+        // manifest so `vta cache stats` reports this run.
+        for (id, graph) in &graphs {
+            let payload = obj([
+                ("workload", Json::Str(id.clone())),
+                ("graph_seed", Json::Int(spec.graph_seed as i64)),
+                ("name", Json::Str(graph.name.clone())),
+                ("nodes", Json::Int(graph.nodes.len() as i64)),
+            ]);
+            s.put(ArtifactKind::Graph, graph_artifact_key(id, spec.graph_seed), payload)
+                .map_err(VtaError::Io)?;
+        }
+        s.record_reuse(cached as u64, simulated as u64);
+        s.sync().map_err(VtaError::Io)?;
+    }
     Ok(SweepOutcome {
         results,
         job_indices: eval_jobs,
@@ -893,6 +1009,7 @@ pub fn run(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome, VtaErr
         infeasible,
         cached,
         simulated,
+        skipped_stale: cache.skipped_stale,
         workers,
         memo_hits,
         memo_misses,
@@ -1046,6 +1163,7 @@ mod tests {
             infeasible: vec![],
             cached: 0,
             simulated: 0,
+            skipped_stale: 0,
             workers: 0,
             memo_hits: 0,
             memo_misses: 0,
@@ -1079,6 +1197,7 @@ mod tests {
             infeasible: vec![],
             cached: 0,
             simulated: 1,
+            skipped_stale: 0,
             workers: 1,
             memo_hits: 0,
             memo_misses: 0,

@@ -128,8 +128,11 @@ impl Bench {
     /// Bench mains call this once after their last benchmark.
     pub fn save_if_requested(&self) {
         if let Some(path) = &self.json_path {
-            std::fs::write(path, self.to_json().to_string_pretty())
-                .unwrap_or_else(|e| panic!("writing bench json {path}: {e}"));
+            crate::util::fsx::atomic_write(
+                std::path::Path::new(path),
+                self.to_json().to_string_pretty().as_bytes(),
+            )
+            .unwrap_or_else(|e| panic!("writing bench json {path}: {e}"));
             println!("bench results written to {path}");
         }
     }

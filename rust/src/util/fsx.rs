@@ -1,0 +1,102 @@
+//! Crash-safe filesystem helpers.
+//!
+//! Every whole-file JSON artifact the stack writes (sweep summaries,
+//! serve reports, configs, bench baselines, the artifact-store manifest)
+//! goes through [`atomic_write`]: the bytes land in a same-directory
+//! temporary file which is then renamed over the target. `rename(2)` is
+//! atomic on every platform we run on, so a reader — including a resumed
+//! run after a kill — observes either the old file or the complete new
+//! one, never a truncated half-write.
+//!
+//! Append-only JSONL streams (the sweep result cache, the layer-memo
+//! spill, the artifact store's kind files) deliberately do **not** use
+//! this helper: rewriting the whole file per record would be O(n²), and
+//! their loaders are already truncation-tolerant (a torn tail line is
+//! counted and skipped, and the point simply re-evaluates). The atomic
+//! path covers the files whose loaders are *not* line-oriented.
+
+use std::fs::{self, File};
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Distinguishes concurrent writers within one process; the pid in the
+/// temp name distinguishes processes sharing a directory.
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn temp_sibling(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "file".to_string());
+    let seq = TEMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    path.with_file_name(format!(".{name}.tmp.{}.{seq}", std::process::id()))
+}
+
+/// Write `bytes` to `path` atomically: temp file in the same directory
+/// (rename across filesystems is not atomic), flush, then rename over
+/// the target. On any error the temp file is removed and the target is
+/// untouched.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let tmp = temp_sibling(path);
+    let result = (|| {
+        let mut file = File::create(&tmp)?;
+        file.write_all(bytes)?;
+        file.flush()?;
+        file.sync_all()?;
+        fs::rename(&tmp, path)
+    })();
+    if result.is_err() {
+        fs::remove_file(&tmp).ok();
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("vta_fsx_{}_{name}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn writes_and_overwrites() {
+        let dir = temp_dir("roundtrip");
+        let path = dir.join("out.json");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second, longer payload").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"second, longer payload");
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn leaves_no_temp_files_behind() {
+        let dir = temp_dir("clean");
+        let path = dir.join("out.json");
+        atomic_write(&path, b"payload").unwrap();
+        let names: Vec<String> = fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["out.json".to_string()], "only the target may remain");
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_write_preserves_target() {
+        let dir = temp_dir("preserve");
+        let path = dir.join("out.json");
+        atomic_write(&path, b"good").unwrap();
+        // Writing *at* a directory path must fail without touching the
+        // sibling target or leaving temp droppings.
+        let bad = dir.join("sub");
+        fs::create_dir_all(bad.join("x")).unwrap();
+        assert!(atomic_write(&bad.join("x"), b"nope").is_err());
+        assert_eq!(fs::read(&path).unwrap(), b"good");
+        fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -6,6 +6,7 @@
 pub mod bench;
 pub mod bitfield;
 pub mod cli;
+pub mod fsx;
 pub mod hash;
 pub mod json;
 pub mod pool;

@@ -1,0 +1,241 @@
+//! Cross-subsystem artifact-store reuse (the ISSUE-9 acceptance
+//! invariants): one content-addressed store spans the sweep engine, the
+//! Fig 13 repro driver, serve warmup, and model calibration.
+//!
+//! * a reduced-grid sweep populates the store, after which `repro
+//!   fig13` over the same grid simulates **nothing** and a `vta serve`
+//!   pool prices its warmup from the sweep's `PointMeasurement`s;
+//! * the manifest's last-run counters report >= 90% reuse on the warm
+//!   re-run (the `vta cache stats` acceptance gate);
+//! * store-on and store-off sweeps are byte-identical, point for point;
+//! * calibration tables are first-class artifacts a fresh process
+//!   reuses byte-for-byte;
+//! * the op-graph planner derives the expected minimal path from what
+//!   the store actually holds after a sweep.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use vta::config::presets;
+use vta::engine::BackendKind;
+use vta::model::calib;
+use vta::repro;
+use vta::serve::{ServeOptions, SessionPool};
+use vta::store::{plan, ArtifactKind, ArtifactStore, OpKind};
+use vta::sweep::{self, GridSpec, SweepOptions, SweepSpec, WorkloadSpec};
+use vta::workloads;
+
+/// A fresh per-test store directory (removed on entry so a crashed
+/// earlier run can never leak artifacts into this one).
+fn temp_store(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("vta_store_it_{}_{name}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// The fast 8-point micro grid (mirrors `sweep_engine.rs`).
+fn micro_spec() -> SweepSpec {
+    let mut configs = Vec::new();
+    for axi in [8usize, 16] {
+        for scale in [1usize, 2] {
+            let mut cfg = presets::tiny_config();
+            cfg.name = format!("tiny-s{scale}-m{axi}");
+            cfg.axi_bytes = axi;
+            cfg.inp_depth *= scale;
+            cfg.wgt_depth *= scale;
+            cfg.acc_depth *= scale;
+            configs.push(cfg);
+        }
+    }
+    SweepSpec {
+        configs,
+        workloads: vec![WorkloadSpec::Micro { block: 4 }],
+        seeds: vec![7, 8],
+        graph_seed: 42,
+    }
+}
+
+/// Tentpole acceptance: sweep -> fig13 -> serve share one measurement
+/// pool. The quick Fig 13 grid is swept cold into an on-disk store;
+/// a subsequent `repro fig13` against a *fresh handle* on the same
+/// directory re-simulates nothing, the manifest reports >= 90% reuse,
+/// and a serve pool over one of the grid's (config, workload) points
+/// warms up from the stored measurement without evaluating.
+#[test]
+fn store_spans_sweep_fig13_and_serve_warmup() {
+    let dir = temp_store("fig13_serve");
+    let spec = GridSpec::fig13(true).to_sweep_spec();
+    let n = spec.jobs().len();
+
+    // Cold sweep: every grid point simulates and lands in the store.
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let cold = sweep::run(
+        &spec,
+        &SweepOptions {
+            jobs: 2,
+            memo: true,
+            backend: BackendKind::TsimTiming,
+            store: Some(store.clone()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(cold.simulated, n);
+    assert_eq!(cold.cached, 0);
+    assert_eq!(store.len(ArtifactKind::PointMeasurement), n);
+    assert_eq!(store.len(ArtifactKind::Graph), 1, "one workload, one graph artifact");
+    assert!(store.len(ArtifactKind::Program) > 0, "the memo persists lowered layers");
+
+    // The planner sees what the sweep left behind: a measurement is
+    // already materialized (empty path); a serve report is blocked on
+    // the trace source state, and once a trace exists it needs the
+    // serve op — and only that op.
+    let mut have: BTreeSet<ArtifactKind> = store.have();
+    assert!(have.contains(&ArtifactKind::PointMeasurement));
+    assert_eq!(plan(ArtifactKind::PointMeasurement, &have), Some(vec![]));
+    assert_eq!(plan(ArtifactKind::ServeReport, &have), None, "no op fabricates a trace");
+    have.insert(ArtifactKind::Trace);
+    assert_eq!(plan(ArtifactKind::ServeReport, &have), Some(vec![OpKind::Serve]));
+
+    // `repro fig13` from a fresh handle: zero simulations, same rows.
+    drop(store);
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let rows = repro::fig13_with_store(true, 2, Some(store.clone()));
+    assert_eq!(rows.len(), n);
+    assert_eq!(store.misses(), 0, "fig13 after the sweep must not simulate");
+    assert_eq!(store.hits(), n as u64, "every figure row is a store reuse");
+    for (row, r) in rows.iter().zip(&cold.results) {
+        assert_eq!(row.cycles, r.cycles, "figure rows must carry the sweep's cycles");
+        assert_eq!(row.scaled_area, r.scaled_area);
+    }
+
+    // The acceptance gate `vta cache stats` reads: the warm run's
+    // persisted reuse ratio is >= 0.9 (here: all n points reused).
+    let reuse = ArtifactStore::open(&dir)
+        .unwrap()
+        .stats()
+        .last_run_reuse()
+        .expect("the warm run synced its reuse counters to the manifest");
+    assert!(reuse >= 0.9, "warm re-run must reuse >= 90% of artifacts, got {reuse}");
+
+    // Serve warmup consumes the sweep's PointMeasurement for the same
+    // (config, workload, graph_seed, residency) — across subsystems.
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let opts = ServeOptions::builder()
+        .cfg(spec.configs[0].clone())
+        .backend(BackendKind::TsimTiming)
+        .workloads(vec![WorkloadSpec::Resnet { depth: 18, hw: 56 }])
+        .graph_seed(spec.graph_seed)
+        .store(Some(store.clone()))
+        .build()
+        .unwrap();
+    let pool = SessionPool::build(&opts).unwrap();
+    let entry = pool.get("resnet18@56").expect("the pool serves the grid workload");
+    assert!(entry.warmed_from_store, "warmup must reuse the sweep's measurement");
+    assert_eq!(
+        entry.cycles_per_request, cold.results[0].cycles,
+        "the stored measurement prices the serve request"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Satellite acceptance: routing a sweep through the store changes no
+/// output byte. Results and frontier of a store-backed run equal the
+/// store-free baseline down to their serialized JSON, and a warm
+/// re-run from the same directory reproduces them with zero
+/// simulations.
+#[test]
+fn store_backed_sweep_is_byte_identical_to_store_free() {
+    let spec = micro_spec();
+    let n = spec.jobs().len();
+    let ser = |o: &sweep::SweepOutcome| -> Vec<String> {
+        o.results.iter().map(|r| r.to_json().to_string_compact()).collect()
+    };
+
+    let baseline = sweep::run(&spec, &SweepOptions { jobs: 2, ..Default::default() }).unwrap();
+
+    let dir = temp_store("byte_identical");
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let stored = sweep::run(
+        &spec,
+        &SweepOptions { jobs: 2, store: Some(store.clone()), ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(baseline.results, stored.results);
+    assert_eq!(baseline.front.points(), stored.front.points());
+    assert_eq!(ser(&baseline), ser(&stored), "store-on output must be byte-identical");
+
+    let warm = sweep::run(
+        &spec,
+        &SweepOptions { jobs: 4, store: Some(store.clone()), ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(warm.simulated, 0, "the store always resumes");
+    assert_eq!(warm.cached, n);
+    assert_eq!(warm.skipped_stale, 0);
+    assert_eq!(ser(&warm), ser(&baseline), "warm bytes must equal the cold run's");
+    assert_eq!(warm.front.points(), baseline.front.points());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Calibration ρ tables are first-class artifacts: computed once,
+/// reused byte-for-byte by a fresh process, and identical to a
+/// store-free calibration.
+#[test]
+fn calibration_is_a_first_class_reusable_artifact() {
+    let dir = temp_store("calib");
+    let cfg = presets::tiny_config();
+    let graph = workloads::micro_resnet(4, 42);
+
+    let store = ArtifactStore::open(&dir).unwrap();
+    let first = calib::calibrate_graph_with_store(&cfg, &graph, &store).unwrap();
+    assert_eq!(store.len(ArtifactKind::Calibration), 1);
+
+    let store = ArtifactStore::open(&dir).unwrap();
+    let second = calib::calibrate_graph_with_store(&cfg, &graph, &store).unwrap();
+    assert_eq!(store.hits(), 1, "the second calibration is a store lookup");
+    assert_eq!(store.len(ArtifactKind::Calibration), 1, "no duplicate artifact");
+    assert_eq!(
+        first.to_json().to_string_compact(),
+        second.to_json().to_string_compact(),
+        "a reused calibration table must be byte-identical"
+    );
+    let plain = calib::calibrate_graph(&cfg, &graph);
+    assert_eq!(
+        plain.to_json().to_string_compact(),
+        first.to_json().to_string_compact(),
+        "going through the store must not change the table"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `verify` and `gc` hold their contracts on a store a real sweep
+/// produced: verify passes, a dry-run gc changes nothing, and a real
+/// gc compacts duplicates away while every artifact survives.
+#[test]
+fn verify_and_gc_on_a_real_sweep_store() {
+    let dir = temp_store("verify_gc");
+    let spec = micro_spec();
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    sweep::run(
+        &spec,
+        &SweepOptions { jobs: 2, store: Some(store.clone()), ..Default::default() },
+    )
+    .unwrap();
+    let n = store.len(ArtifactKind::PointMeasurement);
+    drop(store);
+
+    let store = ArtifactStore::open(&dir).unwrap();
+    assert!(store.verify().unwrap().ok(), "a freshly written store must verify clean");
+    let dry = store.gc(true).unwrap();
+    assert!(dry.dry_run);
+    assert_eq!(dry.dropped_stale + dry.dropped_corrupt + dry.dropped_duplicate, 0);
+    let real = store.gc(false).unwrap();
+    assert_eq!(real.kept, dry.kept, "a clean store compacts to itself");
+
+    let store = ArtifactStore::open(&dir).unwrap();
+    assert_eq!(store.len(ArtifactKind::PointMeasurement), n, "gc must keep every artifact");
+    assert!(store.verify().unwrap().ok(), "the compacted store verifies clean");
+    std::fs::remove_dir_all(&dir).ok();
+}
