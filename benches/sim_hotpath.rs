@@ -152,6 +152,30 @@ fn main() {
         );
     }
 
+    // --- tsim over the new workload families: attention exercises the
+    // per-head GEMM splits + host marshalling, the LSTM cell the fused
+    // gate GEMM + eltwise gate chain — both off the CNN hot path that
+    // the probes above pin ---
+    {
+        let cfg = presets::default_config();
+        let fams: [(&str, Graph); 2] = [
+            ("tsim/transformer_block", workloads::transformer_block(64, 4, 16, 3)),
+            ("tsim/lstm_cell", workloads::lstm_cell(64, 16, 3)),
+        ];
+        for (name, g) in fams {
+            let mut rng = Pcg32::seeded(4);
+            let input = rng.i8_vec(g.input_shape.elems());
+            let mut s = Session::new(&cfg, SessionOptions::default()).unwrap();
+            s.run_graph(&g, &input).unwrap();
+            let cycles = s.cycles();
+            b.bench_throughput(name, Some((cycles as f64, "sim-cycles")), || {
+                let mut s = Session::new(&cfg, SessionOptions::default()).unwrap();
+                s.run_graph(&g, black_box(&input)).unwrap();
+                s.cycles()
+            });
+        }
+    }
+
     // --- tsim under an explicit residency plan: pairs with
     // tsim/micro_resnet for an A/B read of the planner's end-to-end
     // cost (plan construction + elided-transfer bookkeeping) against

@@ -6,7 +6,7 @@
 //! with the MAC array and memory interface as secondary terms. Areas are
 //! normalized so the default 1×16×16 configuration is 1.0.
 
-use crate::config::VtaConfig;
+use crate::config::{Precision, VtaConfig};
 
 /// Area-model coefficients in arbitrary units. SRAM is per *bit*; an
 /// 8-bit MAC (multiplier + 32-bit adder slice) costs roughly 60 SRAM
@@ -30,12 +30,21 @@ impl Default for AreaModel {
 impl AreaModel {
     /// Absolute area in model units.
     pub fn area_units(&self, cfg: &VtaConfig) -> f64 {
-        let sram_bits = cfg.scratchpad_bytes() as f64 * 8.0;
+        let mut sram_bits = cfg.scratchpad_bytes() as f64 * 8.0;
+        let mut mac_cost = self.mac;
+        if cfg.precision == Precision::Narrow {
+            // Narrow (16-bit) accumulation: the accumulator scratchpad
+            // stores half-width words, and the adder slice of each MAC
+            // shrinks (the 8×8 multiplier is unchanged, so the saving
+            // is the adder's share of the standard-cell budget).
+            sram_bits -= (cfg.acc_depth * cfg.acc_tile_bytes()) as f64 * 8.0 / 2.0;
+            mac_cost *= 0.75;
+        }
         let macs = cfg.macs_per_gemm_op() as f64;
         // ALU lanes: one 32-bit lane per block_out element.
         let alu = (cfg.batch * cfg.block_out) as f64 * 30.0;
         sram_bits * self.sram_bit
-            + macs * self.mac
+            + macs * mac_cost
             + alu
             + cfg.axi_bytes as f64 * self.axi_byte
             + cfg.vme_inflight as f64 * self.vme_tag
@@ -109,6 +118,19 @@ mod tests {
             (6.0..25.0).contains(&ratio),
             "big-config area ratio {ratio:.1} outside plausible Fig 13 span"
         );
+    }
+
+    #[test]
+    fn narrow_accumulation_saves_area() {
+        for base in [presets::default_config(), presets::scaled_config(1, 64, 64, 4, 64)] {
+            let mut narrow = base.clone();
+            narrow.precision = Precision::Narrow;
+            let (aw, an) = (scaled_area(&base), scaled_area(&narrow));
+            assert!(an < aw, "{}: narrow {an} must undercut wide {aw}", base.name);
+            // The saving is bounded by the ACC scratchpad's share plus
+            // the MAC trim — never more than half the total.
+            assert!(an > 0.5 * aw, "{}: implausibly large saving", base.name);
+        }
     }
 
     #[test]

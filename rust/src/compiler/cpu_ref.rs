@@ -208,6 +208,176 @@ pub fn dense(
     conv2d(inp, wgt, n, &spec, shift, relu)
 }
 
+/// Per-head attention scores: Q and K are `[n][c][seq]` (w = 1),
+/// `out[b][hd*S + s1][s2] = requant(Σ_d q[hd*Dh+d, s1]·k[hd*Dh+d, s2])`
+/// with `Dh = c / heads`. Output `[n][heads*seq][seq]`.
+pub fn attn_scores(
+    q: &[i8],
+    k: &[i8],
+    n: usize,
+    c: usize,
+    seq: usize,
+    heads: usize,
+    shift: u32,
+) -> Vec<i8> {
+    assert_eq!(q.len(), n * c * seq);
+    assert_eq!(k.len(), q.len());
+    let dh = c / heads;
+    let mut out = vec![0i8; n * heads * seq * seq];
+    for b in 0..n {
+        for hd in 0..heads {
+            for s1 in 0..seq {
+                for s2 in 0..seq {
+                    let mut acc = 0i32;
+                    for d in 0..dh {
+                        let ch = (b * c + hd * dh + d) * seq;
+                        acc += q[ch + s1] as i32 * k[ch + s2] as i32;
+                    }
+                    out[((b * heads + hd) * seq + s1) * seq + s2] = requant(acc, shift, false);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Shift-based softmax approximation along spatial `h`, independently
+/// per (channel lane, `w` column): `m = max_y x[y]`,
+/// `t = min(31, (m - x[y]) >> shift)`, `out[y] = 127 >> t`. Monotone in
+/// the input with range [0, 127]; the ALU program computes the same
+/// values in the int32 accumulator (the `Mul imm -1` negation is exact
+/// there, including for -128).
+pub fn softmax_approx(inp: &[i8], n: usize, c: usize, h: usize, w: usize, shift: u32) -> Vec<i8> {
+    assert_eq!(inp.len(), n * c * h * w);
+    let mut out = vec![0i8; inp.len()];
+    for bc in 0..n * c {
+        for x in 0..w {
+            let at = |y: usize| inp[(bc * h + y) * w + x];
+            let m = (0..h).map(at).max().expect("h > 0") as i32;
+            for y in 0..h {
+                let t = ((m - at(y) as i32) >> shift).min(31);
+                out[(bc * h + y) * w + x] = (127i32 >> t) as i8;
+            }
+        }
+    }
+    out
+}
+
+/// Per-head transpose of `[n][heads*bc][h]` (w = 1):
+/// `out[b][hd*h + j][i] = in[b][hd*bc + i][j]`.
+pub fn head_transpose(inp: &[i8], n: usize, c: usize, h: usize, heads: usize) -> Vec<i8> {
+    assert_eq!(inp.len(), n * c * h);
+    let bc = c / heads;
+    let mut out = vec![0i8; inp.len()];
+    for b in 0..n {
+        for hd in 0..heads {
+            for i in 0..bc {
+                for j in 0..h {
+                    out[(b * c + hd * h + j) * bc + i] = inp[(b * c + hd * bc + i) * h + j];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Attention value mix: `probs` is `[n][heads*vs][ps]` (transposed
+/// scores), `v` is `[n][vc][vs]`;
+/// `out[b][hd*dh + d][s1] = requant(Σ_s2 v[hd*dh+d, s2]·
+/// probs[hd*vs+s2, s1])` with `dh = vc / heads`. Output `[n][vc][ps]`.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_mix(
+    probs: &[i8],
+    v: &[i8],
+    n: usize,
+    vc: usize,
+    vs: usize,
+    ps: usize,
+    heads: usize,
+    shift: u32,
+) -> Vec<i8> {
+    assert_eq!(probs.len(), n * heads * vs * ps);
+    assert_eq!(v.len(), n * vc * vs);
+    let dh = vc / heads;
+    let mut out = vec![0i8; n * vc * ps];
+    for b in 0..n {
+        for hd in 0..heads {
+            for d in 0..dh {
+                for s1 in 0..ps {
+                    let mut acc = 0i32;
+                    for s2 in 0..vs {
+                        acc += v[(b * vc + hd * dh + d) * vs + s2] as i32
+                            * probs[((b * heads + hd) * vs + s2) * ps + s1] as i32;
+                    }
+                    out[(b * vc + hd * dh + d) * ps + s1] = requant(acc, shift, false);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Shift-based layernorm approximation over the channel dim (`c` must
+/// be a power of two): `mu = requant(Σ_c x, log2 c)` per position, then
+/// `out = clamp(x - mu, -127, 127)`.
+pub fn layernorm_approx(inp: &[i8], n: usize, c: usize, h: usize, w: usize) -> Vec<i8> {
+    assert_eq!(inp.len(), n * c * h * w);
+    let shift = crate::util::bitfield::clog2(c as u64);
+    let mut out = vec![0i8; inp.len()];
+    for b in 0..n {
+        for y in 0..h * w {
+            let mut sum = 0i32;
+            for ch in 0..c {
+                sum += inp[(b * c + ch) * h * w + y] as i32;
+            }
+            let mu = requant(sum, shift, false) as i32;
+            for ch in 0..c {
+                let i = (b * c + ch) * h * w + y;
+                out[i] = (inp[i] as i32 - mu).clamp(-127, 127) as i8;
+            }
+        }
+    }
+    out
+}
+
+/// Channel-range copy `[start, start+len)` of an `[n][c][h*w]` tensor.
+pub fn chan_slice(
+    inp: &[i8],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    start: usize,
+    len: usize,
+) -> Vec<i8> {
+    assert_eq!(inp.len(), n * c * h * w);
+    let hw = h * w;
+    let mut out = Vec::with_capacity(n * len * hw);
+    for b in 0..n {
+        let base = (b * c + start) * hw;
+        out.extend_from_slice(&inp[base..base + len * hw]);
+    }
+    out
+}
+
+/// Elementwise requantized product: `requant(a·b, shift, relu)` — the
+/// paper's 8-bit eltwise multiply.
+pub fn elt_mul(a: &[i8], b: &[i8], shift: u32, relu: bool) -> Vec<i8> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| requant(x as i32 * y as i32, shift, relu)).collect()
+}
+
+/// Piecewise-linear sigmoid: `clamp((x >> 1) + 32, 0, 96)` (arithmetic
+/// shift, matching the ALU `Shr`).
+pub fn hard_sigmoid(inp: &[i8]) -> Vec<i8> {
+    inp.iter().map(|&v| (((v as i32) >> 1) + 32).clamp(0, 96) as i8).collect()
+}
+
+/// Piecewise-linear tanh: `clamp(x, -64, 64)`.
+pub fn hard_tanh(inp: &[i8]) -> Vec<i8> {
+    inp.iter().map(|&v| (v as i32).clamp(-64, 64) as i8).collect()
+}
+
 /// Default requantization shift for a layer accumulating `n_accum`
 /// products of our synthetic data (values ~U[-8,8)): targets an output
 /// std around 64 so outputs exercise the full int8 range without
@@ -291,6 +461,61 @@ mod tests {
         // inp [1,2], w = [[1,1],[2,-1]] -> [3, 0]
         let out = dense(&[1, 2], &[1, 1, 2, -1], 1, 2, 2, 0, false);
         assert_eq!(out, vec![3, 0]);
+    }
+
+    #[test]
+    fn softmax_peak_and_floor() {
+        // Single column: the max gets 127, values far below the max
+        // (after the shift) collapse toward 0, and order is preserved.
+        let out = softmax_approx(&[40, 50, -100, 46], 1, 1, 4, 1, 2);
+        // t = (m - x) >> 2 capped at 31: [2, 0, 31, 1] -> 127 >> t.
+        assert_eq!(out, vec![31, 127, 0, 63]);
+    }
+
+    #[test]
+    fn attn_scores_single_head_manual() {
+        // 2 dims, 2 positions, 1 head: plain Q^T K.
+        // q = [[1,2],[3,4]] (d x s), k = [[1,0],[0,1]].
+        let q = [1, 2, 3, 4];
+        let k = [1, 0, 0, 1];
+        let out = attn_scores(&q, &k, 1, 2, 2, 1, 0);
+        // out[s1][s2] = sum_d q[d][s1]*k[d][s2]
+        assert_eq!(out, vec![1, 3, 2, 4]);
+    }
+
+    #[test]
+    fn head_transpose_round_trips() {
+        let mut rng = Pcg32::seeded(5);
+        let x = rng.i8_vec(8 * 4); // heads=2, bc=4, h=4
+        let t = head_transpose(&x, 1, 8, 4, 2);
+        assert_eq!(head_transpose(&t, 1, 8, 4, 2), x);
+    }
+
+    #[test]
+    fn attn_mix_identity_probs() {
+        // Identity probs (transposed one-hot) reproduce V.
+        let v = [1i8, 2, 3, 4]; // vc=2, vs=2
+        let probs = [1, 0, 0, 1]; // heads=1, vs=2, ps=2
+        assert_eq!(attn_mix(&probs, &v, 1, 2, 2, 2, 1, 0), v);
+    }
+
+    #[test]
+    fn layernorm_centers_and_clips() {
+        // c=4, one position: mean of [10,20,30,40] = requant(100,2) = 25.
+        let out = layernorm_approx(&[10, 20, 30, 40], 1, 4, 1, 1);
+        assert_eq!(out, vec![-15, -5, 5, 15]);
+        // Saturating case still clips to ±127.
+        let out = layernorm_approx(&[127, 127, -128, -128], 1, 4, 1, 1);
+        assert!(out.iter().all(|&v| (-127..=127).contains(&v)));
+    }
+
+    #[test]
+    fn gate_math_matches_manual() {
+        assert_eq!(chan_slice(&[1, 2, 3, 4, 5, 6], 1, 3, 1, 2, 1, 2), vec![3, 4, 5, 6]);
+        assert_eq!(elt_mul(&[10, -10], &[13, 13], 3, false), vec![16, -16]);
+        assert_eq!(elt_mul(&[127], &[127], 0, false), vec![127]);
+        assert_eq!(hard_sigmoid(&[-128, -64, 0, 64, 127]), vec![0, 0, 32, 64, 95]);
+        assert_eq!(hard_tanh(&[-128, -10, 70]), vec![-64, -10, 64]);
     }
 
     #[test]

@@ -222,6 +222,433 @@ pub fn lower_pool(b: &mut ProgramBuilder, p: &PoolParams, inp_base: u32, out_bas
     }
 }
 
+/// Shift-based softmax approximation along the spatial `h` axis of one
+/// `[c_tiles][h][w]`-tiled activation, lane-wise per channel: per
+/// (lane, `w` column) `m = max_y x`, `t = min(31, (m - x) >> shift)`,
+/// `out = 127 >> t`. One channel tile per iteration, three scratchpad
+/// regions (input, running max, output) staged simultaneously — the
+/// caller guarantees `2*h*w + w <= acc_depth` and `h` fits one ALU
+/// loop (see `graph::softmax_on_vta`). Single-slot (no double
+/// buffering): the reduction makes the whole tile one dependency chain
+/// anyway.
+pub fn lower_softmax(
+    b: &mut ProgramBuilder,
+    c_tiles: usize,
+    h: usize,
+    w: usize,
+    shift: u32,
+    inp_base: u32,
+    out_base: u32,
+) {
+    let hw = (h * w) as u32;
+    let in_b = 0u32;
+    let m_b = hw;
+    let out_b = hw + w as u32;
+    let span = out_b + hw; // whole staged region, for packet deps
+    for ct in 0..c_tiles as u32 {
+        let load = Insn::Mem(MemInsn {
+            opcode: Opcode::Load,
+            deps: DepFlags::NONE,
+            buffer: BufferId::Acc8,
+            sram_base: in_b,
+            dram_base: inp_base + ct * hw,
+            y_size: 1,
+            x_size: hw,
+            x_stride: hw,
+            y_pad0: 0,
+            y_pad1: 0,
+            x_pad0: 0,
+            x_pad1: 0,
+            pad_value: 0,
+        });
+        b.push(
+            Packet::new(PMod::Compute, vec![load])
+                .write(Region::new(BufferId::Acc, in_b, in_b + hw)),
+        );
+
+        let cols = |base: u32, src: u32| -> Vec<Uop> {
+            (0..w as u32).map(|x| Uop::alu(base + x, src + x)).collect()
+        };
+        let alu = |op: AluOp, (bgn, end): (u32, u32), lp_out: u32, dst_f0: u32, src_f0: u32,
+                   use_imm: bool, imm: i32| {
+            Insn::Alu(AluInsn {
+                deps: DepFlags::NONE,
+                reset: false,
+                op,
+                uop_bgn: bgn,
+                uop_end: end,
+                lp_out,
+                lp_in: 1,
+                dst_f0,
+                dst_f1: 0,
+                src_f0,
+                src_f1: 0,
+                use_imm,
+                imm,
+            })
+        };
+        let w32 = w as u32;
+        let u_m0 = b.uop_seq(cols(m_b, in_b)); // m <- x row 0 (and Max rows)
+        let u_x = b.uop_seq(cols(in_b, in_b)); // x in place (imm ops)
+        let u_xm = b.uop_seq(cols(in_b, m_b)); // x <- x (+) m
+        let u_o = b.uop_seq(cols(out_b, out_b)); // out in place (imm ops)
+        let u_ox = b.uop_seq(cols(out_b, in_b)); // out <- out >> x
+        let mut insns = vec![alu(AluOp::Mov, u_m0, 1, 0, 0, false, 0)];
+        if h > 1 {
+            // Reduce the remaining rows into the running max.
+            let u_m = b.uop_seq(cols(m_b, in_b + w32));
+            insns.push(alu(AluOp::Max, u_m, h as u32 - 1, 0, w32, false, 0));
+        }
+        insns.push(alu(AluOp::Mul, u_x, h as u32, w32, w32, true, -1)); // x = -x (exact in acc)
+        insns.push(alu(AluOp::Add, u_xm, h as u32, w32, 0, false, 0)); // x = m - x >= 0
+        insns.push(alu(AluOp::Shr, u_x, h as u32, w32, w32, true, shift as i32));
+        insns.push(alu(AluOp::Min, u_x, h as u32, w32, w32, true, 31)); // Shr masks src & 31
+        insns.push(alu(AluOp::Mov, u_o, h as u32, w32, w32, true, 127));
+        insns.push(alu(AluOp::Shr, u_ox, h as u32, w32, w32, false, 0)); // out = 127 >> t
+        b.push(
+            Packet::new(PMod::Compute, insns)
+                .read(Region::new(BufferId::Acc, in_b, m_b + w32))
+                .write(Region::new(BufferId::Acc, in_b, span))
+                .write(Region::new(BufferId::Out, in_b, span)),
+        );
+
+        let store = Insn::Mem(MemInsn {
+            opcode: Opcode::Store,
+            deps: DepFlags::NONE,
+            buffer: BufferId::Out,
+            sram_base: out_b,
+            dram_base: out_base + ct * hw,
+            y_size: 1,
+            x_size: hw,
+            x_stride: hw,
+            y_pad0: 0,
+            y_pad1: 0,
+            x_pad0: 0,
+            x_pad1: 0,
+            pad_value: 0,
+        });
+        b.push(
+            Packet::new(PMod::Store, vec![store])
+                .read(Region::new(BufferId::Out, out_b, out_b + hw)),
+        );
+    }
+}
+
+/// Elementwise requantized product of two identically-shaped tiled
+/// activations: `out = requant(a*b, shift, relu)` — the paper's 8-bit
+/// eltwise-multiply ISA increment. Same chunked double-buffered
+/// schedule as [`lower_add`]; both operands arrive as int8 so the `Mul`
+/// (which truncates its operands to int8) computes the exact product in
+/// the int32 accumulator.
+pub fn lower_eltmul(
+    b: &mut ProgramBuilder,
+    total_tiles: usize,
+    a_base: u32,
+    b_base: u32,
+    out_base: u32,
+    shift: u32,
+    relu: bool,
+) {
+    let cfg = b.cfg.clone();
+    let max_loop = (1usize << b.layout.loop_bits) - 1;
+    let chunk = (cfg.acc_depth / 4).min(total_tiles).min(max_loop).max(1);
+    let mut off = 0usize;
+    let mut iter = 0u32;
+    while off < total_tiles {
+        let n = chunk.min(total_tiles - off);
+        let slot = (iter % 2) * (2 * chunk) as u32;
+        iter += 1;
+        let a_slot = slot;
+        let b_slot = slot + chunk as u32;
+
+        let load = |sram: u32, dram: u32| {
+            Insn::Mem(MemInsn {
+                opcode: Opcode::Load,
+                deps: DepFlags::NONE,
+                buffer: BufferId::Acc8,
+                sram_base: sram,
+                dram_base: dram,
+                y_size: 1,
+                x_size: n as u32,
+                x_stride: n as u32,
+                y_pad0: 0,
+                y_pad1: 0,
+                x_pad0: 0,
+                x_pad1: 0,
+                pad_value: 0,
+            })
+        };
+        b.push(
+            Packet::new(
+                PMod::Compute,
+                vec![load(a_slot, a_base + off as u32), load(b_slot, b_base + off as u32)],
+            )
+            .write(Region::new(BufferId::Acc, a_slot, a_slot + n as u32))
+            .write(Region::new(BufferId::Acc, b_slot, b_slot + n as u32)),
+        );
+
+        let (bgn, end) = b.uop_seq(vec![Uop::alu(a_slot, b_slot)]);
+        let alu = |op: AluOp, use_imm: bool, imm: i32| {
+            Insn::Alu(AluInsn {
+                deps: DepFlags::NONE,
+                reset: false,
+                op,
+                uop_bgn: bgn,
+                uop_end: end,
+                lp_out: n as u32,
+                lp_in: 1,
+                dst_f0: 1,
+                dst_f1: 0,
+                src_f0: 1,
+                src_f1: 0,
+                use_imm,
+                imm,
+            })
+        };
+        let mut insns = vec![alu(AluOp::Mul, false, 0)];
+        if shift > 0 {
+            insns.push(alu(AluOp::Add, true, 1 << (shift - 1)));
+            insns.push(alu(AluOp::Shr, true, shift as i32));
+        }
+        if relu {
+            insns.push(alu(AluOp::Max, true, 0));
+        }
+        insns.push(alu(AluOp::Clip, true, 127));
+        b.push(
+            Packet::new(PMod::Compute, insns)
+                .read(Region::new(BufferId::Acc, a_slot, b_slot + n as u32))
+                .write(Region::new(BufferId::Acc, a_slot, a_slot + n as u32))
+                .write(Region::new(BufferId::Out, a_slot, a_slot + n as u32)),
+        );
+
+        let store = Insn::Mem(MemInsn {
+            opcode: Opcode::Store,
+            deps: DepFlags::NONE,
+            buffer: BufferId::Out,
+            sram_base: a_slot,
+            dram_base: out_base + off as u32,
+            y_size: 1,
+            x_size: n as u32,
+            x_stride: n as u32,
+            y_pad0: 0,
+            y_pad1: 0,
+            x_pad0: 0,
+            x_pad1: 0,
+            pad_value: 0,
+        });
+        b.push(
+            Packet::new(PMod::Store, vec![store])
+                .read(Region::new(BufferId::Out, a_slot, a_slot + n as u32)),
+        );
+        off += n;
+    }
+}
+
+/// Elementwise clipped subtraction `out = clamp(x - mu, -127, 127)` —
+/// the second stage of the layernorm approximation (`mu` is the
+/// mean broadcast across channels by the all-ones GEMM stage). The
+/// negation runs as `Mul imm -1` on `mu`, exact in the int32
+/// accumulator because `mu` is already requantized to [-127, 127].
+pub fn lower_sub(
+    b: &mut ProgramBuilder,
+    total_tiles: usize,
+    x_base: u32,
+    mu_base: u32,
+    out_base: u32,
+) {
+    let cfg = b.cfg.clone();
+    let max_loop = (1usize << b.layout.loop_bits) - 1;
+    let chunk = (cfg.acc_depth / 4).min(total_tiles).min(max_loop).max(1);
+    let mut off = 0usize;
+    let mut iter = 0u32;
+    while off < total_tiles {
+        let n = chunk.min(total_tiles - off);
+        let slot = (iter % 2) * (2 * chunk) as u32;
+        iter += 1;
+        let x_slot = slot;
+        let mu_slot = slot + chunk as u32;
+
+        let load = |sram: u32, dram: u32| {
+            Insn::Mem(MemInsn {
+                opcode: Opcode::Load,
+                deps: DepFlags::NONE,
+                buffer: BufferId::Acc8,
+                sram_base: sram,
+                dram_base: dram,
+                y_size: 1,
+                x_size: n as u32,
+                x_stride: n as u32,
+                y_pad0: 0,
+                y_pad1: 0,
+                x_pad0: 0,
+                x_pad1: 0,
+                pad_value: 0,
+            })
+        };
+        b.push(
+            Packet::new(
+                PMod::Compute,
+                vec![load(x_slot, x_base + off as u32), load(mu_slot, mu_base + off as u32)],
+            )
+            .write(Region::new(BufferId::Acc, x_slot, x_slot + n as u32))
+            .write(Region::new(BufferId::Acc, mu_slot, mu_slot + n as u32)),
+        );
+
+        let (neg_bgn, neg_end) = b.uop_seq(vec![Uop::alu(mu_slot, mu_slot)]);
+        let (bgn, end) = b.uop_seq(vec![Uop::alu(x_slot, mu_slot)]);
+        let alu = |op: AluOp, (bgn, end): (u32, u32), use_imm: bool, imm: i32| {
+            Insn::Alu(AluInsn {
+                deps: DepFlags::NONE,
+                reset: false,
+                op,
+                uop_bgn: bgn,
+                uop_end: end,
+                lp_out: n as u32,
+                lp_in: 1,
+                dst_f0: 1,
+                dst_f1: 0,
+                src_f0: 1,
+                src_f1: 0,
+                use_imm,
+                imm,
+            })
+        };
+        let insns = vec![
+            alu(AluOp::Mul, (neg_bgn, neg_end), true, -1),
+            alu(AluOp::Add, (bgn, end), false, 0),
+            alu(AluOp::Clip, (bgn, end), true, 127),
+        ];
+        b.push(
+            Packet::new(PMod::Compute, insns)
+                .read(Region::new(BufferId::Acc, x_slot, mu_slot + n as u32))
+                .write(Region::new(BufferId::Acc, x_slot, mu_slot + n as u32))
+                .write(Region::new(BufferId::Out, x_slot, mu_slot + n as u32)),
+        );
+
+        let store = Insn::Mem(MemInsn {
+            opcode: Opcode::Store,
+            deps: DepFlags::NONE,
+            buffer: BufferId::Out,
+            sram_base: x_slot,
+            dram_base: out_base + off as u32,
+            y_size: 1,
+            x_size: n as u32,
+            x_stride: n as u32,
+            y_pad0: 0,
+            y_pad1: 0,
+            x_pad0: 0,
+            x_pad1: 0,
+            pad_value: 0,
+        });
+        b.push(
+            Packet::new(PMod::Store, vec![store])
+                .read(Region::new(BufferId::Out, x_slot, x_slot + n as u32)),
+        );
+        off += n;
+    }
+}
+
+/// Pointwise immediate-only ALU pipeline over one tiled activation —
+/// the hard-sigmoid / hard-tanh gate nonlinearities: load a chunk,
+/// apply each `(op, imm)` in order, store. Chunked and double buffered
+/// like [`lower_add`].
+pub fn lower_unary(
+    b: &mut ProgramBuilder,
+    total_tiles: usize,
+    inp_base: u32,
+    out_base: u32,
+    ops: &[(AluOp, i32)],
+) {
+    let cfg = b.cfg.clone();
+    let max_loop = (1usize << b.layout.loop_bits) - 1;
+    let chunk = (cfg.acc_depth / 2).min(total_tiles).min(max_loop).max(1);
+    let mut off = 0usize;
+    let mut iter = 0u32;
+    while off < total_tiles {
+        let n = chunk.min(total_tiles - off);
+        let slot = (iter % 2) * chunk as u32;
+        iter += 1;
+
+        let load = Insn::Mem(MemInsn {
+            opcode: Opcode::Load,
+            deps: DepFlags::NONE,
+            buffer: BufferId::Acc8,
+            sram_base: slot,
+            dram_base: inp_base + off as u32,
+            y_size: 1,
+            x_size: n as u32,
+            x_stride: n as u32,
+            y_pad0: 0,
+            y_pad1: 0,
+            x_pad0: 0,
+            x_pad1: 0,
+            pad_value: 0,
+        });
+        b.push(
+            Packet::new(PMod::Compute, vec![load])
+                .write(Region::new(BufferId::Acc, slot, slot + n as u32)),
+        );
+
+        let (bgn, end) = b.uop_seq(vec![Uop::alu(slot, slot)]);
+        let insns: Vec<Insn> = ops
+            .iter()
+            .map(|&(op, imm)| {
+                Insn::Alu(AluInsn {
+                    deps: DepFlags::NONE,
+                    reset: false,
+                    op,
+                    uop_bgn: bgn,
+                    uop_end: end,
+                    lp_out: n as u32,
+                    lp_in: 1,
+                    dst_f0: 1,
+                    dst_f1: 0,
+                    src_f0: 1,
+                    src_f1: 0,
+                    use_imm: true,
+                    imm,
+                })
+            })
+            .collect();
+        b.push(
+            Packet::new(PMod::Compute, insns)
+                .read(Region::new(BufferId::Acc, slot, slot + n as u32))
+                .write(Region::new(BufferId::Acc, slot, slot + n as u32))
+                .write(Region::new(BufferId::Out, slot, slot + n as u32)),
+        );
+
+        let store = Insn::Mem(MemInsn {
+            opcode: Opcode::Store,
+            deps: DepFlags::NONE,
+            buffer: BufferId::Out,
+            sram_base: slot,
+            dram_base: out_base + off as u32,
+            y_size: 1,
+            x_size: n as u32,
+            x_stride: n as u32,
+            y_pad0: 0,
+            y_pad1: 0,
+            x_pad0: 0,
+            x_pad1: 0,
+            pad_value: 0,
+        });
+        b.push(
+            Packet::new(PMod::Store, vec![store])
+                .read(Region::new(BufferId::Out, slot, slot + n as u32)),
+        );
+        off += n;
+    }
+}
+
+/// The `(op, imm)` pipeline for the `HardSigmoid` graph op:
+/// `clamp((x >> 1) + 32, 0, 96)`.
+pub const HARD_SIGMOID_OPS: [(AluOp, i32); 4] =
+    [(AluOp::Shr, 1), (AluOp::Add, 32), (AluOp::Max, 0), (AluOp::Min, 96)];
+
+/// The `(op, imm)` pipeline for the `HardTanh` graph op:
+/// `clamp(x, -64, 64)`.
+pub const HARD_TANH_OPS: [(AluOp, i32); 1] = [(AluOp::Clip, 64)];
+
 /// Residual addition over two identically-shaped tiled activations:
 /// `out = clip(a + b)` with optional ReLU. Processes `chunk` tiles per
 /// iteration, double buffered.

@@ -27,6 +27,51 @@ pub enum Op {
     GlobalAvgPool,
     /// Residual addition of two equal-shape inputs, then optional ReLU.
     Add { relu: bool },
+    /// Per-head attention scores over `(d_model, seq, 1)` Q and K
+    /// tensors (channel = model dim, spatial h = sequence position):
+    /// `out[hd*S + s1, s2] = requant(Σ_d q[hd*Dh+d, s1]·k[hd*Dh+d, s2],
+    /// shift)`. Output `(heads*S, S, 1)`; channel = query position,
+    /// spatial = key position. Lowered as one GEMM per head with the
+    /// Q slice re-read as weights (data-dependent, hence batch-1 on
+    /// the accelerator — see [`attn_on_vta`]).
+    AttnScores { heads: usize, shift: u32 },
+    /// Shift-based softmax approximation along spatial h, per channel
+    /// lane: `m = max_y x[c,y]`, `t = min(31, (m − x) >> shift)`,
+    /// `out = 127 >> t` — monotone in the input, range `[0, 127]`,
+    /// built entirely from Max/Mul/Add/Shr/Mov ALU ops.
+    SoftmaxApprox { shift: u32 },
+    /// Per-head transpose of a `(heads*Bc, H, 1)` tensor:
+    /// `out[hd*H + j, i] = in[hd*Bc + i, j]`, output
+    /// `(heads*H, Bc, 1)`. A zero-cost CPU marshal between the two
+    /// attention GEMMs (the scratchpads have no transposed access
+    /// path).
+    HeadTranspose { heads: usize },
+    /// Attention value mix: inputs `[probs_t, v]` where `probs_t` is
+    /// the [`Op::HeadTranspose`] of the score probabilities and `v` is
+    /// `(d_model, seq, 1)`:
+    /// `out[hd*Dh+d, s1] = requant(Σ_s2 v[hd*Dh+d, s2]·
+    /// probs_t[hd*S+s2, s1], shift)`. Output matches `v`'s shape.
+    AttnMix { heads: usize, shift: u32 },
+    /// Shift-based layernorm approximation over the channel dim (which
+    /// must be a power of two so the mean is an exact shift):
+    /// `mu[y,x] = requant(Σ_c x[c,y,x], log2 C)`,
+    /// `out = clamp(x − mu, −127, 127)` — centers each position
+    /// without the (hardware-free) variance divide.
+    LayerNormApprox,
+    /// Channel-range view `[start, start+len)` of the input — how the
+    /// fused LSTM gate GEMM output is split into its four gates.
+    ChanSlice { start: usize, len: usize },
+    /// Elementwise product of two equal-shape tensors, requantized:
+    /// `out = requant(a·b, shift, relu)` (the paper's 8-bit eltwise
+    /// multiply ISA increment).
+    EltMul { shift: u32, relu: bool },
+    /// Piecewise-linear sigmoid on the i8 domain:
+    /// `out = clamp((x >> 1) + 32, 0, 96)` (Shr/Add/Max/Min
+    /// immediates; the shift is arithmetic, matching the ALU).
+    HardSigmoid,
+    /// Piecewise-linear tanh on the i8 domain: `out = clamp(x, ±64)`
+    /// (a single Clip immediate).
+    HardTanh,
 }
 
 impl Op {
@@ -39,6 +84,15 @@ impl Op {
             Op::MaxPool { .. } => "maxpool",
             Op::GlobalAvgPool => "avgpool",
             Op::Add { .. } => "add",
+            Op::AttnScores { .. } => "attn_scores",
+            Op::SoftmaxApprox { .. } => "softmax_approx",
+            Op::HeadTranspose { .. } => "head_transpose",
+            Op::AttnMix { .. } => "attn_mix",
+            Op::LayerNormApprox => "layernorm_approx",
+            Op::ChanSlice { .. } => "chan_slice",
+            Op::EltMul { .. } => "elt_mul",
+            Op::HardSigmoid => "hard_sigmoid",
+            Op::HardTanh => "hard_tanh",
         }
     }
 }
@@ -143,7 +197,8 @@ impl Graph {
             let fail = |msg: String| Err(format!("node '{}': {msg}", node.name));
             let arity = match node.op {
                 Op::Input => 0,
-                Op::Add { .. } => 2,
+                Op::Add { .. } | Op::AttnScores { .. } | Op::AttnMix { .. }
+                | Op::EltMul { .. } => 2,
                 _ => 1,
             };
             if node.inputs.len() != arity {
@@ -234,6 +289,108 @@ impl Graph {
                     }
                     a
                 }
+                Op::AttnScores { heads, shift } => {
+                    let q = shapes[node.inputs[0]];
+                    let k = shapes[node.inputs[1]];
+                    if q != k {
+                        return fail(format!("attn_scores of unequal shapes {q:?} vs {k:?}"));
+                    }
+                    if q.w != 1 {
+                        return fail(format!("attn_scores expects a (c,seq,1) input, got {q:?}"));
+                    }
+                    if *heads == 0 || q.c % heads != 0 {
+                        return fail(format!("{} channels not divisible into {heads} heads", q.c));
+                    }
+                    if *shift > 31 {
+                        return fail(format!("shift {shift} exceeds the 5-bit ALU shift range"));
+                    }
+                    match weight_len(&[*heads, q.h]) {
+                        Ok(oc) if oc <= DIM_LIMIT => Shape::new(oc, q.h, 1),
+                        Ok(oc) => return fail(format!("implausible score channel count {oc}")),
+                        Err(msg) => return fail(msg),
+                    }
+                }
+                Op::SoftmaxApprox { shift } => {
+                    if *shift > 31 {
+                        return fail(format!("shift {shift} exceeds the 5-bit ALU shift range"));
+                    }
+                    shapes[node.inputs[0]]
+                }
+                Op::HeadTranspose { heads } => {
+                    let s = shapes[node.inputs[0]];
+                    if s.w != 1 {
+                        return fail(format!("head_transpose expects a (c,h,1) input, got {s:?}"));
+                    }
+                    if *heads == 0 || s.c % heads != 0 {
+                        return fail(format!("{} channels not divisible into {heads} heads", s.c));
+                    }
+                    match weight_len(&[*heads, s.h]) {
+                        Ok(oc) if oc <= DIM_LIMIT => Shape::new(oc, s.c / heads, 1),
+                        Ok(oc) => {
+                            return fail(format!("implausible transposed channel count {oc}"))
+                        }
+                        Err(msg) => return fail(msg),
+                    }
+                }
+                Op::AttnMix { heads, shift } => {
+                    let p = shapes[node.inputs[0]];
+                    let v = shapes[node.inputs[1]];
+                    if p.w != 1 || v.w != 1 {
+                        return fail(format!(
+                            "attn_mix expects (c,seq,1) inputs, got {p:?} and {v:?}"
+                        ));
+                    }
+                    if *heads == 0 || v.c % heads != 0 {
+                        return fail(format!("{} channels not divisible into {heads} heads", v.c));
+                    }
+                    if p.c % heads != 0 || p.c / heads != v.h {
+                        return fail(format!(
+                            "probs channels {} must be heads {heads} x value seq {}",
+                            p.c, v.h
+                        ));
+                    }
+                    if *shift > 31 {
+                        return fail(format!("shift {shift} exceeds the 5-bit ALU shift range"));
+                    }
+                    Shape::new(v.c, p.h, 1)
+                }
+                Op::LayerNormApprox => {
+                    let s = shapes[node.inputs[0]];
+                    if !s.c.is_power_of_two() {
+                        return fail(format!(
+                            "layernorm_approx needs a power-of-two channel count, got {}",
+                            s.c
+                        ));
+                    }
+                    s
+                }
+                Op::ChanSlice { start, len } => {
+                    let s = shapes[node.inputs[0]];
+                    if *len == 0 {
+                        return fail("empty channel slice".into());
+                    }
+                    match start.checked_add(*len) {
+                        Some(end) if end <= s.c => Shape::new(*len, s.h, s.w),
+                        _ => {
+                            return fail(format!(
+                                "slice [{start}, {start}+{len}) exceeds {} channels",
+                                s.c
+                            ))
+                        }
+                    }
+                }
+                Op::EltMul { shift, .. } => {
+                    let a = shapes[node.inputs[0]];
+                    let b = shapes[node.inputs[1]];
+                    if a != b {
+                        return fail(format!("elt_mul of unequal shapes {a:?} vs {b:?}"));
+                    }
+                    if *shift > 31 {
+                        return fail(format!("shift {shift} exceeds the 5-bit ALU shift range"));
+                    }
+                    a
+                }
+                Op::HardSigmoid | Op::HardTanh => shapes[node.inputs[0]],
             };
             shapes.push(shape);
         }
@@ -274,6 +431,26 @@ impl Graph {
                 }
             }
             other => panic!("conv_spec on non-conv node {other:?}"),
+        }
+    }
+
+    /// The per-head GEMM spec of an `AttnScores`/`AttnMix` node: the
+    /// 1x1 "conv" one head executes on the GEMM core (c_in = reduction
+    /// dim, c_out = per-head output channels, h = output positions).
+    pub fn attn_head_spec(&self, idx: usize, shapes: &[Shape]) -> ConvSpec {
+        let unit =
+            ConvSpec { c_in: 0, c_out: 0, h: 0, w: 1, kh: 1, kw: 1, sh: 1, sw: 1, ph: 0, pw: 0 };
+        match &self.nodes[idx].op {
+            Op::AttnScores { heads, .. } => {
+                let q = shapes[self.nodes[idx].inputs[0]];
+                ConvSpec { c_in: q.c / heads, c_out: q.h, h: q.h, ..unit }
+            }
+            Op::AttnMix { heads, .. } => {
+                let p = shapes[self.nodes[idx].inputs[0]];
+                let v = shapes[self.nodes[idx].inputs[1]];
+                ConvSpec { c_in: v.h, c_out: v.c / heads, h: p.h, ..unit }
+            }
+            other => panic!("attn_head_spec on non-attention node {other:?}"),
         }
     }
 
@@ -323,6 +500,53 @@ impl Graph {
                 Op::Add { relu } => {
                     cpu_ref::add(get(node.inputs[0]), get(node.inputs[1]), *relu)
                 }
+                Op::AttnScores { heads, shift } => {
+                    let q = shapes[node.inputs[0]];
+                    cpu_ref::attn_scores(
+                        get(node.inputs[0]),
+                        get(node.inputs[1]),
+                        batch,
+                        q.c,
+                        q.h,
+                        *heads,
+                        *shift,
+                    )
+                }
+                Op::SoftmaxApprox { shift } => {
+                    let s = shapes[node.inputs[0]];
+                    cpu_ref::softmax_approx(get(node.inputs[0]), batch, s.c, s.h, s.w, *shift)
+                }
+                Op::HeadTranspose { heads } => {
+                    let s = shapes[node.inputs[0]];
+                    cpu_ref::head_transpose(get(node.inputs[0]), batch, s.c, s.h, *heads)
+                }
+                Op::AttnMix { heads, shift } => {
+                    let p = shapes[node.inputs[0]];
+                    let v = shapes[node.inputs[1]];
+                    cpu_ref::attn_mix(
+                        get(node.inputs[0]),
+                        get(node.inputs[1]),
+                        batch,
+                        v.c,
+                        v.h,
+                        p.h,
+                        *heads,
+                        *shift,
+                    )
+                }
+                Op::LayerNormApprox => {
+                    let s = shapes[node.inputs[0]];
+                    cpu_ref::layernorm_approx(get(node.inputs[0]), batch, s.c, s.h, s.w)
+                }
+                Op::ChanSlice { start, len } => {
+                    let s = shapes[node.inputs[0]];
+                    cpu_ref::chan_slice(get(node.inputs[0]), batch, s.c, s.h, s.w, *start, *len)
+                }
+                Op::EltMul { shift, relu } => {
+                    cpu_ref::elt_mul(get(node.inputs[0]), get(node.inputs[1]), *shift, *relu)
+                }
+                Op::HardSigmoid => cpu_ref::hard_sigmoid(get(node.inputs[0])),
+                Op::HardTanh => cpu_ref::hard_tanh(get(node.inputs[0])),
             };
             outputs[i] = Some(out);
         }
@@ -342,11 +566,55 @@ impl Graph {
                         total += spec.macs(cfg);
                     }
                 }
+                Op::AttnScores { heads, .. } | Op::AttnMix { heads, .. } => {
+                    let spec = self.attn_head_spec(i, &shapes);
+                    if attn_on_vta(cfg, &spec) {
+                        total += *heads as u64 * spec.macs(cfg);
+                    }
+                }
+                Op::LayerNormApprox => {
+                    let s = shapes[node.inputs[0]];
+                    let spec = layernorm_mean_spec(s);
+                    if spec.c_in >= cfg.block_in {
+                        total += spec.macs(cfg);
+                    }
+                }
                 _ => {}
             }
         }
         total
     }
+}
+
+/// The all-ones C -> C 1x1 "conv" that computes the layernorm channel
+/// mean (every output channel carries the same mean, so the eltwise
+/// subtract stage can read it lane-aligned).
+pub fn layernorm_mean_spec(s: Shape) -> ConvSpec {
+    ConvSpec { c_in: s.c, c_out: s.c, h: s.h, w: s.w, kh: 1, kw: 1, sh: 1, sw: 1, ph: 0, pw: 0 }
+}
+
+/// Whether an attention head GEMM runs on the accelerator for `cfg`.
+/// Requires batch 1 (the weights are the data-dependent Q/probs slice,
+/// read back per inference) and tile-aligned head slices on both sides
+/// so each head's channel sub-range is a whole number of scratchpad
+/// tiles (unaligned c_out would spill padded tiles into the next
+/// head's DRAM slice). Must stay a pure function of (cfg, spec): every
+/// backend and the analytical model key off the same decision.
+pub fn attn_on_vta(cfg: &crate::config::VtaConfig, spec: &ConvSpec) -> bool {
+    cfg.batch == 1
+        && spec.c_in >= cfg.block_in
+        && spec.c_in % cfg.block_in == 0
+        && spec.c_out % cfg.block_out == 0
+}
+
+/// Whether the softmax-approx ALU program for a `(c, h, w)` tensor fits
+/// the configured scratchpads: per channel tile it stages the inputs,
+/// the running max (one tile per w column) and the output
+/// simultaneously, reduces over `h` in one ALU loop, and addresses
+/// `8 * w` uops.
+pub fn softmax_on_vta(cfg: &crate::config::VtaConfig, s: Shape) -> bool {
+    let max_loop = (1usize << cfg.isa_layout().loop_bits) - 1;
+    2 * s.h * s.w + s.w <= cfg.acc_depth && s.h <= max_loop && 8 * s.w <= cfg.uop_depth
 }
 
 /// Random conv weights helper for workload construction.

@@ -295,7 +295,24 @@ pub fn on_vta(cfg: &VtaConfig, graph: &Graph, shapes: &[Shape], i: usize) -> boo
     match &graph.nodes[i].op {
         Op::Input => false,
         Op::Conv { .. } => shapes[graph.nodes[i].inputs[0]].c >= cfg.block_in,
-        _ => true,
+        Op::Dense { .. }
+        | Op::Depthwise { .. }
+        | Op::MaxPool { .. }
+        | Op::GlobalAvgPool
+        | Op::Add { .. } => true,
+        // Attention / LSTM operators stay out of the residency plan for
+        // now: several run on the host (or split per head into staged
+        // sub-launches), so their operands must hit DRAM. Conservative —
+        // stores around them are simply never elided.
+        Op::AttnScores { .. }
+        | Op::SoftmaxApprox { .. }
+        | Op::HeadTranspose { .. }
+        | Op::AttnMix { .. }
+        | Op::LayerNormApprox
+        | Op::ChanSlice { .. }
+        | Op::EltMul { .. }
+        | Op::HardSigmoid
+        | Op::HardTanh => false,
     }
 }
 

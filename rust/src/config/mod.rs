@@ -35,6 +35,44 @@ pub const WGT_DTYPE_BITS: usize = 8;
 pub const ACC_DTYPE_BITS: usize = 32;
 pub const OUT_DTYPE_BITS: usize = 8;
 
+/// GEMM accumulation precision (the representation-adaptive axis): the
+/// hardware either carries the full 32-bit accumulator or a narrow
+/// 16-bit one that wraps per MAC-tile update. Narrow costs accuracy on
+/// deep reductions but prices cheaper in [`crate::analysis::area`] —
+/// a sweepable area/fidelity tradeoff in the style of
+/// representation-adaptive ISAs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    /// 16-bit accumulation: each GEMM tile update wraps to i16.
+    Narrow,
+    /// Full 32-bit accumulation (the classic VTA datapath).
+    #[default]
+    Wide,
+}
+
+impl Precision {
+    pub fn cli_name(self) -> &'static str {
+        match self {
+            Precision::Narrow => "narrow",
+            Precision::Wide => "wide",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Precision, String> {
+        match s {
+            "narrow" => Ok(Precision::Narrow),
+            "wide" => Ok(Precision::Wide),
+            other => Err(format!("unknown precision '{other}' (expected narrow|wide)")),
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.cli_name())
+    }
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct VtaConfig {
     /// Configuration name (used in reports and artifact paths).
@@ -69,6 +107,8 @@ pub struct VtaConfig {
     pub cmd_queue_depth: usize,
     /// Dependency-token queue depth.
     pub dep_queue_depth: usize,
+    /// GEMM accumulation precision (narrow 16-bit / wide 32-bit).
+    pub precision: Precision,
 }
 
 /// Field layout for the three instruction formats plus uops, derived from
@@ -371,6 +411,7 @@ impl VtaConfig {
             ("alu_pipelined", Json::Bool(self.alu_pipelined)),
             ("cmd_queue_depth", Json::Int(self.cmd_queue_depth as i64)),
             ("dep_queue_depth", Json::Int(self.dep_queue_depth as i64)),
+            ("precision", Json::Str(self.precision.cli_name().to_string())),
         ])
     }
 
@@ -411,6 +452,10 @@ impl VtaConfig {
                 .get("dep_queue_depth")
                 .and_then(|v| v.as_i64())
                 .unwrap_or(128) as usize,
+            precision: match json.get("precision").and_then(|v| v.as_str()) {
+                Some(s) => Precision::parse(s).map_err(ConfigError::Json)?,
+                None => Precision::Wide,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -437,12 +482,13 @@ impl VtaConfig {
     /// Short human-readable identifier, e.g. `1x16x16-axi8`.
     pub fn tag(&self) -> String {
         format!(
-            "{}x{}x{}-axi{}{}",
+            "{}x{}x{}-axi{}{}{}",
             self.batch,
             self.block_in,
             self.block_out,
             self.axi_bytes,
-            if self.gemm_pipelined { "" } else { "-nopipe" }
+            if self.gemm_pipelined { "" } else { "-nopipe" },
+            if self.precision == Precision::Narrow { "-narrow" } else { "" }
         )
     }
 }

@@ -8,7 +8,7 @@
 //!   (BLOCK), scratchpad scaling, AXI width.
 //! * [`tiny_config`] — small geometry for fast unit tests.
 
-use super::VtaConfig;
+use super::{Precision, VtaConfig};
 
 /// Upstream VTA default configuration: BATCH=1, BLOCK_IN=BLOCK_OUT=16,
 /// 32KB uop / 32KB inp / 256KB wgt / 128KB acc buffers, 64-bit (8-byte)
@@ -30,6 +30,7 @@ pub fn default_config() -> VtaConfig {
         alu_pipelined: true,
         cmd_queue_depth: 512,
         dep_queue_depth: 128,
+        precision: Precision::Wide,
     }
 }
 
@@ -82,6 +83,7 @@ pub fn scaled_config(
         alu_pipelined: true,
         cmd_queue_depth: 512,
         dep_queue_depth: 128,
+        precision: Precision::Wide,
     }
 }
 
@@ -103,6 +105,7 @@ pub fn tiny_config() -> VtaConfig {
         alu_pipelined: true,
         cmd_queue_depth: 64,
         dep_queue_depth: 32,
+        precision: Precision::Wide,
     }
 }
 
@@ -126,8 +129,15 @@ pub fn parse_scaled_name(s: &str) -> Option<VtaConfig> {
 
 /// Look a preset up by name (CLI `--config <name>` path). Falls back to
 /// [`parse_scaled_name`] so any design point a sweep names is reachable
-/// directly.
+/// directly. A `-narrow` suffix selects narrow (16-bit) accumulation on
+/// any base name — the spelling the sweep's precision axis stamps.
 pub fn by_name(name: &str) -> Option<VtaConfig> {
+    if let Some(base) = name.strip_suffix("-narrow") {
+        let mut cfg = by_name(base)?;
+        cfg.precision = Precision::Narrow;
+        cfg.name = name.to_string();
+        return Some(cfg);
+    }
     match name {
         "default" => Some(default_config()),
         "original" => Some(original_config()),
@@ -175,6 +185,17 @@ mod tests {
         assert!(by_name("default").is_some());
         assert!(by_name("original").is_some());
         assert!(by_name("nonsense").is_none());
+    }
+
+    #[test]
+    fn narrow_suffix_selects_narrow_accumulation() {
+        let cfg = by_name("default-narrow").unwrap();
+        assert_eq!(cfg.precision, Precision::Narrow);
+        assert_eq!(cfg.name, "default-narrow");
+        let scaled = by_name("b1-i32-o32-s2-m32-narrow").unwrap();
+        assert_eq!(scaled.precision, Precision::Narrow);
+        assert_eq!(scaled.block_in, 32);
+        assert!(by_name("nonsense-narrow").is_none());
     }
 
     #[test]

@@ -489,6 +489,7 @@ impl CoreState {
             return;
         }
         let (batch, bi, bo) = (self.cfg.batch, self.cfg.block_in, self.cfg.block_out);
+        let narrow = self.cfg.precision == crate::config::Precision::Narrow;
         let acc_n = batch * bo;
         let inp_n = batch * bi;
         let wgt_n = bo * bi;
@@ -521,8 +522,19 @@ impl CoreState {
                     for b in 0..batch {
                         let inp_row = &inp_t[b * bi..][..bi];
                         let acc_row = &mut acc_t[b * bo..][..bo];
-                        for (a, wgt_row) in acc_row.iter_mut().zip(wgt_t.chunks_exact(bi)) {
-                            *a = a.wrapping_add(dot_i8(inp_row, wgt_row));
+                        if narrow {
+                            // Narrow precision: the accumulator register
+                            // is 16 bits wide and wraps on every tile
+                            // update (cycles are unchanged — the
+                            // datapath is the same length, just
+                            // narrower).
+                            for (a, wgt_row) in acc_row.iter_mut().zip(wgt_t.chunks_exact(bi)) {
+                                *a = a.wrapping_add(dot_i8(inp_row, wgt_row)) as i16 as i32;
+                            }
+                        } else {
+                            for (a, wgt_row) in acc_row.iter_mut().zip(wgt_t.chunks_exact(bi)) {
+                                *a = a.wrapping_add(dot_i8(inp_row, wgt_row));
+                            }
                         }
                     }
                 }

@@ -19,7 +19,7 @@ use std::path::Path;
 use std::sync::Arc;
 use vta::analysis::area;
 use vta::compiler::residency::ResidencyMode;
-use vta::config::{presets, VtaConfig};
+use vta::config::{presets, Precision, VtaConfig};
 use vta::engine::{BackendKind, Engine, EvalRequest};
 use vta::floorplan;
 use vta::repro;
@@ -38,10 +38,14 @@ fn usage() -> ! {
          \n\
          commands:\n\
            run        --net resnet18|resnet34|resnet50|resnet101|mobilenet|micro\n\
+                            |transformer_block|lstm_cell\n\
                       [--config default|original|tiny|large|wide32 | --config-file f.json]\n\
+                      [--precision narrow|wide] (accumulator width; narrow wraps at 16 bits)\n\
                       [--backend fsim|tsim|timing|model] (the fidelity ladder: behavioral,\n\
                         cycle-accurate, timing-only, analytical estimate)\n\
                       [--hw 224] [--seed 1] [--no-tps] [--no-dbuf] [--trace]\n\
+                        (--hw is the sequence length for transformer_block/lstm_cell;\n\
+                         their default is 16)\n\
                       [--residency off|lru|belady|dtr] (cross-layer scratchpad residency\n\
                         planner; default lru — outputs are bit-identical at every setting)\n\
            repro      pipelining|ablation|fig2|fig3|fig10|fig11|fig12|fig13|all [--quick] [--out results]\n\
@@ -62,8 +66,10 @@ fn usage() -> ! {
                       [--residency off|lru|belady|dtr] (per-point residency mode; part of\n\
                         every cache key — infeasible points are reported, not dropped)\n\
                       grid: [--dense] [--blocks 16,32,64] [--axi 8,16,32,64] [--scales 1,2,4]\n\
+                      [--precisions wide,narrow] (accumulator-precision axis)\n\
                       [--batch 1] [--net resnet18|...|mobilenet|micro] [--hw 224]\n\
-                      [--workloads resnet18@224,mobilenet@56] [--seeds 7,8] [--graph-seed 1]\n\
+                      [--workloads resnet18@224,transformer_block@16,lstm_cell@16,...]\n\
+                      [--seeds 7,8] [--graph-seed 1]\n\
            serve      [--workload micro|resnet18@224,mobilenet@56,...] [--config <name>]\n\
                       [--backend tsim|timing|model] [--jobs N] (workers; report-invariant)\n\
                       [--max-batch 8] [--max-wait-us 2000] (dynamic batching window)\n\
@@ -89,17 +95,34 @@ fn usage() -> ! {
 }
 
 fn load_config(args: &Args) -> VtaConfig {
-    if let Some(path) = args.get("config-file") {
-        return VtaConfig::load(path).unwrap_or_else(|e| {
+    let mut cfg = if let Some(path) = args.get("config-file") {
+        VtaConfig::load(path).unwrap_or_else(|e| {
             eprintln!("error: {e}");
             std::process::exit(1);
+        })
+    } else {
+        let name = args.get_or("config", "default");
+        presets::by_name(name).unwrap_or_else(|| {
+            eprintln!("unknown config preset '{name}'");
+            std::process::exit(1);
+        })
+    };
+    if let Some(p) = args.get("precision") {
+        cfg.precision = Precision::parse(p).unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(2);
         });
     }
-    let name = args.get_or("config", "default");
-    presets::by_name(name).unwrap_or_else(|| {
-        eprintln!("unknown config preset '{name}'");
-        std::process::exit(1);
-    })
+    cfg
+}
+
+/// Default `--hw` per network: an image resolution for the CNNs, a
+/// sequence length for the attention/recurrent families.
+fn default_net_size(name: &str) -> usize {
+    match name {
+        "transformer_block" | "lstm_cell" => 16,
+        _ => 224,
+    }
 }
 
 fn build_net(name: &str, hw: usize, seed: u64) -> vta::compiler::graph::Graph {
@@ -110,6 +133,8 @@ fn build_net(name: &str, hw: usize, seed: u64) -> vta::compiler::graph::Graph {
         "resnet101" => workloads::resnet(101, hw, seed),
         "mobilenet" => workloads::mobilenet(hw, seed),
         "micro" => workloads::micro_resnet(16, seed),
+        "transformer_block" => workloads::transformer_block(64, 4, hw, seed),
+        "lstm_cell" => workloads::lstm_cell(64, hw, seed),
         _ => {
             eprintln!("unknown network '{name}'");
             std::process::exit(1);
@@ -157,7 +182,7 @@ fn parse_residency(args: &Args) -> ResidencyMode {
 fn cmd_run(args: &Args) {
     let cfg = load_config(args);
     let net = args.get_or("net", "resnet18");
-    let hw = args.get_usize("hw", 224);
+    let hw = args.get_usize("hw", default_net_size(net));
     let seed = args.get_u64("seed", 1);
     let backend = parse_backend(args, "tsim");
     let residency = parse_residency(args);
@@ -323,13 +348,27 @@ fn cmd_sweep(args: &Args) {
     grid.scales = args.get_usize_list("scales", &grid.scales);
     grid.seeds = args.get_u64_list("seeds", &grid.seeds);
     grid.graph_seed = args.get_u64("graph-seed", grid.graph_seed);
+    if let Some(list) = args.get("precisions") {
+        grid.precisions = list
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                Precision::parse(s).unwrap_or_else(|e| {
+                    eprintln!("error: {e}");
+                    std::process::exit(2);
+                })
+            })
+            .collect();
+    }
     if args.get("net").is_some() || args.get("hw").is_some() {
         let net = args.get_or("net", "resnet18");
-        // For `micro` the @-suffix is a channel-block width, not an
-        // image size — never apply the image-resolution default to it.
+        // For `micro` the @-suffix is a channel-block width, and for the
+        // sequence workloads it is a sequence length — never apply the
+        // image-resolution default to those.
         let workload = match (args.get("hw"), net) {
             (Some(_), _) => parse_workload(&format!("{net}@{}", args.get_usize("hw", 224))),
-            (None, "micro") => parse_workload(net),
+            (None, "micro" | "transformer_block" | "lstm_cell") => parse_workload(net),
             (None, _) => {
                 parse_workload(&format!("{net}@{}", if quick { 56 } else { 224 }))
             }

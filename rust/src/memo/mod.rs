@@ -50,8 +50,12 @@ use std::sync::{Arc, Mutex};
 /// v2 = this scheme (layer memo + explicit schema fields);
 /// v3 = residency planner: signatures carry per-layer residency bits,
 ///      [`ExecCounters`] grew `resident_tile_hits` / `dma_bytes_elided`,
-///      and elided transfers changed tsim DMA timing.
-pub const SIM_SCHEMA_VERSION: u32 = 3;
+///      and elided transfers changed tsim DMA timing;
+/// v4 = workload families: attention/LSTM operator signatures
+///      (softmax/eltmul/sub/unary tags) and the accumulator
+///      [`Precision`](crate::config::Precision) mode joined the config
+///      hash (narrow accumulation changes functional payloads).
+pub const SIM_SCHEMA_VERSION: u32 = 4;
 
 /// Everything the runtime needs to splice a cached layer into a session
 /// without simulating it: cycles consumed, program shape (for

@@ -42,10 +42,14 @@ pub struct LayerSig(pub u64);
 /// Op-kind tags keep equal parameter lists of different ops from
 /// colliding (e.g. a pool and a depthwise layer with identical numeric
 /// fields).
-const TAG_CONV: u8 = 1; // also dense (a dense layer *is* a 1x1 conv spec)
+const TAG_CONV: u8 = 1; // also dense and attention-head GEMMs (1x1 conv specs)
 const TAG_DEPTHWISE: u8 = 2;
 const TAG_POOL: u8 = 3;
 const TAG_ADD: u8 = 4;
+const TAG_SOFTMAX: u8 = 5;
+const TAG_ELTMUL: u8 = 6;
+const TAG_SUB: u8 = 7;
+const TAG_UNARY: u8 = 8;
 
 /// Hash the schema version and the perf-relevant configuration fields.
 fn config_hasher(cfg: &VtaConfig) -> Fnv {
@@ -69,6 +73,7 @@ fn config_hasher(cfg: &VtaConfig) -> Fnv {
         alu_pipelined,
         cmd_queue_depth,
         dep_queue_depth,
+        precision,
     } = cfg;
     let mut h = Fnv::new();
     h.write_u32(SIM_SCHEMA_VERSION);
@@ -81,6 +86,9 @@ fn config_hasher(cfg: &VtaConfig) -> Fnv {
     h.write_u64(*dram_latency);
     h.write_bool(*gemm_pipelined);
     h.write_bool(*alu_pipelined);
+    // Precision changes functional payloads (narrow wraps the GEMM
+    // accumulator), so narrow/wide entries must never share a sig.
+    h.write_u8(*precision as u8);
     h
 }
 
@@ -145,6 +153,68 @@ pub fn add_sig(cfg: &VtaConfig, tiles: usize, relu: bool, res_bits: u8) -> Layer
     h.write_u8(TAG_ADD);
     h.write_u64(tiles as u64);
     h.write_bool(relu);
+    h.write_u8(res_bits);
+    LayerSig(h.finish())
+}
+
+/// Signature of a softmax-approx ALU layer over a `(c_tiles, h, w)`
+/// tiled activation.
+pub fn softmax_sig(
+    cfg: &VtaConfig,
+    c_tiles: usize,
+    h_dim: usize,
+    w_dim: usize,
+    shift: u32,
+    res_bits: u8,
+) -> LayerSig {
+    let mut h = config_hasher(cfg);
+    h.write_u8(TAG_SOFTMAX);
+    for v in [c_tiles, h_dim, w_dim] {
+        h.write_u64(v as u64);
+    }
+    h.write_u32(shift);
+    h.write_u8(res_bits);
+    LayerSig(h.finish())
+}
+
+/// Signature of an eltwise-multiply layer over `tiles` activation tiles.
+pub fn eltmul_sig(cfg: &VtaConfig, tiles: usize, shift: u32, relu: bool, res_bits: u8) -> LayerSig {
+    let mut h = config_hasher(cfg);
+    h.write_u8(TAG_ELTMUL);
+    h.write_u64(tiles as u64);
+    h.write_u32(shift);
+    h.write_bool(relu);
+    h.write_u8(res_bits);
+    LayerSig(h.finish())
+}
+
+/// Signature of a clipped-subtract layer (layernorm stage 2) over
+/// `tiles` activation tiles.
+pub fn sub_sig(cfg: &VtaConfig, tiles: usize, res_bits: u8) -> LayerSig {
+    let mut h = config_hasher(cfg);
+    h.write_u8(TAG_SUB);
+    h.write_u64(tiles as u64);
+    h.write_u8(res_bits);
+    LayerSig(h.finish())
+}
+
+/// Signature of a pointwise immediate-ALU pipeline (hard-sigmoid /
+/// hard-tanh) over `tiles` activation tiles. The op pipeline itself is
+/// part of the identity.
+pub fn unary_sig(
+    cfg: &VtaConfig,
+    tiles: usize,
+    ops: &[(crate::isa::AluOp, i32)],
+    res_bits: u8,
+) -> LayerSig {
+    let mut h = config_hasher(cfg);
+    h.write_u8(TAG_UNARY);
+    h.write_u64(tiles as u64);
+    h.write_u64(ops.len() as u64);
+    for &(op, imm) in ops {
+        h.write_u8(op as u8);
+        h.write_u64(imm as u32 as u64);
+    }
     h.write_u8(res_bits);
     LayerSig(h.finish())
 }
@@ -256,5 +326,27 @@ mod tests {
         };
         assert_ne!(depthwise_sig(&cfg, &dw, 0), pool_sig(&cfg, &pl, 0));
         assert_ne!(add_sig(&cfg, 2, false, 0), pool_sig(&cfg, &pl, 0));
+        // The ALU-program tags introduced for the transformer/LSTM
+        // families hash apart from each other and from add.
+        assert_ne!(add_sig(&cfg, 2, false, 0), eltmul_sig(&cfg, 2, 0, false, 0));
+        assert_ne!(sub_sig(&cfg, 2, 0), eltmul_sig(&cfg, 2, 0, false, 0));
+        assert_ne!(
+            unary_sig(&cfg, 2, &crate::compiler::eltwise::HARD_SIGMOID_OPS, 0),
+            unary_sig(&cfg, 2, &crate::compiler::eltwise::HARD_TANH_OPS, 0)
+        );
+        assert_ne!(softmax_sig(&cfg, 2, 8, 1, 2, 0), softmax_sig(&cfg, 2, 8, 1, 3, 0));
+    }
+
+    #[test]
+    fn precision_is_part_of_the_identity() {
+        // Narrow accumulation changes functional payloads, so narrow
+        // and wide configs must never share a memo entry.
+        let mut narrow = presets::tiny_config();
+        narrow.precision = crate::config::Precision::Narrow;
+        let wide = presets::tiny_config();
+        assert_ne!(
+            conv_sig(&wide, &spec(), 5, true, &tiling(), 0),
+            conv_sig(&narrow, &spec(), 5, true, &tiling(), 0)
+        );
     }
 }

@@ -41,8 +41,8 @@ pub mod calib;
 
 use crate::analysis::roofline::Roofline;
 use crate::compiler::depthwise::DepthwiseParams;
-use crate::compiler::eltwise::PoolParams;
-use crate::compiler::graph::{Graph, Op};
+use crate::compiler::eltwise::{PoolParams, HARD_SIGMOID_OPS, HARD_TANH_OPS};
+use crate::compiler::graph::{attn_on_vta, layernorm_mean_spec, softmax_on_vta, Graph, Op};
 use crate::compiler::residency::{self, ResidencyMode, RECOMPUTE_SIG_BITS};
 use crate::compiler::tps::{self, ConvSpec, Tiling};
 use crate::config::{ConfigError, VtaConfig, INSN_BYTES};
@@ -396,6 +396,173 @@ pub fn add_estimate(cfg: &VtaConfig, total_tiles: usize, relu: bool, res_bits: u
     }
 }
 
+/// Predicted cycles of a shift-softmax over `c_tiles` single-slot
+/// iterations of an `h`×`w` map — mirrors
+/// `compiler::eltwise::lower_softmax` (one Acc8 load, the 8-instruction
+/// MAX-reduce / negate / shift / exp2-table sequence, one store per
+/// channel-tile iteration).
+pub fn softmax_estimate(
+    cfg: &VtaConfig,
+    c_tiles: usize,
+    h: usize,
+    w: usize,
+    res_bits: u8,
+) -> LayerEstimate {
+    let hot_in = res_bits & 1 != 0;
+    let elide_out = res_bits & 4 != 0;
+    let wd = cfg.axi_bytes as u64;
+    let lat = cfg.dram_latency;
+    let (ct, hw) = (c_tiles as u64, (h * w) as u64);
+    let acc8_tile = cfg.acc_tile_elems() as u64;
+    let out_tile = cfg.out_tile_bytes() as u64;
+
+    // MOV/MAX/MUL/ADD/SHR/MIN/MOV/SHR; the MAX reduce drops out at h=1.
+    let n_alu_per = 7 + u64::from(h > 1);
+    let n_insns = ct * (2 + n_alu_per) + 4;
+    let read_bytes = if hot_in { 0 } else { ct * hw * acc8_tile };
+    let read_rows = if hot_in { 0 } else { ct };
+    let dma_beats = (read_bytes + n_insns * INSN_BYTES as u64).div_ceil(wd) + read_rows;
+
+    let uop_count = (2 * hw + 2 * w as u64).min(cfg.uop_depth as u64);
+    let uop_bytes = uop_count * cfg.isa_layout().uop_bytes() as u64;
+    let elems = ct * hw * cfg.batch as u64;
+    let compute_cycles = ct * n_alu_per * ALU_PIPE_FILL
+        + 3 * elems * alu_ii(cfg, false) // MOV row0 + MAX reduce + ADD + two-op SHR
+        + 4 * elems * alu_ii(cfg, true) // MUL -1, SHR shift, MIN 31, MOV 127
+        + dma_beats
+        + u64::from(!hot_in) * ct * lat
+        + lat
+        + uop_bytes.div_ceil(wd);
+
+    LayerEstimate {
+        read_cycles: 0,
+        compute_cycles,
+        write_cycles: if elide_out { 0 } else { (ct * hw * out_tile).div_ceil(wd) + ct },
+        serial_cycles: lat,
+        serialized: false,
+    }
+}
+
+/// Predicted cycles of an elementwise multiply — mirrors
+/// `compiler::eltwise::lower_eltmul` (same chunked double-buffered loop
+/// as [`add_estimate`], with a MUL and the rounding-shift requant
+/// sequence instead of the ADD).
+pub fn eltmul_estimate(
+    cfg: &VtaConfig,
+    total_tiles: usize,
+    shift: u32,
+    relu: bool,
+    res_bits: u8,
+) -> LayerEstimate {
+    let cold_ops = 2 - u64::from(res_bits & 1 != 0) - u64::from(res_bits & 2 != 0);
+    let elide_out = res_bits & 4 != 0;
+    let w = cfg.axi_bytes as u64;
+    let lat = cfg.dram_latency;
+    let tiles = total_tiles as u64;
+    let max_loop = (1usize << cfg.isa_layout().loop_bits) - 1;
+    let chunk = (cfg.acc_depth / 4).min(total_tiles).min(max_loop).max(1) as u64;
+    let iters = tiles.div_ceil(chunk);
+    let acc8_tile = cfg.acc_tile_elems() as u64;
+    let out_tile = cfg.out_tile_bytes() as u64;
+
+    let n_alu_per = 2 + 2 * u64::from(shift > 0) + u64::from(relu); // MUL, [ADD+SHR], [MAX], CLIP
+    let n_insns = iters * (2 + n_alu_per + 1) + 4;
+    let dma_beats = (cold_ops * tiles * acc8_tile + n_insns * INSN_BYTES as u64).div_ceil(w)
+        + cold_ops * iters;
+    let elems = tiles * cfg.batch as u64;
+    let compute_cycles = iters * n_alu_per * ALU_PIPE_FILL
+        + elems * alu_ii(cfg, false) // MUL (two-operand)
+        + (n_alu_per - 1) * elems * alu_ii(cfg, true) // requant (immediate)
+        + dma_beats
+        + cold_ops * iters * lat
+        + lat;
+
+    LayerEstimate {
+        read_cycles: 0,
+        compute_cycles,
+        write_cycles: if elide_out { 0 } else { (tiles * out_tile).div_ceil(w) + iters },
+        serial_cycles: lat,
+        serialized: false,
+    }
+}
+
+/// Predicted cycles of the layernorm-approx subtract stage — mirrors
+/// `compiler::eltwise::lower_sub` (negate the broadcast mean, two-op
+/// ADD, CLIP).
+pub fn sub_estimate(cfg: &VtaConfig, total_tiles: usize, res_bits: u8) -> LayerEstimate {
+    let cold_ops = 2 - u64::from(res_bits & 1 != 0) - u64::from(res_bits & 2 != 0);
+    let elide_out = res_bits & 4 != 0;
+    let w = cfg.axi_bytes as u64;
+    let lat = cfg.dram_latency;
+    let tiles = total_tiles as u64;
+    let max_loop = (1usize << cfg.isa_layout().loop_bits) - 1;
+    let chunk = (cfg.acc_depth / 4).min(total_tiles).min(max_loop).max(1) as u64;
+    let iters = tiles.div_ceil(chunk);
+    let acc8_tile = cfg.acc_tile_elems() as u64;
+    let out_tile = cfg.out_tile_bytes() as u64;
+
+    let n_alu_per = 3u64; // MUL -1, ADD, CLIP
+    let n_insns = iters * (2 + n_alu_per + 1) + 4;
+    let dma_beats = (cold_ops * tiles * acc8_tile + n_insns * INSN_BYTES as u64).div_ceil(w)
+        + cold_ops * iters;
+    let elems = tiles * cfg.batch as u64;
+    let compute_cycles = iters * n_alu_per * ALU_PIPE_FILL
+        + elems * alu_ii(cfg, false) // ADD (two-operand)
+        + 2 * elems * alu_ii(cfg, true) // MUL -1, CLIP (immediate)
+        + dma_beats
+        + cold_ops * iters * lat
+        + lat;
+
+    LayerEstimate {
+        read_cycles: 0,
+        compute_cycles,
+        write_cycles: if elide_out { 0 } else { (tiles * out_tile).div_ceil(w) + iters },
+        serial_cycles: lat,
+        serialized: false,
+    }
+}
+
+/// Predicted cycles of an immediate-only unary ALU chain (hard-sigmoid,
+/// hard-tanh) of `n_ops` instructions per chunk — mirrors
+/// `compiler::eltwise::lower_unary`.
+pub fn unary_estimate(
+    cfg: &VtaConfig,
+    total_tiles: usize,
+    n_ops: usize,
+    res_bits: u8,
+) -> LayerEstimate {
+    let hot_in = res_bits & 1 != 0;
+    let elide_out = res_bits & 4 != 0;
+    let w = cfg.axi_bytes as u64;
+    let lat = cfg.dram_latency;
+    let tiles = total_tiles as u64;
+    let max_loop = (1usize << cfg.isa_layout().loop_bits) - 1;
+    let chunk = (cfg.acc_depth / 2).min(total_tiles).min(max_loop).max(1) as u64;
+    let iters = tiles.div_ceil(chunk);
+    let acc8_tile = cfg.acc_tile_elems() as u64;
+    let out_tile = cfg.out_tile_bytes() as u64;
+
+    let n_alu_per = n_ops as u64;
+    let n_insns = iters * (1 + n_alu_per + 1) + 4;
+    let cold = u64::from(!hot_in);
+    let dma_beats =
+        (cold * tiles * acc8_tile + n_insns * INSN_BYTES as u64).div_ceil(w) + cold * iters;
+    let elems = tiles * cfg.batch as u64;
+    let compute_cycles = iters * n_alu_per * ALU_PIPE_FILL
+        + n_alu_per * elems * alu_ii(cfg, true)
+        + dma_beats
+        + cold * iters * lat
+        + lat;
+
+    LayerEstimate {
+        read_cycles: 0,
+        compute_cycles,
+        write_cycles: if elide_out { 0 } else { (tiles * out_tile).div_ceil(w) + iters },
+        serial_cycles: lat,
+        serialized: false,
+    }
+}
+
 /// One layer's prediction inside a [`GraphPrediction`].
 #[derive(Debug, Clone)]
 pub struct LayerPrediction {
@@ -537,6 +704,61 @@ pub fn try_predict_graph_cached(
                 *cache
                     .entry(sig::add_sig(cfg, tiles, *relu, bits).0)
                     .or_insert_with(|| add_estimate(cfg, tiles, *relu, bits).cycles())
+            }
+            // Attention GEMMs run one conv per head (the runtime's
+            // `run_attn_on_vta`); all heads share the same shape, so one
+            // cached per-head estimate scales by `heads`.
+            Op::AttnScores { heads, shift } | Op::AttnMix { heads, shift } => {
+                let spec = graph.attn_head_spec(i, &shapes);
+                if attn_on_vta(cfg, &spec) {
+                    *heads as u64 * conv_cached(cfg, &spec, *shift, false, bits, cache)?
+                } else {
+                    0 // CPU fallback
+                }
+            }
+            Op::SoftmaxApprox { shift } => {
+                if softmax_on_vta(cfg, in_shape) {
+                    let ct = in_shape.c_tiles(block);
+                    *cache
+                        .entry(sig::softmax_sig(cfg, ct, in_shape.h, in_shape.w, *shift, bits).0)
+                        .or_insert_with(|| {
+                            softmax_estimate(cfg, ct, in_shape.h, in_shape.w, bits).cycles()
+                        })
+                } else {
+                    0
+                }
+            }
+            // Pure data-marshalling layers always run on the host.
+            Op::HeadTranspose { .. } | Op::ChanSlice { .. } => 0,
+            Op::LayerNormApprox => {
+                if in_shape.c >= block {
+                    let spec = layernorm_mean_spec(in_shape);
+                    let mean =
+                        conv_cached(cfg, &spec, clog2(in_shape.c as u64), false, bits, cache)?;
+                    let tiles = out_shape.tiles(block);
+                    mean + *cache
+                        .entry(sig::sub_sig(cfg, tiles, bits).0)
+                        .or_insert_with(|| sub_estimate(cfg, tiles, bits).cycles())
+                } else {
+                    0
+                }
+            }
+            Op::EltMul { shift, relu } => {
+                let tiles = out_shape.tiles(block);
+                *cache
+                    .entry(sig::eltmul_sig(cfg, tiles, *shift, *relu, bits).0)
+                    .or_insert_with(|| eltmul_estimate(cfg, tiles, *shift, *relu, bits).cycles())
+            }
+            Op::HardSigmoid | Op::HardTanh => {
+                let ops: &[(crate::isa::AluOp, i32)] = if matches!(node.op, Op::HardSigmoid) {
+                    &HARD_SIGMOID_OPS
+                } else {
+                    &HARD_TANH_OPS
+                };
+                let tiles = out_shape.tiles(block);
+                *cache
+                    .entry(sig::unary_sig(cfg, tiles, ops, bits).0)
+                    .or_insert_with(|| unary_estimate(cfg, tiles, ops.len(), bits).cycles())
             }
         };
         // DTR reruns bill to the consumer that triggered them, exactly
@@ -714,6 +936,35 @@ mod tests {
             try_predict_graph(&bad, &g, ResidencyMode::Lru),
             Err(ConfigError::Infeasible { .. })
         ));
+    }
+
+    #[test]
+    fn transformer_and_lstm_predict_nonzero() {
+        let cfg = presets::default_config();
+        let t = predict_graph(&cfg, &workloads::transformer_block(64, 4, 16, 1));
+        assert!(t.cycles > 0);
+        let scores = t.layers.iter().find(|l| l.kind == "attn_scores").unwrap();
+        assert!(scores.cycles > 0, "attention GEMMs must be priced on the default config");
+        let sm = t.layers.iter().find(|l| l.kind == "softmax_approx").unwrap();
+        assert!(sm.cycles > 0, "softmax fits the default acc scratchpad");
+        let l = predict_graph(&cfg, &workloads::lstm_cell(64, 16, 1));
+        assert!(l.cycles > 0);
+        assert!(l.layers.iter().filter(|x| x.kind == "elt_mul").all(|x| x.cycles > 0));
+        // Host-side marshalling layers contribute no accelerator cycles.
+        assert!(l.layers.iter().filter(|x| x.kind == "chan_slice").all(|x| x.cycles == 0));
+    }
+
+    #[test]
+    fn precision_mode_does_not_change_cycle_predictions() {
+        // Narrow accumulation shortens the adder, not the pipeline: the
+        // cycle model is precision-blind by design (DESIGN.md §Workload
+        // families & precision axis) — only area moves.
+        let wide = presets::default_config();
+        let mut narrow = wide.clone();
+        narrow.precision = crate::config::Precision::Narrow;
+        for g in [workloads::transformer_block(64, 4, 16, 1), workloads::micro_resnet(16, 7)] {
+            assert_eq!(predict_graph(&wide, &g).cycles, predict_graph(&narrow, &g).cycles);
+        }
     }
 
     #[test]

@@ -31,8 +31,13 @@ pub mod pjrt;
 use crate::compiler::builder::{Program, ProgramBuilder};
 use crate::compiler::conv::{lower_conv, ConvBases, ConvParams};
 use crate::compiler::depthwise::{lower_depthwise, DepthwiseParams};
-use crate::compiler::eltwise::{lower_add, lower_pool, PoolParams};
-use crate::compiler::graph::{Graph, Op};
+use crate::compiler::eltwise::{
+    lower_add, lower_eltmul, lower_pool, lower_softmax, lower_sub, lower_unary, PoolParams,
+    HARD_SIGMOID_OPS, HARD_TANH_OPS,
+};
+use crate::compiler::graph::{
+    attn_on_vta, layernorm_mean_spec, softmax_on_vta, Graph, Op,
+};
 use crate::compiler::layout::{
     pack_activation, pack_conv_weights_into, pack_depthwise_weights_into, unpack_activation,
     Shape,
@@ -552,6 +557,205 @@ impl Session {
                     });
                     (n.0, n.1, n.2, false)
                 }
+                Op::AttnScores { heads, shift } => {
+                    let spec = graph.attn_head_spec(i, shapes);
+                    let k_region = regions[node.inputs[1]].expect("producer region");
+                    if attn_on_vta(&cfg, &spec) {
+                        // Q is read back as per-head weights; K streams
+                        // as the per-head GEMM activation.
+                        let n = self.run_attn_on_vta(
+                            &spec, *heads, *shift, in_region, in_shape, true, k_region,
+                            out_region, &label, res_bits,
+                        )?;
+                        (n.0, n.1, n.2, false)
+                    } else {
+                        if !self.timing_only() {
+                            let (heads, shift) = (*heads, *shift);
+                            let q_sh = in_shape;
+                            self.run_on_cpu(
+                                &[(in_region, in_shape), (k_region, shapes[node.inputs[1]])],
+                                out_region,
+                                out_shape,
+                                move |ins, n| {
+                                    crate::compiler::cpu_ref::attn_scores(
+                                        &ins[0], &ins[1], n, q_sh.c, q_sh.h, heads, shift,
+                                    )
+                                },
+                            );
+                        }
+                        (0, 0, 0, true)
+                    }
+                }
+                Op::SoftmaxApprox { shift } => {
+                    let sh = in_shape;
+                    if softmax_on_vta(&cfg, sh) {
+                        let c_tiles = sh.c_tiles(block);
+                        let layer_sig =
+                            sig::softmax_sig(&cfg, c_tiles, sh.h, sh.w, *shift, res_bits);
+                        let in_base = in_region.tile_base(cfg.acc_tile_elems());
+                        let out_base = out_region.tile_base(cfg.out_tile_bytes());
+                        let shift = *shift;
+                        let n = self.memo_run(layer_sig, &label, |s| {
+                            let mut b = ProgramBuilder::new(&s.cfg);
+                            lower_softmax(&mut b, c_tiles, sh.h, sh.w, shift, in_base, out_base);
+                            b.finish(&label, &mut s.dram)
+                        });
+                        (n.0, n.1, n.2, false)
+                    } else {
+                        if !self.timing_only() {
+                            let shift = *shift;
+                            self.run_on_cpu(
+                                &[(in_region, sh)],
+                                out_region,
+                                out_shape,
+                                move |ins, n| {
+                                    crate::compiler::cpu_ref::softmax_approx(
+                                        &ins[0], n, sh.c, sh.h, sh.w, shift,
+                                    )
+                                },
+                            );
+                        }
+                        (0, 0, 0, true)
+                    }
+                }
+                Op::HeadTranspose { heads } => {
+                    // Pure data marshal between the two attention GEMMs
+                    // (the scratchpads have no transposed access path):
+                    // zero cycles, like every CPU-side layer.
+                    if !self.timing_only() {
+                        let heads = *heads;
+                        let sh = in_shape;
+                        self.run_on_cpu(&[(in_region, sh)], out_region, out_shape, move |ins, n| {
+                            crate::compiler::cpu_ref::head_transpose(&ins[0], n, sh.c, sh.h, heads)
+                        });
+                    }
+                    (0, 0, 0, true)
+                }
+                Op::AttnMix { heads, shift } => {
+                    let spec = graph.attn_head_spec(i, shapes);
+                    let v_region = regions[node.inputs[1]].expect("producer region");
+                    let v_shape = shapes[node.inputs[1]];
+                    if attn_on_vta(&cfg, &spec) {
+                        // V is read back as per-head weights; the
+                        // transposed probabilities stream as the
+                        // per-head GEMM activation.
+                        let n = self.run_attn_on_vta(
+                            &spec, *heads, *shift, v_region, v_shape, false, in_region,
+                            out_region, &label, res_bits,
+                        )?;
+                        (n.0, n.1, n.2, false)
+                    } else {
+                        if !self.timing_only() {
+                            let (heads, shift) = (*heads, *shift);
+                            let p_sh = in_shape;
+                            self.run_on_cpu(
+                                &[(in_region, in_shape), (v_region, v_shape)],
+                                out_region,
+                                out_shape,
+                                move |ins, n| {
+                                    crate::compiler::cpu_ref::attn_mix(
+                                        &ins[0], &ins[1], n, v_shape.c, v_shape.h, p_sh.h,
+                                        heads, shift,
+                                    )
+                                },
+                            );
+                        }
+                        (0, 0, 0, true)
+                    }
+                }
+                Op::LayerNormApprox => {
+                    let sh = in_shape;
+                    if sh.c >= block {
+                        // Stage 1: all-ones GEMM broadcasts the channel
+                        // mean into every lane of a fresh activation;
+                        // stage 2 subtracts it on the ALU.
+                        let spec = layernorm_mean_spec(sh);
+                        let mu_region = self.alloc_activation(sh);
+                        let ones =
+                            if self.timing_only() { Vec::new() } else { vec![1i8; sh.c * sh.c] };
+                        let mean_label = format!("{label}:mean");
+                        let m = self.run_conv_on_vta(
+                            &spec,
+                            &ones,
+                            clog2(sh.c as u64),
+                            false,
+                            in_region,
+                            mu_region,
+                            &mean_label,
+                            res_bits,
+                        )?;
+                        let tiles = out_shape.tiles(block);
+                        let layer_sig = sig::sub_sig(&cfg, tiles, res_bits);
+                        let in_base = in_region.tile_base(cfg.acc_tile_elems());
+                        let mu_base = mu_region.tile_base(cfg.acc_tile_elems());
+                        let out_base = out_region.tile_base(cfg.out_tile_bytes());
+                        let n = self.memo_run(layer_sig, &label, |s| {
+                            let mut b = ProgramBuilder::new(&s.cfg);
+                            lower_sub(&mut b, tiles, in_base, mu_base, out_base);
+                            b.finish(&label, &mut s.dram)
+                        });
+                        (m.0 + n.0, m.1 + n.1, m.2 + n.2, false)
+                    } else {
+                        if !self.timing_only() {
+                            self.run_on_cpu(
+                                &[(in_region, sh)],
+                                out_region,
+                                out_shape,
+                                move |ins, n| {
+                                    crate::compiler::cpu_ref::layernorm_approx(
+                                        &ins[0], n, sh.c, sh.h, sh.w,
+                                    )
+                                },
+                            );
+                        }
+                        (0, 0, 0, true)
+                    }
+                }
+                Op::ChanSlice { start, len } => {
+                    if !self.timing_only() {
+                        let (start, len) = (*start, *len);
+                        let sh = in_shape;
+                        self.run_on_cpu(&[(in_region, sh)], out_region, out_shape, move |ins, n| {
+                            crate::compiler::cpu_ref::chan_slice(
+                                &ins[0], n, sh.c, sh.h, sh.w, start, len,
+                            )
+                        });
+                    }
+                    (0, 0, 0, true)
+                }
+                Op::EltMul { shift, relu } => {
+                    let b_region = regions[node.inputs[1]].expect("producer region");
+                    let tiles = out_shape.tiles(block);
+                    let layer_sig = sig::eltmul_sig(&cfg, tiles, *shift, *relu, res_bits);
+                    let in_base = in_region.tile_base(cfg.acc_tile_elems());
+                    let b_base = b_region.tile_base(cfg.acc_tile_elems());
+                    let out_base = out_region.tile_base(cfg.out_tile_bytes());
+                    let (shift, relu) = (*shift, *relu);
+                    let n = self.memo_run(layer_sig, &label, |s| {
+                        let mut b = ProgramBuilder::new(&s.cfg);
+                        lower_eltmul(&mut b, tiles, in_base, b_base, out_base, shift, relu);
+                        b.finish(&label, &mut s.dram)
+                    });
+                    (n.0, n.1, n.2, false)
+                }
+                Op::HardSigmoid | Op::HardTanh => {
+                    let ops: &'static [(crate::isa::AluOp, i32)] =
+                        if matches!(node.op, Op::HardSigmoid) {
+                            &HARD_SIGMOID_OPS
+                        } else {
+                            &HARD_TANH_OPS
+                        };
+                    let tiles = out_shape.tiles(block);
+                    let layer_sig = sig::unary_sig(&cfg, tiles, ops, res_bits);
+                    let in_base = in_region.tile_base(cfg.acc_tile_elems());
+                    let out_base = out_region.tile_base(cfg.out_tile_bytes());
+                    let n = self.memo_run(layer_sig, &label, |s| {
+                        let mut b = ProgramBuilder::new(&s.cfg);
+                        lower_unary(&mut b, tiles, in_base, out_base, ops);
+                        b.finish(&label, &mut s.dram)
+                    });
+                    (n.0, n.1, n.2, false)
+                }
             };
 
             let after = self.exec_counters();
@@ -731,6 +935,102 @@ impl Session {
             b.finish(label, &mut s.dram)
         });
         (n.0, n.1, n.2, false)
+    }
+
+    /// Generic CPU marshal/fallback: unpack each producer activation to
+    /// NCHW, run `f` over them, repack the result into `out_region`.
+    /// Callers guard with `!timing_only()` — timing-only sessions have
+    /// no tensor data in DRAM and CPU layers contribute zero cycles.
+    fn run_on_cpu(
+        &mut self,
+        ins: &[(DramRegion, Shape)],
+        out_region: DramRegion,
+        out_shape: Shape,
+        f: impl FnOnce(&[Vec<i8>], usize) -> Vec<i8>,
+    ) {
+        let cfg = self.cfg.clone();
+        let nchw: Vec<Vec<i8>> = ins
+            .iter()
+            .map(|&(r, s)| {
+                let tiled = self.dram.read_i8(r);
+                unpack_activation(&tiled, cfg.batch, s, cfg.block_in)
+            })
+            .collect();
+        let out = f(&nchw, cfg.batch);
+        let packed = pack_activation(&out, cfg.batch, out_shape, cfg.block_in);
+        self.dram.write_i8(out_region, &packed);
+    }
+
+    /// One attention GEMM (scores or mix) as `heads` per-head
+    /// convolutions on the GEMM core. The tensor in `wgt_region` is
+    /// read back and re-staged as per-head *weights* (Q for scores —
+    /// transposed to `[s1][d]` — V for mix, whose rows are already the
+    /// `[d][s2]` weight layout), while `act_region` streams per-head
+    /// channel-tile slices as the GEMM activation (K for scores,
+    /// transposed probabilities for mix). Eligibility
+    /// ([`attn_on_vta`]) guarantees batch 1 and tile-aligned head
+    /// slices, so each head's input and output sub-ranges are whole
+    /// tile runs of the parent activation regions. Timing-only
+    /// sessions skip the readback (DRAM holds no data); timing is
+    /// data-independent, so the memo lets head 2..N splice head 1's
+    /// simulation.
+    #[allow(clippy::too_many_arguments)]
+    fn run_attn_on_vta(
+        &mut self,
+        spec: &tps::ConvSpec,
+        heads: usize,
+        shift: u32,
+        wgt_region: DramRegion,
+        wgt_shape: Shape,
+        scores: bool,
+        act_region: DramRegion,
+        out_region: DramRegion,
+        label: &str,
+        res_bits: u8,
+    ) -> Result<(u64, usize, usize), VtaError> {
+        let cfg = self.cfg.clone();
+        let tile = cfg.inp_tile_bytes();
+        let in_tiles = (spec.c_in / cfg.block_in) * spec.h;
+        let out_tiles = (spec.c_out / cfg.block_in) * spec.h;
+        let wgt_data = if self.timing_only() {
+            Vec::new()
+        } else {
+            let tiled = self.dram.read_i8(wgt_region);
+            unpack_activation(&tiled, cfg.batch, wgt_shape, cfg.block_in)
+        };
+        let seq = wgt_shape.h;
+        let mut total = (0u64, 0usize, 0usize);
+        for hd in 0..heads {
+            let w: Vec<i8> = if self.timing_only() {
+                Vec::new()
+            } else if scores {
+                // w[s1][d] = q[(hd*Dh + d), s1]
+                let mut w = vec![0i8; spec.c_out * spec.c_in];
+                for s1 in 0..spec.c_out {
+                    for d in 0..spec.c_in {
+                        w[s1 * spec.c_in + d] = wgt_data[(hd * spec.c_in + d) * seq + s1];
+                    }
+                }
+                w
+            } else {
+                // w[d][s2] = v[(hd*Dh + d), s2] — contiguous V rows.
+                wgt_data[hd * spec.c_out * seq..(hd + 1) * spec.c_out * seq].to_vec()
+            };
+            let in_sub = DramRegion {
+                addr: act_region.addr + hd * in_tiles * tile,
+                len: in_tiles * tile,
+            };
+            let out_sub = DramRegion {
+                addr: out_region.addr + hd * out_tiles * tile,
+                len: out_tiles * tile,
+            };
+            let head_label = format!("{label}:h{hd}");
+            let n = self.run_conv_on_vta(
+                spec, &w, shift, false, in_sub, out_sub, &head_label, res_bits,
+            )?;
+            total = (total.0 + n.0, total.1 + n.1, total.2 + n.2);
+        }
+        Ok(total)
     }
 
     /// CPU fallback: unpack, run the reference op, repack.

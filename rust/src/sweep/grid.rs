@@ -8,13 +8,18 @@
 //! hand-built configurations.
 
 use crate::compiler::graph::Graph;
-use crate::config::presets;
+use crate::config::{presets, Precision};
 use crate::engine::VtaError;
 use crate::workloads;
 
+/// The workload names [`WorkloadSpec::parse`] understands (quoted by its
+/// unknown-workload error so CLI typos are self-correcting).
+pub const WORKLOAD_NAMES: [&str; 5] =
+    ["resnet{18|34|50|101}", "mobilenet", "micro", "transformer_block", "lstm_cell"];
+
 /// A workload the sweep can build, identified by a stable string id
 /// (used in cache keys and result records): `resnet18@224`,
-/// `mobilenet@56`, `micro@16`.
+/// `mobilenet@56`, `micro@16`, `transformer_block@16`, `lstm_cell@16`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum WorkloadSpec {
     /// `resnet{depth}@{hw}` — ResNet at an input resolution.
@@ -24,13 +29,19 @@ pub enum WorkloadSpec {
     /// `micro@{block}` — the fast micro-ResNet test network; `block`
     /// must match the configuration's BLOCK for accelerator execution.
     Micro { block: usize },
+    /// `transformer_block@{seq}` — one d=64 h=4 encoder block at a
+    /// sequence length.
+    Transformer { seq: usize },
+    /// `lstm_cell@{seq}` — an H=64 LSTM cell over `seq` state rows.
+    Lstm { seq: usize },
 }
 
 impl WorkloadSpec {
-    /// Parse an id like `resnet18@56`, `mobilenet`, `micro@4`. The part
-    /// after `@` defaults to 224 (nets) or 16 (micro). Failures are
-    /// typed [`VtaError::InvalidRequest`] values quoting the offending
-    /// id.
+    /// Parse an id like `resnet18@56`, `mobilenet`, `micro@4`,
+    /// `transformer_block@16`. The part after `@` defaults to 224
+    /// (image nets), 16 (micro block width), or 16 (sequence length).
+    /// Failures are typed [`VtaError::InvalidRequest`] values quoting
+    /// the offending id and listing the available names.
     pub fn parse(s: &str) -> Result<WorkloadSpec, VtaError> {
         let bad = VtaError::InvalidRequest;
         let (name, size) = match s.split_once('@') {
@@ -45,11 +56,16 @@ impl WorkloadSpec {
         match name {
             "mobilenet" => Ok(WorkloadSpec::Mobilenet { hw: size.unwrap_or(224) }),
             "micro" => Ok(WorkloadSpec::Micro { block: size.unwrap_or(16) }),
+            "transformer_block" => Ok(WorkloadSpec::Transformer { seq: size.unwrap_or(16) }),
+            "lstm_cell" => Ok(WorkloadSpec::Lstm { seq: size.unwrap_or(16) }),
             _ => {
-                let depth = name
-                    .strip_prefix("resnet")
-                    .and_then(|d| d.parse::<usize>().ok())
-                    .ok_or_else(|| bad(format!("unknown workload '{s}'")))?;
+                let depth = name.strip_prefix("resnet").and_then(|d| d.parse::<usize>().ok());
+                let depth = depth.ok_or_else(|| {
+                    bad(format!(
+                        "unknown workload '{s}' (available: {})",
+                        WORKLOAD_NAMES.join(", ")
+                    ))
+                })?;
                 if !workloads::RESNET_DEPTHS.contains(&depth) {
                     return Err(bad(format!("unsupported ResNet depth {depth} in '{s}'")));
                 }
@@ -64,6 +80,8 @@ impl WorkloadSpec {
             WorkloadSpec::Resnet { depth, hw } => format!("resnet{depth}@{hw}"),
             WorkloadSpec::Mobilenet { hw } => format!("mobilenet@{hw}"),
             WorkloadSpec::Micro { block } => format!("micro@{block}"),
+            WorkloadSpec::Transformer { seq } => format!("transformer_block@{seq}"),
+            WorkloadSpec::Lstm { seq } => format!("lstm_cell@{seq}"),
         }
     }
 
@@ -73,6 +91,10 @@ impl WorkloadSpec {
             WorkloadSpec::Resnet { depth, hw } => workloads::resnet(*depth, *hw, graph_seed),
             WorkloadSpec::Mobilenet { hw } => workloads::mobilenet(*hw, graph_seed),
             WorkloadSpec::Micro { block } => workloads::micro_resnet(*block, graph_seed),
+            WorkloadSpec::Transformer { seq } => {
+                workloads::transformer_block(64, 4, *seq, graph_seed)
+            }
+            WorkloadSpec::Lstm { seq } => workloads::lstm_cell(64, *seq, graph_seed),
         }
     }
 }
@@ -88,6 +110,10 @@ pub struct GridSpec {
     pub axi: Vec<usize>,
     /// Scratchpad-scaling axis.
     pub scales: Vec<usize>,
+    /// Accumulator-precision axis (narrow 16-bit vs wide 32-bit
+    /// accumulation; [`Precision`]). Narrow points get a `-narrow` name
+    /// suffix so [`presets::by_name`] round-trips them.
+    pub precisions: Vec<Precision>,
     pub workloads: Vec<WorkloadSpec>,
     /// Input-data seeds (one job per seed).
     pub seeds: Vec<u64>,
@@ -105,6 +131,7 @@ impl GridSpec {
             blocks: vec![16, 32, 64],
             axi: if quick { vec![8, 64] } else { vec![8, 16, 32, 64] },
             scales: if quick { vec![2] } else { vec![1, 2, 4] },
+            precisions: vec![Precision::Wide],
             workloads: vec![WorkloadSpec::Resnet { depth: 18, hw: if quick { 56 } else { 224 } }],
             seeds: vec![7],
             graph_seed: 1,
@@ -125,6 +152,7 @@ impl GridSpec {
             blocks: vec![4, 8, 16, 32, 64, 128],
             axi: vec![8, 16, 32, 64],
             scales: if quick { vec![1, 2, 4] } else { vec![1, 2, 4, 8] },
+            precisions: vec![Precision::Wide],
             workloads: vec![WorkloadSpec::Resnet { depth: 18, hw: if quick { 56 } else { 224 } }],
             seeds: vec![7],
             graph_seed: 1,
@@ -132,14 +160,23 @@ impl GridSpec {
     }
 
     /// Expand the axes into an explicit configuration list, in the same
-    /// nested order (block, then axi, then scale) as the serial Fig 13
-    /// loop, so row order is stable across engine versions.
+    /// nested order (block, then axi, then scale, then precision) as the
+    /// serial Fig 13 loop, so row order is stable across engine
+    /// versions.
     pub fn to_sweep_spec(&self) -> super::SweepSpec {
         let mut configs = Vec::new();
         for &block in &self.blocks {
             for &axi in &self.axi {
                 for &scale in &self.scales {
-                    configs.push(presets::scaled_config(self.batch, block, block, scale, axi));
+                    for &p in &self.precisions {
+                        let mut cfg =
+                            presets::scaled_config(self.batch, block, block, scale, axi);
+                        if p == Precision::Narrow {
+                            cfg.precision = p;
+                            cfg.name = format!("{}-narrow", cfg.name);
+                        }
+                        configs.push(cfg);
+                    }
                 }
             }
         }
@@ -158,7 +195,14 @@ mod tests {
 
     #[test]
     fn workload_id_parse_roundtrip() {
-        for id in ["resnet18@224", "resnet50@56", "mobilenet@224", "micro@4"] {
+        for id in [
+            "resnet18@224",
+            "resnet50@56",
+            "mobilenet@224",
+            "micro@4",
+            "transformer_block@16",
+            "lstm_cell@8",
+        ] {
             let w = WorkloadSpec::parse(id).unwrap();
             assert_eq!(w.id(), id);
         }
@@ -171,14 +215,45 @@ mod tests {
             WorkloadSpec::Resnet { depth: 34, hw: 224 }
         );
         assert_eq!(WorkloadSpec::parse("micro").unwrap(), WorkloadSpec::Micro { block: 16 });
+        assert_eq!(
+            WorkloadSpec::parse("transformer_block").unwrap(),
+            WorkloadSpec::Transformer { seq: 16 }
+        );
+        assert_eq!(WorkloadSpec::parse("lstm_cell").unwrap(), WorkloadSpec::Lstm { seq: 16 });
     }
 
     #[test]
     fn workload_parse_rejects_garbage() {
-        for bad in ["resnet19", "alexnet", "resnet18@big"] {
+        for bad in ["resnet19", "alexnet", "resnet18@big", "transformer_block@wide"] {
             let err = WorkloadSpec::parse(bad).unwrap_err();
             assert!(matches!(err, VtaError::InvalidRequest(_)), "got {err:?}");
             assert!(err.to_string().contains(bad), "must quote the offending id: {err}");
+        }
+    }
+
+    #[test]
+    fn unknown_workload_error_lists_available_names() {
+        let err = WorkloadSpec::parse("alexnet").unwrap_err().to_string();
+        for name in ["mobilenet", "micro", "transformer_block", "lstm_cell", "resnet"] {
+            assert!(err.contains(name), "error must advertise '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn precision_axis_expands_and_names_narrow_points() {
+        let mut g = GridSpec::fig13(true);
+        let wide_only = g.to_sweep_spec().configs.len();
+        g.precisions = vec![Precision::Wide, Precision::Narrow];
+        let spec = g.to_sweep_spec();
+        assert_eq!(spec.configs.len(), 2 * wide_only);
+        let narrow: Vec<_> =
+            spec.configs.iter().filter(|c| c.precision == Precision::Narrow).collect();
+        assert_eq!(narrow.len(), wide_only);
+        for cfg in &narrow {
+            assert!(cfg.name.ends_with("-narrow"), "{}", cfg.name);
+            // The suffixed name round-trips through the preset lookup,
+            // so sweep rows can be fed back to --config / fleet CLIs.
+            assert_eq!(presets::by_name(&cfg.name).as_ref(), Some(*cfg));
         }
     }
 
@@ -223,6 +298,7 @@ mod tests {
             blocks: vec![16, 32],
             axi: vec![8, 16],
             scales: vec![1],
+            precisions: vec![Precision::Wide],
             workloads: vec![WorkloadSpec::Micro { block: 16 }],
             seeds: vec![7],
             graph_seed: 1,

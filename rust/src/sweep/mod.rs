@@ -97,10 +97,12 @@ use std::sync::Arc;
 /// v1 = PR-1 records (implicit, unversioned); v2 = PR-2 versioned
 /// records; v3 = the `predicted_cycles` field and the two-phase engine
 /// (the optional `measured` flag added by the engine redesign defaults
-/// to `true`); v4 = this scheme: the residency mode is part of every
-/// key and record (cycles depend on it), and records carry it
-/// explicitly.
-pub const SWEEP_SCHEMA_VERSION: u32 = 4;
+/// to `true`); v4 = the residency mode became part of every key and
+/// record (cycles depend on it), and records carry it explicitly;
+/// v5 = this scheme: configurations serialize their accumulator
+/// `precision`, so the config JSON inside every key grew a field (the
+/// simulator bump to s4 rides along in the same release).
+pub const SWEEP_SCHEMA_VERSION: u32 = 5;
 
 /// Stable 64-bit cache-key hash. One canonical implementation lives in
 /// [`crate::util::hash`] (FNV-1a — stable across processes, which

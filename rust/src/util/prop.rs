@@ -182,6 +182,145 @@ impl Prop {
     }
 }
 
+/// Draw a random — but always structurally valid — operator graph for
+/// the cross-backend differential fuzz harness
+/// (`rust/tests/backend_parity.rs`). Two regimes, chosen per case:
+/// *sequence* graphs (`w == 1`) walk the attention/LSTM operator menu
+/// (1×1 GEMMs, residual adds, elementwise multiplies, hard-sigmoid /
+/// hard-tanh, layernorm-approx, softmax-approx, channel slices, full
+/// multi-head attention bundles); *image* graphs walk the CNN menu
+/// (3×3/1×1 convs, depthwise, maxpool, residual adds, an optional
+/// global-pool + dense tail). Channel counts stay multiples of `block`
+/// so most layers take the accelerator path; synthetic weights come
+/// from a seed drawn through `g`, keeping the shrinkable draw log
+/// small.
+pub fn gen_graph(g: &mut Gen, block: usize) -> crate::compiler::graph::Graph {
+    use crate::compiler::cpu_ref::default_shift;
+    use crate::compiler::graph::{Graph, Op};
+    use crate::compiler::layout::Shape;
+    use crate::util::rng::Pcg32;
+
+    fn conv(
+        graph: &mut Graph,
+        wrng: &mut Pcg32,
+        name: &str,
+        from: usize,
+        c_in: usize,
+        c_out: usize,
+        k: usize,
+        relu: bool,
+    ) -> usize {
+        let op = Op::Conv {
+            c_out,
+            k,
+            stride: 1,
+            pad: k / 2,
+            shift: default_shift(c_in * k * k),
+            relu,
+            weights: wrng.i8_vec(c_out * c_in * k * k),
+        };
+        graph.add(name, op, vec![from])
+    }
+
+    let seq_mode = g.bool();
+    let mut wrng = Pcg32::seeded(g.i64(0, 1 << 30) as u64);
+    let mut hh = g.usize(2, 5);
+    let mut ww = if seq_mode { 1 } else { hh };
+    let mut c = block * g.usize(1, 2);
+    let mut graph = Graph::new("fuzz", Shape::new(c, hh, ww));
+    let mut cur = 0usize;
+    for i in 0..g.usize(2, 6) {
+        match g.usize(0, if seq_mode { 7 } else { 6 }) {
+            0 => {
+                let c_out = block * g.usize(1, 2);
+                let k = if seq_mode || g.bool() { 1 } else { 3 };
+                cur = conv(&mut graph, &mut wrng, &format!("conv{i}"), cur, c, c_out, k, g.bool());
+                c = c_out;
+            }
+            1 => {
+                // Residual add through a materialized 1×1 branch.
+                let b = conv(&mut graph, &mut wrng, &format!("br{i}"), cur, c, c, 1, false);
+                cur = graph.add(&format!("add{i}"), Op::Add { relu: g.bool() }, vec![b, cur]);
+            }
+            2 => {
+                let b = conv(&mut graph, &mut wrng, &format!("gate{i}"), cur, c, c, 1, false);
+                let op = Op::EltMul { shift: g.usize(0, 7) as u32, relu: g.bool() };
+                cur = graph.add(&format!("mul{i}"), op, vec![b, cur]);
+            }
+            3 => cur = graph.add(&format!("sig{i}"), Op::HardSigmoid, vec![cur]),
+            4 => cur = graph.add(&format!("tanh{i}"), Op::HardTanh, vec![cur]),
+            5 if seq_mode => {
+                if c.is_power_of_two() {
+                    cur = graph.add(&format!("ln{i}"), Op::LayerNormApprox, vec![cur]);
+                } else {
+                    let op = Op::SoftmaxApprox { shift: g.usize(1, 4) as u32 };
+                    cur = graph.add(&format!("sm{i}"), op, vec![cur]);
+                }
+            }
+            6 if seq_mode => {
+                if c > block {
+                    let start = g.usize(0, c - block);
+                    let op = Op::ChanSlice { start, len: block };
+                    cur = graph.add(&format!("slice{i}"), op, vec![cur]);
+                    c = block;
+                } else {
+                    let op = Op::SoftmaxApprox { shift: g.usize(1, 4) as u32 };
+                    cur = graph.add(&format!("sm{i}"), op, vec![cur]);
+                }
+            }
+            7 => {
+                // Full attention bundle: QKV → scores → softmax →
+                // transpose → mix. Restores the input shape.
+                let heads = if c % 2 == 0 && g.bool() { 2 } else { 1 };
+                let q = conv(&mut graph, &mut wrng, &format!("q{i}"), cur, c, c, 1, false);
+                let k = conv(&mut graph, &mut wrng, &format!("k{i}"), cur, c, c, 1, false);
+                let v = conv(&mut graph, &mut wrng, &format!("v{i}"), cur, c, c, 1, false);
+                let op = Op::AttnScores { heads, shift: default_shift(c / heads) };
+                let s = graph.add(&format!("scores{i}"), op, vec![q, k]);
+                let p = graph.add(&format!("sm{i}"), Op::SoftmaxApprox { shift: 2 }, vec![s]);
+                let t = graph.add(&format!("pt{i}"), Op::HeadTranspose { heads }, vec![p]);
+                let op = Op::AttnMix { heads, shift: default_shift(hh) };
+                cur = graph.add(&format!("mix{i}"), op, vec![t, v]);
+            }
+            5 => {
+                // Image mode: depthwise (shape-preserving).
+                let op = Op::Depthwise {
+                    k: 3,
+                    stride: 1,
+                    pad: 1,
+                    shift: default_shift(9),
+                    relu: g.bool(),
+                    weights: wrng.i8_vec(c * 9),
+                };
+                cur = graph.add(&format!("dw{i}"), op, vec![cur]);
+            }
+            6 => {
+                if hh >= 2 && ww >= 2 {
+                    let op = Op::MaxPool { k: 2, stride: 2, pad: 0 };
+                    cur = graph.add(&format!("pool{i}"), op, vec![cur]);
+                    hh = (hh - 2) / 2 + 1;
+                    ww = (ww - 2) / 2 + 1;
+                } else {
+                    cur = graph.add(&format!("tanh{i}"), Op::HardTanh, vec![cur]);
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+    if !seq_mode && g.bool() {
+        let gap = graph.add("gap", Op::GlobalAvgPool, vec![cur]);
+        let units = g.usize(4, 12);
+        let op = Op::Dense {
+            units,
+            shift: default_shift(c),
+            relu: false,
+            weights: wrng.i8_vec(units * c),
+        };
+        graph.add("fc", op, vec![gap]);
+    }
+    graph
+}
+
 /// Assertion helper returning `Err` instead of panicking, so the runner
 /// can shrink.
 #[macro_export]
@@ -254,6 +393,14 @@ mod tests {
         });
         let msg = *result.unwrap_err().downcast::<String>().unwrap();
         assert!(msg.contains("minimal draws: [10]"), "got: {msg}");
+    }
+
+    #[test]
+    fn gen_graph_is_always_valid() {
+        Prop::new("gen-graph-valid").cases(64).run(|g| {
+            let graph = gen_graph(g, 4);
+            graph.validate().map_err(|e| format!("invalid graph: {e}"))
+        });
     }
 
     #[test]

@@ -235,6 +235,99 @@ pub fn micro_mobilenet(block: usize, seed: u64) -> Graph {
     g
 }
 
+/// Single pre-norm-free transformer encoder block (§workload families):
+/// multi-head self-attention (Q/K/V projections, shift-based
+/// softmax-approx, per-head mix, output projection) with a residual add
+/// and shift-based layernorm-approx, followed by a 2×-expansion FFN with
+/// its own residual + norm. Sequence runs along `h`, model dim along `c`
+/// (`w` is always 1), so every GEMM is a 1×1 conv the tiler already
+/// handles.
+///
+/// `d_model` must be a power of two (layernorm-approx divides by shift)
+/// and divisible by `heads`.
+pub fn transformer_block(d_model: usize, heads: usize, seq: usize, seed: u64) -> Graph {
+    assert!(d_model.is_power_of_two(), "d_model {d_model} must be a power of two");
+    assert_eq!(d_model % heads, 0, "d_model {d_model} not divisible by heads {heads}");
+    let mut rng = Pcg32::seeded(seed);
+    let mut g = Graph::new(
+        &format!("transformer-d{d_model}h{heads}s{seq}"),
+        Shape::new(d_model, seq, 1),
+    );
+    let q = g.add("q", conv_op(&mut rng, d_model, d_model, 1, 1, 0, false), vec![0]);
+    let k = g.add("k", conv_op(&mut rng, d_model, d_model, 1, 1, 0, false), vec![0]);
+    let v = g.add("v", conv_op(&mut rng, d_model, d_model, 1, 1, 0, false), vec![0]);
+    let scores = g.add(
+        "scores",
+        Op::AttnScores { heads, shift: default_shift(d_model / heads) },
+        vec![q, k],
+    );
+    let probs = g.add("softmax", Op::SoftmaxApprox { shift: 2 }, vec![scores]);
+    // AttnMix consumes probabilities key-major; scores come out query-major.
+    let probs_t = g.add("probs_t", Op::HeadTranspose { heads }, vec![probs]);
+    let mix = g.add(
+        "mix",
+        Op::AttnMix { heads, shift: default_shift(seq) },
+        vec![probs_t, v],
+    );
+    let proj = g.add("proj", conv_op(&mut rng, d_model, d_model, 1, 1, 0, false), vec![mix]);
+    let attn_add = g.add("attn_add", Op::Add { relu: false }, vec![proj, 0]);
+    let ln1 = g.add("ln1", Op::LayerNormApprox, vec![attn_add]);
+    let ffn1 = g.add("ffn1", conv_op(&mut rng, d_model, 2 * d_model, 1, 1, 0, true), vec![ln1]);
+    let ffn2 = g.add("ffn2", conv_op(&mut rng, 2 * d_model, d_model, 1, 1, 0, false), vec![ffn1]);
+    let ffn_add = g.add("ffn_add", Op::Add { relu: false }, vec![ffn2, ln1]);
+    g.add("ln2", Op::LayerNormApprox, vec![ffn_add]);
+    g
+}
+
+/// LSTM cell unrolled over the feature axis (§workload families): the
+/// input tensor stacks `[x; h_prev; c_prev]` along channels (3·`hidden`),
+/// each of the `seq` rows is one timestep's state. One fused gate GEMM
+/// (3H→4H, with the `c_prev` weight block zeroed — the cell state only
+/// enters through the elementwise path) feeds the i/f/g/o gate math:
+/// hard-sigmoid/hard-tanh activations and shift-requantized elementwise
+/// products producing `c_new` then `h_new`.
+pub fn lstm_cell(hidden: usize, seq: usize, seed: u64) -> Graph {
+    let mut rng = Pcg32::seeded(seed);
+    let h = hidden;
+    let mut g = Graph::new(&format!("lstm-h{h}s{seq}"), Shape::new(3 * h, seq, 1));
+    // Fused gate projection: weights against the c_prev block are zero so
+    // the GEMM sees only [x; h_prev] (fan-in 2H sets the requant shift).
+    let mut w = rng.i8_vec(4 * h * 3 * h);
+    for o in 0..4 * h {
+        for ci in 2 * h..3 * h {
+            w[o * 3 * h + ci] = 0;
+        }
+    }
+    let gates = g.add(
+        "gates",
+        Op::Conv {
+            c_out: 4 * h,
+            k: 1,
+            stride: 1,
+            pad: 0,
+            shift: default_shift(2 * h),
+            relu: false,
+            weights: w,
+        },
+        vec![0],
+    );
+    let i_raw = g.add("i", Op::ChanSlice { start: 0, len: h }, vec![gates]);
+    let f_raw = g.add("f", Op::ChanSlice { start: h, len: h }, vec![gates]);
+    let g_raw = g.add("g", Op::ChanSlice { start: 2 * h, len: h }, vec![gates]);
+    let o_raw = g.add("o", Op::ChanSlice { start: 3 * h, len: h }, vec![gates]);
+    let c_prev = g.add("c_prev", Op::ChanSlice { start: 2 * h, len: h }, vec![0]);
+    let i_s = g.add("i_sig", Op::HardSigmoid, vec![i_raw]);
+    let f_s = g.add("f_sig", Op::HardSigmoid, vec![f_raw]);
+    let g_t = g.add("g_tanh", Op::HardTanh, vec![g_raw]);
+    let o_s = g.add("o_sig", Op::HardSigmoid, vec![o_raw]);
+    let keep = g.add("keep", Op::EltMul { shift: 7, relu: false }, vec![f_s, c_prev]);
+    let write = g.add("write", Op::EltMul { shift: 7, relu: false }, vec![i_s, g_t]);
+    let c_new = g.add("c_new", Op::Add { relu: false }, vec![keep, write]);
+    let c_tanh = g.add("c_tanh", Op::HardTanh, vec![c_new]);
+    g.add("h_new", Op::EltMul { shift: 7, relu: false }, vec![o_s, c_tanh]);
+    g
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -288,6 +381,45 @@ mod tests {
             let input = rng.i8_vec(g.input_shape.elems());
             let out = g.run_cpu(&input, 1);
             assert_eq!(out.len(), 10);
+        }
+    }
+
+    #[test]
+    fn transformer_block_structure() {
+        let g = transformer_block(64, 4, 16, 1);
+        g.validate().unwrap();
+        let shapes = g.shapes();
+        let out = shapes.last().unwrap();
+        assert_eq!((out.c, out.h, out.w), (64, 16, 1));
+        // Attention scores fan out to one (seq x seq) map per head.
+        let scores = g.nodes.iter().position(|n| n.name == "scores").unwrap();
+        assert_eq!((shapes[scores].c, shapes[scores].h), (4 * 16, 16));
+        let n_ln = g.nodes.iter().filter(|n| matches!(n.op, Op::LayerNormApprox)).count();
+        assert_eq!(n_ln, 2);
+    }
+
+    #[test]
+    fn lstm_cell_zeroes_cprev_gate_weights() {
+        let h = 8;
+        let g = lstm_cell(h, 4, 1);
+        g.validate().unwrap();
+        let out = *g.shapes().last().unwrap();
+        assert_eq!((out.c, out.h, out.w), (h, 4, 1));
+        let Op::Conv { weights, .. } = &g.nodes[1].op else { panic!("gate GEMM first") };
+        for o in 0..4 * h {
+            let row = &weights[o * 3 * h..(o + 1) * 3 * h];
+            assert!(row[2 * h..].iter().all(|&w| w == 0), "c_prev block leaks into gate GEMM");
+            assert!(row[..2 * h].iter().any(|&w| w != 0));
+        }
+    }
+
+    #[test]
+    fn new_families_run_on_cpu() {
+        let mut rng = Pcg32::seeded(11);
+        for g in [transformer_block(16, 4, 8, 1), lstm_cell(8, 4, 1)] {
+            let input = rng.i8_vec(g.input_shape.elems());
+            let out = g.run_cpu(&input, 1);
+            assert_eq!(out.len(), g.shapes().last().unwrap().elems());
         }
     }
 }

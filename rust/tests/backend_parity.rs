@@ -9,11 +9,14 @@
 //! * every evaluation honors its declared capabilities — no garbage in
 //!   fields a backend claims not to produce.
 
+use vta::compiler::residency::ResidencyMode;
 use vta::config::presets;
 use vta::engine::{BackendKind, Engine, EvalRequest, Evaluation, Fidelity, VtaError};
 use vta::runtime::{Session, SessionOptions};
 use vta::util::hash::Fnv;
+use vta::util::prop::{gen_graph, Prop};
 use vta::workloads;
+use vta::{prop_assert, prop_assert_eq};
 
 /// The reduced grid: tiny-geometry variants × the micro-ResNet (the
 /// same shape the sweep-engine acceptance tests use).
@@ -85,6 +88,112 @@ fn ladder_rungs_agree_on_shared_products() {
             .collect();
         assert_eq!(counter_pairs.len(), 2);
         assert_eq!(counter_pairs[0], counter_pairs[1], "{}: tsim counters diverged", cfg.name);
+    }
+}
+
+/// Differential fuzz harness: seeded random graphs (CNN and
+/// attention/LSTM operator menus — see [`gen_graph`]) pin the ladder
+/// contract over a far larger structural space than the fixed
+/// workloads. For every generated graph, on every residency mode:
+///
+/// * fsim and functional tsim agree on the output digest;
+/// * functional tsim and timing-only tsim agree on cycles *and*
+///   counters;
+/// * outputs are bit-identical across residency modes (planning is a
+///   timing optimization, never a semantic one).
+///
+/// On failure the [`Prop`] runner prints the case seed and the shrunk
+/// draw vector — rerun with `Prop::seed` to reproduce.
+#[test]
+fn fuzz_random_graphs_agree_across_backends_and_residency() {
+    let cfg = presets::tiny_config();
+    Prop::new("backend-parity-fuzz").cases(64).seed(0xd1ff).run(|g| {
+        let graph = gen_graph(g, cfg.block_in);
+        graph
+            .validate()
+            .map_err(|e| format!("generator produced an invalid graph: {e}"))?;
+        let req = EvalRequest::seeded(g.usize(0, 1 << 20) as u64);
+        let mut mode_digests: Vec<u64> = Vec::new();
+        for mode in [ResidencyMode::Off, ResidencyMode::Lru, ResidencyMode::Dtr] {
+            let mut evals = Vec::new();
+            for &kind in BackendKind::ALL.iter() {
+                let engine = Engine::for_config(&cfg)
+                    .backend_kind(kind)
+                    .residency(mode)
+                    .build()
+                    .map_err(|e| format!("{kind}/{mode:?}: build: {e}"))?;
+                evals.push(engine.run(&graph, &req).map_err(|e| format!("{kind}/{mode:?}: {e}"))?);
+            }
+            let digests: Vec<u64> =
+                evals.iter().filter_map(|e| e.output.as_deref().map(digest)).collect();
+            prop_assert!(digests.len() == 2, "{mode:?}: expected 2 functional backends");
+            prop_assert!(
+                digests[0] == digests[1],
+                "{mode:?}: fsim/tsim digest split: {:#018x} vs {:#018x}",
+                digests[0],
+                digests[1]
+            );
+            let timed: Vec<&Evaluation> = evals
+                .iter()
+                .filter(|e| {
+                    matches!(e.fidelity, Fidelity::TimingOnly | Fidelity::CycleAccurate)
+                })
+                .collect();
+            prop_assert!(timed.len() == 2, "{mode:?}: expected 2 tsim rungs");
+            prop_assert_eq!(timed[0].cycles, timed[1].cycles);
+            prop_assert_eq!(timed[0].counters, timed[1].counters);
+            mode_digests.push(digests[0]);
+        }
+        prop_assert!(
+            mode_digests.iter().all(|&d| d == mode_digests[0]),
+            "residency modes changed the output: {mode_digests:?}"
+        );
+        Ok(())
+    });
+}
+
+/// The two new workload families run end-to-end on every rung, with
+/// bit-identical functional digests and tsim/timing cycle agreement —
+/// on the tiny test geometry *and* the default 16×16 geometry (where
+/// the attention GEMMs and softmax take the accelerator path).
+#[test]
+fn workload_families_agree_on_all_rungs() {
+    let grids: [(vta::config::VtaConfig, Vec<vta::compiler::graph::Graph>); 2] = [
+        (
+            presets::tiny_config(),
+            vec![workloads::transformer_block(16, 4, 8, 3), workloads::lstm_cell(8, 4, 3)],
+        ),
+        (
+            presets::default_config(),
+            vec![workloads::transformer_block(64, 4, 16, 1), workloads::lstm_cell(64, 16, 1)],
+        ),
+    ];
+    for (cfg, graphs) in &grids {
+        for graph in graphs {
+            let evals: Vec<Evaluation> = BackendKind::ALL
+                .iter()
+                .map(|&kind| {
+                    let engine =
+                        Engine::for_config(cfg).backend_kind(kind).build().unwrap();
+                    engine.run(graph, &EvalRequest::seeded(5)).unwrap_or_else(|e| {
+                        panic!("{}/{kind}: {e}", graph.name)
+                    })
+                })
+                .collect();
+            let out: Vec<u64> =
+                evals.iter().filter_map(|e| e.output.as_deref().map(digest)).collect();
+            assert_eq!(out.len(), 2, "{}: fsim + functional tsim", graph.name);
+            assert_eq!(out[0], out[1], "{}@{}: digest split", graph.name, cfg.name);
+            let cyc: Vec<u64> = evals
+                .iter()
+                .filter(|e| {
+                    matches!(e.fidelity, Fidelity::TimingOnly | Fidelity::CycleAccurate)
+                })
+                .filter_map(|e| e.cycles)
+                .collect();
+            assert_eq!(cyc.len(), 2, "{}: both tsim rungs time", graph.name);
+            assert_eq!(cyc[0], cyc[1], "{}@{}: cycle split", graph.name, cfg.name);
+        }
     }
 }
 

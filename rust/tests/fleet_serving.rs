@@ -77,6 +77,37 @@ fn fleet_report_is_byte_identical_across_worker_counts() {
     );
 }
 
+/// The determinism contract holds for mixed workload families too: a
+/// fleet serving a transformer + CNN trace produces byte-identical
+/// reports for `--jobs 1` and `--jobs 4`.
+#[test]
+fn mixed_family_fleet_report_is_byte_identical_across_worker_counts() {
+    let mut serial =
+        fleet_opts(vec![presets::tiny_config(), presets::scaled_config(1, 4, 4, 2, 32)]);
+    serial.base.workloads =
+        vec![WorkloadSpec::Transformer { seq: 8 }, WorkloadSpec::Micro { block: 4 }];
+    serial.base.jobs = 1;
+    let mut parallel = serial.clone();
+    parallel.base.jobs = 4;
+    let trace: Vec<Request> = (0..24u64)
+        .map(|i| Request {
+            t_us: (i / 2) * 40,
+            workload: if i % 2 == 0 { "transformer_block@8".into() } else { "micro@4".into() },
+            seed: i,
+        })
+        .collect();
+    let a = serve::run_fleet(&serial, &trace).unwrap();
+    let b = serve::run_fleet(&parallel, &trace).unwrap();
+    assert_eq!(a.batches, b.batches, "batch schedule must not depend on the worker count");
+    assert_eq!(a.lanes, b.lanes, "lane lifetimes must not depend on the worker count");
+    assert_eq!(
+        a.report.to_json().to_string_pretty(),
+        b.report.to_json().to_string_pretty(),
+        "mixed-family FleetReport JSON must be byte-identical across --jobs 1 and --jobs 4"
+    );
+    assert_eq!(a.report.completed, 24, "both families must serve to completion");
+}
+
 /// Every submitted request lands in exactly one bucket — completed on
 /// some device, shed, or expired — and the per-device counters add back
 /// up to the fleet totals.

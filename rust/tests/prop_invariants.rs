@@ -4,6 +4,7 @@
 //! feasibility soundness, layout pack/unpack inversion, and fsim==tsim
 //! state equivalence on randomized conv layers.
 
+use vta::compiler::cpu_ref;
 use vta::compiler::graph::{Graph, Op};
 use vta::compiler::layout::{self, Shape};
 use vta::compiler::tps::{self, ConvSpec};
@@ -35,6 +36,11 @@ fn gen_config(g: &mut Gen) -> VtaConfig {
         alu_pipelined: g.bool(),
         cmd_queue_depth: 256,
         dep_queue_depth: 64,
+        precision: if g.bool() {
+            vta::config::Precision::Narrow
+        } else {
+            vta::config::Precision::Wide
+        },
     }
 }
 
@@ -296,6 +302,108 @@ fn prop_exec_counters_json_roundtrip_is_lossless() {
             map.remove(victim);
         }
         prop_assert_eq!(ExecCounters::from_json(&missing), None);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_requant_saturates_to_i8() {
+    // The quantized output range is the symmetric clip [-127, 127]:
+    // -128 is never produced (the ALU CLIP is symmetric), ReLU floors at
+    // zero, and saturating inputs pin exactly to the rails.
+    Prop::new("requant-saturation").cases(500).run(|g| {
+        let acc = g.i64(-(1 << 30), 1 << 30) as i32;
+        let shift = g.i64(0, 16) as u32;
+        let relu = g.bool();
+        let v = cpu_ref::requant(acc, shift, relu);
+        prop_assert!((-127..=127).contains(&v), "requant({acc}, {shift}) = {v} out of range");
+        if relu {
+            prop_assert!(v >= 0, "relu requant went negative: {v}");
+        }
+        prop_assert_eq!(cpu_ref::requant(i32::MAX / 2, shift, relu), 127);
+        prop_assert_eq!(cpu_ref::requant(i32::MIN / 2, shift, false), -127);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_requant_shr_rounds_half_up() {
+    // Round-half-up means the de-shifted result sits within half an ulp
+    // of the accumulator, with ties resolved toward +inf: the residual
+    // `v*2^s - acc` lies in (-2^(s-1), 2^(s-1)].
+    Prop::new("requant-rounding").cases(500).run(|g| {
+        let shift = g.i64(1, 16) as u32;
+        // Stay inside the un-clamped region so the clip doesn't mask
+        // the rounding behaviour.
+        let bound = 126i64 << shift;
+        let acc = g.i64(-bound, bound) as i32;
+        let v = cpu_ref::requant(acc, shift, false) as i64;
+        let half = 1i64 << (shift - 1);
+        let d = (v << shift) - acc as i64;
+        prop_assert!(
+            -half < d && d <= half,
+            "requant({acc}, {shift}) = {v}: residual {d} outside (-{half}, {half}]"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_softmax_approx_is_monotone() {
+    // Per reduced column: larger inputs never map to smaller outputs,
+    // the column max always gets the full 127, and the range is
+    // [0, 127] (a probability-like payload in Q7).
+    Prop::new("softmax-monotone").cases(200).run(|g| {
+        let (c, h, w) = (g.usize(1, 3), g.usize(2, 12), g.usize(1, 3));
+        let shift = g.i64(0, 4) as u32;
+        let inp = g.vec_i8(c * h * w);
+        let out = cpu_ref::softmax_approx(&inp, 1, c, h, w, shift);
+        for bc in 0..c {
+            for x in 0..w {
+                let col = |v: &[i8], y: usize| v[(bc * h + y) * w + x];
+                let m = (0..h).map(|y| col(&inp, y)).max().unwrap();
+                for y in 0..h {
+                    prop_assert!((0..=127).contains(&col(&out, y)), "range violation");
+                    if col(&inp, y) == m {
+                        prop_assert_eq!(col(&out, y), 127);
+                    }
+                    for y2 in 0..h {
+                        if col(&inp, y) >= col(&inp, y2) {
+                            prop_assert!(
+                                col(&out, y) >= col(&out, y2),
+                                "monotonicity broken at shift={shift}: \
+                                 in {} >= {} but out {} < {}",
+                                col(&inp, y),
+                                col(&inp, y2),
+                                col(&out, y),
+                                col(&out, y2)
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_layernorm_approx_is_shift_invariant() {
+    // Adding a constant to every channel shifts the mean by exactly the
+    // same constant (c is a power of two, so `c*delta` is exact under
+    // the round-half-up shift by log2 c), leaving the centred output
+    // bit-identical — the defining property of mean subtraction.
+    Prop::new("layernorm-shift-invariant").cases(200).run(|g| {
+        let c = g.pow2(0, 4); // 1..16 channels
+        let hw = g.usize(1, 6);
+        // Keep |x| <= 50 and |delta| <= 40 so neither the shifted
+        // inputs nor the shifted mean can reach the ±127 clip.
+        let inp: Vec<i8> = (0..c * hw).map(|_| g.i64(-50, 50) as i8).collect();
+        let delta = g.i64(-40, 40) as i8;
+        let shifted: Vec<i8> = inp.iter().map(|&v| v + delta).collect();
+        let base = cpu_ref::layernorm_approx(&inp, 1, c, hw, 1);
+        let moved = cpu_ref::layernorm_approx(&shifted, 1, c, hw, 1);
+        prop_assert_eq!(base, moved);
         Ok(())
     });
 }

@@ -129,6 +129,40 @@ fn mixed_workload_pool_batches_separately() {
     }
 }
 
+/// Mixed workload *families* (attention, LSTM, CNN) share a pool but
+/// never co-batch, and both new families serve cleanly — no shed, no
+/// expiry — on the default configuration.
+#[test]
+fn mixed_family_pool_never_mixes_batches_and_serves_cleanly() {
+    let mut opts = micro_opts();
+    opts.cfg = presets::default_config();
+    opts.workloads = vec![
+        WorkloadSpec::Transformer { seq: 8 },
+        WorkloadSpec::Lstm { seq: 8 },
+        WorkloadSpec::Micro { block: 16 },
+    ];
+    let names: Vec<String> = ["transformer_block@8", "lstm_cell@8", "micro@16"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let trace =
+        serve::synth_trace(&ArrivalSpec::Poisson { rate_per_s: 500.0 }, &names, 30, 17).unwrap();
+    let outcome = serve::run(&opts, &trace).unwrap();
+    let r = &outcome.report;
+    assert_eq!(r.rejected_queue_full, 0, "default config must not shed the mixed trace");
+    assert_eq!(r.expired_deadline, 0, "default config must not expire the mixed trace");
+    assert_eq!(r.completed, 30);
+    assert_eq!(r.workloads.len(), 3);
+    for batch in &outcome.batches {
+        for &i in &batch.requests {
+            assert_eq!(trace[i].workload, batch.workload, "batches never mix families");
+        }
+    }
+    for name in &names {
+        assert!(r.workloads[name].cycles_per_request > 0, "{name} was never priced");
+    }
+}
+
 /// Overload sheds at the bounded queue — with exact, loss-free
 /// accounting. (Deadline expiry, which itself sheds load and therefore
 /// keeps the queue short, is exercised separately below.)

@@ -222,8 +222,9 @@ fn cache_key_golden_value() {
     };
     assert_eq!(
         job.cache_key(ResidencyMode::Lru),
-        0x02f659858bc4d436,
-        "v4 cache key of (tiny, micro@4, seed 7, graph_seed 42, lru)"
+        0x74e9ea84debbc039,
+        "v5 cache key of (tiny, micro@4, seed 7, graph_seed 42, lru): the v5|s4 prefix and \
+         the config JSON's new \"precision\" field both feed the hash"
     );
     // And the hash itself matches the published FNV-1a vectors through
     // the sweep-facing name.
